@@ -1,0 +1,92 @@
+//! The coordinator behind its TCP front-end: starts the server on an
+//! ephemeral localhost port, drives it from several concurrent JSON
+//! clients, and shuts it down over the wire — the full network serving
+//! path of `solvebak serve-tcp`.
+//!
+//! ```sh
+//! cargo run --release --example network_service
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use solvebak::coordinator::server::Server;
+use solvebak::coordinator::{Coordinator, CoordinatorConfig};
+use solvebak::util::json::Json;
+use solvebak::util::rng::Rng;
+
+fn main() {
+    let coord = Arc::new(Coordinator::start(CoordinatorConfig {
+        workers: 2,
+        artifact_dir: Some("artifacts".into()),
+        ..CoordinatorConfig::default()
+    }));
+    let server = Server::bind(coord.clone(), 0).expect("bind");
+    let addr = server.addr();
+    println!("server listening on {addr}");
+
+    // Three concurrent clients, each solving planted systems over the wire.
+    let clients: Vec<_> = (0..3u64)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut rng = Rng::seed(300 + c);
+                let stream = TcpStream::connect(addr).expect("connect");
+                let mut w = stream.try_clone().unwrap();
+                let mut r = BufReader::new(stream);
+                for i in 0..5 {
+                    // Random 32x4 system with planted coefficients.
+                    let obs = 32;
+                    let vars = 4;
+                    let x: Vec<f32> =
+                        (0..obs * vars).map(|_| rng.normal_f32()).collect();
+                    let a_true: Vec<f32> = (0..vars).map(|_| rng.normal_f32()).collect();
+                    let y: Vec<f32> = (0..obs)
+                        .map(|row| {
+                            (0..vars).map(|j| x[row * vars + j] * a_true[j]).sum()
+                        })
+                        .collect();
+                    let req = format!(
+                        r#"{{"id": {}, "backend": "bak", "obs": {obs}, "vars": {vars}, "x": [{}], "y": [{}], "sweeps": 300, "tol": 1e-6}}"#,
+                        c * 100 + i,
+                        x.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(","),
+                        y.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(","),
+                    );
+                    w.write_all(req.as_bytes()).unwrap();
+                    w.write_all(b"\n").unwrap();
+                    let mut resp = String::new();
+                    r.read_line(&mut resp).unwrap();
+                    let j = Json::parse(resp.trim()).expect("json");
+                    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "{resp}");
+                    let a = j.get("a").unwrap().items();
+                    for (k, want) in a_true.iter().enumerate() {
+                        let got = a[k].as_f64().unwrap() as f32;
+                        assert!(
+                            (got - want).abs() < 1e-2,
+                            "client {c} req {i}: a[{k}] {got} vs {want}"
+                        );
+                    }
+                }
+                println!("client {c}: 5/5 solves verified over TCP");
+            })
+        })
+        .collect();
+    for h in clients {
+        h.join().unwrap();
+    }
+
+    // Metrics + shutdown over the wire.
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    w.write_all(b"{\"cmd\": \"metrics\"}\n").unwrap();
+    let mut resp = String::new();
+    r.read_line(&mut resp).unwrap();
+    println!("metrics: {}", resp.trim());
+    w.write_all(b"{\"cmd\": \"shutdown\"}\n").unwrap();
+    resp.clear();
+    r.read_line(&mut resp).unwrap();
+    println!("shutdown ack: {}", resp.trim());
+    server.stop();
+    println!("done.");
+}

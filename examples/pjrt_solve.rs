@@ -1,0 +1,61 @@
+//! Direct PJRT runtime walk-through: load the AOT artifacts, inspect the
+//! menu, and drive one solve sweep-by-sweep — the minimal template for
+//! embedding the engine without the coordinator.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example pjrt_solve
+//! ```
+
+use solvebak::linalg::Mat;
+use solvebak::runtime::{ArtifactKind, Engine};
+use solvebak::solver::SolveOptions;
+use solvebak::util::rng::Rng;
+use solvebak::util::stats::mape;
+use solvebak::util::timer::{fmt_seconds, time_once};
+
+fn main() {
+    let engine = match Engine::new("artifacts") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("no artifacts ({e}); run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    println!("platform: {}", engine.platform());
+    println!("artifact menu:");
+    for a in &engine.manifest().artifacts {
+        println!("  {:<24} {:>10} {}x{} width={}", a.name, a.kind.as_str(), a.obs, a.vars, a.width);
+    }
+
+    let (t, n) = time_once(|| engine.warmup().expect("warmup"));
+    println!("warmup: compiled {t} executables in {}", fmt_seconds(n));
+
+    // Solve a 1024x128 system on its exact bucket.
+    let mut rng = Rng::seed(11);
+    let x = Mat::randn(&mut rng, 1024, 128);
+    let a_true: Vec<f32> = (0..128).map(|_| rng.normal_f32()).collect();
+    let y = x.matvec(&a_true);
+
+    let mut opts = SolveOptions::default();
+    opts.max_sweeps = 300;
+    opts.tol = 1e-6;
+    let (out, secs) = time_once(|| {
+        engine.solve(&x, &y, &opts, ArtifactKind::BakpSweep).expect("pjrt solve")
+    });
+    println!(
+        "\nsolved 1024x128 via '{}' in {}: sweeps={} stop={:?} mape={:.2e}",
+        out.artifact, fmt_seconds(secs), out.report.sweeps, out.report.stop,
+        mape(&out.report.a, &a_true)
+    );
+
+    // Feature scoring through the score artifact.
+    let scores = engine.feature_scores(&x, &y).expect("scores");
+    let best = scores
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(j, _)| j)
+        .unwrap();
+    println!("top-scored feature by the score artifact: {best}");
+    println!("done.");
+}

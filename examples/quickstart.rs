@@ -1,0 +1,54 @@
+//! Quickstart: solve one tall dense system three ways and compare.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use solvebak::baselines::qr::lstsq_qr;
+use solvebak::linalg::Mat;
+use solvebak::solver::{solve_bak, solve_bakp, SolveOptions};
+use solvebak::util::rng::Rng;
+use solvebak::util::stats::{mape, rel_l2};
+use solvebak::util::timer::{fmt_seconds, time_once};
+
+fn main() {
+    // A 50k x 200 tall system with a planted exact solution.
+    let (obs, vars) = (50_000, 200);
+    let mut rng = Rng::seed(42);
+    let x = Mat::randn(&mut rng, obs, vars);
+    let a_true: Vec<f32> = (0..vars).map(|_| rng.normal_f32()).collect();
+    let y = x.matvec(&a_true);
+    println!("system: {obs} x {vars} (tall, consistent), f32");
+
+    // 1. The paper's Algorithm 1.
+    let opts = SolveOptions::accurate();
+    let (rep, secs) = time_once(|| solve_bak(&x, &y, &opts));
+    println!(
+        "SolveBak   : {:>10}  sweeps={:<4} rel_resid={:.2e}  mape={:.2e}",
+        fmt_seconds(secs), rep.sweeps, rep.rel_residual(), mape(&rep.a, &a_true)
+    );
+
+    // 2. The parallel variant (Algorithm 2).
+    let mut popts = SolveOptions::accurate();
+    popts.thr = 50;
+    popts.threads = solvebak::linalg::blas2::num_threads();
+    let (repp, secsp) = time_once(|| solve_bakp(&x, &y, &popts));
+    println!(
+        "SolveBakP  : {:>10}  sweeps={:<4} rel_resid={:.2e}  mape={:.2e}",
+        fmt_seconds(secsp), repp.sweeps, repp.rel_residual(), mape(&repp.a, &a_true)
+    );
+
+    // 3. The LAPACK-style baseline.
+    let (a_qr, secsq) = time_once(|| lstsq_qr(&x, &y).expect("qr"));
+    println!(
+        "QR baseline: {:>10}  (exact direct solve)          mape={:.2e}",
+        fmt_seconds(secsq), mape(&a_qr, &a_true)
+    );
+
+    println!(
+        "\nspeed-up vs QR: SolveBak {:.1}x, SolveBakP {:.1}x  (paper Table 1 regime)",
+        secsq / secs, secsq / secsp
+    );
+    assert!(rel_l2(&rep.a, &a_qr) < 1e-2, "solvers agree");
+    println!("all three solutions agree. done.");
+}

@@ -1,0 +1,92 @@
+//! The coordinator as a serving system: a pool of client threads firing
+//! solve requests at the service, exercising routing (auto backend),
+//! same-matrix batching, backpressure, and the metrics pipeline.
+//!
+//! ```sh
+//! cargo run --release --example solver_service [-- --requests 64 --workers 4]
+//! ```
+
+use std::sync::Arc;
+
+use solvebak::cli::Args;
+use solvebak::coordinator::{Backend, Coordinator, CoordinatorConfig, SolveRequest};
+use solvebak::linalg::Mat;
+use solvebak::solver::SolveOptions;
+use solvebak::util::rng::Rng;
+use solvebak::util::stats::rel_l2;
+use solvebak::util::timer::fmt_seconds;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv).expect("args");
+    let n_requests = args.get_usize("requests", 64).unwrap();
+    let workers = args.get_usize("workers", 4).unwrap();
+
+    println!("starting coordinator: {workers} workers, PJRT artifacts if present");
+    let coord = Arc::new(Coordinator::start(CoordinatorConfig {
+        workers,
+        artifact_dir: Some("artifacts".into()),
+        ..CoordinatorConfig::default()
+    }));
+    if let Some(eng) = coord.engine() {
+        println!("pjrt engine: {} ({} artifacts)", eng.platform(), eng.manifest().artifacts.len());
+    }
+
+    // Model pool: a few shared matrices of different shapes, like a
+    // serving deployment hosting several models.
+    let mut rng = Rng::seed(7);
+    let shapes = [(2_000usize, 64usize), (256, 64), (800, 40), (64, 64)];
+    let pool: Vec<Arc<Mat>> = shapes
+        .iter()
+        .map(|&(o, v)| Arc::new(Mat::randn(&mut rng, o, v)))
+        .collect();
+
+    // Client threads: each fires a burst of requests with planted truths
+    // and validates its own responses.
+    let t0 = std::time::Instant::now();
+    let clients: Vec<_> = (0..4u64)
+        .map(|c| {
+            let coord = coord.clone();
+            let pool = pool.clone();
+            let per_client = n_requests / 4;
+            std::thread::spawn(move || {
+                let mut rng = Rng::seed(100 + c);
+                let mut checked = 0usize;
+                let rxs: Vec<_> = (0..per_client)
+                    .map(|i| {
+                        let x = pool[(i + c as usize) % pool.len()].clone();
+                        let a: Vec<f32> = (0..x.cols()).map(|_| rng.normal_f32()).collect();
+                        let y = x.matvec(&a);
+                        let mut req =
+                            SolveRequest::new(c * 10_000 + i as u64, x, y);
+                        req.backend = Backend::Auto;
+                        req.opts = SolveOptions::accurate();
+                        (a, coord.submit(req).expect("submit"))
+                    })
+                    .collect();
+                for (a_true, rx) in rxs {
+                    let out = rx.recv().expect("reply");
+                    let rep = out.report.expect("solve ok");
+                    assert!(
+                        rel_l2(&rep.a, &a_true) < 5e-2,
+                        "client {c}: backend {:?} err {}",
+                        out.backend,
+                        rel_l2(&rep.a, &a_true)
+                    );
+                    checked += 1;
+                }
+                checked
+            })
+        })
+        .collect();
+
+    let total: usize = clients.into_iter().map(|h| h.join().unwrap()).sum();
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "\nserved {total} requests in {} -> {:.1} req/s",
+        fmt_seconds(wall),
+        total as f64 / wall
+    );
+    println!("metrics: {}", coord.metrics().to_json().to_string());
+    println!("done.");
+}

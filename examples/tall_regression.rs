@@ -1,0 +1,128 @@
+//! END-TO-END DRIVER (see DESIGN.md §End-to-end driver).
+//!
+//! A realistic tall regression workload — 200k observations x 512
+//! features, planted coefficients + noise — solved through EVERY layer of
+//! the stack:
+//!
+//!   1. QR baseline (the "LAPACK" comparator),
+//!   2. native SolveBak (Algorithm 1),
+//!   3. native threaded SolveBakP (Algorithm 2),
+//!   4. the coordinator service routing to the PJRT engine executing the
+//!      AOT-compiled L2 graph (Pallas kernel inside) on a shape bucket.
+//!
+//! It logs the per-sweep residual curve (the "loss curve"), verifies all
+//! four solutions agree, and prints a latency/throughput/allocations
+//! table. The run is recorded in EXPERIMENTS.md.
+//!
+//! ```sh
+//! cargo run --release --example tall_regression [-- --obs 200000 --vars 512]
+//! ```
+
+use std::sync::Arc;
+
+use solvebak::baselines::qr::lstsq_qr;
+use solvebak::cli::Args;
+use solvebak::coordinator::{Backend, Coordinator, CoordinatorConfig, SolveRequest};
+use solvebak::linalg::Mat;
+use solvebak::solver::{solve_bak, solve_bakp, SolveOptions};
+use solvebak::util::rng::Rng;
+use solvebak::util::stats::{mape, rel_l2};
+use solvebak::util::timer::{fmt_seconds, time_once};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv).expect("args");
+    let obs = args.get_usize("obs", 200_000).unwrap();
+    let vars = args.get_usize("vars", 512).unwrap();
+    let noise = args.get_f64("noise", 0.01).unwrap() as f32;
+    let seed = args.get_u64("seed", 4242).unwrap();
+
+    println!("=== tall_regression end-to-end driver ===");
+    println!("workload: {obs} x {vars} (tall), noise sigma = {noise}, seed = {seed}");
+    let mut rng = Rng::seed(seed);
+    let x = Mat::randn(&mut rng, obs, vars);
+    let a_true: Vec<f32> = (0..vars).map(|_| rng.normal_f32()).collect();
+    let mut y = x.matvec(&a_true);
+    for v in y.iter_mut() {
+        *v += noise * rng.normal_f32();
+    }
+    println!("matrix: {:.1} MiB f32\n", x.nbytes() as f64 / (1024.0 * 1024.0));
+
+    // ---- 1. QR baseline ------------------------------------------------
+    let (a_qr, t_qr) = time_once(|| lstsq_qr(&x, &y).expect("qr"));
+    println!("[1/4] QR baseline        {:>10}   mape={:.2e}", fmt_seconds(t_qr), mape(&a_qr, &a_true));
+
+    // ---- 2. native SolveBak --------------------------------------------
+    let mut o = SolveOptions::accurate();
+    o.max_sweeps = 200;
+    let (rep_bak, t_bak) = time_once(|| solve_bak(&x, &y, &o));
+    println!(
+        "[2/4] SolveBak (Alg 1)   {:>10}   sweeps={} stop={:?} mape={:.2e}",
+        fmt_seconds(t_bak), rep_bak.sweeps, rep_bak.stop, mape(&rep_bak.a, &a_true)
+    );
+    println!("      residual curve (per sweep, ||e||^2):");
+    for (i, r2) in rep_bak.history.iter().enumerate() {
+        if i < 8 || i + 1 == rep_bak.history.len() {
+            println!("        sweep {:>3}: {:.6e}", i + 1, r2);
+        } else if i == 8 {
+            println!("        ...");
+        }
+    }
+
+    // ---- 3. native SolveBakP (threaded) ---------------------------------
+    let mut op = SolveOptions::accurate();
+    op.max_sweeps = 200;
+    op.thr = 64;
+    op.threads = solvebak::linalg::blas2::num_threads();
+    let (rep_bakp, t_bakp) = time_once(|| solve_bakp(&x, &y, &op));
+    println!(
+        "[3/4] SolveBakP (Alg 2)  {:>10}   sweeps={} thr={} threads={} mape={:.2e}",
+        fmt_seconds(t_bakp), rep_bakp.sweeps, op.thr, op.threads, mape(&rep_bakp.a, &a_true)
+    );
+
+    // ---- 4. coordinator -> PJRT artifact --------------------------------
+    // The PJRT path runs on the largest artifact bucket (8192x512); we
+    // solve a bucket-sized slice of the same workload through the full
+    // service stack to prove the layers compose.
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 2,
+        artifact_dir: Some("artifacts".into()),
+        ..CoordinatorConfig::default()
+    });
+    let pobs = 8192.min(obs);
+    let mut xs = Mat::zeros(pobs, vars);
+    for j in 0..vars {
+        xs.col_mut(j).copy_from_slice(&x.col(j)[..pobs]);
+    }
+    let ys = y[..pobs].to_vec();
+    let a_slice_qr = lstsq_qr(&xs, &ys).expect("slice qr");
+    let mut req = SolveRequest::new(1, Arc::new(xs), ys);
+    req.backend = Backend::Pjrt;
+    req.opts.max_sweeps = 400;
+    req.opts.tol = 1e-6;
+    let (out, t_pjrt) = time_once(|| coord.solve_blocking(req));
+    match out.report {
+        Ok(rep) => {
+            println!(
+                "[4/4] PJRT via service   {:>10}   sweeps={} stop={:?} backend={:?}",
+                fmt_seconds(t_pjrt), rep.sweeps, rep.stop, out.backend
+            );
+            let agree = rel_l2(&rep.a, &a_slice_qr);
+            println!("      agreement with QR on the same slice: rel_l2 = {agree:.2e}");
+            assert!(agree < 0.05, "PJRT and QR disagree: {agree}");
+        }
+        Err(e) => println!("[4/4] PJRT via service   unavailable: {e} (run `make artifacts`)"),
+    }
+    println!("\nservice metrics: {}", coord.metrics().to_json().to_string());
+    coord.shutdown();
+
+    // ---- summary ---------------------------------------------------------
+    println!("\n=== summary (full {obs}x{vars} problem) ===");
+    println!("method      time         vs QR");
+    println!("QR          {:>10}   1.0x", fmt_seconds(t_qr));
+    println!("SolveBak    {:>10}   {:.1}x", fmt_seconds(t_bak), t_qr / t_bak);
+    println!("SolveBakP   {:>10}   {:.1}x", fmt_seconds(t_bakp), t_qr / t_bakp);
+    assert!(rel_l2(&rep_bak.a, &a_qr) < 2e-2, "BAK vs QR");
+    assert!(rel_l2(&rep_bakp.a, &a_qr) < 2e-2, "BAKP vs QR");
+    println!("all solutions agree to tolerance. E2E driver done.");
+}

@@ -1,0 +1,129 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts.
+
+HLO text — NOT ``lowered.compile()`` or serialized ``HloModuleProto`` — is
+the interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+that the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; Python never executes at request time.
+
+Usage:
+    cd python && python -m compile.aot --out-dir ../artifacts [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (0.5.1-compatible)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+# The artifact menu. Shapes are static per artifact; the Rust coordinator
+# routes a request to the bucket it fits (runtime::registry). Sweep-granular
+# so Rust owns the convergence loop + tolerance early-break.
+#
+# (kind, obs, vars, width) where width = blk for bak, thr for bakp.
+QUICK_MENU = [
+    ("bakp_sweep", 256, 64, 32),
+    ("bak_sweep", 256, 64, 32),
+    ("score", 256, 64, 0),
+    ("colnorms", 256, 64, 0),
+]
+
+FULL_MENU = QUICK_MENU + [
+    ("bakp_sweep", 1024, 128, 64),
+    ("bak_sweep", 1024, 128, 64),
+    ("score", 1024, 128, 0),
+    ("colnorms", 1024, 128, 0),
+    ("bakp_sweep", 4096, 256, 64),
+    ("score", 4096, 256, 0),
+    ("colnorms", 4096, 256, 0),
+    ("bakp_sweep", 8192, 512, 128),
+    ("colnorms", 8192, 512, 0),
+]
+
+
+def lower_entry(kind: str, obs: int, vars_: int, width: int):
+    """Returns (lowered, inputs, outputs) for one menu entry."""
+    if kind == "bak_sweep":
+        fn = model.make_bak_sweep_fn(blk=width)
+        args = (f32(obs, vars_), f32(vars_), f32(vars_), f32(obs))
+        ins = ["x", "cninv", "a", "e"]
+        outs = ["a", "e", "r2"]
+    elif kind == "bakp_sweep":
+        fn = model.make_bakp_sweep_fn(thr=width)
+        args = (f32(obs, vars_), f32(vars_), f32(vars_), f32(obs))
+        ins = ["x", "cninv", "a", "e"]
+        outs = ["a", "e", "r2"]
+    elif kind == "score":
+        fn = model.make_score_fn()
+        args = (f32(obs, vars_), f32(vars_), f32(obs))
+        ins = ["x", "cninv", "e"]
+        outs = ["scores"]
+    elif kind == "colnorms":
+        fn = model.make_colnorms_fn()
+        args = (f32(obs, vars_),)
+        ins = ["x"]
+        outs = ["cninv"]
+    else:
+        raise ValueError(kind)
+    return jax.jit(fn).lower(*args), ins, outs
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--quick", action="store_true",
+                   help="only the smallest shape bucket (CI)")
+    args = p.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    menu = QUICK_MENU if args.quick else FULL_MENU
+    manifest = []
+    for kind, obs, vars_, width in menu:
+        name = f"{kind}_{obs}x{vars_}"
+        path = os.path.join(args.out_dir, name + ".hlo.txt")
+        lowered, ins, outs = lower_entry(kind, obs, vars_, width)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append({
+            "name": name,
+            "kind": kind,
+            "obs": obs,
+            "vars": vars_,
+            "width": width,
+            "dtype": "f32",
+            "file": name + ".hlo.txt",
+            "inputs": ins,
+            "outputs": outs,
+        })
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump({"version": 1, "artifacts": manifest}, f, indent=2)
+    print(f"wrote {args.out_dir}/manifest.json ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

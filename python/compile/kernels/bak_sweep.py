@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: exact sequential SolveBak sweep over one column block.
+
+This is the *correctness-reference* kernel: it preserves Algorithm 1's
+sequential semantics (each column update sees the error vector already
+updated by every previous column). One kernel instance holds a
+(obs x blk) tile of ``x`` plus the full error vector in VMEM and runs the
+CD recurrence with a ``fori_loop``; the block loop lives at L2.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the paper's GPU argument
+("only one column resident in device memory") becomes "only one column
+*block* resident in VMEM". blk is chosen so obs*blk*4 bytes fits the VMEM
+budget; the HBM->VMEM stream of successive blocks is what BlockSpec
+expresses at L2.
+
+interpret=True everywhere: CPU PJRT cannot run Mosaic custom-calls, and
+interpret-mode lowering emits plain HLO that the Rust runtime executes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bak_sweep_kernel(x_ref, cninv_ref, a_ref, e_ref, a_out_ref, e_out_ref):
+    """Sequential CD over the blk columns of this block.
+
+    x_ref:     (obs, blk) column block of the input matrix
+    cninv_ref: (blk,)     1/<x_j,x_j> for the block's columns (0 for zero cols)
+    a_ref:     (blk,)     current coefficients for the block's columns
+    e_ref:     (obs,)     current residual e = y - x a   (full vector)
+    outputs: updated (a_block, e).
+    """
+    x = x_ref[...]
+    cninv = cninv_ref[...]
+    a = a_ref[...]
+    e = e_ref[...]
+    blk = x.shape[1]
+
+    def body(j, carry):
+        a, e = carry
+        xj = jax.lax.dynamic_slice_in_dim(x, j, 1, axis=1)[:, 0]
+        da = jnp.dot(xj, e) * cninv[j]
+        e = e - xj * da
+        a = jax.lax.dynamic_update_index_in_dim(a, a[j] + da, j, axis=0)
+        return a, e
+
+    a, e = jax.lax.fori_loop(0, blk, body, (a, e))
+    a_out_ref[...] = a
+    e_out_ref[...] = e
+
+
+@functools.partial(jax.jit, static_argnames=())
+def bak_sweep_block(x_blk, cninv_blk, a_blk, e):
+    """Run Algorithm 1 lines 4-8 over the columns of ``x_blk``.
+
+    Returns (a_blk', e'). Exactly equivalent (up to f32 rounding order) to
+    calling ref.bak_column_step for each column in order.
+    """
+    obs, blk = x_blk.shape
+    return pl.pallas_call(
+        _bak_sweep_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((blk,), x_blk.dtype),
+            jax.ShapeDtypeStruct((obs,), x_blk.dtype),
+        ),
+        interpret=True,
+    )(x_blk, cninv_blk, a_blk, e)

@@ -1,0 +1,155 @@
+"""Pure-jnp oracles for the SolveBak family.
+
+These are direct transliterations of Algorithms 1-3 of the paper
+("Algorithmic Solution for Non-Square, Dense Systems of Linear Equations",
+Bakas 2021) with no Pallas, no blocking tricks, no cleverness. Every Pallas
+kernel and every Rust implementation is validated against these.
+
+Notation follows the paper: ``x`` is (obs, vars), ``y`` is (obs,),
+``a`` is (vars,), ``e = y - x a`` is the running residual.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def colnorms_sq(x: jax.Array) -> jax.Array:
+    """<x_j, x_j> for every column j. Shape (vars,)."""
+    return jnp.sum(x * x, axis=0)
+
+
+def safe_inv(v: jax.Array) -> jax.Array:
+    """1/v with 0 mapped to 0 (a zero column contributes no update)."""
+    return jnp.where(v > 0, 1.0 / jnp.where(v > 0, v, 1.0), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — SolveBak (sequential cyclic coordinate descent)
+# ---------------------------------------------------------------------------
+
+def bak_column_step(x, a, e, j):
+    """One line-5..7 step of Algorithm 1 for column j."""
+    xj = jax.lax.dynamic_slice_in_dim(x, j, 1, axis=1)[:, 0]
+    nrm = jnp.dot(xj, xj)
+    da = jnp.where(nrm > 0, jnp.dot(xj, e) / jnp.where(nrm > 0, nrm, 1.0), 0.0)
+    e = e - xj * da
+    a = jax.lax.dynamic_update_index_in_dim(a, a[j] + da, j, axis=0)
+    return a, e
+
+
+def bak_sweep(x, a, e):
+    """One full inner loop (lines 4-8) of Algorithm 1: j = 0..vars-1."""
+    vars_ = x.shape[1]
+
+    def body(j, carry):
+        a, e = carry
+        return bak_column_step(x, a, e, j)
+
+    return jax.lax.fori_loop(0, vars_, body, (a, e))
+
+
+def solve_bak(x, y, n_sweeps: int):
+    """Algorithm 1 in full: returns (a, e, r2_history)."""
+    a = jnp.zeros((x.shape[1],), x.dtype)
+    e = y
+
+    def step(carry, _):
+        a, e = carry
+        a, e = bak_sweep(x, a, e)
+        return (a, e), jnp.sum(e * e)
+
+    (a, e), hist = jax.lax.scan(step, (a, e), None, length=n_sweeps)
+    return a, e, hist
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 — SolveBakP (block-parallel with stale errors inside a block)
+# ---------------------------------------------------------------------------
+
+def bakp_block_step(x, a, e, j0, thr: int):
+    """Lines 6-9 of Algorithm 2 for the block of columns [j0, j0+thr).
+
+    All da_k inside the block are computed against the SAME (stale) error
+    vector — that is the paper's parallelisation — and the error is then
+    refreshed once with the block matvec of line 9.
+    """
+    xb = jax.lax.dynamic_slice_in_dim(x, j0, thr, axis=1)  # (obs, thr)
+    nrm = jnp.sum(xb * xb, axis=0)                         # (thr,)
+    da = (e @ xb) * safe_inv(nrm)                          # (thr,)
+    e = e - xb @ da
+    a = jax.lax.dynamic_update_slice_in_dim(
+        a, jax.lax.dynamic_slice_in_dim(a, j0, thr) + da, j0, axis=0
+    )
+    return a, e
+
+
+def bakp_sweep(x, a, e, thr: int):
+    """One outer-j pass (lines 5-10) of Algorithm 2. vars % thr == 0."""
+    vars_ = x.shape[1]
+    assert vars_ % thr == 0, "reference requires thr | vars"
+
+    def body(b, carry):
+        a, e = carry
+        return bakp_block_step(x, a, e, b * thr, thr)
+
+    return jax.lax.fori_loop(0, vars_ // thr, body, (a, e))
+
+
+def solve_bakp(x, y, n_sweeps: int, thr: int):
+    """Algorithm 2 in full: returns (a, e, r2_history)."""
+    a = jnp.zeros((x.shape[1],), x.dtype)
+    e = y
+
+    def step(carry, _):
+        a, e = carry
+        a, e = bakp_sweep(x, a, e, thr)
+        return (a, e), jnp.sum(e * e)
+
+    (a, e), hist = jax.lax.scan(step, (a, e), None, length=n_sweeps)
+    return a, e, hist
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3 — SolveBakF (greedy feature selection)
+# ---------------------------------------------------------------------------
+
+def feature_scores(x, e):
+    """Per-feature squared-error reduction of a single BAK step.
+
+    Fitting da_j = <x_j,e>/<x_j,x_j> reduces sum(e^2) by exactly
+    <x_j,e>^2 / <x_j,x_j>  (the regression sum of squares), so the
+    feature minimising the residual (Alg. 3 line 5) is the argmax of this.
+    """
+    num = e @ x                    # (vars,)
+    return num * num * safe_inv(colnorms_sq(x))
+
+
+def least_squares_refit(xs, y):
+    """Line 7 of Algorithm 3: exact LS refit on the selected columns."""
+    g = xs.T @ xs
+    rhs = xs.T @ y
+    # Small k x k system; solve with jnp (the Rust side uses Cholesky).
+    return jnp.linalg.solve(g + 1e-12 * jnp.eye(g.shape[0], dtype=xs.dtype), rhs)
+
+
+def select_features(x, y, max_feat: int):
+    """Algorithm 3: returns (indices, coeffs, r2_history). Python loop —
+    used as oracle only (max_feat small)."""
+    e = y
+    idx: list[int] = []
+    r2s: list[float] = []
+    a = jnp.zeros((0,), x.dtype)
+    for _ in range(max_feat):
+        scores = feature_scores(x, e)
+        # Never pick the same feature twice.
+        if idx:
+            scores = scores.at[jnp.array(idx)].set(-jnp.inf)
+        j = int(jnp.argmax(scores))
+        idx.append(j)
+        xs = x[:, jnp.array(idx)]
+        a = least_squares_refit(xs, y)
+        e = y - xs @ a
+        r2s.append(float(jnp.sum(e * e)))
+    return idx, a, r2s

@@ -1,0 +1,32 @@
+"""L1 Pallas kernel: SolveBakF feature scoring (Algorithm 3 line 3-5).
+
+For every feature j the squared-error reduction of a single BAK step is
+the regression sum of squares <x_j,e>^2 / <x_j,x_j>; Algorithm 3's
+argmin-error feature is the argmax of that score. Computing all scores at
+once is one (vars,obs)x(obs) contraction plus elementwise ops — "easily
+vectorised by basic BLAS functions" as the paper puts it; here it is a
+single MXU contraction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _score_kernel(x_ref, cninv_ref, e_ref, out_ref):
+    x = x_ref[...]
+    e = e_ref[...]
+    num = jnp.dot(e, x, preferred_element_type=jnp.float32)
+    out_ref[...] = (num * num * cninv_ref[...]).astype(x.dtype)
+
+
+def feature_scores(x, cninv, e):
+    """Score every feature: (vars,) array of error reductions."""
+    obs, vars_ = x.shape
+    return pl.pallas_call(
+        _score_kernel,
+        out_shape=jax.ShapeDtypeStruct((vars_,), x.dtype),
+        interpret=True,
+    )(x, cninv, e)

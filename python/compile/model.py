@@ -1,0 +1,113 @@
+"""L2: the JAX compute graphs that the Rust runtime executes.
+
+Everything here composes the L1 Pallas kernels into whole-sweep / whole-solve
+graphs with static shapes, then ``aot.py`` lowers them to HLO text. Python is
+build-time only: the Rust coordinator calls the compiled artifacts.
+
+Exported graphs (all pure, all static-shape):
+
+  bak_sweep(x, cninv, a, e)            one sequential Algorithm-1 sweep
+  bakp_sweep(x, cninv, a, e)           one Algorithm-2 sweep (thr static)
+  bakp_solve(x, y)                     n_sweeps Algorithm-2 sweeps + history
+  feature_scores(x, cninv, e)          Algorithm-3 scoring pass
+  colnorms_inv(x)                      precompute 1/<x_j,x_j>
+
+Sweep-granular artifacts are deliberate: the Rust side owns the convergence
+loop so it can do the paper's tolerance early-break without re-lowering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import bak_sweep as _bak
+from compile.kernels import bakp_block as _bakp
+from compile.kernels import score as _score
+from compile.kernels import ref as _ref
+
+
+def colnorms_inv(x):
+    """1/<x_j,x_j> per column, 0 for zero columns. Shape (vars,)."""
+    return _ref.safe_inv(_ref.colnorms_sq(x))
+
+
+def bak_sweep(x, cninv, a, e, *, blk: int = 64):
+    """One full sequential SolveBak sweep (Algorithm 1 lines 4-8).
+
+    The column-block loop lives here at L2; each block is one Pallas kernel
+    instance (bak_sweep_block) preserving exact sequential semantics.
+    vars % blk must be 0 (aot.py picks shapes accordingly).
+    """
+    obs, vars_ = x.shape
+    assert vars_ % blk == 0, f"blk={blk} must divide vars={vars_}"
+    nblocks = vars_ // blk
+
+    def body(b, carry):
+        a, e = carry
+        j0 = b * blk
+        xb = jax.lax.dynamic_slice_in_dim(x, j0, blk, axis=1)
+        cb = jax.lax.dynamic_slice_in_dim(cninv, j0, blk, axis=0)
+        ab = jax.lax.dynamic_slice_in_dim(a, j0, blk, axis=0)
+        ab, e = _bak.bak_sweep_block(xb, cb, ab, e)
+        a = jax.lax.dynamic_update_slice_in_dim(a, ab, j0, axis=0)
+        return a, e
+
+    a, e = jax.lax.fori_loop(0, nblocks, body, (a, e))
+    return a, e, jnp.sum(e * e)
+
+
+def bakp_sweep(x, cninv, a, e, *, thr: int = 64):
+    """One full SolveBakP sweep (Algorithm 2 lines 5-10) as one kernel."""
+    a, e = _bakp.bakp_sweep(x, cninv, a, e, thr)
+    return a, e, jnp.sum(e * e)
+
+
+def bakp_solve(x, y, *, n_sweeps: int = 32, thr: int = 64):
+    """Full Algorithm-2 solve from a=0: returns (a, e, r2_history)."""
+    cninv = colnorms_inv(x)
+    a = jnp.zeros((x.shape[1],), x.dtype)
+    e = y
+
+    def step(carry, _):
+        a, e = carry
+        a, e = _bakp.bakp_sweep(x, cninv, a, e, thr)
+        return (a, e), jnp.sum(e * e)
+
+    (a, e), hist = jax.lax.scan(step, (a, e), None, length=n_sweeps)
+    return a, e, hist
+
+
+def feature_scores(x, cninv, e):
+    """Algorithm-3 scoring pass over all features."""
+    return _score.feature_scores(x, cninv, e)
+
+
+# ---------------------------------------------------------------------------
+# AOT entrypoints: tuples in, tuple out, fixed dtypes — what aot.py lowers.
+# ---------------------------------------------------------------------------
+
+def make_bak_sweep_fn(blk: int):
+    def fn(x, cninv, a, e):
+        return bak_sweep(x, cninv, a, e, blk=blk)
+    return fn
+
+
+def make_bakp_sweep_fn(thr: int):
+    def fn(x, cninv, a, e):
+        return bakp_sweep(x, cninv, a, e, thr=thr)
+    return fn
+
+
+def make_score_fn():
+    def fn(x, cninv, e):
+        return (feature_scores(x, cninv, e),)
+    return fn
+
+
+def make_colnorms_fn():
+    def fn(x):
+        return (colnorms_inv(x),)
+    return fn

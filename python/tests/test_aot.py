@@ -1,0 +1,55 @@
+"""AOT path tests: lowering produces valid, well-formed HLO text."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+class TestLowering:
+    @pytest.mark.parametrize("kind,obs,vars_,width", aot.QUICK_MENU)
+    def test_lower_entry_produces_hlo_text(self, kind, obs, vars_, width):
+        lowered, ins, outs = aot.lower_entry(kind, obs, vars_, width)
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+        # Tuple return (return_tuple=True) so the Rust side can to_tuple().
+        assert len(ins) >= 1 and len(outs) >= 1
+
+    def test_hlo_has_expected_parameter_count(self):
+        lowered, ins, _ = aot.lower_entry("bakp_sweep", 256, 64, 32)
+        text = aot.to_hlo_text(lowered)
+        # One parameter instruction per input in the entry computation.
+        entry = text[text.index("ENTRY"):]
+        n_params = entry.count("parameter(")
+        assert n_params == len(ins) == 4
+
+    def test_shapes_appear_in_entry(self):
+        lowered, _, _ = aot.lower_entry("score", 256, 64, 0)
+        text = aot.to_hlo_text(lowered)
+        assert "f32[256,64]" in text
+        assert "f32[64]" in text
+
+    def test_unknown_kind_raises(self):
+        with pytest.raises(ValueError):
+            aot.lower_entry("nope", 8, 8, 0)
+
+
+class TestManifest:
+    def test_manifest_written(self, tmp_path):
+        import subprocess, sys
+        out = tmp_path / "artifacts"
+        r = subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--quick"],
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            capture_output=True, text=True)
+        assert r.returncode == 0, r.stderr
+        man = json.loads((out / "manifest.json").read_text())
+        assert man["version"] == 1
+        names = {a["name"] for a in man["artifacts"]}
+        assert "bakp_sweep_256x64" in names
+        for a in man["artifacts"]:
+            assert (out / a["file"]).exists()
+            assert a["dtype"] == "f32"

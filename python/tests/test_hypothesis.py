@@ -1,0 +1,95 @@
+"""Hypothesis sweeps: kernel == oracle over random shapes/values/dtypes.
+
+Property-based L1 coverage per the repro guide: shapes and dtypes are drawn
+by hypothesis, correctness asserted against kernels/ref.py.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels import bak_sweep as bak
+from compile.kernels import bakp_block as bakp
+from compile.kernels import score
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def draw_system(seed, obs, vars_, dtype):
+    k = jax.random.PRNGKey(seed)
+    kx, ky = jax.random.split(k)
+    x = jax.random.normal(kx, (obs, vars_), dtype)
+    y = jax.random.normal(ky, (obs,), dtype)
+    return x, y
+
+
+def tol(dtype):
+    return dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 else dict(rtol=5e-4, atol=5e-4)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1),
+       obs=st.integers(2, 96),
+       blk=st.integers(1, 24),
+       dtype=st.sampled_from([jnp.float32]))
+def test_bak_sweep_matches_ref(seed, obs, blk, dtype):
+    x, y = draw_system(seed, obs, blk, dtype)
+    cninv = ref.safe_inv(ref.colnorms_sq(x))
+    a0 = jnp.zeros((blk,), dtype)
+    a_k, e_k = bak.bak_sweep_block(x, cninv, a0, y)
+    a_r, e_r = ref.bak_sweep(x, a0, y)
+    np.testing.assert_allclose(np.asarray(a_k, np.float64),
+                               np.asarray(a_r, np.float64), **tol(dtype))
+    np.testing.assert_allclose(np.asarray(e_k, np.float64),
+                               np.asarray(e_r, np.float64), **tol(dtype))
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1),
+       obs=st.integers(2, 96),
+       nblocks=st.integers(1, 6),
+       thr=st.integers(1, 12),
+       dtype=st.sampled_from([jnp.float32]))
+def test_bakp_sweep_matches_ref(seed, obs, nblocks, thr, dtype):
+    vars_ = nblocks * thr
+    x, y = draw_system(seed, obs, vars_, dtype)
+    cninv = ref.safe_inv(ref.colnorms_sq(x))
+    a0 = jnp.zeros((vars_,), dtype)
+    a_k, e_k = bakp.bakp_sweep(x, cninv, a0, y, thr)
+    a_r, e_r = ref.bakp_sweep(x, a0, y, thr)
+    np.testing.assert_allclose(np.asarray(a_k, np.float64),
+                               np.asarray(a_r, np.float64), **tol(dtype))
+    np.testing.assert_allclose(np.asarray(e_k, np.float64),
+                               np.asarray(e_r, np.float64), **tol(dtype))
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1),
+       obs=st.integers(2, 128),
+       vars_=st.integers(1, 64),
+       dtype=st.sampled_from([jnp.float32]))
+def test_score_matches_ref(seed, obs, vars_, dtype):
+    x, e = draw_system(seed, obs, vars_, dtype)
+    cninv = ref.safe_inv(ref.colnorms_sq(x))
+    np.testing.assert_allclose(
+        np.asarray(score.feature_scores(x, cninv, e), np.float64),
+        np.asarray(ref.feature_scores(x, e), np.float64), **tol(dtype))
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1),
+       obs=st.integers(4, 64),
+       vars_=st.integers(2, 32))
+def test_sweep_never_increases_residual(seed, obs, vars_):
+    # Theorem 1's monotonicity, property-based: holds for ANY system,
+    # including rank-deficient and inconsistent ones.
+    x, y = draw_system(seed, obs, vars_, jnp.float32)
+    cninv = ref.safe_inv(ref.colnorms_sq(x))
+    a0 = jnp.zeros((vars_,), jnp.float32)
+    _, e1 = bak.bak_sweep_block(x, cninv, a0, y)
+    r0 = float(jnp.sum(y * y))
+    r1 = float(jnp.sum(e1 * e1))
+    assert r1 <= r0 * (1 + 1e-5) + 1e-6

@@ -1,0 +1,166 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Every Pallas kernel must match the pure-jnp transliteration of the paper's
+algorithms (kernels/ref.py) to tight tolerance across shapes and dtypes.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels import bak_sweep as bak
+from compile.kernels import bakp_block as bakp
+from compile.kernels import score
+
+
+def make_system(obs, vars_, seed=0, dtype=jnp.float32, noise=0.0):
+    k = jax.random.PRNGKey(seed)
+    kx, ka, kn = jax.random.split(k, 3)
+    x = jax.random.normal(kx, (obs, vars_), dtype)
+    a_true = jax.random.normal(ka, (vars_,), dtype)
+    y = x @ a_true
+    if noise:
+        y = y + noise * jax.random.normal(kn, (obs,), dtype)
+    return x, y, a_true
+
+
+class TestBakSweepKernel:
+    @pytest.mark.parametrize("obs,blk", [(16, 4), (64, 16), (128, 32), (256, 64)])
+    def test_matches_sequential_ref(self, obs, blk):
+        x, y, _ = make_system(obs, blk, seed=obs + blk)
+        cninv = ref.safe_inv(ref.colnorms_sq(x))
+        a0 = jnp.zeros((blk,), x.dtype)
+        a_k, e_k = bak.bak_sweep_block(x, cninv, a0, y)
+        a_r, e_r = ref.bak_sweep(x, a0, y)
+        np.testing.assert_allclose(a_k, a_r, rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(e_k, e_r, rtol=2e-5, atol=2e-5)
+
+    def test_nonzero_initial_guess(self):
+        x, y, _ = make_system(64, 16, seed=7)
+        cninv = ref.safe_inv(ref.colnorms_sq(x))
+        a0 = jnp.ones((16,), x.dtype) * 0.5
+        e0 = y - x @ a0
+        a_k, e_k = bak.bak_sweep_block(x, cninv, a0, e0)
+        a_r, e_r = ref.bak_sweep(x, a0, e0)
+        np.testing.assert_allclose(a_k, a_r, rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(e_k, e_r, rtol=2e-5, atol=2e-5)
+
+    def test_residual_never_increases(self):
+        x, y, _ = make_system(48, 12, seed=3, noise=0.5)
+        cninv = ref.safe_inv(ref.colnorms_sq(x))
+        a = jnp.zeros((12,), x.dtype)
+        e = y
+        prev = float(jnp.sum(e * e))
+        for _ in range(5):
+            a, e = bak.bak_sweep_block(x, cninv, a, e)
+            cur = float(jnp.sum(e * e))
+            assert cur <= prev * (1 + 1e-6)
+            prev = cur
+
+    def test_zero_column_is_skipped(self):
+        x, y, _ = make_system(32, 8, seed=11)
+        x = x.at[:, 3].set(0.0)
+        cninv = ref.safe_inv(ref.colnorms_sq(x))
+        a0 = jnp.zeros((8,), x.dtype)
+        a_k, e_k = bak.bak_sweep_block(x, cninv, a0, y)
+        assert float(a_k[3]) == 0.0
+        assert np.isfinite(np.asarray(e_k)).all()
+
+    def test_consistency_e_tracks_a(self):
+        # Invariant: e == y - x a after any number of sweeps.
+        x, y, _ = make_system(40, 10, seed=5, noise=0.1)
+        cninv = ref.safe_inv(ref.colnorms_sq(x))
+        a = jnp.zeros((10,), x.dtype)
+        e = y
+        for _ in range(3):
+            a, e = bak.bak_sweep_block(x, cninv, a, e)
+        np.testing.assert_allclose(e, y - x @ a, rtol=1e-4, atol=1e-4)
+
+
+class TestBakpBlockKernel:
+    @pytest.mark.parametrize("obs,vars_,thr", [(32, 8, 4), (64, 32, 8), (128, 64, 16)])
+    def test_block_matches_ref(self, obs, vars_, thr):
+        x, y, _ = make_system(obs, vars_, seed=obs)
+        cninv = ref.safe_inv(ref.colnorms_sq(x))
+        xb = x[:, :thr]
+        da_k, e_k = bakp.bakp_block(xb, cninv[:thr], y)
+        a_r, e_r = ref.bakp_block_step(x, jnp.zeros((vars_,), x.dtype), y, 0, thr)
+        np.testing.assert_allclose(da_k, a_r[:thr], rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(e_k, e_r, rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("obs,vars_,thr", [(32, 16, 4), (64, 32, 32), (128, 64, 8)])
+    def test_full_sweep_matches_ref(self, obs, vars_, thr):
+        x, y, _ = make_system(obs, vars_, seed=obs + thr, noise=0.2)
+        cninv = ref.safe_inv(ref.colnorms_sq(x))
+        a0 = jnp.zeros((vars_,), x.dtype)
+        a_k, e_k = bakp.bakp_sweep(x, cninv, a0, y, thr)
+        a_r, e_r = ref.bakp_sweep(x, a0, y, thr)
+        np.testing.assert_allclose(a_k, a_r, rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(e_k, e_r, rtol=2e-5, atol=2e-5)
+
+    def test_thr_equals_one_is_sequential_bak(self):
+        # With thr=1 Algorithm 2 degenerates to Algorithm 1 exactly.
+        x, y, _ = make_system(48, 8, seed=2)
+        cninv = ref.safe_inv(ref.colnorms_sq(x))
+        a0 = jnp.zeros((8,), x.dtype)
+        a_p, e_p = bakp.bakp_sweep(x, cninv, a0, y, 1)
+        a_s, e_s = ref.bak_sweep(x, a0, y)
+        np.testing.assert_allclose(a_p, a_s, rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(e_p, e_s, rtol=2e-5, atol=2e-5)
+
+    def test_stale_error_within_block(self):
+        # The defining property of Algorithm 2: inside a block, every da_k
+        # is computed against the same pre-block error.
+        x, y, _ = make_system(32, 4, seed=9)
+        cninv = ref.safe_inv(ref.colnorms_sq(x))
+        da, _ = bakp.bakp_block(x, cninv, y)
+        expect = (y @ x) * cninv          # all against stale e == y
+        np.testing.assert_allclose(da, expect, rtol=2e-5, atol=2e-5)
+
+    def test_residual_decreases_when_thr_small(self):
+        # Paper: converges "if the thr parameter is small with respect to
+        # the vars".
+        x, y, _ = make_system(128, 64, seed=1, noise=0.3)
+        cninv = ref.safe_inv(ref.colnorms_sq(x))
+        a = jnp.zeros((64,), x.dtype)
+        e = y
+        prev = float(jnp.sum(e * e))
+        for _ in range(10):
+            a, e = bakp.bakp_sweep(x, cninv, a, e, 8)
+            cur = float(jnp.sum(e * e))
+            assert cur <= prev * (1 + 1e-5)
+            prev = cur
+
+
+class TestScoreKernel:
+    @pytest.mark.parametrize("obs,vars_", [(32, 8), (128, 64), (256, 100)])
+    def test_matches_ref(self, obs, vars_):
+        x, y, _ = make_system(obs, vars_, seed=vars_, noise=0.4)
+        cninv = ref.safe_inv(ref.colnorms_sq(x))
+        s_k = score.feature_scores(x, cninv, y)
+        s_r = ref.feature_scores(x, y)
+        np.testing.assert_allclose(s_k, s_r, rtol=3e-5, atol=3e-5)
+
+    def test_score_is_exact_error_reduction(self):
+        # score_j must equal sum(e^2) - sum(e'^2) after a single BAK step
+        # on column j.
+        x, y, _ = make_system(64, 6, seed=4, noise=0.2)
+        cninv = ref.safe_inv(ref.colnorms_sq(x))
+        s = np.asarray(score.feature_scores(x, cninv, y))
+        r2_0 = float(jnp.sum(y * y))
+        for j in range(6):
+            a0 = jnp.zeros((6,), x.dtype)
+            _, e1 = ref.bak_column_step(x, a0, y, j)
+            drop = r2_0 - float(jnp.sum(e1 * e1))
+            np.testing.assert_allclose(s[j], drop, rtol=1e-3, atol=1e-3)
+
+    def test_planted_feature_wins(self):
+        # y built from a single column -> that column must get the top score.
+        x, _, _ = make_system(128, 16, seed=8)
+        y = 3.0 * x[:, 5]
+        cninv = ref.safe_inv(ref.colnorms_sq(x))
+        s = np.asarray(score.feature_scores(x, cninv, y))
+        assert int(np.argmax(s)) == 5

@@ -1,0 +1,103 @@
+"""L2 graph tests: whole-sweep / whole-solve semantics, convergence, shapes."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+from .test_kernels import make_system
+
+
+class TestColnormsInv:
+    def test_values(self):
+        x, _, _ = make_system(32, 8, seed=1)
+        got = model.colnorms_inv(x)
+        want = 1.0 / np.sum(np.asarray(x) ** 2, axis=0)
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_zero_column_maps_to_zero(self):
+        x = jnp.zeros((16, 4), jnp.float32).at[:, 0].set(1.0)
+        got = np.asarray(model.colnorms_inv(x))
+        assert got[0] == pytest.approx(1.0 / 16.0, rel=1e-6)
+        assert (got[1:] == 0.0).all()
+
+
+class TestBakSweepGraph:
+    @pytest.mark.parametrize("obs,vars_,blk", [(64, 32, 8), (64, 32, 32), (128, 64, 16)])
+    def test_matches_ref_sweep(self, obs, vars_, blk):
+        x, y, _ = make_system(obs, vars_, seed=obs + blk, noise=0.1)
+        cninv = model.colnorms_inv(x)
+        a0 = jnp.zeros((vars_,), x.dtype)
+        a_g, e_g, r2 = model.bak_sweep(x, cninv, a0, y, blk=blk)
+        a_r, e_r = ref.bak_sweep(x, a0, y)
+        np.testing.assert_allclose(a_g, a_r, rtol=3e-5, atol=3e-5)
+        np.testing.assert_allclose(e_g, e_r, rtol=3e-5, atol=3e-5)
+        assert float(r2) == pytest.approx(float(jnp.sum(e_r * e_r)), rel=1e-4)
+
+    def test_block_width_does_not_change_semantics(self):
+        # Sequential CD is blocking-invariant: any blk gives the same sweep.
+        x, y, _ = make_system(64, 32, seed=13)
+        cninv = model.colnorms_inv(x)
+        a0 = jnp.zeros((32,), x.dtype)
+        outs = [model.bak_sweep(x, cninv, a0, y, blk=b)[0] for b in (4, 8, 16, 32)]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], rtol=3e-5, atol=3e-5)
+
+
+class TestBakpSolveGraph:
+    def test_square_system_converges_to_exact(self):
+        x, y, a_true = make_system(64, 64, seed=21)
+        a, e, hist = model.bakp_solve(x, y, n_sweeps=600, thr=8)
+        # Square full-rank: residual -> 0 (Theorem 1's exact case).
+        assert float(jnp.sum(e * e)) < 1e-4 * float(jnp.sum(y * y))
+
+    def test_tall_system_converges_to_lstsq(self):
+        x, y, a_true = make_system(256, 16, seed=22, noise=0.5)
+        a, e, hist = model.bakp_solve(x, y, n_sweeps=200, thr=4)
+        a_ls = jnp.linalg.lstsq(x, y)[0]
+        np.testing.assert_allclose(a, a_ls, rtol=2e-3, atol=2e-3)
+
+    def test_wide_system_interpolates(self):
+        # More unknowns than equations: xa = y can be met exactly.
+        x, y, _ = make_system(16, 64, seed=23)
+        a, e, hist = model.bakp_solve(x, y, n_sweeps=300, thr=8)
+        assert float(jnp.max(jnp.abs(e))) < 1e-2
+
+    def test_history_is_monotone_nonincreasing(self):
+        x, y, _ = make_system(96, 48, seed=24, noise=0.3)
+        _, _, hist = model.bakp_solve(x, y, n_sweeps=50, thr=8)
+        h = np.asarray(hist)
+        assert (h[1:] <= h[:-1] * (1 + 1e-5)).all()
+
+    def test_history_length(self):
+        x, y, _ = make_system(32, 16, seed=25)
+        _, _, hist = model.bakp_solve(x, y, n_sweeps=7, thr=4)
+        assert hist.shape == (7,)
+
+
+class TestFeatureSelection:
+    def test_scores_match_ref(self):
+        x, y, _ = make_system(128, 32, seed=31, noise=0.2)
+        cninv = model.colnorms_inv(x)
+        np.testing.assert_allclose(
+            model.feature_scores(x, cninv, y), ref.feature_scores(x, y),
+            rtol=3e-5, atol=3e-5)
+
+    def test_recovers_planted_support(self):
+        # y from 3 planted columns + small noise: greedy selection must
+        # recover exactly those 3 columns first.
+        k = jax.random.PRNGKey(32)
+        x = jax.random.normal(k, (512, 64), jnp.float32)
+        y = 2.0 * x[:, 7] - 1.5 * x[:, 23] + 0.8 * x[:, 41]
+        y = y + 0.01 * jax.random.normal(jax.random.PRNGKey(33), (512,))
+        idx, a, r2s = ref.select_features(x, y, 3)
+        assert sorted(idx) == [7, 23, 41]
+        assert r2s[-1] < 1e-3 * float(jnp.sum(y * y))
+
+    def test_r2_history_decreases(self):
+        x, y, _ = make_system(256, 32, seed=34, noise=1.0)
+        _, _, r2s = ref.select_features(x, y, 8)
+        assert all(b <= a * (1 + 1e-6) for a, b in zip(r2s, r2s[1:]))

@@ -1,0 +1,166 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!  A. thr sweep — convergence + time of BAKP's stale-error blocks as the
+//!     block width grows (the paper's §6 caveat, quantified).
+//!  B. cyclic vs shuffled column order for SolveBak.
+//!  C. tolerance sweep — the paper's "straightforwardly controlled"
+//!     accuracy/time trade.
+//!  D. CGLS comparison — the textbook iterative comparator the paper
+//!     omits (honest context for Table 1).
+//!  E. PJRT artifact sweep vs native sweep cost (L3 dispatch overhead).
+//!
+//! Run: `cargo bench --bench ablations [-- --samples N]`
+
+use solvebak::baselines::cgls_solve;
+use solvebak::bench::workload::{Workload, WorkloadSpec};
+use solvebak::cli::Args;
+use solvebak::linalg::blas1;
+use solvebak::solver::{self, ColumnOrder, SolveOptions};
+use solvebak::util::alloc::CountingAlloc;
+use solvebak::util::stats::Summary;
+use solvebak::util::timer::{sample, BenchConfig};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv).expect("args");
+    let samples = args.get_usize("samples", 3).expect("samples");
+    let cfg = BenchConfig { warmup: 1, samples, ..BenchConfig::default() };
+
+    ablation_thr(&cfg);
+    ablation_order(&cfg);
+    ablation_tolerance(&cfg);
+    ablation_cgls(&cfg);
+    ablation_pjrt(&cfg);
+}
+
+/// A: thr sweep on a fixed tall system.
+fn ablation_thr(cfg: &BenchConfig) {
+    println!("\n## A. BAKP thr sweep (obs=20000, vars=512, tol=1e-6)");
+    println!("{:>6} | {:>10} | {:>7} | {:>12}", "thr", "time_ms", "sweeps", "rel_resid");
+    let w = Workload::consistent(WorkloadSpec::new(20_000, 512, 11));
+    for thr in [1usize, 8, 32, 64, 128, 256, 512] {
+        let mut o = SolveOptions::default();
+        o.thr = thr;
+        o.tol = 1e-6;
+        o.max_sweeps = 400;
+        let rep = solver::solve_bakp(&w.x, &w.y, &o);
+        let t = Summary::of(&sample(cfg, || {
+            std::hint::black_box(solver::solve_bakp(&w.x, &w.y, &o));
+        }));
+        println!(
+            "{:>6} | {:>10.2} | {:>7} | {:>12.3e}",
+            thr, t.min * 1e3, rep.sweeps, rep.rel_residual()
+        );
+    }
+    println!("# paper §6: converges 'if thr is small with respect to vars'; expect degradation at large thr.");
+}
+
+/// B: cyclic vs shuffled order.
+fn ablation_order(cfg: &BenchConfig) {
+    println!("\n## B. SolveBak column order (obs=20000, vars=256)");
+    println!("{:>9} | {:>10} | {:>7}", "order", "time_ms", "sweeps");
+    let w = Workload::consistent(WorkloadSpec::new(20_000, 256, 12));
+    for (name, order) in [("cyclic", ColumnOrder::Cyclic), ("shuffled", ColumnOrder::Shuffled)] {
+        let mut o = SolveOptions::default();
+        o.order = order;
+        o.tol = 1e-6;
+        o.max_sweeps = 300;
+        let rep = solver::solve_bak(&w.x, &w.y, &o);
+        let t = Summary::of(&sample(cfg, || {
+            std::hint::black_box(solver::solve_bak(&w.x, &w.y, &o));
+        }));
+        println!("{:>9} | {:>10.2} | {:>7}", name, t.min * 1e3, rep.sweeps);
+    }
+}
+
+/// C: tolerance sweep — accuracy vs time.
+fn ablation_tolerance(cfg: &BenchConfig) {
+    println!("\n## C. tolerance early-break (obs=50000, vars=256)");
+    println!("{:>9} | {:>10} | {:>7} | {:>12}", "tol", "time_ms", "sweeps", "mape");
+    let w = Workload::consistent(WorkloadSpec::new(50_000, 256, 13));
+    let truth = w.a_true.clone().unwrap();
+    for tol in [1e-2, 1e-3, 1e-4, 1e-5, 1e-6] {
+        let mut o = SolveOptions::default();
+        o.tol = tol;
+        o.max_sweeps = 500;
+        let rep = solver::solve_bak(&w.x, &w.y, &o);
+        let t = Summary::of(&sample(cfg, || {
+            std::hint::black_box(solver::solve_bak(&w.x, &w.y, &o));
+        }));
+        println!(
+            "{:>9.0e} | {:>10.2} | {:>7} | {:>12.3e}",
+            tol, t.min * 1e3, rep.sweeps,
+            solvebak::util::stats::mape(&rep.a, &truth)
+        );
+    }
+}
+
+/// D: CGLS vs BAK on an increasingly ill-conditioned tall system.
+fn ablation_cgls(cfg: &BenchConfig) {
+    println!("\n## D. BAK vs CGLS (textbook comparator), obs=20000 vars=256");
+    println!("{:>12} | {:>10} | {:>7} | {:>12}", "method", "time_ms", "iters", "rel_resid");
+    let w = Workload::consistent(WorkloadSpec::new(20_000, 256, 14));
+    let mut o = SolveOptions::default();
+    o.tol = 1e-6;
+    o.max_sweeps = 400;
+    let rep = solver::solve_bak(&w.x, &w.y, &o);
+    let t_bak = Summary::of(&sample(cfg, || {
+        std::hint::black_box(solver::solve_bak(&w.x, &w.y, &o));
+    }));
+    println!(
+        "{:>12} | {:>10.2} | {:>7} | {:>12.3e}",
+        "BAK", t_bak.min * 1e3, rep.sweeps, rep.rel_residual()
+    );
+    let crep = cgls_solve(&w.x, &w.y, 400, 1e-7);
+    let rel = (blas1::sum_sq_f64(&solvebak::linalg::residual(&w.x, &w.y, &crep.a))
+        / blas1::sum_sq_f64(&w.y))
+    .sqrt();
+    let t_cgls = Summary::of(&sample(cfg, || {
+        std::hint::black_box(cgls_solve(&w.x, &w.y, 400, 1e-7));
+    }));
+    println!(
+        "{:>12} | {:>10.2} | {:>7} | {:>12.3e}",
+        "CGLS", t_cgls.min * 1e3, crep.iterations, rel
+    );
+    println!("# context the paper omits: CG-class methods need O(sqrt(cond)) iterations vs CD's O(cond).");
+}
+
+/// E: PJRT sweep dispatch cost vs the native sweep.
+fn ablation_pjrt(cfg: &BenchConfig) {
+    println!("\n## E. PJRT artifact sweep vs native sweep (256x64 bucket)");
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("# skipped: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let eng = match solvebak::runtime::Engine::new(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            println!("# skipped: engine unavailable ({e})");
+            return;
+        }
+    };
+    let w = Workload::consistent(WorkloadSpec::new(256, 64, 15));
+    let mut o = SolveOptions::default();
+    o.max_sweeps = 1;
+    o.tol = 0.0;
+    o.thr = 32;
+    let t_native = Summary::of(&sample(cfg, || {
+        std::hint::black_box(solver::solve_bakp(&w.x, &w.y, &o));
+    }));
+    let t_pjrt = Summary::of(&sample(cfg, || {
+        std::hint::black_box(
+            eng.solve(&w.x, &w.y, &o, solvebak::runtime::ArtifactKind::BakpSweep).unwrap(),
+        );
+    }));
+    println!(
+        "native one-sweep: {:>8.3} ms | pjrt one-sweep: {:>8.3} ms | dispatch overhead {:.1}x",
+        t_native.min * 1e3,
+        t_pjrt.min * 1e3,
+        t_pjrt.min / t_native.min,
+    );
+    println!("# pjrt includes host<->device copies of a/e per sweep; amortised in multi-sweep solves.");
+}

@@ -1,0 +1,84 @@
+//! Figure 1 reproduction: solution-time speed-up of SolveBak and SolveBakP
+//! versus the standard (QR/"BLAS") solver, across the Table-1 configs.
+//!
+//! Prints the speed-up series plus an ASCII log-scale bar chart — the same
+//! information as the paper's Figure 1.
+//!
+//! Run: `cargo bench --bench figure1_speedup [-- --scale F] [--samples N]`
+
+use solvebak::bench::harness::{run_method, Method};
+use solvebak::bench::paper::TABLE1;
+use solvebak::bench::workload::{Workload, WorkloadSpec};
+use solvebak::cli::Args;
+use solvebak::util::alloc::CountingAlloc;
+use solvebak::util::timer::BenchConfig;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+const DEFAULT_BUDGET: usize = 1 << 21; // speedier than table1: 2M elements
+
+fn bar(v: f64, max: f64) -> String {
+    // log-scale bar, 1..max mapped over 48 chars.
+    let frac = if v <= 1.0 || max <= 1.0 { 0.0 } else { (v.ln() / max.ln()).clamp(0.0, 1.0) };
+    "#".repeat((frac * 48.0).round() as usize)
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv).expect("args");
+    let samples = args.get_usize("samples", 3).expect("samples");
+    let forced_scale = args.get_f64("scale", 0.0).expect("scale");
+    let cfg = BenchConfig { warmup: 1, samples, ..BenchConfig::default() };
+
+    println!("# Figure 1 reproduction — speed-up vs standard solver (QR)");
+    let mut rows = Vec::new();
+    for row in &TABLE1 {
+        let spec0 = WorkloadSpec::new(row.obs, row.vars, 7 + row.id as u64);
+        let spec = if forced_scale > 0.0 {
+            spec0.scaled(forced_scale)
+        } else {
+            let f = ((DEFAULT_BUDGET as f64) / (row.obs * row.vars) as f64).sqrt().min(1.0);
+            spec0.scaled(f)
+        };
+        let w = Workload::consistent(spec);
+        let thr = row.thr.min(spec.vars.max(2) / 2).max(1);
+        let threads = solvebak::linalg::blas2::num_threads().min(row.threads);
+        let qr = run_method(&w, Method::Lapack, &cfg);
+        let bak = run_method(&w, Method::Bak, &cfg);
+        let bakp = run_method(&w, Method::Bakp { thr, threads }, &cfg);
+        rows.push((row, spec, qr.time_ms() / bak.time_ms(), qr.time_ms() / bakp.time_ms()));
+    }
+
+    let max_s = rows
+        .iter()
+        .flat_map(|(r, _, b, p)| [*b, *p, r.speedup_bak(), r.speedup_bakp()])
+        .fold(1.0f64, f64::max);
+
+    println!("\n## BAK speed-up (measured M vs paper P)");
+    for (row, spec, sb, _) in &rows {
+        println!(
+            "{:>2} {:>9}x{:<5} M {:>8.1} |{}",
+            row.id, spec.obs, spec.vars, sb, bar(*sb, max_s)
+        );
+        println!(
+            "   {:>9}x{:<5} P {:>8.1} |{}",
+            row.obs, row.vars, row.speedup_bak(), bar(row.speedup_bak(), max_s)
+        );
+    }
+    println!("\n## BAKP speed-up (measured M vs paper P)");
+    for (row, spec, _, sp) in &rows {
+        println!(
+            "{:>2} {:>9}x{:<5} M {:>8.1} |{}",
+            row.id, spec.obs, spec.vars, sp, bar(*sp, max_s)
+        );
+        println!(
+            "   {:>9}x{:<5} P {:>8.1} |{}",
+            row.obs, row.vars, row.speedup_bakp(), bar(row.speedup_bakp(), max_s)
+        );
+    }
+
+    // Shape summary: tall rows must favour the BAK family.
+    let won: usize = rows.iter().filter(|(_, _, sb, _)| *sb > 1.0).count();
+    println!("\n# BAK faster than QR on {won}/{} rows (paper: 12/12 published rows)", rows.len());
+}

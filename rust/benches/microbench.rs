@@ -1,0 +1,89 @@
+//! Hot-path microbenchmarks for the §Perf pass: BLAS-1 dot/axpy (the
+//! Algorithm-1 inner step), the fused cd_step, one full SolveBak sweep,
+//! and gemv. Reports effective memory bandwidth — the roofline for
+//! coordinate descent is the memory stream, not FLOPs.
+//!
+//! Run: `cargo bench --bench microbench`
+
+use solvebak::bench::workload::{Workload, WorkloadSpec};
+use solvebak::linalg::{blas1, blas2};
+use solvebak::solver::{self, SolveOptions};
+use solvebak::util::rng::Rng;
+use solvebak::util::stats::Summary;
+use solvebak::util::timer::{sample, BenchConfig};
+
+fn main() {
+    let cfg = BenchConfig { warmup: 2, samples: 7, ..BenchConfig::default() };
+    let n = 1 << 20; // 1M f32 = 4 MiB per vector (out of L2, streaming)
+    let mut rng = Rng::seed(1);
+    let x: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+    let mut y: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+
+    println!("# hot-path microbenchmarks (n = {n} f32)");
+
+    // dot: streams 2 vectors (8 bytes/elem).
+    let t = Summary::of(&sample(&cfg, || {
+        std::hint::black_box(blas1::dot(&x, &y));
+    }));
+    println!(
+        "dot      : {:>8.3} ms  -> {:>6.1} GB/s",
+        t.min * 1e3,
+        (8 * n) as f64 / t.min / 1e9
+    );
+
+    // axpy: streams 2 reads + 1 write (12 bytes/elem).
+    let t = Summary::of(&sample(&cfg, || {
+        blas1::axpy(std::hint::black_box(1.000001f32), &x, &mut y);
+    }));
+    println!(
+        "axpy     : {:>8.3} ms  -> {:>6.1} GB/s",
+        t.min * 1e3,
+        (12 * n) as f64 / t.min / 1e9
+    );
+
+    // cd_step: dot + axpy back-to-back (20 bytes/elem).
+    let t = Summary::of(&sample(&cfg, || {
+        std::hint::black_box(blas1::cd_step(&x, &mut y, 1e-9));
+    }));
+    println!(
+        "cd_step  : {:>8.3} ms  -> {:>6.1} GB/s",
+        t.min * 1e3,
+        (20 * n) as f64 / t.min / 1e9
+    );
+
+    // One full SolveBak sweep on a Table-1-like tall system.
+    let w = Workload::consistent(WorkloadSpec::new(50_000, 200, 2));
+    let mut o = SolveOptions::default();
+    o.max_sweeps = 1;
+    o.tol = 0.0;
+    let t = Summary::of(&sample(&cfg, || {
+        std::hint::black_box(solver::solve_bak(&w.x, &w.y, &o));
+    }));
+    let bytes = (w.spec.obs * w.spec.vars * 4 * 2 + w.spec.obs * 4) as f64; // x read twice + e
+    println!(
+        "bak sweep: {:>8.3} ms  -> {:>6.1} GB/s  (50000x200, dot+axpy per col)",
+        t.min * 1e3,
+        bytes / t.min / 1e9
+    );
+
+    // gemv on the same matrix.
+    let a: Vec<f32> = (0..200).map(|j| j as f32 * 0.01).collect();
+    let t = Summary::of(&sample(&cfg, || {
+        std::hint::black_box(blas2::gemv(&w.x, &a));
+    }));
+    println!(
+        "gemv     : {:>8.3} ms  -> {:>6.1} GB/s",
+        t.min * 1e3,
+        (w.spec.obs * w.spec.vars * 4) as f64 / t.min / 1e9
+    );
+
+    // gemv_t (the SolveBakF scoring pass).
+    let t = Summary::of(&sample(&cfg, || {
+        std::hint::black_box(blas2::gemv_t(&w.x, &w.y));
+    }));
+    println!(
+        "gemv_t   : {:>8.3} ms  -> {:>6.1} GB/s",
+        t.min * 1e3,
+        (w.spec.obs * w.spec.vars * 4) as f64 / t.min / 1e9
+    );
+}

@@ -1,0 +1,95 @@
+//! Table 1 reproduction: time / memory-allocations / MAPE for
+//! LAPACK(QR) vs BAK vs BAKP over the paper's 12 (vars, obs) configs.
+//!
+//! Run: `cargo bench --bench table1 [-- --scale F | --full] [--samples N]`
+//!
+//! By default each row is shrunk so its matrix fits a CI-friendly element
+//! budget (the paper's row 12 is a 40 GB matrix); `--full` runs the
+//! published dimensions verbatim — bring RAM and patience. Speedup RATIOS
+//! are dimension-driven and survive scaling; that is the "shape" we
+//! compare against the paper (see EXPERIMENTS.md).
+
+use solvebak::bench::harness::{run_method, Method};
+use solvebak::bench::paper::TABLE1;
+use solvebak::bench::workload::{Workload, WorkloadSpec};
+use solvebak::cli::Args;
+use solvebak::util::alloc::CountingAlloc;
+use solvebak::util::timer::BenchConfig;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Element budget for the default (scaled) mode: 2^22 f32 = 16 MiB.
+/// Sized so the O(obs*vars^2) QR baseline finishes each row in seconds on
+/// a single-core CI box; `--scale`/`--full` override.
+const DEFAULT_BUDGET: usize = 1 << 22;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv).expect("args");
+    let full = args.flag("full");
+    let forced_scale = args.get_f64("scale", 0.0).expect("scale");
+    let samples = args.get_usize("samples", 3).expect("samples");
+    let cfg = BenchConfig { warmup: 1, samples, ..BenchConfig::default() };
+
+    println!("# Table 1 reproduction — LAPACK(QR) vs BAK vs BAKP");
+    println!("# paper rows: published numbers; measured: this machine.");
+    println!(
+        "# mode: {}",
+        if full { "FULL paper dims".into() }
+        else if forced_scale > 0.0 { format!("scale={forced_scale}") }
+        else { format!("auto-scale to {DEFAULT_BUDGET} elements") }
+    );
+    println!(
+        "{:<3} {:>9} {:>6} | {:>11} {:>11} {:>11} | {:>9} {:>9} | {:>9} {:>9} | {:>8} {:>8}",
+        "#", "obs", "vars",
+        "qr_ms", "bak_ms", "bakp_ms",
+        "bak_mape", "bakp_mape",
+        "memB_MiB", "memP_MiB",
+        "spd_msr", "spd_ppr"
+    );
+
+    for row in &TABLE1 {
+        let spec0 = WorkloadSpec::new(row.obs, row.vars, 42 + row.id as u64);
+        let spec = if full {
+            spec0
+        } else if forced_scale > 0.0 {
+            spec0.scaled(forced_scale)
+        } else {
+            let elems = row.obs * row.vars;
+            let f = ((DEFAULT_BUDGET as f64) / elems as f64).sqrt().min(1.0);
+            spec0.scaled(f)
+        };
+        let w = Workload::consistent(spec);
+        let thr = row.thr.min(spec.vars.max(2) / 2).max(1);
+        let threads = solvebak::linalg::blas2::num_threads().min(row.threads);
+
+        let qr = run_method(&w, Method::Lapack, &cfg);
+        let bak = run_method(&w, Method::Bak, &cfg);
+        let bakp = run_method(&w, Method::Bakp { thr, threads }, &cfg);
+
+        let spd_bak = qr.time_ms() / bak.time_ms();
+        println!(
+            "{:<3} {:>9} {:>6} | {:>11.3} {:>11.3} {:>11.3} | {:>9.2e} {:>9.2e} | {:>9.2} {:>9.2} | {:>8.1} {:>8.1}",
+            row.id, spec.obs, spec.vars,
+            qr.time_ms(), bak.time_ms(), bakp.time_ms(),
+            bak.mape, bakp.mape,
+            bak.mem_mib(), bakp.mem_mib(),
+            spd_bak, row.speedup_bak(),
+        );
+        println!(
+            "    paper row {:>2}:  lapack {:>10.1}ms  bak {:>9.1}ms  bakp {:>9.1}ms | mem {:>7.1}/{:>6.1}/{:>6.1} MiB | spd {:>6.1}/{:>6.1}",
+            row.id, row.time_ms_lapack, row.time_ms_bak, row.time_ms_bakp,
+            row.mem_mib_lapack, row.mem_mib_bak, row.mem_mib_bakp,
+            row.speedup_bak(), row.speedup_bakp(),
+        );
+        // The shape check the reproduction stands on: BAK beats QR on
+        // every (tall) row, as in the paper.
+        let who_wins = if bak.time_ms() < qr.time_ms() { "BAK" } else { "QR" };
+        println!(
+            "    shape: winner = {who_wins} (paper: BAK) | mem ratio qr/bak = {:.1} (paper {:.1})",
+            qr.mem_mib() / bak.mem_mib().max(1e-9), row.mem_excess_bak(),
+        );
+    }
+    println!("# done. Record in EXPERIMENTS.md.");
+}

@@ -1,0 +1,124 @@
+//! CGLS: conjugate gradient on the normal equations.
+//!
+//! The standard iterative least-squares method in the same
+//! O(obs*vars)-per-iteration class as SolveBak — included so the ablation
+//! benches can place the paper's algorithm against the textbook comparator
+//! it never cites (CG converges in O(sqrt(cond)) iterations vs. CD's
+//! O(cond), which is the honest context for Table 1's speedups).
+
+use crate::linalg::{blas1, Mat};
+
+/// Result of a CGLS run.
+#[derive(Clone, Debug)]
+pub struct CglsReport {
+    pub a: Vec<f32>,
+    /// Squared residual ||y - X a||^2 after each iteration.
+    pub history: Vec<f64>,
+    pub iterations: usize,
+    pub converged: bool,
+}
+
+/// Minimise ||y - X a|| by CGLS.
+///
+/// Stops when the *relative* residual-norm improvement of the normal-
+/// equations residual drops below `tol`, or after `max_iter` iterations.
+pub fn cgls_solve(x: &Mat, y: &[f32], max_iter: usize, tol: f64) -> CglsReport {
+    let (m, n) = x.shape();
+    assert_eq!(y.len(), m);
+    let mut a = vec![0.0f32; n];
+    let mut r = y.to_vec(); // residual y - X a
+    let mut s = x.matvec_t(&r); // normal-equations residual Xᵀ r
+    let mut p = s.clone();
+    let mut gamma = blas1::sum_sq_f64(&s);
+    let gamma0 = gamma;
+    let mut history = Vec::with_capacity(max_iter);
+    let mut converged = false;
+    let mut iterations = 0;
+
+    for _ in 0..max_iter {
+        iterations += 1;
+        let q = x.matvec(&p); // X p
+        let qq = blas1::sum_sq_f64(&q);
+        if qq == 0.0 {
+            converged = true;
+            break;
+        }
+        let alpha = (gamma / qq) as f32;
+        blas1::axpy(alpha, &p, &mut a);
+        blas1::axpy(-alpha, &q, &mut r);
+        history.push(blas1::sum_sq_f64(&r));
+        s = x.matvec_t(&r);
+        let gamma_new = blas1::sum_sq_f64(&s);
+        if gamma_new <= tol * tol * gamma0 {
+            converged = true;
+            break;
+        }
+        let beta = (gamma_new / gamma) as f32;
+        for (pi, &si) in p.iter_mut().zip(&s) {
+            *pi = si + beta * *pi;
+        }
+        gamma = gamma_new;
+    }
+    CglsReport { a, history, iterations, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::rel_l2;
+
+    #[test]
+    fn exact_recovery_tall() {
+        let mut rng = Rng::seed(50);
+        let x = Mat::randn(&mut rng, 200, 20);
+        let t: Vec<f32> = (0..20).map(|_| rng.normal_f32()).collect();
+        let y = x.matvec(&t);
+        let rep = cgls_solve(&x, &y, 100, 1e-8);
+        assert!(rep.converged);
+        assert!(rel_l2(&rep.a, &t) < 1e-3);
+    }
+
+    #[test]
+    fn converges_in_at_most_n_iterations_well_conditioned() {
+        // Exact-arithmetic CG terminates in <= n steps; with f32 rounding
+        // and a well-conditioned Gaussian matrix it should be close.
+        let mut rng = Rng::seed(51);
+        let x = Mat::randn(&mut rng, 300, 10);
+        let t: Vec<f32> = (0..10).map(|_| rng.normal_f32()).collect();
+        let y = x.matvec(&t);
+        let rep = cgls_solve(&x, &y, 40, 1e-7);
+        assert!(rep.converged, "iterations={}", rep.iterations);
+        assert!(rep.iterations <= 30);
+    }
+
+    #[test]
+    fn history_monotone() {
+        let mut rng = Rng::seed(52);
+        let x = Mat::randn(&mut rng, 100, 30);
+        let y: Vec<f32> = (0..100).map(|_| rng.normal_f32()).collect();
+        let rep = cgls_solve(&x, &y, 30, 0.0);
+        for w in rep.history.windows(2) {
+            assert!(w[1] <= w[0] * (1.0 + 1e-6));
+        }
+    }
+
+    #[test]
+    fn noisy_matches_qr() {
+        let mut rng = Rng::seed(53);
+        let x = Mat::randn(&mut rng, 150, 12);
+        let y: Vec<f32> = (0..150).map(|_| rng.normal_f32()).collect();
+        let rep = cgls_solve(&x, &y, 200, 1e-9);
+        let a_qr = crate::baselines::qr::lstsq_qr(&x, &y).unwrap();
+        assert!(rel_l2(&rep.a, &a_qr) < 1e-2);
+    }
+
+    #[test]
+    fn zero_rhs_gives_zero() {
+        let mut rng = Rng::seed(54);
+        let x = Mat::randn(&mut rng, 20, 5);
+        let rep = cgls_solve(&x, &[0.0; 20], 10, 1e-8);
+        assert!(rep.a.iter().all(|&v| v == 0.0));
+        assert!(rep.converged);
+    }
+}

@@ -1,0 +1,168 @@
+//! Normal-equations solver: a = (Xᵀ X)^{-1} Xᵀ y via Cholesky.
+//!
+//! Used (a) as a Table-1 comparator for tall systems, and (b) by
+//! SolveBakF's exact least-squares refit on the selected columns
+//! (Algorithm 3 line 7), where the k x k Gram system is tiny.
+
+use super::qr::SolveError;
+use crate::linalg::{blas3, Mat};
+
+/// Lower-triangular Cholesky factor of a symmetric positive-definite matrix.
+pub fn cholesky_factor(g: &Mat) -> Result<Mat, SolveError> {
+    let (m, n) = g.shape();
+    if m != n {
+        return Err(SolveError::Shape(format!("cholesky needs square, got {m}x{n}")));
+    }
+    let mut l = Mat::zeros(n, n);
+    for j in 0..n {
+        // Diagonal.
+        let mut d = g.get(j, j);
+        for k in 0..j {
+            let ljk = l.get(j, k);
+            d -= ljk * ljk;
+        }
+        if d <= 0.0 {
+            return Err(SolveError::RankDeficient(j));
+        }
+        let ljj = d.sqrt();
+        l.set(j, j, ljj);
+        // Below-diagonal column.
+        for i in j + 1..n {
+            let mut s = g.get(i, j);
+            for k in 0..j {
+                s -= l.get(i, k) * l.get(j, k);
+            }
+            l.set(i, j, s / ljj);
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L Lᵀ a = b given the lower factor L.
+pub fn cholesky_solve(l: &Mat, b: &[f32]) -> Vec<f32> {
+    let n = l.cols();
+    debug_assert_eq!(b.len(), n);
+    // Forward: L z = b.
+    let mut z = vec![0.0f32; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for (k, &zk) in z.iter().enumerate().take(i) {
+            s -= l.get(i, k) * zk;
+        }
+        z[i] = s / l.get(i, i);
+    }
+    // Backward: Lᵀ a = z.
+    let mut a = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut s = z[i];
+        for (k, &ak) in a.iter().enumerate().skip(i + 1) {
+            s -= l.get(k, i) * ak;
+        }
+        a[i] = s / l.get(i, i);
+    }
+    a
+}
+
+/// Least squares through the normal equations (with a tiny ridge for
+/// numerical safety on near-collinear workloads).
+pub fn solve_normal_equations(x: &Mat, y: &[f32], ridge: f32) -> Result<Vec<f32>, SolveError> {
+    if y.len() != x.rows() {
+        return Err(SolveError::Shape(format!("y len {} != obs {}", y.len(), x.rows())));
+    }
+    let mut g = blas3::gram(x);
+    if ridge > 0.0 {
+        for j in 0..g.cols() {
+            *g.get_mut(j, j) += ridge;
+        }
+    }
+    let rhs = x.matvec_t(y);
+    let l = cholesky_factor(&g)?;
+    Ok(cholesky_solve(&l, &rhs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::residual;
+    use crate::util::rng::Rng;
+    use crate::util::stats::rel_l2;
+
+    #[test]
+    fn factor_known_matrix() {
+        // G = [[4, 2], [2, 3]] -> L = [[2, 0], [1, sqrt(2)]]
+        let g = Mat::from_rows(&[vec![4.0, 2.0], vec![2.0, 3.0]]);
+        let l = cholesky_factor(&g).unwrap();
+        assert!((l.get(0, 0) - 2.0).abs() < 1e-6);
+        assert!((l.get(1, 0) - 1.0).abs() < 1e-6);
+        assert!((l.get(1, 1) - 2.0f32.sqrt()).abs() < 1e-6);
+        assert_eq!(l.get(0, 1), 0.0);
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let mut rng = Rng::seed(40);
+        let x = Mat::randn(&mut rng, 30, 8);
+        let g = blas3::gram(&x);
+        let l = cholesky_factor(&g).unwrap();
+        // L Lᵀ == G.
+        for i in 0..8 {
+            for j in 0..8 {
+                let mut s = 0.0f32;
+                for k in 0..8 {
+                    s += l.get(i, k) * l.get(j, k);
+                }
+                assert!((s - g.get(i, j)).abs() < 2e-2 * (1.0 + g.get(i, j).abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn not_positive_definite_detected() {
+        let g = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]); // eigenvalue -1
+        assert!(matches!(cholesky_factor(&g), Err(SolveError::RankDeficient(_))));
+    }
+
+    #[test]
+    fn normal_equations_match_qr_on_tall() {
+        let mut rng = Rng::seed(41);
+        let x = Mat::randn(&mut rng, 120, 15);
+        let y: Vec<f32> = (0..120).map(|_| rng.normal_f32()).collect();
+        let a_ne = solve_normal_equations(&x, &y, 0.0).unwrap();
+        let a_qr = crate::baselines::qr::lstsq_qr(&x, &y).unwrap();
+        assert!(rel_l2(&a_ne, &a_qr) < 1e-2);
+    }
+
+    #[test]
+    fn exact_recovery() {
+        let mut rng = Rng::seed(42);
+        let x = Mat::randn(&mut rng, 60, 10);
+        let t: Vec<f32> = (0..10).map(|_| rng.normal_f32()).collect();
+        let y = x.matvec(&t);
+        let a = solve_normal_equations(&x, &y, 0.0).unwrap();
+        assert!(rel_l2(&a, &t) < 1e-3);
+    }
+
+    #[test]
+    fn residual_orthogonality() {
+        let mut rng = Rng::seed(43);
+        let x = Mat::randn(&mut rng, 50, 6);
+        let y: Vec<f32> = (0..50).map(|_| rng.normal_f32()).collect();
+        let a = solve_normal_equations(&x, &y, 0.0).unwrap();
+        let e = residual(&x, &y, &a);
+        for v in x.matvec_t(&e) {
+            assert!(v.abs() < 5e-3, "Xᵀe = {v}");
+        }
+    }
+
+    #[test]
+    fn ridge_shrinks_solution() {
+        let mut rng = Rng::seed(44);
+        let x = Mat::randn(&mut rng, 40, 5);
+        let y: Vec<f32> = (0..40).map(|_| rng.normal_f32()).collect();
+        let a0 = solve_normal_equations(&x, &y, 0.0).unwrap();
+        let a1 = solve_normal_equations(&x, &y, 100.0).unwrap();
+        let n0: f32 = a0.iter().map(|v| v * v).sum();
+        let n1: f32 = a1.iter().map(|v| v * v).sum();
+        assert!(n1 < n0);
+    }
+}

@@ -1,0 +1,111 @@
+//! Gaussian elimination with partial pivoting — the classical square-system
+//! solver the paper's introduction positions against (and reports as faster
+//! than BAK for square systems in §7).
+
+use super::qr::SolveError;
+use crate::linalg::Mat;
+
+/// Solve the square system A a = y by LU with partial pivoting.
+pub fn gauss_solve(a: &Mat, y: &[f32]) -> Result<Vec<f32>, SolveError> {
+    let (m, n) = a.shape();
+    if m != n {
+        return Err(SolveError::Shape(format!("gauss_solve needs square, got {m}x{n}")));
+    }
+    if y.len() != n {
+        return Err(SolveError::Shape(format!("rhs len {} != {n}", y.len())));
+    }
+    // Work row-major for the elimination (row swaps are the hot operation).
+    let mut w: Vec<Vec<f32>> = (0..n).map(|i| a.row(i)).collect();
+    let mut b = y.to_vec();
+
+    for k in 0..n {
+        // Partial pivot: largest |w[i][k]|, i >= k.
+        let (piv, pmax) = (k..n)
+            .map(|i| (i, w[i][k].abs()))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        if pmax < 1e-12 {
+            return Err(SolveError::RankDeficient(k));
+        }
+        w.swap(k, piv);
+        b.swap(k, piv);
+        let pivot = w[k][k];
+        let (head, tail) = w.split_at_mut(k + 1);
+        let row_k = &head[k];
+        for (off, row_i) in tail.iter_mut().enumerate() {
+            let factor = row_i[k] / pivot;
+            if factor != 0.0 {
+                for j in k..n {
+                    row_i[j] -= factor * row_k[j];
+                }
+                b[k + 1 + off] -= factor * b[k];
+            }
+            row_i[k] = 0.0;
+        }
+    }
+    // Back substitution.
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for (j, &xj) in x.iter().enumerate().skip(i + 1) {
+            s -= w[i][j] * xj;
+        }
+        x[i] = s / w[i][i];
+    }
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::rel_l2;
+
+    #[test]
+    fn identity_solve() {
+        let a = Mat::from_fn(4, 4, |i, j| if i == j { 1.0 } else { 0.0 });
+        let y = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(gauss_solve(&a, &y).unwrap(), y);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [2 1; 1 3] a = [3; 5] -> a = (4/5, 7/5)
+        let a = Mat::from_rows(&[vec![2.0, 1.0], vec![1.0, 3.0]]);
+        let x = gauss_solve(&a, &[3.0, 5.0]).unwrap();
+        assert!((x[0] - 0.8).abs() < 1e-5);
+        assert!((x[1] - 1.4).abs() < 1e-5);
+    }
+
+    #[test]
+    fn random_systems_recover_truth() {
+        let mut rng = Rng::seed(30);
+        for n in [3, 10, 50, 100] {
+            let a = Mat::randn(&mut rng, n, n);
+            let t: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let y = a.matvec(&t);
+            let x = gauss_solve(&a, &y).unwrap();
+            assert!(rel_l2(&x, &t) < 1e-2, "n={n} err={}", rel_l2(&x, &t));
+        }
+    }
+
+    #[test]
+    fn pivoting_handles_zero_leading_entry() {
+        // a11 == 0 forces a row swap.
+        let a = Mat::from_rows(&[vec![0.0, 1.0], vec![1.0, 0.0]]);
+        let x = gauss_solve(&a, &[2.0, 3.0]).unwrap();
+        assert_eq!(x, vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0]]);
+        assert!(matches!(gauss_solve(&a, &[1.0, 2.0]), Err(SolveError::RankDeficient(_))));
+    }
+
+    #[test]
+    fn non_square_rejected() {
+        let a = Mat::zeros(3, 2);
+        assert!(matches!(gauss_solve(&a, &[0.0; 3]), Err(SolveError::Shape(_))));
+    }
+}

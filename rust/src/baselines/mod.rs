@@ -1,0 +1,26 @@
+//! The comparator algorithms of the paper's evaluation, implemented from
+//! scratch (no LAPACK/BLAS in the offline environment — see DESIGN.md
+//! §Substitutions):
+//!
+//! * [`qr`] — Householder-QR least squares: the stand-in for Julia's
+//!   LAPACK `\` (which uses QR for non-square systems). This is the
+//!   "LAPACK" column of Table 1.
+//! * [`cholesky`] — normal-equations solve (Xᵀ X a = Xᵀ y).
+//! * [`gauss`] — Gaussian elimination with partial pivoting (square
+//!   systems; §1's classical reference point).
+//! * [`cgls`] — conjugate-gradient on the normal equations: the standard
+//!   iterative comparator in the same O(mn)-per-iteration class as
+//!   SolveBak (used by the ablation benches).
+//! * [`stepwise`] — forward stepwise regression, the Figure-2 baseline.
+
+pub mod qr;
+pub mod cholesky;
+pub mod gauss;
+pub mod cgls;
+pub mod stepwise;
+
+pub use cgls::cgls_solve;
+pub use cholesky::{cholesky_factor, cholesky_solve, solve_normal_equations};
+pub use gauss::gauss_solve;
+pub use qr::lstsq_qr;
+pub use stepwise::stepwise_select;

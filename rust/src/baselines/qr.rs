@@ -1,0 +1,291 @@
+//! Householder-QR least squares — the paper's "LAPACK" baseline.
+//!
+//! Julia's `x \ y` for a non-square dense system calls LAPACK `gels`,
+//! which factors X = QR with Householder reflectors and solves
+//! R a = Qᵀ y. This module reimplements that path (without pivoting; the
+//! bench workloads are dense Gaussian, numerically full-rank).
+//! Cost: O(obs * vars^2) flops — the 2-to-3-orders-of-magnitude gap to
+//! SolveBak's O(obs * vars) per sweep is exactly what Table 1 measures.
+
+use crate::linalg::{blas1, Mat};
+
+/// Error type for the direct solvers.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SolveError {
+    /// Matrix is (numerically) rank-deficient at the given column.
+    RankDeficient(usize),
+    /// Dimension mismatch.
+    Shape(String),
+}
+
+impl std::fmt::Display for SolveError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SolveError::RankDeficient(j) => write!(f, "rank deficient at column {j}"),
+            SolveError::Shape(s) => write!(f, "shape error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for SolveError {}
+
+/// In-place Householder QR of a copy of `x`; returns (packed factors, taus).
+///
+/// Factors are stored LAPACK-style: R in the upper triangle, the essential
+/// part of each reflector v_j below the diagonal (v_j[j] == 1 implicit).
+pub fn householder_qr(x: &Mat) -> (Mat, Vec<f32>) {
+    let (m, n) = x.shape();
+    assert!(m >= n, "householder_qr requires obs >= vars (tall); got {m}x{n}");
+    let mut a = x.clone();
+    let mut taus = vec![0.0f32; n];
+    for j in 0..n {
+        // Build the reflector for column j, rows j..m.
+        let (head, tail_norm_sq) = {
+            let col = a.col(j);
+            let head = col[j];
+            let t: f32 = blas1::nrm2_sq(&col[j + 1..]);
+            (head, t)
+        };
+        let norm = (head * head + tail_norm_sq).sqrt();
+        if norm == 0.0 {
+            taus[j] = 0.0;
+            continue;
+        }
+        let alpha = if head >= 0.0 { -norm } else { norm };
+        let v0 = head - alpha;
+        // tau = (alpha - head)/alpha per LAPACK convention with v0 scaled to 1.
+        let tau = -v0 / alpha;
+        // Scale tail by 1/v0 so the stored reflector has implicit v[j]=1.
+        {
+            let col = a.col_mut(j);
+            col[j] = alpha; // R diagonal
+            if v0 != 0.0 {
+                let inv = 1.0 / v0;
+                for v in col[j + 1..].iter_mut() {
+                    *v *= inv;
+                }
+            }
+        }
+        taus[j] = tau;
+        if tau == 0.0 {
+            continue;
+        }
+        // Apply (I - tau v vᵀ) to the remaining columns.
+        for k in j + 1..n {
+            let w = {
+                let vj = &a.col(j)[j + 1..];
+                let ck = a.col(k);
+                ck[j] + blas1::dot(vj, &ck[j + 1..])
+            };
+            let tw = tau * w;
+            // Split borrow: copy the reflector tail (small) to avoid aliasing.
+            let vj: Vec<f32> = a.col(j)[j + 1..].to_vec();
+            let ck = a.col_mut(k);
+            ck[j] -= tw;
+            blas1::axpy(-tw, &vj, &mut ck[j + 1..]);
+        }
+    }
+    (a, taus)
+}
+
+/// Apply Qᵀ (from packed factors) to a vector.
+pub fn apply_qt(factors: &Mat, taus: &[f32], y: &[f32]) -> Vec<f32> {
+    let (m, n) = factors.shape();
+    assert_eq!(y.len(), m);
+    let mut out = y.to_vec();
+    for j in 0..n {
+        let tau = taus[j];
+        if tau == 0.0 {
+            continue;
+        }
+        let vj = &factors.col(j)[j + 1..];
+        let w = out[j] + blas1::dot(vj, &out[j + 1..]);
+        let tw = tau * w;
+        out[j] -= tw;
+        blas1::axpy(-tw, vj, &mut out[j + 1..]);
+    }
+    out
+}
+
+/// Back-substitution on the R factor: solves R a = b[..n].
+pub fn solve_upper_triangular(factors: &Mat, b: &[f32]) -> Result<Vec<f32>, SolveError> {
+    let n = factors.cols();
+    // Relative rank threshold (f32): diagonal entries this far below the
+    // largest one are numerically zero.
+    let dmax = (0..n).map(|j| factors.get(j, j).abs()).fold(0.0f32, f32::max);
+    let thresh = dmax * 1e-6 + f32::MIN_POSITIVE;
+    let mut a = vec![0.0f32; n];
+    for j in (0..n).rev() {
+        let rjj = factors.get(j, j);
+        if rjj.abs() < thresh {
+            return Err(SolveError::RankDeficient(j));
+        }
+        let mut s = b[j];
+        // s -= sum_{k>j} R[j,k] a[k]; R[j,k] is factors[(j,k)], k>j.
+        for (k, &ak) in a.iter().enumerate().skip(j + 1) {
+            s -= factors.get(j, k) * ak;
+        }
+        a[j] = s / rjj;
+    }
+    Ok(a)
+}
+
+/// Least squares via Householder QR: minimises ||y - X a||_2 for tall X.
+///
+/// For wide systems (vars > obs) the minimum-norm problem is solved via QR
+/// of Xᵀ: a = Qᵀ (Rᵀ)^{-1}... i.e. a = Q z with Rᵀ z = y.
+pub fn lstsq_qr(x: &Mat, y: &[f32]) -> Result<Vec<f32>, SolveError> {
+    let (m, n) = x.shape();
+    if y.len() != m {
+        return Err(SolveError::Shape(format!("y len {} != obs {m}", y.len())));
+    }
+    if m >= n {
+        let (f, taus) = householder_qr(x);
+        let qty = apply_qt(&f, &taus, y);
+        solve_upper_triangular(&f, &qty)
+    } else {
+        // Wide: minimum-norm solution through QR of the transpose.
+        let xt = x.transposed(); // (n, m), tall
+        let (f, taus) = householder_qr(&xt);
+        // X = Rᵀ Qᵀ (from Xᵀ = Q R). Solve Rᵀ z = y (forward substitution),
+        // then a = Q [z; 0].
+        let dmax = (0..m).map(|i| f.get(i, i).abs()).fold(0.0f32, f32::max);
+        let thresh = dmax * 1e-6 + f32::MIN_POSITIVE;
+        let mut z = vec![0.0f32; m];
+        for i in 0..m {
+            let rii = f.get(i, i);
+            if rii.abs() < thresh {
+                return Err(SolveError::RankDeficient(i));
+            }
+            let mut s = y[i];
+            for (k, &zk) in z.iter().enumerate().take(i) {
+                // (Rᵀ)[i,k] = R[k,i]
+                s -= f.get(k, i) * zk;
+            }
+            z[i] = s / rii;
+        }
+        // a = Q [z; 0]: apply reflectors in reverse order.
+        let mut a = vec![0.0f32; n];
+        a[..m].copy_from_slice(&z);
+        for j in (0..m).rev() {
+            let tau = taus[j];
+            if tau == 0.0 {
+                continue;
+            }
+            let vj = &f.col(j)[j + 1..];
+            let w = a[j] + blas1::dot(vj, &a[j + 1..]);
+            let tw = tau * w;
+            a[j] -= tw;
+            blas1::axpy(-tw, vj, &mut a[j + 1..]);
+        }
+        Ok(a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::residual;
+    use crate::util::rng::Rng;
+    use crate::util::stats::rel_l2;
+
+    #[test]
+    fn qr_reconstructs_r_diagonal_nonzero() {
+        let mut rng = Rng::seed(20);
+        let x = Mat::randn(&mut rng, 30, 10);
+        let (f, _t) = householder_qr(&x);
+        for j in 0..10 {
+            assert!(f.get(j, j).abs() > 1e-4);
+        }
+    }
+
+    #[test]
+    fn qt_preserves_norm() {
+        let mut rng = Rng::seed(21);
+        let x = Mat::randn(&mut rng, 25, 8);
+        let (f, t) = householder_qr(&x);
+        let y: Vec<f32> = (0..25).map(|_| rng.normal_f32()).collect();
+        let qty = apply_qt(&f, &t, &y);
+        let n1 = blas1::nrm2(&y);
+        let n2 = blas1::nrm2(&qty);
+        assert!((n1 - n2).abs() < 1e-3 * n1, "orthogonality: {n1} vs {n2}");
+    }
+
+    #[test]
+    fn exact_square_system() {
+        let mut rng = Rng::seed(22);
+        let x = Mat::randn(&mut rng, 12, 12);
+        let a_true: Vec<f32> = (0..12).map(|_| rng.normal_f32()).collect();
+        let y = x.matvec(&a_true);
+        let a = lstsq_qr(&x, &y).unwrap();
+        assert!(rel_l2(&a, &a_true) < 1e-3);
+    }
+
+    #[test]
+    fn tall_consistent_system_recovers_truth() {
+        let mut rng = Rng::seed(23);
+        let x = Mat::randn(&mut rng, 100, 20);
+        let a_true: Vec<f32> = (0..20).map(|_| rng.normal_f32()).collect();
+        let y = x.matvec(&a_true);
+        let a = lstsq_qr(&x, &y).unwrap();
+        assert!(rel_l2(&a, &a_true) < 1e-4);
+    }
+
+    #[test]
+    fn tall_noisy_residual_is_orthogonal_to_columns() {
+        // Least-squares optimality: Xᵀ e == 0.
+        let mut rng = Rng::seed(24);
+        let x = Mat::randn(&mut rng, 80, 10);
+        let y: Vec<f32> = (0..80).map(|_| rng.normal_f32()).collect();
+        let a = lstsq_qr(&x, &y).unwrap();
+        let e = residual(&x, &y, &a);
+        let g = x.matvec_t(&e);
+        for (j, v) in g.iter().enumerate() {
+            assert!(v.abs() < 2e-3, "column {j} not orthogonal: {v}");
+        }
+    }
+
+    #[test]
+    fn wide_system_interpolates() {
+        let mut rng = Rng::seed(25);
+        let x = Mat::randn(&mut rng, 15, 60);
+        let y: Vec<f32> = (0..15).map(|_| rng.normal_f32()).collect();
+        let a = lstsq_qr(&x, &y).unwrap();
+        let e = residual(&x, &y, &a);
+        assert!(blas1::nrm2(&e) < 1e-3, "wide system must be satisfied exactly");
+    }
+
+    #[test]
+    fn wide_solution_is_minimum_norm() {
+        // Min-norm solution lies in the row space: a = Xᵀ w for some w.
+        // Equivalent check: any null-space perturbation increases the norm;
+        // compare against the normal-equations min-norm formula
+        // a = Xᵀ (X Xᵀ)^{-1} y on a small instance.
+        let mut rng = Rng::seed(26);
+        let x = Mat::randn(&mut rng, 6, 20);
+        let y: Vec<f32> = (0..6).map(|_| rng.normal_f32()).collect();
+        let a = lstsq_qr(&x, &y).unwrap();
+        // Gram (X Xᵀ) solve via gauss.
+        let xxt = crate::linalg::blas3::gemm_tn(&x.transposed(), &x.transposed());
+        let w = crate::baselines::gauss::gauss_solve(&xxt, &y).unwrap();
+        let a_min = x.matvec_t(&w);
+        assert!(rel_l2(&a, &a_min) < 1e-2);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let x = Mat::zeros(5, 2);
+        assert!(matches!(lstsq_qr(&x, &[1.0; 4]), Err(SolveError::Shape(_))));
+    }
+
+    #[test]
+    fn rank_deficient_detected() {
+        // Two identical columns.
+        let mut rng = Rng::seed(27);
+        let mut x = Mat::randn(&mut rng, 10, 3);
+        let c0 = x.col(0).to_vec();
+        x.col_mut(1).copy_from_slice(&c0);
+        let y: Vec<f32> = (0..10).map(|_| rng.normal_f32()).collect();
+        assert!(matches!(lstsq_qr(&x, &y), Err(SolveError::RankDeficient(_))));
+    }
+}

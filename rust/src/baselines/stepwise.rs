@@ -1,0 +1,120 @@
+//! Forward stepwise regression — the Figure-2 baseline.
+//!
+//! Classic forward selection: at each round, try EVERY remaining feature by
+//! refitting the full least-squares model with it added, and keep the one
+//! with the lowest residual. Cost per round is O(vars * k^2 * obs) — the
+//! expensive exhaustive search that SolveBakF's one-pass scoring undercuts;
+//! Figure 2's speedup is exactly this gap.
+
+use super::cholesky::solve_normal_equations;
+use crate::linalg::{blas1, residual, Mat};
+
+/// Outcome of stepwise selection.
+#[derive(Clone, Debug)]
+pub struct StepwiseReport {
+    /// Selected feature indices, in selection order.
+    pub selected: Vec<usize>,
+    /// Coefficients of the final refit (aligned with `selected`).
+    pub coeffs: Vec<f32>,
+    /// Squared residual after each round.
+    pub history: Vec<f64>,
+}
+
+/// Forward stepwise selection of up to `max_feat` features.
+pub fn stepwise_select(x: &Mat, y: &[f32], max_feat: usize) -> StepwiseReport {
+    let vars = x.cols();
+    let max_feat = max_feat.min(vars);
+    let mut selected: Vec<usize> = Vec::with_capacity(max_feat);
+    let mut coeffs: Vec<f32> = Vec::new();
+    let mut history = Vec::with_capacity(max_feat);
+
+    for _ in 0..max_feat {
+        let mut best: Option<(usize, f64, Vec<f32>)> = None;
+        for j in 0..vars {
+            if selected.contains(&j) {
+                continue;
+            }
+            let mut trial = selected.clone();
+            trial.push(j);
+            let xs = x.select_cols(&trial);
+            // Tiny ridge: trial sets can be collinear mid-search.
+            let Ok(a) = solve_normal_equations(&xs, y, 1e-6) else {
+                continue;
+            };
+            let e = residual(&xs, y, &a);
+            let r2 = blas1::sum_sq_f64(&e);
+            if best.as_ref().is_none_or(|(_, b, _)| r2 < *b) {
+                best = Some((j, r2, a));
+            }
+        }
+        let Some((j, r2, a)) = best else { break };
+        selected.push(j);
+        coeffs = a;
+        history.push(r2);
+    }
+    StepwiseReport { selected, coeffs, history }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn planted(seed: u64, obs: usize, vars: usize, support: &[(usize, f32)]) -> (Mat, Vec<f32>) {
+        let mut rng = Rng::seed(seed);
+        let x = Mat::randn(&mut rng, obs, vars);
+        let mut y = vec![0.0f32; obs];
+        for &(j, w) in support {
+            blas1::axpy(w, x.col(j), &mut y);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn recovers_planted_support() {
+        let (x, y) = planted(60, 300, 20, &[(3, 2.0), (11, -1.5), (17, 0.7)]);
+        let rep = stepwise_select(&x, &y, 3);
+        let mut s = rep.selected.clone();
+        s.sort_unstable();
+        assert_eq!(s, vec![3, 11, 17]);
+        assert!(rep.history[2] < 1e-4 * blas1::sum_sq_f64(&y));
+    }
+
+    #[test]
+    fn selection_order_by_strength() {
+        // The strongest feature must be picked first.
+        let (x, y) = planted(61, 400, 15, &[(2, 5.0), (9, 0.5)]);
+        let rep = stepwise_select(&x, &y, 2);
+        assert_eq!(rep.selected[0], 2);
+        assert_eq!(rep.selected[1], 9);
+    }
+
+    #[test]
+    fn history_monotone_nonincreasing() {
+        let mut rng = Rng::seed(62);
+        let x = Mat::randn(&mut rng, 100, 12);
+        let y: Vec<f32> = (0..100).map(|_| rng.normal_f32()).collect();
+        let rep = stepwise_select(&x, &y, 6);
+        for w in rep.history.windows(2) {
+            assert!(w[1] <= w[0] * (1.0 + 1e-6));
+        }
+    }
+
+    #[test]
+    fn max_feat_capped_at_vars() {
+        let mut rng = Rng::seed(63);
+        let x = Mat::randn(&mut rng, 30, 4);
+        let y: Vec<f32> = (0..30).map(|_| rng.normal_f32()).collect();
+        let rep = stepwise_select(&x, &y, 10);
+        assert_eq!(rep.selected.len(), 4);
+    }
+
+    #[test]
+    fn coeffs_align_with_selected() {
+        let (x, y) = planted(64, 200, 10, &[(1, 3.0)]);
+        let rep = stepwise_select(&x, &y, 1);
+        assert_eq!(rep.selected, vec![1]);
+        assert_eq!(rep.coeffs.len(), 1);
+        assert!((rep.coeffs[0] - 3.0).abs() < 1e-2);
+    }
+}

@@ -1,0 +1,129 @@
+//! Measurement runner shared by the bench binaries: times a solver on a
+//! workload with warmup + samples, tracks allocations (when the bench
+//! binary installs [`crate::util::alloc::CountingAlloc`]) and computes the
+//! paper's accuracy metric.
+
+use crate::baselines::qr::lstsq_qr;
+use crate::linalg::Mat;
+use crate::solver::{solve_bak, solve_bakp, SolveOptions};
+use crate::util::alloc;
+use crate::util::stats::{mape, Summary};
+use crate::util::timer::{sample, BenchConfig};
+
+use super::workload::Workload;
+
+/// Which method a measurement ran.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Householder-QR least squares (the paper's "LAPACK" column).
+    Lapack,
+    /// Algorithm 1.
+    Bak,
+    /// Algorithm 2 with (thr, threads).
+    Bakp { thr: usize, threads: usize },
+}
+
+impl Method {
+    pub fn label(&self) -> String {
+        match self {
+            Method::Lapack => "LAPACK(QR)".into(),
+            Method::Bak => "BAK".into(),
+            Method::Bakp { thr, threads } => format!("BAKP(thr={thr},t={threads})"),
+        }
+    }
+}
+
+/// One measured method on one workload.
+#[derive(Clone, Debug)]
+pub struct MethodResult {
+    pub method_label: String,
+    pub time: Summary,
+    /// Bytes allocated by ONE run (0 unless the counting allocator is the
+    /// binary's global allocator).
+    pub alloc_bytes: u64,
+    /// MAPE of the solution against the planted coefficients.
+    pub mape: f64,
+}
+
+impl MethodResult {
+    pub fn time_ms(&self) -> f64 {
+        self.time.min * 1e3 // @btime semantics: minimum over samples
+    }
+
+    pub fn mem_mib(&self) -> f64 {
+        alloc::mib(self.alloc_bytes)
+    }
+}
+
+/// Solver options used for Table-1 measurements: tolerance chosen to land
+/// in the paper's MAPE regime.
+pub fn table1_opts(thr: usize, threads: usize) -> SolveOptions {
+    SolveOptions {
+        max_sweeps: 200,
+        tol: 1e-6,
+        thr,
+        threads,
+        check_every: 1,
+        ..SolveOptions::default()
+    }
+}
+
+/// Run one method on one workload.
+pub fn run_method(w: &Workload, method: Method, cfg: &BenchConfig) -> MethodResult {
+    let solve = |x: &Mat, y: &[f32]| -> Vec<f32> {
+        match method {
+            Method::Lapack => lstsq_qr(x, y).expect("qr baseline failed"),
+            Method::Bak => solve_bak(x, y, &table1_opts(50, 1)).a,
+            Method::Bakp { thr, threads } => {
+                solve_bakp(x, y, &table1_opts(thr, threads)).a
+            }
+        }
+    };
+
+    // Allocation measurement: one tracked run.
+    let (a_hat, snap) = alloc::measure(|| solve(&w.x, &w.y));
+    let acc = w.a_true.as_ref().map(|t| mape(&a_hat, t)).unwrap_or(f64::NAN);
+
+    // Timing loop.
+    let times = sample(cfg, || {
+        std::hint::black_box(solve(&w.x, &w.y));
+    });
+
+    MethodResult {
+        method_label: method.label(),
+        time: Summary::of(&times),
+        alloc_bytes: snap.bytes,
+        mape: acc,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workload::WorkloadSpec;
+
+    #[test]
+    fn run_method_all_backends() {
+        let w = Workload::consistent(WorkloadSpec::new(120, 12, 77));
+        let cfg = BenchConfig::quick();
+        for m in [Method::Lapack, Method::Bak, Method::Bakp { thr: 4, threads: 1 }] {
+            let r = run_method(&w, m, &cfg);
+            assert!(r.time.min > 0.0, "{}", r.method_label);
+            assert!(r.mape < 1e-2, "{} mape={}", r.method_label, r.mape);
+        }
+    }
+
+    #[test]
+    fn labels_distinct() {
+        assert_ne!(Method::Lapack.label(), Method::Bak.label());
+        assert!(Method::Bakp { thr: 50, threads: 2 }.label().contains("50"));
+    }
+
+    #[test]
+    fn table1_opts_paper_regime() {
+        let o = table1_opts(50, 4);
+        assert_eq!(o.thr, 50);
+        assert_eq!(o.threads, 4);
+        assert!(o.tol > 0.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Benchmark harness (the offline registry has no criterion): workload
+//! generators, paper reference numbers, measurement runners and table
+//! printers shared by the `rust/benches/*` binaries.
+
+pub mod workload;
+pub mod paper;
+pub mod harness;
+
+pub use harness::{run_method, MethodResult};
+pub use workload::{WorkloadSpec, Workload};

@@ -1,0 +1,143 @@
+//! The paper's published numbers (Table 1), used by the bench binaries to
+//! print paper-vs-measured side by side.
+//!
+//! Times are milliseconds, memory is MiB, accuracy is MAPE; "excess" are
+//! the paper's LAPACK/BAK(P) ratios. Rows 1-4 ran on a 6-thread desktop,
+//! rows 5-12 on an 80-core node with 16 BLAS threads; thr = 50 for rows
+//! 1-10 and 1000 for rows 11-12.
+
+/// One Table-1 row as published.
+#[derive(Clone, Copy, Debug)]
+pub struct PaperRow {
+    pub id: usize,
+    pub vars: usize,
+    pub obs: usize,
+    pub threads: usize,
+    /// The paper's thr parameter for BAKP.
+    pub thr: usize,
+    pub time_ms_lapack: f64,
+    pub time_ms_bak: f64,
+    pub time_ms_bakp: f64,
+    pub mem_mib_lapack: f64,
+    pub mem_mib_bak: f64,
+    pub mem_mib_bakp: f64,
+    pub mape_lapack: f64,
+    pub mape_bak: f64,
+    pub mape_bakp: f64,
+}
+
+impl PaperRow {
+    /// Paper speed-up of BAK over LAPACK ("Time Excess").
+    pub fn speedup_bak(&self) -> f64 {
+        self.time_ms_lapack / self.time_ms_bak
+    }
+
+    /// Paper speed-up of BAKP over LAPACK.
+    pub fn speedup_bakp(&self) -> f64 {
+        self.time_ms_lapack / self.time_ms_bakp
+    }
+
+    /// Paper memory ratio LAPACK/BAK ("Memory Excess").
+    pub fn mem_excess_bak(&self) -> f64 {
+        self.mem_mib_lapack / self.mem_mib_bak
+    }
+
+    pub fn mem_excess_bakp(&self) -> f64 {
+        self.mem_mib_lapack / self.mem_mib_bakp
+    }
+}
+
+/// All 12 rows of Table 1 as published.
+pub const TABLE1: [PaperRow; 12] = [
+    PaperRow { id: 1, vars: 100, obs: 1_000, threads: 6, thr: 50,
+        time_ms_lapack: 12.6, time_ms_bak: 0.262, time_ms_bakp: 2.46,
+        mem_mib_lapack: 0.595, mem_mib_bak: 0.335, mem_mib_bakp: 0.461,
+        mape_lapack: 2.75e-7, mape_bak: 1.46e-7, mape_bakp: 3.75e-6 },
+    PaperRow { id: 2, vars: 100, obs: 1_000_000, threads: 6, thr: 50,
+        time_ms_lapack: 3_050.0, time_ms_bak: 227.0, time_ms_bakp: 221.0,
+        mem_mib_lapack: 385.0, mem_mib_bak: 34.4, mem_mib_bakp: 42.1,
+        mape_lapack: 7.67e-7, mape_bak: 1.69e-7, mape_bakp: 2.44e-8 },
+    PaperRow { id: 3, vars: 1_000, obs: 10_000, threads: 6, thr: 50,
+        time_ms_lapack: 825.0, time_ms_bak: 48.9, time_ms_bakp: 32.7,
+        mem_mib_lapack: 46.7, mem_mib_bak: 4.01, mem_mib_bakp: 3.45,
+        mape_lapack: 3.59e-7, mape_bak: 3.15e-7, mape_bakp: 1.60e-6 },
+    PaperRow { id: 4, vars: 1_000, obs: 100_000, threads: 6, thr: 50,
+        time_ms_lapack: 9_270.0, time_ms_bak: 470.0, time_ms_bakp: 158.0,
+        mem_mib_lapack: 390.0, mem_mib_bak: 10.6, mem_mib_bakp: 7.27,
+        mape_lapack: 4.05e-7, mape_bak: 2.01e-7, mape_bakp: 1.80e-7 },
+    PaperRow { id: 5, vars: 100, obs: 1_000, threads: 16, thr: 50,
+        time_ms_lapack: 5.25, time_ms_bak: 0.353, time_ms_bakp: 4.44,
+        mem_mib_lapack: 0.595, mem_mib_bak: 0.308, mem_mib_bakp: 0.629,
+        mape_lapack: 2.70e-7, mape_bak: 1.51e-7, mape_bakp: 4.06e-6 },
+    PaperRow { id: 6, vars: 100, obs: 1_000_000, threads: 16, thr: 50,
+        time_ms_lapack: 1_920.0, time_ms_bak: 320.0, time_ms_bakp: 82.1,
+        mem_mib_lapack: 385.0, mem_mib_bak: 34.4, mem_mib_bakp: 34.5,
+        mape_lapack: 7.96e-7, mape_bak: 1.94e-7, mape_bakp: 6.92e-7 },
+    PaperRow { id: 7, vars: 1_000, obs: 10_000, threads: 16, thr: 50,
+        time_ms_lapack: 266.0, time_ms_bak: 74.1, time_ms_bakp: 28.2,
+        mem_mib_lapack: 46.7, mem_mib_bak: 4.27, mem_mib_bakp: 4.71,
+        mape_lapack: 3.63e-7, mape_bak: 3.08e-7, mape_bakp: 1.58e-6 },
+    PaperRow { id: 8, vars: 1_000, obs: 100_000, threads: 16, thr: 50,
+        time_ms_lapack: 4_040.0, time_ms_bak: 433.0, time_ms_bakp: 133.0,
+        mem_mib_lapack: 390.0, mem_mib_bak: 8.72, mem_mib_bakp: 8.02,
+        mape_lapack: 3.77e-7, mape_bak: 2.02e-7, mape_bakp: 1.95e-7 },
+    PaperRow { id: 9, vars: 1_000, obs: 1_000_000, threads: 16, thr: 50,
+        time_ms_lapack: 51_400.0, time_ms_bak: 4_120.0, time_ms_bakp: 1_210.0,
+        mem_mib_lapack: 3_740.0, mem_mib_bak: 42.7, mem_mib_bakp: 43.5,
+        mape_lapack: 8.21e-7, mape_bak: 2.06e-7, mape_bakp: 2.27e-7 },
+    PaperRow { id: 10, vars: 1_000, obs: 10_000_000, threads: 16, thr: 50,
+        time_ms_lapack: 535_000.0, time_ms_bak: 45_200.0, time_ms_bakp: 10_600.0,
+        mem_mib_lapack: 37_300.0, mem_mib_bak: 344.0, mem_mib_bakp: 344.0,
+        mape_lapack: 0.0, mape_bak: 0.0, mape_bakp: 0.0 },
+    PaperRow { id: 11, vars: 10_000, obs: 100_000, threads: 16, thr: 1000,
+        time_ms_lapack: 317_000.0, time_ms_bak: 8_970.0, time_ms_bakp: 2_960.0,
+        mem_mib_lapack: 4_480.0, mem_mib_bak: 42.7, mem_mib_bakp: 29.7,
+        mape_lapack: 0.0, mape_bak: 0.0, mape_bakp: 0.0 },
+    PaperRow { id: 12, vars: 10_000, obs: 1_000_000, threads: 16, thr: 1000,
+        time_ms_lapack: 4_380_000.0, time_ms_bak: 117_000.0, time_ms_bakp: 17_800.0,
+        mem_mib_lapack: 38_000.0, mem_mib_bak: 96.6, mem_mib_bakp: 69.8,
+        mape_lapack: 0.0, mape_bak: 0.0, mape_bakp: 0.0 },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twelve_rows() {
+        assert_eq!(TABLE1.len(), 12);
+        for (i, r) in TABLE1.iter().enumerate() {
+            assert_eq!(r.id, i + 1);
+        }
+    }
+
+    #[test]
+    fn all_rows_tall() {
+        // Every Table-1 system has obs >= vars (tall): the regime the
+        // paper's speedups live in.
+        for r in &TABLE1 {
+            assert!(r.obs >= r.vars, "row {}", r.id);
+        }
+    }
+
+    #[test]
+    fn speedups_match_paper_headline() {
+        // Paper claims up to O(10^3) speed-up; row 12 is the largest.
+        let s: f64 = TABLE1[11].speedup_bak();
+        assert!(s > 30.0 && s < 100.0, "bak speedup row12 = {s}");
+        let sp: f64 = TABLE1[11].speedup_bakp();
+        assert!(sp > 200.0, "bakp speedup row12 = {sp}");
+        // BAK wins on every row in time.
+        for r in &TABLE1 {
+            assert!(r.speedup_bak() > 1.0, "row {}", r.id);
+        }
+    }
+
+    #[test]
+    fn memory_excess_positive() {
+        for r in &TABLE1 {
+            assert!(r.mem_excess_bak() > 1.0, "row {}", r.id);
+            assert!(r.mem_excess_bakp() > 0.9, "row {}", r.id);
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Workload generation for the paper's evaluation.
+//!
+//! Table 1 benchmarks dense iid-Gaussian systems with a planted exact
+//! solution ("single float precision", consistent systems — MAPE against
+//! the planted coefficients is the accuracy metric). Figure 2 uses
+//! sparse-support regression targets.
+
+use crate::linalg::{blas1, Mat};
+use crate::util::rng::Rng;
+
+/// Specification of one benchmark system.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkloadSpec {
+    pub obs: usize,
+    pub vars: usize,
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    pub fn new(obs: usize, vars: usize, seed: u64) -> Self {
+        Self { obs, vars, seed }
+    }
+
+    /// Scale both dimensions by `f` (>= 1 keeps at least one row/col).
+    pub fn scaled(&self, f: f64) -> Self {
+        Self {
+            obs: ((self.obs as f64 * f) as usize).max(4),
+            vars: ((self.vars as f64 * f) as usize).max(2),
+            seed: self.seed,
+        }
+    }
+
+    /// f32 bytes of the input matrix.
+    pub fn matrix_bytes(&self) -> usize {
+        self.obs * self.vars * 4
+    }
+}
+
+/// A generated system with its planted ground truth.
+pub struct Workload {
+    pub spec: WorkloadSpec,
+    pub x: Mat,
+    pub y: Vec<f32>,
+    /// The planted coefficients (None for inconsistent workloads).
+    pub a_true: Option<Vec<f32>>,
+}
+
+impl Workload {
+    /// Dense consistent system: y = X a_true exactly (Table 1 workload).
+    pub fn consistent(spec: WorkloadSpec) -> Self {
+        let mut rng = Rng::seed(spec.seed);
+        let x = Mat::randn(&mut rng, spec.obs, spec.vars);
+        let a_true: Vec<f32> = (0..spec.vars).map(|_| rng.normal_f32()).collect();
+        let y = x.matvec(&a_true);
+        Self { spec, x, y, a_true: Some(a_true) }
+    }
+
+    /// Noisy tall regression: y = X a_true + sigma * noise.
+    pub fn noisy(spec: WorkloadSpec, sigma: f32) -> Self {
+        let mut rng = Rng::seed(spec.seed);
+        let x = Mat::randn(&mut rng, spec.obs, spec.vars);
+        let a_true: Vec<f32> = (0..spec.vars).map(|_| rng.normal_f32()).collect();
+        let mut y = x.matvec(&a_true);
+        for v in y.iter_mut() {
+            *v += sigma * rng.normal_f32();
+        }
+        Self { spec, x, y, a_true: Some(a_true) }
+    }
+
+    /// Sparse-support target for feature selection (Figure 2 workload):
+    /// k planted features with descending weights + small noise.
+    pub fn sparse_support(spec: WorkloadSpec, k: usize, noise: f32) -> (Self, Vec<usize>) {
+        let mut rng = Rng::seed(spec.seed);
+        let x = Mat::randn(&mut rng, spec.obs, spec.vars);
+        let support = rng.sample_indices(spec.vars, k.min(spec.vars));
+        let mut y = vec![0.0f32; spec.obs];
+        for (rank, &j) in support.iter().enumerate() {
+            // Descending, well-separated weights.
+            let w = 2.0f32 * 0.7f32.powi(rank as i32) * if rank % 2 == 0 { 1.0 } else { -1.0 };
+            blas1::axpy(w, x.col(j), &mut y);
+        }
+        for v in y.iter_mut() {
+            *v += noise * rng.normal_f32();
+        }
+        (Self { spec, x, y, a_true: None }, support)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn consistent_is_exact() {
+        let w = Workload::consistent(WorkloadSpec::new(50, 10, 7));
+        let a = w.a_true.unwrap();
+        let e = crate::linalg::residual(&w.x, &w.y, &a);
+        assert!(blas1::nrm2(&e) < 1e-3);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let w1 = Workload::consistent(WorkloadSpec::new(20, 5, 3));
+        let w2 = Workload::consistent(WorkloadSpec::new(20, 5, 3));
+        assert_eq!(w1.x, w2.x);
+        assert_eq!(w1.y, w2.y);
+        let w3 = Workload::consistent(WorkloadSpec::new(20, 5, 4));
+        assert_ne!(w3.y, w1.y);
+    }
+
+    #[test]
+    fn noisy_has_residual() {
+        let w = Workload::noisy(WorkloadSpec::new(100, 10, 5), 1.0);
+        let a = w.a_true.unwrap();
+        let e = crate::linalg::residual(&w.x, &w.y, &a);
+        assert!(blas1::nrm2(&e) > 1.0);
+    }
+
+    #[test]
+    fn sparse_support_distinct_indices() {
+        let (_, support) = Workload::sparse_support(WorkloadSpec::new(100, 30, 9), 5, 0.01);
+        assert_eq!(support.len(), 5);
+        let mut s = support.clone();
+        s.dedup();
+        assert_eq!(s.len(), 5);
+    }
+
+    #[test]
+    fn scaled_shrinks() {
+        let s = WorkloadSpec::new(1000, 100, 1).scaled(0.1);
+        assert_eq!(s.obs, 100);
+        assert_eq!(s.vars, 10);
+        // Floor kicks in.
+        let tiny = WorkloadSpec::new(10, 4, 1).scaled(0.01);
+        assert!(tiny.obs >= 4 && tiny.vars >= 2);
+    }
+
+    #[test]
+    fn matrix_bytes() {
+        assert_eq!(WorkloadSpec::new(10, 10, 0).matrix_bytes(), 400);
+    }
+}

@@ -1,0 +1,166 @@
+//! Minimal typed argument parser: `--key value`, `--flag`, positionals.
+
+use std::collections::HashMap;
+
+/// Parse error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArgError(pub String);
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for ArgError {}
+
+/// Parsed arguments: options (`--key value`), flags (`--flag`), positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+    pos: Vec<String>,
+}
+
+/// Option keys that take a value (everything else after `--` is a flag).
+const VALUED: &[&str] = &[
+    "obs", "vars", "thr", "threads", "sweeps", "tol", "seed", "backend",
+    "artifacts", "scale", "samples", "max-feat", "workers", "queue",
+    "requests", "out", "rows", "noise", "level",
+];
+
+impl Args {
+    /// Parse a raw argv tail (without the program/subcommand names).
+    pub fn parse(argv: &[String]) -> Result<Self, ArgError> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if VALUED.contains(&key) {
+                    i += 1;
+                    let v = argv
+                        .get(i)
+                        .ok_or_else(|| ArgError(format!("--{key} needs a value")))?;
+                    out.opts.insert(key.to_string(), v.clone());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.pos.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, ArgError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => parse_usize(v).ok_or_else(|| ArgError(format!("--{name}: bad integer '{v}'"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, ArgError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .map_err(|_| ArgError(format!("--{name}: bad number '{v}'"))),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, ArgError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<u64>()
+                .map_err(|_| ArgError(format!("--{name}: bad integer '{v}'"))),
+        }
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.pos
+    }
+}
+
+/// Integer parser accepting scientific shorthand: "1000", "1e6", "1.5e3".
+pub fn parse_usize(s: &str) -> Option<usize> {
+    if let Ok(v) = s.parse::<usize>() {
+        return Some(v);
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        if f >= 0.0 && f.fract() == 0.0 && f < 1e15 {
+            return Some(f as usize);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_valued_options() {
+        let a = Args::parse(&sv(&["--obs", "1000", "--vars", "100"])).unwrap();
+        assert_eq!(a.get_usize("obs", 0).unwrap(), 1000);
+        assert_eq!(a.get_usize("vars", 0).unwrap(), 100);
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = Args::parse(&sv(&["--tol=1e-5", "--quick"])).unwrap();
+        assert_eq!(a.get_f64("tol", 0.0).unwrap(), 1e-5);
+        assert!(a.flag("quick"));
+    }
+
+    #[test]
+    fn scientific_integers() {
+        assert_eq!(parse_usize("1e6"), Some(1_000_000));
+        assert_eq!(parse_usize("1.5e3"), Some(1500));
+        assert_eq!(parse_usize("12"), Some(12));
+        assert_eq!(parse_usize("1.5"), None);
+        assert_eq!(parse_usize("-3"), None);
+        assert_eq!(parse_usize("abc"), None);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&sv(&["--obs"])).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&[])).unwrap();
+        assert_eq!(a.get_usize("obs", 42).unwrap(), 42);
+        assert_eq!(a.get_f64("tol", 0.5).unwrap(), 0.5);
+        assert!(!a.flag("quick"));
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(&sv(&["--tol", "zzz"])).unwrap();
+        assert!(a.get_f64("tol", 0.0).is_err());
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = Args::parse(&sv(&["file1", "--quick", "file2"])).unwrap();
+        assert_eq!(a.positionals(), &["file1".to_string(), "file2".to_string()]);
+    }
+}

@@ -1,0 +1,315 @@
+//! The `solvebak` subcommands.
+//!
+//! ```text
+//! solvebak solve    --obs 1e5 --vars 100 [--backend bak|bakp|qr|pjrt|auto]
+//! solvebak features --obs 1e4 --vars 200 --max-feat 10
+//! solvebak serve    --requests 64 --workers 4 [--artifacts DIR]
+//! solvebak info     [--artifacts DIR]
+//! ```
+//!
+//! Everything prints human-readable lines plus a final JSON record for
+//! machine consumption.
+
+use std::sync::Arc;
+
+use crate::bench::workload::{Workload, WorkloadSpec};
+use crate::coordinator::{Backend, Coordinator, CoordinatorConfig, SolveRequest};
+use crate::solver::{self, BakfOptions, SolveOptions};
+use crate::util::json::ObjBuilder;
+use crate::util::stats::mape;
+use crate::util::timer::{fmt_seconds, time_once};
+
+use super::args::{ArgError, Args};
+
+const USAGE: &str = "solvebak — SolveBak/SolveBakP/SolveBakF solver service (Bakas 2021 reproduction)
+
+USAGE:
+  solvebak <COMMAND> [OPTIONS]
+
+COMMANDS:
+  solve      solve one synthetic system and report accuracy/time
+  features   run SolveBakF feature selection on a planted workload
+  serve      run the coordinator service against synthetic request load
+  serve-tcp  expose the coordinator on a TCP port (newline-JSON protocol)
+  info       environment + artifact inventory
+  help       this text
+
+COMMON OPTIONS:
+  --obs N --vars N      problem shape (scientific notation ok: 1e6)
+  --seed N              workload seed            [42]
+  --backend NAME        bak|bakp|qr|pjrt|auto    [auto]
+  --thr N --threads N   BAKP block width/threads [50/1]
+  --sweeps N --tol X    convergence control      [200/1e-6]
+  --artifacts DIR       PJRT artifact directory  [artifacts]
+  --max-feat N          features to select       [10]
+  --workers N           service worker threads   [4]
+  --requests N          synthetic request count  [32]
+";
+
+/// Entry point used by main(). Returns the process exit code.
+pub fn run(argv: Vec<String>) -> i32 {
+    match run_inner(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("run `solvebak help` for usage");
+            2
+        }
+    }
+}
+
+fn run_inner(argv: Vec<String>) -> Result<(), ArgError> {
+    let cmd = argv.first().cloned().unwrap_or_else(|| "help".to_string());
+    let args = Args::parse(&argv[argv.len().min(1)..])?;
+    match cmd.as_str() {
+        "solve" => cmd_solve(&args),
+        "features" => cmd_features(&args),
+        "serve" => cmd_serve(&args),
+        "serve-tcp" => cmd_serve_tcp(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(ArgError(format!("unknown command '{other}'"))),
+    }
+}
+
+fn backend_of(args: &Args) -> Result<Backend, ArgError> {
+    Ok(match args.get("backend").unwrap_or("auto") {
+        "bak" => Backend::Bak,
+        "bakp" => Backend::Bakp,
+        "qr" | "lapack" => Backend::Qr,
+        "pjrt" => Backend::Pjrt,
+        "auto" => Backend::Auto,
+        other => return Err(ArgError(format!("unknown backend '{other}'"))),
+    })
+}
+
+fn opts_of(args: &Args) -> Result<SolveOptions, ArgError> {
+    Ok(SolveOptions {
+        max_sweeps: args.get_usize("sweeps", 200)?,
+        tol: args.get_f64("tol", 1e-6)?,
+        thr: args.get_usize("thr", 50)?,
+        threads: args.get_usize("threads", 1)?,
+        seed: args.get_u64("seed", 0x5eed)?,
+        ..SolveOptions::default()
+    })
+}
+
+fn cmd_solve(args: &Args) -> Result<(), ArgError> {
+    let obs = args.get_usize("obs", 10_000)?;
+    let vars = args.get_usize("vars", 100)?;
+    let seed = args.get_u64("seed", 42)?;
+    let w = Workload::consistent(WorkloadSpec::new(obs, vars, seed));
+    let backend = backend_of(args)?;
+    let opts = opts_of(args)?;
+
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        artifact_dir: Some(args.get("artifacts").unwrap_or("artifacts").into()),
+        ..CoordinatorConfig::default()
+    });
+    let mut req = SolveRequest::new(1, Arc::new(w.x), w.y.clone());
+    req.backend = backend;
+    req.opts = opts;
+    let (out, secs) = time_once(|| coord.solve_blocking(req));
+    let report = out.report.map_err(ArgError)?;
+    let acc = w.a_true.as_ref().map(|t| mape(&report.a, t)).unwrap_or(f64::NAN);
+
+    println!(
+        "solved {obs}x{vars} via {:?}: {} | sweeps={} stop={:?} rel_resid={:.3e} mape={:.3e}",
+        out.backend, fmt_seconds(secs), report.sweeps, report.stop,
+        report.rel_residual(), acc,
+    );
+    println!(
+        "{}",
+        ObjBuilder::new()
+            .str("cmd", "solve")
+            .num("obs", obs as f64)
+            .num("vars", vars as f64)
+            .str("backend", format!("{:?}", out.backend))
+            .num("seconds", secs)
+            .num("sweeps", report.sweeps as f64)
+            .num("rel_residual", report.rel_residual())
+            .num("mape", acc)
+            .build()
+            .to_string()
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_features(args: &Args) -> Result<(), ArgError> {
+    let obs = args.get_usize("obs", 10_000)?;
+    let vars = args.get_usize("vars", 200)?;
+    let k = args.get_usize("max-feat", 10)?;
+    let seed = args.get_u64("seed", 42)?;
+    let noise = args.get_f64("noise", 0.01)? as f32;
+    let (w, support) = Workload::sparse_support(WorkloadSpec::new(obs, vars, seed), k, noise);
+
+    let (rep, secs) = time_once(|| {
+        solver::select_features_bakf(&w.x, &w.y, &BakfOptions { max_feat: k, ..Default::default() })
+    });
+    let mut got = rep.selected.clone();
+    got.sort_unstable();
+    let hits = got.iter().filter(|j| support.contains(j)).count();
+    println!(
+        "selected {:?} in {} | planted {:?} | recovered {hits}/{}",
+        rep.selected, fmt_seconds(secs), support, support.len(),
+    );
+    println!(
+        "{}",
+        ObjBuilder::new()
+            .str("cmd", "features")
+            .num("obs", obs as f64)
+            .num("vars", vars as f64)
+            .num("max_feat", k as f64)
+            .num("seconds", secs)
+            .num("recovered", hits as f64)
+            .num("planted", support.len() as f64)
+            .build()
+            .to_string()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), ArgError> {
+    let n = args.get_usize("requests", 32)?;
+    let workers = args.get_usize("workers", 4)?;
+    let obs = args.get_usize("obs", 2_000)?;
+    let vars = args.get_usize("vars", 64)?;
+    let seed = args.get_u64("seed", 42)?;
+    let backend = backend_of(args)?;
+
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers,
+        artifact_dir: Some(args.get("artifacts").unwrap_or("artifacts").into()),
+        ..CoordinatorConfig::default()
+    });
+    // A small pool of shared matrices so the batcher has coalescing
+    // opportunities — the serving scenario.
+    let mut rng = crate::util::rng::Rng::seed(seed);
+    let pool: Vec<Arc<crate::linalg::Mat>> = (0..4)
+        .map(|_| Arc::new(crate::linalg::Mat::randn(&mut rng, obs, vars)))
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let x = pool[i % pool.len()].clone();
+            let a: Vec<f32> = (0..vars).map(|_| rng.normal_f32()).collect();
+            let y = x.matvec(&a);
+            let mut req = SolveRequest::new(i as u64, x, y);
+            req.backend = backend;
+            coord.submit(req).map_err(ArgError)
+        })
+        .collect::<Result<_, _>>()?;
+    let mut ok = 0usize;
+    for rx in rxs {
+        if rx.recv().map(|o| o.report.is_ok()).unwrap_or(false) {
+            ok += 1;
+        }
+    }
+    let total = t0.elapsed().as_secs_f64();
+    println!(
+        "served {ok}/{n} requests in {} ({:.1} req/s) with {workers} workers",
+        fmt_seconds(total), n as f64 / total,
+    );
+    println!("{}", coord.metrics().to_json().to_string());
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_serve_tcp(args: &Args) -> Result<(), ArgError> {
+    let workers = args.get_usize("workers", 4)?;
+    let port = args.get_usize("port", 7447)? as u16;
+    let coord = Arc::new(Coordinator::start(CoordinatorConfig {
+        workers,
+        artifact_dir: Some(args.get("artifacts").unwrap_or("artifacts").into()),
+        ..CoordinatorConfig::default()
+    }));
+    let server = crate::coordinator::server::Server::bind(coord.clone(), port)
+        .map_err(|e| ArgError(format!("bind: {e}")))?;
+    println!("listening on {} ({} workers)", server.addr(), workers);
+    println!("protocol: newline-delimited JSON; send {{\"cmd\":\"shutdown\"}} to stop.");
+    // Block until a client sends the shutdown command (the accept loop
+    // exits when the stop flag flips).
+    while !server.stopped() {
+        std::thread::sleep(std::time::Duration::from_millis(200));
+    }
+    println!("shutdown requested; final metrics: {}", coord.metrics().to_json().to_string());
+    server.stop();
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<(), ArgError> {
+    println!("solvebak {} — three-layer Rust+JAX+Pallas SolveBak", crate::VERSION);
+    println!("threads available: {}", crate::linalg::blas2::num_threads());
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    match crate::runtime::Manifest::load(dir) {
+        Ok(m) => {
+            println!("artifacts ({}):", dir);
+            for a in &m.artifacts {
+                println!(
+                    "  {:<24} {:>9}  {}x{} width={}",
+                    a.name, a.kind.as_str(), a.obs, a.vars, a.width
+                );
+            }
+            match crate::runtime::Engine::new(dir) {
+                Ok(eng) => println!("pjrt: {} ok", eng.platform()),
+                Err(e) => println!("pjrt: unavailable ({e})"),
+            }
+        }
+        Err(e) => println!("artifacts: none loaded ({e}) — run `make artifacts`"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn help_runs() {
+        assert_eq!(run(sv(&["help"])), 0);
+    }
+
+    #[test]
+    fn unknown_command_fails() {
+        assert_eq!(run(sv(&["frobnicate"])), 2);
+    }
+
+    #[test]
+    fn solve_small_native() {
+        assert_eq!(
+            run(sv(&["solve", "--obs", "200", "--vars", "10", "--backend", "bak"])),
+            0
+        );
+    }
+
+    #[test]
+    fn features_small() {
+        assert_eq!(
+            run(sv(&["features", "--obs", "300", "--vars", "20", "--max-feat", "3"])),
+            0
+        );
+    }
+
+    #[test]
+    fn bad_backend_rejected() {
+        assert_eq!(run(sv(&["solve", "--backend", "gpu4000"])), 2);
+    }
+
+    #[test]
+    fn backend_parsing() {
+        let a = Args::parse(&sv(&["--backend", "qr"])).unwrap();
+        assert_eq!(backend_of(&a).unwrap(), Backend::Qr);
+        let a = Args::parse(&sv(&[])).unwrap();
+        assert_eq!(backend_of(&a).unwrap(), Backend::Auto);
+    }
+}

@@ -1,0 +1,8 @@
+//! Hand-rolled CLI (the offline registry has no clap): a small typed
+//! argument parser plus the `solvebak` subcommands.
+
+pub mod args;
+pub mod commands;
+
+pub use args::{ArgError, Args};
+pub use commands::run;

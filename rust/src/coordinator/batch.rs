@@ -1,0 +1,167 @@
+//! Batching policy: coalesce queued requests that share the same input
+//! matrix into one multi-RHS [`SolveJob`].
+//!
+//! The serving analogue: requests against the same "model" (matrix) are
+//! batched so the expensive shared work — column norms, walking the matrix
+//! through cache — is paid once per batch instead of once per request.
+//! Requests with different matrices, options, or backend hints never mix.
+
+use std::collections::HashMap;
+
+use super::request::{Backend, SolveJob, SolveRequest};
+
+/// Batching limits.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Maximum members per job.
+    pub max_batch: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 32 }
+    }
+}
+
+/// Group a drained set of requests into jobs.
+///
+/// Key = (matrix identity, backend hint, option fingerprint). Within a
+/// key, members are chunked to `max_batch`. Order within a job follows
+/// arrival order, and job emission order follows first-arrival of the key
+/// (deterministic; tested).
+pub fn coalesce(requests: Vec<SolveRequest>, policy: &BatchPolicy) -> Vec<SolveJob> {
+    let mut order: Vec<(usize, Backend, u64)> = Vec::new();
+    let mut groups: HashMap<(usize, Backend, u64), Vec<SolveRequest>> = HashMap::new();
+    for r in requests {
+        let key = (r.matrix_key(), r.backend, opts_fingerprint(&r));
+        if !groups.contains_key(&key) {
+            order.push(key);
+        }
+        groups.entry(key).or_default().push(r);
+    }
+
+    let mut jobs = Vec::new();
+    for key in order {
+        let members = groups.remove(&key).unwrap();
+        let mut iter = members.into_iter().peekable();
+        while iter.peek().is_some() {
+            let chunk: Vec<SolveRequest> =
+                iter.by_ref().take(policy.max_batch.max(1)).collect();
+            let first = &chunk[0];
+            jobs.push(SolveJob {
+                x: first.x.clone(),
+                opts: first.opts.clone(),
+                backend: first.backend,
+                members: chunk.iter().map(|r| (r.id, r.y.clone())).collect(),
+            });
+        }
+    }
+    jobs
+}
+
+/// A stable fingerprint of the solve options that affect results —
+/// requests only batch when these agree.
+fn opts_fingerprint(r: &SolveRequest) -> u64 {
+    let o = &r.opts;
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    mix(o.max_sweeps as u64);
+    mix(o.tol.to_bits());
+    mix(o.thr as u64);
+    mix(o.threads as u64);
+    mix(o.check_every as u64);
+    mix(match o.order {
+        crate::solver::ColumnOrder::Cyclic => 1,
+        crate::solver::ColumnOrder::Shuffled => 2,
+    });
+    mix(o.seed);
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::solver::SolveOptions;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn mk(rng: &mut Rng) -> Arc<Mat> {
+        Arc::new(Mat::randn(rng, 8, 4))
+    }
+
+    fn req(id: u64, x: &Arc<Mat>) -> SolveRequest {
+        SolveRequest::new(id, x.clone(), vec![id as f32; 8])
+    }
+
+    #[test]
+    fn same_matrix_coalesces() {
+        let mut rng = Rng::seed(1);
+        let x = mk(&mut rng);
+        let jobs = coalesce(vec![req(1, &x), req(2, &x), req(3, &x)], &BatchPolicy::default());
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].len(), 3);
+        assert_eq!(jobs[0].members.iter().map(|m| m.0).collect::<Vec<_>>(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn different_matrices_split() {
+        let mut rng = Rng::seed(2);
+        let x1 = mk(&mut rng);
+        let x2 = mk(&mut rng);
+        let jobs = coalesce(vec![req(1, &x1), req(2, &x2), req(3, &x1)], &BatchPolicy::default());
+        assert_eq!(jobs.len(), 2);
+        // First-arrival order: x1 job first, containing ids 1 and 3.
+        assert_eq!(jobs[0].members.iter().map(|m| m.0).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(jobs[1].members[0].0, 2);
+    }
+
+    #[test]
+    fn different_options_split() {
+        let mut rng = Rng::seed(3);
+        let x = mk(&mut rng);
+        let mut r2 = req(2, &x);
+        r2.opts = SolveOptions { tol: 1e-3, ..SolveOptions::default() };
+        let jobs = coalesce(vec![req(1, &x), r2], &BatchPolicy::default());
+        assert_eq!(jobs.len(), 2);
+    }
+
+    #[test]
+    fn different_backends_split() {
+        let mut rng = Rng::seed(4);
+        let x = mk(&mut rng);
+        let mut r2 = req(2, &x);
+        r2.backend = crate::coordinator::Backend::Qr;
+        let jobs = coalesce(vec![req(1, &x), r2], &BatchPolicy::default());
+        assert_eq!(jobs.len(), 2);
+    }
+
+    #[test]
+    fn max_batch_chunks() {
+        let mut rng = Rng::seed(5);
+        let x = mk(&mut rng);
+        let reqs: Vec<_> = (0..10).map(|i| req(i, &x)).collect();
+        let jobs = coalesce(reqs, &BatchPolicy { max_batch: 4 });
+        assert_eq!(jobs.len(), 3);
+        assert_eq!(jobs[0].len(), 4);
+        assert_eq!(jobs[1].len(), 4);
+        assert_eq!(jobs[2].len(), 2);
+    }
+
+    #[test]
+    fn empty_input_empty_output() {
+        assert!(coalesce(vec![], &BatchPolicy::default()).is_empty());
+    }
+
+    #[test]
+    fn rhs_kept_per_member() {
+        let mut rng = Rng::seed(6);
+        let x = mk(&mut rng);
+        let jobs = coalesce(vec![req(4, &x), req(9, &x)], &BatchPolicy::default());
+        assert_eq!(jobs[0].members[0].1[0], 4.0);
+        assert_eq!(jobs[0].members[1].1[0], 9.0);
+    }
+}

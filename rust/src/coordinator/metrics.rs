@@ -1,0 +1,167 @@
+//! Service metrics: counters and latency histograms, JSON-dumpable.
+//!
+//! Lock-free counters (atomics); histograms use coarse log-scale buckets
+//! so recording is a single atomic increment on the hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::{Json, ObjBuilder};
+
+/// Log-bucketed latency histogram: bucket i covers
+/// [10^(i/4 - 7), 10^((i+1)/4 - 7)) seconds, i.e. 100ns .. ~1000s.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+const NBUCKETS: usize = 40;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..NBUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(seconds: f64) -> usize {
+        if seconds <= 0.0 {
+            return 0;
+        }
+        let idx = ((seconds.log10() + 7.0) * 4.0).floor();
+        idx.clamp(0.0, (NBUCKETS - 1) as f64) as usize
+    }
+
+    /// Record one observation.
+    pub fn record(&self, seconds: f64) {
+        self.buckets[Self::bucket_of(seconds)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add((seconds * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean in seconds (0 when empty).
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_ns.load(Ordering::Relaxed) as f64 / 1e9 / c as f64
+        }
+    }
+
+    /// Approximate quantile (upper edge of the bucket containing it).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 10f64.powf((i + 1) as f64 / 4.0 - 7.0);
+            }
+        }
+        10f64.powf(NBUCKETS as f64 / 4.0 - 7.0)
+    }
+}
+
+/// All coordinator metrics.
+#[derive(Default)]
+pub struct Metrics {
+    pub requests_submitted: AtomicU64,
+    pub requests_completed: AtomicU64,
+    pub requests_failed: AtomicU64,
+    pub jobs_run: AtomicU64,
+    pub batched_members: AtomicU64,
+    pub queue_rejections: AtomicU64,
+    pub solve_latency: Histogram,
+    pub queue_wait: Histogram,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Serialize a snapshot to JSON.
+    pub fn to_json(&self) -> Json {
+        let c = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
+        ObjBuilder::new()
+            .num("requests_submitted", c(&self.requests_submitted))
+            .num("requests_completed", c(&self.requests_completed))
+            .num("requests_failed", c(&self.requests_failed))
+            .num("jobs_run", c(&self.jobs_run))
+            .num("batched_members", c(&self.batched_members))
+            .num("queue_rejections", c(&self.queue_rejections))
+            .num("solve_latency_mean_s", self.solve_latency.mean())
+            .num("solve_latency_p50_s", self.solve_latency.quantile(0.5))
+            .num("solve_latency_p99_s", self.solve_latency.quantile(0.99))
+            .num("queue_wait_mean_s", self.queue_wait.mean())
+            .build()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_count_and_mean() {
+        let h = Histogram::new();
+        h.record(0.001);
+        h.record(0.003);
+        assert_eq!(h.count(), 2);
+        assert!((h.mean() - 0.002).abs() < 1e-6);
+    }
+
+    #[test]
+    fn histogram_quantile_monotone() {
+        let h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-4);
+        }
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p99);
+        assert!(p50 > 1e-3 && p50 < 1e-2, "p50={p50}");
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn bucket_of_extremes() {
+        assert_eq!(Histogram::bucket_of(0.0), 0);
+        assert_eq!(Histogram::bucket_of(-1.0), 0);
+        assert_eq!(Histogram::bucket_of(1e9), NBUCKETS - 1);
+    }
+
+    #[test]
+    fn metrics_json_has_fields() {
+        let m = Metrics::new();
+        m.requests_submitted.store(5, Ordering::Relaxed);
+        m.solve_latency.record(0.01);
+        let j = m.to_json();
+        assert_eq!(j.get("requests_submitted").unwrap().as_f64(), Some(5.0));
+        assert!(j.get("solve_latency_mean_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,25 @@
+//! The L3 coordinator: a solve-request service in the serving-router mould
+//! (vllm-project/router), but the "model" is a solver backend.
+//!
+//! Pieces:
+//! * [`request`] — typed requests/responses; multi-RHS solve jobs.
+//! * [`queue`]   — bounded MPMC job queue with backpressure (std-only).
+//! * [`router`]  — backend selection policy: native BAK/BAKP/QR or a PJRT
+//!   artifact bucket, chosen from problem shape + request hints.
+//! * [`batch`]   — batching policy: coalesces requests that share the same
+//!   input matrix into one multi-RHS job (amortises column norms and the
+//!   matrix walk — the serving-batch analogue for solvers).
+//! * [`metrics`] — counters + latency histograms, JSON-dumpable.
+//! * [`service`] — the leader: worker pool, request lifecycle, shutdown.
+
+pub mod batch;
+pub mod metrics;
+pub mod queue;
+pub mod request;
+pub mod router;
+pub mod server;
+pub mod service;
+
+pub use request::{Backend, SolveJob, SolveOutcome, SolveRequest};
+pub use router::{route, RouteDecision};
+pub use service::{Coordinator, CoordinatorConfig};

@@ -1,0 +1,120 @@
+//! Request/response types for the solve service.
+
+use std::sync::Arc;
+
+use crate::linalg::Mat;
+use crate::solver::{SolveOptions, SolveReport};
+
+/// Which solver backend to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Backend {
+    /// Native Algorithm 1 (sequential CD).
+    Bak,
+    /// Native Algorithm 2 (block CD), threaded per `SolveOptions::threads`.
+    Bakp,
+    /// Householder-QR baseline (exact, O(mn^2)).
+    Qr,
+    /// PJRT artifact execution (AOT-compiled L2 graph).
+    Pjrt,
+    /// Let the router pick from the problem shape.
+    Auto,
+}
+
+/// A solve request: one matrix, one or more right-hand sides.
+///
+/// The matrix is shared (`Arc`) so the batcher can coalesce requests over
+/// the same data without copies.
+#[derive(Clone)]
+pub struct SolveRequest {
+    /// Client-assigned id, echoed in the response.
+    pub id: u64,
+    pub x: Arc<Mat>,
+    pub y: Vec<f32>,
+    pub opts: SolveOptions,
+    pub backend: Backend,
+}
+
+impl SolveRequest {
+    /// Construct with defaults.
+    pub fn new(id: u64, x: Arc<Mat>, y: Vec<f32>) -> Self {
+        Self { id, x, y, opts: SolveOptions::default(), backend: Backend::Auto }
+    }
+
+    /// A stable identity for the shared matrix (pointer identity of the
+    /// Arc allocation) — the batching key.
+    pub fn matrix_key(&self) -> usize {
+        Arc::as_ptr(&self.x) as usize
+    }
+}
+
+/// A batched job: one matrix, many RHS (one per original request).
+pub struct SolveJob {
+    pub x: Arc<Mat>,
+    /// (request id, rhs) pairs.
+    pub members: Vec<(u64, Vec<f32>)>,
+    pub opts: SolveOptions,
+    pub backend: Backend,
+}
+
+impl SolveJob {
+    /// Wrap a single request.
+    pub fn single(req: SolveRequest) -> Self {
+        Self {
+            x: req.x,
+            members: vec![(req.id, req.y)],
+            opts: req.opts,
+            backend: req.backend,
+        }
+    }
+
+    /// Number of member requests.
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+}
+
+/// Response for one member request.
+#[derive(Clone, Debug)]
+pub struct SolveOutcome {
+    pub id: u64,
+    pub report: Result<SolveReport, String>,
+    /// Which backend actually ran.
+    pub backend: Backend,
+    /// Wall time for the member's solve (seconds). Batched members share
+    /// the matrix walk; this is the per-member attributed time.
+    pub seconds: f64,
+    /// How many requests were coalesced into the job this ran in.
+    pub batch_size: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matrix_key_shared_arc() {
+        let mut rng = Rng::seed(1);
+        let x = Arc::new(Mat::randn(&mut rng, 4, 2));
+        let r1 = SolveRequest::new(1, x.clone(), vec![0.0; 4]);
+        let r2 = SolveRequest::new(2, x.clone(), vec![1.0; 4]);
+        assert_eq!(r1.matrix_key(), r2.matrix_key());
+        let x2 = Arc::new(Mat::randn(&mut rng, 4, 2));
+        let r3 = SolveRequest::new(3, x2, vec![0.0; 4]);
+        assert_ne!(r1.matrix_key(), r3.matrix_key());
+    }
+
+    #[test]
+    fn job_single() {
+        let mut rng = Rng::seed(2);
+        let x = Arc::new(Mat::randn(&mut rng, 4, 2));
+        let job = SolveJob::single(SolveRequest::new(7, x, vec![0.0; 4]));
+        assert_eq!(job.len(), 1);
+        assert_eq!(job.members[0].0, 7);
+        assert!(!job.is_empty());
+    }
+}

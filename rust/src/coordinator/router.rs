@@ -1,0 +1,139 @@
+//! Backend routing policy.
+//!
+//! Mirrors a serving router's model-selection logic: given the problem
+//! shape and the request's hint, decide which solver runs. The policy
+//! encodes the paper's own empirical guidance (§7): BAK/BAKP win on
+//! strongly non-square systems; direct methods win on square ones; PJRT
+//! buckets serve shapes covered by the artifact menu.
+
+use crate::runtime::{ArtifactKind, Manifest};
+
+use super::request::Backend;
+
+/// The routing decision with its rationale (exposed for observability).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RouteDecision {
+    pub backend: Backend,
+    pub reason: &'static str,
+}
+
+/// Aspect-ratio threshold above which a system counts as "strongly
+/// non-square" (tall or wide) — where Table 1 shows the BAK family
+/// winning by 1-3 orders of magnitude.
+pub const NONSQUARE_RATIO: f64 = 4.0;
+
+/// Decide a backend for an (obs, vars) problem.
+///
+/// * Explicit hints are honoured verbatim (except Pjrt with no fitting
+///   artifact, which falls back to native BAKP).
+/// * Auto: square-ish -> QR (direct methods won in §7); tall/wide with a
+///   fitting artifact -> Pjrt; otherwise BAKP for parallel-friendly
+///   shapes, BAK for small ones.
+pub fn route(
+    backend: Backend,
+    obs: usize,
+    vars: usize,
+    manifest: Option<&Manifest>,
+) -> RouteDecision {
+    let has_artifact = manifest
+        .map(|m| m.route(ArtifactKind::BakpSweep, obs, vars).is_some())
+        .unwrap_or(false);
+    match backend {
+        Backend::Pjrt if !has_artifact => RouteDecision {
+            backend: Backend::Bakp,
+            reason: "pjrt requested but no artifact bucket fits; native bakp fallback",
+        },
+        Backend::Auto => {
+            let ratio = if vars == 0 {
+                1.0
+            } else {
+                (obs as f64 / vars as f64).max(vars as f64 / obs as f64)
+            };
+            if ratio < NONSQUARE_RATIO {
+                RouteDecision {
+                    backend: Backend::Qr,
+                    reason: "square-ish system: direct QR wins (paper §7)",
+                }
+            } else if has_artifact {
+                RouteDecision {
+                    backend: Backend::Pjrt,
+                    reason: "non-square + artifact bucket available",
+                }
+            } else if obs * vars >= 1 << 20 {
+                RouteDecision {
+                    backend: Backend::Bakp,
+                    reason: "large non-square: block-parallel sweeps",
+                }
+            } else {
+                RouteDecision { backend: Backend::Bak, reason: "small non-square: sequential CD" }
+            }
+        }
+        b => RouteDecision { backend: b, reason: "explicit backend hint" },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tiny_manifest() -> Manifest {
+        Manifest::parse(
+            r#"{"version":1,"artifacts":[
+                {"name":"bakp_sweep_256x64","kind":"bakp_sweep","obs":256,
+                 "vars":64,"width":32,"dtype":"f32",
+                 "file":"bakp_sweep_256x64.hlo.txt",
+                 "inputs":["x","cninv","a","e"],"outputs":["a","e","r2"]}]}"#,
+            PathBuf::from("/tmp"),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn explicit_hint_honoured() {
+        let d = route(Backend::Qr, 10_000, 10, None);
+        assert_eq!(d.backend, Backend::Qr);
+        let d = route(Backend::Bak, 100, 100, None);
+        assert_eq!(d.backend, Backend::Bak);
+    }
+
+    #[test]
+    fn auto_square_goes_qr() {
+        let d = route(Backend::Auto, 128, 100, None);
+        assert_eq!(d.backend, Backend::Qr);
+    }
+
+    #[test]
+    fn auto_tall_small_goes_bak() {
+        let d = route(Backend::Auto, 4000, 10, None);
+        assert_eq!(d.backend, Backend::Bak);
+    }
+
+    #[test]
+    fn auto_tall_large_goes_bakp() {
+        let d = route(Backend::Auto, 2_000_000, 100, None);
+        assert_eq!(d.backend, Backend::Bakp);
+    }
+
+    #[test]
+    fn auto_prefers_pjrt_when_bucket_fits() {
+        let m = tiny_manifest();
+        let d = route(Backend::Auto, 200, 40, Some(&m));
+        assert_eq!(d.backend, Backend::Pjrt);
+    }
+
+    #[test]
+    fn pjrt_hint_falls_back_without_bucket() {
+        let m = tiny_manifest();
+        let d = route(Backend::Pjrt, 100_000, 500, Some(&m));
+        assert_eq!(d.backend, Backend::Bakp);
+        let d = route(Backend::Pjrt, 100, 100, None);
+        assert_eq!(d.backend, Backend::Bakp);
+    }
+
+    #[test]
+    fn wide_counts_as_nonsquare() {
+        let d = route(Backend::Auto, 10, 4000, None);
+        assert_ne!(d.backend, Backend::Qr);
+    }
+}

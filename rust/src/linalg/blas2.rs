@@ -1,0 +1,274 @@
+//! BLAS-2 kernels over the column-major [`Mat`]: matrix-vector products and
+//! the fused SolveBakP block update, with multi-threaded variants used by
+//! the baselines (the paper's BLAS comparator runs 6-16 threads).
+
+use super::blas1::{axpy, dot};
+use super::Mat;
+
+/// Number of worker threads for the threaded kernels: min(cores, 16),
+/// matching the paper's BLAS thread counts. Overridable via
+/// `SOLVEBAK_THREADS`.
+pub fn num_threads() -> usize {
+    static N: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(s) = std::env::var("SOLVEBAK_THREADS") {
+            if let Ok(n) = s.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get().min(16))
+            .unwrap_or(1)
+    })
+}
+
+/// y = X a. Column-major: accumulate a_j * col_j (axpy per column).
+pub fn gemv(x: &Mat, a: &[f32]) -> Vec<f32> {
+    assert_eq!(a.len(), x.cols());
+    let mut y = vec![0.0f32; x.rows()];
+    gemv_into(x, a, &mut y);
+    y
+}
+
+/// y = X a into a caller-provided buffer (zeroed here).
+pub fn gemv_into(x: &Mat, a: &[f32], y: &mut [f32]) {
+    assert_eq!(a.len(), x.cols());
+    assert_eq!(y.len(), x.rows());
+    y.fill(0.0);
+    // For tall matrices parallelise over row chunks; each thread owns a
+    // disjoint slice of y and walks all columns.
+    let nt = effective_threads(x.rows() * x.cols());
+    if nt <= 1 || x.rows() < 1024 {
+        for j in 0..x.cols() {
+            if a[j] != 0.0 {
+                axpy(a[j], x.col(j), y);
+            }
+        }
+        return;
+    }
+    let rows = x.rows();
+    let chunk = rows.div_ceil(nt);
+    std::thread::scope(|s| {
+        for (t, yc) in y.chunks_mut(chunk).enumerate() {
+            let r0 = t * chunk;
+            let len = yc.len();
+            s.spawn(move || {
+                for j in 0..x.cols() {
+                    let aj = a[j];
+                    if aj != 0.0 {
+                        axpy(aj, &x.col(j)[r0..r0 + len], yc);
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// out = Xᵀ v (one dot per column; embarrassingly parallel over columns).
+pub fn gemv_t(x: &Mat, v: &[f32]) -> Vec<f32> {
+    assert_eq!(v.len(), x.rows());
+    let mut out = vec![0.0f32; x.cols()];
+    gemv_t_into(x, v, &mut out);
+    out
+}
+
+/// out = Xᵀ v into a caller buffer.
+pub fn gemv_t_into(x: &Mat, v: &[f32], out: &mut [f32]) {
+    assert_eq!(v.len(), x.rows());
+    assert_eq!(out.len(), x.cols());
+    let nt = effective_threads(x.rows() * x.cols());
+    if nt <= 1 || x.cols() < 2 * nt {
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = dot(x.col(j), v);
+        }
+        return;
+    }
+    let chunk = x.cols().div_ceil(nt);
+    std::thread::scope(|s| {
+        for (t, oc) in out.chunks_mut(chunk).enumerate() {
+            let j0 = t * chunk;
+            s.spawn(move || {
+                for (k, o) in oc.iter_mut().enumerate() {
+                    *o = dot(x.col(j0 + k), v);
+                }
+            });
+        }
+    });
+}
+
+/// Fused SolveBakP block update (Algorithm 2 lines 6-9) over columns
+/// [j0, j0+width):
+///
+///   da_k = <x_k, e> * cninv_k   for all k against the SAME stale e
+///   e   -= sum_k x_k da_k
+///   a_k += da_k
+///
+/// Single-threaded version; `solver::bakp` parallelises the da loop.
+pub fn block_update(
+    x: &Mat,
+    j0: usize,
+    width: usize,
+    cninv: &[f32],
+    a: &mut [f32],
+    e: &mut [f32],
+) {
+    debug_assert!(j0 + width <= x.cols());
+    // Stale-error dots.
+    let mut da = [0.0f32; 64];
+    let use_stack = width <= 64;
+    let mut da_heap;
+    let da: &mut [f32] = if use_stack {
+        &mut da[..width]
+    } else {
+        da_heap = vec![0.0f32; width];
+        &mut da_heap
+    };
+    for k in 0..width {
+        da[k] = dot(x.col(j0 + k), e) * cninv[j0 + k];
+    }
+    // Error refresh + coefficient update.
+    for k in 0..width {
+        if da[k] != 0.0 {
+            axpy(-da[k], x.col(j0 + k), e);
+        }
+        a[j0 + k] += da[k];
+    }
+}
+
+fn effective_threads(work: usize) -> usize {
+    // Heuristic: threading pays off past ~1e6 f32 ops.
+    if work < 1_000_000 {
+        1
+    } else {
+        num_threads()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_gemv(x: &Mat, a: &[f32]) -> Vec<f32> {
+        (0..x.rows())
+            .map(|i| (0..x.cols()).map(|j| x.get(i, j) as f64 * a[j] as f64).sum::<f64>() as f32)
+            .collect()
+    }
+
+    #[test]
+    fn gemv_small_known() {
+        let x = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(gemv(&x, &[1.0, 0.0]), vec![1.0, 3.0]);
+        assert_eq!(gemv(&x, &[0.0, 1.0]), vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn gemv_matches_naive() {
+        let mut rng = Rng::seed(3);
+        for (r, c) in [(5, 3), (64, 64), (200, 17), (1025, 33)] {
+            let x = Mat::randn(&mut rng, r, c);
+            let a: Vec<f32> = (0..c).map(|_| rng.normal_f32()).collect();
+            let got = gemv(&x, &a);
+            let want = naive_gemv(&x, &a);
+            for i in 0..r {
+                assert!((got[i] - want[i]).abs() < 1e-3, "({r},{c}) i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_threaded_path_matches() {
+        // Force the threaded branch: rows >= 1024 and work >= 1e6.
+        let mut rng = Rng::seed(4);
+        let x = Mat::randn(&mut rng, 2048, 600);
+        let a: Vec<f32> = (0..600).map(|_| rng.normal_f32()).collect();
+        let got = gemv(&x, &a);
+        let want = naive_gemv(&x, &a);
+        for i in 0..2048 {
+            assert!((got[i] - want[i]).abs() < 2e-2 * (1.0 + want[i].abs()), "i={i}");
+        }
+    }
+
+    #[test]
+    fn gemv_t_matches_transpose_gemv() {
+        let mut rng = Rng::seed(5);
+        let x = Mat::randn(&mut rng, 40, 30);
+        let v: Vec<f32> = (0..40).map(|_| rng.normal_f32()).collect();
+        let got = gemv_t(&x, &v);
+        let want = gemv(&x.transposed(), &v);
+        for j in 0..30 {
+            assert!((got[j] - want[j]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn gemv_t_threaded_path_matches() {
+        let mut rng = Rng::seed(6);
+        let x = Mat::randn(&mut rng, 4096, 333);
+        let v: Vec<f32> = (0..4096).map(|_| rng.normal_f32()).collect();
+        let got = gemv_t(&x, &v);
+        let xt = x.transposed();
+        let want = naive_gemv(&xt, &v);
+        for j in 0..333 {
+            assert!((got[j] - want[j]).abs() < 5e-2 * (1.0 + want[j].abs()), "j={j}");
+        }
+    }
+
+    #[test]
+    fn block_update_matches_scalar_semantics() {
+        // width=1 block update == one sequential CD step.
+        let mut rng = Rng::seed(7);
+        let x = Mat::randn(&mut rng, 50, 4);
+        let cn: Vec<f32> = x.colnorms_sq().iter().map(|&v| 1.0 / v).collect();
+        let y: Vec<f32> = (0..50).map(|_| rng.normal_f32()).collect();
+
+        let mut a1 = vec![0.0f32; 4];
+        let mut e1 = y.clone();
+        block_update(&x, 2, 1, &cn, &mut a1, &mut e1);
+
+        let mut e2 = y.clone();
+        let da = crate::linalg::blas1::cd_step(x.col(2), &mut e2, cn[2]);
+        assert!((a1[2] - da).abs() < 1e-6);
+        for i in 0..50 {
+            assert!((e1[i] - e2[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn block_update_stale_semantics() {
+        // All da in a block must be computed against the pre-block error.
+        let mut rng = Rng::seed(8);
+        let x = Mat::randn(&mut rng, 30, 3);
+        let cn: Vec<f32> = x.colnorms_sq().iter().map(|&v| 1.0 / v).collect();
+        let y: Vec<f32> = (0..30).map(|_| rng.normal_f32()).collect();
+        let mut a = vec![0.0f32; 3];
+        let mut e = y.clone();
+        block_update(&x, 0, 3, &cn, &mut a, &mut e);
+        for k in 0..3 {
+            let want = dot(x.col(k), &y) * cn[k]; // stale: against y, not e'
+            assert!((a[k] - want).abs() < 1e-5, "k={k}");
+        }
+    }
+
+    #[test]
+    fn block_update_wide_block_heap_path() {
+        // width > 64 exercises the heap-allocated da path.
+        let mut rng = Rng::seed(9);
+        let x = Mat::randn(&mut rng, 40, 100);
+        let cn: Vec<f32> = x.colnorms_sq().iter().map(|&v| 1.0 / v).collect();
+        let y: Vec<f32> = (0..40).map(|_| rng.normal_f32()).collect();
+        let mut a = vec![0.0f32; 100];
+        let mut e = y.clone();
+        block_update(&x, 0, 100, &cn, &mut a, &mut e);
+        // e' must equal y - X da.
+        let xa = gemv(&x, &a);
+        for i in 0..40 {
+            assert!((e[i] - (y[i] - xa[i])).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn num_threads_positive() {
+        assert!(num_threads() >= 1);
+    }
+}

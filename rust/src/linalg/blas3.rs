@@ -1,0 +1,136 @@
+//! BLAS-3: the Gram-matrix product `Xᵀ X` and general `Aᵀ B` needed by the
+//! normal-equations baseline and the SolveBakF least-squares refits.
+//!
+//! Blocked over columns so both operand panels stay in cache; parallel over
+//! output column strips.
+
+use super::blas1::dot;
+use super::blas2::num_threads;
+use super::Mat;
+
+/// C = Aᵀ B, where A is (m, ka) and B is (m, kb); C is (ka, kb).
+///
+/// Column-major makes every C entry a contiguous-slice dot product.
+pub fn gemm_tn(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows(), b.rows(), "gemm_tn inner dim mismatch");
+    let (ka, kb) = (a.cols(), b.cols());
+    let mut c = Mat::zeros(ka, kb);
+    let work = a.rows() * ka * kb;
+    let nt = if work < 2_000_000 { 1 } else { num_threads() };
+    if nt <= 1 {
+        for j in 0..kb {
+            let bj = b.col(j);
+            let cj = c.col_mut(j);
+            for (i, ci) in cj.iter_mut().enumerate() {
+                *ci = dot(a.col(i), bj);
+            }
+        }
+        return c;
+    }
+    // Parallel over output columns; each thread fills disjoint columns of C.
+    let rows = ka;
+    let data = c_data_mut(&mut c);
+    let chunk = kb.div_ceil(nt);
+    std::thread::scope(|s| {
+        for (t, cc) in data.chunks_mut(chunk * rows).enumerate() {
+            let j0 = t * chunk;
+            s.spawn(move || {
+                for (local_j, col) in cc.chunks_mut(rows).enumerate() {
+                    let bj = b.col(j0 + local_j);
+                    for (i, ci) in col.iter_mut().enumerate() {
+                        *ci = dot(a.col(i), bj);
+                    }
+                }
+            });
+        }
+    });
+    c
+}
+
+/// Gram matrix G = Xᵀ X (symmetric; computed full for simplicity of the
+/// downstream Cholesky).
+pub fn gram(x: &Mat) -> Mat {
+    gemm_tn(x, x)
+}
+
+fn c_data_mut(c: &mut Mat) -> &mut [f32] {
+    let rows = c.rows();
+    let cols = c.cols();
+    // Mat has no public data_mut; reconstruct via col_mut stitching is
+    // impossible across columns, so expose through a raw slice: the backing
+    // vec is contiguous col-major.
+    unsafe {
+        std::slice::from_raw_parts_mut(c.col_mut(0).as_mut_ptr(), rows * cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_gemm_tn(a: &Mat, b: &Mat) -> Mat {
+        Mat::from_fn(a.cols(), b.cols(), |i, j| {
+            (0..a.rows()).map(|r| a.get(r, i) as f64 * b.get(r, j) as f64).sum::<f64>() as f32
+        })
+    }
+
+    #[test]
+    fn gemm_tn_known() {
+        let a = Mat::from_rows(&[vec![1.0, 0.0], vec![0.0, 2.0]]);
+        let b = Mat::from_rows(&[vec![3.0], vec![4.0]]);
+        let c = gemm_tn(&a, &b);
+        assert_eq!(c.shape(), (2, 1));
+        assert_eq!(c.get(0, 0), 3.0);
+        assert_eq!(c.get(1, 0), 8.0);
+    }
+
+    #[test]
+    fn gemm_tn_matches_naive() {
+        let mut rng = Rng::seed(10);
+        for (m, ka, kb) in [(7, 3, 5), (64, 16, 16), (130, 20, 9)] {
+            let a = Mat::randn(&mut rng, m, ka);
+            let b = Mat::randn(&mut rng, m, kb);
+            let got = gemm_tn(&a, &b);
+            let want = naive_gemm_tn(&a, &b);
+            for i in 0..ka {
+                for j in 0..kb {
+                    assert!((got.get(i, j) - want.get(i, j)).abs() < 1e-3);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_tn_threaded_path_matches() {
+        let mut rng = Rng::seed(11);
+        let a = Mat::randn(&mut rng, 300, 90);
+        let b = Mat::randn(&mut rng, 300, 80);
+        let got = gemm_tn(&a, &b);
+        let want = naive_gemm_tn(&a, &b);
+        for i in 0..90 {
+            for j in 0..80 {
+                let w = want.get(i, j);
+                assert!((got.get(i, j) - w).abs() < 2e-2 * (1.0 + w.abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd_diagonal() {
+        let mut rng = Rng::seed(12);
+        let x = Mat::randn(&mut rng, 50, 10);
+        let g = gram(&x);
+        for i in 0..10 {
+            assert!(g.get(i, i) > 0.0, "diagonal positive");
+            for j in 0..10 {
+                assert!((g.get(i, j) - g.get(j, i)).abs() < 1e-3, "symmetry");
+            }
+        }
+        // Diagonal equals column norms.
+        let cn = x.colnorms_sq();
+        for i in 0..10 {
+            assert!((g.get(i, i) - cn[i]).abs() < 1e-3);
+        }
+    }
+}

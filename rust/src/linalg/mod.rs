@@ -1,0 +1,305 @@
+//! Dense linear-algebra substrate.
+//!
+//! The paper's solvers are *column-action* methods: the hot loop touches one
+//! column of `x` at a time ([`Mat`] is therefore **column-major**, so
+//! [`Mat::col`] is a contiguous slice), plus BLAS-1/2/3 kernels tuned for
+//! that access pattern ([`blas1`], [`blas2`], [`blas3`]).
+
+pub mod blas1;
+pub mod blas2;
+pub mod blas3;
+
+pub use blas1::{axpy, dot, nrm2, nrm2_sq, scal};
+pub use blas2::{gemv, gemv_t};
+pub use blas3::gemm_tn;
+
+use crate::util::rng::Rng;
+
+/// Dense column-major f32 matrix: `rows` = obs, `cols` = vars.
+///
+/// Column-major is the right layout for coordinate-action solvers: the
+/// Algorithm-1 inner step reads exactly one column, which here is one
+/// contiguous cache-friendly slice.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    /// len == rows * cols; element (i, j) at data[j * rows + i].
+    data: Vec<f32>,
+}
+
+impl Mat {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// iid standard-normal entries (the paper's dense benchmark workload).
+    pub fn randn(rng: &mut Rng, rows: usize, cols: usize) -> Self {
+        let mut data = vec![0.0f32; rows * cols];
+        rng.fill_normal(&mut data);
+        Self { rows, cols, data }
+    }
+
+    /// From column-major raw data (len must equal rows*cols).
+    pub fn from_col_major(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "bad data length");
+        Self { rows, cols, data }
+    }
+
+    /// From row-major raw data (transposing copy).
+    pub fn from_row_major(rows: usize, cols: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), rows * cols, "bad data length");
+        Self::from_fn(rows, cols, |i, j| data[i * cols + j])
+    }
+
+    /// From a list of rows.
+    pub fn from_rows(rows: &[Vec<f32>]) -> Self {
+        let r = rows.len();
+        assert!(r > 0, "empty matrix");
+        let c = rows[0].len();
+        assert!(rows.iter().all(|row| row.len() == c), "ragged rows");
+        Self::from_fn(r, c, |i, j| rows[i][j])
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// (rows, cols).
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Element access.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[j * self.rows + i]
+    }
+
+    /// Mutable element access.
+    #[inline]
+    pub fn get_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[j * self.rows + i]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        *self.get_mut(i, j) = v;
+    }
+
+    /// Column j as a contiguous slice — the coordinate-action hot path.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f32] {
+        debug_assert!(j < self.cols);
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Mutable column slice.
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f32] {
+        debug_assert!(j < self.cols);
+        &mut self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Contiguous block of columns [j0, j0+width).
+    #[inline]
+    pub fn col_block(&self, j0: usize, width: usize) -> &[f32] {
+        debug_assert!(j0 + width <= self.cols);
+        &self.data[j0 * self.rows..(j0 + width) * self.rows]
+    }
+
+    /// Full column-major backing slice.
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Row i as a fresh vector (strided gather; not the hot path).
+    pub fn row(&self, i: usize) -> Vec<f32> {
+        (0..self.cols).map(|j| self.get(i, j)).collect()
+    }
+
+    /// Sub-matrix with the given columns (gathered copy).
+    pub fn select_cols(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(self.rows, idx.len());
+        for (k, &j) in idx.iter().enumerate() {
+            out.col_mut(k).copy_from_slice(self.col(j));
+        }
+        out
+    }
+
+    /// Transposed copy.
+    pub fn transposed(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |i, j| self.get(j, i))
+    }
+
+    /// y = X a (delegates to the threaded gemv).
+    pub fn matvec(&self, a: &[f32]) -> Vec<f32> {
+        assert_eq!(a.len(), self.cols, "matvec dim mismatch");
+        blas2::gemv(self, a)
+    }
+
+    /// out = Xᵀ v.
+    pub fn matvec_t(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(v.len(), self.rows, "matvec_t dim mismatch");
+        blas2::gemv_t(self, v)
+    }
+
+    /// <x_j, x_j> for every column.
+    pub fn colnorms_sq(&self) -> Vec<f32> {
+        (0..self.cols).map(|j| blas1::nrm2_sq(self.col(j))).collect()
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Approximate memory footprint in bytes.
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Residual e = y - X a, computed into a fresh vector.
+pub fn residual(x: &Mat, y: &[f32], a: &[f32]) -> Vec<f32> {
+    let xa = x.matvec(a);
+    y.iter().zip(&xa).map(|(&yi, &xi)| yi - xi).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Mat {
+        // [[1, 2], [3, 4], [5, 6]]
+        Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]])
+    }
+
+    #[test]
+    fn construction_and_access() {
+        let m = small();
+        assert_eq!(m.shape(), (3, 2));
+        assert_eq!(m.get(0, 0), 1.0);
+        assert_eq!(m.get(2, 1), 6.0);
+        assert_eq!(m.col(0), &[1.0, 3.0, 5.0]);
+        assert_eq!(m.col(1), &[2.0, 4.0, 6.0]);
+        assert_eq!(m.row(1), vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn col_major_layout() {
+        let m = small();
+        assert_eq!(m.as_slice(), &[1.0, 3.0, 5.0, 2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn from_row_major_matches_from_rows() {
+        let m1 = small();
+        let m2 = Mat::from_row_major(3, 2, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(m1, m2);
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut m = Mat::zeros(4, 4);
+        m.set(2, 3, 7.5);
+        assert_eq!(m.get(2, 3), 7.5);
+        assert_eq!(m.get(3, 2), 0.0);
+    }
+
+    #[test]
+    fn matvec_known() {
+        let m = small();
+        assert_eq!(m.matvec(&[1.0, 1.0]), vec![3.0, 7.0, 11.0]);
+        assert_eq!(m.matvec(&[2.0, -1.0]), vec![0.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn matvec_t_known() {
+        let m = small();
+        assert_eq!(m.matvec_t(&[1.0, 1.0, 1.0]), vec![9.0, 12.0]);
+    }
+
+    #[test]
+    fn colnorms() {
+        let m = small();
+        let n = m.colnorms_sq();
+        assert_eq!(n, vec![1.0 + 9.0 + 25.0, 4.0 + 16.0 + 36.0]);
+    }
+
+    #[test]
+    fn select_cols_gathers() {
+        let m = small();
+        let s = m.select_cols(&[1, 0]);
+        assert_eq!(s.col(0), m.col(1));
+        assert_eq!(s.col(1), m.col(0));
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = small();
+        assert_eq!(m.transposed().transposed(), m);
+        assert_eq!(m.transposed().get(1, 2), m.get(2, 1));
+    }
+
+    #[test]
+    fn residual_zero_for_exact() {
+        let m = small();
+        let a = [0.5, -0.25];
+        let y = m.matvec(&a);
+        let e = residual(&m, &y, &a);
+        assert!(e.iter().all(|&v| v.abs() < 1e-6));
+    }
+
+    #[test]
+    fn randn_deterministic_and_normalish() {
+        let mut r1 = Rng::seed(5);
+        let mut r2 = Rng::seed(5);
+        let a = Mat::randn(&mut r1, 50, 20);
+        let b = Mat::randn(&mut r2, 50, 20);
+        assert_eq!(a, b);
+        let mean: f64 = a.as_slice().iter().map(|&v| v as f64).sum::<f64>() / 1000.0;
+        assert!(mean.abs() < 0.15, "mean={mean}");
+    }
+
+    #[test]
+    fn col_block_spans_columns() {
+        let m = small();
+        assert_eq!(m.col_block(0, 2), m.as_slice());
+        assert_eq!(m.col_block(1, 1), m.col(1));
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_rows_panic() {
+        let _ = Mat::from_rows(&[vec![1.0], vec![1.0, 2.0]]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn matvec_dim_mismatch_panics() {
+        let _ = small().matvec(&[1.0]);
+    }
+}

@@ -1,0 +1,6 @@
+//! `solvebak` binary: CLI front-end over the coordinator + solver library.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(solvebak::cli::run(argv));
+}

@@ -1,0 +1,298 @@
+//! The PJRT execution engine: compile-once, execute-many.
+//!
+//! One [`Engine`] wraps one `PjRtClient` (CPU here; the same artifacts
+//! compile for TPU given a TPU PJRT plugin) plus a cache of compiled
+//! executables keyed by artifact name. The solve loop keeps the big `x`
+//! operand **device-resident** across sweeps (`execute_b` on
+//! `PjRtBuffer`s) — only the small `a`/`e` vectors round-trip per sweep,
+//! mirroring the paper's GPU story where the matrix stays on the
+//! accelerator.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::linalg::{blas1, Mat};
+use crate::solver::{SolveOptions, SolveReport, StopReason};
+
+use super::manifest::{ArtifactKind, ArtifactSpec, Manifest};
+
+/// Outcome of a PJRT-backed solve, with routing metadata for observability.
+#[derive(Clone, Debug)]
+pub struct PjrtSolveOutcome {
+    pub report: SolveReport,
+    /// Artifact the request was routed to.
+    pub artifact: String,
+    /// Zero-padding overhead: padded elements / true elements - 1.
+    pub pad_overhead: f64,
+}
+
+struct Loaded {
+    /// Artifact metadata (kept for debugging/observability dumps).
+    #[allow(dead_code)]
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Compile-once / execute-many PJRT engine.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// Lazily compiled executables, keyed by artifact name.
+    cache: Mutex<HashMap<String, std::sync::Arc<Loaded>>>,
+}
+
+// xla handles are internally refcounted; the engine serialises compilation
+// through the cache mutex and execution is externally synchronised by the
+// coordinator's worker ownership model.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Create a CPU-PJRT engine over an artifact directory.
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(&artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Self { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Platform string of the underlying PJRT client.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// The loaded manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact name.
+    fn load(&self, name: &str) -> Result<std::sync::Arc<Loaded>> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(l) = cache.get(name) {
+            return Ok(l.clone());
+        }
+        let spec = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+            .clone();
+        let path = self.manifest.file_path(&spec);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let loaded = std::sync::Arc::new(Loaded { spec, exe });
+        cache.insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Eagerly compile every artifact (startup warm-up).
+    pub fn warmup(&self) -> Result<usize> {
+        let names: Vec<String> =
+            self.manifest.artifacts.iter().map(|a| a.name.clone()).collect();
+        for n in &names {
+            self.load(n)?;
+        }
+        Ok(names.len())
+    }
+
+    fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(data, dims, None)
+            .map_err(|e| anyhow!("host->device transfer: {e:?}"))
+    }
+
+    /// Solve x a ≈ y by repeatedly executing a sweep artifact.
+    ///
+    /// Routing: the smallest `kind` bucket with obs >= x.rows() and
+    /// vars >= x.cols(); inputs are zero-padded to the bucket shape (zero
+    /// rows/columns are inert: padded columns have cninv = 0 and padded
+    /// rows contribute nothing to any inner product). Rust owns the
+    /// convergence loop, so tolerance early-break works exactly as in the
+    /// native solvers.
+    pub fn solve(
+        &self,
+        x: &Mat,
+        y: &[f32],
+        opts: &SolveOptions,
+        kind: ArtifactKind,
+    ) -> Result<PjrtSolveOutcome> {
+        let (obs, vars) = x.shape();
+        if y.len() != obs {
+            bail!("y length {} != obs {obs}", y.len());
+        }
+        if !matches!(kind, ArtifactKind::BakSweep | ArtifactKind::BakpSweep) {
+            bail!("solve() needs a sweep artifact, got {}", kind.as_str());
+        }
+        let spec = self
+            .manifest
+            .route(kind, obs, vars)
+            .ok_or_else(|| {
+                anyhow!("no {} artifact fits {}x{} (rebuild with a larger menu)", kind.as_str(), obs, vars)
+            })?
+            .clone();
+        let loaded = self.load(&spec.name)?;
+
+        // Zero-pad to the bucket shape. jax lowered x as (obs, vars) with
+        // XLA's default row-major layout, while Mat is col-major — build
+        // the padded row-major image directly.
+        let (pobs, pvars) = (spec.obs, spec.vars);
+        let mut x_rm = vec![0.0f32; pobs * pvars];
+        for j in 0..vars {
+            let col = x.col(j);
+            for i in 0..obs {
+                x_rm[i * pvars + j] = col[i];
+            }
+        }
+        let mut yp = vec![0.0f32; pobs];
+        yp[..obs].copy_from_slice(y);
+        let cninv: Vec<f32> = {
+            let mut v = crate::solver::colnorms_inv(x);
+            v.resize(pvars, 0.0); // padded columns: cninv = 0 -> inert
+            v
+        };
+        let pad_overhead = (pobs * pvars) as f64 / (obs * vars) as f64 - 1.0;
+
+        // x and cninv stay device-resident across all sweeps.
+        let x_buf = self.upload(&x_rm, &[pobs, pvars])?;
+        let cn_buf = self.upload(&cninv, &[pvars])?;
+
+        let y_norm_sq = blas1::sum_sq_f64(y);
+        let tol_sq = opts.tol * opts.tol * y_norm_sq;
+        let mut a = vec![0.0f32; pvars];
+        let mut e = yp.clone();
+        let mut history = Vec::new();
+        let mut stop = StopReason::MaxSweeps;
+        let mut sweeps = 0;
+        let mut prev_r2 = f64::INFINITY;
+
+        for sweep in 0..opts.max_sweeps {
+            let a_buf = self.upload(&a, &[pvars])?;
+            let e_buf = self.upload(&e, &[pobs])?;
+            let outs = loaded
+                .exe
+                .execute_b(&[&x_buf, &cn_buf, &a_buf, &e_buf])
+                .map_err(|e| anyhow!("execute {}: {e:?}", spec.name))?;
+            let tuple = outs[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("device->host: {e:?}"))?;
+            let (la, le, lr2) = tuple
+                .to_tuple3()
+                .map_err(|e| anyhow!("expected 3-tuple output: {e:?}"))?;
+            a = la.to_vec::<f32>().map_err(|e| anyhow!("a readback: {e:?}"))?;
+            e = le.to_vec::<f32>().map_err(|e| anyhow!("e readback: {e:?}"))?;
+            let r2 = lr2.to_vec::<f32>().map_err(|e| anyhow!("r2 readback: {e:?}"))?[0] as f64;
+            sweeps = sweep + 1;
+            history.push(r2);
+            if opts.tol > 0.0 && r2 <= tol_sq {
+                stop = StopReason::Converged;
+                break;
+            }
+            if r2 >= prev_r2 * (1.0 - 1e-9) && sweeps > 1 {
+                stop = StopReason::Stalled;
+                break;
+            }
+            prev_r2 = r2;
+        }
+
+        a.truncate(vars);
+        e.truncate(obs);
+        Ok(PjrtSolveOutcome {
+            report: SolveReport { a, e, history, y_norm_sq, sweeps, stop },
+            artifact: spec.name.clone(),
+            pad_overhead,
+        })
+    }
+
+    /// Run a score artifact: feature scores for (x, e).
+    pub fn feature_scores(&self, x: &Mat, e: &[f32]) -> Result<Vec<f32>> {
+        let (obs, vars) = x.shape();
+        let spec = self
+            .manifest
+            .route(ArtifactKind::Score, obs, vars)
+            .ok_or_else(|| anyhow!("no score artifact fits {obs}x{vars}"))?
+            .clone();
+        let loaded = self.load(&spec.name)?;
+        let (pobs, pvars) = (spec.obs, spec.vars);
+        let mut x_rm = vec![0.0f32; pobs * pvars];
+        for j in 0..vars {
+            let col = x.col(j);
+            for i in 0..obs {
+                x_rm[i * pvars + j] = col[i];
+            }
+        }
+        let mut cninv = crate::solver::colnorms_inv(x);
+        cninv.resize(pvars, 0.0);
+        let mut ep = vec![0.0f32; pobs];
+        ep[..obs].copy_from_slice(e);
+
+        let x_buf = self.upload(&x_rm, &[pobs, pvars])?;
+        let cn_buf = self.upload(&cninv, &[pvars])?;
+        let e_buf = self.upload(&ep, &[pobs])?;
+        let outs = loaded
+            .exe
+            .execute_b(&[&x_buf, &cn_buf, &e_buf])
+            .map_err(|e| anyhow!("execute {}: {e:?}", spec.name))?;
+        let tuple = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("device->host: {e:?}"))?;
+        let scores = tuple
+            .to_tuple1()
+            .map_err(|e| anyhow!("expected 1-tuple: {e:?}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("scores readback: {e:?}"))?;
+        Ok(scores[..vars].to_vec())
+    }
+
+    /// Execute a colnorms artifact (used by tests to cross-check the
+    /// native precompute).
+    pub fn colnorms_inv_pjrt(&self, x: &Mat) -> Result<Vec<f32>> {
+        let (obs, vars) = x.shape();
+        let spec = self
+            .manifest
+            .route(ArtifactKind::Colnorms, obs, vars)
+            .ok_or_else(|| anyhow!("no colnorms artifact fits {obs}x{vars}"))?
+            .clone();
+        let loaded = self.load(&spec.name)?;
+        let (pobs, pvars) = (spec.obs, spec.vars);
+        let mut x_rm = vec![0.0f32; pobs * pvars];
+        for j in 0..vars {
+            let col = x.col(j);
+            for i in 0..obs {
+                x_rm[i * pvars + j] = col[i];
+            }
+        }
+        let x_buf = self.upload(&x_rm, &[pobs, pvars])?;
+        let outs = loaded
+            .exe
+            .execute_b(&[&x_buf])
+            .map_err(|e| anyhow!("execute {}: {e:?}", spec.name))?;
+        let v = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("device->host: {e:?}"))?
+            .to_tuple1()
+            .map_err(|e| anyhow!("expected 1-tuple: {e:?}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("readback: {e:?}"))?;
+        Ok(v[..vars].to_vec())
+    }
+
+    /// Load + compile an arbitrary HLO file and return its executable
+    /// (escape hatch used by the smoke example).
+    pub fn compile_hlo_file(&self, path: impl AsRef<std::path::Path>) -> Result<xla::PjRtLoadedExecutable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+    }
+}

@@ -1,0 +1,231 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Parsed with the in-repo JSON reader.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// What computation an artifact implements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// One sequential Algorithm-1 sweep: (x, cninv, a, e) -> (a', e', r2).
+    BakSweep,
+    /// One Algorithm-2 sweep: (x, cninv, a, e) -> (a', e', r2).
+    BakpSweep,
+    /// Algorithm-3 scoring: (x, cninv, e) -> scores.
+    Score,
+    /// Column-norm precompute: (x) -> cninv.
+    Colnorms,
+}
+
+impl ArtifactKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "bak_sweep" => Self::BakSweep,
+            "bakp_sweep" => Self::BakpSweep,
+            "score" => Self::Score,
+            "colnorms" => Self::Colnorms,
+            other => bail!("unknown artifact kind '{other}'"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::BakSweep => "bak_sweep",
+            Self::BakpSweep => "bakp_sweep",
+            Self::Score => "score",
+            Self::Colnorms => "colnorms",
+        }
+    }
+}
+
+/// One artifact's metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: ArtifactKind,
+    /// Static row count (obs) the HLO was lowered for.
+    pub obs: usize,
+    /// Static column count (vars).
+    pub vars: usize,
+    /// Block width (blk/thr) baked into the sweep; 0 for score/colnorms.
+    pub width: usize,
+    /// HLO text file, relative to the manifest directory.
+    pub file: PathBuf,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON text (dir recorded for file resolution).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let version = j
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing version"))?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut artifacts = Vec::new();
+        for a in j.get("artifacts").map(Json::items).unwrap_or(&[]) {
+            let get_str = |k: &str| -> Result<String> {
+                a.get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("artifact missing '{k}'"))
+            };
+            let get_usize = |k: &str| -> Result<usize> {
+                a.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("artifact missing '{k}'"))
+            };
+            let strings = |k: &str| -> Vec<String> {
+                a.get(k)
+                    .map(Json::items)
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|v| v.as_str().map(str::to_string))
+                    .collect()
+            };
+            let dtype = get_str("dtype")?;
+            if dtype != "f32" {
+                bail!("unsupported artifact dtype {dtype}");
+            }
+            artifacts.push(ArtifactSpec {
+                name: get_str("name")?,
+                kind: ArtifactKind::parse(&get_str("kind")?)?,
+                obs: get_usize("obs")?,
+                vars: get_usize("vars")?,
+                width: get_usize("width")?,
+                file: PathBuf::from(get_str("file")?),
+                inputs: strings("inputs"),
+                outputs: strings("outputs"),
+            });
+        }
+        Ok(Self { dir, artifacts })
+    }
+
+    /// Artifacts of a kind, sorted by (obs, vars) ascending — the bucket
+    /// search order for routing.
+    pub fn of_kind(&self, kind: ArtifactKind) -> Vec<&ArtifactSpec> {
+        let mut v: Vec<&ArtifactSpec> =
+            self.artifacts.iter().filter(|a| a.kind == kind).collect();
+        v.sort_by_key(|a| (a.obs, a.vars));
+        v
+    }
+
+    /// Smallest artifact of `kind` that fits an (obs, vars) problem
+    /// (inputs are zero-padded up to the bucket shape).
+    pub fn route(&self, kind: ArtifactKind, obs: usize, vars: usize) -> Option<&ArtifactSpec> {
+        self.of_kind(kind)
+            .into_iter()
+            .find(|a| a.obs >= obs && a.vars >= vars)
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn file_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "bakp_sweep_256x64", "kind": "bakp_sweep", "obs": 256,
+         "vars": 64, "width": 32, "dtype": "f32",
+         "file": "bakp_sweep_256x64.hlo.txt",
+         "inputs": ["x","cninv","a","e"], "outputs": ["a","e","r2"]},
+        {"name": "bakp_sweep_1024x128", "kind": "bakp_sweep", "obs": 1024,
+         "vars": 128, "width": 64, "dtype": "f32",
+         "file": "bakp_sweep_1024x128.hlo.txt",
+         "inputs": ["x","cninv","a","e"], "outputs": ["a","e","r2"]},
+        {"name": "score_256x64", "kind": "score", "obs": 256, "vars": 64,
+         "width": 0, "dtype": "f32", "file": "score_256x64.hlo.txt",
+         "inputs": ["x","cninv","e"], "outputs": ["scores"]}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.artifacts[0].kind, ArtifactKind::BakpSweep);
+        assert_eq!(m.artifacts[0].obs, 256);
+        assert_eq!(m.artifacts[0].inputs.len(), 4);
+    }
+
+    #[test]
+    fn route_picks_smallest_fitting_bucket() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let r = m.route(ArtifactKind::BakpSweep, 100, 50).unwrap();
+        assert_eq!(r.name, "bakp_sweep_256x64");
+        let r = m.route(ArtifactKind::BakpSweep, 300, 50).unwrap();
+        assert_eq!(r.name, "bakp_sweep_1024x128");
+        assert!(m.route(ArtifactKind::BakpSweep, 5000, 50).is_none());
+    }
+
+    #[test]
+    fn route_exact_fit() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let r = m.route(ArtifactKind::BakpSweep, 256, 64).unwrap();
+        assert_eq!(r.name, "bakp_sweep_256x64");
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_kind() {
+        let bad = SAMPLE.replace("bakp_sweep\",", "weird\",");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = SAMPLE.replace("\"f32\"", "\"f64\"");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn file_path_joins_dir() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/data/arts")).unwrap();
+        assert_eq!(
+            m.file_path(&m.artifacts[0]),
+            PathBuf::from("/data/arts/bakp_sweep_256x64.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn of_kind_sorted() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let v = m.of_kind(ArtifactKind::BakpSweep);
+        assert_eq!(v.len(), 2);
+        assert!(v[0].obs < v[1].obs);
+    }
+}

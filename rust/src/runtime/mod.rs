@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
+//! by `python/compile/aot.py` and executes them on the request path.
+//!
+//! Flow (see /opt/xla-example/load_hlo/): HLO text ->
+//! [`xla::HloModuleProto::from_text_file`] -> [`xla::XlaComputation`] ->
+//! `client.compile` -> cached [`xla::PjRtLoadedExecutable`] -> `execute_b`.
+//!
+//! Text is the interchange format because jax >= 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1's proto path rejects; the text
+//! parser reassigns ids.
+
+pub mod manifest;
+pub mod engine;
+
+pub use engine::{Engine, PjrtSolveOutcome};
+pub use manifest::{ArtifactKind, ArtifactSpec, Manifest};

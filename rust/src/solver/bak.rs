@@ -1,0 +1,270 @@
+//! Algorithm 1 — SolveBak: sequential cyclic coordinate descent.
+//!
+//! The inner step for column j is
+//!
+//! ```text
+//! da  = <x_j, e> / <x_j, x_j>
+//! e  -= x_j * da
+//! a_j += da
+//! ```
+//!
+//! i.e. one `dot` + one `axpy` of length obs — O(obs*vars) per sweep, the
+//! paper's headline complexity. The column slice is contiguous (col-major
+//! [`Mat`]), so each step is two linear passes over one column.
+
+use crate::linalg::{blas1, Mat};
+use crate::util::rng::Rng;
+
+use super::{colnorms_inv, ColumnOrder, SolveOptions, SolveReport, StopReason};
+
+/// Solve x a ≈ y with Algorithm 1. See [`SolveOptions`] for the knobs.
+pub fn solve_bak(x: &Mat, y: &[f32], opts: &SolveOptions) -> SolveReport {
+    let (obs, vars) = x.shape();
+    assert_eq!(y.len(), obs, "y length must equal obs");
+    let cninv = colnorms_inv(x);
+    let mut a = vec![0.0f32; vars];
+    let mut e = y.to_vec();
+    solve_bak_warm(x, &cninv, &mut a, &mut e, y, opts)
+}
+
+/// Warm-start variant: continues from caller-provided (a, e). The caller
+/// must guarantee `e == y - X a` on entry (checked in debug builds).
+pub fn solve_bak_warm(
+    x: &Mat,
+    cninv: &[f32],
+    a: &mut Vec<f32>,
+    e: &mut Vec<f32>,
+    y: &[f32],
+    opts: &SolveOptions,
+) -> SolveReport {
+    let vars = x.cols();
+    debug_assert_eq!(a.len(), vars);
+    debug_assert_eq!(e.len(), x.rows());
+    #[cfg(debug_assertions)]
+    {
+        let check = crate::linalg::residual(x, y, a);
+        for (c, g) in check.iter().zip(e.iter()) {
+            debug_assert!((c - g).abs() < 1e-3, "warm start invariant e == y - Xa");
+        }
+    }
+
+    let y_norm_sq = blas1::sum_sq_f64(y);
+    let tol_sq = opts.tol * opts.tol * y_norm_sq;
+    let mut history = Vec::with_capacity(opts.max_sweeps.min(1024));
+    let mut rng = Rng::seed(opts.seed);
+    let mut order: Vec<usize> = (0..vars).collect();
+    let mut stop = StopReason::MaxSweeps;
+    let mut sweeps = 0;
+    let mut prev_r2 = f64::INFINITY;
+
+    for sweep in 0..opts.max_sweeps {
+        if opts.order == ColumnOrder::Shuffled {
+            rng.shuffle(&mut order);
+        }
+        for &j in &order {
+            let cn = cninv[j];
+            if cn == 0.0 {
+                continue; // zero column
+            }
+            let da = blas1::cd_step(x.col(j), e, cn);
+            a[j] += da;
+        }
+        sweeps = sweep + 1;
+        let check_now = opts.check_every != 0 && sweeps % opts.check_every == 0;
+        if check_now || sweeps == opts.max_sweeps {
+            let r2 = blas1::sum_sq_f64(e);
+            history.push(r2);
+            if opts.tol > 0.0 && r2 <= tol_sq {
+                stop = StopReason::Converged;
+                break;
+            }
+            // Stall detection: residual no longer improving (LS optimum or
+            // the f32 floor) — continuing would only burn time.
+            if r2 >= prev_r2 * (1.0 - 1e-9) && sweeps > 1 {
+                stop = StopReason::Stalled;
+                break;
+            }
+            prev_r2 = r2;
+        }
+    }
+
+    SolveReport {
+        a: std::mem::take(a),
+        e: std::mem::take(e),
+        history,
+        y_norm_sq,
+        sweeps,
+        stop,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::residual;
+    use crate::util::stats::{mape, rel_l2};
+
+    fn planted(seed: u64, obs: usize, vars: usize) -> (Mat, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::seed(seed);
+        let x = Mat::randn(&mut rng, obs, vars);
+        let a: Vec<f32> = (0..vars).map(|_| rng.normal_f32()).collect();
+        let y = x.matvec(&a);
+        (x, y, a)
+    }
+
+    #[test]
+    fn tall_consistent_recovers_truth() {
+        let (x, y, a_true) = planted(100, 400, 40);
+        let rep = solve_bak(&x, &y, &SolveOptions::accurate());
+        assert!(rep.converged(), "stop={:?} rel={}", rep.stop, rep.rel_residual());
+        assert!(rel_l2(&rep.a, &a_true) < 1e-3, "err={}", rel_l2(&rep.a, &a_true));
+        // Accuracy comparable to Table 1's MAPE regime for f32.
+        assert!(mape(&rep.a, &a_true) < 1e-3);
+    }
+
+    #[test]
+    fn square_system_solves() {
+        // Square random systems are CD's worst case (rate ~ 1-1/cond^2);
+        // run to stall and accept the f32-floor residual.
+        let (x, y, a_true) = planted(101, 64, 64);
+        let mut o = SolveOptions::default();
+        o.max_sweeps = 30_000;
+        o.tol = 1e-5;
+        o.check_every = 10;
+        let rep = solve_bak(&x, &y, &o);
+        assert!(rep.rel_residual() < 1e-3, "rel={}", rep.rel_residual());
+        assert!(rel_l2(&rep.a, &a_true) < 0.05, "err={}", rel_l2(&rep.a, &a_true));
+    }
+
+    #[test]
+    fn wide_system_satisfies_equations() {
+        let (x, y, _) = planted(102, 32, 128);
+        let rep = solve_bak(&x, &y, &SolveOptions::accurate());
+        assert!(rep.rel_residual() < 1e-5, "wide must interpolate");
+    }
+
+    #[test]
+    fn inconsistent_tall_reaches_ls_optimum() {
+        let mut rng = Rng::seed(103);
+        let x = Mat::randn(&mut rng, 200, 10);
+        let y: Vec<f32> = (0..200).map(|_| rng.normal_f32()).collect();
+        let mut o = SolveOptions::default();
+        o.max_sweeps = 2000;
+        o.tol = 0.0; // run to stall
+        let rep = solve_bak(&x, &y, &o);
+        let a_qr = crate::baselines::qr::lstsq_qr(&x, &y).unwrap();
+        assert!(rel_l2(&rep.a, &a_qr) < 1e-2, "err={}", rel_l2(&rep.a, &a_qr));
+    }
+
+    #[test]
+    fn history_monotone_nonincreasing() {
+        let (x, y, _) = planted(104, 100, 50);
+        let mut o = SolveOptions::default();
+        o.tol = 0.0;
+        o.max_sweeps = 50;
+        let rep = solve_bak(&x, &y, &o);
+        for w in rep.history.windows(2) {
+            assert!(w[1] <= w[0] * (1.0 + 1e-9), "Theorem 1 violated: {w:?}");
+        }
+    }
+
+    #[test]
+    fn exit_invariant_e_equals_y_minus_xa() {
+        let (x, y, _) = planted(105, 80, 30);
+        let rep = solve_bak(&x, &y, &SolveOptions::default());
+        let fresh = residual(&x, &y, &rep.a);
+        for (f, g) in fresh.iter().zip(&rep.e) {
+            assert!((f - g).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn tolerance_early_break_stops_early() {
+        let (x, y, _) = planted(106, 300, 20);
+        let mut loose = SolveOptions::default();
+        loose.tol = 1e-2;
+        loose.max_sweeps = 1000;
+        let rep_loose = solve_bak(&x, &y, &loose);
+        let mut tight = loose.clone();
+        tight.tol = 1e-6;
+        let rep_tight = solve_bak(&x, &y, &tight);
+        assert!(rep_loose.sweeps < rep_tight.sweeps);
+        assert!(rep_loose.converged() && rep_tight.converged());
+    }
+
+    #[test]
+    fn shuffled_order_also_converges() {
+        let (x, y, a_true) = planted(107, 200, 30);
+        let mut o = SolveOptions::accurate();
+        o.order = ColumnOrder::Shuffled;
+        let rep = solve_bak(&x, &y, &o);
+        assert!(rep.converged());
+        assert!(rel_l2(&rep.a, &a_true) < 1e-3);
+    }
+
+    #[test]
+    fn shuffled_is_deterministic_per_seed() {
+        let (x, y, _) = planted(108, 100, 20);
+        let mut o = SolveOptions::default();
+        o.order = ColumnOrder::Shuffled;
+        o.max_sweeps = 5;
+        o.tol = 0.0;
+        let r1 = solve_bak(&x, &y, &o);
+        let r2 = solve_bak(&x, &y, &o);
+        assert_eq!(r1.a, r2.a);
+    }
+
+    #[test]
+    fn zero_column_ignored() {
+        let mut rng = Rng::seed(109);
+        let mut x = Mat::randn(&mut rng, 50, 8);
+        x.col_mut(4).fill(0.0);
+        let y: Vec<f32> = (0..50).map(|_| rng.normal_f32()).collect();
+        let rep = solve_bak(&x, &y, &SolveOptions::default());
+        assert_eq!(rep.a[4], 0.0);
+        assert!(rep.a.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn zero_rhs_converges_immediately() {
+        let (x, _, _) = planted(110, 40, 10);
+        let rep = solve_bak(&x, &[0.0; 40], &SolveOptions::default());
+        assert!(rep.a.iter().all(|&v| v == 0.0));
+        assert!(rep.converged());
+        assert_eq!(rep.sweeps, 1);
+    }
+
+    #[test]
+    fn single_column_solves_in_one_sweep() {
+        let mut rng = Rng::seed(111);
+        let x = Mat::randn(&mut rng, 100, 1);
+        let y: Vec<f32> = x.col(0).iter().map(|&v| 2.5 * v).collect();
+        let rep = solve_bak(&x, &y, &SolveOptions::default());
+        assert!((rep.a[0] - 2.5).abs() < 1e-5);
+        assert_eq!(rep.sweeps, 1);
+    }
+
+    #[test]
+    fn check_every_reduces_history_density() {
+        let (x, y, _) = planted(112, 100, 20);
+        let mut o = SolveOptions::default();
+        o.tol = 0.0;
+        o.max_sweeps = 20;
+        o.check_every = 5;
+        let rep = solve_bak(&x, &y, &o);
+        assert!(rep.history.len() <= 5); // 20/5 + final
+    }
+
+    #[test]
+    fn stall_detection_fires_on_ls_optimum() {
+        let mut rng = Rng::seed(113);
+        let x = Mat::randn(&mut rng, 60, 4);
+        let y: Vec<f32> = (0..60).map(|_| rng.normal_f32()).collect();
+        let mut o = SolveOptions::default();
+        o.tol = 1e-30; // unreachable: inconsistent system
+        o.max_sweeps = 100_000;
+        let rep = solve_bak(&x, &y, &o);
+        assert_eq!(rep.stop, StopReason::Stalled);
+        assert!(rep.sweeps < 100_000);
+    }
+}

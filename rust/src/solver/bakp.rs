@@ -1,0 +1,273 @@
+//! Algorithm 2 — SolveBakP: the paper's parallel variant.
+//!
+//! Each sweep walks column blocks of width `thr`. Inside a block every
+//! `da_k` is computed against the SAME (stale) error vector — those dots
+//! are embarrassingly parallel — and the error is refreshed once per block
+//! with `e -= X_blk da_blk` (line 9), parallelised over row chunks.
+//!
+//! The paper's convergence caveat is preserved and tested: the stale-error
+//! update converges when `thr` is small relative to `vars` (for iid
+//! Gaussian columns the in-block coupling is O(1/sqrt(obs)) so quite large
+//! `thr` works; adversarially correlated columns can diverge — see
+//! `tests/solver_properties.rs` and the thr-sweep ablation bench).
+
+use crate::linalg::{blas1, blas2, Mat};
+
+use super::{colnorms_inv, SolveOptions, SolveReport, StopReason};
+
+/// Solve x a ≈ y with Algorithm 2 (SolveBakP).
+///
+/// `opts.thr` is the block width; `opts.threads > 1` runs the in-block dot
+/// phase and the error refresh on scoped threads.
+pub fn solve_bakp(x: &Mat, y: &[f32], opts: &SolveOptions) -> SolveReport {
+    let (obs, vars) = x.shape();
+    assert_eq!(y.len(), obs, "y length must equal obs");
+    assert!(opts.thr > 0, "thr must be positive");
+    let cninv = colnorms_inv(x);
+    let y_norm_sq = blas1::sum_sq_f64(y);
+    let tol_sq = opts.tol * opts.tol * y_norm_sq;
+
+    let mut a = vec![0.0f32; vars];
+    let mut e = y.to_vec();
+    let mut da = vec![0.0f32; opts.thr];
+    let mut history = Vec::with_capacity(opts.max_sweeps.min(1024));
+    let mut stop = StopReason::MaxSweeps;
+    let mut sweeps = 0;
+    let mut prev_r2 = f64::INFINITY;
+    let threads = opts.threads.max(1);
+
+    for sweep in 0..opts.max_sweeps {
+        let mut j0 = 0;
+        while j0 < vars {
+            let width = opts.thr.min(vars - j0);
+            block_step(x, j0, width, &cninv, &mut a, &mut e, &mut da[..width], threads);
+            j0 += width;
+        }
+        sweeps = sweep + 1;
+        let check_now = opts.check_every != 0 && sweeps % opts.check_every == 0;
+        if check_now || sweeps == opts.max_sweeps {
+            let r2 = blas1::sum_sq_f64(&e);
+            history.push(r2);
+            if opts.tol > 0.0 && r2 <= tol_sq {
+                stop = StopReason::Converged;
+                break;
+            }
+            if r2 >= prev_r2 * (1.0 - 1e-9) && sweeps > 1 {
+                stop = StopReason::Stalled;
+                break;
+            }
+            prev_r2 = r2;
+        }
+    }
+
+    SolveReport { a, e, history, y_norm_sq, sweeps, stop }
+}
+
+/// One Algorithm-2 block update (lines 6-9), optionally threaded.
+fn block_step(
+    x: &Mat,
+    j0: usize,
+    width: usize,
+    cninv: &[f32],
+    a: &mut [f32],
+    e: &mut [f32],
+    da: &mut [f32],
+    threads: usize,
+) {
+    // Phase 1: stale-error dots, "do in parallel" per the paper.
+    // Threading pays only when the block is big enough to amortise spawn.
+    let work = x.rows() * width;
+    if threads > 1 && work >= 1 << 18 {
+        let per = width.div_ceil(threads);
+        std::thread::scope(|s| {
+            for (t, chunk) in da.chunks_mut(per).enumerate() {
+                let k0 = j0 + t * per;
+                let e_ro: &[f32] = e;
+                s.spawn(move || {
+                    for (i, d) in chunk.iter_mut().enumerate() {
+                        *d = blas1::dot(x.col(k0 + i), e_ro) * cninv[k0 + i];
+                    }
+                });
+            }
+        });
+    } else {
+        for (i, d) in da.iter_mut().enumerate() {
+            *d = blas1::dot(x.col(j0 + i), e) * cninv[j0 + i];
+        }
+    }
+
+    // Phase 2: line 9, e -= X_blk da (row-parallel), and a += da.
+    if threads > 1 && work >= 1 << 18 {
+        let rows = x.rows();
+        let per = rows.div_ceil(threads);
+        std::thread::scope(|s| {
+            for (t, ec) in e.chunks_mut(per).enumerate() {
+                let r0 = t * per;
+                let len = ec.len();
+                let da_ro: &[f32] = da;
+                s.spawn(move || {
+                    for (i, &d) in da_ro.iter().enumerate() {
+                        if d != 0.0 {
+                            blas1::axpy(-d, &x.col(j0 + i)[r0..r0 + len], ec);
+                        }
+                    }
+                });
+            }
+        });
+    } else {
+        for (i, &d) in da.iter().enumerate() {
+            if d != 0.0 {
+                blas1::axpy(-d, x.col(j0 + i), e);
+            }
+        }
+    }
+    for (i, &d) in da.iter().enumerate() {
+        a[j0 + i] += d;
+    }
+    // Keep the shared helper in sync with this implementation.
+    let _ = blas2::block_update; // (same semantics; used by the PJRT path tests)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::solve_bak;
+    use crate::util::rng::Rng;
+    use crate::util::stats::rel_l2;
+
+    fn planted(seed: u64, obs: usize, vars: usize) -> (Mat, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::seed(seed);
+        let x = Mat::randn(&mut rng, obs, vars);
+        let a: Vec<f32> = (0..vars).map(|_| rng.normal_f32()).collect();
+        let y = x.matvec(&a);
+        (x, y, a)
+    }
+
+    #[test]
+    fn converges_on_tall_system() {
+        let (x, y, a_true) = planted(200, 500, 64);
+        let mut o = SolveOptions::accurate();
+        o.thr = 8;
+        let rep = solve_bakp(&x, &y, &o);
+        assert!(rep.converged(), "rel={}", rep.rel_residual());
+        assert!(rel_l2(&rep.a, &a_true) < 1e-3);
+    }
+
+    #[test]
+    fn thr_one_matches_sequential_bak_exactly() {
+        let (x, y, _) = planted(201, 80, 16);
+        let mut o = SolveOptions::default();
+        o.thr = 1;
+        o.max_sweeps = 3;
+        o.tol = 0.0;
+        let rp = solve_bakp(&x, &y, &o);
+        let rs = solve_bak(&x, &y, &o);
+        for (p, s) in rp.a.iter().zip(&rs.a) {
+            assert!((p - s).abs() < 1e-6, "thr=1 must equal Algorithm 1");
+        }
+    }
+
+    #[test]
+    fn thr_not_dividing_vars_handles_tail_block() {
+        let (x, y, a_true) = planted(202, 300, 37); // 37 % 5 != 0
+        let mut o = SolveOptions::accurate();
+        o.thr = 5;
+        let rep = solve_bakp(&x, &y, &o);
+        assert!(rep.converged());
+        assert!(rel_l2(&rep.a, &a_true) < 1e-3);
+    }
+
+    #[test]
+    fn thr_larger_than_vars_is_one_block() {
+        let (x, y, a_true) = planted(203, 400, 16);
+        let mut o = SolveOptions::accurate();
+        o.thr = 64; // > vars
+        o.max_sweeps = 2000;
+        let rep = solve_bakp(&x, &y, &o);
+        // Tall iid Gaussian: even full-width blocks converge (weak coupling).
+        assert!(rep.rel_residual() < 1e-4);
+        assert!(rel_l2(&rep.a, &a_true) < 1e-2);
+    }
+
+    #[test]
+    fn threaded_matches_serial_numerically() {
+        let (x, y, _) = planted(204, 3000, 128);
+        let mut o = SolveOptions::default();
+        o.thr = 64;
+        o.max_sweeps = 3;
+        o.tol = 0.0;
+        o.threads = 1;
+        let r1 = solve_bakp(&x, &y, &o);
+        o.threads = 4;
+        let r4 = solve_bakp(&x, &y, &o);
+        // Same arithmetic, same order within each dot -> tight agreement.
+        for (a, b) in r1.a.iter().zip(&r4.a) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn history_monotone_for_small_thr() {
+        let (x, y, _) = planted(205, 200, 64);
+        let mut o = SolveOptions::default();
+        o.thr = 8;
+        o.tol = 0.0;
+        o.max_sweeps = 40;
+        let rep = solve_bakp(&x, &y, &o);
+        for w in rep.history.windows(2) {
+            assert!(w[1] <= w[0] * (1.0 + 1e-6));
+        }
+    }
+
+    #[test]
+    fn exit_invariant_e_equals_y_minus_xa() {
+        let (x, y, _) = planted(206, 150, 40);
+        let mut o = SolveOptions::default();
+        o.thr = 10;
+        let rep = solve_bakp(&x, &y, &o);
+        let fresh = crate::linalg::residual(&x, &y, &rep.a);
+        for (f, g) in fresh.iter().zip(&rep.e) {
+            assert!((f - g).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn correlated_columns_with_large_thr_can_diverge_but_small_thr_saves_it() {
+        // Build strongly correlated columns: x_j = base + small noise.
+        let mut rng = Rng::seed(207);
+        let obs = 100;
+        let vars = 32;
+        let base: Vec<f32> = (0..obs).map(|_| rng.normal_f32()).collect();
+        let x = Mat::from_fn(obs, vars, |i, _| base[i] + 0.05 * rng.normal_f32());
+        let y: Vec<f32> = (0..obs).map(|_| rng.normal_f32()).collect();
+
+        // Large thr on near-identical columns: stale update massively
+        // overshoots (every column "claims" the same correction).
+        let mut big = SolveOptions::default();
+        big.thr = 32;
+        big.max_sweeps = 50;
+        big.tol = 0.0;
+        let rep_big = solve_bakp(&x, &y, &big);
+        let r_big = rep_big.history.last().copied().unwrap_or(f64::INFINITY);
+
+        // Small thr converges (the paper's §6 caveat).
+        let mut small = big.clone();
+        small.thr = 1;
+        let rep_small = solve_bakp(&x, &y, &small);
+        let r_small = rep_small.history.last().copied().unwrap();
+        assert!(
+            r_small.is_finite() && (r_big.is_nan() || r_small < r_big || r_big > 1e6),
+            "small-thr should behave better: small={r_small} big={r_big}"
+        );
+    }
+
+    #[test]
+    fn wide_system_converges() {
+        let (x, y, _) = planted(208, 64, 256);
+        let mut o = SolveOptions::accurate();
+        o.thr = 16;
+        o.max_sweeps = 2000;
+        let rep = solve_bakp(&x, &y, &o);
+        assert!(rep.rel_residual() < 1e-4, "rel={}", rep.rel_residual());
+    }
+}

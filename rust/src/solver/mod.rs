@@ -1,0 +1,177 @@
+//! The paper's solver family (native L3 implementations):
+//!
+//! * [`solve_bak`] — Algorithm 1, sequential cyclic coordinate descent,
+//!   with the paper's suggested variations (tolerance early-break,
+//!   randomized column order).
+//! * [`solve_bakp`] — Algorithm 2, the block-"parallel" variant with
+//!   stale in-block errors, optionally multi-threaded.
+//! * [`select_features_bakf`] — Algorithm 3, greedy feature selection.
+//!
+//! All solvers share [`SolveOptions`] / [`SolveReport`] and uphold the two
+//! invariants the test-suite checks everywhere: the per-sweep squared
+//! residual is non-increasing (Theorem 1), and `e == y - X a` at exit.
+
+pub mod bak;
+pub mod bakp;
+pub mod bakf;
+pub mod variants;
+
+pub use bak::solve_bak;
+pub use bakf::{select_features_bakf, BakfOptions, BakfReport};
+pub use bakp::solve_bakp;
+pub use variants::{
+    solve_bak_multi, solve_bakp_damped, solve_gauss_southwell, solve_kaczmarz,
+};
+
+use crate::linalg::blas1;
+
+/// Column visit order for SolveBak.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ColumnOrder {
+    /// The paper's serial order 1..vars.
+    #[default]
+    Cyclic,
+    /// Fresh random permutation each sweep (§2's "randomly selected index"
+    /// variation; helps on adversarial column orderings).
+    Shuffled,
+}
+
+/// Options shared by the solver family.
+#[derive(Clone, Debug)]
+pub struct SolveOptions {
+    /// Maximum number of full sweeps (the paper's `max_iter`).
+    pub max_sweeps: usize,
+    /// Early-break tolerance on the RELATIVE residual
+    /// sqrt(sum e^2 / sum y^2); 0 disables the check.
+    pub tol: f64,
+    /// Column visit order (SolveBak only).
+    pub order: ColumnOrder,
+    /// Block width for SolveBakP (the paper's `thr`).
+    pub thr: usize,
+    /// Worker threads for SolveBakP's in-block loop. 1 = serial.
+    pub threads: usize,
+    /// Check the tolerance every this many sweeps (checking costs a pass
+    /// over e; the paper's "control the accuracy and execution time").
+    pub check_every: usize,
+    /// Seed for the shuffled order.
+    pub seed: u64,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        Self {
+            max_sweeps: 100,
+            tol: 1e-6,
+            order: ColumnOrder::Cyclic,
+            thr: 50, // the paper's value for experiments 1-10
+            threads: 1,
+            check_every: 1,
+            seed: 0x5eed,
+        }
+    }
+}
+
+impl SolveOptions {
+    /// Options matching the paper's accuracy regime (MAPE ~1e-7 on
+    /// consistent systems). tol 1e-6 is the practical f32 floor for the
+    /// relative residual; tighter values just stall.
+    pub fn accurate() -> Self {
+        Self { max_sweeps: 1000, tol: 1e-6, ..Self::default() }
+    }
+
+    /// Fast, loose solve (weight initialisation use-case from §7).
+    pub fn fast() -> Self {
+        Self { max_sweeps: 10, tol: 1e-3, ..Self::default() }
+    }
+}
+
+/// Why the solver stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// Relative residual went below `tol`.
+    Converged,
+    /// Residual stopped improving (hit the f32 floor / LS optimum).
+    Stalled,
+    /// Ran out of sweeps.
+    MaxSweeps,
+}
+
+/// Solve outcome: coefficients, final residual, and the per-sweep history.
+#[derive(Clone, Debug)]
+pub struct SolveReport {
+    /// The estimated coefficient vector (vars).
+    pub a: Vec<f32>,
+    /// Final residual e = y - X a (obs).
+    pub e: Vec<f32>,
+    /// Squared residual after each completed sweep.
+    pub history: Vec<f64>,
+    /// ||y||^2 for relative-residual reporting.
+    pub y_norm_sq: f64,
+    /// Number of completed sweeps.
+    pub sweeps: usize,
+    pub stop: StopReason,
+}
+
+impl SolveReport {
+    /// Relative residual sqrt(sum e^2 / sum y^2); 0/0 counts as 0.
+    pub fn rel_residual(&self) -> f64 {
+        let r2 = blas1::sum_sq_f64(&self.e);
+        if self.y_norm_sq == 0.0 {
+            r2.sqrt()
+        } else {
+            (r2 / self.y_norm_sq).sqrt()
+        }
+    }
+
+    /// True if the run ended by hitting the tolerance.
+    pub fn converged(&self) -> bool {
+        self.stop == StopReason::Converged
+    }
+}
+
+/// Precompute 1/<x_j,x_j>, with zero columns mapped to 0 (they are skipped;
+/// a zero column can never reduce the residual).
+pub fn colnorms_inv(x: &crate::linalg::Mat) -> Vec<f32> {
+    x.colnorms_sq()
+        .iter()
+        .map(|&v| if v > 0.0 { 1.0 / v } else { 0.0 })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn default_options_match_paper() {
+        let o = SolveOptions::default();
+        assert_eq!(o.thr, 50);
+        assert_eq!(o.order, ColumnOrder::Cyclic);
+    }
+
+    #[test]
+    fn colnorms_inv_zero_column() {
+        let mut rng = Rng::seed(1);
+        let mut x = Mat::randn(&mut rng, 10, 3);
+        x.col_mut(1).fill(0.0);
+        let cn = colnorms_inv(&x);
+        assert!(cn[0] > 0.0);
+        assert_eq!(cn[1], 0.0);
+        assert!(cn[2] > 0.0);
+    }
+
+    #[test]
+    fn rel_residual_zero_y() {
+        let rep = SolveReport {
+            a: vec![],
+            e: vec![0.0; 4],
+            history: vec![],
+            y_norm_sq: 0.0,
+            sweeps: 0,
+            stop: StopReason::Converged,
+        };
+        assert_eq!(rep.rel_residual(), 0.0);
+    }
+}

@@ -1,0 +1,425 @@
+//! Extensions of the basic algorithms that the paper sketches or implies
+//! (§2 "other variations ... can also be implemented"), plus the natural
+//! comparators from the same iterative-methods family:
+//!
+//! * [`solve_kaczmarz`] — randomized Kaczmarz, the ROW-action dual of
+//!   SolveBak's column action (projects onto one equation per step).
+//!   Ablation partner: which action wins depends on the aspect ratio.
+//! * [`solve_gauss_southwell`] — greedy column choice: each step updates
+//!   the column with the largest error reduction, computed with the same
+//!   scoring pass as SolveBakF. Fewer sweeps, more work per sweep.
+//! * [`solve_bakp_damped`] — SolveBakP with an under-relaxation factor
+//!   that provably tames the stale-block overshoot the paper's §6 warns
+//!   about (the thr-sweep ablation shows raw BAKP diverging on correlated
+//!   columns; damping restores monotonicity).
+//! * [`solve_bak_multi`] — multi-RHS SolveBak: shares the matrix walk
+//!   across right-hand sides (one x_j load serves all systems), the
+//!   solver-side analogue of the coordinator's same-matrix batching.
+
+use crate::linalg::{blas1, Mat};
+use crate::util::rng::Rng;
+
+use super::{colnorms_inv, SolveOptions, SolveReport, StopReason};
+
+/// Randomized Kaczmarz: at each step pick row i with probability
+/// proportional to ||row_i||^2 (Strohmer-Vershynin) and project the
+/// iterate onto its hyperplane.
+///
+/// Row-action on a column-major [`Mat`] strides, so this is also the
+/// layout ablation: SolveBak's column action is contiguous, Kaczmarz is
+/// not — part of why the paper's method benches so well in column-major
+/// Julia.
+pub fn solve_kaczmarz(x: &Mat, y: &[f32], opts: &SolveOptions) -> SolveReport {
+    let (obs, vars) = x.shape();
+    assert_eq!(y.len(), obs);
+    let mut rng = Rng::seed(opts.seed);
+    let row_norms_sq: Vec<f32> = (0..obs)
+        .map(|i| (0..vars).map(|j| x.get(i, j) * x.get(i, j)).sum())
+        .collect();
+    let total: f64 = row_norms_sq.iter().map(|&v| v as f64).sum();
+    // Cumulative distribution for norm-weighted sampling.
+    let mut cdf = Vec::with_capacity(obs);
+    let mut acc = 0.0f64;
+    for &v in &row_norms_sq {
+        acc += v as f64 / total;
+        cdf.push(acc);
+    }
+
+    let y_norm_sq = blas1::sum_sq_f64(y);
+    let tol_sq = opts.tol * opts.tol * y_norm_sq;
+    let mut a = vec![0.0f32; vars];
+    let mut history = Vec::new();
+    let mut stop = StopReason::MaxSweeps;
+    let mut sweeps = 0;
+    let mut prev_r2 = f64::INFINITY;
+
+    // One "sweep" = obs row projections (comparable work to a BAK sweep
+    // on square systems; obs/vars ratio otherwise).
+    for sweep in 0..opts.max_sweeps {
+        for _ in 0..obs {
+            let u = rng.uniform();
+            let i = match cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+                Ok(k) => k,
+                Err(k) => k.min(obs - 1),
+            };
+            let nrm = row_norms_sq[i];
+            if nrm == 0.0 {
+                continue;
+            }
+            // residual_i = y_i - <row_i, a>
+            let mut ri = y[i];
+            for j in 0..vars {
+                ri -= x.get(i, j) * a[j];
+            }
+            let step = ri / nrm;
+            for (j, aj) in a.iter_mut().enumerate() {
+                *aj += step * x.get(i, j);
+            }
+        }
+        sweeps = sweep + 1;
+        let e = crate::linalg::residual(x, y, &a);
+        let r2 = blas1::sum_sq_f64(&e);
+        history.push(r2);
+        if opts.tol > 0.0 && r2 <= tol_sq {
+            stop = StopReason::Converged;
+            break;
+        }
+        if r2 >= prev_r2 * (1.0 - 1e-9) && sweeps > 1 {
+            stop = StopReason::Stalled;
+            break;
+        }
+        prev_r2 = r2;
+    }
+    let e = crate::linalg::residual(x, y, &a);
+    SolveReport { a, e, history, y_norm_sq, sweeps, stop }
+}
+
+/// Gauss-Southwell: each step updates the single column with the largest
+/// score <x_j,e>^2/<x_j,x_j> (greedy instead of cyclic). One "sweep" =
+/// vars greedy steps. The scoring pass costs a full Xᵀe per step, so this
+/// is O(vars) times more expensive per update — included as the
+/// convergence-per-update upper bound for column-action methods.
+pub fn solve_gauss_southwell(x: &Mat, y: &[f32], opts: &SolveOptions) -> SolveReport {
+    let (obs, vars) = x.shape();
+    assert_eq!(y.len(), obs);
+    let cninv = colnorms_inv(x);
+    let y_norm_sq = blas1::sum_sq_f64(y);
+    let tol_sq = opts.tol * opts.tol * y_norm_sq;
+    let mut a = vec![0.0f32; vars];
+    let mut e = y.to_vec();
+    let mut history = Vec::new();
+    let mut stop = StopReason::MaxSweeps;
+    let mut sweeps = 0;
+    let mut prev_r2 = f64::INFINITY;
+
+    for sweep in 0..opts.max_sweeps {
+        for _ in 0..vars {
+            // Score all columns, pick the argmax.
+            let g = x.matvec_t(&e);
+            let mut best = 0usize;
+            let mut best_score = -1.0f32;
+            for j in 0..vars {
+                let s = g[j] * g[j] * cninv[j];
+                if s > best_score {
+                    best_score = s;
+                    best = j;
+                }
+            }
+            if best_score <= 0.0 {
+                break;
+            }
+            let da = g[best] * cninv[best];
+            blas1::axpy(-da, x.col(best), &mut e);
+            a[best] += da;
+        }
+        sweeps = sweep + 1;
+        let r2 = blas1::sum_sq_f64(&e);
+        history.push(r2);
+        if opts.tol > 0.0 && r2 <= tol_sq {
+            stop = StopReason::Converged;
+            break;
+        }
+        if r2 >= prev_r2 * (1.0 - 1e-9) && sweeps > 1 {
+            stop = StopReason::Stalled;
+            break;
+        }
+        prev_r2 = r2;
+    }
+    SolveReport { a, e, history, y_norm_sq, sweeps, stop }
+}
+
+/// SolveBakP with under-relaxation: the block update becomes
+/// `a += damping * da_stale`. damping = 1 is the paper's Algorithm 2;
+/// damping ~ 1/sqrt(in-block coupling) restores convergence for wide
+/// blocks of correlated columns.
+pub fn solve_bakp_damped(
+    x: &Mat,
+    y: &[f32],
+    opts: &SolveOptions,
+    damping: f32,
+) -> SolveReport {
+    assert!(damping > 0.0 && damping <= 1.0, "damping in (0,1]");
+    let (obs, vars) = x.shape();
+    assert_eq!(y.len(), obs);
+    let cninv = colnorms_inv(x);
+    let y_norm_sq = blas1::sum_sq_f64(y);
+    let tol_sq = opts.tol * opts.tol * y_norm_sq;
+    let mut a = vec![0.0f32; vars];
+    let mut e = y.to_vec();
+    let mut da = vec![0.0f32; opts.thr];
+    let mut history = Vec::new();
+    let mut stop = StopReason::MaxSweeps;
+    let mut sweeps = 0;
+    let mut prev_r2 = f64::INFINITY;
+
+    for sweep in 0..opts.max_sweeps {
+        let mut j0 = 0;
+        while j0 < vars {
+            let width = opts.thr.min(vars - j0);
+            for (k, d) in da[..width].iter_mut().enumerate() {
+                *d = blas1::dot(x.col(j0 + k), &e) * cninv[j0 + k] * damping;
+            }
+            for (k, &d) in da[..width].iter().enumerate() {
+                if d != 0.0 {
+                    blas1::axpy(-d, x.col(j0 + k), &mut e);
+                }
+                a[j0 + k] += d;
+            }
+            j0 += width;
+        }
+        sweeps = sweep + 1;
+        let r2 = blas1::sum_sq_f64(&e);
+        history.push(r2);
+        if opts.tol > 0.0 && r2 <= tol_sq {
+            stop = StopReason::Converged;
+            break;
+        }
+        if r2 >= prev_r2 * (1.0 - 1e-9) && sweeps > 1 {
+            stop = StopReason::Stalled;
+            break;
+        }
+        prev_r2 = r2;
+    }
+    SolveReport { a, e, history, y_norm_sq, sweeps, stop }
+}
+
+/// Multi-RHS SolveBak: solves x A = Y for `nrhs` right-hand sides in one
+/// matrix walk. Per column j, the single x_j load (one pass, cache-hot)
+/// serves every RHS — the amortisation the coordinator's batcher exploits.
+/// Returns one report per RHS.
+pub fn solve_bak_multi(x: &Mat, ys: &[Vec<f32>], opts: &SolveOptions) -> Vec<SolveReport> {
+    let (obs, vars) = x.shape();
+    let nrhs = ys.len();
+    for y in ys {
+        assert_eq!(y.len(), obs, "every RHS must have obs rows");
+    }
+    let cninv = colnorms_inv(x);
+    let mut a: Vec<Vec<f32>> = vec![vec![0.0f32; vars]; nrhs];
+    let mut e: Vec<Vec<f32>> = ys.to_vec();
+    let y_norm_sq: Vec<f64> = ys.iter().map(|y| blas1::sum_sq_f64(y)).collect();
+    let mut history: Vec<Vec<f64>> = vec![Vec::new(); nrhs];
+    let mut done: Vec<Option<StopReason>> = vec![None; nrhs];
+    let mut prev_r2 = vec![f64::INFINITY; nrhs];
+    let mut sweeps_done = vec![0usize; nrhs];
+
+    for sweep in 0..opts.max_sweeps {
+        if done.iter().all(Option::is_some) {
+            break;
+        }
+        for j in 0..vars {
+            let cn = cninv[j];
+            if cn == 0.0 {
+                continue;
+            }
+            let xj = x.col(j);
+            for r in 0..nrhs {
+                if done[r].is_some() {
+                    continue;
+                }
+                let da = blas1::dot(xj, &e[r]) * cn;
+                blas1::axpy(-da, xj, &mut e[r]);
+                a[r][j] += da;
+            }
+        }
+        for r in 0..nrhs {
+            if done[r].is_some() {
+                continue;
+            }
+            sweeps_done[r] = sweep + 1;
+            let r2 = blas1::sum_sq_f64(&e[r]);
+            history[r].push(r2);
+            if opts.tol > 0.0 && r2 <= opts.tol * opts.tol * y_norm_sq[r] {
+                done[r] = Some(StopReason::Converged);
+            } else if r2 >= prev_r2[r] * (1.0 - 1e-9) && sweep > 0 {
+                done[r] = Some(StopReason::Stalled);
+            }
+            prev_r2[r] = r2;
+        }
+    }
+
+    (0..nrhs)
+        .map(|r| SolveReport {
+            a: std::mem::take(&mut a[r]),
+            e: std::mem::take(&mut e[r]),
+            history: std::mem::take(&mut history[r]),
+            y_norm_sq: y_norm_sq[r],
+            sweeps: sweeps_done[r],
+            stop: done[r].unwrap_or(StopReason::MaxSweeps),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::solve_bak;
+    use crate::util::stats::rel_l2;
+
+    fn planted(seed: u64, obs: usize, vars: usize) -> (Mat, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::seed(seed);
+        let x = Mat::randn(&mut rng, obs, vars);
+        let a: Vec<f32> = (0..vars).map(|_| rng.normal_f32()).collect();
+        let y = x.matvec(&a);
+        (x, y, a)
+    }
+
+    #[test]
+    fn kaczmarz_converges_square() {
+        let (x, y, a_true) = planted(600, 80, 40);
+        let mut o = SolveOptions::default();
+        o.max_sweeps = 400;
+        o.tol = 1e-5;
+        let rep = solve_kaczmarz(&x, &y, &o);
+        assert!(rep.rel_residual() < 1e-3, "rel={}", rep.rel_residual());
+        assert!(rel_l2(&rep.a, &a_true) < 0.05);
+    }
+
+    #[test]
+    fn kaczmarz_history_monotone_ish() {
+        // RK is monotone in expectation; per-sweep (obs projections) it is
+        // strongly decreasing early on.
+        let (x, y, _) = planted(601, 100, 20);
+        let mut o = SolveOptions::default();
+        o.max_sweeps = 5;
+        o.tol = 0.0;
+        let rep = solve_kaczmarz(&x, &y, &o);
+        assert!(rep.history[rep.history.len() - 1] < rep.history[0]);
+    }
+
+    #[test]
+    fn gauss_southwell_beats_cyclic_per_sweep() {
+        // Greedy picks the best column each step -> at least as much
+        // per-sweep residual reduction as cyclic on the first sweep.
+        let (x, y, _) = planted(602, 120, 30);
+        let mut o = SolveOptions::default();
+        o.max_sweeps = 1;
+        o.tol = 0.0;
+        let gs = solve_gauss_southwell(&x, &y, &o);
+        let cyc = solve_bak(&x, &y, &o);
+        assert!(
+            gs.history[0] <= cyc.history[0] * 1.05,
+            "greedy {} vs cyclic {}",
+            gs.history[0],
+            cyc.history[0]
+        );
+    }
+
+    #[test]
+    fn gauss_southwell_converges() {
+        let (x, y, a_true) = planted(603, 200, 20);
+        let mut o = SolveOptions::accurate();
+        o.max_sweeps = 200;
+        let rep = solve_gauss_southwell(&x, &y, &o);
+        assert!(rep.rel_residual() < 1e-4);
+        assert!(rel_l2(&rep.a, &a_true) < 1e-2);
+    }
+
+    #[test]
+    fn damped_bakp_fixes_correlated_wide_block() {
+        // The §6 failure case: near-identical columns, full-width block.
+        let mut rng = Rng::seed(604);
+        let obs = 100;
+        let vars = 32;
+        let base: Vec<f32> = (0..obs).map(|_| rng.normal_f32()).collect();
+        let x = Mat::from_fn(obs, vars, |i, _| base[i] + 0.05 * rng.normal_f32());
+        let y: Vec<f32> = (0..obs).map(|_| rng.normal_f32()).collect();
+        let mut o = SolveOptions::default();
+        o.thr = vars; // one full-width stale block
+        o.max_sweeps = 200;
+        o.tol = 0.0;
+        let raw = crate::solver::solve_bakp(&x, &y, &o);
+        let damped = solve_bakp_damped(&x, &y, &o, 1.0 / vars as f32);
+        let r_raw = raw.history.last().copied().unwrap_or(f64::INFINITY);
+        let r_damped = damped.history.last().copied().unwrap();
+        assert!(
+            r_damped.is_finite() && (r_damped < r_raw || !r_raw.is_finite()),
+            "damped {r_damped} vs raw {r_raw}"
+        );
+        // Damped history must be monotone.
+        for w in damped.history.windows(2) {
+            assert!(w[1] <= w[0] * (1.0 + 1e-6), "damped non-monotone {w:?}");
+        }
+    }
+
+    #[test]
+    fn damped_with_factor_one_equals_bakp() {
+        let (x, y, _) = planted(605, 90, 18);
+        let mut o = SolveOptions::default();
+        o.thr = 6;
+        o.max_sweeps = 3;
+        o.tol = 0.0;
+        let a1 = solve_bakp_damped(&x, &y, &o, 1.0);
+        let a2 = crate::solver::solve_bakp(&x, &y, &o);
+        for (p, q) in a1.a.iter().zip(&a2.a) {
+            assert!((p - q).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn multi_rhs_matches_individual_solves() {
+        let (x, _, _) = planted(606, 150, 25);
+        let mut rng = Rng::seed(607);
+        let ys: Vec<Vec<f32>> = (0..3)
+            .map(|_| {
+                let a: Vec<f32> = (0..25).map(|_| rng.normal_f32()).collect();
+                x.matvec(&a)
+            })
+            .collect();
+        let mut o = SolveOptions::default();
+        o.max_sweeps = 50;
+        o.tol = 1e-6;
+        let multi = solve_bak_multi(&x, &ys, &o);
+        assert_eq!(multi.len(), 3);
+        for (r, y) in ys.iter().enumerate() {
+            let single = solve_bak(&x, y, &o);
+            assert!(
+                rel_l2(&multi[r].a, &single.a) < 1e-4,
+                "rhs {r}: {}",
+                rel_l2(&multi[r].a, &single.a)
+            );
+        }
+    }
+
+    #[test]
+    fn multi_rhs_independent_convergence() {
+        // An easy RHS (exact) and a hard one (noise): each stops on its
+        // own criterion.
+        let (x, y_easy, _) = planted(608, 200, 10);
+        let mut rng = Rng::seed(609);
+        let y_hard: Vec<f32> = (0..200).map(|_| rng.normal_f32()).collect();
+        let mut o = SolveOptions::default();
+        o.max_sweeps = 200;
+        o.tol = 1e-6;
+        let reps = solve_bak_multi(&x, &[y_easy, y_hard], &o);
+        assert_eq!(reps[0].stop, StopReason::Converged);
+        assert_eq!(reps[1].stop, StopReason::Stalled); // LS optimum, not 0
+        assert!(reps[0].rel_residual() < 1e-4);
+    }
+
+    #[test]
+    fn multi_rhs_empty_input() {
+        let (x, _, _) = planted(610, 20, 4);
+        let reps = solve_bak_multi(&x, &[], &SolveOptions::default());
+        assert!(reps.is_empty());
+    }
+}

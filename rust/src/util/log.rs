@@ -1,0 +1,108 @@
+//! Tiny leveled logger (the offline registry has `log` but no emitter;
+//! this is self-contained and used by the coordinator + benches).
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+/// Log severity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Process start, for relative timestamps.
+fn start() -> Instant {
+    static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+/// Set the global minimum level.
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Read the global minimum level.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Debug,
+        1 => Level::Info,
+        2 => Level::Warn,
+        _ => Level::Error,
+    }
+}
+
+/// Emit a record (used by the macros).
+pub fn emit(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if level < self::level() {
+        return;
+    }
+    let t = start().elapsed().as_secs_f64();
+    let tag = match level {
+        Level::Debug => "DEBUG",
+        Level::Info => "INFO ",
+        Level::Warn => "WARN ",
+        Level::Error => "ERROR",
+    };
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[{t:9.3}s {tag} {target}] {msg}");
+}
+
+/// Log at INFO.
+#[macro_export]
+macro_rules! info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::emit($crate::util::log::Level::Info, $target,
+                                format_args!($($arg)*))
+    };
+}
+
+/// Log at DEBUG.
+#[macro_export]
+macro_rules! debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::emit($crate::util::log::Level::Debug, $target,
+                                format_args!($($arg)*))
+    };
+}
+
+/// Log at WARN.
+#[macro_export]
+macro_rules! warn_ {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::emit($crate::util::log::Level::Warn, $target,
+                                format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_roundtrip() {
+        let orig = level();
+        set_level(Level::Debug);
+        assert_eq!(level(), Level::Debug);
+        set_level(Level::Error);
+        assert_eq!(level(), Level::Error);
+        set_level(orig);
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(Level::Debug < Level::Info);
+        assert!(Level::Info < Level::Warn);
+        assert!(Level::Warn < Level::Error);
+    }
+
+    #[test]
+    fn emit_does_not_panic() {
+        emit(Level::Error, "test", format_args!("hello {}", 1));
+    }
+}

@@ -1,0 +1,12 @@
+//! Infrastructure substrates built in-repo (the offline registry carries no
+//! rand/serde/criterion/clap): PRNG, robust timing statistics, an
+//! allocation-counting global allocator, a minimal JSON reader/writer, and
+//! a tiny logging facility.
+
+pub mod rng;
+pub mod stats;
+pub mod alloc;
+pub mod json;
+pub mod log;
+pub mod timer;
+pub mod prop;

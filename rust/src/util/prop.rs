@@ -1,0 +1,139 @@
+//! Minimal property-based testing support (no proptest offline).
+//!
+//! [`forall`] runs a check over many seeded random cases; on failure it
+//! greedily *shrinks* the failing case (halving each numeric field) and
+//! reports the smallest still-failing case, proptest-style.
+
+use super::rng::Rng;
+
+/// A test case that can present itself and shrink.
+pub trait Case: Clone + std::fmt::Debug {
+    /// Candidate smaller versions of this case (tried in order).
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+/// Run `check` on `n` random cases drawn by `gen`. Panics with the
+/// smallest failing case found.
+pub fn forall<C: Case>(
+    seed: u64,
+    n: usize,
+    mut gen: impl FnMut(&mut Rng) -> C,
+    mut check: impl FnMut(&C) -> Result<(), String>,
+) {
+    let mut rng = Rng::seed(seed);
+    for i in 0..n {
+        let case = gen(&mut rng);
+        if let Err(msg) = check(&case) {
+            // Shrink loop: first failing shrink candidate, repeat.
+            let mut smallest = case.clone();
+            let mut err = msg;
+            'outer: loop {
+                for cand in smallest.shrink() {
+                    if let Err(m) = check(&cand) {
+                        smallest = cand;
+                        err = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed on case {i}/{n}\n  original: {case:?}\n  shrunk:   {smallest:?}\n  error:    {err}"
+            );
+        }
+    }
+}
+
+/// A standard case shape for solver properties: random system dims + seed.
+#[derive(Clone, Debug)]
+pub struct DimCase {
+    pub obs: usize,
+    pub vars: usize,
+    pub seed: u64,
+}
+
+impl Case for DimCase {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.obs > 2 {
+            out.push(Self { obs: self.obs / 2, ..self.clone() });
+        }
+        if self.vars > 1 {
+            out.push(Self { vars: self.vars / 2, ..self.clone() });
+        }
+        if self.obs > 2 && self.vars > 1 {
+            out.push(Self { obs: self.obs / 2, vars: self.vars / 2, ..self.clone() });
+        }
+        out
+    }
+}
+
+impl DimCase {
+    /// Draw with obs in [2, max_obs], vars in [1, max_vars].
+    pub fn draw(rng: &mut Rng, max_obs: usize, max_vars: usize) -> Self {
+        Self {
+            obs: 2 + rng.below(max_obs.saturating_sub(1).max(1)),
+            vars: 1 + rng.below(max_vars.max(1)),
+            seed: rng.next_u64(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            1,
+            50,
+            |rng| DimCase::draw(rng, 100, 20),
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert!(count >= 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        forall(
+            2,
+            10,
+            |rng| DimCase::draw(rng, 100, 20),
+            |c| if c.obs >= 2 { Err("always".into()) } else { Ok(()) },
+        );
+    }
+
+    #[test]
+    fn shrink_reduces_dims() {
+        let c = DimCase { obs: 64, vars: 32, seed: 9 };
+        let shrunk = c.shrink();
+        assert!(shrunk.iter().any(|s| s.obs == 32));
+        assert!(shrunk.iter().any(|s| s.vars == 16));
+    }
+
+    #[test]
+    fn shrink_bottoms_out() {
+        let c = DimCase { obs: 2, vars: 1, seed: 0 };
+        assert!(c.shrink().is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn shrinking_finds_smaller_case() {
+        // Fails whenever vars >= 4; shrinker should land near vars=4.
+        forall(
+            3,
+            20,
+            |rng| DimCase::draw(rng, 50, 64),
+            |c| if c.vars >= 4 { Err(format!("vars={}", c.vars)) } else { Ok(()) },
+        );
+    }
+}

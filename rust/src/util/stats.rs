@@ -1,0 +1,162 @@
+//! Robust summary statistics for benchmark samples.
+//!
+//! Mirrors what Julia's BenchmarkTools (`@btime`) reports — the paper's
+//! timings are minimum-over-samples — plus median/MAD/mean/stddev and the
+//! MAPE accuracy metric of Table 1.
+
+/// Summary of a set of samples (times in seconds, or any positive metric).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub median: f64,
+    /// Median absolute deviation (robust spread).
+    pub mad: f64,
+    pub stddev: f64,
+}
+
+impl Summary {
+    /// Compute a summary; panics on empty input.
+    pub fn of(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty(), "Summary::of on empty sample set");
+        let n = samples.len();
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+        let min = sorted[0];
+        let max = sorted[n - 1];
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let median = percentile_sorted(&sorted, 50.0);
+        let mut devs: Vec<f64> = sorted.iter().map(|x| (x - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = percentile_sorted(&devs, 50.0);
+        let var = if n > 1 {
+            sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        Summary { n, min, max, mean, median, mad, stddev: var.sqrt() }
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted slice. p in [0,100].
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Mean Absolute Percentage Error between a solution and the truth —
+/// the "Accuracy (MAPE)" column of Table 1. Entries where |truth| < eps
+/// are skipped (percentage error undefined at 0).
+pub fn mape(estimate: &[f32], truth: &[f32]) -> f64 {
+    assert_eq!(estimate.len(), truth.len());
+    let eps = 1e-12f32;
+    let mut sum = 0.0f64;
+    let mut cnt = 0usize;
+    for (&a, &t) in estimate.iter().zip(truth) {
+        if t.abs() > eps {
+            sum += ((a - t) / t).abs() as f64;
+            cnt += 1;
+        }
+    }
+    if cnt == 0 { 0.0 } else { sum / cnt as f64 }
+}
+
+/// Relative L2 error ||a - t|| / ||t||.
+pub fn rel_l2(estimate: &[f32], truth: &[f32]) -> f64 {
+    assert_eq!(estimate.len(), truth.len());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&a, &t) in estimate.iter().zip(truth) {
+        num += ((a - t) as f64).powi(2);
+        den += (t as f64).powi(2);
+    }
+    if den == 0.0 { num.sqrt() } else { (num / den).sqrt() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(s.median, 2.0);
+    }
+
+    #[test]
+    fn summary_single_sample() {
+        let s = Summary::of(&[5.0]);
+        assert_eq!(s.min, 5.0);
+        assert_eq!(s.median, 5.0);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.mad, 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn summary_empty_panics() {
+        let _ = Summary::of(&[]);
+    }
+
+    #[test]
+    fn median_even_count_interpolates() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((s.median - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_endpoints() {
+        let v = [1.0, 2.0, 3.0, 10.0];
+        assert_eq!(percentile_sorted(&v, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&v, 100.0), 10.0);
+    }
+
+    #[test]
+    fn mad_robust_to_outlier() {
+        let s = Summary::of(&[1.0, 1.1, 0.9, 1.0, 100.0]);
+        assert!(s.mad < 0.2, "mad={}", s.mad);
+        assert!(s.stddev > 10.0);
+    }
+
+    #[test]
+    fn mape_exact_is_zero() {
+        let v = [1.0f32, -2.0, 3.0];
+        assert_eq!(mape(&v, &v), 0.0);
+    }
+
+    #[test]
+    fn mape_known_value() {
+        // estimate 1.1 vs truth 1.0 -> 10% each.
+        let e = [1.1f32, 2.2];
+        let t = [1.0f32, 2.0];
+        assert!((mape(&e, &t) - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mape_skips_zero_truth() {
+        let e = [5.0f32, 1.1];
+        let t = [0.0f32, 1.0];
+        assert!((mape(&e, &t) - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rel_l2_basics() {
+        let t = [3.0f32, 4.0];
+        assert_eq!(rel_l2(&t, &t), 0.0);
+        let e = [3.0f32, 4.0 + 5.0];
+        assert!((rel_l2(&e, &t) - 1.0).abs() < 1e-6); // ||(0,5)||/||(3,4)|| = 1
+    }
+}

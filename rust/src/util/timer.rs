@@ -1,0 +1,134 @@
+//! Benchmark timing: warmup + multi-sample measurement loops in the style
+//! of Julia BenchmarkTools (`@btime`), which the paper uses.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Configuration for a measurement loop.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Warmup runs (not recorded).
+    pub warmup: usize,
+    /// Recorded samples.
+    pub samples: usize,
+    /// Stop early once this much total time has been spent measuring.
+    pub max_total: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: 1,
+            samples: 10, // the paper runs each method ten times
+            max_total: Duration::from_secs(60),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Quick configuration for CI / smoke runs.
+    pub fn quick() -> Self {
+        Self { warmup: 1, samples: 3, max_total: Duration::from_secs(10) }
+    }
+}
+
+/// Time a closure once, returning seconds.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Run the warmup + sampling loop; returns per-sample seconds.
+pub fn sample(cfg: &BenchConfig, mut f: impl FnMut()) -> Vec<f64> {
+    for _ in 0..cfg.warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(cfg.samples);
+    let start = Instant::now();
+    for _ in 0..cfg.samples {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64());
+        if start.elapsed() > cfg.max_total && !out.is_empty() {
+            break;
+        }
+    }
+    out
+}
+
+/// Sample and summarize in one call.
+pub fn bench(cfg: &BenchConfig, f: impl FnMut()) -> Summary {
+    Summary::of(&sample(cfg, f))
+}
+
+/// Pretty seconds: 1.23 s / 45.6 ms / 789 us.
+pub fn fmt_seconds(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.1} us", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_once_returns_output_and_positive_time() {
+        let (v, t) = time_once(|| (0..1000).sum::<u64>());
+        assert_eq!(v, 499_500);
+        assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn sample_count_respected() {
+        let cfg = BenchConfig { warmup: 0, samples: 5, max_total: Duration::from_secs(10) };
+        let s = sample(&cfg, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.len(), 5);
+    }
+
+    #[test]
+    fn warmup_runs_happen() {
+        let mut calls = 0;
+        let cfg = BenchConfig { warmup: 2, samples: 3, max_total: Duration::from_secs(10) };
+        let _ = sample(&cfg, || calls += 1);
+        assert_eq!(calls, 5);
+    }
+
+    #[test]
+    fn max_total_stops_early() {
+        let cfg = BenchConfig {
+            warmup: 0,
+            samples: 1000,
+            max_total: Duration::from_millis(50),
+        };
+        let s = sample(&cfg, || std::thread::sleep(Duration::from_millis(20)));
+        assert!(s.len() < 1000, "stopped after {} samples", s.len());
+        assert!(!s.is_empty());
+    }
+
+    #[test]
+    fn fmt_seconds_units() {
+        assert!(fmt_seconds(2.5).ends_with(" s"));
+        assert!(fmt_seconds(0.0025).ends_with(" ms"));
+        assert!(fmt_seconds(2.5e-6).ends_with(" us"));
+        assert!(fmt_seconds(2.5e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn bench_summary_sane() {
+        let s = bench(&BenchConfig::quick(), || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(s.min <= s.median && s.median <= s.max);
+    }
+}

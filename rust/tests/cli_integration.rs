@@ -1,0 +1,84 @@
+//! CLI integration: drive the `solvebak` subcommands through the library
+//! entry point (no subprocess spawning — same code path as main()).
+
+use solvebak::cli::run;
+
+fn sv(v: &[&str]) -> Vec<String> {
+    v.iter().map(|s| s.to_string()).collect()
+}
+
+#[test]
+fn help_exits_zero() {
+    assert_eq!(run(sv(&["help"])), 0);
+    assert_eq!(run(sv(&[])), 0); // no args -> help
+}
+
+#[test]
+fn solve_bak_small() {
+    assert_eq!(
+        run(sv(&["solve", "--obs", "400", "--vars", "20", "--backend", "bak", "--seed", "7"])),
+        0
+    );
+}
+
+#[test]
+fn solve_bakp_threaded() {
+    assert_eq!(
+        run(sv(&[
+            "solve", "--obs", "500", "--vars", "40", "--backend", "bakp",
+            "--thr", "8", "--threads", "2",
+        ])),
+        0
+    );
+}
+
+#[test]
+fn solve_qr_square() {
+    assert_eq!(
+        run(sv(&["solve", "--obs", "60", "--vars", "60", "--backend", "qr"])),
+        0
+    );
+}
+
+#[test]
+fn solve_scientific_notation_dims() {
+    assert_eq!(
+        run(sv(&["solve", "--obs", "1e3", "--vars", "50", "--backend", "bak"])),
+        0
+    );
+}
+
+#[test]
+fn features_recovers() {
+    assert_eq!(
+        run(sv(&["features", "--obs", "500", "--vars", "30", "--max-feat", "4"])),
+        0
+    );
+}
+
+#[test]
+fn serve_small_load() {
+    assert_eq!(
+        run(sv(&[
+            "serve", "--requests", "8", "--workers", "2", "--obs", "300",
+            "--vars", "20", "--backend", "bak",
+        ])),
+        0
+    );
+}
+
+#[test]
+fn info_runs_with_or_without_artifacts() {
+    assert_eq!(run(sv(&["info"])), 0);
+    assert_eq!(run(sv(&["info", "--artifacts", "/nonexistent"])), 0);
+}
+
+#[test]
+fn unknown_command_exit_code() {
+    assert_eq!(run(sv(&["bogus"])), 2);
+}
+
+#[test]
+fn bad_option_value_exit_code() {
+    assert_eq!(run(sv(&["solve", "--obs", "NaNny"])), 2);
+}

@@ -1,0 +1,187 @@
+//! Coordinator integration: concurrency, batching, backpressure, metrics —
+//! the service-level behaviour under load.
+
+use std::sync::Arc;
+
+use solvebak::coordinator::{
+    Backend, Coordinator, CoordinatorConfig, SolveRequest,
+};
+use solvebak::coordinator::batch::BatchPolicy;
+use solvebak::linalg::Mat;
+use solvebak::solver::SolveOptions;
+use solvebak::util::rng::Rng;
+use solvebak::util::stats::rel_l2;
+
+fn planted_rhs(x: &Mat, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::seed(seed);
+    let a: Vec<f32> = (0..x.cols()).map(|_| rng.normal_f32()).collect();
+    (x.matvec(&a), a)
+}
+
+#[test]
+fn many_concurrent_clients_all_served_correctly() {
+    let coord = Arc::new(Coordinator::start(CoordinatorConfig {
+        workers: 4,
+        ..CoordinatorConfig::default()
+    }));
+    let mut rng = Rng::seed(900);
+    let x = Arc::new(Mat::randn(&mut rng, 400, 24));
+
+    let handles: Vec<_> = (0..16u64)
+        .map(|i| {
+            let coord = coord.clone();
+            let x = x.clone();
+            std::thread::spawn(move || {
+                let (y, a_true) = planted_rhs(&x, 1000 + i);
+                let mut req = SolveRequest::new(i, x.clone(), y);
+                req.backend = Backend::Bak;
+                req.opts = SolveOptions::accurate();
+                let out = coord.solve_blocking(req);
+                let rep = out.report.expect("solve ok");
+                assert_eq!(out.id, i);
+                assert!(rel_l2(&rep.a, &a_true) < 1e-3, "client {i}");
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = coord.metrics();
+    assert_eq!(
+        m.requests_completed.load(std::sync::atomic::Ordering::Relaxed),
+        16
+    );
+    assert_eq!(m.requests_failed.load(std::sync::atomic::Ordering::Relaxed), 0);
+}
+
+#[test]
+fn batching_coalesces_under_burst() {
+    // One worker + a burst of same-matrix requests: the scheduler's
+    // drain-window must coalesce at least some of them.
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        batch: BatchPolicy { max_batch: 64 },
+        ..CoordinatorConfig::default()
+    });
+    let mut rng = Rng::seed(901);
+    let x = Arc::new(Mat::randn(&mut rng, 600, 40));
+    let rxs: Vec<_> = (0..24u64)
+        .map(|i| {
+            let (y, _) = planted_rhs(&x, 2000 + i);
+            let mut req = SolveRequest::new(i, x.clone(), y);
+            req.backend = Backend::Qr; // QR batches share one factorization
+            coord.submit(req).unwrap()
+        })
+        .collect();
+    let mut max_batch = 0;
+    for rx in rxs {
+        let out = rx.recv().unwrap();
+        assert!(out.report.is_ok());
+        max_batch = max_batch.max(out.batch_size);
+    }
+    assert!(
+        max_batch >= 2,
+        "burst of 24 same-matrix requests never batched (max={max_batch})"
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn try_submit_backpressure_rejects_when_full() {
+    // Tiny queue + slow jobs: try_submit must eventually reject.
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        queue_capacity: 1,
+        ..CoordinatorConfig::default()
+    });
+    let mut rng = Rng::seed(902);
+    let x = Arc::new(Mat::randn(&mut rng, 2000, 200));
+    let mut rejected = 0;
+    let mut rxs = Vec::new();
+    for i in 0..50u64 {
+        let (y, _) = planted_rhs(&x, 3000 + i);
+        let mut req = SolveRequest::new(i, x.clone(), y);
+        req.backend = Backend::Bak;
+        req.opts.max_sweeps = 50;
+        match coord.try_submit(req) {
+            Ok(rx) => rxs.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    assert!(rejected > 0, "queue_capacity=1 must reject under a 50-burst");
+    assert_eq!(
+        coord.metrics().queue_rejections.load(std::sync::atomic::Ordering::Relaxed),
+        rejected
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn mixed_backends_in_one_burst() {
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 3,
+        ..CoordinatorConfig::default()
+    });
+    let mut rng = Rng::seed(903);
+    let x = Arc::new(Mat::randn(&mut rng, 300, 20));
+    let backends = [Backend::Bak, Backend::Bakp, Backend::Qr, Backend::Auto];
+    let rxs: Vec<_> = (0..12u64)
+        .map(|i| {
+            let (y, a) = planted_rhs(&x, 4000 + i);
+            let mut req = SolveRequest::new(i, x.clone(), y);
+            req.backend = backends[i as usize % backends.len()];
+            req.opts = SolveOptions::accurate();
+            (a, coord.submit(req).unwrap())
+        })
+        .collect();
+    for (a_true, rx) in rxs {
+        let out = rx.recv().unwrap();
+        let rep = out.report.expect("solve ok");
+        assert!(rel_l2(&rep.a, &a_true) < 1e-2);
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn wide_system_requests_served() {
+    let coord = Coordinator::start(CoordinatorConfig::default());
+    let mut rng = Rng::seed(904);
+    let x = Arc::new(Mat::randn(&mut rng, 30, 200)); // wide
+    let y: Vec<f32> = (0..30).map(|_| rng.normal_f32()).collect();
+    let mut req = SolveRequest::new(1, x.clone(), y.clone());
+    req.backend = Backend::Qr; // min-norm path
+    let out = coord.solve_blocking(req);
+    let rep = out.report.expect("wide qr ok");
+    // Wide systems interpolate.
+    let e = solvebak::linalg::residual(&x, &y, &rep.a);
+    assert!(solvebak::linalg::blas1::nrm2(&e) < 1e-3);
+    coord.shutdown();
+}
+
+#[test]
+fn queue_wait_metric_recorded() {
+    let coord = Coordinator::start(CoordinatorConfig::default());
+    let mut rng = Rng::seed(905);
+    let x = Arc::new(Mat::randn(&mut rng, 100, 10));
+    let (y, _) = planted_rhs(&x, 5000);
+    let _ = coord.solve_blocking(SolveRequest::new(1, x, y));
+    assert!(coord.metrics().queue_wait.count() >= 1);
+    let j = coord.metrics().to_json();
+    assert!(j.get("jobs_run").unwrap().as_f64().unwrap() >= 1.0);
+    coord.shutdown();
+}
+
+#[test]
+fn drop_without_shutdown_is_clean() {
+    let mut rng = Rng::seed(906);
+    let x = Arc::new(Mat::randn(&mut rng, 50, 5));
+    let (y, _) = planted_rhs(&x, 6000);
+    {
+        let coord = Coordinator::start(CoordinatorConfig::default());
+        let _ = coord.solve_blocking(SolveRequest::new(1, x, y));
+        // coord dropped here; Drop impl joins all threads.
+    }
+}

@@ -1,0 +1,231 @@
+//! Integration: the full L1->L2->L3 path.
+//!
+//! These tests load the REAL artifacts produced by `make artifacts`
+//! (python/compile/aot.py) into the PJRT engine and check that the
+//! AOT-compiled sweeps agree with the native Rust solvers — the
+//! cross-layer correctness contract of the whole system.
+//!
+//! Skipped (cleanly) when `artifacts/manifest.json` is missing so that
+//! `cargo test` works before `make artifacts`; CI runs `make test` which
+//! builds artifacts first.
+
+use solvebak::linalg::{blas1, Mat};
+use solvebak::runtime::{ArtifactKind, Engine};
+use solvebak::solver::{self, SolveOptions};
+use solvebak::util::rng::Rng;
+use solvebak::util::stats::rel_l2;
+
+fn artifact_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifact_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: no artifacts (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+fn planted(seed: u64, obs: usize, vars: usize) -> (Mat, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::seed(seed);
+    let x = Mat::randn(&mut rng, obs, vars);
+    let a: Vec<f32> = (0..vars).map(|_| rng.normal_f32()).collect();
+    let y = x.matvec(&a);
+    (x, y, a)
+}
+
+#[test]
+fn engine_loads_and_warms_up() {
+    let dir = require_artifacts!();
+    let eng = Engine::new(&dir).expect("engine");
+    assert!(eng.platform().to_lowercase().contains("cpu"));
+    let n = eng.warmup().expect("warmup compiles every artifact");
+    assert!(n >= 4, "expected the full artifact menu, got {n}");
+}
+
+#[test]
+fn pjrt_colnorms_matches_native() {
+    let dir = require_artifacts!();
+    let eng = Engine::new(&dir).expect("engine");
+    let (x, _, _) = planted(1, 200, 50);
+    let got = eng.colnorms_inv_pjrt(&x).expect("pjrt colnorms");
+    let want = solver::colnorms_inv(&x);
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - w).abs() < 1e-4 * (1.0 + w.abs()), "{g} vs {w}");
+    }
+}
+
+#[test]
+fn pjrt_bakp_sweep_matches_native_solver() {
+    let dir = require_artifacts!();
+    let eng = Engine::new(&dir).expect("engine");
+    // Exact bucket shape: 256x64, artifact thr=32.
+    let (x, y, _) = planted(2, 256, 64);
+    let mut opts = SolveOptions::default();
+    opts.max_sweeps = 1;
+    opts.tol = 0.0;
+    opts.thr = 32; // must match the artifact's baked width
+    let pjrt = eng.solve(&x, &y, &opts, ArtifactKind::BakpSweep).expect("pjrt solve");
+    let native = solver::solve_bakp(&x, &y, &opts);
+    // One sweep, same block width, same stale-error semantics -> same a.
+    assert!(
+        rel_l2(&pjrt.report.a, &native.a) < 1e-3,
+        "one-sweep mismatch: {}",
+        rel_l2(&pjrt.report.a, &native.a)
+    );
+    assert_eq!(pjrt.artifact, "bakp_sweep_256x64");
+    assert!(pjrt.pad_overhead.abs() < 1e-12, "exact-fit has no padding");
+}
+
+#[test]
+fn pjrt_full_solve_converges_to_truth() {
+    let dir = require_artifacts!();
+    let eng = Engine::new(&dir).expect("engine");
+    let (x, y, a_true) = planted(3, 256, 64);
+    let mut opts = SolveOptions::default();
+    opts.max_sweeps = 300;
+    opts.tol = 1e-6;
+    let out = eng.solve(&x, &y, &opts, ArtifactKind::BakpSweep).expect("pjrt solve");
+    assert!(out.report.converged() || out.report.rel_residual() < 1e-4,
+            "stop={:?} rel={}", out.report.stop, out.report.rel_residual());
+    assert!(rel_l2(&out.report.a, &a_true) < 1e-2,
+            "coef err {}", rel_l2(&out.report.a, &a_true));
+}
+
+#[test]
+fn pjrt_routes_smaller_problem_with_padding() {
+    let dir = require_artifacts!();
+    let eng = Engine::new(&dir).expect("engine");
+    // 200x40 fits in the 256x64 bucket with zero padding. (Tall enough
+    // that the artifact's baked thr=32 stale blocks still converge — the
+    // paper's §6 caveat; see the thr-sweep ablation bench.)
+    let (x, y, a_true) = planted(4, 200, 40);
+    let mut opts = SolveOptions::default();
+    opts.max_sweeps = 400;
+    opts.tol = 1e-6;
+    let out = eng.solve(&x, &y, &opts, ArtifactKind::BakpSweep).expect("pjrt solve");
+    assert_eq!(out.artifact, "bakp_sweep_256x64");
+    assert!(out.pad_overhead > 0.0);
+    assert_eq!(out.report.a.len(), 40, "solution truncated to true vars");
+    assert!(rel_l2(&out.report.a, &a_true) < 1e-2,
+            "padded solve err {}", rel_l2(&out.report.a, &a_true));
+}
+
+#[test]
+fn pjrt_sequential_bak_sweep_artifact_matches_native_bak() {
+    let dir = require_artifacts!();
+    let eng = Engine::new(&dir).expect("engine");
+    let (x, y, _) = planted(5, 256, 64);
+    let mut opts = SolveOptions::default();
+    opts.max_sweeps = 1;
+    opts.tol = 0.0;
+    let pjrt = eng.solve(&x, &y, &opts, ArtifactKind::BakSweep).expect("pjrt bak");
+    let native = solver::solve_bak(&x, &y, &opts);
+    assert!(
+        rel_l2(&pjrt.report.a, &native.a) < 1e-3,
+        "sequential sweep mismatch: {}",
+        rel_l2(&pjrt.report.a, &native.a)
+    );
+}
+
+#[test]
+fn pjrt_feature_scores_match_native_scoring() {
+    let dir = require_artifacts!();
+    let eng = Engine::new(&dir).expect("engine");
+    let (x, y, _) = planted(6, 256, 64);
+    let scores = eng.feature_scores(&x, &y).expect("pjrt scores");
+    // Native: <x_j,e>^2 / <x_j,x_j>.
+    let g = x.matvec_t(&y);
+    let cninv = solver::colnorms_inv(&x);
+    for j in 0..64 {
+        let want = g[j] * g[j] * cninv[j];
+        assert!(
+            (scores[j] - want).abs() < 1e-2 * (1.0 + want.abs()),
+            "score[{j}] {} vs {}",
+            scores[j],
+            want
+        );
+    }
+}
+
+#[test]
+fn pjrt_history_monotone() {
+    let dir = require_artifacts!();
+    let eng = Engine::new(&dir).expect("engine");
+    let mut rng = Rng::seed(7);
+    let x = Mat::randn(&mut rng, 256, 64);
+    let y: Vec<f32> = (0..256).map(|_| rng.normal_f32()).collect(); // inconsistent
+    let mut opts = SolveOptions::default();
+    opts.max_sweeps = 20;
+    opts.tol = 0.0;
+    let out = eng.solve(&x, &y, &opts, ArtifactKind::BakpSweep).expect("solve");
+    for w in out.report.history.windows(2) {
+        assert!(w[1] <= w[0] * (1.0 + 1e-5), "Theorem 1 via PJRT: {w:?}");
+    }
+}
+
+#[test]
+fn pjrt_rejects_oversized_problem() {
+    let dir = require_artifacts!();
+    let eng = Engine::new(&dir).expect("engine");
+    let (x, y, _) = planted(8, 16, 2048); // vars beyond any bucket
+    let err = eng
+        .solve(&x, &y, &SolveOptions::default(), ArtifactKind::BakpSweep)
+        .unwrap_err();
+    assert!(err.to_string().contains("no bakp_sweep artifact"), "{err}");
+}
+
+#[test]
+fn coordinator_pjrt_backend_end_to_end() {
+    let dir = require_artifacts!();
+    use solvebak::coordinator::{Backend, Coordinator, CoordinatorConfig, SolveRequest};
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 2,
+        artifact_dir: Some(dir),
+        ..CoordinatorConfig::default()
+    });
+    assert!(coord.engine().is_some(), "engine must load");
+    let (x, y, a_true) = planted(9, 256, 64);
+    let mut req = SolveRequest::new(77, std::sync::Arc::new(x), y);
+    req.backend = Backend::Pjrt;
+    req.opts.max_sweeps = 300;
+    let out = coord.solve_blocking(req);
+    assert_eq!(out.id, 77);
+    assert_eq!(out.backend, Backend::Pjrt);
+    let rep = out.report.expect("pjrt solve via coordinator");
+    assert!(rel_l2(&rep.a, &a_true) < 1e-2);
+    coord.shutdown();
+}
+
+#[test]
+fn pjrt_residual_tracks_native_residual_over_sweeps() {
+    let dir = require_artifacts!();
+    let eng = Engine::new(&dir).expect("engine");
+    let (x, y, _) = planted(10, 256, 64);
+    let mut opts = SolveOptions::default();
+    opts.max_sweeps = 5;
+    opts.tol = 0.0;
+    opts.thr = 32;
+    let pjrt = eng.solve(&x, &y, &opts, ArtifactKind::BakpSweep).expect("solve");
+    let native = solver::solve_bakp(&x, &y, &opts);
+    assert_eq!(pjrt.report.history.len(), native.history.len());
+    for (p, n) in pjrt.report.history.iter().zip(&native.history) {
+        let denom = 1.0 + n.abs();
+        assert!(((p - n) / denom).abs() < 1e-2, "history diverged: {p} vs {n}");
+    }
+    // And the final residual vector itself agrees with e = y - Xa.
+    let fresh = solvebak::linalg::residual(&x, &y, &pjrt.report.a);
+    let diff: f64 = fresh
+        .iter()
+        .zip(&pjrt.report.e)
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt();
+    assert!(diff < 1e-2 * (1.0 + blas1::nrm2(&fresh) as f64));
+}

@@ -1,0 +1,261 @@
+//! Property-based tests over the solver family's invariants
+//! (in-repo `util::prop` framework; see DESIGN.md).
+//!
+//! The properties are the paper's claims, stated over RANDOM systems:
+//!  P1. Theorem 1: a SolveBak sweep never increases the squared residual.
+//!  P2. After the column-j step, the residual is orthogonal to x_j.
+//!  P3. The exit invariant e == y - X a holds for every solver.
+//!  P4. Consistent systems are solved to (near) machine accuracy.
+//!  P5. thr=1 BAKP is exactly BAK.
+//!  P6. SolveBakF never selects a feature twice and never increases the
+//!      residual with an added feature.
+//!  P7. Zero columns are never touched.
+//!  P8. BAK solutions of tall systems match QR least squares.
+
+use solvebak::baselines::qr::lstsq_qr;
+use solvebak::linalg::{blas1, residual, Mat};
+use solvebak::solver::{self, BakfOptions, SolveOptions};
+use solvebak::util::prop::{forall, DimCase};
+use solvebak::util::rng::Rng;
+use solvebak::util::stats::rel_l2;
+
+fn system(c: &DimCase, noise: f32) -> (Mat, Vec<f32>) {
+    let mut rng = Rng::seed(c.seed);
+    let x = Mat::randn(&mut rng, c.obs, c.vars);
+    let mut y: Vec<f32> = if noise < 0.0 {
+        // Pure-noise (inconsistent) target.
+        (0..c.obs).map(|_| rng.normal_f32()).collect()
+    } else {
+        let a: Vec<f32> = (0..c.vars).map(|_| rng.normal_f32()).collect();
+        x.matvec(&a)
+    };
+    if noise > 0.0 {
+        for v in y.iter_mut() {
+            *v += noise * rng.normal_f32();
+        }
+    }
+    (x, y)
+}
+
+#[test]
+fn p1_sweep_monotone_residual() {
+    forall(
+        101,
+        60,
+        |rng| DimCase::draw(rng, 120, 40),
+        |c| {
+            let (x, y) = system(c, -1.0);
+            let mut o = SolveOptions::default();
+            o.tol = 0.0;
+            o.max_sweeps = 8;
+            let rep = solver::solve_bak(&x, &y, &o);
+            let r0 = blas1::sum_sq_f64(&y);
+            let mut prev = r0;
+            for (k, &r) in rep.history.iter().enumerate() {
+                if r > prev * (1.0 + 1e-6) + 1e-9 {
+                    return Err(format!("sweep {k}: {r} > {prev}"));
+                }
+                prev = r;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn p2_column_step_orthogonalizes() {
+    forall(
+        102,
+        60,
+        |rng| DimCase::draw(rng, 100, 20),
+        |c| {
+            let (x, y) = system(c, -1.0);
+            let j = c.seed as usize % c.vars;
+            let nrm = blas1::nrm2_sq(x.col(j));
+            if nrm == 0.0 {
+                return Ok(());
+            }
+            let mut e = y.clone();
+            blas1::cd_step(x.col(j), &mut e, 1.0 / nrm);
+            let d = blas1::dot(x.col(j), &e).abs();
+            let scale = blas1::nrm2(x.col(j)) * blas1::nrm2(&e) + 1e-6;
+            if d / scale > 1e-4 {
+                return Err(format!("<x_j,e'> = {d} (scale {scale})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn p3_exit_invariant_all_solvers() {
+    forall(
+        103,
+        40,
+        |rng| DimCase::draw(rng, 100, 24),
+        |c| {
+            let (x, y) = system(c, 0.2);
+            let mut o = SolveOptions::default();
+            o.max_sweeps = 20;
+            o.thr = (c.vars / 4).max(1);
+            for (name, rep) in [
+                ("bak", solver::solve_bak(&x, &y, &o)),
+                ("bakp", solver::solve_bakp(&x, &y, &o)),
+            ] {
+                let fresh = residual(&x, &y, &rep.a);
+                let num: f64 = fresh
+                    .iter()
+                    .zip(&rep.e)
+                    .map(|(a, b)| ((a - b) as f64).powi(2))
+                    .sum::<f64>()
+                    .sqrt();
+                let den = 1.0 + blas1::nrm2(&fresh) as f64;
+                if num / den > 1e-3 {
+                    return Err(format!("{name}: e drifted from y-Xa by {num}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn p4_consistent_systems_solved() {
+    forall(
+        104,
+        25,
+        |rng| {
+            // Tall systems (the paper's winning regime).
+            let mut c = DimCase::draw(rng, 300, 24);
+            c.obs = c.obs.max(c.vars * 4);
+            c
+        },
+        |c| {
+            let (x, y) = system(c, 0.0);
+            let rep = solver::solve_bak(&x, &y, &SolveOptions::accurate());
+            if rep.rel_residual() > 1e-4 {
+                return Err(format!("rel residual {}", rep.rel_residual()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn p5_thr_one_equals_bak() {
+    forall(
+        105,
+        30,
+        |rng| DimCase::draw(rng, 80, 16),
+        |c| {
+            let (x, y) = system(c, 0.3);
+            let mut o = SolveOptions::default();
+            o.thr = 1;
+            o.max_sweeps = 4;
+            o.tol = 0.0;
+            let rp = solver::solve_bakp(&x, &y, &o);
+            let rs = solver::solve_bak(&x, &y, &o);
+            for (k, (p, s)) in rp.a.iter().zip(&rs.a).enumerate() {
+                if (p - s).abs() > 1e-5 * (1.0 + s.abs()) {
+                    return Err(format!("a[{k}]: {p} vs {s}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn p6_feature_selection_invariants() {
+    forall(
+        106,
+        25,
+        |rng| {
+            let mut c = DimCase::draw(rng, 150, 20);
+            c.obs = c.obs.max(40);
+            c.vars = c.vars.max(4);
+            c
+        },
+        |c| {
+            let (x, y) = system(c, 0.5);
+            let k = (c.vars / 2).max(2);
+            let rep = solver::select_features_bakf(
+                &x,
+                &y,
+                &BakfOptions { max_feat: k, ..Default::default() },
+            );
+            let mut seen = std::collections::HashSet::new();
+            for &j in &rep.selected {
+                if !seen.insert(j) {
+                    return Err(format!("feature {j} selected twice"));
+                }
+                if j >= c.vars {
+                    return Err(format!("feature {j} out of range"));
+                }
+            }
+            for (i, w) in rep.history.windows(2).enumerate() {
+                if w[1] > w[0] * (1.0 + 1e-6) + 1e-9 {
+                    return Err(format!("round {}: residual rose {} -> {}", i + 1, w[0], w[1]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn p7_zero_columns_untouched() {
+    forall(
+        107,
+        30,
+        |rng| DimCase::draw(rng, 60, 12),
+        |c| {
+            let mut rng = Rng::seed(c.seed);
+            let mut x = Mat::randn(&mut rng, c.obs, c.vars);
+            let dead = c.seed as usize % c.vars;
+            x.col_mut(dead).fill(0.0);
+            let y: Vec<f32> = (0..c.obs).map(|_| rng.normal_f32()).collect();
+            let mut o = SolveOptions::default();
+            o.max_sweeps = 10;
+            let rep = solver::solve_bak(&x, &y, &o);
+            if rep.a[dead] != 0.0 {
+                return Err(format!("a[{dead}] = {} for zero column", rep.a[dead]));
+            }
+            let repp = solver::solve_bakp(&x, &y, &o);
+            if repp.a[dead] != 0.0 {
+                return Err(format!("bakp a[{dead}] = {}", repp.a[dead]));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn p8_tall_matches_qr_least_squares() {
+    forall(
+        108,
+        20,
+        |rng| {
+            let mut c = DimCase::draw(rng, 200, 12);
+            c.obs = c.obs.max(c.vars * 8 + 8); // strongly tall
+            c
+        },
+        |c| {
+            let (x, y) = system(c, 0.5);
+            let mut o = SolveOptions::default();
+            o.max_sweeps = 4000;
+            o.tol = 0.0; // run to stall (LS optimum)
+            o.check_every = 10;
+            let rep = solver::solve_bak(&x, &y, &o);
+            let a_qr = match lstsq_qr(&x, &y) {
+                Ok(a) => a,
+                Err(_) => return Ok(()), // rank-deficient draw: skip
+            };
+            let err = rel_l2(&rep.a, &a_qr);
+            if err > 2e-2 {
+                return Err(format!("CD vs QR coefficient gap {err}"));
+            }
+            Ok(())
+        },
+    );
+}
