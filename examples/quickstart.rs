@@ -1,12 +1,13 @@
-//! Quickstart: solve one tall dense system three ways and compare.
+//! Quickstart: the `Problem`/`Solver` API — validate one system, then run
+//! it through several registered solvers and compare.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use solvebak::baselines::qr::lstsq_qr;
+use solvebak::api::{registry, solver_for, Problem, SolverKind};
 use solvebak::linalg::Mat;
-use solvebak::solver::{solve_bak, solve_bakp, SolveOptions};
+use solvebak::solver::SolveOptions;
 use solvebak::util::rng::Rng;
 use solvebak::util::stats::{mape, rel_l2};
 use solvebak::util::timer::{fmt_seconds, time_once};
@@ -20,35 +21,56 @@ fn main() {
     let y = x.matvec(&a_true);
     println!("system: {obs} x {vars} (tall, consistent), f32");
 
-    // 1. The paper's Algorithm 1.
-    let opts = SolveOptions::accurate();
-    let (rep, secs) = time_once(|| solve_bak(&x, &y, &opts));
+    // One validated problem, many solvers: shape/NaN checks happen once,
+    // every backend sees the same clean inputs.
+    let problem = Problem::new(&x, &y).expect("valid problem");
+    let opts = SolveOptions::builder()
+        .max_sweeps(1000)
+        .tol(1e-6)
+        .thr(50)
+        .threads(solvebak::linalg::blas2::num_threads())
+        .build();
+
+    let mut bak = None;
+    let mut qr = None;
+    for kind in [SolverKind::Bak, SolverKind::Bakp, SolverKind::Cgls, SolverKind::Qr] {
+        let solver = solver_for(kind).expect("registered");
+        let (result, secs) = time_once(|| solver.solve(&problem, &opts));
+        let rep = result.unwrap_or_else(|e| panic!("{} failed: {e}", solver.name()));
+        println!(
+            "{:<16}: {:>10}  sweeps={:<4} rel_resid={:.2e}  mape={:.2e}",
+            solver.name(),
+            fmt_seconds(secs),
+            rep.sweeps,
+            rep.rel_residual(),
+            mape(&rep.a, &a_true),
+        );
+        match kind {
+            SolverKind::Bak => bak = Some((rep.a, secs)),
+            SolverKind::Qr => qr = Some((rep.a, secs)),
+            _ => {}
+        }
+    }
+    let (a_bak, t_bak) = bak.expect("bak ran");
+    let (a_qr, t_qr) = qr.expect("qr ran");
+    assert!(rel_l2(&a_bak, &a_qr) < 1e-2, "solvers agree");
     println!(
-        "SolveBak   : {:>10}  sweeps={:<4} rel_resid={:.2e}  mape={:.2e}",
-        fmt_seconds(secs), rep.sweeps, rep.rel_residual(), mape(&rep.a, &a_true)
+        "\nall solutions agree; speed-up of SolveBak vs QR: {:.1}x (paper Table 1 regime)",
+        t_qr / t_bak
     );
 
-    // 2. The parallel variant (Algorithm 2).
-    let mut popts = SolveOptions::accurate();
-    popts.thr = 50;
-    popts.threads = solvebak::linalg::blas2::num_threads();
-    let (repp, secsp) = time_once(|| solve_bakp(&x, &y, &popts));
+    // The capability matrix, straight from the registry.
+    println!("\nregistered solvers:");
     println!(
-        "SolveBakP  : {:>10}  sweeps={:<4} rel_resid={:.2e}  mape={:.2e}",
-        fmt_seconds(secsp), repp.sweeps, repp.rel_residual(), mape(&repp.a, &a_true)
+        "{:<16} {:>5} {:>9} {:>12} {:>10}",
+        "kind", "wide", "iterative", "needs_square", "warm_start"
     );
-
-    // 3. The LAPACK-style baseline.
-    let (a_qr, secsq) = time_once(|| lstsq_qr(&x, &y).expect("qr"));
-    println!(
-        "QR baseline: {:>10}  (exact direct solve)          mape={:.2e}",
-        fmt_seconds(secsq), mape(&a_qr, &a_true)
-    );
-
-    println!(
-        "\nspeed-up vs QR: SolveBak {:.1}x, SolveBakP {:.1}x  (paper Table 1 regime)",
-        secsq / secs, secsq / secsp
-    );
-    assert!(rel_l2(&rep.a, &a_qr) < 1e-2, "solvers agree");
-    println!("all three solutions agree. done.");
+    for s in registry() {
+        let c = s.capabilities();
+        println!(
+            "{:<16} {:>5} {:>9} {:>12} {:>10}",
+            s.name(), c.supports_wide, c.iterative, c.needs_square, c.warm_start
+        );
+    }
+    println!("done.");
 }

@@ -6,7 +6,8 @@
 //!
 //! Run: `cargo bench --bench figure1_speedup [-- --scale F] [--samples N]`
 
-use solvebak::bench::harness::{run_method, Method};
+use solvebak::api::SolverKind;
+use solvebak::bench::harness::{run_method, table1_opts};
 use solvebak::bench::paper::TABLE1;
 use solvebak::bench::workload::{Workload, WorkloadSpec};
 use solvebak::cli::Args;
@@ -44,9 +45,17 @@ fn main() {
         let w = Workload::consistent(spec);
         let thr = row.thr.min(spec.vars.max(2) / 2).max(1);
         let threads = solvebak::linalg::blas2::num_threads().min(row.threads);
-        let qr = run_method(&w, Method::Lapack, &cfg);
-        let bak = run_method(&w, Method::Bak, &cfg);
-        let bakp = run_method(&w, Method::Bakp { thr, threads }, &cfg);
+        let qr = run_method(&w, SolverKind::Qr, &table1_opts(thr, 1), &cfg);
+        let bak = run_method(&w, SolverKind::Bak, &table1_opts(thr, 1), &cfg);
+        let bakp = run_method(&w, SolverKind::Bakp, &table1_opts(thr, threads), &cfg);
+        let (qr, bak, bakp) = match (qr, bak, bakp) {
+            (Ok(q), Ok(b), Ok(p)) => (q, b, p),
+            (q, b, p) => {
+                let err = [q.err(), b.err(), p.err()].into_iter().flatten().next().unwrap();
+                println!("row {}: degraded ({err}); skipping", row.id);
+                continue;
+            }
+        };
         rows.push((row, spec, qr.time_ms() / bak.time_ms(), qr.time_ms() / bakp.time_ms()));
     }
 

@@ -9,7 +9,8 @@
 //! are dimension-driven and survive scaling; that is the "shape" we
 //! compare against the paper (see EXPERIMENTS.md).
 
-use solvebak::bench::harness::{run_method, Method};
+use solvebak::api::SolverKind;
+use solvebak::bench::harness::{run_method, table1_opts};
 use solvebak::bench::paper::TABLE1;
 use solvebak::bench::workload::{Workload, WorkloadSpec};
 use solvebak::cli::Args;
@@ -64,9 +65,19 @@ fn main() {
         let thr = row.thr.min(spec.vars.max(2) / 2).max(1);
         let threads = solvebak::linalg::blas2::num_threads().min(row.threads);
 
-        let qr = run_method(&w, Method::Lapack, &cfg);
-        let bak = run_method(&w, Method::Bak, &cfg);
-        let bakp = run_method(&w, Method::Bakp { thr, threads }, &cfg);
+        let qr = run_method(&w, SolverKind::Qr, &table1_opts(thr, 1), &cfg);
+        let bak = run_method(&w, SolverKind::Bak, &table1_opts(thr, 1), &cfg);
+        let bakp = run_method(&w, SolverKind::Bakp, &table1_opts(thr, threads), &cfg);
+        let (qr, bak, bakp) = match (qr, bak, bakp) {
+            (Ok(q), Ok(b), Ok(p)) => (q, b, p),
+            (q, b, p) => {
+                // A degraded row (e.g. rank-deficient draw) must not abort
+                // the remaining rows.
+                let err = [q.err(), b.err(), p.err()].into_iter().flatten().next().unwrap();
+                println!("{:<3} {:>9} {:>6} | row degraded: {err}", row.id, spec.obs, spec.vars);
+                continue;
+            }
+        };
 
         let spd_bak = qr.time_ms() / bak.time_ms();
         println!(

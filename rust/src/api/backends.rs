@@ -1,0 +1,401 @@
+//! [`Solver`] implementations: thin adapters from the trait to the
+//! underlying free functions in [`crate::solver`], [`crate::baselines`],
+//! and [`crate::runtime`]. The free functions stay public and stable; the
+//! adapters add shape/capability checking and typed errors.
+
+use std::sync::Arc;
+
+use crate::baselines;
+use crate::linalg::blas1;
+use crate::runtime::{ArtifactKind, Engine};
+use crate::solver::{self, SolveOptions, SolveReport, StopReason};
+
+use super::{report_from_coefficients, Capabilities, Problem, Solver, SolverError, SolverKind};
+
+/// Algorithm 1 — sequential cyclic coordinate descent.
+pub struct BakSolver;
+
+impl Solver for BakSolver {
+    fn kind(&self) -> SolverKind {
+        SolverKind::Bak
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        self.kind().capabilities().expect("concrete kind")
+    }
+
+    fn solve(
+        &self,
+        p: &Problem<'_>,
+        opts: &SolveOptions,
+    ) -> Result<SolveReport, SolverError> {
+        self.capabilities().check(p.obs(), p.vars())?;
+        match p.warm_start() {
+            Some(a0) => {
+                let cninv = solver::colnorms_inv(p.x());
+                let mut a = a0.to_vec();
+                let mut e = crate::linalg::residual(p.x(), p.y(), &a);
+                Ok(solver::bak::solve_bak_warm(
+                    p.x(),
+                    &cninv,
+                    &mut a,
+                    &mut e,
+                    p.y(),
+                    opts,
+                ))
+            }
+            None => Ok(solver::solve_bak(p.x(), p.y(), opts)),
+        }
+    }
+}
+
+/// Algorithm 2 — block CD with stale in-block errors.
+pub struct BakpSolver;
+
+impl Solver for BakpSolver {
+    fn kind(&self) -> SolverKind {
+        SolverKind::Bakp
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        self.kind().capabilities().expect("concrete kind")
+    }
+
+    fn solve(
+        &self,
+        p: &Problem<'_>,
+        opts: &SolveOptions,
+    ) -> Result<SolveReport, SolverError> {
+        self.capabilities().check(p.obs(), p.vars())?;
+        Ok(solver::solve_bakp(p.x(), p.y(), opts))
+    }
+}
+
+/// Multi-RHS SolveBak, run with a single right-hand side. The coordinator
+/// uses the underlying [`solver::solve_bak_multi`] directly to amortise
+/// whole batches; this adapter makes the kind addressable standalone.
+pub struct BakMultiSolver;
+
+impl Solver for BakMultiSolver {
+    fn kind(&self) -> SolverKind {
+        SolverKind::BakMulti
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        self.kind().capabilities().expect("concrete kind")
+    }
+
+    fn solve(
+        &self,
+        p: &Problem<'_>,
+        opts: &SolveOptions,
+    ) -> Result<SolveReport, SolverError> {
+        self.capabilities().check(p.obs(), p.vars())?;
+        let mut reports = solver::solve_bak_multi(p.x(), &[p.y().to_vec()], opts);
+        reports.pop().ok_or_else(|| SolverError::Backend {
+            backend: "bak_multi".into(),
+            reason: "no report produced".into(),
+        })
+    }
+}
+
+/// Randomized Kaczmarz — row-action dual of SolveBak.
+pub struct KaczmarzSolver;
+
+impl Solver for KaczmarzSolver {
+    fn kind(&self) -> SolverKind {
+        SolverKind::Kaczmarz
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        self.kind().capabilities().expect("concrete kind")
+    }
+
+    fn solve(
+        &self,
+        p: &Problem<'_>,
+        opts: &SolveOptions,
+    ) -> Result<SolveReport, SolverError> {
+        self.capabilities().check(p.obs(), p.vars())?;
+        Ok(solver::solve_kaczmarz(p.x(), p.y(), opts))
+    }
+}
+
+/// Greedy Gauss-Southwell column selection.
+pub struct GaussSouthwellSolver;
+
+impl Solver for GaussSouthwellSolver {
+    fn kind(&self) -> SolverKind {
+        SolverKind::GaussSouthwell
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        self.kind().capabilities().expect("concrete kind")
+    }
+
+    fn solve(
+        &self,
+        p: &Problem<'_>,
+        opts: &SolveOptions,
+    ) -> Result<SolveReport, SolverError> {
+        self.capabilities().check(p.obs(), p.vars())?;
+        Ok(solver::solve_gauss_southwell(p.x(), p.y(), opts))
+    }
+}
+
+/// Householder-QR least squares (tall) / minimum-norm (wide) — the
+/// paper's "LAPACK" comparator.
+pub struct QrSolver;
+
+impl Solver for QrSolver {
+    fn kind(&self) -> SolverKind {
+        SolverKind::Qr
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        self.kind().capabilities().expect("concrete kind")
+    }
+
+    fn solve(
+        &self,
+        p: &Problem<'_>,
+        opts: &SolveOptions,
+    ) -> Result<SolveReport, SolverError> {
+        let _ = opts; // direct method: convergence knobs don't apply
+        self.capabilities().check(p.obs(), p.vars())?;
+        let a = baselines::qr::lstsq_qr(p.x(), p.y())?;
+        Ok(report_from_coefficients(p.x(), p.y(), a))
+    }
+}
+
+/// Normal equations via Cholesky (tall, full column rank).
+pub struct CholeskySolver;
+
+impl Solver for CholeskySolver {
+    fn kind(&self) -> SolverKind {
+        SolverKind::Cholesky
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        self.kind().capabilities().expect("concrete kind")
+    }
+
+    fn solve(
+        &self,
+        p: &Problem<'_>,
+        opts: &SolveOptions,
+    ) -> Result<SolveReport, SolverError> {
+        let _ = opts;
+        self.capabilities().check(p.obs(), p.vars())?;
+        let a = baselines::cholesky::solve_normal_equations(p.x(), p.y(), 0.0)?;
+        Ok(report_from_coefficients(p.x(), p.y(), a))
+    }
+}
+
+/// Gaussian elimination with partial pivoting (square systems only).
+pub struct GaussSolver;
+
+impl Solver for GaussSolver {
+    fn kind(&self) -> SolverKind {
+        SolverKind::Gauss
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        self.kind().capabilities().expect("concrete kind")
+    }
+
+    fn solve(
+        &self,
+        p: &Problem<'_>,
+        opts: &SolveOptions,
+    ) -> Result<SolveReport, SolverError> {
+        let _ = opts;
+        self.capabilities().check(p.obs(), p.vars())?;
+        let a = baselines::gauss::gauss_solve(p.x(), p.y())?;
+        Ok(report_from_coefficients(p.x(), p.y(), a))
+    }
+}
+
+/// Conjugate gradient on the normal equations.
+pub struct CglsSolver;
+
+impl Solver for CglsSolver {
+    fn kind(&self) -> SolverKind {
+        SolverKind::Cgls
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        self.kind().capabilities().expect("concrete kind")
+    }
+
+    fn solve(
+        &self,
+        p: &Problem<'_>,
+        opts: &SolveOptions,
+    ) -> Result<SolveReport, SolverError> {
+        self.capabilities().check(p.obs(), p.vars())?;
+        let rep = baselines::cgls::cgls_solve(p.x(), p.y(), opts.max_sweeps, opts.tol);
+        let e = crate::linalg::residual(p.x(), p.y(), &rep.a);
+        Ok(SolveReport {
+            a: rep.a,
+            e,
+            history: rep.history,
+            y_norm_sq: blas1::sum_sq_f64(p.y()),
+            sweeps: rep.iterations,
+            stop: if rep.converged {
+                StopReason::Converged
+            } else {
+                StopReason::MaxSweeps
+            },
+        })
+    }
+}
+
+/// AOT-compiled sweep artifacts executed through the PJRT engine.
+///
+/// [`PjrtSolver::detached`] (what the [`super::registry`] hands out) has
+/// no engine and reports [`SolverError::Unavailable`]; services that
+/// loaded artifacts wrap their engine via [`PjrtSolver::with_engine`].
+pub struct PjrtSolver {
+    engine: Option<Arc<Engine>>,
+}
+
+impl PjrtSolver {
+    /// No engine attached; `solve` returns `Unavailable`.
+    pub fn detached() -> Self {
+        Self { engine: None }
+    }
+
+    /// Execute through a loaded engine.
+    pub fn with_engine(engine: Arc<Engine>) -> Self {
+        Self { engine: Some(engine) }
+    }
+}
+
+impl Solver for PjrtSolver {
+    fn kind(&self) -> SolverKind {
+        SolverKind::Pjrt
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        self.kind().capabilities().expect("concrete kind")
+    }
+
+    fn solve(
+        &self,
+        p: &Problem<'_>,
+        opts: &SolveOptions,
+    ) -> Result<SolveReport, SolverError> {
+        self.capabilities().check(p.obs(), p.vars())?;
+        match &self.engine {
+            None => Err(SolverError::Unavailable {
+                backend: "pjrt".into(),
+                reason: "no engine attached (load artifacts and use with_engine)".into(),
+            }),
+            Some(eng) => eng
+                .solve(p.x(), p.y(), opts, ArtifactKind::BakpSweep)
+                .map(|o| o.report)
+                .map_err(|e| SolverError::Backend {
+                    backend: "pjrt".into(),
+                    reason: e.to_string(),
+                }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::util::rng::Rng;
+    use crate::util::stats::rel_l2;
+
+    fn planted(seed: u64, obs: usize, vars: usize) -> (Mat, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::seed(seed);
+        let x = Mat::randn(&mut rng, obs, vars);
+        let a: Vec<f32> = (0..vars).map(|_| rng.normal_f32()).collect();
+        let y = x.matvec(&a);
+        (x, y, a)
+    }
+
+    #[test]
+    fn bak_solver_matches_free_function() {
+        let (x, y, _) = planted(700, 150, 20);
+        let opts = SolveOptions::accurate();
+        let p = Problem::new(&x, &y).unwrap();
+        let via_trait = BakSolver.solve(&p, &opts).unwrap();
+        let direct = solver::solve_bak(&x, &y, &opts);
+        assert_eq!(via_trait.a, direct.a);
+    }
+
+    #[test]
+    fn bak_warm_start_honoured() {
+        let (x, y, a_true) = planted(701, 200, 15);
+        let opts = SolveOptions::builder().max_sweeps(1).tol(0.0).build();
+        let p = Problem::new(&x, &y).unwrap();
+        // One sweep from the truth stays at the truth (residual ~ 0).
+        let warm = p.with_warm_start(&a_true).unwrap();
+        let rep = BakSolver.solve(&warm, &opts).unwrap();
+        assert!(rep.rel_residual() < 1e-4, "rel={}", rep.rel_residual());
+        // One cold sweep is measurably worse than starting at the truth.
+        let cold = BakSolver.solve(&p, &opts).unwrap();
+        assert!(cold.rel_residual() > rep.rel_residual());
+    }
+
+    #[test]
+    fn gauss_rejects_non_square() {
+        let (x, y, _) = planted(702, 30, 10);
+        let p = Problem::new(&x, &y).unwrap();
+        assert!(matches!(
+            GaussSolver.solve(&p, &SolveOptions::default()),
+            Err(SolverError::NeedsSquare { obs: 30, vars: 10 })
+        ));
+    }
+
+    #[test]
+    fn cholesky_rejects_wide() {
+        let (x, y, _) = planted(703, 10, 30);
+        let p = Problem::new(&x, &y).unwrap();
+        assert!(matches!(
+            CholeskySolver.solve(&p, &SolveOptions::default()),
+            Err(SolverError::Shape(_))
+        ));
+    }
+
+    #[test]
+    fn qr_rank_deficiency_is_typed_error() {
+        let mut rng = Rng::seed(704);
+        let mut x = Mat::randn(&mut rng, 12, 3);
+        let c0 = x.col(0).to_vec();
+        x.col_mut(1).copy_from_slice(&c0);
+        let y: Vec<f32> = (0..12).map(|_| rng.normal_f32()).collect();
+        let p = Problem::new(&x, &y).unwrap();
+        assert!(matches!(
+            QrSolver.solve(&p, &SolveOptions::default()),
+            Err(SolverError::RankDeficient { .. })
+        ));
+    }
+
+    #[test]
+    fn cgls_report_has_exit_invariant() {
+        let (x, y, a_true) = planted(705, 120, 10);
+        let p = Problem::new(&x, &y).unwrap();
+        let opts = SolveOptions::builder().max_sweeps(100).tol(1e-8).build();
+        let rep = CglsSolver.solve(&p, &opts).unwrap();
+        assert!(rel_l2(&rep.a, &a_true) < 1e-3);
+        let fresh = crate::linalg::residual(&x, &y, &rep.a);
+        for (f, g) in fresh.iter().zip(&rep.e) {
+            assert!((f - g).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn detached_pjrt_is_unavailable() {
+        let (x, y, _) = planted(706, 20, 4);
+        let p = Problem::new(&x, &y).unwrap();
+        assert!(matches!(
+            PjrtSolver::detached().solve(&p, &SolveOptions::default()),
+            Err(SolverError::Unavailable { .. })
+        ));
+    }
+}

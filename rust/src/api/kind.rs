@@ -1,0 +1,232 @@
+//! The canonical solver namespace: [`SolverKind`] plus the [`registry`] of
+//! implementations. CLI `--backend` parsing, coordinator routing, and the
+//! bench harness all resolve through here.
+
+use std::str::FromStr;
+
+use super::backends::{
+    BakMultiSolver, BakSolver, BakpSolver, CglsSolver, CholeskySolver, GaussSolver,
+    GaussSouthwellSolver, KaczmarzSolver, PjrtSolver, QrSolver,
+};
+use super::{Capabilities, Solver, SolverError};
+
+/// Every solver the crate ships, plus [`SolverKind::Auto`] for "let the
+/// router pick from the problem shape".
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum SolverKind {
+    /// Algorithm 1 — sequential cyclic coordinate descent.
+    Bak,
+    /// Algorithm 2 — block-"parallel" CD with stale in-block errors.
+    Bakp,
+    /// Multi-RHS SolveBak (one matrix walk serves every right-hand side).
+    BakMulti,
+    /// Randomized Kaczmarz (row-action dual).
+    Kaczmarz,
+    /// Greedy Gauss-Southwell column selection.
+    GaussSouthwell,
+    /// Householder-QR least squares (the paper's "LAPACK" comparator).
+    Qr,
+    /// Normal equations via Cholesky.
+    Cholesky,
+    /// Gaussian elimination with partial pivoting (square systems).
+    Gauss,
+    /// Conjugate gradient on the normal equations.
+    Cgls,
+    /// AOT-compiled sweep artifacts executed through PJRT.
+    Pjrt,
+    /// Routing pseudo-kind: resolved by the coordinator's router.
+    #[default]
+    Auto,
+}
+
+impl SolverKind {
+    /// Every concrete implementation, in registry order (excludes `Auto`).
+    pub const CONCRETE: [SolverKind; 10] = [
+        SolverKind::Bak,
+        SolverKind::Bakp,
+        SolverKind::BakMulti,
+        SolverKind::Kaczmarz,
+        SolverKind::GaussSouthwell,
+        SolverKind::Qr,
+        SolverKind::Cholesky,
+        SolverKind::Gauss,
+        SolverKind::Cgls,
+        SolverKind::Pjrt,
+    ];
+
+    /// Canonical lowercase name; round-trips through [`FromStr`].
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SolverKind::Bak => "bak",
+            SolverKind::Bakp => "bakp",
+            SolverKind::BakMulti => "bak_multi",
+            SolverKind::Kaczmarz => "kaczmarz",
+            SolverKind::GaussSouthwell => "gauss_southwell",
+            SolverKind::Qr => "qr",
+            SolverKind::Cholesky => "cholesky",
+            SolverKind::Gauss => "gauss",
+            SolverKind::Cgls => "cgls",
+            SolverKind::Pjrt => "pjrt",
+            SolverKind::Auto => "auto",
+        }
+    }
+
+    /// True for the router placeholder.
+    pub fn is_auto(self) -> bool {
+        self == SolverKind::Auto
+    }
+
+    /// The capability-matrix entry for this kind (`None` for `Auto`).
+    ///
+    /// This is the single source of truth — the [`Solver`] impls
+    /// delegate here — and it allocates nothing, so routing and
+    /// validation hot paths can consult it per request.
+    pub fn capabilities(self) -> Option<Capabilities> {
+        const ITERATIVE: Capabilities = Capabilities {
+            supports_wide: true,
+            iterative: true,
+            needs_square: false,
+            warm_start: false,
+        };
+        match self {
+            SolverKind::Bak => Some(Capabilities { warm_start: true, ..ITERATIVE }),
+            SolverKind::Bakp
+            | SolverKind::BakMulti
+            | SolverKind::Kaczmarz
+            | SolverKind::GaussSouthwell
+            | SolverKind::Cgls
+            | SolverKind::Pjrt => Some(ITERATIVE),
+            SolverKind::Qr => Some(Capabilities { iterative: false, ..ITERATIVE }),
+            SolverKind::Cholesky => Some(Capabilities {
+                supports_wide: false,
+                iterative: false,
+                needs_square: false,
+                warm_start: false,
+            }),
+            SolverKind::Gauss => Some(Capabilities {
+                supports_wide: false,
+                iterative: false,
+                needs_square: true,
+                warm_start: false,
+            }),
+            SolverKind::Auto => None,
+        }
+    }
+}
+
+impl std::fmt::Display for SolverKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl FromStr for SolverKind {
+    type Err = SolverError;
+
+    /// Accepts the canonical names plus historical aliases (`lapack` for
+    /// the QR baseline, `-` for `_`, `gs` for Gauss-Southwell).
+    fn from_str(s: &str) -> Result<Self, SolverError> {
+        match s.to_ascii_lowercase().replace('-', "_").as_str() {
+            "bak" => Ok(SolverKind::Bak),
+            "bakp" => Ok(SolverKind::Bakp),
+            "bak_multi" | "bakmulti" => Ok(SolverKind::BakMulti),
+            "kaczmarz" => Ok(SolverKind::Kaczmarz),
+            "gauss_southwell" | "gs" => Ok(SolverKind::GaussSouthwell),
+            "qr" | "lapack" => Ok(SolverKind::Qr),
+            "cholesky" => Ok(SolverKind::Cholesky),
+            "gauss" => Ok(SolverKind::Gauss),
+            "cgls" => Ok(SolverKind::Cgls),
+            "pjrt" => Ok(SolverKind::Pjrt),
+            "auto" => Ok(SolverKind::Auto),
+            other => Err(SolverError::UnknownKind(other.to_string())),
+        }
+    }
+}
+
+/// Construct the implementation for a concrete kind (`None` for `Auto`).
+///
+/// The PJRT entry comes back detached (no engine); callers holding a
+/// loaded [`crate::runtime::Engine`] should build
+/// [`PjrtSolver::with_engine`] instead.
+pub fn solver_for(kind: SolverKind) -> Option<Box<dyn Solver>> {
+    match kind {
+        SolverKind::Bak => Some(Box::new(BakSolver)),
+        SolverKind::Bakp => Some(Box::new(BakpSolver)),
+        SolverKind::BakMulti => Some(Box::new(BakMultiSolver)),
+        SolverKind::Kaczmarz => Some(Box::new(KaczmarzSolver)),
+        SolverKind::GaussSouthwell => Some(Box::new(GaussSouthwellSolver)),
+        SolverKind::Qr => Some(Box::new(QrSolver)),
+        SolverKind::Cholesky => Some(Box::new(CholeskySolver)),
+        SolverKind::Gauss => Some(Box::new(GaussSolver)),
+        SolverKind::Cgls => Some(Box::new(CglsSolver)),
+        SolverKind::Pjrt => Some(Box::new(PjrtSolver::detached())),
+        SolverKind::Auto => None,
+    }
+}
+
+/// All registered implementations, in [`SolverKind::CONCRETE`] order.
+pub fn registry() -> Vec<Box<dyn Solver>> {
+    SolverKind::CONCRETE
+        .iter()
+        .map(|&k| solver_for(k).expect("every concrete kind is registered"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_all_concrete_kinds() {
+        let reg = registry();
+        assert_eq!(reg.len(), SolverKind::CONCRETE.len());
+        for (s, &k) in reg.iter().zip(SolverKind::CONCRETE.iter()) {
+            assert_eq!(s.kind(), k);
+            assert_eq!(s.name(), k.as_str());
+        }
+    }
+
+    #[test]
+    fn names_are_unique() {
+        let mut names: Vec<&str> =
+            SolverKind::CONCRETE.iter().map(|k| k.as_str()).collect();
+        names.push(SolverKind::Auto.as_str());
+        let mut dedup = names.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len());
+    }
+
+    #[test]
+    fn from_str_aliases() {
+        assert_eq!("lapack".parse::<SolverKind>().unwrap(), SolverKind::Qr);
+        assert_eq!("BAK".parse::<SolverKind>().unwrap(), SolverKind::Bak);
+        assert_eq!(
+            "bak-multi".parse::<SolverKind>().unwrap(),
+            SolverKind::BakMulti
+        );
+        assert_eq!(
+            "gs".parse::<SolverKind>().unwrap(),
+            SolverKind::GaussSouthwell
+        );
+        assert!(matches!(
+            "gpu4000".parse::<SolverKind>(),
+            Err(SolverError::UnknownKind(_))
+        ));
+    }
+
+    #[test]
+    fn kind_capabilities_match_registry() {
+        for s in registry() {
+            assert_eq!(Some(s.capabilities()), s.kind().capabilities(), "{}", s.name());
+        }
+        assert!(SolverKind::Auto.capabilities().is_none());
+    }
+
+    #[test]
+    fn auto_is_default_and_unregistered() {
+        assert_eq!(SolverKind::default(), SolverKind::Auto);
+        assert!(SolverKind::Auto.is_auto());
+        assert!(solver_for(SolverKind::Auto).is_none());
+    }
+}

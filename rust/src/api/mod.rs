@@ -1,0 +1,388 @@
+//! The first-class solver API: one `Problem`, one `Solver` trait, one
+//! `SolverKind` namespace, one typed `SolverError`.
+//!
+//! Every layer of the crate used to invent its own way to name and invoke
+//! an algorithm (the bench harness's `Method`, the coordinator's
+//! `Backend`, raw string matching in the CLI, and six free functions with
+//! incompatible signatures). This module is the single dispatch surface
+//! they all route through now:
+//!
+//! * [`Problem`] — a borrowed, validated `(X, y, warm-start)` triple.
+//! * [`Solver`] — `solve(&Problem, &SolveOptions) -> Result<SolveReport,
+//!   SolverError>` plus `name()` and `capabilities()`.
+//! * [`SolverKind`] — the canonical enum of every implementation, with
+//!   `FromStr`/`Display` for CLI/wire use and [`registry`]/[`solver_for`]
+//!   constructors.
+//! * [`SolverError`] — typed failures replacing ad-hoc `Result<_, String>`
+//!   and panic paths.
+//!
+//! The free functions (`solve_bak`, `lstsq_qr`, `cgls_solve`, …) remain as
+//! thin stable wrappers; the trait impls in [`backends`] delegate to them,
+//! so existing callers keep compiling unchanged.
+//!
+//! ## Capability matrix
+//!
+//! | kind              | supports_wide | iterative | needs_square | warm_start |
+//! |-------------------|---------------|-----------|--------------|------------|
+//! | `bak`             | yes           | yes       | no           | yes        |
+//! | `bakp`            | yes           | yes       | no           | no         |
+//! | `bak_multi`       | yes           | yes       | no           | no         |
+//! | `kaczmarz`        | yes           | yes       | no           | no         |
+//! | `gauss_southwell` | yes           | yes       | no           | no         |
+//! | `qr`              | yes (min-norm)| no        | no           | no         |
+//! | `cholesky`        | no            | no        | no           | no         |
+//! | `gauss`           | no            | no        | yes          | no         |
+//! | `cgls`            | yes           | yes       | no           | no         |
+//! | `pjrt`            | yes (bucketed)| yes       | no           | no         |
+
+pub mod backends;
+pub mod kind;
+
+pub use backends::PjrtSolver;
+pub use kind::{registry, solver_for, SolverKind};
+
+use crate::linalg::{blas1, Mat};
+use crate::solver::{SolveOptions, SolveReport, StopReason};
+
+/// Typed solver failure. Replaces the crate's previous mix of
+/// `Result<_, String>` and `expect(...)` panic paths.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SolverError {
+    /// Dimensions are inconsistent or unsupported (details in message).
+    Shape(String),
+    /// An input slice contains NaN/Inf.
+    NonFinite {
+        /// Which input ("x", "y", "warm start").
+        what: &'static str,
+    },
+    /// The solver only accepts square systems (e.g. Gaussian elimination).
+    NeedsSquare { obs: usize, vars: usize },
+    /// The matrix is numerically rank-deficient at the given column.
+    RankDeficient { column: usize },
+    /// The backend exists but cannot run here (e.g. PJRT without an
+    /// engine/artifacts).
+    Unavailable { backend: String, reason: String },
+    /// No solver is registered under this name/kind.
+    UnknownKind(String),
+    /// The backend started but failed mid-solve.
+    Backend { backend: String, reason: String },
+    /// Service-level failure (coordinator shut down, reply channel lost).
+    Service(String),
+}
+
+impl std::fmt::Display for SolverError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SolverError::Shape(s) => write!(f, "shape error: {s}"),
+            SolverError::NonFinite { what } => {
+                write!(f, "{what} contains non-finite values")
+            }
+            SolverError::NeedsSquare { obs, vars } => {
+                write!(f, "solver needs a square system, got {obs}x{vars}")
+            }
+            SolverError::RankDeficient { column } => {
+                write!(f, "rank deficient at column {column}")
+            }
+            SolverError::Unavailable { backend, reason } => {
+                write!(f, "backend '{backend}' unavailable: {reason}")
+            }
+            SolverError::UnknownKind(s) => write!(f, "unknown solver kind '{s}'"),
+            SolverError::Backend { backend, reason } => {
+                write!(f, "backend '{backend}' failed: {reason}")
+            }
+            SolverError::Service(s) => write!(f, "service error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for SolverError {}
+
+impl From<crate::baselines::qr::SolveError> for SolverError {
+    fn from(e: crate::baselines::qr::SolveError) -> Self {
+        match e {
+            crate::baselines::qr::SolveError::RankDeficient(j) => {
+                SolverError::RankDeficient { column: j }
+            }
+            crate::baselines::qr::SolveError::Shape(s) => SolverError::Shape(s),
+        }
+    }
+}
+
+/// A validated least-squares problem: minimise `||y - X a||` (borrowed
+/// views; construction checks shapes and scans for NaN/Inf so solvers can
+/// assume clean inputs).
+#[derive(Clone, Copy)]
+pub struct Problem<'a> {
+    x: &'a Mat,
+    y: &'a [f32],
+    warm: Option<&'a [f32]>,
+}
+
+impl<'a> Problem<'a> {
+    /// Validate and wrap `(X, y)`.
+    pub fn new(x: &'a Mat, y: &'a [f32]) -> Result<Self, SolverError> {
+        Self::validate_matrix(x)?;
+        Self::prevalidated(x, y)
+    }
+
+    /// Matrix-side validation only: non-empty and finite. `O(obs*vars)`.
+    pub fn validate_matrix(x: &Mat) -> Result<(), SolverError> {
+        let (obs, vars) = x.shape();
+        if obs == 0 || vars == 0 {
+            return Err(SolverError::Shape(format!("empty system {obs}x{vars}")));
+        }
+        if !x.as_slice().iter().all(|v| v.is_finite()) {
+            return Err(SolverError::NonFinite { what: "x" });
+        }
+        Ok(())
+    }
+
+    /// Like [`Problem::new`] but skips the `O(obs*vars)` finite-scan of
+    /// `x` — for callers that ran [`Problem::validate_matrix`] once and
+    /// construct many problems against the same shared matrix (the
+    /// coordinator's batch path). Still checks the `O(obs)` y side.
+    pub fn prevalidated(x: &'a Mat, y: &'a [f32]) -> Result<Self, SolverError> {
+        let (obs, vars) = x.shape();
+        if obs == 0 || vars == 0 {
+            return Err(SolverError::Shape(format!("empty system {obs}x{vars}")));
+        }
+        if y.len() != obs {
+            return Err(SolverError::Shape(format!(
+                "y length {} != obs {obs}",
+                y.len()
+            )));
+        }
+        if !y.iter().all(|v| v.is_finite()) {
+            return Err(SolverError::NonFinite { what: "y" });
+        }
+        Ok(Self { x, y, warm: None })
+    }
+
+    /// Attach an initial coefficient guess (honoured by solvers whose
+    /// [`Capabilities::warm_start`] is true; others ignore it).
+    pub fn with_warm_start(mut self, a0: &'a [f32]) -> Result<Self, SolverError> {
+        if a0.len() != self.vars() {
+            return Err(SolverError::Shape(format!(
+                "warm start length {} != vars {}",
+                a0.len(),
+                self.vars()
+            )));
+        }
+        if !a0.iter().all(|v| v.is_finite()) {
+            return Err(SolverError::NonFinite { what: "warm start" });
+        }
+        self.warm = Some(a0);
+        Ok(self)
+    }
+
+    pub fn x(&self) -> &'a Mat {
+        self.x
+    }
+
+    pub fn y(&self) -> &'a [f32] {
+        self.y
+    }
+
+    pub fn warm_start(&self) -> Option<&'a [f32]> {
+        self.warm
+    }
+
+    pub fn obs(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn vars(&self) -> usize {
+        self.x.cols()
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        self.x.shape()
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.obs() == self.vars()
+    }
+
+    /// max(obs/vars, vars/obs): 1.0 = square, large = strongly non-square.
+    pub fn aspect_ratio(&self) -> f64 {
+        let (obs, vars) = self.shape();
+        (obs as f64 / vars as f64).max(vars as f64 / obs as f64)
+    }
+}
+
+/// What a solver can handle — routing and validation read these instead of
+/// hard-coding per-backend knowledge.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Capabilities {
+    /// Accepts wide (vars > obs) systems.
+    pub supports_wide: bool,
+    /// Sweep/iteration-based (honours `max_sweeps`/`tol`); false = direct.
+    pub iterative: bool,
+    /// Only accepts square systems.
+    pub needs_square: bool,
+    /// Honours [`Problem::with_warm_start`].
+    pub warm_start: bool,
+}
+
+impl Capabilities {
+    /// Check a problem shape against these capabilities.
+    pub fn check(&self, obs: usize, vars: usize) -> Result<(), SolverError> {
+        if self.needs_square && obs != vars {
+            return Err(SolverError::NeedsSquare { obs, vars });
+        }
+        if !self.supports_wide && vars > obs {
+            return Err(SolverError::Shape(format!(
+                "solver requires obs >= vars, got wide {obs}x{vars}"
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// The uniform solver interface every implementation (paper algorithms,
+/// baselines, PJRT execution) plugs into.
+pub trait Solver: Send + Sync {
+    /// The canonical kind of this implementation.
+    fn kind(&self) -> SolverKind;
+
+    /// Stable lowercase name (same string `SolverKind::from_str` accepts).
+    fn name(&self) -> &'static str {
+        self.kind().as_str()
+    }
+
+    /// What shapes/features this solver handles.
+    fn capabilities(&self) -> Capabilities;
+
+    /// Solve the problem. Implementations must return a typed error — no
+    /// panicking on unsupported shapes or numerical breakdown.
+    fn solve(
+        &self,
+        problem: &Problem<'_>,
+        opts: &SolveOptions,
+    ) -> Result<SolveReport, SolverError>;
+}
+
+/// Wrap a direct solver's coefficient vector in a [`SolveReport`]
+/// (residual recomputed from scratch; `sweeps == 1`).
+pub fn report_from_coefficients(x: &Mat, y: &[f32], a: Vec<f32>) -> SolveReport {
+    let e = crate::linalg::residual(x, y, &a);
+    let r2 = blas1::sum_sq_f64(&e);
+    SolveReport {
+        a,
+        e,
+        history: vec![r2],
+        y_norm_sq: blas1::sum_sq_f64(y),
+        sweeps: 1,
+        stop: StopReason::Converged,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn problem_validates_shape() {
+        let mut rng = Rng::seed(1);
+        let x = Mat::randn(&mut rng, 8, 3);
+        let y = vec![0.0f32; 7];
+        assert!(matches!(Problem::new(&x, &y), Err(SolverError::Shape(_))));
+        let y = vec![0.0f32; 8];
+        assert!(Problem::new(&x, &y).is_ok());
+    }
+
+    #[test]
+    fn problem_rejects_nan() {
+        let mut rng = Rng::seed(2);
+        let mut x = Mat::randn(&mut rng, 6, 2);
+        let y = vec![0.0f32; 6];
+        x.set(3, 1, f32::NAN);
+        assert_eq!(
+            Problem::new(&x, &y).unwrap_err(),
+            SolverError::NonFinite { what: "x" }
+        );
+        let x = Mat::randn(&mut rng, 6, 2);
+        let mut y = vec![0.0f32; 6];
+        y[0] = f32::INFINITY;
+        assert_eq!(
+            Problem::new(&x, &y).unwrap_err(),
+            SolverError::NonFinite { what: "y" }
+        );
+    }
+
+    #[test]
+    fn prevalidated_checks_y_but_trusts_x() {
+        let mut rng = Rng::seed(5);
+        let mut x = Mat::randn(&mut rng, 6, 2);
+        x.set(0, 0, f32::NAN);
+        assert!(Problem::validate_matrix(&x).is_err());
+        // By contract prevalidated() skips the x scan...
+        let y = vec![0.0f32; 6];
+        assert!(Problem::prevalidated(&x, &y).is_ok());
+        // ...but still rejects a bad y.
+        let mut bad_y = y.clone();
+        bad_y[2] = f32::NAN;
+        assert_eq!(
+            Problem::prevalidated(&x, &bad_y).unwrap_err(),
+            SolverError::NonFinite { what: "y" }
+        );
+        assert!(Problem::prevalidated(&x, &[0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn problem_rejects_empty() {
+        let x = Mat::zeros(0, 0);
+        assert!(matches!(Problem::new(&x, &[]), Err(SolverError::Shape(_))));
+    }
+
+    #[test]
+    fn warm_start_validated() {
+        let mut rng = Rng::seed(3);
+        let x = Mat::randn(&mut rng, 10, 4);
+        let y = vec![1.0f32; 10];
+        let p = Problem::new(&x, &y).unwrap();
+        assert!(p.with_warm_start(&[0.0; 3]).is_err());
+        let a0 = [0.5f32; 4];
+        let p = p.with_warm_start(&a0).unwrap();
+        assert_eq!(p.warm_start(), Some(&a0[..]));
+    }
+
+    #[test]
+    fn aspect_ratio_symmetric() {
+        let mut rng = Rng::seed(4);
+        let tall = Mat::randn(&mut rng, 40, 10);
+        let wide = Mat::randn(&mut rng, 10, 40);
+        let yt = vec![0.0f32; 40];
+        let yw = vec![0.0f32; 10];
+        let pt = Problem::new(&tall, &yt).unwrap();
+        let pw = Problem::new(&wide, &yw).unwrap();
+        assert_eq!(pt.aspect_ratio(), pw.aspect_ratio());
+        assert!(!pt.is_square());
+    }
+
+    #[test]
+    fn capabilities_check() {
+        let square_only = Capabilities {
+            supports_wide: false,
+            iterative: false,
+            needs_square: true,
+            warm_start: false,
+        };
+        assert!(square_only.check(5, 5).is_ok());
+        assert!(matches!(
+            square_only.check(6, 5),
+            Err(SolverError::NeedsSquare { .. })
+        ));
+        let tall_only = Capabilities { needs_square: false, ..square_only };
+        assert!(tall_only.check(6, 5).is_ok());
+        assert!(matches!(tall_only.check(5, 6), Err(SolverError::Shape(_))));
+    }
+
+    #[test]
+    fn qr_error_converts() {
+        let e: SolverError = crate::baselines::qr::SolveError::RankDeficient(3).into();
+        assert_eq!(e, SolverError::RankDeficient { column: 3 });
+        assert!(e.to_string().contains("column 3"));
+    }
+}

@@ -12,6 +12,11 @@
 //!   iterative comparator in the same O(mn)-per-iteration class as
 //!   SolveBak (used by the ablation benches).
 //! * [`stepwise`] — forward stepwise regression, the Figure-2 baseline.
+//!
+//! The free functions here are stable thin wrappers; every comparator is
+//! also addressable through the uniform [`crate::api::Solver`] trait
+//! (`SolverKind::{Qr, Cholesky, Gauss, Cgls}`), which adds shape checking
+//! and typed [`crate::api::SolverError`]s.
 
 pub mod qr;
 pub mod cholesky;

@@ -2,34 +2,35 @@
 //! workload with warmup + samples, tracks allocations (when the bench
 //! binary installs [`crate::util::alloc::CountingAlloc`]) and computes the
 //! paper's accuracy metric.
+//!
+//! Method selection is registry-driven: any [`SolverKind`] measures
+//! through the shared [`crate::api::Solver`] trait, and failures (e.g. a
+//! rank-deficient workload on the QR baseline) surface as typed
+//! [`SolverError`]s so one bad row degrades instead of aborting the run.
+//!
+//! Timing semantics: the timed quantity is the full trait `solve`,
+//! which for direct methods includes the report's `O(obs*vars)`
+//! residual computation (iterative solvers maintain it inherently).
+//! That keeps the measured work uniform across kinds; relative to the
+//! `O(obs*vars^2)` factorization it is a <= 1/vars overhead on the QR
+//! column (< 1% at the paper's vars >= 100).
 
-use crate::baselines::qr::lstsq_qr;
-use crate::linalg::Mat;
-use crate::solver::{solve_bak, solve_bakp, SolveOptions};
+use crate::api::{solver_for, Problem, SolverError, SolverKind};
+use crate::solver::SolveOptions;
 use crate::util::alloc;
 use crate::util::stats::{mape, Summary};
 use crate::util::timer::{sample, BenchConfig};
 
 use super::workload::Workload;
 
-/// Which method a measurement ran.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Method {
-    /// Householder-QR least squares (the paper's "LAPACK" column).
-    Lapack,
-    /// Algorithm 1.
-    Bak,
-    /// Algorithm 2 with (thr, threads).
-    Bakp { thr: usize, threads: usize },
-}
-
-impl Method {
-    pub fn label(&self) -> String {
-        match self {
-            Method::Lapack => "LAPACK(QR)".into(),
-            Method::Bak => "BAK".into(),
-            Method::Bakp { thr, threads } => format!("BAKP(thr={thr},t={threads})"),
-        }
+/// Human label for a measured (kind, options) pair, matching the paper's
+/// column names for the Table-1 trio.
+pub fn method_label(kind: SolverKind, opts: &SolveOptions) -> String {
+    match kind {
+        SolverKind::Qr => "LAPACK(QR)".into(),
+        SolverKind::Bak => "BAK".into(),
+        SolverKind::Bakp => format!("BAKP(thr={},t={})", opts.thr, opts.threads),
+        k => k.as_str().to_ascii_uppercase(),
     }
 }
 
@@ -58,43 +59,46 @@ impl MethodResult {
 /// Solver options used for Table-1 measurements: tolerance chosen to land
 /// in the paper's MAPE regime.
 pub fn table1_opts(thr: usize, threads: usize) -> SolveOptions {
-    SolveOptions {
-        max_sweeps: 200,
-        tol: 1e-6,
-        thr,
-        threads,
-        check_every: 1,
-        ..SolveOptions::default()
-    }
+    SolveOptions::builder()
+        .max_sweeps(200)
+        .tol(1e-6)
+        .thr(thr)
+        .threads(threads)
+        .check_every(1)
+        .build()
 }
 
-/// Run one method on one workload.
-pub fn run_method(w: &Workload, method: Method, cfg: &BenchConfig) -> MethodResult {
-    let solve = |x: &Mat, y: &[f32]| -> Vec<f32> {
-        match method {
-            Method::Lapack => lstsq_qr(x, y).expect("qr baseline failed"),
-            Method::Bak => solve_bak(x, y, &table1_opts(50, 1)).a,
-            Method::Bakp { thr, threads } => {
-                solve_bakp(x, y, &table1_opts(thr, threads)).a
-            }
-        }
-    };
+/// Run one solver kind on one workload, honouring the passed options for
+/// every kind.
+pub fn run_method(
+    w: &Workload,
+    kind: SolverKind,
+    opts: &SolveOptions,
+    cfg: &BenchConfig,
+) -> Result<MethodResult, SolverError> {
+    let solver = solver_for(kind).ok_or_else(|| SolverError::Unavailable {
+        backend: kind.to_string(),
+        reason: "routing pseudo-kind; measure a concrete registry kind".into(),
+    })?;
+    let problem = Problem::new(&w.x, &w.y)?;
 
-    // Allocation measurement: one tracked run.
-    let (a_hat, snap) = alloc::measure(|| solve(&w.x, &w.y));
+    // Allocation measurement doubles as the failure probe: if the solver
+    // cannot handle this workload, report that instead of timing it.
+    let (first, snap) = alloc::measure(|| solver.solve(&problem, opts));
+    let a_hat = first?.a;
     let acc = w.a_true.as_ref().map(|t| mape(&a_hat, t)).unwrap_or(f64::NAN);
 
     // Timing loop.
     let times = sample(cfg, || {
-        std::hint::black_box(solve(&w.x, &w.y));
+        let _ = std::hint::black_box(solver.solve(&problem, opts));
     });
 
-    MethodResult {
-        method_label: method.label(),
+    Ok(MethodResult {
+        method_label: method_label(kind, opts),
         time: Summary::of(&times),
         alloc_bytes: snap.bytes,
         mape: acc,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -106,17 +110,54 @@ mod tests {
     fn run_method_all_backends() {
         let w = Workload::consistent(WorkloadSpec::new(120, 12, 77));
         let cfg = BenchConfig::quick();
-        for m in [Method::Lapack, Method::Bak, Method::Bakp { thr: 4, threads: 1 }] {
-            let r = run_method(&w, m, &cfg);
+        let opts = table1_opts(4, 1);
+        for kind in [SolverKind::Qr, SolverKind::Bak, SolverKind::Bakp] {
+            let r = run_method(&w, kind, &opts, &cfg).expect("consistent workload");
             assert!(r.time.min > 0.0, "{}", r.method_label);
             assert!(r.mape < 1e-2, "{} mape={}", r.method_label, r.mape);
         }
     }
 
     #[test]
+    fn run_method_honours_passed_options() {
+        // A starved budget (1 sweep, no tolerance) must be visibly less
+        // accurate than the Table-1 regime — i.e. cfg is not ignored.
+        let w = Workload::consistent(WorkloadSpec::new(200, 30, 78));
+        let cfg = BenchConfig::quick();
+        let starved = SolveOptions::builder().max_sweeps(1).tol(0.0).build();
+        let loose = run_method(&w, SolverKind::Bak, &starved, &cfg).unwrap();
+        let tight = run_method(&w, SolverKind::Bak, &table1_opts(50, 1), &cfg).unwrap();
+        assert!(
+            loose.mape > tight.mape * 10.0,
+            "starved {} vs tight {}",
+            loose.mape,
+            tight.mape
+        );
+    }
+
+    #[test]
+    fn rank_deficient_workload_degrades_gracefully() {
+        // Duplicate a column: QR must report the failure, not panic.
+        let mut w = Workload::consistent(WorkloadSpec::new(60, 6, 79));
+        let c0 = w.x.col(0).to_vec();
+        w.x.col_mut(1).copy_from_slice(&c0);
+        let r = run_method(&w, SolverKind::Qr, &table1_opts(4, 1), &BenchConfig::quick());
+        assert!(matches!(r, Err(SolverError::RankDeficient { .. })), "{r:?}");
+    }
+
+    #[test]
+    fn auto_kind_is_not_measurable() {
+        let w = Workload::consistent(WorkloadSpec::new(30, 3, 80));
+        let r = run_method(&w, SolverKind::Auto, &table1_opts(4, 1), &BenchConfig::quick());
+        assert!(matches!(r, Err(SolverError::Unavailable { .. })), "{r:?}");
+    }
+
+    #[test]
     fn labels_distinct() {
-        assert_ne!(Method::Lapack.label(), Method::Bak.label());
-        assert!(Method::Bakp { thr: 50, threads: 2 }.label().contains("50"));
+        let o = table1_opts(50, 2);
+        assert_ne!(method_label(SolverKind::Qr, &o), method_label(SolverKind::Bak, &o));
+        assert!(method_label(SolverKind::Bakp, &o).contains("50"));
+        assert_eq!(method_label(SolverKind::Cgls, &o), "CGLS");
     }
 
     #[test]

@@ -6,5 +6,5 @@ pub mod workload;
 pub mod paper;
 pub mod harness;
 
-pub use harness::{run_method, MethodResult};
+pub use harness::{method_label, run_method, table1_opts, MethodResult};
 pub use workload::{WorkloadSpec, Workload};

@@ -12,8 +12,9 @@
 
 use std::sync::Arc;
 
+use crate::api::{registry, SolverKind};
 use crate::bench::workload::{Workload, WorkloadSpec};
-use crate::coordinator::{Backend, Coordinator, CoordinatorConfig, SolveRequest};
+use crate::coordinator::{Coordinator, CoordinatorConfig, SolveRequest};
 use crate::solver::{self, BakfOptions, SolveOptions};
 use crate::util::json::ObjBuilder;
 use crate::util::stats::mape;
@@ -21,7 +22,12 @@ use crate::util::timer::{fmt_seconds, time_once};
 
 use super::args::{ArgError, Args};
 
-const USAGE: &str = "solvebak — SolveBak/SolveBakP/SolveBakF solver service (Bakas 2021 reproduction)
+/// Help text; the `--backend` list is derived from the solver registry so
+/// it can never drift from what actually dispatches.
+fn usage() -> String {
+    let backends: Vec<&'static str> = registry().iter().map(|s| s.name()).collect();
+    format!(
+        "solvebak — SolveBak/SolveBakP/SolveBakF solver service (Bakas 2021 reproduction)
 
 USAGE:
   solvebak <COMMAND> [OPTIONS]
@@ -37,14 +43,18 @@ COMMANDS:
 COMMON OPTIONS:
   --obs N --vars N      problem shape (scientific notation ok: 1e6)
   --seed N              workload seed            [42]
-  --backend NAME        bak|bakp|qr|pjrt|auto    [auto]
+  --backend NAME        solver backend           [auto]
+                        one of: {}|auto
   --thr N --threads N   BAKP block width/threads [50/1]
   --sweeps N --tol X    convergence control      [200/1e-6]
   --artifacts DIR       PJRT artifact directory  [artifacts]
   --max-feat N          features to select       [10]
   --workers N           service worker threads   [4]
   --requests N          synthetic request count  [32]
-";
+",
+        backends.join("|")
+    )
+}
 
 /// Entry point used by main(). Returns the process exit code.
 pub fn run(argv: Vec<String>) -> i32 {
@@ -68,33 +78,28 @@ fn run_inner(argv: Vec<String>) -> Result<(), ArgError> {
         "serve-tcp" => cmd_serve_tcp(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
-            println!("{USAGE}");
+            println!("{}", usage());
             Ok(())
         }
         other => Err(ArgError(format!("unknown command '{other}'"))),
     }
 }
 
-fn backend_of(args: &Args) -> Result<Backend, ArgError> {
-    Ok(match args.get("backend").unwrap_or("auto") {
-        "bak" => Backend::Bak,
-        "bakp" => Backend::Bakp,
-        "qr" | "lapack" => Backend::Qr,
-        "pjrt" => Backend::Pjrt,
-        "auto" => Backend::Auto,
-        other => return Err(ArgError(format!("unknown backend '{other}'"))),
-    })
+fn backend_of(args: &Args) -> Result<SolverKind, ArgError> {
+    args.get("backend")
+        .unwrap_or("auto")
+        .parse::<SolverKind>()
+        .map_err(|e| ArgError(e.to_string()))
 }
 
 fn opts_of(args: &Args) -> Result<SolveOptions, ArgError> {
-    Ok(SolveOptions {
-        max_sweeps: args.get_usize("sweeps", 200)?,
-        tol: args.get_f64("tol", 1e-6)?,
-        thr: args.get_usize("thr", 50)?,
-        threads: args.get_usize("threads", 1)?,
-        seed: args.get_u64("seed", 0x5eed)?,
-        ..SolveOptions::default()
-    })
+    Ok(SolveOptions::builder()
+        .max_sweeps(args.get_usize("sweeps", 200)?)
+        .tol(args.get_f64("tol", 1e-6)?)
+        .thr(args.get_usize("thr", 50)?)
+        .threads(args.get_usize("threads", 1)?)
+        .seed(args.get_u64("seed", 0x5eed)?)
+        .build())
 }
 
 fn cmd_solve(args: &Args) -> Result<(), ArgError> {
@@ -114,11 +119,11 @@ fn cmd_solve(args: &Args) -> Result<(), ArgError> {
     req.backend = backend;
     req.opts = opts;
     let (out, secs) = time_once(|| coord.solve_blocking(req));
-    let report = out.report.map_err(ArgError)?;
+    let report = out.report.map_err(|e| ArgError(e.to_string()))?;
     let acc = w.a_true.as_ref().map(|t| mape(&report.a, t)).unwrap_or(f64::NAN);
 
     println!(
-        "solved {obs}x{vars} via {:?}: {} | sweeps={} stop={:?} rel_resid={:.3e} mape={:.3e}",
+        "solved {obs}x{vars} via {}: {} | sweeps={} stop={:?} rel_resid={:.3e} mape={:.3e}",
         out.backend, fmt_seconds(secs), report.sweeps, report.stop,
         report.rel_residual(), acc,
     );
@@ -128,7 +133,7 @@ fn cmd_solve(args: &Args) -> Result<(), ArgError> {
             .str("cmd", "solve")
             .num("obs", obs as f64)
             .num("vars", vars as f64)
-            .str("backend", format!("{:?}", out.backend))
+            .str("backend", out.backend.to_string())
             .num("seconds", secs)
             .num("sweeps", report.sweeps as f64)
             .num("rel_residual", report.rel_residual())
@@ -202,7 +207,7 @@ fn cmd_serve(args: &Args) -> Result<(), ArgError> {
             let y = x.matvec(&a);
             let mut req = SolveRequest::new(i as u64, x, y);
             req.backend = backend;
-            coord.submit(req).map_err(ArgError)
+            coord.submit(req).map_err(|e| ArgError(e.to_string()))
         })
         .collect::<Result<_, _>>()?;
     let mut ok = 0usize;
@@ -308,8 +313,27 @@ mod tests {
     #[test]
     fn backend_parsing() {
         let a = Args::parse(&sv(&["--backend", "qr"])).unwrap();
-        assert_eq!(backend_of(&a).unwrap(), Backend::Qr);
+        assert_eq!(backend_of(&a).unwrap(), SolverKind::Qr);
+        let a = Args::parse(&sv(&["--backend", "cgls"])).unwrap();
+        assert_eq!(backend_of(&a).unwrap(), SolverKind::Cgls);
         let a = Args::parse(&sv(&[])).unwrap();
-        assert_eq!(backend_of(&a).unwrap(), Backend::Auto);
+        assert_eq!(backend_of(&a).unwrap(), SolverKind::Auto);
+    }
+
+    #[test]
+    fn usage_lists_every_registered_backend() {
+        let u = usage();
+        for s in registry() {
+            assert!(u.contains(s.name()), "usage missing '{}'", s.name());
+        }
+    }
+
+    #[test]
+    fn solve_with_registry_backend() {
+        // A comparator that only exists through the shared registry.
+        assert_eq!(
+            run(sv(&["solve", "--obs", "200", "--vars", "10", "--backend", "cgls"])),
+            0
+        );
     }
 }

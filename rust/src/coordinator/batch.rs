@@ -8,7 +8,9 @@
 
 use std::collections::HashMap;
 
-use super::request::{Backend, SolveJob, SolveRequest};
+use crate::api::SolverKind;
+
+use super::request::{SolveJob, SolveRequest};
 
 /// Batching limits.
 #[derive(Clone, Copy, Debug)]
@@ -30,8 +32,8 @@ impl Default for BatchPolicy {
 /// arrival order, and job emission order follows first-arrival of the key
 /// (deterministic; tested).
 pub fn coalesce(requests: Vec<SolveRequest>, policy: &BatchPolicy) -> Vec<SolveJob> {
-    let mut order: Vec<(usize, Backend, u64)> = Vec::new();
-    let mut groups: HashMap<(usize, Backend, u64), Vec<SolveRequest>> = HashMap::new();
+    let mut order: Vec<(usize, SolverKind, u64)> = Vec::new();
+    let mut groups: HashMap<(usize, SolverKind, u64), Vec<SolveRequest>> = HashMap::new();
     for r in requests {
         let key = (r.matrix_key(), r.backend, opts_fingerprint(&r));
         if !groups.contains_key(&key) {

@@ -20,6 +20,7 @@ pub mod router;
 pub mod server;
 pub mod service;
 
+pub use crate::api::SolverKind;
 pub use request::{Backend, SolveJob, SolveOutcome, SolveRequest};
 pub use router::{route, RouteDecision};
 pub use service::{Coordinator, CoordinatorConfig};

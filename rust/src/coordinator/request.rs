@@ -2,23 +2,14 @@
 
 use std::sync::Arc;
 
+use crate::api::{SolverError, SolverKind};
 use crate::linalg::Mat;
 use crate::solver::{SolveOptions, SolveReport};
 
-/// Which solver backend to run.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum Backend {
-    /// Native Algorithm 1 (sequential CD).
-    Bak,
-    /// Native Algorithm 2 (block CD), threaded per `SolveOptions::threads`.
-    Bakp,
-    /// Householder-QR baseline (exact, O(mn^2)).
-    Qr,
-    /// PJRT artifact execution (AOT-compiled L2 graph).
-    Pjrt,
-    /// Let the router pick from the problem shape.
-    Auto,
-}
+/// Backwards-compatible alias: the coordinator used to define its own
+/// `Backend` enum; requests are now addressed by the crate-wide
+/// [`SolverKind`] (any registered solver, not just the original four).
+pub use crate::api::SolverKind as Backend;
 
 /// A solve request: one matrix, one or more right-hand sides.
 ///
@@ -31,13 +22,13 @@ pub struct SolveRequest {
     pub x: Arc<Mat>,
     pub y: Vec<f32>,
     pub opts: SolveOptions,
-    pub backend: Backend,
+    pub backend: SolverKind,
 }
 
 impl SolveRequest {
     /// Construct with defaults.
     pub fn new(id: u64, x: Arc<Mat>, y: Vec<f32>) -> Self {
-        Self { id, x, y, opts: SolveOptions::default(), backend: Backend::Auto }
+        Self { id, x, y, opts: SolveOptions::default(), backend: SolverKind::Auto }
     }
 
     /// A stable identity for the shared matrix (pointer identity of the
@@ -53,7 +44,7 @@ pub struct SolveJob {
     /// (request id, rhs) pairs.
     pub members: Vec<(u64, Vec<f32>)>,
     pub opts: SolveOptions,
-    pub backend: Backend,
+    pub backend: SolverKind,
 }
 
 impl SolveJob {
@@ -81,9 +72,9 @@ impl SolveJob {
 #[derive(Clone, Debug)]
 pub struct SolveOutcome {
     pub id: u64,
-    pub report: Result<SolveReport, String>,
+    pub report: Result<SolveReport, SolverError>,
     /// Which backend actually ran.
-    pub backend: Backend,
+    pub backend: SolverKind,
     /// Wall time for the member's solve (seconds). Batched members share
     /// the matrix walk; this is the per-member attributed time.
     pub seconds: f64,

@@ -4,16 +4,18 @@
 //! shape and the request's hint, decide which solver runs. The policy
 //! encodes the paper's own empirical guidance (§7): BAK/BAKP win on
 //! strongly non-square systems; direct methods win on square ones; PJRT
-//! buckets serve shapes covered by the artifact menu.
+//! buckets serve shapes covered by the artifact menu. Hints are checked
+//! against the hinted solver's [`crate::api::Capabilities`] — a solver
+//! that cannot handle the shape (Gaussian elimination on a tall system,
+//! Cholesky on a wide one) falls back to QR instead of failing downstream.
 
+use crate::api::SolverKind;
 use crate::runtime::{ArtifactKind, Manifest};
-
-use super::request::Backend;
 
 /// The routing decision with its rationale (exposed for observability).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct RouteDecision {
-    pub backend: Backend,
+    pub backend: SolverKind,
     pub reason: &'static str,
 }
 
@@ -24,13 +26,14 @@ pub const NONSQUARE_RATIO: f64 = 4.0;
 
 /// Decide a backend for an (obs, vars) problem.
 ///
-/// * Explicit hints are honoured verbatim (except Pjrt with no fitting
-///   artifact, which falls back to native BAKP).
+/// * Explicit hints are honoured when the hinted solver's capabilities
+///   cover the shape; otherwise QR (which handles tall and wide) runs.
+///   Pjrt with no fitting artifact falls back to native BAKP.
 /// * Auto: square-ish -> QR (direct methods won in §7); tall/wide with a
 ///   fitting artifact -> Pjrt; otherwise BAKP for parallel-friendly
 ///   shapes, BAK for small ones.
 pub fn route(
-    backend: Backend,
+    backend: SolverKind,
     obs: usize,
     vars: usize,
     manifest: Option<&Manifest>,
@@ -39,11 +42,11 @@ pub fn route(
         .map(|m| m.route(ArtifactKind::BakpSweep, obs, vars).is_some())
         .unwrap_or(false);
     match backend {
-        Backend::Pjrt if !has_artifact => RouteDecision {
-            backend: Backend::Bakp,
+        SolverKind::Pjrt if !has_artifact => RouteDecision {
+            backend: SolverKind::Bakp,
             reason: "pjrt requested but no artifact bucket fits; native bakp fallback",
         },
-        Backend::Auto => {
+        SolverKind::Auto => {
             let ratio = if vars == 0 {
                 1.0
             } else {
@@ -51,24 +54,39 @@ pub fn route(
             };
             if ratio < NONSQUARE_RATIO {
                 RouteDecision {
-                    backend: Backend::Qr,
+                    backend: SolverKind::Qr,
                     reason: "square-ish system: direct QR wins (paper §7)",
                 }
             } else if has_artifact {
                 RouteDecision {
-                    backend: Backend::Pjrt,
+                    backend: SolverKind::Pjrt,
                     reason: "non-square + artifact bucket available",
                 }
             } else if obs * vars >= 1 << 20 {
                 RouteDecision {
-                    backend: Backend::Bakp,
+                    backend: SolverKind::Bakp,
                     reason: "large non-square: block-parallel sweeps",
                 }
             } else {
-                RouteDecision { backend: Backend::Bak, reason: "small non-square: sequential CD" }
+                RouteDecision {
+                    backend: SolverKind::Bak,
+                    reason: "small non-square: sequential CD",
+                }
             }
         }
-        b => RouteDecision { backend: b, reason: "explicit backend hint" },
+        hint => {
+            match hint.capabilities() {
+                Some(c) if c.needs_square && obs != vars => RouteDecision {
+                    backend: SolverKind::Qr,
+                    reason: "hinted solver needs a square system; QR fallback",
+                },
+                Some(c) if !c.supports_wide && vars > obs => RouteDecision {
+                    backend: SolverKind::Qr,
+                    reason: "hinted solver cannot handle wide systems; QR fallback",
+                },
+                _ => RouteDecision { backend: hint, reason: "explicit backend hint" },
+            }
+        }
     }
 }
 
@@ -91,49 +109,67 @@ mod tests {
 
     #[test]
     fn explicit_hint_honoured() {
-        let d = route(Backend::Qr, 10_000, 10, None);
-        assert_eq!(d.backend, Backend::Qr);
-        let d = route(Backend::Bak, 100, 100, None);
-        assert_eq!(d.backend, Backend::Bak);
+        let d = route(SolverKind::Qr, 10_000, 10, None);
+        assert_eq!(d.backend, SolverKind::Qr);
+        let d = route(SolverKind::Bak, 100, 100, None);
+        assert_eq!(d.backend, SolverKind::Bak);
+        let d = route(SolverKind::Cgls, 500, 20, None);
+        assert_eq!(d.backend, SolverKind::Cgls);
     }
 
     #[test]
     fn auto_square_goes_qr() {
-        let d = route(Backend::Auto, 128, 100, None);
-        assert_eq!(d.backend, Backend::Qr);
+        let d = route(SolverKind::Auto, 128, 100, None);
+        assert_eq!(d.backend, SolverKind::Qr);
     }
 
     #[test]
     fn auto_tall_small_goes_bak() {
-        let d = route(Backend::Auto, 4000, 10, None);
-        assert_eq!(d.backend, Backend::Bak);
+        let d = route(SolverKind::Auto, 4000, 10, None);
+        assert_eq!(d.backend, SolverKind::Bak);
     }
 
     #[test]
     fn auto_tall_large_goes_bakp() {
-        let d = route(Backend::Auto, 2_000_000, 100, None);
-        assert_eq!(d.backend, Backend::Bakp);
+        let d = route(SolverKind::Auto, 2_000_000, 100, None);
+        assert_eq!(d.backend, SolverKind::Bakp);
     }
 
     #[test]
     fn auto_prefers_pjrt_when_bucket_fits() {
         let m = tiny_manifest();
-        let d = route(Backend::Auto, 200, 40, Some(&m));
-        assert_eq!(d.backend, Backend::Pjrt);
+        let d = route(SolverKind::Auto, 200, 40, Some(&m));
+        assert_eq!(d.backend, SolverKind::Pjrt);
     }
 
     #[test]
     fn pjrt_hint_falls_back_without_bucket() {
         let m = tiny_manifest();
-        let d = route(Backend::Pjrt, 100_000, 500, Some(&m));
-        assert_eq!(d.backend, Backend::Bakp);
-        let d = route(Backend::Pjrt, 100, 100, None);
-        assert_eq!(d.backend, Backend::Bakp);
+        let d = route(SolverKind::Pjrt, 100_000, 500, Some(&m));
+        assert_eq!(d.backend, SolverKind::Bakp);
+        let d = route(SolverKind::Pjrt, 100, 100, None);
+        assert_eq!(d.backend, SolverKind::Bakp);
     }
 
     #[test]
     fn wide_counts_as_nonsquare() {
-        let d = route(Backend::Auto, 10, 4000, None);
-        assert_ne!(d.backend, Backend::Qr);
+        let d = route(SolverKind::Auto, 10, 4000, None);
+        assert_ne!(d.backend, SolverKind::Qr);
+    }
+
+    #[test]
+    fn capability_mismatch_falls_back_to_qr() {
+        // Gaussian elimination on a tall system: needs_square.
+        let d = route(SolverKind::Gauss, 400, 20, None);
+        assert_eq!(d.backend, SolverKind::Qr);
+        // Cholesky on a wide system: !supports_wide.
+        let d = route(SolverKind::Cholesky, 20, 400, None);
+        assert_eq!(d.backend, SolverKind::Qr);
+        // Both are honoured on shapes they handle.
+        assert_eq!(route(SolverKind::Gauss, 64, 64, None).backend, SolverKind::Gauss);
+        assert_eq!(
+            route(SolverKind::Cholesky, 400, 20, None).backend,
+            SolverKind::Cholesky
+        );
     }
 }

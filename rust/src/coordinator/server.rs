@@ -8,7 +8,7 @@
 //! ```
 //! Response (one line):
 //! ```json
-//! {"id": 1, "ok": true, "backend": "Bak", "a": [...],
+//! {"id": 1, "ok": true, "backend": "bak", "a": [...],
 //!  "rel_residual": 1e-7, "sweeps": 12, "seconds": 0.01}
 //! ```
 //!
@@ -22,11 +22,12 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
+use crate::api::SolverKind;
 use crate::linalg::Mat;
 use crate::solver::SolveOptions;
 use crate::util::json::{Json, ObjBuilder};
 
-use super::request::{Backend, SolveRequest};
+use super::request::SolveRequest;
 use super::service::Coordinator;
 
 /// A running TCP server bound to a local port.
@@ -187,7 +188,7 @@ fn handle_line(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
                     ObjBuilder::new()
                         .bool("ok", true)
                         .num("id", id as f64)
-                        .str("backend", format!("{:?}", out.backend))
+                        .str("backend", out.backend.to_string())
                         .val("a", a)
                         .num("rel_residual", rep.rel_residual())
                         .num("sweeps", rep.sweeps as f64)
@@ -198,7 +199,7 @@ fn handle_line(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
                 Err(e) => ObjBuilder::new()
                     .bool("ok", false)
                     .num("id", id as f64)
-                    .str("error", e)
+                    .str("error", e.to_string())
                     .build(),
             }
         }
@@ -229,14 +230,12 @@ fn parse_solve(j: &Json) -> Result<SolveRequest, String> {
     let x = Mat::from_row_major(obs, vars, &xv);
 
     let mut req = SolveRequest::new(id, Arc::new(x), y);
-    req.backend = match j.get("backend").and_then(Json::as_str).unwrap_or("auto") {
-        "bak" => Backend::Bak,
-        "bakp" => Backend::Bakp,
-        "qr" | "lapack" => Backend::Qr,
-        "pjrt" => Backend::Pjrt,
-        "auto" => Backend::Auto,
-        other => return Err(format!("unknown backend '{other}'")),
-    };
+    req.backend = j
+        .get("backend")
+        .and_then(Json::as_str)
+        .unwrap_or("auto")
+        .parse::<SolverKind>()
+        .map_err(|e| e.to_string())?;
     let mut opts = SolveOptions::default();
     if let Some(s) = j.get("sweeps").and_then(Json::as_usize) {
         opts.max_sweeps = s;

@@ -21,16 +21,19 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::api::{
+    report_from_coefficients, solver_for, PjrtSolver, Problem, Solver, SolverError, SolverKind,
+};
 use crate::baselines::qr;
 use crate::linalg::Mat;
-use crate::runtime::{ArtifactKind, Engine};
-use crate::solver::{self, SolveReport, StopReason};
+use crate::runtime::Engine;
+use crate::solver::{self, SolveReport};
 use crate::util::log::{emit, Level};
 
 use super::batch::{coalesce, BatchPolicy};
 use super::metrics::Metrics;
 use super::queue::BoundedQueue;
-use super::request::{Backend, SolveJob, SolveOutcome, SolveRequest};
+use super::request::{SolveJob, SolveOutcome, SolveRequest};
 use super::router::route;
 
 /// Coordinator configuration.
@@ -125,7 +128,7 @@ impl Coordinator {
                     .name(format!("bak-worker-{i}"))
                     .spawn(move || {
                         while let Some(env) = job_q.pop() {
-                            run_job(env, engine.as_deref(), &metrics);
+                            run_job(env, engine.as_ref(), &metrics);
                         }
                     })
                     .expect("spawn worker")
@@ -137,12 +140,15 @@ impl Coordinator {
 
     /// Submit a request; returns the reply receiver. Blocks when the
     /// submit queue is full (backpressure); errors after shutdown.
-    pub fn submit(&self, req: SolveRequest) -> Result<mpsc::Receiver<SolveOutcome>, String> {
+    pub fn submit(
+        &self,
+        req: SolveRequest,
+    ) -> Result<mpsc::Receiver<SolveOutcome>, SolverError> {
         let (tx, rx) = mpsc::channel();
         self.metrics.requests_submitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.submit_q
             .push(Envelope { req, reply: tx, submitted: Instant::now() })
-            .map_err(|_| "coordinator is shut down".to_string())?;
+            .map_err(|_| SolverError::Service("coordinator is shut down".into()))?;
         Ok(rx)
     }
 
@@ -173,15 +179,15 @@ impl Coordinator {
         match self.submit(req) {
             Ok(rx) => rx.recv().unwrap_or_else(|_| SolveOutcome {
                 id: 0,
-                report: Err("reply channel dropped".into()),
-                backend: Backend::Auto,
+                report: Err(SolverError::Service("reply channel dropped".into())),
+                backend: SolverKind::Auto,
                 seconds: 0.0,
                 batch_size: 0,
             }),
             Err(e) => SolveOutcome {
                 id: 0,
                 report: Err(e),
-                backend: Backend::Auto,
+                backend: SolverKind::Auto,
                 seconds: 0.0,
                 batch_size: 0,
             },
@@ -252,7 +258,7 @@ fn schedule_batch(
     }
 }
 
-fn run_job(env: JobEnvelope, engine: Option<&Engine>, metrics: &Metrics) {
+fn run_job(env: JobEnvelope, engine: Option<&Arc<Engine>>, metrics: &Metrics) {
     let JobEnvelope { job, replies } = env;
     metrics.jobs_run.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     let decision = route(
@@ -278,11 +284,24 @@ fn run_job(env: JobEnvelope, engine: Option<&Engine>, metrics: &Metrics) {
 }
 
 /// Execute all members of a job on the routed backend, amortising shared
-/// work across the batch.
-fn execute_job(job: &SolveJob, backend: Backend, engine: Option<&Engine>) -> Vec<SolveOutcome> {
+/// work across the batch where the backend allows it (QR factors once per
+/// job, BAK shares column norms, BAK-multi walks the matrix once for every
+/// right-hand side); all other registered kinds run member-by-member
+/// through the [`crate::api`] registry.
+fn execute_job(
+    job: &SolveJob,
+    backend: SolverKind,
+    engine: Option<&Arc<Engine>>,
+) -> Vec<SolveOutcome> {
     let x = &*job.x;
+    // The batcher shares one matrix across the whole job: scan it once
+    // here, before any factorization work, and only check each member's
+    // (cheap) y side below.
+    if let Err(e) = Problem::validate_matrix(x) {
+        return per_member(job, backend, |_| Err(e.clone()));
+    }
     match backend {
-        Backend::Qr => {
+        SolverKind::Qr => {
             // Factor ONCE for the whole batch (tall only; wide falls back
             // to per-member lstsq which handles min-norm internally).
             if x.rows() >= x.cols() {
@@ -305,39 +324,85 @@ fn execute_job(job: &SolveJob, backend: Backend, engine: Option<&Engine>) -> Vec
                     .collect()
             } else {
                 per_member(job, backend, |y| {
-                    qr::lstsq_qr(x, y)
-                        .map(|a| report_from_a(x, y, a))
-                        .map_err(|e| e.to_string())
+                    Problem::prevalidated(x, y)?;
+                    let a = qr::lstsq_qr(x, y)?;
+                    Ok(report_from_coefficients(x, y, a))
                 })
             }
         }
-        Backend::Bak => {
+        SolverKind::Bak => {
             let cninv = solver::colnorms_inv(x);
             per_member(job, backend, |y| {
+                Problem::prevalidated(x, y)?;
                 let mut a = vec![0.0f32; x.cols()];
                 let mut e = y.to_vec();
                 Ok(solver::bak::solve_bak_warm(x, &cninv, &mut a, &mut e, y, &job.opts))
             })
         }
-        Backend::Bakp => per_member(job, backend, |y| Ok(solver::solve_bakp(x, y, &job.opts))),
-        Backend::Pjrt => match engine {
-            Some(eng) => per_member(job, backend, |y| {
-                eng.solve(x, y, &job.opts, ArtifactKind::BakpSweep)
-                    .map(|o| o.report)
-                    .map_err(|e| e.to_string())
+        SolverKind::BakMulti => {
+            // Every valid member in ONE matrix walk; invalid members get
+            // their own error without demoting the rest of the batch.
+            let t0 = Instant::now();
+            let checks: Vec<Result<(), SolverError>> = job
+                .members
+                .iter()
+                .map(|(_, y)| Problem::prevalidated(x, y).map(|_| ()))
+                .collect();
+            let ys: Vec<Vec<f32>> = job
+                .members
+                .iter()
+                .zip(&checks)
+                .filter(|(_, c)| c.is_ok())
+                .map(|((_, y), _)| y.clone())
+                .collect();
+            let mut reports = solver::solve_bak_multi(x, &ys, &job.opts).into_iter();
+            let secs = t0.elapsed().as_secs_f64() / job.len().max(1) as f64;
+            checks
+                .into_iter()
+                .map(|c| SolveOutcome {
+                    id: 0,
+                    report: c
+                        .map(|()| reports.next().expect("one report per valid member")),
+                    backend,
+                    seconds: secs,
+                    batch_size: 0,
+                })
+                .collect()
+        }
+        SolverKind::Pjrt => {
+            // Reuse the api adapter: detached -> typed Unavailable, with
+            // an engine -> artifact execution. One error contract.
+            let pjrt = match engine {
+                Some(eng) => PjrtSolver::with_engine(eng.clone()),
+                None => PjrtSolver::detached(),
+            };
+            per_member(job, backend, |y| {
+                let p = Problem::prevalidated(x, y)?;
+                pjrt.solve(&p, &job.opts)
+            })
+        }
+        SolverKind::Auto => unreachable!("router always resolves Auto"),
+        kind => match solver_for(kind) {
+            // Everything else (bakp, kaczmarz, gauss_southwell, cholesky,
+            // gauss, cgls) dispatches through the registry.
+            Some(s) => per_member(job, kind, |y| {
+                let p = Problem::prevalidated(x, y)?;
+                s.solve(&p, &job.opts)
             }),
-            None => per_member(job, backend, |_| {
-                Err("pjrt backend requested but engine unavailable".to_string())
+            None => per_member(job, kind, |_| {
+                Err(SolverError::Unavailable {
+                    backend: kind.to_string(),
+                    reason: "routing pseudo-kind; not directly executable".into(),
+                })
             }),
         },
-        Backend::Auto => unreachable!("router always resolves Auto"),
     }
 }
 
 fn per_member(
     job: &SolveJob,
-    backend: Backend,
-    mut f: impl FnMut(&[f32]) -> Result<SolveReport, String>,
+    backend: SolverKind,
+    mut f: impl FnMut(&[f32]) -> Result<SolveReport, SolverError>,
 ) -> Vec<SolveOutcome> {
     job.members
         .iter()
@@ -360,23 +425,11 @@ fn qr_member_solve(
     f: &Mat,
     taus: &[f32],
     y: &[f32],
-) -> Result<SolveReport, String> {
+) -> Result<SolveReport, SolverError> {
+    Problem::prevalidated(x, y)?;
     let qty = qr::apply_qt(f, taus, y);
-    let a = qr::solve_upper_triangular(f, &qty).map_err(|e| e.to_string())?;
-    Ok(report_from_a(x, y, a))
-}
-
-fn report_from_a(x: &Mat, y: &[f32], a: Vec<f32>) -> SolveReport {
-    let e = crate::linalg::residual(x, y, &a);
-    let r2 = crate::linalg::blas1::sum_sq_f64(&e);
-    SolveReport {
-        a,
-        e,
-        history: vec![r2],
-        y_norm_sq: crate::linalg::blas1::sum_sq_f64(y),
-        sweeps: 1,
-        stop: StopReason::Converged,
-    }
+    let a = qr::solve_upper_triangular(f, &qty)?;
+    Ok(report_from_coefficients(x, y, a))
 }
 
 #[cfg(test)]
@@ -397,12 +450,12 @@ mod tests {
         let coord = Coordinator::start(CoordinatorConfig::default());
         let (x, y, a_true) = planted(400, 600, 30);
         let mut req = SolveRequest::new(1, x, y);
-        req.backend = Backend::Bak;
+        req.backend = SolverKind::Bak;
         req.opts = solver::SolveOptions::accurate();
         let out = coord.solve_blocking(req);
         let rep = out.report.expect("solve ok");
         assert!(crate::util::stats::rel_l2(&rep.a, &a_true) < 1e-3);
-        assert_eq!(out.backend, Backend::Bak);
+        assert_eq!(out.backend, SolverKind::Bak);
         coord.shutdown();
     }
 
@@ -411,7 +464,7 @@ mod tests {
         let coord = Coordinator::start(CoordinatorConfig::default());
         let (x, y, a_true) = planted(401, 50, 50);
         let out = coord.solve_blocking(SolveRequest::new(2, x, y));
-        assert_eq!(out.backend, Backend::Qr);
+        assert_eq!(out.backend, SolverKind::Qr);
         let rep = out.report.unwrap();
         assert!(crate::util::stats::rel_l2(&rep.a, &a_true) < 1e-2);
         coord.shutdown();
@@ -430,7 +483,7 @@ mod tests {
             let a: Vec<f32> = (0..20).map(|_| rng.normal_f32()).collect();
             let y = x.matvec(&a);
             let mut req = SolveRequest::new(i, x.clone(), y);
-            req.backend = Backend::Qr;
+            req.backend = SolverKind::Qr;
             rxs.push((i, a, coord.submit(req).unwrap()));
         }
         for (i, a_true, rx) in rxs {
@@ -475,11 +528,11 @@ mod tests {
         let coord = Coordinator::start(CoordinatorConfig::default());
         let (x, y, a_true) = planted(405, 500, 40);
         let mut req = SolveRequest::new(3, x, y);
-        req.backend = Backend::Bakp;
+        req.backend = SolverKind::Bakp;
         req.opts = solver::SolveOptions::accurate();
         req.opts.thr = 8;
         let out = coord.solve_blocking(req);
-        assert_eq!(out.backend, Backend::Bakp);
+        assert_eq!(out.backend, SolverKind::Bakp);
         let rep = out.report.unwrap();
         assert!(crate::util::stats::rel_l2(&rep.a, &a_true) < 1e-3);
         coord.shutdown();
@@ -490,10 +543,10 @@ mod tests {
         let coord = Coordinator::start(CoordinatorConfig::default());
         let (x, y, _) = planted(406, 100, 10);
         let mut req = SolveRequest::new(4, x, y);
-        req.backend = Backend::Pjrt;
+        req.backend = SolverKind::Pjrt;
         let out = coord.solve_blocking(req);
         // Router falls back to Bakp when no engine manifest exists.
-        assert_eq!(out.backend, Backend::Bakp);
+        assert_eq!(out.backend, SolverKind::Bakp);
         assert!(out.report.is_ok());
         coord.shutdown();
     }

@@ -18,30 +18,45 @@
 //!
 //! ## Quickstart
 //!
+//! Every algorithm — the paper's solvers, the comparator baselines, and
+//! the PJRT runtime — sits behind one [`api::Solver`] trait, addressed by
+//! [`api::SolverKind`] and constructed from [`api::registry`]:
+//!
 //! ```no_run
+//! use solvebak::api::{solver_for, Problem, SolverKind};
 //! use solvebak::linalg::Mat;
-//! use solvebak::solver::{SolveOptions, solve_bak};
+//! use solvebak::solver::SolveOptions;
 //! use solvebak::util::rng::Rng;
 //!
 //! let mut rng = Rng::seed(42);
 //! let x = Mat::randn(&mut rng, 1000, 100);      // obs x vars
 //! let a_true: Vec<f32> = (0..100).map(|i| i as f32 * 0.01).collect();
 //! let y = x.matvec(&a_true);
-//! let report = solve_bak(&x, &y, &SolveOptions::default());
+//!
+//! let problem = Problem::new(&x, &y).expect("shapes validated");
+//! let opts = SolveOptions::builder().max_sweeps(200).tol(1e-6).build();
+//! let solver = solver_for(SolverKind::Bak).expect("registered");
+//! let report = solver.solve(&problem, &opts).expect("typed errors, no panics");
 //! assert!(report.rel_residual() < 1e-4);
 //! ```
 //!
-//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
-//! paper-vs-measured record.
+//! The original free functions (`solver::solve_bak`,
+//! `baselines::lstsq_qr`, …) remain as stable thin wrappers around the
+//! same implementations. See the [`api`] module docs for the capability
+//! matrix, `DESIGN.md` for the system inventory, and `EXPERIMENTS.md` for
+//! the paper-vs-measured record.
 
 pub mod util;
 pub mod linalg;
 pub mod baselines;
 pub mod solver;
+pub mod api;
 pub mod runtime;
 pub mod coordinator;
 pub mod bench;
 pub mod cli;
+
+pub use api::{Capabilities, Problem, Solver, SolverError, SolverKind};
 
 /// Crate version string (matches Cargo.toml).
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,81 @@
+//! Stub PJRT engine, compiled when the `pjrt` cargo feature is off (the
+//! `xla` bindings are only present in the rust_pallas image). Same public
+//! surface as the real engine module; every entry point reports
+//! the runtime as unavailable, which the coordinator and the
+//! [`crate::api::PjrtSolver`] already handle by degrading to the native
+//! backends.
+
+use anyhow::{bail, Result};
+
+use crate::linalg::Mat;
+use crate::solver::{SolveOptions, SolveReport};
+
+use super::manifest::{ArtifactKind, Manifest};
+
+/// Outcome of a PJRT-backed solve, with routing metadata for observability.
+#[derive(Clone, Debug)]
+pub struct PjrtSolveOutcome {
+    pub report: SolveReport,
+    /// Artifact the request was routed to.
+    pub artifact: String,
+    /// Zero-padding overhead: padded elements / true elements - 1.
+    pub pad_overhead: f64,
+}
+
+/// Stand-in for the compile-once / execute-many PJRT engine.
+pub struct Engine {
+    manifest: Manifest,
+}
+
+const UNAVAILABLE: &str =
+    "pjrt runtime not compiled in (build with `--features pjrt` on the rust_pallas image)";
+
+impl Engine {
+    /// Always fails: the runtime is not compiled in. The manifest is still
+    /// validated so configuration errors surface the same way.
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let _ = Manifest::load(&artifact_dir)?;
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".into()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn warmup(&self) -> Result<usize> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn solve(
+        &self,
+        _x: &Mat,
+        _y: &[f32],
+        _opts: &SolveOptions,
+        _kind: ArtifactKind,
+    ) -> Result<PjrtSolveOutcome> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn feature_scores(&self, _x: &Mat, _e: &[f32]) -> Result<Vec<f32>> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn colnorms_inv_pjrt(&self, _x: &Mat) -> Result<Vec<f32>> {
+        bail!("{UNAVAILABLE}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_new_reports_unavailable() {
+        // Missing artifacts: manifest load error wins.
+        assert!(Engine::new("/nonexistent-artifact-dir").is_err());
+    }
+}

@@ -9,7 +9,17 @@
 //! instruction ids that xla_extension 0.5.1's proto path rejects; the text
 //! parser reassigns ids.
 
+//! The real engine needs the `xla` bindings baked into the rust_pallas
+//! image, gated behind the `pjrt` cargo feature. Without it a stub
+//! `Engine` with the same surface compiles whose constructor always
+//! errors, so the coordinator degrades to the native backends.
+
 pub mod manifest;
+
+#[cfg(feature = "pjrt")]
+pub mod engine;
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
 pub mod engine;
 
 pub use engine::{Engine, PjrtSolveOutcome};

@@ -10,6 +10,13 @@
 //! All solvers share [`SolveOptions`] / [`SolveReport`] and uphold the two
 //! invariants the test-suite checks everywhere: the per-sweep squared
 //! residual is non-increasing (Theorem 1), and `e == y - X a` at exit.
+//!
+//! These free functions are the stable primitive layer; the uniform
+//! dispatch surface (trait objects, typed errors, and the per-kind
+//! capability matrix — see the [`crate::api`] module docs) lives in
+//! [`crate::api`], whose implementations delegate here. New call sites
+//! should prefer `api::{Problem, Solver, SolverKind}`; the wrappers stay
+//! so existing callers and the Python-side tests keep compiling.
 
 pub mod bak;
 pub mod bakp;
@@ -82,6 +89,60 @@ impl SolveOptions {
     /// Fast, loose solve (weight initialisation use-case from §7).
     pub fn fast() -> Self {
         Self { max_sweeps: 10, tol: 1e-3, ..Self::default() }
+    }
+
+    /// Fluent construction:
+    /// `SolveOptions::builder().tol(1e-6).threads(4).build()`.
+    pub fn builder() -> SolveOptionsBuilder {
+        SolveOptionsBuilder { opts: Self::default() }
+    }
+}
+
+/// Builder for [`SolveOptions`]; starts from the defaults, every knob is
+/// optional.
+#[derive(Clone, Debug, Default)]
+pub struct SolveOptionsBuilder {
+    opts: SolveOptions,
+}
+
+impl SolveOptionsBuilder {
+    pub fn max_sweeps(mut self, v: usize) -> Self {
+        self.opts.max_sweeps = v;
+        self
+    }
+
+    pub fn tol(mut self, v: f64) -> Self {
+        self.opts.tol = v;
+        self
+    }
+
+    pub fn order(mut self, v: ColumnOrder) -> Self {
+        self.opts.order = v;
+        self
+    }
+
+    pub fn thr(mut self, v: usize) -> Self {
+        self.opts.thr = v;
+        self
+    }
+
+    pub fn threads(mut self, v: usize) -> Self {
+        self.opts.threads = v;
+        self
+    }
+
+    pub fn check_every(mut self, v: usize) -> Self {
+        self.opts.check_every = v;
+        self
+    }
+
+    pub fn seed(mut self, v: u64) -> Self {
+        self.opts.seed = v;
+        self
+    }
+
+    pub fn build(self) -> SolveOptions {
+        self.opts
     }
 }
 
@@ -160,6 +221,20 @@ mod tests {
         assert!(cn[0] > 0.0);
         assert_eq!(cn[1], 0.0);
         assert!(cn[2] > 0.0);
+    }
+
+    #[test]
+    fn builder_overrides_only_named_knobs() {
+        let o = SolveOptions::builder().tol(1e-4).threads(4).thr(8).build();
+        assert_eq!(o.tol, 1e-4);
+        assert_eq!(o.threads, 4);
+        assert_eq!(o.thr, 8);
+        // Untouched knobs keep their defaults.
+        let d = SolveOptions::default();
+        assert_eq!(o.max_sweeps, d.max_sweeps);
+        assert_eq!(o.order, d.order);
+        assert_eq!(o.check_every, d.check_every);
+        assert_eq!(o.seed, d.seed);
     }
 
     #[test]

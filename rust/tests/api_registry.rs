@@ -1,0 +1,108 @@
+//! Contract tests over the solver registry: every registered
+//! implementation must solve a consistent system through the shared
+//! `Solver` trait, and the `SolverKind` namespace must round-trip through
+//! its string form (the CLI/wire encoding).
+
+use solvebak::api::{registry, solver_for, Problem, SolverError, SolverKind};
+use solvebak::linalg::Mat;
+use solvebak::solver::SolveOptions;
+use solvebak::util::rng::Rng;
+
+fn planted(seed: u64, obs: usize, vars: usize) -> (Mat, Vec<f32>) {
+    let mut rng = Rng::seed(seed);
+    let x = Mat::randn(&mut rng, obs, vars);
+    let a: Vec<f32> = (0..vars).map(|_| rng.normal_f32()).collect();
+    let y = x.matvec(&a);
+    (x, y)
+}
+
+#[test]
+fn every_registered_solver_solves_a_consistent_system() {
+    // The shared tall workload; square-only solvers get the square
+    // variant of the same draw (their capabilities reject tall).
+    let (tall_x, tall_y) = planted(42, 160, 12);
+    let (sq_x, sq_y) = planted(42, 24, 24);
+    let opts = SolveOptions::builder()
+        .max_sweeps(5000)
+        .tol(1e-5)
+        .thr(4)
+        .check_every(1)
+        .build();
+
+    for solver in registry() {
+        let caps = solver.capabilities();
+        let (x, y) = if caps.needs_square { (&sq_x, &sq_y) } else { (&tall_x, &tall_y) };
+        let problem = Problem::new(x, y).expect("valid planted system");
+        match solver.solve(&problem, &opts) {
+            Ok(rep) => {
+                assert!(
+                    rep.rel_residual() < 1e-3,
+                    "{}: rel_residual {} too large",
+                    solver.name(),
+                    rep.rel_residual()
+                );
+                // The exit invariant e == y - X a holds across the trait.
+                let fresh = solvebak::linalg::residual(x, y, &rep.a);
+                for (f, g) in fresh.iter().zip(&rep.e) {
+                    assert!((f - g).abs() < 1e-3, "{}: stale residual", solver.name());
+                }
+            }
+            // PJRT registers detached (no artifacts in the test env); any
+            // other backend has no excuse.
+            Err(SolverError::Unavailable { .. }) => {
+                assert_eq!(solver.kind(), SolverKind::Pjrt, "{} unavailable", solver.name());
+            }
+            Err(e) => panic!("{} failed: {e}", solver.name()),
+        }
+    }
+}
+
+#[test]
+fn registry_rejects_invalid_problems_without_panicking() {
+    let (x, _) = planted(43, 30, 5);
+    let bad_y = vec![0.0f32; 7]; // wrong length
+    assert!(matches!(Problem::new(&x, &bad_y), Err(SolverError::Shape(_))));
+
+    // Wide system: solvers that declare !supports_wide must return a
+    // typed error through the trait, not panic.
+    let (wide_x, wide_y) = planted(44, 8, 40);
+    let p = Problem::new(&wide_x, &wide_y).unwrap();
+    for solver in registry() {
+        if !solver.capabilities().supports_wide {
+            assert!(
+                solver.solve(&p, &SolveOptions::default()).is_err(),
+                "{} accepted a wide system it does not support",
+                solver.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn kind_display_from_str_round_trip() {
+    for kind in SolverKind::CONCRETE.into_iter().chain([SolverKind::Auto]) {
+        let s = kind.to_string();
+        let back: SolverKind = s.parse().expect("canonical name parses");
+        assert_eq!(back, kind, "round trip failed for '{s}'");
+    }
+}
+
+#[test]
+fn registry_order_matches_concrete_kinds() {
+    let kinds: Vec<SolverKind> = registry().iter().map(|s| s.kind()).collect();
+    assert_eq!(kinds, SolverKind::CONCRETE.to_vec());
+    for &k in &SolverKind::CONCRETE {
+        assert!(solver_for(k).is_some(), "{k} missing from solver_for");
+    }
+    assert!(solver_for(SolverKind::Auto).is_none());
+}
+
+#[test]
+fn aliases_and_unknowns() {
+    assert_eq!("lapack".parse::<SolverKind>().unwrap(), SolverKind::Qr);
+    assert_eq!("QR".parse::<SolverKind>().unwrap(), SolverKind::Qr);
+    assert_eq!("bak-multi".parse::<SolverKind>().unwrap(), SolverKind::BakMulti);
+    let err = "warp-drive".parse::<SolverKind>().unwrap_err();
+    assert!(matches!(err, SolverError::UnknownKind(_)));
+    assert!(err.to_string().contains("warp_drive") || err.to_string().contains("warp-drive"));
+}

@@ -1,0 +1,124 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The solvebak build environment has no network access, so instead of a
+//! registry dependency this vendored shim provides exactly the surface the
+//! runtime layer uses: [`Error`], [`Result`], the [`anyhow!`]/[`bail!`]
+//! macros, and the [`Context`] extension trait. Errors are flattened to a
+//! message string (no backtraces, no source chains) — enough for the
+//! "report upward and degrade" error handling the crate does.
+
+use std::fmt;
+
+/// A flattened error message.
+pub struct Error(String);
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error(m.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+// Like real anyhow: any std error converts; Error itself deliberately does
+// NOT implement std::error::Error so this blanket impl stays coherent.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error(e.to_string())
+    }
+}
+
+/// `anyhow::Result<T>` alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error, mirroring anyhow's `Context` trait.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error(c.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+/// Format an [`Error`] from format args.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macro_formats() {
+        let e: Error = anyhow!("bad {} at {}", "thing", 3);
+        assert_eq!(e.to_string(), "bad thing at 3");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("nope");
+            }
+            Ok(7)
+        }
+        assert_eq!(f(false).unwrap(), 7);
+        assert_eq!(f(true).unwrap_err().to_string(), "nope");
+    }
+
+    #[test]
+    fn context_wraps() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("reading manifest").unwrap_err();
+        assert!(e.to_string().starts_with("reading manifest: "));
+        let o: Option<u8> = None;
+        assert_eq!(o.with_context(|| "missing").unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn from_std_error() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("gone"));
+    }
+}
