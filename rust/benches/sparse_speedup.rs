@@ -1,0 +1,81 @@
+//! Sparse-vs-dense SolveBak at fixed shape across densities: the
+//! acceptance bench for the sparse subsystem. A BAK sweep is one dot +
+//! one axpy per column, so on CSC storage the sweep cost drops from
+//! O(obs*vars) to O(nnz) — at density d the arithmetic shrinks by ~1/d,
+//! and this bench measures how much of that survives the gather/scatter
+//! overhead of compressed storage.
+//!
+//! Shape is the ISSUE's 4096x1024 tall system; both solvers run the same
+//! fixed sweep budget (tol = 0) so the comparison is pure per-sweep cost.
+//!
+//! Run: `cargo bench --bench sparse_speedup`
+
+use solvebak::bench::workload::{SparseWorkload, WorkloadSpec};
+use solvebak::solver::{self, SolveOptions};
+use solvebak::sparse;
+use solvebak::util::stats::Summary;
+use solvebak::util::timer::{sample, BenchConfig};
+
+fn main() {
+    let (obs, vars) = (4096, 1024);
+    let sweeps = 4;
+    let cfg = BenchConfig { warmup: 1, samples: 5, ..BenchConfig::default() };
+    let mut opts = SolveOptions::default();
+    opts.max_sweeps = sweeps;
+    opts.tol = 0.0;
+
+    println!("# sparse vs dense BAK, {obs}x{vars}, {sweeps} sweeps per solve");
+    println!(
+        "{:>9} {:>10} {:>12} {:>12} {:>9}",
+        "density", "nnz", "dense", "sparse", "speedup"
+    );
+
+    for density in [0.001, 0.01, 0.05, 0.2] {
+        let w = SparseWorkload::uniform(WorkloadSpec::new(obs, vars, 42), density);
+        let dense = w.densified();
+        let y = &w.y;
+
+        let td = Summary::of(&sample(&cfg, || {
+            std::hint::black_box(solver::solve_bak(&dense, y, &opts));
+        }));
+        let ts = Summary::of(&sample(&cfg, || {
+            std::hint::black_box(sparse::solve_bak_csc(&w.x, y, &opts));
+        }));
+
+        println!(
+            "{:>9.3} {:>10} {:>10.2}ms {:>10.2}ms {:>8.1}x",
+            density,
+            w.x.nnz(),
+            td.min * 1e3,
+            ts.min * 1e3,
+            td.min / ts.min
+        );
+        if density <= 0.01 {
+            assert!(
+                ts.min < td.min,
+                "acceptance: native sparse BAK must beat dense at density {density} \
+                 (sparse {:.3}ms vs dense {:.3}ms)",
+                ts.min * 1e3,
+                td.min * 1e3
+            );
+        }
+    }
+
+    // The power-law shape: a few dense head columns, long sparse tail.
+    let w = SparseWorkload::power_law(WorkloadSpec::new(obs, vars, 43), 1.0, 0.5);
+    let dense = w.densified();
+    let y = &w.y;
+    let td = Summary::of(&sample(&cfg, || {
+        std::hint::black_box(solver::solve_bak(&dense, y, &opts));
+    }));
+    let ts = Summary::of(&sample(&cfg, || {
+        std::hint::black_box(sparse::solve_bak_csc(&w.x, y, &opts));
+    }));
+    println!(
+        "power-law (alpha=1, head 50%): nnz={} dense {:.2}ms sparse {:.2}ms ({:.1}x)",
+        w.x.nnz(),
+        td.min * 1e3,
+        ts.min * 1e3,
+        td.min / ts.min
+    );
+}

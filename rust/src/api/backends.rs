@@ -1,16 +1,45 @@
 //! [`Solver`] implementations: thin adapters from the trait to the
 //! underlying free functions in [`crate::solver`], [`crate::baselines`],
-//! and [`crate::runtime`]. The free functions stay public and stable; the
-//! adapters add shape/capability checking and typed errors.
+//! [`crate::sparse::solve`], and [`crate::runtime`]. The free functions
+//! stay public and stable; the adapters add shape/capability checking,
+//! typed errors, and the dense/sparse representation dispatch: kinds with
+//! `supports_sparse` run the native O(nnz) path, everything else goes
+//! through [`dense_or_warn`] (materialise + log).
 
+use std::borrow::Cow;
 use std::sync::Arc;
 
 use crate::baselines;
-use crate::linalg::blas1;
+use crate::linalg::{blas1, Mat};
 use crate::runtime::{ArtifactKind, Engine};
 use crate::solver::{self, SolveOptions, SolveReport, StopReason};
+use crate::sparse;
+use crate::util::log::{emit, Level};
 
-use super::{report_from_coefficients, Capabilities, Problem, Solver, SolverError, SolverKind};
+use super::{
+    report_from_coefficients, residual_ref, Capabilities, MatrixRef, Problem, Solver,
+    SolverError, SolverKind,
+};
+
+/// Dense view of the problem's matrix for a backend without a native
+/// sparse path: borrows when already dense; materialises (O(obs*vars))
+/// with a logged warning when sparse. The coordinator layers a
+/// `densified_jobs` metric on top of the same event.
+fn dense_or_warn<'a>(p: &Problem<'a>, backend: &'static str) -> Cow<'a, Mat> {
+    if let MatrixRef::SparseCsc(s) = p.x() {
+        emit(
+            Level::Warn,
+            "api",
+            format_args!(
+                "backend '{backend}' has no native sparse path; densifying {}x{} (nnz={})",
+                s.rows(),
+                s.cols(),
+                s.nnz()
+            ),
+        );
+    }
+    p.x().to_dense()
+}
 
 /// Algorithm 1 — sequential cyclic coordinate descent.
 pub struct BakSolver;
@@ -30,21 +59,27 @@ impl Solver for BakSolver {
         opts: &SolveOptions,
     ) -> Result<SolveReport, SolverError> {
         self.capabilities().check(p.obs(), p.vars())?;
-        match p.warm_start() {
-            Some(a0) => {
-                let cninv = solver::colnorms_inv(p.x());
-                let mut a = a0.to_vec();
-                let mut e = crate::linalg::residual(p.x(), p.y(), &a);
-                Ok(solver::bak::solve_bak_warm(
-                    p.x(),
-                    &cninv,
-                    &mut a,
-                    &mut e,
-                    p.y(),
-                    opts,
-                ))
-            }
-            None => Ok(solver::solve_bak(p.x(), p.y(), opts)),
+        match p.x() {
+            MatrixRef::Dense(x) => match p.warm_start() {
+                Some(a0) => {
+                    let cninv = solver::colnorms_inv(x);
+                    let mut a = a0.to_vec();
+                    let mut e = crate::linalg::residual(x, p.y(), &a);
+                    Ok(solver::bak::solve_bak_warm(x, &cninv, &mut a, &mut e, p.y(), opts))
+                }
+                None => Ok(solver::solve_bak(x, p.y(), opts)),
+            },
+            MatrixRef::SparseCsc(s) => match p.warm_start() {
+                Some(a0) => {
+                    let cninv = sparse::solve::colnorms_inv_csc(s);
+                    let mut a = a0.to_vec();
+                    let mut e = residual_ref(p.x(), p.y(), &a);
+                    Ok(sparse::solve::solve_bak_csc_warm(
+                        s, &cninv, &mut a, &mut e, p.y(), opts,
+                    ))
+                }
+                None => Ok(sparse::solve::solve_bak_csc(s, p.y(), opts)),
+            },
         }
     }
 }
@@ -67,7 +102,10 @@ impl Solver for BakpSolver {
         opts: &SolveOptions,
     ) -> Result<SolveReport, SolverError> {
         self.capabilities().check(p.obs(), p.vars())?;
-        Ok(solver::solve_bakp(p.x(), p.y(), opts))
+        match p.x() {
+            MatrixRef::Dense(x) => Ok(solver::solve_bakp(x, p.y(), opts)),
+            MatrixRef::SparseCsc(s) => Ok(sparse::solve::solve_bakp_csc(s, p.y(), opts)),
+        }
     }
 }
 
@@ -91,7 +129,8 @@ impl Solver for BakMultiSolver {
         opts: &SolveOptions,
     ) -> Result<SolveReport, SolverError> {
         self.capabilities().check(p.obs(), p.vars())?;
-        let mut reports = solver::solve_bak_multi(p.x(), &[p.y().to_vec()], opts);
+        let x = dense_or_warn(p, "bak_multi");
+        let mut reports = solver::solve_bak_multi(&x, &[p.y().to_vec()], opts);
         reports.pop().ok_or_else(|| SolverError::Backend {
             backend: "bak_multi".into(),
             reason: "no report produced".into(),
@@ -117,7 +156,15 @@ impl Solver for KaczmarzSolver {
         opts: &SolveOptions,
     ) -> Result<SolveReport, SolverError> {
         self.capabilities().check(p.obs(), p.vars())?;
-        Ok(solver::solve_kaczmarz(p.x(), p.y(), opts))
+        match p.x() {
+            MatrixRef::Dense(x) => Ok(solver::solve_kaczmarz(x, p.y(), opts)),
+            MatrixRef::SparseCsc(s) => {
+                // Row actions want CSR; the O(nnz) counting transpose is
+                // far cheaper than densifying.
+                let csr = s.to_csr();
+                Ok(sparse::solve::solve_kaczmarz_csr(&csr, p.y(), opts))
+            }
+        }
     }
 }
 
@@ -139,7 +186,8 @@ impl Solver for GaussSouthwellSolver {
         opts: &SolveOptions,
     ) -> Result<SolveReport, SolverError> {
         self.capabilities().check(p.obs(), p.vars())?;
-        Ok(solver::solve_gauss_southwell(p.x(), p.y(), opts))
+        let x = dense_or_warn(p, "gauss_southwell");
+        Ok(solver::solve_gauss_southwell(&x, p.y(), opts))
     }
 }
 
@@ -163,8 +211,9 @@ impl Solver for QrSolver {
     ) -> Result<SolveReport, SolverError> {
         let _ = opts; // direct method: convergence knobs don't apply
         self.capabilities().check(p.obs(), p.vars())?;
-        let a = baselines::qr::lstsq_qr(p.x(), p.y())?;
-        Ok(report_from_coefficients(p.x(), p.y(), a))
+        let x = dense_or_warn(p, "qr");
+        let a = baselines::qr::lstsq_qr(&x, p.y())?;
+        Ok(report_from_coefficients(&x, p.y(), a))
     }
 }
 
@@ -187,8 +236,9 @@ impl Solver for CholeskySolver {
     ) -> Result<SolveReport, SolverError> {
         let _ = opts;
         self.capabilities().check(p.obs(), p.vars())?;
-        let a = baselines::cholesky::solve_normal_equations(p.x(), p.y(), 0.0)?;
-        Ok(report_from_coefficients(p.x(), p.y(), a))
+        let x = dense_or_warn(p, "cholesky");
+        let a = baselines::cholesky::solve_normal_equations(&x, p.y(), 0.0)?;
+        Ok(report_from_coefficients(&x, p.y(), a))
     }
 }
 
@@ -211,8 +261,9 @@ impl Solver for GaussSolver {
     ) -> Result<SolveReport, SolverError> {
         let _ = opts;
         self.capabilities().check(p.obs(), p.vars())?;
-        let a = baselines::gauss::gauss_solve(p.x(), p.y())?;
-        Ok(report_from_coefficients(p.x(), p.y(), a))
+        let x = dense_or_warn(p, "gauss");
+        let a = baselines::gauss::gauss_solve(&x, p.y())?;
+        Ok(report_from_coefficients(&x, p.y(), a))
     }
 }
 
@@ -234,8 +285,15 @@ impl Solver for CglsSolver {
         opts: &SolveOptions,
     ) -> Result<SolveReport, SolverError> {
         self.capabilities().check(p.obs(), p.vars())?;
-        let rep = baselines::cgls::cgls_solve(p.x(), p.y(), opts.max_sweeps, opts.tol);
-        let e = crate::linalg::residual(p.x(), p.y(), &rep.a);
+        let rep = match p.x() {
+            MatrixRef::Dense(x) => {
+                baselines::cgls::cgls_solve(x, p.y(), opts.max_sweeps, opts.tol)
+            }
+            MatrixRef::SparseCsc(s) => {
+                sparse::solve::cgls_csc(s, p.y(), opts.max_sweeps, opts.tol)
+            }
+        };
+        let e = residual_ref(p.x(), p.y(), &rep.a);
         Ok(SolveReport {
             a: rep.a,
             e,
@@ -292,13 +350,17 @@ impl Solver for PjrtSolver {
                 backend: "pjrt".into(),
                 reason: "no engine attached (load artifacts and use with_engine)".into(),
             }),
-            Some(eng) => eng
-                .solve(p.x(), p.y(), opts, ArtifactKind::BakpSweep)
-                .map(|o| o.report)
-                .map_err(|e| SolverError::Backend {
-                    backend: "pjrt".into(),
-                    reason: e.to_string(),
-                }),
+            Some(eng) => {
+                // Densify only once an engine exists — detached solves
+                // must stay O(1).
+                let x = dense_or_warn(p, "pjrt");
+                eng.solve(&x, p.y(), opts, ArtifactKind::BakpSweep)
+                    .map(|o| o.report)
+                    .map_err(|e| SolverError::Backend {
+                        backend: "pjrt".into(),
+                        reason: e.to_string(),
+                    })
+            }
         }
     }
 }
@@ -397,5 +459,68 @@ mod tests {
             PjrtSolver::detached().solve(&p, &SolveOptions::default()),
             Err(SolverError::Unavailable { .. })
         ));
+    }
+
+    fn planted_sparse(
+        seed: u64,
+        obs: usize,
+        vars: usize,
+    ) -> (crate::sparse::CscMat, Vec<f32>, Vec<f32>) {
+        let w = crate::bench::workload::SparseWorkload::uniform(
+            crate::bench::workload::WorkloadSpec::new(obs, vars, seed),
+            0.15,
+        );
+        (w.x, w.y, w.a_true)
+    }
+
+    #[test]
+    fn sparse_native_solvers_match_their_densified_run() {
+        let (x, y, _) = planted_sparse(710, 150, 18);
+        let dense = x.to_dense();
+        let opts = SolveOptions::builder().max_sweeps(4).tol(0.0).build();
+        for kind in [SolverKind::Bak, SolverKind::Bakp, SolverKind::Kaczmarz] {
+            let solver = super::super::solver_for(kind).unwrap();
+            let ps = Problem::new_sparse(&x, &y).unwrap();
+            let pd = Problem::new(&dense, &y).unwrap();
+            let rs = solver.solve(&ps, &opts).unwrap();
+            let rd = solver.solve(&pd, &opts).unwrap();
+            for (s, d) in rs.a.iter().zip(&rd.a) {
+                assert!((s - d).abs() < 1e-3, "{kind}: sparse {s} vs dense {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn cgls_solves_sparse_natively() {
+        let (x, y, a_true) = planted_sparse(711, 200, 15);
+        let p = Problem::new_sparse(&x, &y).unwrap();
+        let opts = SolveOptions::builder().max_sweeps(100).tol(1e-8).build();
+        let rep = CglsSolver.solve(&p, &opts).unwrap();
+        assert!(rel_l2(&rep.a, &a_true) < 1e-3);
+        // Exit invariant holds against the sparse matrix.
+        let fresh = residual_ref(p.x(), &y, &rep.a);
+        for (f, g) in fresh.iter().zip(&rep.e) {
+            assert!((f - g).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn dense_only_solver_answers_sparse_via_densification() {
+        let (x, y, a_true) = planted_sparse(712, 60, 12);
+        let p = Problem::new_sparse(&x, &y).unwrap();
+        let rep = QrSolver.solve(&p, &SolveOptions::default()).unwrap();
+        assert!(rel_l2(&rep.a, &a_true) < 1e-3);
+    }
+
+    #[test]
+    fn bak_sparse_warm_start_honoured() {
+        let (x, y, a_true) = planted_sparse(713, 180, 12);
+        let opts = SolveOptions::builder().max_sweeps(1).tol(0.0).build();
+        let p = Problem::new_sparse(&x, &y).unwrap();
+        let warm = p.with_warm_start(&a_true).unwrap();
+        let rep = BakSolver.solve(&warm, &opts).unwrap();
+        assert!(rep.rel_residual() < 1e-4, "rel={}", rep.rel_residual());
+        let cold = BakSolver.solve(&p, &opts).unwrap();
+        assert!(cold.rel_residual() > rep.rel_residual());
     }
 }

@@ -87,27 +87,34 @@ impl SolverKind {
             iterative: true,
             needs_square: false,
             warm_start: false,
+            supports_sparse: false,
         };
         match self {
-            SolverKind::Bak => Some(Capabilities { warm_start: true, ..ITERATIVE }),
-            SolverKind::Bakp
-            | SolverKind::BakMulti
-            | SolverKind::Kaczmarz
-            | SolverKind::GaussSouthwell
-            | SolverKind::Cgls
-            | SolverKind::Pjrt => Some(ITERATIVE),
+            SolverKind::Bak => Some(Capabilities {
+                warm_start: true,
+                supports_sparse: true,
+                ..ITERATIVE
+            }),
+            SolverKind::Bakp | SolverKind::Kaczmarz | SolverKind::Cgls => {
+                Some(Capabilities { supports_sparse: true, ..ITERATIVE })
+            }
+            SolverKind::BakMulti | SolverKind::GaussSouthwell | SolverKind::Pjrt => {
+                Some(ITERATIVE)
+            }
             SolverKind::Qr => Some(Capabilities { iterative: false, ..ITERATIVE }),
             SolverKind::Cholesky => Some(Capabilities {
                 supports_wide: false,
                 iterative: false,
                 needs_square: false,
                 warm_start: false,
+                supports_sparse: false,
             }),
             SolverKind::Gauss => Some(Capabilities {
                 supports_wide: false,
                 iterative: false,
                 needs_square: true,
                 warm_start: false,
+                supports_sparse: false,
             }),
             SolverKind::Auto => None,
         }
@@ -221,6 +228,24 @@ mod tests {
             assert_eq!(Some(s.capabilities()), s.kind().capabilities(), "{}", s.name());
         }
         assert!(SolverKind::Auto.capabilities().is_none());
+    }
+
+    #[test]
+    fn sparse_native_kinds_are_exactly_the_iterative_quartet() {
+        let native: Vec<SolverKind> = SolverKind::CONCRETE
+            .iter()
+            .copied()
+            .filter(|k| k.capabilities().is_some_and(|c| c.supports_sparse))
+            .collect();
+        assert_eq!(
+            native,
+            vec![
+                SolverKind::Bak,
+                SolverKind::Bakp,
+                SolverKind::Kaczmarz,
+                SolverKind::Cgls
+            ]
+        );
     }
 
     #[test]

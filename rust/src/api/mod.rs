@@ -22,18 +22,24 @@
 //!
 //! ## Capability matrix
 //!
-//! | kind              | supports_wide | iterative | needs_square | warm_start |
-//! |-------------------|---------------|-----------|--------------|------------|
-//! | `bak`             | yes           | yes       | no           | yes        |
-//! | `bakp`            | yes           | yes       | no           | no         |
-//! | `bak_multi`       | yes           | yes       | no           | no         |
-//! | `kaczmarz`        | yes           | yes       | no           | no         |
-//! | `gauss_southwell` | yes           | yes       | no           | no         |
-//! | `qr`              | yes (min-norm)| no        | no           | no         |
-//! | `cholesky`        | no            | no        | no           | no         |
-//! | `gauss`           | no            | no        | yes          | no         |
-//! | `cgls`            | yes           | yes       | no           | no         |
-//! | `pjrt`            | yes (bucketed)| yes       | no           | no         |
+//! | kind              | supports_wide | iterative | needs_square | warm_start | supports_sparse |
+//! |-------------------|---------------|-----------|--------------|------------|-----------------|
+//! | `bak`             | yes           | yes       | no           | yes        | yes (CSC)       |
+//! | `bakp`            | yes           | yes       | no           | no         | yes (CSC)       |
+//! | `bak_multi`       | yes           | yes       | no           | no         | no (densifies)  |
+//! | `kaczmarz`        | yes           | yes       | no           | no         | yes (CSR)       |
+//! | `gauss_southwell` | yes           | yes       | no           | no         | no (densifies)  |
+//! | `qr`              | yes (min-norm)| no        | no           | no         | no (densifies)  |
+//! | `cholesky`        | no            | no        | no           | no         | no (densifies)  |
+//! | `gauss`           | no            | no        | yes          | no         | no (densifies)  |
+//! | `cgls`            | yes           | yes       | no           | no         | yes (CSC)       |
+//! | `pjrt`            | yes (bucketed)| yes       | no           | no         | no (densifies)  |
+//!
+//! Sparse problems ([`Problem::new_sparse`]) run natively on the kinds
+//! whose `supports_sparse` is true; every other kind transparently
+//! densifies the matrix (with a logged warning — and a `densified_jobs`
+//! metric when it happens inside the coordinator) so *all* registered
+//! solvers answer sparse requests.
 
 pub mod backends;
 pub mod kind;
@@ -41,8 +47,11 @@ pub mod kind;
 pub use backends::PjrtSolver;
 pub use kind::{registry, solver_for, SolverKind};
 
+use std::borrow::Cow;
+
 use crate::linalg::{blas1, Mat};
 use crate::solver::{SolveOptions, SolveReport, StopReason};
+use crate::sparse::CscMat;
 
 /// Typed solver failure. Replaces the crate's previous mix of
 /// `Result<_, String>` and `expect(...)` panic paths.
@@ -108,21 +117,119 @@ impl From<crate::baselines::qr::SolveError> for SolverError {
     }
 }
 
+/// A borrowed view of the system matrix: dense col-major [`Mat`] or
+/// compressed sparse column [`CscMat`].
+///
+/// This is the type [`Problem`] carries, so every [`Solver`] sees one
+/// dispatch surface for both representations. Solvers with native sparse
+/// paths match on it; dense-only solvers call [`MatrixRef::to_dense`]
+/// (borrowing when already dense, materialising O(obs*vars) when sparse).
+#[derive(Clone, Copy)]
+pub enum MatrixRef<'a> {
+    /// Dense column-major storage.
+    Dense(&'a Mat),
+    /// Compressed sparse column storage.
+    SparseCsc(&'a CscMat),
+}
+
+impl<'a> MatrixRef<'a> {
+    #[inline]
+    pub fn rows(&self) -> usize {
+        match self {
+            MatrixRef::Dense(m) => m.rows(),
+            MatrixRef::SparseCsc(s) => s.rows(),
+        }
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        match self {
+            MatrixRef::Dense(m) => m.cols(),
+            MatrixRef::SparseCsc(s) => s.cols(),
+        }
+    }
+
+    /// (rows, cols).
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows(), self.cols())
+    }
+
+    /// Stored entries: `rows*cols` for dense, `nnz` for sparse.
+    pub fn nnz(&self) -> usize {
+        match self {
+            MatrixRef::Dense(m) => m.rows() * m.cols(),
+            MatrixRef::SparseCsc(s) => s.nnz(),
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, MatrixRef::SparseCsc(_))
+    }
+
+    /// Dense view: borrows when already dense, materialises (O(rows*cols))
+    /// when sparse. Callers that care about the cost should check
+    /// [`MatrixRef::is_sparse`] and log/count the densification.
+    pub fn to_dense(&self) -> Cow<'a, Mat> {
+        match *self {
+            MatrixRef::Dense(m) => Cow::Borrowed(m),
+            MatrixRef::SparseCsc(s) => Cow::Owned(s.to_dense()),
+        }
+    }
+
+    /// y = X a (O(nnz) on sparse storage).
+    pub fn matvec(&self, a: &[f32]) -> Vec<f32> {
+        match self {
+            MatrixRef::Dense(m) => m.matvec(a),
+            MatrixRef::SparseCsc(s) => s.matvec(a),
+        }
+    }
+
+    /// out = Xᵀ v (O(nnz) on sparse storage).
+    pub fn matvec_t(&self, v: &[f32]) -> Vec<f32> {
+        match self {
+            MatrixRef::Dense(m) => m.matvec_t(v),
+            MatrixRef::SparseCsc(s) => s.matvec_t(v),
+        }
+    }
+
+    /// <x_j, x_j> for every column.
+    pub fn colnorms_sq(&self) -> Vec<f32> {
+        match self {
+            MatrixRef::Dense(m) => m.colnorms_sq(),
+            MatrixRef::SparseCsc(s) => s.colnorms_sq(),
+        }
+    }
+}
+
+/// Residual e = y - X a against either representation.
+pub fn residual_ref(x: MatrixRef<'_>, y: &[f32], a: &[f32]) -> Vec<f32> {
+    let xa = x.matvec(a);
+    y.iter().zip(&xa).map(|(&yi, &xi)| yi - xi).collect()
+}
+
 /// A validated least-squares problem: minimise `||y - X a||` (borrowed
 /// views; construction checks shapes and scans for NaN/Inf so solvers can
-/// assume clean inputs).
+/// assume clean inputs). The matrix side is a [`MatrixRef`] — dense or
+/// sparse CSC — so one `Problem` type serves both workload classes.
 #[derive(Clone, Copy)]
 pub struct Problem<'a> {
-    x: &'a Mat,
+    x: MatrixRef<'a>,
     y: &'a [f32],
     warm: Option<&'a [f32]>,
 }
 
 impl<'a> Problem<'a> {
-    /// Validate and wrap `(X, y)`.
+    /// Validate and wrap a dense `(X, y)`.
     pub fn new(x: &'a Mat, y: &'a [f32]) -> Result<Self, SolverError> {
         Self::validate_matrix(x)?;
         Self::prevalidated(x, y)
+    }
+
+    /// Validate and wrap a sparse `(X, y)`.
+    pub fn new_sparse(x: &'a CscMat, y: &'a [f32]) -> Result<Self, SolverError> {
+        Self::validate_sparse_matrix(x)?;
+        Self::prevalidated_sparse(x, y)
     }
 
     /// Matrix-side validation only: non-empty and finite. `O(obs*vars)`.
@@ -137,11 +244,35 @@ impl<'a> Problem<'a> {
         Ok(())
     }
 
+    /// Sparse matrix-side validation: non-empty shape and finite stored
+    /// values. `O(nnz)`.
+    pub fn validate_sparse_matrix(x: &CscMat) -> Result<(), SolverError> {
+        let (obs, vars) = x.shape();
+        if obs == 0 || vars == 0 {
+            return Err(SolverError::Shape(format!("empty system {obs}x{vars}")));
+        }
+        if !x.values().iter().all(|v| v.is_finite()) {
+            return Err(SolverError::NonFinite { what: "x" });
+        }
+        Ok(())
+    }
+
     /// Like [`Problem::new`] but skips the `O(obs*vars)` finite-scan of
     /// `x` — for callers that ran [`Problem::validate_matrix`] once and
     /// construct many problems against the same shared matrix (the
     /// coordinator's batch path). Still checks the `O(obs)` y side.
     pub fn prevalidated(x: &'a Mat, y: &'a [f32]) -> Result<Self, SolverError> {
+        Self::prevalidated_ref(MatrixRef::Dense(x), y)
+    }
+
+    /// Sparse counterpart of [`Problem::prevalidated`] (pair it with
+    /// [`Problem::validate_sparse_matrix`]).
+    pub fn prevalidated_sparse(x: &'a CscMat, y: &'a [f32]) -> Result<Self, SolverError> {
+        Self::prevalidated_ref(MatrixRef::SparseCsc(x), y)
+    }
+
+    /// Shared y-side validation over either representation.
+    pub fn prevalidated_ref(x: MatrixRef<'a>, y: &'a [f32]) -> Result<Self, SolverError> {
         let (obs, vars) = x.shape();
         if obs == 0 || vars == 0 {
             return Err(SolverError::Shape(format!("empty system {obs}x{vars}")));
@@ -175,8 +306,22 @@ impl<'a> Problem<'a> {
         Ok(self)
     }
 
-    pub fn x(&self) -> &'a Mat {
+    /// The system matrix, dense or sparse.
+    pub fn x(&self) -> MatrixRef<'a> {
         self.x
+    }
+
+    /// Dense view of the matrix: borrowed when the problem is dense,
+    /// materialised (O(obs*vars)) when sparse. Backends without a native
+    /// sparse path go through [`backends`]' warning-logged wrapper instead
+    /// of calling this directly.
+    pub fn dense_x(&self) -> Cow<'a, Mat> {
+        self.x.to_dense()
+    }
+
+    /// True when the matrix is stored sparse.
+    pub fn is_sparse(&self) -> bool {
+        self.x.is_sparse()
     }
 
     pub fn y(&self) -> &'a [f32] {
@@ -222,6 +367,10 @@ pub struct Capabilities {
     pub needs_square: bool,
     /// Honours [`Problem::with_warm_start`].
     pub warm_start: bool,
+    /// Runs sparse ([`MatrixRef::SparseCsc`]) problems natively in
+    /// O(nnz) per sweep; false = the backend densifies sparse input
+    /// (logged, and counted as `densified_jobs` by the coordinator).
+    pub supports_sparse: bool,
 }
 
 impl Capabilities {
@@ -368,6 +517,7 @@ mod tests {
             iterative: false,
             needs_square: true,
             warm_start: false,
+            supports_sparse: false,
         };
         assert!(square_only.check(5, 5).is_ok());
         assert!(matches!(
@@ -384,5 +534,74 @@ mod tests {
         let e: SolverError = crate::baselines::qr::SolveError::RankDeficient(3).into();
         assert_eq!(e, SolverError::RankDeficient { column: 3 });
         assert!(e.to_string().contains("column 3"));
+    }
+
+    fn small_csc() -> crate::sparse::CscMat {
+        let mut b = crate::sparse::CooBuilder::new(4, 2);
+        b.push(0, 0, 1.0);
+        b.push(2, 0, -2.0);
+        b.push(1, 1, 3.0);
+        b.to_csc()
+    }
+
+    #[test]
+    fn sparse_problem_validates_and_reports_shape() {
+        let x = small_csc();
+        let y = vec![0.0f32; 4];
+        let p = Problem::new_sparse(&x, &y).unwrap();
+        assert!(p.is_sparse());
+        assert_eq!(p.shape(), (4, 2));
+        assert_eq!(p.x().nnz(), 3);
+        assert!(matches!(
+            Problem::new_sparse(&x, &[0.0; 3]),
+            Err(SolverError::Shape(_))
+        ));
+    }
+
+    #[test]
+    fn sparse_problem_rejects_non_finite_values() {
+        let mut b = crate::sparse::CooBuilder::new(3, 1);
+        b.push(0, 0, f32::NAN);
+        let x = b.to_csc();
+        assert_eq!(
+            Problem::new_sparse(&x, &[0.0; 3]).unwrap_err(),
+            SolverError::NonFinite { what: "x" }
+        );
+    }
+
+    #[test]
+    fn dense_x_borrows_dense_and_materialises_sparse() {
+        let mut rng = Rng::seed(6);
+        let m = Mat::randn(&mut rng, 5, 3);
+        let y = vec![0.0f32; 5];
+        let p = Problem::new(&m, &y).unwrap();
+        assert!(!p.is_sparse());
+        assert!(matches!(p.dense_x(), std::borrow::Cow::Borrowed(_)));
+
+        let x = small_csc();
+        let ys = vec![0.0f32; 4];
+        let ps = Problem::new_sparse(&x, &ys).unwrap();
+        let dense = ps.dense_x();
+        assert!(matches!(dense, std::borrow::Cow::Owned(_)));
+        assert_eq!(*dense, x.to_dense());
+    }
+
+    #[test]
+    fn matrix_ref_ops_agree_across_representations() {
+        let x = small_csc();
+        let dense = x.to_dense();
+        let sref = MatrixRef::SparseCsc(&x);
+        let dref = MatrixRef::Dense(&dense);
+        assert_eq!(sref.shape(), dref.shape());
+        assert_eq!(sref.matvec(&[1.0, 2.0]), dref.matvec(&[1.0, 2.0]));
+        assert_eq!(
+            sref.matvec_t(&[1.0, 1.0, 1.0, 1.0]),
+            dref.matvec_t(&[1.0, 1.0, 1.0, 1.0])
+        );
+        assert_eq!(sref.colnorms_sq(), dref.colnorms_sq());
+        let a = [0.5f32, -1.0];
+        let y = dense.matvec(&a);
+        let e = residual_ref(sref, &y, &a);
+        assert!(e.iter().all(|v| v.abs() < 1e-6));
     }
 }

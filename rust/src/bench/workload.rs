@@ -6,6 +6,7 @@
 //! sparse-support regression targets.
 
 use crate::linalg::{blas1, Mat};
+use crate::sparse::{CooBuilder, CscMat};
 use crate::util::rng::Rng;
 
 /// Specification of one benchmark system.
@@ -86,6 +87,64 @@ impl Workload {
     }
 }
 
+/// A generated sparse system (CSC) with its planted ground truth — the
+/// O(nnz) workload class for `benches/sparse_speedup.rs` and the CLI's
+/// `--sparse` mode.
+pub struct SparseWorkload {
+    pub spec: WorkloadSpec,
+    pub x: CscMat,
+    pub y: Vec<f32>,
+    pub a_true: Vec<f32>,
+}
+
+impl SparseWorkload {
+    /// Uniform-random sparsity: each cell is nonzero independently with
+    /// probability `density` (iid normal values), plus one guaranteed
+    /// entry per column so every planted coefficient is identifiable.
+    /// y = X a_true exactly.
+    pub fn uniform(spec: WorkloadSpec, density: f64) -> Self {
+        let mut rng = Rng::seed(spec.seed);
+        let mut b = CooBuilder::new(spec.obs, spec.vars);
+        for j in 0..spec.vars {
+            b.push(rng.below(spec.obs), j, rng.normal_f32());
+            for i in 0..spec.obs {
+                if rng.uniform() < density {
+                    b.push(i, j, rng.normal_f32());
+                }
+            }
+        }
+        Self::planted(spec, b.to_csc(), &mut rng)
+    }
+
+    /// Power-law column occupancy: column j gets
+    /// `max(1, obs * max_density * (j+1)^-alpha)` nonzeros at random rows
+    /// — a few dense "head" columns and a long sparse tail, the shape of
+    /// one-hot / n-gram feature matrices.
+    pub fn power_law(spec: WorkloadSpec, alpha: f64, max_density: f64) -> Self {
+        let mut rng = Rng::seed(spec.seed);
+        let mut b = CooBuilder::new(spec.obs, spec.vars);
+        for j in 0..spec.vars {
+            let frac = max_density * ((j + 1) as f64).powf(-alpha);
+            let nnz = ((spec.obs as f64 * frac) as usize).clamp(1, spec.obs);
+            for i in rng.sample_indices(spec.obs, nnz) {
+                b.push(i, j, rng.normal_f32());
+            }
+        }
+        Self::planted(spec, b.to_csc(), &mut rng)
+    }
+
+    fn planted(spec: WorkloadSpec, x: CscMat, rng: &mut Rng) -> Self {
+        let a_true: Vec<f32> = (0..spec.vars).map(|_| rng.normal_f32()).collect();
+        let y = x.matvec(&a_true);
+        Self { spec, x, y, a_true }
+    }
+
+    /// The same system materialised dense (for sparse-vs-dense benches).
+    pub fn densified(&self) -> Mat {
+        self.x.to_dense()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,5 +197,40 @@ mod tests {
     #[test]
     fn matrix_bytes() {
         assert_eq!(WorkloadSpec::new(10, 10, 0).matrix_bytes(), 400);
+    }
+
+    #[test]
+    fn sparse_uniform_is_consistent_and_near_target_density() {
+        let w = SparseWorkload::uniform(WorkloadSpec::new(400, 50, 11), 0.05);
+        let e = {
+            let xa = w.x.matvec(&w.a_true);
+            w.y.iter().zip(&xa).map(|(&a, &b)| a - b).collect::<Vec<f32>>()
+        };
+        assert!(blas1::nrm2(&e) < 1e-3, "planted solution must be exact");
+        // Density lands near the target (+1/obs for the guaranteed entry).
+        let d = w.x.density();
+        assert!(d > 0.02 && d < 0.09, "density={d}");
+    }
+
+    #[test]
+    fn sparse_uniform_deterministic_per_seed() {
+        let w1 = SparseWorkload::uniform(WorkloadSpec::new(60, 8, 5), 0.1);
+        let w2 = SparseWorkload::uniform(WorkloadSpec::new(60, 8, 5), 0.1);
+        assert_eq!(w1.x, w2.x);
+        assert_eq!(w1.y, w2.y);
+        assert_eq!(w1.densified(), w1.x.to_dense());
+    }
+
+    #[test]
+    fn sparse_power_law_head_heavier_than_tail() {
+        let w = SparseWorkload::power_law(WorkloadSpec::new(500, 40, 7), 1.0, 0.5);
+        let head = w.x.col(0).0.len();
+        let tail = w.x.col(39).0.len();
+        assert!(head > tail, "head {head} vs tail {tail}");
+        assert!(w.x.col(39).0.len() >= 1, "every column keeps >= 1 entry");
+        // Still an exactly consistent system.
+        let xa = w.x.matvec(&w.a_true);
+        let e: Vec<f32> = w.y.iter().zip(&xa).map(|(&a, &b)| a - b).collect();
+        assert!(blas1::nrm2(&e) < 1e-3);
     }
 }

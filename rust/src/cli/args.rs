@@ -26,7 +26,7 @@ pub struct Args {
 const VALUED: &[&str] = &[
     "obs", "vars", "thr", "threads", "sweeps", "tol", "seed", "backend",
     "artifacts", "scale", "samples", "max-feat", "workers", "queue",
-    "requests", "out", "rows", "noise", "level",
+    "requests", "out", "rows", "noise", "level", "density",
 ];
 
 impl Args {

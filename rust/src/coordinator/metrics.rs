@@ -5,6 +5,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::api::SolverKind;
 use crate::util::json::{Json, ObjBuilder};
 
 /// Log-bucketed latency histogram: bucket i covers
@@ -80,7 +81,6 @@ impl Histogram {
 }
 
 /// All coordinator metrics.
-#[derive(Default)]
 pub struct Metrics {
     pub requests_submitted: AtomicU64,
     pub requests_completed: AtomicU64,
@@ -88,8 +88,35 @@ pub struct Metrics {
     pub jobs_run: AtomicU64,
     pub batched_members: AtomicU64,
     pub queue_rejections: AtomicU64,
+    /// Sparse jobs that ran on a backend without a native sparse path and
+    /// were densified before execution.
+    pub densified_jobs: AtomicU64,
+    /// Gauge: jobs currently sitting in the job queue (scheduled but not
+    /// yet picked up by a worker).
+    pub job_queue_depth: AtomicU64,
+    /// Jobs executed per backend, indexed in [`SolverKind::CONCRETE`]
+    /// order (the backend that actually ran, post-routing).
+    backend_jobs: [AtomicU64; SolverKind::CONCRETE.len()],
     pub solve_latency: Histogram,
     pub queue_wait: Histogram,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self {
+            requests_submitted: AtomicU64::new(0),
+            requests_completed: AtomicU64::new(0),
+            requests_failed: AtomicU64::new(0),
+            jobs_run: AtomicU64::new(0),
+            batched_members: AtomicU64::new(0),
+            queue_rejections: AtomicU64::new(0),
+            densified_jobs: AtomicU64::new(0),
+            job_queue_depth: AtomicU64::new(0),
+            backend_jobs: std::array::from_fn(|_| AtomicU64::new(0)),
+            solve_latency: Histogram::new(),
+            queue_wait: Histogram::new(),
+        }
+    }
 }
 
 impl Metrics {
@@ -97,9 +124,31 @@ impl Metrics {
         Self::default()
     }
 
+    /// Count one executed job against the backend that ran it (`Auto`
+    /// never reaches execution, so non-concrete kinds are ignored).
+    pub fn record_backend_job(&self, kind: SolverKind) {
+        if let Some(i) = SolverKind::CONCRETE.iter().position(|&k| k == kind) {
+            self.backend_jobs[i].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Executed-job count for one backend.
+    pub fn backend_jobs(&self, kind: SolverKind) -> u64 {
+        SolverKind::CONCRETE
+            .iter()
+            .position(|&k| k == kind)
+            .map(|i| self.backend_jobs[i].load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
     /// Serialize a snapshot to JSON.
     pub fn to_json(&self) -> Json {
         let c = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
+        let mut per_backend = ObjBuilder::new();
+        for (i, &kind) in SolverKind::CONCRETE.iter().enumerate() {
+            per_backend =
+                per_backend.num(kind.as_str(), self.backend_jobs[i].load(Ordering::Relaxed) as f64);
+        }
         ObjBuilder::new()
             .num("requests_submitted", c(&self.requests_submitted))
             .num("requests_completed", c(&self.requests_completed))
@@ -107,6 +156,9 @@ impl Metrics {
             .num("jobs_run", c(&self.jobs_run))
             .num("batched_members", c(&self.batched_members))
             .num("queue_rejections", c(&self.queue_rejections))
+            .num("densified_jobs", c(&self.densified_jobs))
+            .num("job_queue_depth", c(&self.job_queue_depth))
+            .val("backend_jobs", per_backend.build())
             .num("solve_latency_mean_s", self.solve_latency.mean())
             .num("solve_latency_p50_s", self.solve_latency.quantile(0.5))
             .num("solve_latency_p99_s", self.solve_latency.quantile(0.99))
@@ -163,5 +215,36 @@ mod tests {
         let j = m.to_json();
         assert_eq!(j.get("requests_submitted").unwrap().as_f64(), Some(5.0));
         assert!(j.get("solve_latency_mean_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn sparse_and_queue_fields_exported() {
+        let m = Metrics::new();
+        m.densified_jobs.store(3, Ordering::Relaxed);
+        m.job_queue_depth.store(2, Ordering::Relaxed);
+        let j = m.to_json();
+        assert_eq!(j.get("densified_jobs").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("job_queue_depth").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn per_backend_job_counts() {
+        let m = Metrics::new();
+        m.record_backend_job(SolverKind::Bak);
+        m.record_backend_job(SolverKind::Bak);
+        m.record_backend_job(SolverKind::Qr);
+        m.record_backend_job(SolverKind::Auto); // ignored: never executes
+        assert_eq!(m.backend_jobs(SolverKind::Bak), 2);
+        assert_eq!(m.backend_jobs(SolverKind::Qr), 1);
+        assert_eq!(m.backend_jobs(SolverKind::Cgls), 0);
+        assert_eq!(m.backend_jobs(SolverKind::Auto), 0);
+        let j = m.to_json();
+        let per = j.get("backend_jobs").expect("nested backend_jobs object");
+        assert_eq!(per.get("bak").unwrap().as_f64(), Some(2.0));
+        assert_eq!(per.get("qr").unwrap().as_f64(), Some(1.0));
+        // Every concrete kind is present even at zero.
+        for kind in SolverKind::CONCRETE {
+            assert!(per.get(kind.as_str()).is_some(), "{kind} missing");
+        }
     }
 }

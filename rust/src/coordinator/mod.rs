@@ -21,6 +21,6 @@ pub mod server;
 pub mod service;
 
 pub use crate::api::SolverKind;
-pub use request::{Backend, SolveJob, SolveOutcome, SolveRequest};
+pub use request::{Backend, SharedMatrix, SolveJob, SolveOutcome, SolveRequest};
 pub use router::{route, RouteDecision};
 pub use service::{Coordinator, CoordinatorConfig};

@@ -2,45 +2,103 @@
 
 use std::sync::Arc;
 
-use crate::api::{SolverError, SolverKind};
+use crate::api::{MatrixRef, SolverError, SolverKind};
 use crate::linalg::Mat;
 use crate::solver::{SolveOptions, SolveReport};
+use crate::sparse::CscMat;
 
 /// Backwards-compatible alias: the coordinator used to define its own
 /// `Backend` enum; requests are now addressed by the crate-wide
 /// [`SolverKind`] (any registered solver, not just the original four).
 pub use crate::api::SolverKind as Backend;
 
+/// A shareable system matrix: dense or compressed sparse column, behind
+/// an `Arc` so the batcher can coalesce requests over the same data
+/// without copies. The owned counterpart of [`MatrixRef`].
+#[derive(Clone)]
+pub enum SharedMatrix {
+    Dense(Arc<Mat>),
+    SparseCsc(Arc<CscMat>),
+}
+
+impl SharedMatrix {
+    pub fn rows(&self) -> usize {
+        match self {
+            SharedMatrix::Dense(m) => m.rows(),
+            SharedMatrix::SparseCsc(s) => s.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            SharedMatrix::Dense(m) => m.cols(),
+            SharedMatrix::SparseCsc(s) => s.cols(),
+        }
+    }
+
+    /// (rows, cols).
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows(), self.cols())
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, SharedMatrix::SparseCsc(_))
+    }
+
+    /// Borrowed view for the [`crate::api::Problem`] layer.
+    pub fn matrix_ref(&self) -> MatrixRef<'_> {
+        match self {
+            SharedMatrix::Dense(m) => MatrixRef::Dense(m),
+            SharedMatrix::SparseCsc(s) => MatrixRef::SparseCsc(s),
+        }
+    }
+
+    /// A stable identity (pointer identity of the Arc allocation) — the
+    /// batching key. Dense and sparse allocations can never collide.
+    pub fn key(&self) -> usize {
+        match self {
+            SharedMatrix::Dense(m) => Arc::as_ptr(m) as usize,
+            SharedMatrix::SparseCsc(s) => Arc::as_ptr(s) as usize,
+        }
+    }
+}
+
 /// A solve request: one matrix, one or more right-hand sides.
-///
-/// The matrix is shared (`Arc`) so the batcher can coalesce requests over
-/// the same data without copies.
 #[derive(Clone)]
 pub struct SolveRequest {
     /// Client-assigned id, echoed in the response.
     pub id: u64,
-    pub x: Arc<Mat>,
+    pub x: SharedMatrix,
     pub y: Vec<f32>,
     pub opts: SolveOptions,
     pub backend: SolverKind,
 }
 
 impl SolveRequest {
-    /// Construct with defaults.
+    /// Construct a dense request with defaults.
     pub fn new(id: u64, x: Arc<Mat>, y: Vec<f32>) -> Self {
+        Self::with_matrix(id, SharedMatrix::Dense(x), y)
+    }
+
+    /// Construct a sparse request with defaults.
+    pub fn new_sparse(id: u64, x: Arc<CscMat>, y: Vec<f32>) -> Self {
+        Self::with_matrix(id, SharedMatrix::SparseCsc(x), y)
+    }
+
+    /// Construct from an already-wrapped [`SharedMatrix`].
+    pub fn with_matrix(id: u64, x: SharedMatrix, y: Vec<f32>) -> Self {
         Self { id, x, y, opts: SolveOptions::default(), backend: SolverKind::Auto }
     }
 
-    /// A stable identity for the shared matrix (pointer identity of the
-    /// Arc allocation) — the batching key.
+    /// A stable identity for the shared matrix — the batching key.
     pub fn matrix_key(&self) -> usize {
-        Arc::as_ptr(&self.x) as usize
+        self.x.key()
     }
 }
 
 /// A batched job: one matrix, many RHS (one per original request).
 pub struct SolveJob {
-    pub x: Arc<Mat>,
+    pub x: SharedMatrix,
     /// (request id, rhs) pairs.
     pub members: Vec<(u64, Vec<f32>)>,
     pub opts: SolveOptions,
@@ -107,5 +165,25 @@ mod tests {
         assert_eq!(job.len(), 1);
         assert_eq!(job.members[0].0, 7);
         assert!(!job.is_empty());
+    }
+
+    #[test]
+    fn sparse_requests_share_keys_like_dense_ones() {
+        let mut b = crate::sparse::CooBuilder::new(4, 2);
+        b.push(0, 0, 1.0);
+        b.push(3, 1, 2.0);
+        let s = Arc::new(b.to_csc());
+        let r1 = SolveRequest::new_sparse(1, s.clone(), vec![0.0; 4]);
+        let r2 = SolveRequest::new_sparse(2, s.clone(), vec![1.0; 4]);
+        assert_eq!(r1.matrix_key(), r2.matrix_key());
+        assert!(r1.x.is_sparse());
+        assert_eq!(r1.x.shape(), (4, 2));
+        assert_eq!(r1.x.matrix_ref().nnz(), 2);
+        // A dense request over an equal-shape matrix gets a distinct key.
+        let mut rng = Rng::seed(9);
+        let d = Arc::new(Mat::randn(&mut rng, 4, 2));
+        let r3 = SolveRequest::new(3, d, vec![0.0; 4]);
+        assert_ne!(r1.matrix_key(), r3.matrix_key());
+        assert!(!r3.x.is_sparse());
     }
 }

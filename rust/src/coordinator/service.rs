@@ -33,7 +33,7 @@ use crate::util::log::{emit, Level};
 use super::batch::{coalesce, BatchPolicy};
 use super::metrics::Metrics;
 use super::queue::BoundedQueue;
-use super::request::{SolveJob, SolveOutcome, SolveRequest};
+use super::request::{SharedMatrix, SolveJob, SolveOutcome, SolveRequest};
 use super::router::route;
 
 /// Coordinator configuration.
@@ -128,6 +128,9 @@ impl Coordinator {
                     .name(format!("bak-worker-{i}"))
                     .spawn(move || {
                         while let Some(env) = job_q.pop() {
+                            metrics
+                                .job_queue_depth
+                                .fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
                             run_job(env, engine.as_ref(), &metrics);
                         }
                     })
@@ -252,7 +255,11 @@ fn schedule_batch(
                 .batched_members
                 .fetch_add(job.len() as u64, std::sync::atomic::Ordering::Relaxed);
         }
+        // Gauge up BEFORE the push so a worker's pop-side decrement can
+        // never observe the queue entry ahead of the increment.
+        metrics.job_queue_depth.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         if job_q.push(JobEnvelope { job, replies: job_replies }).is_err() {
+            metrics.job_queue_depth.fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
             return; // shutting down; remaining replies drop -> RecvError
         }
     }
@@ -265,10 +272,12 @@ fn run_job(env: JobEnvelope, engine: Option<&Arc<Engine>>, metrics: &Metrics) {
         job.backend,
         job.x.rows(),
         job.x.cols(),
+        job.x.is_sparse(),
         engine.map(|e| e.manifest()),
     );
+    metrics.record_backend_job(decision.backend);
     let batch_size = job.len();
-    let outcomes = execute_job(&job, decision.backend, engine);
+    let outcomes = execute_job(&job, decision.backend, engine, metrics);
     for (((id, _), outcome), (reply, _submitted)) in
         job.members.iter().zip(outcomes).zip(replies)
     {
@@ -283,23 +292,101 @@ fn run_job(env: JobEnvelope, engine: Option<&Arc<Engine>>, metrics: &Metrics) {
     }
 }
 
-/// Execute all members of a job on the routed backend, amortising shared
-/// work across the batch where the backend allows it (QR factors once per
-/// job, BAK shares column norms, BAK-multi walks the matrix once for every
-/// right-hand side); all other registered kinds run member-by-member
-/// through the [`crate::api`] registry.
+/// Execute all members of a job on the routed backend, dispatching on the
+/// matrix representation first: sparse jobs run natively on backends whose
+/// `supports_sparse` capability is set; for every other backend the matrix
+/// is densified once per job (logged + counted in `densified_jobs`) and
+/// the dense path below takes over.
 fn execute_job(
     job: &SolveJob,
     backend: SolverKind,
     engine: Option<&Arc<Engine>>,
+    metrics: &Metrics,
 ) -> Vec<SolveOutcome> {
-    let x = &*job.x;
-    // The batcher shares one matrix across the whole job: scan it once
-    // here, before any factorization work, and only check each member's
-    // (cheap) y side below.
-    if let Err(e) = Problem::validate_matrix(x) {
-        return per_member(job, backend, |_| Err(e.clone()));
+    match &job.x {
+        SharedMatrix::Dense(x) => {
+            // The batcher shares one matrix across the whole job: scan it
+            // once here, before any factorization work, and only check
+            // each member's (cheap) y side below.
+            if let Err(e) = Problem::validate_matrix(x) {
+                return per_member(job, backend, |_| Err(e.clone()));
+            }
+            execute_dense_job(job, x, backend, engine)
+        }
+        SharedMatrix::SparseCsc(s) => {
+            if let Err(e) = Problem::validate_sparse_matrix(s) {
+                return per_member(job, backend, |_| Err(e.clone()));
+            }
+            let native = backend.capabilities().is_some_and(|c| c.supports_sparse);
+            if native {
+                match backend {
+                    // Amortise shared per-matrix work across the batch,
+                    // mirroring the dense paths below: BAK computes the
+                    // O(nnz) column norms once per job...
+                    SolverKind::Bak => {
+                        let cninv = crate::sparse::solve::colnorms_inv_csc(s);
+                        per_member(job, backend, |y| {
+                            Problem::prevalidated_sparse(s, y)?;
+                            let mut a = vec![0.0f32; s.cols()];
+                            let mut e = y.to_vec();
+                            Ok(crate::sparse::solve::solve_bak_csc_warm(
+                                s, &cninv, &mut a, &mut e, y, &job.opts,
+                            ))
+                        })
+                    }
+                    // ...and Kaczmarz transposes CSC->CSR once per job.
+                    SolverKind::Kaczmarz => {
+                        let csr = s.to_csr();
+                        per_member(job, backend, |y| {
+                            Problem::prevalidated_sparse(s, y)?;
+                            Ok(crate::sparse::solve::solve_kaczmarz_csr(&csr, y, &job.opts))
+                        })
+                    }
+                    _ => match solver_for(backend) {
+                        Some(solver) => per_member(job, backend, |y| {
+                            let p = Problem::prevalidated_sparse(s, y)?;
+                            solver.solve(&p, &job.opts)
+                        }),
+                        None => per_member(job, backend, |_| {
+                            Err(SolverError::Unavailable {
+                                backend: backend.to_string(),
+                                reason: "routing pseudo-kind; not directly executable".into(),
+                            })
+                        }),
+                    },
+                }
+            } else {
+                metrics.densified_jobs.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                emit(
+                    Level::Warn,
+                    "coordinator",
+                    format_args!(
+                        "backend '{backend}' has no native sparse path; densifying {}x{} \
+                         (nnz={}) for a {}-member job",
+                        s.rows(),
+                        s.cols(),
+                        s.nnz(),
+                        job.len()
+                    ),
+                );
+                let dense = s.to_dense();
+                execute_dense_job(job, &dense, backend, engine)
+            }
+        }
     }
+}
+
+/// The dense execution paths, amortising shared work across the batch
+/// where the backend allows it (QR factors once per job, BAK shares column
+/// norms, BAK-multi walks the matrix once for every right-hand side); all
+/// other registered kinds run member-by-member through the [`crate::api`]
+/// registry.
+fn execute_dense_job(
+    job: &SolveJob,
+    x: &Mat,
+    backend: SolverKind,
+    engine: Option<&Arc<Engine>>,
+) -> Vec<SolveOutcome> {
     match backend {
         SolverKind::Qr => {
             // Factor ONCE for the whole batch (tall only; wide falls back
@@ -548,6 +635,98 @@ mod tests {
         // Router falls back to Bakp when no engine manifest exists.
         assert_eq!(out.backend, SolverKind::Bakp);
         assert!(out.report.is_ok());
+        coord.shutdown();
+    }
+
+    fn planted_sparse(
+        seed: u64,
+        obs: usize,
+        vars: usize,
+        density: f64,
+    ) -> (Arc<crate::sparse::CscMat>, Vec<f32>, Vec<f32>) {
+        let w = crate::bench::workload::SparseWorkload::uniform(
+            crate::bench::workload::WorkloadSpec::new(obs, vars, seed),
+            density,
+        );
+        (Arc::new(w.x), w.y, w.a_true)
+    }
+
+    #[test]
+    fn sparse_auto_runs_natively_without_densification() {
+        let coord = Coordinator::start(CoordinatorConfig::default());
+        let (x, y, a_true) = planted_sparse(407, 300, 24, 0.1);
+        let mut req = SolveRequest::new_sparse(1, x, y);
+        req.opts = solver::SolveOptions::accurate();
+        let out = coord.solve_blocking(req);
+        // Auto + sparse routes to a sparse-native solver...
+        assert!(matches!(out.backend, SolverKind::Bak | SolverKind::Bakp));
+        let rep = out.report.expect("sparse solve ok");
+        assert!(crate::util::stats::rel_l2(&rep.a, &a_true) < 1e-3);
+        // ...so nothing was densified, and the backend job was counted.
+        let m = coord.metrics();
+        assert_eq!(m.densified_jobs.load(std::sync::atomic::Ordering::Relaxed), 0);
+        assert_eq!(m.backend_jobs(out.backend), 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn sparse_request_on_dense_only_backend_densifies_and_counts() {
+        let coord = Coordinator::start(CoordinatorConfig::default());
+        let (x, y, a_true) = planted_sparse(408, 120, 16, 0.15);
+        let mut req = SolveRequest::new_sparse(2, x, y);
+        req.backend = SolverKind::Qr;
+        let out = coord.solve_blocking(req);
+        assert_eq!(out.backend, SolverKind::Qr);
+        let rep = out.report.expect("densified qr solve ok");
+        assert!(crate::util::stats::rel_l2(&rep.a, &a_true) < 1e-3);
+        let m = coord.metrics();
+        assert_eq!(m.densified_jobs.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert_eq!(m.backend_jobs(SolverKind::Qr), 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn sparse_requests_batch_and_all_answer() {
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 2,
+            ..CoordinatorConfig::default()
+        });
+        let (x, _, _) = planted_sparse(409, 200, 12, 0.2);
+        let mut rng = Rng::seed(410);
+        let mut rxs = Vec::new();
+        for i in 0..6u64 {
+            let a: Vec<f32> = (0..12).map(|_| rng.normal_f32()).collect();
+            let y = x.matvec(&a);
+            let mut req = SolveRequest::new_sparse(i, x.clone(), y);
+            req.backend = SolverKind::Cgls;
+            req.opts = solver::SolveOptions::accurate();
+            rxs.push((i, a, coord.submit(req).unwrap()));
+        }
+        for (i, a_true, rx) in rxs {
+            let out = rx.recv().unwrap();
+            assert_eq!(out.id, i);
+            let rep = out.report.expect("sparse cgls ok");
+            assert!(
+                crate::util::stats::rel_l2(&rep.a, &a_true) < 1e-2,
+                "member {i}"
+            );
+        }
+        assert_eq!(
+            coord.metrics().densified_jobs.load(std::sync::atomic::Ordering::Relaxed),
+            0
+        );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn queue_depth_returns_to_zero_when_drained() {
+        let coord = Coordinator::start(CoordinatorConfig::default());
+        let (x, y, _) = planted(411, 80, 8);
+        let _ = coord.solve_blocking(SolveRequest::new(1, x, y));
+        assert_eq!(
+            coord.metrics().job_queue_depth.load(std::sync::atomic::Ordering::Relaxed),
+            0
+        );
         coord.shutdown();
     }
 }

@@ -45,9 +45,44 @@
 //! same implementations. See the [`api`] module docs for the capability
 //! matrix, `DESIGN.md` for the system inventory, and `EXPERIMENTS.md` for
 //! the paper-vs-measured record.
+//!
+//! ## Sparse systems
+//!
+//! Algorithm 1's inner step touches one column, so on sparse data a sweep
+//! is O(nnz), not O(obs·vars). Build a matrix from COO triplets
+//! ([`sparse::CooBuilder`]), lower it to compressed-column storage
+//! ([`sparse::CscMat`]), and solve through the same [`api::Solver`]
+//! surface via [`api::Problem::new_sparse`]:
+//!
+//! ```no_run
+//! use solvebak::api::{solver_for, Problem, SolverKind};
+//! use solvebak::solver::SolveOptions;
+//! use solvebak::sparse::CooBuilder;
+//!
+//! let mut coo = CooBuilder::new(4, 2);     // 4 obs x 2 vars
+//! coo.push(0, 0, 1.0);
+//! coo.push(2, 0, -2.0);
+//! coo.push(1, 1, 3.0);
+//! let x = coo.to_csc();                    // O(nnz log nnz) compression
+//! let y = x.matvec(&[2.0, -1.0]);          // planted solution
+//!
+//! let problem = Problem::new_sparse(&x, &y).expect("validated");
+//! let solver = solver_for(SolverKind::Bak).expect("registered");
+//! let report = solver.solve(&problem, &SolveOptions::default()).expect("solves");
+//! assert!(report.rel_residual() < 1e-4);
+//! ```
+//!
+//! `bak`, `bakp`, `kaczmarz`, and `cgls` run sparse problems natively
+//! (capability flag `supports_sparse`); every other backend transparently
+//! densifies with a logged warning, and the coordinator counts those
+//! events in its `densified_jobs` metric. Over the wire, the coordinator
+//! accepts `{"x_coo": {"rows": [...], "cols": [...], "vals": [...]}}` in
+//! place of the dense `"x"` array, and the CLI exposes the workload class
+//! via `solvebak solve --sparse --density 0.01`.
 
 pub mod util;
 pub mod linalg;
+pub mod sparse;
 pub mod baselines;
 pub mod solver;
 pub mod api;
@@ -56,7 +91,7 @@ pub mod coordinator;
 pub mod bench;
 pub mod cli;
 
-pub use api::{Capabilities, Problem, Solver, SolverError, SolverKind};
+pub use api::{Capabilities, MatrixRef, Problem, Solver, SolverError, SolverKind};
 
 /// Crate version string (matches Cargo.toml).
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -82,6 +82,45 @@ pub fn scal(alpha: f32, x: &mut [f32]) {
     }
 }
 
+/// Strided-source dot product: `sum(x[k*stride] * y[k])` for k in
+/// 0..y.len().
+///
+/// This is the row-action kernel for the col-major [`crate::linalg::Mat`]:
+/// row i is `&data[i..]` with stride = rows. The x accesses are indexed
+/// (bounds-checked) but the lane structure removes the sequential FP
+/// dependency; the cache-hostility of the strided access itself is
+/// inherent to the layout — see Kaczmarz in `solver::variants`.
+#[inline]
+pub fn dot_strided(x: &[f32], stride: usize, y: &[f32]) -> f32 {
+    debug_assert!(stride >= 1);
+    debug_assert!(y.is_empty() || x.len() > (y.len() - 1) * stride);
+    // 4 independent accumulator lanes break the FP dependency chain, as
+    // in `dot`; the gather itself cannot vectorize across a stride.
+    let mut acc = [0.0f32; 4];
+    let chunks = y.len() / 4;
+    for c in 0..chunks {
+        let base = c * 4;
+        for k in 0..4 {
+            acc[k] = x[(base + k) * stride].mul_add(y[base + k], acc[k]);
+        }
+    }
+    let mut s = (acc[0] + acc[2]) + (acc[1] + acc[3]);
+    for k in chunks * 4..y.len() {
+        s = x[k * stride].mul_add(y[k], s);
+    }
+    s
+}
+
+/// Strided-source axpy: `y[k] += alpha * x[k*stride]` for k in 0..y.len().
+#[inline]
+pub fn axpy_strided(alpha: f32, x: &[f32], stride: usize, y: &mut [f32]) {
+    debug_assert!(stride >= 1);
+    debug_assert!(y.is_empty() || x.len() > (y.len() - 1) * stride);
+    for (xv, yv) in x.iter().step_by(stride).zip(y.iter_mut()) {
+        *yv = xv.mul_add(alpha, *yv);
+    }
+}
+
 /// Sum of squares in f64 (residual tracking without f32 cancellation).
 #[inline]
 pub fn sum_sq_f64(x: &[f32]) -> f64 {
@@ -180,6 +219,49 @@ mod tests {
         let mut x = vec![1.0, -2.0, 0.5];
         scal(-2.0, &mut x);
         assert_eq!(x, vec![-2.0, 4.0, -1.0]);
+    }
+
+    #[test]
+    fn strided_kernels_match_row_gather() {
+        // A col-major 7x5 "matrix" flattened: element (i, j) at i + j*7.
+        let rows = 7usize;
+        let cols = 5usize;
+        let data = randvec(77, rows * cols);
+        let a = randvec(78, cols);
+        for i in 0..rows {
+            let row: Vec<f32> = (0..cols).map(|j| data[i + j * rows]).collect();
+            let want = dot(&row, &a);
+            let got = dot_strided(&data[i..], rows, &a);
+            assert!((got - want).abs() < 1e-5, "row {i}: {got} vs {want}");
+
+            let mut acc_want = a.clone();
+            axpy(0.37, &row, &mut acc_want);
+            let mut acc_got = a.clone();
+            axpy_strided(0.37, &data[i..], rows, &mut acc_got);
+            for (g, w) in acc_got.iter().zip(&acc_want) {
+                assert!((g - w).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn strided_kernels_stride_one_match_contiguous() {
+        let x = randvec(80, 33);
+        let y = randvec(81, 33);
+        assert!((dot_strided(&x, 1, &y) - dot(&x, &y)).abs() < 1e-4);
+        let mut y1 = y.clone();
+        let mut y2 = y.clone();
+        axpy(-1.25, &x, &mut y1);
+        axpy_strided(-1.25, &x, 1, &mut y2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn strided_kernels_empty_dense_side() {
+        assert_eq!(dot_strided(&[1.0, 2.0], 2, &[]), 0.0);
+        let mut empty: Vec<f32> = vec![];
+        axpy_strided(1.0, &[1.0, 2.0], 2, &mut empty);
+        assert!(empty.is_empty());
     }
 
     #[test]

@@ -28,15 +28,38 @@ use super::{colnorms_inv, SolveOptions, SolveReport, StopReason};
 /// Row-action on a column-major [`Mat`] strides, so this is also the
 /// layout ablation: SolveBak's column action is contiguous, Kaczmarz is
 /// not — part of why the paper's method benches so well in column-major
-/// Julia.
+/// Julia. The strided access itself is unavoidable, but the hot loops go
+/// through `blas1::{dot_strided, axpy_strided}` over the backing slice
+/// (no per-element `get(i, j)` index arithmetic/bounds checks), and the
+/// row-norm precompute runs column-major — one cache-friendly pass.
 pub fn solve_kaczmarz(x: &Mat, y: &[f32], opts: &SolveOptions) -> SolveReport {
     let (obs, vars) = x.shape();
     assert_eq!(y.len(), obs);
     let mut rng = Rng::seed(opts.seed);
-    let row_norms_sq: Vec<f32> = (0..obs)
-        .map(|i| (0..vars).map(|j| x.get(i, j) * x.get(i, j)).sum())
-        .collect();
+    // ||row_i||^2 for all i in one column-major pass (sequential reads),
+    // instead of obs strided row gathers.
+    let mut row_norms_sq = vec![0.0f32; obs];
+    for j in 0..vars {
+        for (rn, &v) in row_norms_sq.iter_mut().zip(x.col(j)) {
+            *rn = v.mul_add(v, *rn);
+        }
+    }
     let total: f64 = row_norms_sq.iter().map(|&v| v as f64).sum();
+    let y_norm_sq = blas1::sum_sq_f64(y);
+    if total == 0.0 {
+        // All-zero matrix: no projection can move the iterate, and the
+        // sampling distribution below would be 0/0 NaNs. Report the
+        // trivial iterate instead of panicking mid-sample.
+        let stop = if y_norm_sq == 0.0 { StopReason::Converged } else { StopReason::Stalled };
+        return SolveReport {
+            a: vec![0.0f32; vars],
+            e: y.to_vec(),
+            history: vec![y_norm_sq],
+            y_norm_sq,
+            sweeps: 0,
+            stop,
+        };
+    }
     // Cumulative distribution for norm-weighted sampling.
     let mut cdf = Vec::with_capacity(obs);
     let mut acc = 0.0f64;
@@ -45,7 +68,6 @@ pub fn solve_kaczmarz(x: &Mat, y: &[f32], opts: &SolveOptions) -> SolveReport {
         cdf.push(acc);
     }
 
-    let y_norm_sq = blas1::sum_sq_f64(y);
     let tol_sq = opts.tol * opts.tol * y_norm_sq;
     let mut a = vec![0.0f32; vars];
     let mut history = Vec::new();
@@ -66,15 +88,11 @@ pub fn solve_kaczmarz(x: &Mat, y: &[f32], opts: &SolveOptions) -> SolveReport {
             if nrm == 0.0 {
                 continue;
             }
-            // residual_i = y_i - <row_i, a>
-            let mut ri = y[i];
-            for j in 0..vars {
-                ri -= x.get(i, j) * a[j];
-            }
-            let step = ri / nrm;
-            for (j, aj) in a.iter_mut().enumerate() {
-                *aj += step * x.get(i, j);
-            }
+            // Row i of the col-major Mat: backing[i + j*obs] — one strided
+            // view reused for both the residual and the update.
+            let row = &x.as_slice()[i..];
+            let ri = y[i] - blas1::dot_strided(row, obs, &a);
+            blas1::axpy_strided(ri / nrm, row, obs, &mut a);
         }
         sweeps = sweep + 1;
         let e = crate::linalg::residual(x, y, &a);
@@ -304,6 +322,19 @@ mod tests {
         o.tol = 0.0;
         let rep = solve_kaczmarz(&x, &y, &o);
         assert!(rep.history[rep.history.len() - 1] < rep.history[0]);
+    }
+
+    #[test]
+    fn kaczmarz_all_zero_matrix_does_not_panic() {
+        let x = Mat::zeros(5, 3);
+        let y = vec![1.0f32; 5];
+        let rep = solve_kaczmarz(&x, &y, &SolveOptions::default());
+        assert_eq!(rep.a, vec![0.0; 3]);
+        assert_eq!(rep.stop, StopReason::Stalled);
+        assert!(rep.a.iter().all(|v| v.is_finite()));
+        // Zero matrix + zero rhs counts as converged.
+        let rep = solve_kaczmarz(&x, &[0.0; 5], &SolveOptions::default());
+        assert_eq!(rep.stop, StopReason::Converged);
     }
 
     #[test]

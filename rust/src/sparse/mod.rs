@@ -1,0 +1,659 @@
+//! Sparse matrix storage + kernels — the O(nnz) regime of the paper's
+//! column-action method.
+//!
+//! Algorithm 1's inner step is one dot + one axpy over a *single column*;
+//! on a sparse column that is O(nnz(col)), so a whole sweep drops from
+//! O(obs*vars) to O(nnz). This module provides the storage to exploit
+//! that:
+//!
+//! * [`CooBuilder`] — validated triplet accumulation (the construction and
+//!   wire format), lowering to the compressed forms with duplicate
+//!   coordinates summed and indices sorted.
+//! * [`CscMat`] — compressed sparse column: contiguous `(row_idx, val)`
+//!   per column, the natural layout for SolveBak's column actions (the
+//!   sparse analogue of the col-major [`Mat`]).
+//! * [`CsrMat`] — compressed sparse row: the layout for Kaczmarz row
+//!   actions and row-wise spmv.
+//! * [`kernels`] — sparse BLAS-1/2 (`sp_dot_dense`, `sp_axpy_into_dense`,
+//!   `sp_cd_step`, spmv/spmv_t) matching the dense kernels' accumulation
+//!   semantics (f32 `mul_add` chains; residual tracking stays f64 via
+//!   `blas1::sum_sq_f64`).
+//! * [`solve`] — native sparse implementations of SolveBak, SolveBakP,
+//!   randomized Kaczmarz, and CGLS sharing `SolveOptions`/`SolveReport`
+//!   with the dense solver family.
+//!
+//! Dense interop: [`CscMat::to_dense`]/[`CscMat::from_dense`] bridge to
+//! [`Mat`] for backends without a native sparse path (the api layer logs a
+//! warning and the coordinator counts `densified_jobs` when that fallback
+//! fires).
+
+pub mod kernels;
+pub mod solve;
+
+pub use kernels::{sp_axpy_into_dense, sp_cd_step, sp_dot_dense};
+pub use solve::{cgls_csc, solve_bak_csc, solve_bakp_csc, solve_kaczmarz_csr};
+
+use crate::linalg::Mat;
+
+/// Triplet (COO) accumulator: push `(row, col, val)` entries in any order,
+/// then lower to [`CscMat`]/[`CsrMat`]. Duplicate coordinates are summed
+/// during compression; indices are validated on entry.
+#[derive(Clone, Debug, Default)]
+pub struct CooBuilder {
+    rows: usize,
+    cols: usize,
+    entries: Vec<(usize, usize, f32)>,
+}
+
+impl CooBuilder {
+    /// Empty builder for a `rows x cols` matrix.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, entries: Vec::new() }
+    }
+
+    /// Add one entry. Panics on out-of-range indices (mirrors [`Mat`]'s
+    /// assert-on-misuse contract); use [`CooBuilder::from_triplets`] for
+    /// fallible wire-format construction.
+    pub fn push(&mut self, row: usize, col: usize, val: f32) {
+        assert!(row < self.rows, "row {row} out of range (rows={})", self.rows);
+        assert!(col < self.cols, "col {col} out of range (cols={})", self.cols);
+        self.entries.push((row, col, val));
+    }
+
+    /// Build from parallel triplet slices, validating lengths, index
+    /// bounds, and value finiteness — the coordinator's `x_coo` wire path.
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        row_idx: &[usize],
+        col_idx: &[usize],
+        vals: &[f32],
+    ) -> Result<Self, String> {
+        if row_idx.len() != vals.len() || col_idx.len() != vals.len() {
+            return Err(format!(
+                "triplet length mismatch: rows={} cols={} vals={}",
+                row_idx.len(),
+                col_idx.len(),
+                vals.len()
+            ));
+        }
+        let mut b = Self::new(rows, cols);
+        for ((&i, &j), &v) in row_idx.iter().zip(col_idx).zip(vals) {
+            if i >= rows {
+                return Err(format!("row index {i} out of range (rows={rows})"));
+            }
+            if j >= cols {
+                return Err(format!("col index {j} out of range (cols={cols})"));
+            }
+            if !v.is_finite() {
+                return Err("triplet value is not finite".into());
+            }
+            b.entries.push((i, j, v));
+        }
+        Ok(b)
+    }
+
+    /// Number of accumulated triplets (before duplicate summing).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// (rows, cols).
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Sorted, duplicate-summed entries keyed by `key(i, j)`; shared by
+    /// the two compressions.
+    fn merged_by<K: Ord + Copy>(&self, key: impl Fn(usize, usize) -> K) -> Vec<(usize, usize, f32)> {
+        let mut ent = self.entries.clone();
+        ent.sort_unstable_by_key(|&(i, j, _)| key(i, j));
+        let mut merged: Vec<(usize, usize, f32)> = Vec::with_capacity(ent.len());
+        for (i, j, v) in ent {
+            match merged.last_mut() {
+                Some(last) if last.0 == i && last.1 == j => last.2 += v,
+                _ => merged.push((i, j, v)),
+            }
+        }
+        merged
+    }
+
+    /// Lower to compressed sparse column (rows sorted within each column,
+    /// duplicates summed).
+    pub fn to_csc(&self) -> CscMat {
+        let merged = self.merged_by(|i, j| (j, i));
+        let mut col_ptr = vec![0usize; self.cols + 1];
+        for &(_, j, _) in &merged {
+            col_ptr[j + 1] += 1;
+        }
+        for j in 0..self.cols {
+            col_ptr[j + 1] += col_ptr[j];
+        }
+        let row_idx = merged.iter().map(|&(i, _, _)| i).collect();
+        let vals = merged.iter().map(|&(_, _, v)| v).collect();
+        CscMat { rows: self.rows, cols: self.cols, col_ptr, row_idx, vals }
+    }
+
+    /// Lower to compressed sparse row (cols sorted within each row,
+    /// duplicates summed).
+    pub fn to_csr(&self) -> CsrMat {
+        let merged = self.merged_by(|i, j| (i, j));
+        let mut row_ptr = vec![0usize; self.rows + 1];
+        for &(i, _, _) in &merged {
+            row_ptr[i + 1] += 1;
+        }
+        for i in 0..self.rows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let col_idx = merged.iter().map(|&(_, j, _)| j).collect();
+        let vals = merged.iter().map(|&(_, _, v)| v).collect();
+        CsrMat { rows: self.rows, cols: self.cols, row_ptr, col_idx, vals }
+    }
+}
+
+/// Compressed sparse column f32 matrix: per column j, the nonzero rows
+/// `row_idx[col_ptr[j]..col_ptr[j+1]]` (sorted ascending) and their values.
+///
+/// The column-action analogue of the col-major [`Mat`]: [`CscMat::col`]
+/// is one contiguous `(indices, values)` pair, so the Algorithm-1 inner
+/// step is O(nnz(col)).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CscMat {
+    rows: usize,
+    cols: usize,
+    /// len == cols + 1; column j spans [col_ptr[j], col_ptr[j+1]).
+    col_ptr: Vec<usize>,
+    /// len == nnz; row index of each stored value.
+    row_idx: Vec<usize>,
+    /// len == nnz.
+    vals: Vec<f32>,
+}
+
+impl CscMat {
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// (rows, cols).
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Number of stored entries.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// nnz / (rows * cols); 0 for an empty shape.
+    pub fn density(&self) -> f64 {
+        let cells = self.rows * self.cols;
+        if cells == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / cells as f64
+        }
+    }
+
+    /// Column j as `(row_indices, values)` — the sparse hot path.
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[usize], &[f32]) {
+        debug_assert!(j < self.cols);
+        let (lo, hi) = (self.col_ptr[j], self.col_ptr[j + 1]);
+        (&self.row_idx[lo..hi], &self.vals[lo..hi])
+    }
+
+    /// All stored values (for finiteness scans).
+    #[inline]
+    pub fn values(&self) -> &[f32] {
+        &self.vals
+    }
+
+    /// <x_j, x_j> for every column (O(nnz)).
+    pub fn colnorms_sq(&self) -> Vec<f32> {
+        (0..self.cols)
+            .map(|j| crate::linalg::blas1::nrm2_sq(self.col(j).1))
+            .collect()
+    }
+
+    /// y = X a, accumulated column-by-column (scatter; O(nnz)).
+    pub fn matvec(&self, a: &[f32]) -> Vec<f32> {
+        assert_eq!(a.len(), self.cols, "matvec dim mismatch");
+        let mut y = vec![0.0f32; self.rows];
+        for (j, &aj) in a.iter().enumerate() {
+            if aj != 0.0 {
+                let (idx, vals) = self.col(j);
+                kernels::sp_axpy_into_dense(aj, idx, vals, &mut y);
+            }
+        }
+        y
+    }
+
+    /// out = Xᵀ v, one gather-dot per column (O(nnz)).
+    pub fn matvec_t(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(v.len(), self.rows, "matvec_t dim mismatch");
+        (0..self.cols)
+            .map(|j| {
+                let (idx, vals) = self.col(j);
+                kernels::sp_dot_dense(idx, vals, v)
+            })
+            .collect()
+    }
+
+    /// Materialise as a dense col-major [`Mat`] (O(rows*cols) memory —
+    /// the densification fallback for backends without a sparse path).
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for j in 0..self.cols {
+            let (idx, vals) = self.col(j);
+            let col = m.col_mut(j);
+            for (&i, &v) in idx.iter().zip(vals) {
+                col[i] = v;
+            }
+        }
+        m
+    }
+
+    /// Compress a dense matrix, dropping exact zeros.
+    pub fn from_dense(x: &Mat) -> CscMat {
+        let (rows, cols) = x.shape();
+        let mut col_ptr = Vec::with_capacity(cols + 1);
+        let mut row_idx = Vec::new();
+        let mut vals = Vec::new();
+        col_ptr.push(0);
+        for j in 0..cols {
+            for (i, &v) in x.col(j).iter().enumerate() {
+                if v != 0.0 {
+                    row_idx.push(i);
+                    vals.push(v);
+                }
+            }
+            col_ptr.push(vals.len());
+        }
+        CscMat { rows, cols, col_ptr, row_idx, vals }
+    }
+
+    /// Convert to CSR by counting-sort transpose (O(nnz)); column indices
+    /// come out sorted within each row.
+    pub fn to_csr(&self) -> CsrMat {
+        let mut row_ptr = vec![0usize; self.rows + 1];
+        for &i in &self.row_idx {
+            row_ptr[i + 1] += 1;
+        }
+        for i in 0..self.rows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let mut next = row_ptr.clone();
+        let mut col_idx = vec![0usize; self.nnz()];
+        let mut vals = vec![0.0f32; self.nnz()];
+        for j in 0..self.cols {
+            let (idx, vs) = self.col(j);
+            for (&i, &v) in idx.iter().zip(vs) {
+                let p = next[i];
+                col_idx[p] = j;
+                vals[p] = v;
+                next[i] += 1;
+            }
+        }
+        CsrMat { rows: self.rows, cols: self.cols, row_ptr, col_idx, vals }
+    }
+
+    /// Approximate memory footprint in bytes.
+    pub fn nbytes(&self) -> usize {
+        self.col_ptr.len() * std::mem::size_of::<usize>()
+            + self.row_idx.len() * std::mem::size_of::<usize>()
+            + self.vals.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Compressed sparse row f32 matrix: per row i, the nonzero columns
+/// `col_idx[row_ptr[i]..row_ptr[i+1]]` (sorted ascending) and values —
+/// the layout for Kaczmarz row projections and row-wise spmv.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMat {
+    rows: usize,
+    cols: usize,
+    /// len == rows + 1; row i spans [row_ptr[i], row_ptr[i+1]).
+    row_ptr: Vec<usize>,
+    /// len == nnz; column index of each stored value.
+    col_idx: Vec<usize>,
+    /// len == nnz.
+    vals: Vec<f32>,
+}
+
+impl CsrMat {
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// (rows, cols).
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Number of stored entries.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Row i as `(col_indices, values)` — the row-action hot path.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[usize], &[f32]) {
+        debug_assert!(i < self.rows);
+        let (lo, hi) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.col_idx[lo..hi], &self.vals[lo..hi])
+    }
+
+    /// All stored values (for finiteness scans).
+    #[inline]
+    pub fn values(&self) -> &[f32] {
+        &self.vals
+    }
+
+    /// <row_i, row_i> for every row (O(nnz)).
+    pub fn row_norms_sq(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|i| crate::linalg::blas1::nrm2_sq(self.row(i).1))
+            .collect()
+    }
+
+    /// y = X a, one gather-dot per row (O(nnz)).
+    pub fn spmv(&self, a: &[f32]) -> Vec<f32> {
+        assert_eq!(a.len(), self.cols, "spmv dim mismatch");
+        (0..self.rows)
+            .map(|i| {
+                let (idx, vals) = self.row(i);
+                kernels::sp_dot_dense(idx, vals, a)
+            })
+            .collect()
+    }
+
+    /// out = Xᵀ v, accumulated row-by-row (scatter; O(nnz)).
+    pub fn spmv_t(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(v.len(), self.rows, "spmv_t dim mismatch");
+        let mut out = vec![0.0f32; self.cols];
+        for (i, &vi) in v.iter().enumerate() {
+            if vi != 0.0 {
+                let (idx, vals) = self.row(i);
+                kernels::sp_axpy_into_dense(vi, idx, vals, &mut out);
+            }
+        }
+        out
+    }
+
+    /// Materialise as a dense col-major [`Mat`].
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (idx, vals) = self.row(i);
+            for (&j, &v) in idx.iter().zip(vals) {
+                m.set(i, j, v);
+            }
+        }
+        m
+    }
+
+    /// Approximate memory footprint in bytes.
+    pub fn nbytes(&self) -> usize {
+        self.row_ptr.len() * std::mem::size_of::<usize>()
+            + self.col_idx.len() * std::mem::size_of::<usize>()
+            + self.vals.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, DimCase};
+    use crate::util::rng::Rng;
+
+    /// Random COO over a DimCase: ~density fraction of cells, PLUS
+    /// deliberate duplicate coordinates to exercise summing.
+    fn random_coo(case: &DimCase, density: f64, dups: usize) -> CooBuilder {
+        let mut rng = Rng::seed(case.seed);
+        let mut b = CooBuilder::new(case.obs, case.vars);
+        for i in 0..case.obs {
+            for j in 0..case.vars {
+                if rng.uniform() < density {
+                    b.push(i, j, rng.normal_f32());
+                }
+            }
+        }
+        for _ in 0..dups {
+            b.push(rng.below(case.obs), rng.below(case.vars), rng.normal_f32());
+        }
+        b
+    }
+
+    /// Dense reference accumulation of the builder's triplets.
+    fn dense_of(b: &CooBuilder) -> Mat {
+        let (rows, cols) = b.shape();
+        let mut m = Mat::zeros(rows, cols);
+        for &(i, j, v) in &b.entries {
+            *m.get_mut(i, j) += v;
+        }
+        m
+    }
+
+    #[test]
+    fn small_csc_layout() {
+        // [[1, 0], [0, 2], [3, 0]]
+        let mut b = CooBuilder::new(3, 2);
+        b.push(0, 0, 1.0);
+        b.push(1, 1, 2.0);
+        b.push(2, 0, 3.0);
+        let m = b.to_csc();
+        assert_eq!(m.shape(), (3, 2));
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.col(0), (&[0usize, 2][..], &[1.0f32, 3.0][..]));
+        assert_eq!(m.col(1), (&[1usize][..], &[2.0f32][..]));
+        assert_eq!(m.to_dense(), Mat::from_rows(&[
+            vec![1.0, 0.0],
+            vec![0.0, 2.0],
+            vec![3.0, 0.0],
+        ]));
+    }
+
+    #[test]
+    fn duplicate_coordinates_sum() {
+        let mut b = CooBuilder::new(2, 2);
+        b.push(0, 1, 1.5);
+        b.push(0, 1, 2.5);
+        b.push(1, 0, -1.0);
+        let csc = b.to_csc();
+        assert_eq!(csc.nnz(), 2);
+        assert_eq!(csc.to_dense().get(0, 1), 4.0);
+        let csr = b.to_csr();
+        assert_eq!(csr.nnz(), 2);
+        assert_eq!(csr.to_dense().get(0, 1), 4.0);
+    }
+
+    #[test]
+    fn empty_rows_and_cols_roundtrip() {
+        // Only the middle cell is set: row 0/2 and col 0/2 stay empty.
+        let mut b = CooBuilder::new(3, 3);
+        b.push(1, 1, 7.0);
+        let csc = b.to_csc();
+        assert_eq!(csc.col(0), (&[][..], &[][..]));
+        assert_eq!(csc.col(2), (&[][..], &[][..]));
+        let csr = csc.to_csr();
+        assert_eq!(csr.row(0), (&[][..], &[][..]));
+        assert_eq!(csr.row(1), (&[1usize][..], &[7.0f32][..]));
+        assert_eq!(csr.to_dense(), csc.to_dense());
+    }
+
+    #[test]
+    fn wholly_empty_matrix() {
+        let b = CooBuilder::new(4, 3);
+        let csc = b.to_csc();
+        assert_eq!(csc.nnz(), 0);
+        assert_eq!(csc.density(), 0.0);
+        assert_eq!(csc.matvec(&[1.0, 2.0, 3.0]), vec![0.0; 4]);
+        assert_eq!(csc.matvec_t(&[1.0; 4]), vec![0.0; 3]);
+        let csr = b.to_csr();
+        assert_eq!(csr.spmv(&[1.0, 2.0, 3.0]), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn from_triplets_validates() {
+        assert!(CooBuilder::from_triplets(2, 2, &[0], &[0, 1], &[1.0]).is_err());
+        assert!(CooBuilder::from_triplets(2, 2, &[2], &[0], &[1.0]).is_err());
+        assert!(CooBuilder::from_triplets(2, 2, &[0], &[2], &[1.0]).is_err());
+        assert!(CooBuilder::from_triplets(2, 2, &[0], &[0], &[f32::NAN]).is_err());
+        let b = CooBuilder::from_triplets(2, 2, &[0, 1], &[1, 0], &[3.0, 4.0]).unwrap();
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.to_csc().to_dense().get(0, 1), 3.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn push_out_of_range_panics() {
+        CooBuilder::new(2, 2).push(2, 0, 1.0);
+    }
+
+    #[test]
+    fn from_dense_roundtrip_drops_zeros() {
+        let mut rng = Rng::seed(31);
+        let mut x = Mat::randn(&mut rng, 10, 6);
+        x.col_mut(2).fill(0.0);
+        x.set(5, 4, 0.0);
+        let s = CscMat::from_dense(&x);
+        assert_eq!(s.to_dense(), x);
+        assert_eq!(s.nnz(), 10 * 6 - 10 - 1);
+        assert!(s.nbytes() > 0);
+    }
+
+    #[test]
+    fn prop_coo_to_csc_csr_roundtrip_preserves_entries() {
+        forall(
+            101,
+            40,
+            |rng| DimCase::draw(rng, 30, 12),
+            |case| {
+                let b = random_coo(case, 0.25, 5);
+                let want = dense_of(&b);
+                let csc = b.to_csc();
+                let csr = b.to_csr();
+                if csc.to_dense() != want {
+                    return Err("csc roundtrip mismatch".into());
+                }
+                if csr.to_dense() != want {
+                    return Err("csr roundtrip mismatch".into());
+                }
+                if csc.to_csr().to_dense() != want {
+                    return Err("csc->csr mismatch".into());
+                }
+                // Row indices sorted within each column.
+                for j in 0..csc.cols() {
+                    let (idx, _) = csc.col(j);
+                    if !idx.windows(2).all(|w| w[0] < w[1]) {
+                        return Err(format!("col {j} rows not strictly sorted"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_matvec_matches_dense() {
+        forall(
+            102,
+            40,
+            |rng| DimCase::draw(rng, 40, 16),
+            |case| {
+                let b = random_coo(case, 0.3, 3);
+                let csc = b.to_csc();
+                let csr = b.to_csr();
+                let dense = csc.to_dense();
+                let mut rng = Rng::seed(case.seed ^ 0xabc);
+                let a: Vec<f32> = (0..case.vars).map(|_| rng.normal_f32()).collect();
+                let v: Vec<f32> = (0..case.obs).map(|_| rng.normal_f32()).collect();
+                let tol = 1e-4f32;
+                for (got, want) in csc.matvec(&a).iter().zip(dense.matvec(&a)) {
+                    if (got - want).abs() > tol * (1.0 + want.abs()) {
+                        return Err(format!("csc matvec {got} vs {want}"));
+                    }
+                }
+                for (got, want) in csr.spmv(&a).iter().zip(dense.matvec(&a)) {
+                    if (got - want).abs() > tol * (1.0 + want.abs()) {
+                        return Err(format!("csr spmv {got} vs {want}"));
+                    }
+                }
+                for (got, want) in csc.matvec_t(&v).iter().zip(dense.matvec_t(&v)) {
+                    if (got - want).abs() > tol * (1.0 + want.abs()) {
+                        return Err(format!("csc matvec_t {got} vs {want}"));
+                    }
+                }
+                for (got, want) in csr.spmv_t(&v).iter().zip(dense.matvec_t(&v)) {
+                    if (got - want).abs() > tol * (1.0 + want.abs()) {
+                        return Err(format!("csr spmv_t {got} vs {want}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_norms_match_dense() {
+        forall(
+            103,
+            30,
+            |rng| DimCase::draw(rng, 30, 10),
+            |case| {
+                let b = random_coo(case, 0.4, 2);
+                let csc = b.to_csc();
+                let dense = csc.to_dense();
+                for (got, want) in csc.colnorms_sq().iter().zip(dense.colnorms_sq()) {
+                    if (got - want).abs() > 1e-4 * (1.0 + want) {
+                        return Err(format!("colnorm {got} vs {want}"));
+                    }
+                }
+                let csr = csc.to_csr();
+                for (i, &got) in csr.row_norms_sq().iter().enumerate() {
+                    let want: f32 = dense.row(i).iter().map(|&v| v * v).sum();
+                    if (got - want).abs() > 1e-4 * (1.0 + want) {
+                        return Err(format!("rownorm {got} vs {want}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn density_and_shape_accessors() {
+        let mut b = CooBuilder::new(4, 5);
+        b.push(0, 0, 1.0);
+        b.push(3, 4, 2.0);
+        let m = b.to_csc();
+        assert_eq!(m.rows(), 4);
+        assert_eq!(m.cols(), 5);
+        assert_eq!(m.shape(), (4, 5));
+        assert!((m.density() - 2.0 / 20.0).abs() < 1e-12);
+        let r = m.to_csr();
+        assert_eq!(r.shape(), (4, 5));
+        assert_eq!(r.nnz(), 2);
+        assert!(r.nbytes() > 0);
+    }
+}

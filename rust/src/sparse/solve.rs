@@ -1,0 +1,492 @@
+//! Native sparse solvers: the paper's column-action family plus its
+//! iterative comparators running directly on compressed storage.
+//!
+//! Each function mirrors its dense counterpart's control flow exactly —
+//! same options, same residual-check cadence, same tolerance/stall exits,
+//! same [`SolveReport`] invariants (`e == y - X a` at exit, non-increasing
+//! per-sweep history for the monotone methods) — but the per-step cost is
+//! O(nnz(col)) / O(nnz(row)) instead of O(obs) / O(vars):
+//!
+//! * [`solve_bak_csc`] — Algorithm 1 on CSC (one gather-dot + scatter-axpy
+//!   per column; a full sweep is O(nnz)).
+//! * [`solve_bakp_csc`] — Algorithm 2's stale-block update on CSC.
+//! * [`solve_kaczmarz_csr`] — randomized Kaczmarz on CSR rows.
+//! * [`cgls_csc`] — CGLS via sparse matvec/matvec_t.
+
+use crate::baselines::cgls::CglsReport;
+use crate::linalg::blas1;
+use crate::solver::{ColumnOrder, SolveOptions, SolveReport, StopReason};
+use crate::util::rng::Rng;
+
+use super::kernels::{sp_axpy_into_dense, sp_cd_step, sp_dot_dense};
+use super::{CscMat, CsrMat};
+
+/// Precompute 1/<x_j,x_j> over CSC columns; structurally empty or
+/// numerically zero columns map to 0 (skipped, as in the dense solver).
+pub fn colnorms_inv_csc(x: &CscMat) -> Vec<f32> {
+    x.colnorms_sq()
+        .iter()
+        .map(|&v| if v > 0.0 { 1.0 / v } else { 0.0 })
+        .collect()
+}
+
+/// Solve x a ≈ y with Algorithm 1 on sparse columns — O(nnz) per sweep.
+pub fn solve_bak_csc(x: &CscMat, y: &[f32], opts: &SolveOptions) -> SolveReport {
+    let (obs, vars) = x.shape();
+    assert_eq!(y.len(), obs, "y length must equal obs");
+    let cninv = colnorms_inv_csc(x);
+    let mut a = vec![0.0f32; vars];
+    let mut e = y.to_vec();
+    solve_bak_csc_warm(x, &cninv, &mut a, &mut e, y, opts)
+}
+
+/// Warm-start variant of [`solve_bak_csc`]: continues from caller-provided
+/// (a, e). The caller must guarantee `e == y - X a` on entry (checked in
+/// debug builds).
+pub fn solve_bak_csc_warm(
+    x: &CscMat,
+    cninv: &[f32],
+    a: &mut Vec<f32>,
+    e: &mut Vec<f32>,
+    y: &[f32],
+    opts: &SolveOptions,
+) -> SolveReport {
+    let vars = x.cols();
+    debug_assert_eq!(a.len(), vars);
+    debug_assert_eq!(e.len(), x.rows());
+    #[cfg(debug_assertions)]
+    {
+        let xa = x.matvec(a);
+        for ((&yi, &xi), &ei) in y.iter().zip(&xa).zip(e.iter()) {
+            debug_assert!((yi - xi - ei).abs() < 1e-3, "warm start invariant e == y - Xa");
+        }
+    }
+
+    let y_norm_sq = blas1::sum_sq_f64(y);
+    let tol_sq = opts.tol * opts.tol * y_norm_sq;
+    let mut history = Vec::with_capacity(opts.max_sweeps.min(1024));
+    let mut rng = Rng::seed(opts.seed);
+    let mut order: Vec<usize> = (0..vars).collect();
+    let mut stop = StopReason::MaxSweeps;
+    let mut sweeps = 0;
+    let mut prev_r2 = f64::INFINITY;
+
+    for sweep in 0..opts.max_sweeps {
+        if opts.order == ColumnOrder::Shuffled {
+            rng.shuffle(&mut order);
+        }
+        for &j in &order {
+            let cn = cninv[j];
+            if cn == 0.0 {
+                continue; // empty / zero column
+            }
+            let (idx, vals) = x.col(j);
+            let da = sp_cd_step(idx, vals, e, cn);
+            a[j] += da;
+        }
+        sweeps = sweep + 1;
+        let check_now = opts.check_every != 0 && sweeps % opts.check_every == 0;
+        if check_now || sweeps == opts.max_sweeps {
+            let r2 = blas1::sum_sq_f64(e);
+            history.push(r2);
+            if opts.tol > 0.0 && r2 <= tol_sq {
+                stop = StopReason::Converged;
+                break;
+            }
+            if r2 >= prev_r2 * (1.0 - 1e-9) && sweeps > 1 {
+                stop = StopReason::Stalled;
+                break;
+            }
+            prev_r2 = r2;
+        }
+    }
+
+    SolveReport {
+        a: std::mem::take(a),
+        e: std::mem::take(e),
+        history,
+        y_norm_sq,
+        sweeps,
+        stop,
+    }
+}
+
+/// Solve x a ≈ y with Algorithm 2 (stale in-block errors) on sparse
+/// columns. The in-block phases run serially — per-column nnz is uneven,
+/// so the dense path's fixed-chunk threading does not map over; the win
+/// here is O(nnz) arithmetic, and `opts.threads` is ignored.
+pub fn solve_bakp_csc(x: &CscMat, y: &[f32], opts: &SolveOptions) -> SolveReport {
+    let (obs, vars) = x.shape();
+    assert_eq!(y.len(), obs, "y length must equal obs");
+    assert!(opts.thr > 0, "thr must be positive");
+    let cninv = colnorms_inv_csc(x);
+    let y_norm_sq = blas1::sum_sq_f64(y);
+    let tol_sq = opts.tol * opts.tol * y_norm_sq;
+
+    let mut a = vec![0.0f32; vars];
+    let mut e = y.to_vec();
+    let mut da = vec![0.0f32; opts.thr];
+    let mut history = Vec::with_capacity(opts.max_sweeps.min(1024));
+    let mut stop = StopReason::MaxSweeps;
+    let mut sweeps = 0;
+    let mut prev_r2 = f64::INFINITY;
+
+    for sweep in 0..opts.max_sweeps {
+        let mut j0 = 0;
+        while j0 < vars {
+            let width = opts.thr.min(vars - j0);
+            // Phase 1: stale-error dots against the block's shared e.
+            for (k, d) in da[..width].iter_mut().enumerate() {
+                let (idx, vals) = x.col(j0 + k);
+                *d = sp_dot_dense(idx, vals, &e) * cninv[j0 + k];
+            }
+            // Phase 2: e -= X_blk da, a += da.
+            for (k, &d) in da[..width].iter().enumerate() {
+                if d != 0.0 {
+                    let (idx, vals) = x.col(j0 + k);
+                    sp_axpy_into_dense(-d, idx, vals, &mut e);
+                }
+                a[j0 + k] += d;
+            }
+            j0 += width;
+        }
+        sweeps = sweep + 1;
+        let check_now = opts.check_every != 0 && sweeps % opts.check_every == 0;
+        if check_now || sweeps == opts.max_sweeps {
+            let r2 = blas1::sum_sq_f64(&e);
+            history.push(r2);
+            if opts.tol > 0.0 && r2 <= tol_sq {
+                stop = StopReason::Converged;
+                break;
+            }
+            if r2 >= prev_r2 * (1.0 - 1e-9) && sweeps > 1 {
+                stop = StopReason::Stalled;
+                break;
+            }
+            prev_r2 = r2;
+        }
+    }
+
+    SolveReport { a, e, history, y_norm_sq, sweeps, stop }
+}
+
+/// Randomized Kaczmarz on CSR rows: Strohmer-Vershynin norm-weighted row
+/// sampling, each projection O(nnz(row)). Mirrors the dense
+/// `solver::solve_kaczmarz` (same sampling sequence per seed).
+pub fn solve_kaczmarz_csr(x: &CsrMat, y: &[f32], opts: &SolveOptions) -> SolveReport {
+    let (obs, vars) = x.shape();
+    assert_eq!(y.len(), obs);
+    let mut rng = Rng::seed(opts.seed);
+    let row_norms_sq = x.row_norms_sq();
+    let total: f64 = row_norms_sq.iter().map(|&v| v as f64).sum();
+    let y_norm_sq = blas1::sum_sq_f64(y);
+    if total == 0.0 {
+        // Structurally/numerically all-zero matrix (perfectly legal over
+        // the x_coo wire): the sampling CDF below would be 0/0 NaNs and
+        // panic inside a coordinator worker. Report the trivial iterate.
+        let stop = if y_norm_sq == 0.0 { StopReason::Converged } else { StopReason::Stalled };
+        return SolveReport {
+            a: vec![0.0f32; vars],
+            e: y.to_vec(),
+            history: vec![y_norm_sq],
+            y_norm_sq,
+            sweeps: 0,
+            stop,
+        };
+    }
+    let mut cdf = Vec::with_capacity(obs);
+    let mut acc = 0.0f64;
+    for &v in &row_norms_sq {
+        acc += v as f64 / total;
+        cdf.push(acc);
+    }
+
+    let tol_sq = opts.tol * opts.tol * y_norm_sq;
+    let mut a = vec![0.0f32; vars];
+    let mut history = Vec::new();
+    let mut stop = StopReason::MaxSweeps;
+    let mut sweeps = 0;
+    let mut prev_r2 = f64::INFINITY;
+
+    for sweep in 0..opts.max_sweeps {
+        for _ in 0..obs {
+            let u = rng.uniform();
+            let i = match cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+                Ok(k) => k,
+                Err(k) => k.min(obs - 1),
+            };
+            let nrm = row_norms_sq[i];
+            if nrm == 0.0 {
+                continue;
+            }
+            let (idx, vals) = x.row(i);
+            let ri = y[i] - sp_dot_dense(idx, vals, &a);
+            sp_axpy_into_dense(ri / nrm, idx, vals, &mut a);
+        }
+        sweeps = sweep + 1;
+        let e = residual_csr(x, y, &a);
+        let r2 = blas1::sum_sq_f64(&e);
+        history.push(r2);
+        if opts.tol > 0.0 && r2 <= tol_sq {
+            stop = StopReason::Converged;
+            break;
+        }
+        if r2 >= prev_r2 * (1.0 - 1e-9) && sweeps > 1 {
+            stop = StopReason::Stalled;
+            break;
+        }
+        prev_r2 = r2;
+    }
+    let e = residual_csr(x, y, &a);
+    SolveReport { a, e, history, y_norm_sq, sweeps, stop }
+}
+
+fn residual_csr(x: &CsrMat, y: &[f32], a: &[f32]) -> Vec<f32> {
+    let xa = x.spmv(a);
+    y.iter().zip(&xa).map(|(&yi, &xi)| yi - xi).collect()
+}
+
+/// CGLS on CSC storage: conjugate gradient on the normal equations with
+/// O(nnz) matvec/matvec_t per iteration. Mirrors
+/// [`crate::baselines::cgls::cgls_solve`].
+pub fn cgls_csc(x: &CscMat, y: &[f32], max_iter: usize, tol: f64) -> CglsReport {
+    let (m, n) = x.shape();
+    assert_eq!(y.len(), m);
+    let mut a = vec![0.0f32; n];
+    let mut r = y.to_vec();
+    let mut s = x.matvec_t(&r);
+    let mut p = s.clone();
+    let mut gamma = blas1::sum_sq_f64(&s);
+    let gamma0 = gamma;
+    let mut history = Vec::with_capacity(max_iter);
+    let mut converged = false;
+    let mut iterations = 0;
+
+    for _ in 0..max_iter {
+        iterations += 1;
+        let q = x.matvec(&p);
+        let qq = blas1::sum_sq_f64(&q);
+        if qq == 0.0 {
+            converged = true;
+            break;
+        }
+        let alpha = (gamma / qq) as f32;
+        blas1::axpy(alpha, &p, &mut a);
+        blas1::axpy(-alpha, &q, &mut r);
+        history.push(blas1::sum_sq_f64(&r));
+        s = x.matvec_t(&r);
+        let gamma_new = blas1::sum_sq_f64(&s);
+        if gamma_new <= tol * tol * gamma0 {
+            converged = true;
+            break;
+        }
+        let beta = (gamma_new / gamma) as f32;
+        for (pi, &si) in p.iter_mut().zip(&s) {
+            *pi = si + beta * *pi;
+        }
+        gamma = gamma_new;
+    }
+    CglsReport { a, history, iterations, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::{solve_bak, solve_bakp, solve_kaczmarz};
+    use crate::sparse::CooBuilder;
+    use crate::util::prop::{forall, DimCase};
+    use crate::util::rng::Rng;
+    use crate::util::stats::rel_l2;
+
+    /// Planted consistent sparse system: (csc, y, a_true). One shared
+    /// generator — [`crate::bench::workload::SparseWorkload`] — so the
+    /// tested distribution is exactly the benched one.
+    fn planted_sparse(
+        seed: u64,
+        obs: usize,
+        vars: usize,
+        density: f64,
+    ) -> (CscMat, Vec<f32>, Vec<f32>) {
+        let w = crate::bench::workload::SparseWorkload::uniform(
+            crate::bench::workload::WorkloadSpec::new(obs, vars, seed),
+            density,
+        );
+        (w.x, w.y, w.a_true)
+    }
+
+    #[test]
+    fn bak_csc_recovers_planted_solution() {
+        let (x, y, a_true) = planted_sparse(800, 400, 40, 0.1);
+        let rep = solve_bak_csc(&x, &y, &SolveOptions::accurate());
+        assert!(rep.converged(), "stop={:?} rel={}", rep.stop, rep.rel_residual());
+        assert!(rel_l2(&rep.a, &a_true) < 1e-3, "err={}", rel_l2(&rep.a, &a_true));
+    }
+
+    #[test]
+    fn bak_csc_matches_dense_bak_exactly_per_sweep() {
+        // Same arithmetic order (columns ascending-row sorted == dense
+        // order) -> per-sweep agreement to f32 rounding.
+        let (x, y, _) = planted_sparse(801, 120, 16, 0.2);
+        let dense = x.to_dense();
+        let mut o = SolveOptions::default();
+        o.max_sweeps = 4;
+        o.tol = 0.0;
+        let rs = solve_bak_csc(&x, &y, &o);
+        let rd = solve_bak(&dense, &y, &o);
+        assert_eq!(rs.sweeps, rd.sweeps);
+        for (s, d) in rs.a.iter().zip(&rd.a) {
+            assert!((s - d).abs() < 1e-4, "{s} vs {d}");
+        }
+    }
+
+    #[test]
+    fn bak_csc_history_monotone() {
+        let (x, y, _) = planted_sparse(802, 150, 30, 0.15);
+        let mut o = SolveOptions::default();
+        o.tol = 0.0;
+        o.max_sweeps = 30;
+        let rep = solve_bak_csc(&x, &y, &o);
+        for w in rep.history.windows(2) {
+            assert!(w[1] <= w[0] * (1.0 + 1e-9), "Theorem 1 violated: {w:?}");
+        }
+    }
+
+    #[test]
+    fn bak_csc_exit_invariant() {
+        let (x, y, _) = planted_sparse(803, 100, 20, 0.2);
+        let rep = solve_bak_csc(&x, &y, &SolveOptions::default());
+        let xa = x.matvec(&rep.a);
+        for ((yi, xi), ei) in y.iter().zip(&xa).zip(&rep.e) {
+            assert!((yi - xi - ei).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn bak_csc_warm_start_continues() {
+        let (x, y, a_true) = planted_sparse(804, 200, 15, 0.15);
+        let cninv = colnorms_inv_csc(&x);
+        let mut a = a_true.clone();
+        let xa = x.matvec(&a);
+        let mut e: Vec<f32> = y.iter().zip(&xa).map(|(&yi, &xi)| yi - xi).collect();
+        let mut o = SolveOptions::default();
+        o.max_sweeps = 1;
+        o.tol = 0.0;
+        let rep = solve_bak_csc_warm(&x, &cninv, &mut a, &mut e, &y, &o);
+        assert!(rep.rel_residual() < 1e-4, "warm from truth stays at truth");
+    }
+
+    #[test]
+    fn bakp_csc_matches_dense_bakp() {
+        let (x, y, _) = planted_sparse(805, 90, 18, 0.25);
+        let dense = x.to_dense();
+        let mut o = SolveOptions::default();
+        o.thr = 6;
+        o.max_sweeps = 3;
+        o.tol = 0.0;
+        let rs = solve_bakp_csc(&x, &y, &o);
+        let rd = solve_bakp(&dense, &y, &o);
+        for (s, d) in rs.a.iter().zip(&rd.a) {
+            assert!((s - d).abs() < 1e-4, "{s} vs {d}");
+        }
+    }
+
+    #[test]
+    fn bakp_csc_converges() {
+        let (x, y, a_true) = planted_sparse(806, 500, 64, 0.08);
+        let mut o = SolveOptions::accurate();
+        o.thr = 8;
+        let rep = solve_bakp_csc(&x, &y, &o);
+        assert!(rep.converged(), "rel={}", rep.rel_residual());
+        assert!(rel_l2(&rep.a, &a_true) < 1e-3);
+    }
+
+    #[test]
+    fn kaczmarz_csr_matches_dense_kaczmarz() {
+        // Same seed -> same row-sampling sequence -> same iterates.
+        let (x, y, _) = planted_sparse(807, 60, 20, 0.3);
+        let csr = x.to_csr();
+        let dense = x.to_dense();
+        let mut o = SolveOptions::default();
+        o.max_sweeps = 3;
+        o.tol = 0.0;
+        let rs = solve_kaczmarz_csr(&csr, &y, &o);
+        let rd = solve_kaczmarz(&dense, &y, &o);
+        assert_eq!(rs.sweeps, rd.sweeps);
+        for (s, d) in rs.a.iter().zip(&rd.a) {
+            assert!((s - d).abs() < 1e-3, "{s} vs {d}");
+        }
+    }
+
+    #[test]
+    fn kaczmarz_csr_converges_square() {
+        let (x, y, a_true) = planted_sparse(808, 80, 40, 0.2);
+        let csr = x.to_csr();
+        let mut o = SolveOptions::default();
+        o.max_sweeps = 400;
+        o.tol = 1e-5;
+        let rep = solve_kaczmarz_csr(&csr, &y, &o);
+        assert!(rep.rel_residual() < 1e-3, "rel={}", rep.rel_residual());
+        assert!(rel_l2(&rep.a, &a_true) < 0.05);
+    }
+
+    #[test]
+    fn cgls_csc_matches_dense_cgls() {
+        let (x, y, a_true) = planted_sparse(809, 200, 20, 0.15);
+        let dense = x.to_dense();
+        let rs = cgls_csc(&x, &y, 100, 1e-8);
+        let rd = crate::baselines::cgls::cgls_solve(&dense, &y, 100, 1e-8);
+        assert!(rs.converged && rd.converged);
+        assert!(rel_l2(&rs.a, &a_true) < 1e-3);
+        assert!(rel_l2(&rs.a, &rd.a) < 1e-3);
+    }
+
+    #[test]
+    fn empty_column_skipped() {
+        let mut b = CooBuilder::new(30, 3);
+        let mut rng = Rng::seed(810);
+        for i in 0..30 {
+            b.push(i, 0, rng.normal_f32());
+            b.push(i, 2, rng.normal_f32());
+        }
+        let x = b.to_csc(); // column 1 structurally empty
+        let y: Vec<f32> = (0..30).map(|_| rng.normal_f32()).collect();
+        let rep = solve_bak_csc(&x, &y, &SolveOptions::default());
+        assert_eq!(rep.a[1], 0.0);
+        assert!(rep.a.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn kaczmarz_csr_empty_matrix_does_not_panic() {
+        // No stored entries at all — legal over the x_coo wire path.
+        let csr = CooBuilder::new(4, 3).to_csr();
+        let rep = solve_kaczmarz_csr(&csr, &[1.0, 2.0, 3.0, 4.0], &SolveOptions::default());
+        assert_eq!(rep.a, vec![0.0; 3]);
+        assert_eq!(rep.stop, crate::solver::StopReason::Stalled);
+        let rep = solve_kaczmarz_csr(&csr, &[0.0; 4], &SolveOptions::default());
+        assert_eq!(rep.stop, crate::solver::StopReason::Converged);
+    }
+
+    #[test]
+    fn prop_sparse_dense_bak_agree() {
+        forall(
+            811,
+            15,
+            |rng| DimCase::draw(rng, 60, 12),
+            |case| {
+                let (x, y, _) = planted_sparse(case.seed, case.obs.max(4), case.vars, 0.3);
+                let dense = x.to_dense();
+                let mut o = SolveOptions::default();
+                o.max_sweeps = 3;
+                o.tol = 0.0;
+                let rs = solve_bak_csc(&x, &y, &o);
+                let rd = solve_bak(&dense, &y, &o);
+                for (s, d) in rs.a.iter().zip(&rd.a) {
+                    if !(s - d).abs().is_finite() || (s - d).abs() > 2e-3 {
+                        return Err(format!("sparse {s} vs dense {d}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -4,8 +4,10 @@
 //! its string form (the CLI/wire encoding).
 
 use solvebak::api::{registry, solver_for, Problem, SolverError, SolverKind};
+use solvebak::bench::workload::{SparseWorkload, WorkloadSpec};
 use solvebak::linalg::Mat;
 use solvebak::solver::SolveOptions;
+use solvebak::sparse::CscMat;
 use solvebak::util::rng::Rng;
 
 fn planted(seed: u64, obs: usize, vars: usize) -> (Mat, Vec<f32>) {
@@ -14,6 +16,11 @@ fn planted(seed: u64, obs: usize, vars: usize) -> (Mat, Vec<f32>) {
     let a: Vec<f32> = (0..vars).map(|_| rng.normal_f32()).collect();
     let y = x.matvec(&a);
     (x, y)
+}
+
+fn planted_sparse(seed: u64, obs: usize, vars: usize, density: f64) -> (CscMat, Vec<f32>) {
+    let w = SparseWorkload::uniform(WorkloadSpec::new(obs, vars, seed), density);
+    (w.x, w.y)
 }
 
 #[test]
@@ -76,6 +83,51 @@ fn registry_rejects_invalid_problems_without_panicking() {
             );
         }
     }
+}
+
+#[test]
+fn every_registered_solver_answers_sparse_problems() {
+    // Sparse-native kinds (supports_sparse) run O(nnz); everything else
+    // is exercised through the densification fallback — either way the
+    // shared trait must produce a correct report, never a panic.
+    let (tall_x, tall_y) = planted_sparse(45, 200, 16, 0.2);
+    let (sq_x, sq_y) = planted_sparse(46, 24, 24, 0.4);
+    let opts = SolveOptions::builder()
+        .max_sweeps(5000)
+        .tol(1e-5)
+        .thr(4)
+        .check_every(1)
+        .build();
+
+    let mut native = 0;
+    let mut densified = 0;
+    for solver in registry() {
+        let caps = solver.capabilities();
+        let (x, y) = if caps.needs_square { (&sq_x, &sq_y) } else { (&tall_x, &tall_y) };
+        let problem = Problem::new_sparse(x, y).expect("valid planted sparse system");
+        match solver.solve(&problem, &opts) {
+            Ok(rep) => {
+                assert!(
+                    rep.rel_residual() < 1e-3,
+                    "{}: rel_residual {} too large on sparse input",
+                    solver.name(),
+                    rep.rel_residual()
+                );
+                if caps.supports_sparse {
+                    native += 1;
+                } else {
+                    densified += 1;
+                }
+            }
+            Err(SolverError::Unavailable { .. }) => {
+                assert_eq!(solver.kind(), SolverKind::Pjrt, "{} unavailable", solver.name());
+            }
+            Err(e) => panic!("{} failed on sparse input: {e}", solver.name()),
+        }
+    }
+    // Both paths were exercised: the native quartet and the fallback.
+    assert_eq!(native, 4, "bak/bakp/kaczmarz/cgls solve natively");
+    assert!(densified >= 4, "dense-only backends answered via densification");
 }
 
 #[test]
