@@ -36,7 +36,13 @@ fn main() {
 
     let mut bak = None;
     let mut qr = None;
-    for kind in [SolverKind::Bak, SolverKind::Bakp, SolverKind::Cgls, SolverKind::Qr] {
+    for kind in [
+        SolverKind::Bak,
+        SolverKind::Bakp,
+        SolverKind::BakPar, // block-parallel: honours opts.threads (--threads / PALLAS_THREADS)
+        SolverKind::Cgls,
+        SolverKind::Qr,
+    ] {
         let solver = solver_for(kind).expect("registered");
         let (result, secs) = time_once(|| solver.solve(&problem, &opts));
         let rep = result.unwrap_or_else(|e| panic!("{} failed: {e}", solver.name()));
@@ -108,19 +114,20 @@ fn main() {
     // The capability matrix, straight from the registry.
     println!("\nregistered solvers:");
     println!(
-        "{:<16} {:>5} {:>9} {:>12} {:>10} {:>7}",
-        "kind", "wide", "iterative", "needs_square", "warm_start", "sparse"
+        "{:<16} {:>5} {:>9} {:>12} {:>10} {:>7} {:>9}",
+        "kind", "wide", "iterative", "needs_square", "warm_start", "sparse", "parallel"
     );
     for s in registry() {
         let c = s.capabilities();
         println!(
-            "{:<16} {:>5} {:>9} {:>12} {:>10} {:>7}",
+            "{:<16} {:>5} {:>9} {:>12} {:>10} {:>7} {:>9}",
             s.name(),
             c.supports_wide,
             c.iterative,
             c.needs_square,
             c.warm_start,
-            c.supports_sparse
+            c.supports_sparse,
+            c.supports_parallel
         );
     }
     println!("done.");

@@ -9,7 +9,10 @@
 //!     omits (honest context for Table 1).
 //!  E. PJRT artifact sweep vs native sweep cost (L3 dispatch overhead).
 //!
-//! Run: `cargo bench --bench ablations [-- --samples N]`
+//! Run: `cargo bench --bench ablations [-- --samples N] [--smoke]`
+//!
+//! `--smoke` shrinks every workload (~10x per dimension) and drops to one
+//! sample — the CI bench-smoke regime.
 
 use solvebak::baselines::cgls_solve;
 use solvebak::bench::workload::{Workload, WorkloadSpec};
@@ -26,21 +29,25 @@ static ALLOC: CountingAlloc = CountingAlloc;
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv).expect("args");
-    let samples = args.get_usize("samples", 3).expect("samples");
+    let smoke = args.flag("smoke");
+    let samples = args.get_usize("samples", if smoke { 1 } else { 3 }).expect("samples");
     let cfg = BenchConfig { warmup: 1, samples, ..BenchConfig::default() };
+    // --smoke: ~10x smaller per dimension, CI-sized.
+    let scale = if smoke { 0.1 } else { 1.0 };
 
-    ablation_thr(&cfg);
-    ablation_order(&cfg);
-    ablation_tolerance(&cfg);
-    ablation_cgls(&cfg);
+    ablation_thr(&cfg, scale);
+    ablation_order(&cfg, scale);
+    ablation_tolerance(&cfg, scale);
+    ablation_cgls(&cfg, scale);
     ablation_pjrt(&cfg);
 }
 
 /// A: thr sweep on a fixed tall system.
-fn ablation_thr(cfg: &BenchConfig) {
-    println!("\n## A. BAKP thr sweep (obs=20000, vars=512, tol=1e-6)");
+fn ablation_thr(cfg: &BenchConfig, scale: f64) {
+    let spec = WorkloadSpec::new(20_000, 512, 11).scaled(scale);
+    println!("\n## A. BAKP thr sweep (obs={}, vars={}, tol=1e-6)", spec.obs, spec.vars);
     println!("{:>6} | {:>10} | {:>7} | {:>12}", "thr", "time_ms", "sweeps", "rel_resid");
-    let w = Workload::consistent(WorkloadSpec::new(20_000, 512, 11));
+    let w = Workload::consistent(spec);
     for thr in [1usize, 8, 32, 64, 128, 256, 512] {
         let mut o = SolveOptions::default();
         o.thr = thr;
@@ -59,10 +66,11 @@ fn ablation_thr(cfg: &BenchConfig) {
 }
 
 /// B: cyclic vs shuffled order.
-fn ablation_order(cfg: &BenchConfig) {
-    println!("\n## B. SolveBak column order (obs=20000, vars=256)");
+fn ablation_order(cfg: &BenchConfig, scale: f64) {
+    let spec = WorkloadSpec::new(20_000, 256, 12).scaled(scale);
+    println!("\n## B. SolveBak column order (obs={}, vars={})", spec.obs, spec.vars);
     println!("{:>9} | {:>10} | {:>7}", "order", "time_ms", "sweeps");
-    let w = Workload::consistent(WorkloadSpec::new(20_000, 256, 12));
+    let w = Workload::consistent(spec);
     for (name, order) in [("cyclic", ColumnOrder::Cyclic), ("shuffled", ColumnOrder::Shuffled)] {
         let mut o = SolveOptions::default();
         o.order = order;
@@ -77,10 +85,11 @@ fn ablation_order(cfg: &BenchConfig) {
 }
 
 /// C: tolerance sweep — accuracy vs time.
-fn ablation_tolerance(cfg: &BenchConfig) {
-    println!("\n## C. tolerance early-break (obs=50000, vars=256)");
+fn ablation_tolerance(cfg: &BenchConfig, scale: f64) {
+    let spec = WorkloadSpec::new(50_000, 256, 13).scaled(scale);
+    println!("\n## C. tolerance early-break (obs={}, vars={})", spec.obs, spec.vars);
     println!("{:>9} | {:>10} | {:>7} | {:>12}", "tol", "time_ms", "sweeps", "mape");
-    let w = Workload::consistent(WorkloadSpec::new(50_000, 256, 13));
+    let w = Workload::consistent(spec);
     let truth = w.a_true.clone().unwrap();
     for tol in [1e-2, 1e-3, 1e-4, 1e-5, 1e-6] {
         let mut o = SolveOptions::default();
@@ -99,10 +108,11 @@ fn ablation_tolerance(cfg: &BenchConfig) {
 }
 
 /// D: CGLS vs BAK on an increasingly ill-conditioned tall system.
-fn ablation_cgls(cfg: &BenchConfig) {
-    println!("\n## D. BAK vs CGLS (textbook comparator), obs=20000 vars=256");
+fn ablation_cgls(cfg: &BenchConfig, scale: f64) {
+    let spec = WorkloadSpec::new(20_000, 256, 14).scaled(scale);
+    println!("\n## D. BAK vs CGLS (textbook comparator), obs={} vars={}", spec.obs, spec.vars);
     println!("{:>12} | {:>10} | {:>7} | {:>12}", "method", "time_ms", "iters", "rel_resid");
-    let w = Workload::consistent(WorkloadSpec::new(20_000, 256, 14));
+    let w = Workload::consistent(spec);
     let mut o = SolveOptions::default();
     o.tol = 1e-6;
     o.max_sweeps = 400;

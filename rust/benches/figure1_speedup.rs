@@ -28,9 +28,12 @@ fn bar(v: f64, max: f64) -> String {
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv).expect("args");
-    let samples = args.get_usize("samples", 3).expect("samples");
+    let smoke = args.flag("smoke");
+    let samples = args.get_usize("samples", if smoke { 1 } else { 3 }).expect("samples");
     let forced_scale = args.get_f64("scale", 0.0).expect("scale");
     let cfg = BenchConfig { warmup: 1, samples, ..BenchConfig::default() };
+    // --smoke: CI-sized rows (32x smaller element budget, 1 sample).
+    let budget = if smoke { 1 << 16 } else { DEFAULT_BUDGET };
 
     println!("# Figure 1 reproduction — speed-up vs standard solver (QR)");
     let mut rows = Vec::new();
@@ -39,7 +42,7 @@ fn main() {
         let spec = if forced_scale > 0.0 {
             spec0.scaled(forced_scale)
         } else {
-            let f = ((DEFAULT_BUDGET as f64) / (row.obs * row.vars) as f64).sqrt().min(1.0);
+            let f = ((budget as f64) / (row.obs * row.vars) as f64).sqrt().min(1.0);
             spec0.scaled(f)
         };
         let w = Workload::consistent(spec);

@@ -21,11 +21,12 @@ static ALLOC: CountingAlloc = CountingAlloc;
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv).expect("args");
-    let samples = args.get_usize("samples", 3).expect("samples");
+    let smoke = args.flag("smoke");
+    let samples = args.get_usize("samples", if smoke { 1 } else { 3 }).expect("samples");
     let cfg = BenchConfig { warmup: 1, samples, ..BenchConfig::default() };
 
     // Grid: growing feature counts at fixed obs, plus one taller config.
-    let grid: &[(usize, usize, usize)] = &[
+    let grid_full: &[(usize, usize, usize)] = &[
         // (obs, vars, max_feat)
         (2_000, 50, 5),
         (2_000, 100, 5),
@@ -36,6 +37,8 @@ fn main() {
         (10_000, 200, 5),
         (10_000, 400, 10),
     ];
+    // --smoke: the three cheapest rows still show the vars trend.
+    let grid = if smoke { &grid_full[..3] } else { grid_full };
 
     println!("# Figure 2 reproduction — SolveBakF vs stepwise regression");
     println!(

@@ -3,9 +3,10 @@
 //! and gemv. Reports effective memory bandwidth — the roofline for
 //! coordinate descent is the memory stream, not FLOPs.
 //!
-//! Run: `cargo bench --bench microbench`
+//! Run: `cargo bench --bench microbench [-- --smoke]`
 
 use solvebak::bench::workload::{Workload, WorkloadSpec};
+use solvebak::cli::Args;
 use solvebak::linalg::{blas1, blas2};
 use solvebak::solver::{self, SolveOptions};
 use solvebak::util::rng::Rng;
@@ -13,8 +14,16 @@ use solvebak::util::stats::Summary;
 use solvebak::util::timer::{sample, BenchConfig};
 
 fn main() {
-    let cfg = BenchConfig { warmup: 2, samples: 7, ..BenchConfig::default() };
-    let n = 1 << 20; // 1M f32 = 4 MiB per vector (out of L2, streaming)
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv).expect("args");
+    let smoke = args.flag("smoke");
+    let cfg = if smoke {
+        BenchConfig { warmup: 1, samples: 2, ..BenchConfig::default() }
+    } else {
+        BenchConfig { warmup: 2, samples: 7, ..BenchConfig::default() }
+    };
+    // Full: 1M f32 = 4 MiB per vector (out of L2, streaming); smoke: 64K.
+    let n = if smoke { 1 << 16 } else { 1 << 20 };
     let mut rng = Rng::seed(1);
     let x: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
     let mut y: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
@@ -52,7 +61,8 @@ fn main() {
     );
 
     // One full SolveBak sweep on a Table-1-like tall system.
-    let w = Workload::consistent(WorkloadSpec::new(50_000, 200, 2));
+    let spec = WorkloadSpec::new(50_000, 200, 2).scaled(if smoke { 0.1 } else { 1.0 });
+    let w = Workload::consistent(spec);
     let mut o = SolveOptions::default();
     o.max_sweeps = 1;
     o.tol = 0.0;
@@ -61,13 +71,15 @@ fn main() {
     }));
     let bytes = (w.spec.obs * w.spec.vars * 4 * 2 + w.spec.obs * 4) as f64; // x read twice + e
     println!(
-        "bak sweep: {:>8.3} ms  -> {:>6.1} GB/s  (50000x200, dot+axpy per col)",
+        "bak sweep: {:>8.3} ms  -> {:>6.1} GB/s  ({}x{}, dot+axpy per col)",
         t.min * 1e3,
-        bytes / t.min / 1e9
+        bytes / t.min / 1e9,
+        w.spec.obs,
+        w.spec.vars
     );
 
     // gemv on the same matrix.
-    let a: Vec<f32> = (0..200).map(|j| j as f32 * 0.01).collect();
+    let a: Vec<f32> = (0..w.spec.vars).map(|j| j as f32 * 0.01).collect();
     let t = Summary::of(&sample(&cfg, || {
         std::hint::black_box(blas2::gemv(&w.x, &a));
     }));

@@ -1,0 +1,222 @@
+//! Parallel-scaling bench: `bak_par` / `kaczmarz_par` / multi-RHS
+//! `solve_bak_multi_par` against their serial counterparts across thread
+//! counts, on dense and sparse storage.
+//!
+//! This is also the CI perf-trajectory producer: `--out FILE` writes every
+//! measured row as a JSON array (solver, obs, vars, threads, seconds,
+//! rel_residual, sweeps) — the `bench-smoke` job runs it with
+//! `--smoke --out BENCH_PR3.json` and uploads the artifact on every PR.
+//!
+//! Run: `cargo bench --bench parallel_scaling [-- --smoke] [--samples N]
+//!       [--out FILE]`
+
+use solvebak::bench::workload::{SparseWorkload, Workload, WorkloadSpec};
+use solvebak::cli::Args;
+use solvebak::parallel;
+use solvebak::solver::{self, SolveOptions};
+use solvebak::util::json::{Json, ObjBuilder};
+use solvebak::util::rng::Rng;
+use solvebak::util::stats::Summary;
+use solvebak::util::timer::{sample, BenchConfig};
+
+struct Row {
+    solver: &'static str,
+    obs: usize,
+    vars: usize,
+    threads: usize,
+    seconds: f64,
+    rel_residual: f64,
+    sweeps: usize,
+}
+
+impl Row {
+    fn to_json(&self) -> Json {
+        ObjBuilder::new()
+            .str("solver", self.solver)
+            .num("obs", self.obs as f64)
+            .num("vars", self.vars as f64)
+            .num("threads", self.threads as f64)
+            .num("seconds", self.seconds)
+            .num("rel_residual", self.rel_residual)
+            .num("sweeps", self.sweeps as f64)
+            .build()
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv).expect("args");
+    let smoke = args.flag("smoke");
+    let samples = args.get_usize("samples", if smoke { 1 } else { 3 }).expect("samples");
+    let cfg = BenchConfig { warmup: 1, samples, ..BenchConfig::default() };
+    let out_path = args.get("out").map(str::to_string);
+
+    // Thread axis: capped at what the box has in smoke mode so CI numbers
+    // measure real concurrency, not oversubscription noise.
+    let hw = parallel::default_threads();
+    let thread_axis: Vec<usize> =
+        [1usize, 2, 4, 8].into_iter().filter(|&t| !smoke || t <= hw.max(2)).collect();
+    let (obs, vars) = if smoke { (4_000, 128) } else { (40_000, 512) };
+    let sweeps = if smoke { 4 } else { 8 };
+    let nrhs = if smoke { 4 } else { 16 };
+
+    let mut opts = SolveOptions::default();
+    opts.max_sweeps = sweeps;
+    opts.tol = 0.0;
+
+    println!("# parallel scaling — {obs}x{vars}, {sweeps} sweeps, threads {thread_axis:?}");
+    println!(
+        "{:<22} {:>8} | {:>10} {:>9} {:>12}",
+        "solver", "threads", "time_ms", "speedup", "rel_resid"
+    );
+    let mut rows: Vec<Row> = Vec::new();
+
+    // Dense workload shared by the whole matrix of measurements.
+    let w = Workload::consistent(WorkloadSpec::new(obs, vars, 42));
+    let sw = SparseWorkload::uniform(WorkloadSpec::new(obs, vars, 43), 0.01);
+
+    let mut serial_ms = 0.0f64;
+    for &t in &thread_axis {
+        opts.threads = t;
+        let rep = parallel::solve_bak_par(&w.x, &w.y, &opts);
+        let tm = Summary::of(&sample(&cfg, || {
+            std::hint::black_box(parallel::solve_bak_par(&w.x, &w.y, &opts));
+        }));
+        let ms = tm.min * 1e3;
+        if t == 1 {
+            serial_ms = ms;
+        }
+        println!(
+            "{:<22} {:>8} | {:>10.2} {:>8.2}x {:>12.3e}",
+            "bak_par(dense)", t, ms, serial_ms / ms, rep.rel_residual()
+        );
+        rows.push(Row {
+            solver: "bak_par",
+            obs,
+            vars,
+            threads: t,
+            seconds: tm.min,
+            rel_residual: rep.rel_residual(),
+            sweeps: rep.sweeps,
+        });
+    }
+
+    let mut serial_ms = 0.0f64;
+    for &t in &thread_axis {
+        opts.threads = t;
+        let rep = parallel::solve_bak_par_csc(&sw.x, &sw.y, &opts);
+        let tm = Summary::of(&sample(&cfg, || {
+            std::hint::black_box(parallel::solve_bak_par_csc(&sw.x, &sw.y, &opts));
+        }));
+        let ms = tm.min * 1e3;
+        if t == 1 {
+            serial_ms = ms;
+        }
+        println!(
+            "{:<22} {:>8} | {:>10.2} {:>8.2}x {:>12.3e}",
+            "bak_par(csc d=0.01)", t, ms, serial_ms / ms, rep.rel_residual()
+        );
+        rows.push(Row {
+            solver: "bak_par_csc",
+            obs,
+            vars,
+            threads: t,
+            seconds: tm.min,
+            rel_residual: rep.rel_residual(),
+            sweeps: rep.sweeps,
+        });
+    }
+
+    let mut serial_ms = 0.0f64;
+    for &t in &thread_axis {
+        opts.threads = t;
+        let rep = parallel::solve_kaczmarz_par(&w.x, &w.y, &opts);
+        let tm = Summary::of(&sample(&cfg, || {
+            std::hint::black_box(parallel::solve_kaczmarz_par(&w.x, &w.y, &opts));
+        }));
+        let ms = tm.min * 1e3;
+        if t == 1 {
+            serial_ms = ms;
+        }
+        println!(
+            "{:<22} {:>8} | {:>10.2} {:>8.2}x {:>12.3e}",
+            "kaczmarz_par(dense)", t, ms, serial_ms / ms, rep.rel_residual()
+        );
+        rows.push(Row {
+            solver: "kaczmarz_par",
+            obs,
+            vars,
+            threads: t,
+            seconds: tm.min,
+            rel_residual: rep.rel_residual(),
+            sweeps: rep.sweeps,
+        });
+    }
+
+    // Multi-RHS amortisation: one matrix walk, nrhs systems, vs nrhs
+    // independent serial solves.
+    let mut rng = Rng::seed(44);
+    let ys: Vec<Vec<f32>> = (0..nrhs)
+        .map(|_| {
+            let a: Vec<f32> = (0..vars).map(|_| rng.normal_f32()).collect();
+            w.x.matvec(&a)
+        })
+        .collect();
+    opts.threads = 1;
+    let t_individual = Summary::of(&sample(&cfg, || {
+        for y in &ys {
+            std::hint::black_box(solver::solve_bak(&w.x, y, &opts));
+        }
+    }));
+    println!(
+        "{:<22} {:>8} | {:>10.2} {:>8} {:>12}",
+        format!("bak x{nrhs}(individual)"), 1, t_individual.min * 1e3, "-", "-"
+    );
+    for &t in &thread_axis {
+        opts.threads = t;
+        let reps = parallel::solve_bak_multi_par(&w.x, &ys, &opts);
+        let tm = Summary::of(&sample(&cfg, || {
+            std::hint::black_box(parallel::solve_bak_multi_par(&w.x, &ys, &opts));
+        }));
+        let ms = tm.min * 1e3;
+        let worst = reps.iter().map(|r| r.rel_residual()).fold(0.0f64, f64::max);
+        println!(
+            "{:<22} {:>8} | {:>10.2} {:>8.2}x {:>12.3e}",
+            format!("bak_multi_par x{nrhs}"), t, ms, t_individual.min * 1e3 / ms, worst
+        );
+        rows.push(Row {
+            solver: "bak_multi_par",
+            obs,
+            vars,
+            threads: t,
+            seconds: tm.min,
+            rel_residual: worst,
+            sweeps: reps.iter().map(|r| r.sweeps).max().unwrap_or(0),
+        });
+    }
+
+    // Serial reference rows so the JSON trajectory is self-contained.
+    let rep = solver::solve_bak(&w.x, &w.y, &opts);
+    let tm = Summary::of(&sample(&cfg, || {
+        std::hint::black_box(solver::solve_bak(&w.x, &w.y, &opts));
+    }));
+    rows.push(Row {
+        solver: "bak",
+        obs,
+        vars,
+        threads: 1,
+        seconds: tm.min,
+        rel_residual: rep.rel_residual(),
+        sweeps: rep.sweeps,
+    });
+
+    if let Some(path) = out_path {
+        let json = Json::Arr(rows.iter().map(Row::to_json).collect());
+        std::fs::write(&path, json.to_string()).expect("write bench json");
+        println!("# wrote {} rows to {path}", rows.len());
+    }
+    println!("# done.");
+    // Sanity floor so CI catches a broken parallel path, not just a slow
+    // one: every measured solve stayed finite.
+    assert!(rows.iter().all(|r| r.rel_residual.is_finite()));
+}

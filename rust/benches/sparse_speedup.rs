@@ -8,18 +8,26 @@
 //! Shape is the ISSUE's 4096x1024 tall system; both solvers run the same
 //! fixed sweep budget (tol = 0) so the comparison is pure per-sweep cost.
 //!
-//! Run: `cargo bench --bench sparse_speedup`
+//! Run: `cargo bench --bench sparse_speedup [-- --smoke]`
 
 use solvebak::bench::workload::{SparseWorkload, WorkloadSpec};
+use solvebak::cli::Args;
 use solvebak::solver::{self, SolveOptions};
 use solvebak::sparse;
 use solvebak::util::stats::Summary;
 use solvebak::util::timer::{sample, BenchConfig};
 
 fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv).expect("args");
+    let smoke = args.flag("smoke");
     let (obs, vars) = (4096, 1024);
-    let sweeps = 4;
-    let cfg = BenchConfig { warmup: 1, samples: 5, ..BenchConfig::default() };
+    let sweeps = if smoke { 2 } else { 4 };
+    let cfg = BenchConfig {
+        warmup: 1,
+        samples: if smoke { 1 } else { 5 },
+        ..BenchConfig::default()
+    };
     let mut opts = SolveOptions::default();
     opts.max_sweeps = sweeps;
     opts.tol = 0.0;

@@ -29,9 +29,12 @@ fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv).expect("args");
     let full = args.flag("full");
+    let smoke = args.flag("smoke");
     let forced_scale = args.get_f64("scale", 0.0).expect("scale");
-    let samples = args.get_usize("samples", 3).expect("samples");
+    let samples = args.get_usize("samples", if smoke { 1 } else { 3 }).expect("samples");
     let cfg = BenchConfig { warmup: 1, samples, ..BenchConfig::default() };
+    // --smoke: CI-sized rows (64x smaller element budget, 1 sample).
+    let budget = if smoke { 1 << 16 } else { DEFAULT_BUDGET };
 
     println!("# Table 1 reproduction — LAPACK(QR) vs BAK vs BAKP");
     println!("# paper rows: published numbers; measured: this machine.");
@@ -39,7 +42,7 @@ fn main() {
         "# mode: {}",
         if full { "FULL paper dims".into() }
         else if forced_scale > 0.0 { format!("scale={forced_scale}") }
-        else { format!("auto-scale to {DEFAULT_BUDGET} elements") }
+        else { format!("auto-scale to {budget} elements") }
     );
     println!(
         "{:<3} {:>9} {:>6} | {:>11} {:>11} {:>11} | {:>9} {:>9} | {:>9} {:>9} | {:>8} {:>8}",
@@ -58,7 +61,7 @@ fn main() {
             spec0.scaled(forced_scale)
         } else {
             let elems = row.obs * row.vars;
-            let f = ((DEFAULT_BUDGET as f64) / elems as f64).sqrt().min(1.0);
+            let f = ((budget as f64) / elems as f64).sqrt().min(1.0);
             spec0.scaled(f)
         };
         let w = Workload::consistent(spec);

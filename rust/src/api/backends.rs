@@ -23,12 +23,29 @@ use super::{
 
 /// Dense view of the problem's matrix for a backend without a native
 /// sparse path: borrows when already dense; materialises (O(obs*vars))
-/// with a logged warning when sparse. The coordinator layers a
-/// `densified_jobs` metric on top of the same event.
+/// when sparse. The first densification per backend logs at Warn; repeat
+/// calls — a batch of members against the same matrix, or a bench
+/// harness's timing loop — drop to Debug so one request logs the event
+/// once instead of once per solve. The coordinator layers a
+/// once-per-job `densified_jobs` metric on top of the same event.
 fn dense_or_warn<'a>(p: &Problem<'a>, backend: &'static str) -> Cow<'a, Mat> {
     if let MatrixRef::SparseCsc(s) = p.x() {
+        static WARNED: std::sync::OnceLock<std::sync::Mutex<Vec<&'static str>>> =
+            std::sync::OnceLock::new();
+        let first = {
+            let mut seen = WARNED
+                .get_or_init(|| std::sync::Mutex::new(Vec::new()))
+                .lock()
+                .unwrap();
+            if seen.contains(&backend) {
+                false
+            } else {
+                seen.push(backend);
+                true
+            }
+        };
         emit(
-            Level::Warn,
+            if first { Level::Warn } else { Level::Debug },
             "api",
             format_args!(
                 "backend '{backend}' has no native sparse path; densifying {}x{} (nnz={})",
@@ -105,6 +122,65 @@ impl Solver for BakpSolver {
         match p.x() {
             MatrixRef::Dense(x) => Ok(solver::solve_bakp(x, p.y(), opts)),
             MatrixRef::SparseCsc(s) => Ok(sparse::solve::solve_bakp_csc(s, p.y(), opts)),
+        }
+    }
+}
+
+/// Column-partitioned block-parallel SolveBak: concurrent per-block inner
+/// sweeps on the [`crate::parallel`] pool, merged every sweep.
+/// `opts.threads` sets the block count; 1 is serial Algorithm 1.
+pub struct BakParSolver;
+
+impl Solver for BakParSolver {
+    fn kind(&self) -> SolverKind {
+        SolverKind::BakPar
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        self.kind().capabilities().expect("concrete kind")
+    }
+
+    fn solve(
+        &self,
+        p: &Problem<'_>,
+        opts: &SolveOptions,
+    ) -> Result<SolveReport, SolverError> {
+        self.capabilities().check(p.obs(), p.vars())?;
+        match p.x() {
+            MatrixRef::Dense(x) => Ok(crate::parallel::solve_bak_par(x, p.y(), opts)),
+            MatrixRef::SparseCsc(s) => {
+                Ok(crate::parallel::solve_bak_par_csc(s, p.y(), opts))
+            }
+        }
+    }
+}
+
+/// Row-partitioned parallel randomized Kaczmarz (averaging sync) on the
+/// [`crate::parallel`] pool. `opts.threads` sets the block count.
+pub struct KaczmarzParSolver;
+
+impl Solver for KaczmarzParSolver {
+    fn kind(&self) -> SolverKind {
+        SolverKind::KaczmarzPar
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        self.kind().capabilities().expect("concrete kind")
+    }
+
+    fn solve(
+        &self,
+        p: &Problem<'_>,
+        opts: &SolveOptions,
+    ) -> Result<SolveReport, SolverError> {
+        self.capabilities().check(p.obs(), p.vars())?;
+        match p.x() {
+            MatrixRef::Dense(x) => Ok(crate::parallel::solve_kaczmarz_par(x, p.y(), opts)),
+            MatrixRef::SparseCsc(s) => {
+                // Row actions want CSR, as in the serial Kaczmarz adapter.
+                let csr = s.to_csr();
+                Ok(crate::parallel::solve_kaczmarz_par_csr(&csr, p.y(), opts))
+            }
         }
     }
 }
@@ -510,6 +586,30 @@ mod tests {
         let p = Problem::new_sparse(&x, &y).unwrap();
         let rep = QrSolver.solve(&p, &SolveOptions::default()).unwrap();
         assert!(rel_l2(&rep.a, &a_true) < 1e-3);
+    }
+
+    #[test]
+    fn bak_par_solver_matches_free_function() {
+        let (x, y, _) = planted(707, 200, 24);
+        let opts = SolveOptions::builder().max_sweeps(3).tol(0.0).threads(4).build();
+        let p = Problem::new(&x, &y).unwrap();
+        let via_trait = BakParSolver.solve(&p, &opts).unwrap();
+        let direct = crate::parallel::solve_bak_par(&x, &y, &opts);
+        assert_eq!(via_trait.a, direct.a);
+    }
+
+    #[test]
+    fn kaczmarz_par_solver_runs_sparse_natively() {
+        let (x, y, a_true) = planted_sparse(708, 240, 12);
+        let p = Problem::new_sparse(&x, &y).unwrap();
+        let opts = SolveOptions::builder()
+            .max_sweeps(2000)
+            .tol(1e-4)
+            .threads(2)
+            .build();
+        let rep = KaczmarzParSolver.solve(&p, &opts).unwrap();
+        assert!(rep.rel_residual() < 1e-3, "rel={}", rep.rel_residual());
+        assert!(rel_l2(&rep.a, &a_true) < 0.05);
     }
 
     #[test]

@@ -5,8 +5,9 @@
 use std::str::FromStr;
 
 use super::backends::{
-    BakMultiSolver, BakSolver, BakpSolver, CglsSolver, CholeskySolver, GaussSolver,
-    GaussSouthwellSolver, KaczmarzSolver, PjrtSolver, QrSolver,
+    BakMultiSolver, BakParSolver, BakSolver, BakpSolver, CglsSolver, CholeskySolver,
+    GaussSolver, GaussSouthwellSolver, KaczmarzParSolver, KaczmarzSolver, PjrtSolver,
+    QrSolver,
 };
 use super::{Capabilities, Solver, SolverError};
 
@@ -18,10 +19,15 @@ pub enum SolverKind {
     Bak,
     /// Algorithm 2 — block-"parallel" CD with stale in-block errors.
     Bakp,
+    /// Column-partitioned SolveBak on real threads: concurrent per-block
+    /// inner sweeps with an every-sweep merge sync.
+    BakPar,
     /// Multi-RHS SolveBak (one matrix walk serves every right-hand side).
     BakMulti,
     /// Randomized Kaczmarz (row-action dual).
     Kaczmarz,
+    /// Row-partitioned parallel Kaczmarz with averaging sync.
+    KaczmarzPar,
     /// Greedy Gauss-Southwell column selection.
     GaussSouthwell,
     /// Householder-QR least squares (the paper's "LAPACK" comparator).
@@ -41,11 +47,13 @@ pub enum SolverKind {
 
 impl SolverKind {
     /// Every concrete implementation, in registry order (excludes `Auto`).
-    pub const CONCRETE: [SolverKind; 10] = [
+    pub const CONCRETE: [SolverKind; 12] = [
         SolverKind::Bak,
         SolverKind::Bakp,
+        SolverKind::BakPar,
         SolverKind::BakMulti,
         SolverKind::Kaczmarz,
+        SolverKind::KaczmarzPar,
         SolverKind::GaussSouthwell,
         SolverKind::Qr,
         SolverKind::Cholesky,
@@ -59,8 +67,10 @@ impl SolverKind {
         match self {
             SolverKind::Bak => "bak",
             SolverKind::Bakp => "bakp",
+            SolverKind::BakPar => "bak_par",
             SolverKind::BakMulti => "bak_multi",
             SolverKind::Kaczmarz => "kaczmarz",
+            SolverKind::KaczmarzPar => "kaczmarz_par",
             SolverKind::GaussSouthwell => "gauss_southwell",
             SolverKind::Qr => "qr",
             SolverKind::Cholesky => "cholesky",
@@ -88,6 +98,7 @@ impl SolverKind {
             needs_square: false,
             warm_start: false,
             supports_sparse: false,
+            supports_parallel: false,
         };
         match self {
             SolverKind::Bak => Some(Capabilities {
@@ -95,7 +106,19 @@ impl SolverKind {
                 supports_sparse: true,
                 ..ITERATIVE
             }),
-            SolverKind::Bakp | SolverKind::Kaczmarz | SolverKind::Cgls => {
+            // Bakp threads its in-block phases on the dense path; the
+            // block-partitioned variants scale whole sweeps.
+            SolverKind::Bakp => Some(Capabilities {
+                supports_sparse: true,
+                supports_parallel: true,
+                ..ITERATIVE
+            }),
+            SolverKind::BakPar | SolverKind::KaczmarzPar => Some(Capabilities {
+                supports_sparse: true,
+                supports_parallel: true,
+                ..ITERATIVE
+            }),
+            SolverKind::Kaczmarz | SolverKind::Cgls => {
                 Some(Capabilities { supports_sparse: true, ..ITERATIVE })
             }
             SolverKind::BakMulti | SolverKind::GaussSouthwell | SolverKind::Pjrt => {
@@ -108,6 +131,7 @@ impl SolverKind {
                 needs_square: false,
                 warm_start: false,
                 supports_sparse: false,
+                supports_parallel: false,
             }),
             SolverKind::Gauss => Some(Capabilities {
                 supports_wide: false,
@@ -115,6 +139,7 @@ impl SolverKind {
                 needs_square: true,
                 warm_start: false,
                 supports_sparse: false,
+                supports_parallel: false,
             }),
             SolverKind::Auto => None,
         }
@@ -136,8 +161,10 @@ impl FromStr for SolverKind {
         match s.to_ascii_lowercase().replace('-', "_").as_str() {
             "bak" => Ok(SolverKind::Bak),
             "bakp" => Ok(SolverKind::Bakp),
+            "bak_par" | "bakpar" => Ok(SolverKind::BakPar),
             "bak_multi" | "bakmulti" => Ok(SolverKind::BakMulti),
             "kaczmarz" => Ok(SolverKind::Kaczmarz),
+            "kaczmarz_par" | "kaczmarzpar" => Ok(SolverKind::KaczmarzPar),
             "gauss_southwell" | "gs" => Ok(SolverKind::GaussSouthwell),
             "qr" | "lapack" => Ok(SolverKind::Qr),
             "cholesky" => Ok(SolverKind::Cholesky),
@@ -159,8 +186,10 @@ pub fn solver_for(kind: SolverKind) -> Option<Box<dyn Solver>> {
     match kind {
         SolverKind::Bak => Some(Box::new(BakSolver)),
         SolverKind::Bakp => Some(Box::new(BakpSolver)),
+        SolverKind::BakPar => Some(Box::new(BakParSolver)),
         SolverKind::BakMulti => Some(Box::new(BakMultiSolver)),
         SolverKind::Kaczmarz => Some(Box::new(KaczmarzSolver)),
+        SolverKind::KaczmarzPar => Some(Box::new(KaczmarzParSolver)),
         SolverKind::GaussSouthwell => Some(Box::new(GaussSouthwellSolver)),
         SolverKind::Qr => Some(Box::new(QrSolver)),
         SolverKind::Cholesky => Some(Box::new(CholeskySolver)),
@@ -231,7 +260,7 @@ mod tests {
     }
 
     #[test]
-    fn sparse_native_kinds_are_exactly_the_iterative_quartet() {
+    fn sparse_native_kinds_are_exactly_the_iterative_sextet() {
         let native: Vec<SolverKind> = SolverKind::CONCRETE
             .iter()
             .copied()
@@ -242,9 +271,34 @@ mod tests {
             vec![
                 SolverKind::Bak,
                 SolverKind::Bakp,
+                SolverKind::BakPar,
                 SolverKind::Kaczmarz,
+                SolverKind::KaczmarzPar,
                 SolverKind::Cgls
             ]
+        );
+    }
+
+    #[test]
+    fn parallel_kinds_are_the_block_trio() {
+        let par: Vec<SolverKind> = SolverKind::CONCRETE
+            .iter()
+            .copied()
+            .filter(|k| k.capabilities().is_some_and(|c| c.supports_parallel))
+            .collect();
+        assert_eq!(
+            par,
+            vec![SolverKind::Bakp, SolverKind::BakPar, SolverKind::KaczmarzPar]
+        );
+    }
+
+    #[test]
+    fn parallel_aliases_parse() {
+        assert_eq!("bak-par".parse::<SolverKind>().unwrap(), SolverKind::BakPar);
+        assert_eq!("BAKPAR".parse::<SolverKind>().unwrap(), SolverKind::BakPar);
+        assert_eq!(
+            "kaczmarz-par".parse::<SolverKind>().unwrap(),
+            SolverKind::KaczmarzPar
         );
     }
 

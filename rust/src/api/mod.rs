@@ -22,18 +22,27 @@
 //!
 //! ## Capability matrix
 //!
-//! | kind              | supports_wide | iterative | needs_square | warm_start | supports_sparse |
-//! |-------------------|---------------|-----------|--------------|------------|-----------------|
-//! | `bak`             | yes           | yes       | no           | yes        | yes (CSC)       |
-//! | `bakp`            | yes           | yes       | no           | no         | yes (CSC)       |
-//! | `bak_multi`       | yes           | yes       | no           | no         | no (densifies)  |
-//! | `kaczmarz`        | yes           | yes       | no           | no         | yes (CSR)       |
-//! | `gauss_southwell` | yes           | yes       | no           | no         | no (densifies)  |
-//! | `qr`              | yes (min-norm)| no        | no           | no         | no (densifies)  |
-//! | `cholesky`        | no            | no        | no           | no         | no (densifies)  |
-//! | `gauss`           | no            | no        | yes          | no         | no (densifies)  |
-//! | `cgls`            | yes           | yes       | no           | no         | yes (CSC)       |
-//! | `pjrt`            | yes (bucketed)| yes       | no           | no         | no (densifies)  |
+//! | kind              | supports_wide | iterative | needs_square | warm_start | supports_sparse | parallel |
+//! |-------------------|---------------|-----------|--------------|------------|-----------------|----------|
+//! | `bak`             | yes           | yes       | no           | yes        | yes (CSC)       | no       |
+//! | `bakp`            | yes           | yes       | no           | no         | yes (CSC)       | in-block |
+//! | `bak_par`         | yes           | yes       | no           | no         | yes (CSC)       | yes      |
+//! | `bak_multi`       | yes           | yes       | no           | no         | no (densifies)  | no       |
+//! | `kaczmarz`        | yes           | yes       | no           | no         | yes (CSR)       | no       |
+//! | `kaczmarz_par`    | yes           | yes       | no           | no         | yes (CSR)       | yes      |
+//! | `gauss_southwell` | yes           | yes       | no           | no         | no (densifies)  | no       |
+//! | `qr`              | yes (min-norm)| no        | no           | no         | no (densifies)  | no       |
+//! | `cholesky`        | no            | no        | no           | no         | no (densifies)  | no       |
+//! | `gauss`           | no            | no        | yes          | no         | no (densifies)  | no       |
+//! | `cgls`            | yes           | yes       | no           | no         | yes (CSC)       | no       |
+//! | `pjrt`            | yes (bucketed)| yes       | no           | no         | no (densifies)  | no       |
+//!
+//! The `parallel` column is the `supports_parallel` capability: the
+//! backend scales with [`crate::solver::SolveOptions::threads`]
+//! (`bak_par`/`kaczmarz_par` run whole block-partitioned sweeps on the
+//! [`crate::parallel`] layer; `bakp` threads its in-block phases). The
+//! coordinator's router prefers these variants when a request asks for
+//! `threads > 1`.
 //!
 //! Sparse problems ([`Problem::new_sparse`]) run natively on the kinds
 //! whose `supports_sparse` is true; every other kind transparently
@@ -371,6 +380,11 @@ pub struct Capabilities {
     /// O(nnz) per sweep; false = the backend densifies sparse input
     /// (logged, and counted as `densified_jobs` by the coordinator).
     pub supports_sparse: bool,
+    /// Scales with [`SolveOptions::threads`]: the backend runs
+    /// block-parallel sweeps (or threaded in-block phases) on the
+    /// [`crate::parallel`] layer. The router prefers such backends when a
+    /// request asks for `threads > 1`.
+    pub supports_parallel: bool,
 }
 
 impl Capabilities {
@@ -518,6 +532,7 @@ mod tests {
             needs_square: true,
             warm_start: false,
             supports_sparse: false,
+            supports_parallel: false,
         };
         assert!(square_only.check(5, 5).is_ok());
         assert!(matches!(

@@ -48,11 +48,16 @@ COMMON OPTIONS:
                         one of: {}|auto
   --sparse              sparse workload (CSC storage, O(nnz) solves)
   --density X           sparse nonzero fraction  [0.01] (implies --sparse)
-  --thr N --threads N   BAKP block width/threads [50/1]
+  --thr N               BAKP block width         [50]
+  --threads N           solver threads (bak_par/kaczmarz_par blocks, BAKP
+                        in-block threading; auto-routing prefers the
+                        parallel variants when > 1)
+                        [PALLAS_THREADS, else 1]
   --sweeps N --tol X    convergence control      [200/1e-6]
   --artifacts DIR       PJRT artifact directory  [artifacts]
   --max-feat N          features to select       [10]
-  --workers N           service worker threads   [4]
+  --workers N           service worker threads   [PALLAS_THREADS, else
+                        available parallelism]
   --requests N          synthetic request count  [32]
 ",
         backends.join("|")
@@ -95,12 +100,20 @@ fn backend_of(args: &Args) -> Result<SolverKind, ArgError> {
         .map_err(|e| ArgError(e.to_string()))
 }
 
+/// Default for `--threads` when the flag is absent: `PALLAS_THREADS` when
+/// set, else 1 (the solver-side serial default — the service worker pool
+/// separately defaults to the machine's parallelism via
+/// [`crate::parallel::default_threads`]).
+fn threads_default() -> usize {
+    crate::parallel::env_threads().unwrap_or(1)
+}
+
 fn opts_of(args: &Args) -> Result<SolveOptions, ArgError> {
     Ok(SolveOptions::builder()
         .max_sweeps(args.get_usize("sweeps", 200)?)
         .tol(args.get_f64("tol", 1e-6)?)
         .thr(args.get_usize("thr", 50)?)
-        .threads(args.get_usize("threads", 1)?)
+        .threads(args.get_usize("threads", threads_default())?)
         .seed(args.get_u64("seed", 0x5eed)?)
         .build())
 }
@@ -211,7 +224,7 @@ fn cmd_features(args: &Args) -> Result<(), ArgError> {
 
 fn cmd_serve(args: &Args) -> Result<(), ArgError> {
     let n = args.get_usize("requests", 32)?;
-    let workers = args.get_usize("workers", 4)?;
+    let workers = args.get_usize("workers", crate::parallel::default_threads())?;
     let obs = args.get_usize("obs", 2_000)?;
     let vars = args.get_usize("vars", 64)?;
     let seed = args.get_u64("seed", 42)?;
@@ -257,7 +270,7 @@ fn cmd_serve(args: &Args) -> Result<(), ArgError> {
 }
 
 fn cmd_serve_tcp(args: &Args) -> Result<(), ArgError> {
-    let workers = args.get_usize("workers", 4)?;
+    let workers = args.get_usize("workers", crate::parallel::default_threads())?;
     let port = args.get_usize("port", 7447)? as u16;
     let coord = Arc::new(Coordinator::start(CoordinatorConfig {
         workers,
@@ -281,6 +294,13 @@ fn cmd_serve_tcp(args: &Args) -> Result<(), ArgError> {
 fn cmd_info(args: &Args) -> Result<(), ArgError> {
     println!("solvebak {} — three-layer Rust+JAX+Pallas SolveBak", crate::VERSION);
     println!("threads available: {}", crate::linalg::blas2::num_threads());
+    println!(
+        "default workers: {} (PALLAS_THREADS {})",
+        crate::parallel::default_threads(),
+        std::env::var("PALLAS_THREADS")
+            .map(|v| format!("= {v}"))
+            .unwrap_or_else(|_| "unset".into()),
+    );
     let dir = args.get("artifacts").unwrap_or("artifacts");
     match crate::runtime::Manifest::load(dir) {
         Ok(m) => {
@@ -394,5 +414,46 @@ mod tests {
         let u = usage();
         assert!(u.contains("--sparse"));
         assert!(u.contains("--density"));
+    }
+
+    #[test]
+    fn usage_mentions_parallel_knobs() {
+        let u = usage();
+        assert!(u.contains("--threads"));
+        assert!(u.contains("PALLAS_THREADS"));
+        assert!(u.contains("bak_par"));
+        assert!(u.contains("kaczmarz_par"));
+    }
+
+    #[test]
+    fn solve_with_parallel_backend_and_threads() {
+        assert_eq!(
+            run(sv(&[
+                "solve", "--obs", "400", "--vars", "16", "--backend", "bak_par",
+                "--threads", "2",
+            ])),
+            0
+        );
+    }
+
+    #[test]
+    fn solve_sparse_parallel_backend() {
+        assert_eq!(
+            run(sv(&[
+                "solve", "--obs", "300", "--vars", "12", "--sparse", "--density", "0.2",
+                "--backend", "bak_par", "--threads", "2",
+            ])),
+            0
+        );
+    }
+
+    #[test]
+    fn threads_flag_parses_into_options() {
+        let a = Args::parse(&sv(&["--threads", "8"])).unwrap();
+        assert_eq!(opts_of(&a).unwrap().threads, 8);
+        // Absent flag: 1 unless PALLAS_THREADS overrides (env-dependent,
+        // so only assert positivity).
+        let a = Args::parse(&sv(&[])).unwrap();
+        assert!(opts_of(&a).unwrap().threads >= 1);
     }
 }

@@ -4,8 +4,10 @@
 //! so recording is a single atomic increment on the hot path.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
 
 use crate::api::SolverKind;
+use crate::parallel::PoolStats;
 use crate::util::json::{Json, ObjBuilder};
 
 /// Log-bucketed latency histogram: bucket i covers
@@ -97,6 +99,9 @@ pub struct Metrics {
     /// Jobs executed per backend, indexed in [`SolverKind::CONCRETE`]
     /// order (the backend that actually ran, post-routing).
     backend_jobs: [AtomicU64; SolverKind::CONCRETE.len()],
+    /// Worker-pool gauges ([`crate::parallel::PoolStats`]): attached by
+    /// the service at startup, exported alongside the counters.
+    pool: OnceLock<Arc<PoolStats>>,
     pub solve_latency: Histogram,
     pub queue_wait: Histogram,
 }
@@ -113,6 +118,7 @@ impl Default for Metrics {
             densified_jobs: AtomicU64::new(0),
             job_queue_depth: AtomicU64::new(0),
             backend_jobs: std::array::from_fn(|_| AtomicU64::new(0)),
+            pool: OnceLock::new(),
             solve_latency: Histogram::new(),
             queue_wait: Histogram::new(),
         }
@@ -132,6 +138,16 @@ impl Metrics {
         }
     }
 
+    /// Attach the worker pool's gauges (once, at service startup).
+    pub fn attach_pool(&self, stats: Arc<PoolStats>) {
+        let _ = self.pool.set(stats);
+    }
+
+    /// The attached pool gauges, when a pool is running.
+    pub fn pool(&self) -> Option<&Arc<PoolStats>> {
+        self.pool.get()
+    }
+
     /// Executed-job count for one backend.
     pub fn backend_jobs(&self, kind: SolverKind) -> u64 {
         SolverKind::CONCRETE
@@ -149,6 +165,20 @@ impl Metrics {
             per_backend =
                 per_backend.num(kind.as_str(), self.backend_jobs[i].load(Ordering::Relaxed) as f64);
         }
+        // Pool gauges: zeros when no pool is attached (metrics created
+        // standalone), live values while the service runs.
+        let (workers, busy, inflight, panicked, worker_jobs) = match self.pool.get() {
+            Some(p) => (
+                p.workers() as f64,
+                p.workers_busy.load(Ordering::Relaxed) as f64,
+                p.jobs_inflight.load(Ordering::Relaxed) as f64,
+                p.jobs_panicked.load(Ordering::Relaxed) as f64,
+                p.worker_jobs(),
+            ),
+            None => (0.0, 0.0, 0.0, 0.0, Vec::new()),
+        };
+        let worker_jobs =
+            Json::Arr(worker_jobs.iter().map(|&v| Json::Num(v as f64)).collect());
         ObjBuilder::new()
             .num("requests_submitted", c(&self.requests_submitted))
             .num("requests_completed", c(&self.requests_completed))
@@ -158,6 +188,11 @@ impl Metrics {
             .num("queue_rejections", c(&self.queue_rejections))
             .num("densified_jobs", c(&self.densified_jobs))
             .num("job_queue_depth", c(&self.job_queue_depth))
+            .num("workers", workers)
+            .num("workers_busy", busy)
+            .num("jobs_inflight", inflight)
+            .num("worker_panics", panicked)
+            .val("worker_jobs", worker_jobs)
             .val("backend_jobs", per_backend.build())
             .num("solve_latency_mean_s", self.solve_latency.mean())
             .num("solve_latency_p50_s", self.solve_latency.quantile(0.5))
@@ -225,6 +260,29 @@ mod tests {
         let j = m.to_json();
         assert_eq!(j.get("densified_jobs").unwrap().as_f64(), Some(3.0));
         assert_eq!(j.get("job_queue_depth").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn pool_gauges_zero_until_attached_then_live() {
+        let m = Metrics::new();
+        let j = m.to_json();
+        assert_eq!(j.get("workers").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("workers_busy").unwrap().as_f64(), Some(0.0));
+        assert!(j.get("worker_jobs").unwrap().items().is_empty());
+
+        let pool = crate::parallel::Executor::start("m", 2, 4, |_w, _j: ()| {});
+        m.attach_pool(pool.stats());
+        pool.submit(()).unwrap();
+        pool.submit(()).unwrap();
+        pool.shutdown();
+        let j = m.to_json();
+        assert_eq!(j.get("workers").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("jobs_inflight").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("worker_panics").unwrap().as_f64(), Some(0.0));
+        let per_worker = j.get("worker_jobs").unwrap().items();
+        assert_eq!(per_worker.len(), 2);
+        let total: f64 = per_worker.iter().filter_map(|v| v.as_f64()).sum();
+        assert_eq!(total, 2.0);
     }
 
     #[test]

@@ -3,14 +3,19 @@
 //!
 //! Pieces:
 //! * [`request`] — typed requests/responses; multi-RHS solve jobs.
-//! * [`queue`]   — bounded MPMC job queue with backpressure (std-only).
-//! * [`router`]  — backend selection policy: native BAK/BAKP/QR or a PJRT
+//! * [`queue`]   — re-export of the crate-wide bounded MPMC queue
+//!   ([`crate::parallel::queue`]).
+//! * [`router`]  — backend selection policy: native BAK/BAKP/QR, the
+//!   block-parallel variants when a request asks for threads, or a PJRT
 //!   artifact bucket, chosen from problem shape + request hints.
 //! * [`batch`]   — batching policy: coalesces requests that share the same
 //!   input matrix into one multi-RHS job (amortises column norms and the
 //!   matrix walk — the serving-batch analogue for solvers).
-//! * [`metrics`] — counters + latency histograms, JSON-dumpable.
-//! * [`service`] — the leader: worker pool, request lifecycle, shutdown.
+//! * [`metrics`] — counters + latency histograms + worker-pool gauges,
+//!   JSON-dumpable.
+//! * [`service`] — the leader: scheduler + [`crate::parallel::Executor`]
+//!   worker pool (panic isolation per job, graceful drain-on-shutdown),
+//!   request lifecycle.
 
 pub mod batch;
 pub mod metrics;

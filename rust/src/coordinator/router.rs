@@ -28,37 +28,47 @@ pub const NONSQUARE_RATIO: f64 = 4.0;
 ///
 /// * Explicit hints are honoured when the hinted solver's capabilities
 ///   cover the shape; otherwise QR (which handles tall and wide) runs.
-///   Pjrt with no fitting artifact falls back to native BAKP. A
-///   dense-only hint on a sparse job is still honoured — the executor
-///   densifies and counts it — because an explicit hint is a contract.
+///   Pjrt with no fitting artifact falls back to native BAKP (BAK_PAR
+///   when the request asks for threads). A dense-only hint on a sparse
+///   job is still honoured — the executor densifies and counts it —
+///   because an explicit hint is a contract.
 /// * Auto + dense: square-ish -> QR (direct methods won in §7); tall/wide
-///   with a fitting artifact -> Pjrt; otherwise BAKP for parallel-friendly
-///   shapes, BAK for small ones.
-/// * Auto + sparse: always native sequential BAK — densifying for QR
-///   would forfeit the O(nnz) win the sparse representation exists for,
-///   and the sparse BAKP path is serial with no per-sweep advantage.
+///   with a fitting artifact -> Pjrt; otherwise BAK_PAR when the request
+///   asks for `threads > 1` (block-parallel whole sweeps), BAKP for
+///   large single-thread shapes, BAK for small ones.
+/// * Auto + sparse: native O(nnz) CD — block-parallel BAK_PAR when
+///   `threads > 1`, sequential BAK otherwise. Densifying for QR would
+///   forfeit the O(nnz) win the sparse representation exists for.
 pub fn route(
     backend: SolverKind,
     obs: usize,
     vars: usize,
     sparse: bool,
+    threads: usize,
     manifest: Option<&Manifest>,
 ) -> RouteDecision {
     let has_artifact = manifest
         .map(|m| m.route(ArtifactKind::BakpSweep, obs, vars).is_some())
         .unwrap_or(false);
+    let parallel = threads > 1;
     match backend {
+        SolverKind::Pjrt if !has_artifact && parallel => RouteDecision {
+            backend: SolverKind::BakPar,
+            reason: "pjrt requested but no artifact bucket fits; threaded bak_par fallback",
+        },
         SolverKind::Pjrt if !has_artifact => RouteDecision {
             backend: SolverKind::Bakp,
             reason: "pjrt requested but no artifact bucket fits; native bakp fallback",
         },
+        SolverKind::Auto if sparse && parallel => RouteDecision {
+            backend: SolverKind::BakPar,
+            reason: "sparse system + threads: block-parallel CD on native O(nnz) path",
+        },
         SolverKind::Auto if sparse => {
-            // Always sequential BAK: per sweep both sparse CD variants
-            // cost O(nnz), but the sparse BAKP path is serial (uneven
-            // per-column nnz defeats its block threading) and stale
-            // blocks never converge faster than cyclic CD — so BAK
-            // dominates regardless of the dense cell count, which says
-            // nothing about actual sparse work anyway.
+            // Sequential BAK: per sweep both sparse CD variants cost
+            // O(nnz), and with one thread the block variants buy nothing
+            // — so BAK dominates regardless of the dense cell count,
+            // which says nothing about actual sparse work anyway.
             RouteDecision {
                 backend: SolverKind::Bak,
                 reason: "sparse system: sequential CD on native O(nnz) path",
@@ -79,6 +89,11 @@ pub fn route(
                 RouteDecision {
                     backend: SolverKind::Pjrt,
                     reason: "non-square + artifact bucket available",
+                }
+            } else if parallel {
+                RouteDecision {
+                    backend: SolverKind::BakPar,
+                    reason: "non-square + threads: block-parallel whole sweeps",
                 }
             } else if obs * vars >= 1 << 20 {
                 RouteDecision {
@@ -127,66 +142,84 @@ mod tests {
 
     #[test]
     fn explicit_hint_honoured() {
-        let d = route(SolverKind::Qr, 10_000, 10, false, None);
+        let d = route(SolverKind::Qr, 10_000, 10, false, 1, None);
         assert_eq!(d.backend, SolverKind::Qr);
-        let d = route(SolverKind::Bak, 100, 100, false, None);
+        let d = route(SolverKind::Bak, 100, 100, false, 1, None);
         assert_eq!(d.backend, SolverKind::Bak);
-        let d = route(SolverKind::Cgls, 500, 20, false, None);
+        let d = route(SolverKind::Cgls, 500, 20, false, 1, None);
         assert_eq!(d.backend, SolverKind::Cgls);
+        // A serial hint stays honoured even when threads are requested —
+        // an explicit hint is a contract.
+        let d = route(SolverKind::Bak, 10_000, 10, false, 8, None);
+        assert_eq!(d.backend, SolverKind::Bak);
     }
 
     #[test]
     fn auto_square_goes_qr() {
-        let d = route(SolverKind::Auto, 128, 100, false, None);
+        let d = route(SolverKind::Auto, 128, 100, false, 1, None);
+        assert_eq!(d.backend, SolverKind::Qr);
+        // Direct methods don't thread; square-ish stays QR regardless.
+        let d = route(SolverKind::Auto, 128, 100, false, 8, None);
         assert_eq!(d.backend, SolverKind::Qr);
     }
 
     #[test]
     fn auto_tall_small_goes_bak() {
-        let d = route(SolverKind::Auto, 4000, 10, false, None);
+        let d = route(SolverKind::Auto, 4000, 10, false, 1, None);
         assert_eq!(d.backend, SolverKind::Bak);
     }
 
     #[test]
     fn auto_tall_large_goes_bakp() {
-        let d = route(SolverKind::Auto, 2_000_000, 100, false, None);
+        let d = route(SolverKind::Auto, 2_000_000, 100, false, 1, None);
         assert_eq!(d.backend, SolverKind::Bakp);
+    }
+
+    #[test]
+    fn auto_with_threads_prefers_bak_par() {
+        let d = route(SolverKind::Auto, 2_000_000, 100, false, 8, None);
+        assert_eq!(d.backend, SolverKind::BakPar);
+        let d = route(SolverKind::Auto, 4000, 10, false, 2, None);
+        assert_eq!(d.backend, SolverKind::BakPar);
     }
 
     #[test]
     fn auto_prefers_pjrt_when_bucket_fits() {
         let m = tiny_manifest();
-        let d = route(SolverKind::Auto, 200, 40, false, Some(&m));
+        let d = route(SolverKind::Auto, 200, 40, false, 1, Some(&m));
         assert_eq!(d.backend, SolverKind::Pjrt);
     }
 
     #[test]
     fn pjrt_hint_falls_back_without_bucket() {
         let m = tiny_manifest();
-        let d = route(SolverKind::Pjrt, 100_000, 500, false, Some(&m));
+        let d = route(SolverKind::Pjrt, 100_000, 500, false, 1, Some(&m));
         assert_eq!(d.backend, SolverKind::Bakp);
-        let d = route(SolverKind::Pjrt, 100, 100, false, None);
+        let d = route(SolverKind::Pjrt, 100, 100, false, 1, None);
         assert_eq!(d.backend, SolverKind::Bakp);
+        // ...and to the threaded variant when the request asks for it.
+        let d = route(SolverKind::Pjrt, 100, 100, false, 4, None);
+        assert_eq!(d.backend, SolverKind::BakPar);
     }
 
     #[test]
     fn wide_counts_as_nonsquare() {
-        let d = route(SolverKind::Auto, 10, 4000, false, None);
+        let d = route(SolverKind::Auto, 10, 4000, false, 1, None);
         assert_ne!(d.backend, SolverKind::Qr);
     }
 
     #[test]
     fn capability_mismatch_falls_back_to_qr() {
         // Gaussian elimination on a tall system: needs_square.
-        let d = route(SolverKind::Gauss, 400, 20, false, None);
+        let d = route(SolverKind::Gauss, 400, 20, false, 1, None);
         assert_eq!(d.backend, SolverKind::Qr);
         // Cholesky on a wide system: !supports_wide.
-        let d = route(SolverKind::Cholesky, 20, 400, false, None);
+        let d = route(SolverKind::Cholesky, 20, 400, false, 1, None);
         assert_eq!(d.backend, SolverKind::Qr);
         // Both are honoured on shapes they handle.
-        assert_eq!(route(SolverKind::Gauss, 64, 64, false, None).backend, SolverKind::Gauss);
+        assert_eq!(route(SolverKind::Gauss, 64, 64, false, 1, None).backend, SolverKind::Gauss);
         assert_eq!(
-            route(SolverKind::Cholesky, 400, 20, false, None).backend,
+            route(SolverKind::Cholesky, 400, 20, false, 1, None).backend,
             SolverKind::Cholesky
         );
     }
@@ -195,22 +228,28 @@ mod tests {
     fn auto_sparse_never_picks_a_densifying_backend() {
         // Square-ish sparse would have gone to QR; the sparse route keeps
         // it on the native O(nnz) solver instead, at every scale.
-        let d = route(SolverKind::Auto, 128, 100, true, None);
+        let d = route(SolverKind::Auto, 128, 100, true, 1, None);
         assert_eq!(d.backend, SolverKind::Bak);
-        let d = route(SolverKind::Auto, 100_000, 256, true, None);
+        let d = route(SolverKind::Auto, 100_000, 256, true, 1, None);
         assert_eq!(d.backend, SolverKind::Bak);
         // ...even when a PJRT bucket would fit the shape.
         let m = tiny_manifest();
-        let d = route(SolverKind::Auto, 200, 40, true, Some(&m));
+        let d = route(SolverKind::Auto, 200, 40, true, 1, Some(&m));
         assert_eq!(d.backend, SolverKind::Bak);
+        // Threads keep it sparse-native too, on the block-parallel path.
+        let d = route(SolverKind::Auto, 200, 40, true, 8, Some(&m));
+        assert_eq!(d.backend, SolverKind::BakPar);
     }
 
     #[test]
     fn explicit_dense_only_hint_kept_on_sparse_jobs() {
         // The executor densifies (and counts densified_jobs); routing
         // honours the contract.
-        let d = route(SolverKind::Qr, 4096, 1024, true, None);
+        let d = route(SolverKind::Qr, 4096, 1024, true, 1, None);
         assert_eq!(d.backend, SolverKind::Qr);
-        assert_eq!(route(SolverKind::Kaczmarz, 400, 20, true, None).backend, SolverKind::Kaczmarz);
+        assert_eq!(
+            route(SolverKind::Kaczmarz, 400, 20, true, 1, None).backend,
+            SolverKind::Kaczmarz
+        );
     }
 }

@@ -368,6 +368,11 @@ mod tests {
         assert!(j.get("densified_jobs").is_some());
         assert!(j.get("job_queue_depth").is_some());
         assert!(j.get("backend_jobs").unwrap().get("bak").is_some());
+        // Worker-pool gauges are part of the snapshot.
+        assert_eq!(j.get("workers").unwrap().as_f64(), Some(2.0));
+        assert!(j.get("workers_busy").is_some());
+        assert!(j.get("jobs_inflight").is_some());
+        assert!(j.get("worker_panics").is_some());
         server.stop();
     }
 

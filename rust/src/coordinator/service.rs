@@ -4,15 +4,21 @@
 //!
 //! ```text
 //! client --submit()--> submit queue --scheduler (drain+coalesce)--> job
-//!        <-Receiver--- worker pool  <----------- job queue <--------+
+//!        <-Receiver--- worker pool  <----- executor injector <------+
 //! ```
 //!
 //! * The **scheduler** thread drains the submit queue, coalesces requests
-//!   sharing a matrix into multi-RHS jobs ([`super::batch`]), and feeds the
-//!   bounded job queue (backpressure propagates to submitters).
-//! * **Workers** pop jobs, route them ([`super::router`]), and run the
-//!   backend. Batched jobs amortise shared work: QR factors the matrix
-//!   once per job; the CD solvers compute column norms once per job.
+//!   sharing a matrix into multi-RHS jobs ([`super::batch`]), and feeds
+//!   the [`crate::parallel::Executor`]'s bounded injector (backpressure
+//!   propagates to submitters).
+//! * The **executor**'s workers pull jobs, route them ([`super::router`]),
+//!   and run the backend with panic isolation per job (a panicking solve
+//!   is counted in `worker_panics` and its clients get a dropped-channel
+//!   error; the worker survives). Batched jobs amortise shared work: QR
+//!   factors the matrix once per job; the CD solvers compute column norms
+//!   once per job. Worker count comes from
+//!   [`CoordinatorConfig::workers`], whose default honours
+//!   `PALLAS_THREADS` ([`crate::parallel::default_threads`]).
 //! * Every request gets its own `mpsc` reply channel; [`Coordinator::submit`]
 //!   returns the receiver.
 
@@ -26,6 +32,7 @@ use crate::api::{
 };
 use crate::baselines::qr;
 use crate::linalg::Mat;
+use crate::parallel::Executor;
 use crate::runtime::Engine;
 use crate::solver::{self, SolveReport};
 use crate::util::log::{emit, Level};
@@ -39,7 +46,9 @@ use super::router::route;
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
-    /// Worker threads executing jobs.
+    /// Worker threads executing jobs. The default honours the
+    /// `PALLAS_THREADS` environment variable, then the machine's
+    /// available parallelism ([`crate::parallel::default_threads`]).
     pub workers: usize,
     /// Submit-queue capacity (backpressure bound).
     pub queue_capacity: usize,
@@ -51,7 +60,7 @@ pub struct CoordinatorConfig {
 impl Default for CoordinatorConfig {
     fn default() -> Self {
         Self {
-            workers: 4,
+            workers: crate::parallel::default_threads(),
             queue_capacity: 256,
             batch: BatchPolicy::default(),
             artifact_dir: None,
@@ -76,11 +85,12 @@ pub struct Coordinator {
     metrics: Arc<Metrics>,
     engine: Option<Arc<Engine>>,
     scheduler: Option<std::thread::JoinHandle<()>>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    executor: Option<Arc<Executor<JobEnvelope>>>,
 }
 
 impl Coordinator {
-    /// Start the service: spawns the scheduler and `config.workers` workers.
+    /// Start the service: spawns the scheduler and a
+    /// `config.workers`-wide [`Executor`].
     pub fn start(config: CoordinatorConfig) -> Self {
         let metrics = Arc::new(Metrics::new());
         let engine = config.artifact_dir.as_ref().and_then(|dir| match Engine::new(dir) {
@@ -94,13 +104,32 @@ impl Coordinator {
 
         let submit_q: Arc<BoundedQueue<Envelope>> =
             Arc::new(BoundedQueue::new(config.queue_capacity));
-        let job_q: Arc<BoundedQueue<JobEnvelope>> =
-            Arc::new(BoundedQueue::new(config.queue_capacity));
 
-        // Scheduler: drain submit queue, coalesce, feed job queue.
+        // The worker pool: N workers pulling jobs from a bounded injector,
+        // panic-isolated per job (a panicking solve drops its reply
+        // senders — clients observe a typed Service error — and the
+        // worker keeps serving).
+        let executor = {
+            let metrics = metrics.clone();
+            let engine = engine.clone();
+            Arc::new(Executor::start(
+                "bak-worker",
+                config.workers.max(1),
+                config.queue_capacity,
+                move |_worker, env: JobEnvelope| {
+                    metrics
+                        .job_queue_depth
+                        .fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
+                    run_job(env, engine.as_ref(), &metrics);
+                },
+            ))
+        };
+        metrics.attach_pool(executor.stats());
+
+        // Scheduler: drain submit queue, coalesce, feed the executor.
         let scheduler = {
             let submit_q = submit_q.clone();
-            let job_q = job_q.clone();
+            let executor = executor.clone();
             let metrics = metrics.clone();
             let policy = config.batch;
             std::thread::Builder::new()
@@ -111,34 +140,13 @@ impl Coordinator {
                         // already queued right now.
                         let mut envs = vec![first];
                         envs.extend(submit_q.drain_now());
-                        schedule_batch(envs, &policy, &job_q, &metrics);
+                        schedule_batch(envs, &policy, &executor, &metrics);
                     }
-                    job_q.close();
                 })
                 .expect("spawn scheduler")
         };
 
-        // Workers.
-        let workers = (0..config.workers.max(1))
-            .map(|i| {
-                let job_q = job_q.clone();
-                let metrics = metrics.clone();
-                let engine = engine.clone();
-                std::thread::Builder::new()
-                    .name(format!("bak-worker-{i}"))
-                    .spawn(move || {
-                        while let Some(env) = job_q.pop() {
-                            metrics
-                                .job_queue_depth
-                                .fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
-                            run_job(env, engine.as_ref(), &metrics);
-                        }
-                    })
-                    .expect("spawn worker")
-            })
-            .collect();
-
-        Self { submit_q, metrics, engine, scheduler: Some(scheduler), workers }
+        Self { submit_q, metrics, engine, scheduler: Some(scheduler), executor: Some(executor) }
     }
 
     /// Submit a request; returns the reply receiver. Blocks when the
@@ -213,12 +221,19 @@ impl Coordinator {
     }
 
     fn shutdown_inner(&mut self) {
+        // Stop intake, let the scheduler flush everything it has into the
+        // executor, then drain the executor (pending jobs still run).
         self.submit_q.close();
         if let Some(s) = self.scheduler.take() {
             let _ = s.join();
         }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        if let Some(exec) = self.executor.take() {
+            if let Ok(exec) = Arc::try_unwrap(exec).map_err(|_| ()) {
+                exec.shutdown();
+            }
+            // A still-shared executor (scheduler clone already dropped by
+            // the join above, so this is unreachable in practice) shuts
+            // down via its Drop impl.
         }
     }
 }
@@ -232,7 +247,7 @@ impl Drop for Coordinator {
 fn schedule_batch(
     envs: Vec<Envelope>,
     policy: &BatchPolicy,
-    job_q: &BoundedQueue<JobEnvelope>,
+    executor: &Executor<JobEnvelope>,
     metrics: &Metrics,
 ) {
     // Preserve reply channels through the coalescer by id.
@@ -255,10 +270,10 @@ fn schedule_batch(
                 .batched_members
                 .fetch_add(job.len() as u64, std::sync::atomic::Ordering::Relaxed);
         }
-        // Gauge up BEFORE the push so a worker's pop-side decrement can
+        // Gauge up BEFORE the submit so a worker's pop-side decrement can
         // never observe the queue entry ahead of the increment.
         metrics.job_queue_depth.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        if job_q.push(JobEnvelope { job, replies: job_replies }).is_err() {
+        if executor.submit(JobEnvelope { job, replies: job_replies }).is_err() {
             metrics.job_queue_depth.fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
             return; // shutting down; remaining replies drop -> RecvError
         }
@@ -273,6 +288,7 @@ fn run_job(env: JobEnvelope, engine: Option<&Arc<Engine>>, metrics: &Metrics) {
         job.x.rows(),
         job.x.cols(),
         job.x.is_sparse(),
+        job.opts.threads,
         engine.map(|e| e.manifest()),
     );
     metrics.record_backend_job(decision.backend);
@@ -427,8 +443,10 @@ fn execute_dense_job(
             })
         }
         SolverKind::BakMulti => {
-            // Every valid member in ONE matrix walk; invalid members get
-            // their own error without demoting the rest of the batch.
+            // Every valid member in ONE matrix walk (chunked across
+            // threads when the request asks for them — the column-norm
+            // precompute is still shared); invalid members get their own
+            // error without demoting the rest of the batch.
             let t0 = Instant::now();
             let checks: Vec<Result<(), SolverError>> = job
                 .members
@@ -442,7 +460,12 @@ fn execute_dense_job(
                 .filter(|(_, c)| c.is_ok())
                 .map(|((_, y), _)| y.clone())
                 .collect();
-            let mut reports = solver::solve_bak_multi(x, &ys, &job.opts).into_iter();
+            let reports = if job.opts.threads > 1 {
+                crate::parallel::solve_bak_multi_par(x, &ys, &job.opts)
+            } else {
+                solver::solve_bak_multi(x, &ys, &job.opts)
+            };
+            let mut reports = reports.into_iter();
             let secs = t0.elapsed().as_secs_f64() / job.len().max(1) as f64;
             checks
                 .into_iter()
@@ -727,6 +750,89 @@ mod tests {
             coord.metrics().job_queue_depth.load(std::sync::atomic::Ordering::Relaxed),
             0
         );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn auto_with_threads_routes_to_bak_par() {
+        let coord = Coordinator::start(CoordinatorConfig::default());
+        let (x, y, a_true) = planted(412, 4000, 16);
+        let mut req = SolveRequest::new(1, x, y);
+        req.opts = solver::SolveOptions::accurate();
+        req.opts.threads = 4;
+        let out = coord.solve_blocking(req);
+        assert_eq!(out.backend, SolverKind::BakPar);
+        let rep = out.report.expect("threaded solve ok");
+        assert!(crate::util::stats::rel_l2(&rep.a, &a_true) < 1e-3);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn explicit_kaczmarz_par_backend_over_service() {
+        let coord = Coordinator::start(CoordinatorConfig::default());
+        let (x, y, a_true) = planted(413, 480, 20);
+        let mut req = SolveRequest::new(2, x, y);
+        req.backend = SolverKind::KaczmarzPar;
+        req.opts = solver::SolveOptions::builder()
+            .max_sweeps(2000)
+            .tol(1e-4)
+            .threads(2)
+            .build();
+        let out = coord.solve_blocking(req);
+        assert_eq!(out.backend, SolverKind::KaczmarzPar);
+        let rep = out.report.expect("kaczmarz_par ok");
+        assert!(crate::util::stats::rel_l2(&rep.a, &a_true) < 0.05);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn multi_member_sparse_job_densifies_once() {
+        // The satellite contract: one warning/count per JOB, not per
+        // member. Drive execute_job directly so the batch composition is
+        // deterministic.
+        let (x, _, _) = planted_sparse(414, 80, 10, 0.2);
+        let mut rng = Rng::seed(415);
+        let members: Vec<(u64, Vec<f32>)> = (0..5u64)
+            .map(|i| {
+                let a: Vec<f32> = (0..10).map(|_| rng.normal_f32()).collect();
+                (i, x.matvec(&a))
+            })
+            .collect();
+        let job = super::super::request::SolveJob {
+            x: super::super::request::SharedMatrix::SparseCsc(x),
+            members,
+            opts: solver::SolveOptions::default(),
+            backend: SolverKind::Qr,
+        };
+        let metrics = Metrics::new();
+        let outcomes = execute_job(&job, SolverKind::Qr, None, &metrics);
+        assert_eq!(outcomes.len(), 5);
+        assert!(outcomes.iter().all(|o| o.report.is_ok()));
+        assert_eq!(
+            metrics.densified_jobs.load(std::sync::atomic::Ordering::Relaxed),
+            1,
+            "densification counted once for the whole job"
+        );
+    }
+
+    #[test]
+    fn pool_gauges_flow_through_service_metrics() {
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 3,
+            ..CoordinatorConfig::default()
+        });
+        let (x, y, _) = planted(416, 100, 10);
+        for i in 0..4u64 {
+            let _ = coord.solve_blocking(SolveRequest::new(i, x.clone(), y.clone()));
+        }
+        let j = coord.metrics().to_json();
+        assert_eq!(j.get("workers").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("jobs_inflight").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("worker_panics").unwrap().as_f64(), Some(0.0));
+        let per_worker = j.get("worker_jobs").unwrap().items();
+        assert_eq!(per_worker.len(), 3);
+        let total: f64 = per_worker.iter().filter_map(|v| v.as_f64()).sum();
+        assert!(total >= 4.0, "every job counted against a worker");
         coord.shutdown();
     }
 }

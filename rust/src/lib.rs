@@ -72,19 +72,71 @@
 //! assert!(report.rel_residual() < 1e-4);
 //! ```
 //!
-//! `bak`, `bakp`, `kaczmarz`, and `cgls` run sparse problems natively
-//! (capability flag `supports_sparse`); every other backend transparently
-//! densifies with a logged warning, and the coordinator counts those
-//! events in its `densified_jobs` metric. Over the wire, the coordinator
-//! accepts `{"x_coo": {"rows": [...], "cols": [...], "vals": [...]}}` in
-//! place of the dense `"x"` array, and the CLI exposes the workload class
-//! via `solvebak solve --sparse --density 0.01`.
+//! `bak`, `bak_par`, `bakp`, `kaczmarz`, `kaczmarz_par`, and `cgls` run
+//! sparse problems natively (capability flag `supports_sparse`); every
+//! other backend transparently densifies with a logged warning, and the
+//! coordinator counts those events in its `densified_jobs` metric. Over
+//! the wire, the coordinator accepts
+//! `{"x_coo": {"rows": [...], "cols": [...], "vals": [...]}}` in place of
+//! the dense `"x"` array, and the CLI exposes the workload class via
+//! `solvebak solve --sparse --density 0.01`.
+//!
+//! ## Parallel execution
+//!
+//! The [`parallel`] module is the crate's std-only threading layer — a
+//! worker pool ([`parallel::Executor`]: panic isolation per job, graceful
+//! drain-on-shutdown, busy/inflight gauges) plus scoped fork-join helpers
+//! — and the block-parallel solver variants built on it:
+//!
+//! * `bak_par` splits the columns into `threads` blocks, runs paper-style
+//!   inner sweeps per block concurrently, and merges every sweep
+//!   (additive coefficient merge + row-parallel residual rebuild).
+//! * `kaczmarz_par` splits the rows, projects per block, and merges by
+//!   norm-weighted averaging (parallel RK à la Fliege 2012).
+//! * [`parallel::solve_bak_multi_par`] chunks a batch of right-hand sides
+//!   across threads while sharing one column-norm precompute.
+//!
+//! All three are deterministic for a fixed `(seed, threads)` — block
+//! structure and RNG streams key off the work item, never the OS worker —
+//! and `threads = 1` with the default cyclic column order reduces the BAK
+//! variants to the serial algorithms bit-for-bit. Select them like any
+//! other backend and set
+//! [`solver::SolveOptions::threads`]:
+//!
+//! ```no_run
+//! use solvebak::api::{solver_for, Problem, SolverKind};
+//! use solvebak::linalg::Mat;
+//! use solvebak::solver::SolveOptions;
+//! use solvebak::util::rng::Rng;
+//!
+//! let mut rng = Rng::seed(42);
+//! let x = Mat::randn(&mut rng, 100_000, 256);
+//! let a_true: Vec<f32> = (0..256).map(|i| i as f32 * 0.01).collect();
+//! let y = x.matvec(&a_true);
+//! let problem = Problem::new(&x, &y).expect("validated");
+//!
+//! let opts = SolveOptions::builder()
+//!     .threads(solvebak::parallel::default_threads()) // PALLAS_THREADS-aware
+//!     .tol(1e-6)
+//!     .build();
+//! let solver = solver_for(SolverKind::BakPar).expect("registered");
+//! let report = solver.solve(&problem, &opts).expect("solves");
+//! assert!(report.rel_residual() < 1e-4);
+//! ```
+//!
+//! From the CLI the same knob is `--threads N` (default: `PALLAS_THREADS`,
+//! else the machine's parallelism), e.g.
+//! `solvebak solve --obs 1e6 --vars 200 --backend bak_par --threads 8`;
+//! the coordinator sizes its worker pool the same way (`--workers`). The
+//! router prefers the parallel variants automatically when a request asks
+//! for `threads > 1`.
 
 pub mod util;
 pub mod linalg;
 pub mod sparse;
 pub mod baselines;
 pub mod solver;
+pub mod parallel;
 pub mod api;
 pub mod runtime;
 pub mod coordinator;

@@ -1,0 +1,61 @@
+//! The parallel execution layer: a std-only worker pool plus the
+//! block-parallel solver variants built on it.
+//!
+//! Three pieces, bottom-up:
+//!
+//! * [`queue`] — the bounded MPMC injector (moved here from the
+//!   coordinator, which re-exports it): blocking backpressure, graceful
+//!   close-and-drain.
+//! * [`pool`] — [`Executor`] (long-lived named workers, panic isolation
+//!   per job, [`PoolStats`] gauges) and the scoped fork-join helpers
+//!   ([`par_map_chunks`] chunk-stealing map, [`par_for_disjoint`] split
+//!   mutation, [`partition_ranges`] deterministic block structure,
+//!   [`stream_seed`] per-work-item RNG streams).
+//! * [`solvers`] — `bak_par` / `kaczmarz_par` / `bak_multi_par` in dense
+//!   and sparse storage, sharing one block scheduler. Addressable through
+//!   the [`crate::api`] registry as `SolverKind::{BakPar, KaczmarzPar}`.
+//!
+//! Thread-count configuration flows top-down: the CLI's `--threads`, the
+//! TCP protocol's `"threads"` field, and the `PALLAS_THREADS` environment
+//! variable (read by [`default_threads`]) all end up in
+//! [`crate::solver::SolveOptions::threads`] for solver-level parallelism,
+//! and in [`crate::coordinator::CoordinatorConfig::workers`] for
+//! job-level parallelism.
+
+pub mod pool;
+pub mod queue;
+pub mod solvers;
+
+pub use pool::{
+    par_for_disjoint, par_map_chunks, partition_ranges, stream_seed, Executor, PoolStats,
+};
+pub use solvers::{
+    solve_bak_multi_par, solve_bak_multi_par_csc, solve_bak_par, solve_bak_par_csc,
+    solve_kaczmarz_par, solve_kaczmarz_par_csr,
+};
+
+/// The `PALLAS_THREADS` environment override, when set to a positive
+/// integer (malformed or non-positive values read as unset).
+pub fn env_threads() -> Option<usize> {
+    std::env::var("PALLAS_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+}
+
+/// The configured default worker/thread count: [`env_threads`] when set,
+/// otherwise the machine's available parallelism (1 when that cannot be
+/// determined).
+pub fn default_threads() -> usize {
+    env_threads()
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn default_threads_is_positive() {
+        // Whatever the environment says, the answer is a usable count.
+        assert!(super::default_threads() >= 1);
+    }
+}

@@ -1,0 +1,370 @@
+//! The worker pool: a long-lived [`Executor`] for job streams (the
+//! coordinator's execution backend) and scoped data-parallel helpers for
+//! the block-parallel solvers — all std-only.
+//!
+//! Two execution shapes live here:
+//!
+//! * [`Executor`] — N named workers pulling typed jobs from a bounded
+//!   injector ([`super::queue::BoundedQueue`]). Jobs are panic-isolated
+//!   (`catch_unwind` per job: a panicking job is counted and dropped, the
+//!   worker survives), shutdown is graceful (pending jobs drain before the
+//!   workers exit), and [`PoolStats`] exposes busy/inflight gauges plus
+//!   per-worker job counts for the metrics layer.
+//! * [`par_map_chunks`] / [`par_for_disjoint`] — scoped fork-join over a
+//!   chunked work queue: workers *steal* the next chunk index from a
+//!   shared atomic cursor, so uneven chunk costs balance automatically,
+//!   while every chunk writes its own output slot — results are
+//!   deterministic no matter which worker ran which chunk.
+//!
+//! Determinism contract: anything randomized keys its RNG off the
+//! *work item* (block/chunk index via [`stream_seed`]), never off the OS
+//! worker that happened to execute it. The solvers in [`super::solvers`]
+//! rely on this to produce bit-identical results for a fixed
+//! `(seed, threads)` across runs and schedulers.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::util::log::{emit, Level};
+use crate::util::rng::SplitMix64;
+
+use super::queue::BoundedQueue;
+
+/// Observable state of a running [`Executor`]: gauges move as jobs flow,
+/// counters only grow. All relaxed atomics — metrics, not synchronization.
+pub struct PoolStats {
+    /// Number of worker threads in the pool.
+    workers: usize,
+    /// Gauge: workers currently executing a job.
+    pub workers_busy: AtomicU64,
+    /// Gauge: jobs submitted but not yet finished (queued + running).
+    pub jobs_inflight: AtomicU64,
+    /// Jobs that ran to completion.
+    pub jobs_completed: AtomicU64,
+    /// Jobs whose handler panicked (isolated; the worker survived).
+    pub jobs_panicked: AtomicU64,
+    /// Jobs executed per worker (load-balance observability).
+    per_worker: Vec<AtomicU64>,
+}
+
+impl PoolStats {
+    fn new(workers: usize) -> Self {
+        Self {
+            workers,
+            workers_busy: AtomicU64::new(0),
+            jobs_inflight: AtomicU64::new(0),
+            jobs_completed: AtomicU64::new(0),
+            jobs_panicked: AtomicU64::new(0),
+            per_worker: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Pool width.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Snapshot of per-worker executed-job counts.
+    pub fn worker_jobs(&self) -> Vec<u64> {
+        self.per_worker.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+}
+
+/// A fixed pool of named workers executing a stream of typed jobs through
+/// one shared handler. See the module docs for the isolation/shutdown
+/// contract.
+pub struct Executor<T: Send + 'static> {
+    injector: Arc<BoundedQueue<T>>,
+    stats: Arc<PoolStats>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl<T: Send + 'static> Executor<T> {
+    /// Spawn `threads` workers named `{name}-{i}` over a bounded injector
+    /// of the given capacity. `handler(worker_index, job)` runs every job;
+    /// a panic inside it is caught, counted, and logged — the worker keeps
+    /// serving.
+    pub fn start<F>(name: &str, threads: usize, capacity: usize, handler: F) -> Self
+    where
+        F: Fn(usize, T) + Send + Sync + 'static,
+    {
+        let threads = threads.max(1);
+        let injector: Arc<BoundedQueue<T>> = Arc::new(BoundedQueue::new(capacity.max(1)));
+        let stats = Arc::new(PoolStats::new(threads));
+        let handler = Arc::new(handler);
+        let workers = (0..threads)
+            .map(|i| {
+                let injector = injector.clone();
+                let stats = stats.clone();
+                let handler = handler.clone();
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = injector.pop() {
+                            stats.workers_busy.fetch_add(1, Ordering::Relaxed);
+                            let outcome = catch_unwind(AssertUnwindSafe(|| handler(i, job)));
+                            stats.workers_busy.fetch_sub(1, Ordering::Relaxed);
+                            stats.jobs_inflight.fetch_sub(1, Ordering::Relaxed);
+                            stats.per_worker[i].fetch_add(1, Ordering::Relaxed);
+                            match outcome {
+                                Ok(()) => {
+                                    stats.jobs_completed.fetch_add(1, Ordering::Relaxed);
+                                }
+                                Err(_) => {
+                                    stats.jobs_panicked.fetch_add(1, Ordering::Relaxed);
+                                    emit(
+                                        Level::Error,
+                                        "parallel",
+                                        format_args!(
+                                            "job panicked in worker {i}; worker continues"
+                                        ),
+                                    );
+                                }
+                            }
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { injector, stats, workers }
+    }
+
+    /// Blocking submit (backpressure while the injector is full).
+    /// Err(`Closed`) once the pool is shut down — the job is dropped,
+    /// matching [`BoundedQueue::push`] semantics.
+    pub fn submit(&self, job: T) -> Result<(), super::queue::Closed> {
+        self.stats.jobs_inflight.fetch_add(1, Ordering::Relaxed);
+        self.injector.push(job).map_err(|c| {
+            self.stats.jobs_inflight.fetch_sub(1, Ordering::Relaxed);
+            c
+        })
+    }
+
+    /// Pool statistics (shared; stays valid after shutdown).
+    pub fn stats(&self) -> Arc<PoolStats> {
+        self.stats.clone()
+    }
+
+    /// Current injector depth (racy; metrics only).
+    pub fn queued(&self) -> usize {
+        self.injector.len()
+    }
+
+    /// Graceful shutdown: close intake, let workers drain every pending
+    /// job, join them.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.injector.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl<T: Send + 'static> Drop for Executor<T> {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// Derive the RNG seed for one work stream (block/chunk `stream`) from a
+/// base seed. SplitMix64 over the combined words: well-mixed, and stable
+/// across runs — the seed depends on the *work item*, not the worker.
+pub fn stream_seed(base: u64, stream: u64) -> u64 {
+    let mut sm = SplitMix64::new(base ^ stream.wrapping_mul(0xA076_1D64_78BD_642F));
+    sm.next_u64()
+}
+
+/// Fork-join map over `n` indexed chunks on up to `threads` scoped
+/// workers. Workers steal the next chunk from a shared atomic cursor
+/// (self-scheduling: uneven chunks balance), each chunk's result lands in
+/// its own slot, and the returned Vec is in chunk order — deterministic
+/// regardless of scheduling.
+pub fn par_map_chunks<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send + Sync,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.clamp(1, n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let slots: Vec<std::sync::OnceLock<T>> =
+        (0..n).map(|_| std::sync::OnceLock::new()).collect();
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let _ = slots[i].set(f(i));
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|c| c.into_inner().expect("every chunk computed"))
+        .collect()
+}
+
+/// Fork-join over disjoint mutable chunks of `data`: splits into `pieces`
+/// near-equal contiguous chunks and runs `f(start_index, chunk)` on up to
+/// `pieces` scoped workers. Static assignment (chunk i -> spawned task i):
+/// the chunks are the parallelism grain, so stealing buys nothing here.
+pub fn par_for_disjoint<T: Send, F>(threads: usize, data: &mut [T], f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let threads = threads.clamp(1, data.len().max(1));
+    if threads <= 1 || data.len() <= 1 {
+        f(0, data);
+        return;
+    }
+    let per = data.len().div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, chunk) in data.chunks_mut(per).enumerate() {
+            let f = &f;
+            s.spawn(move || f(t * per, chunk));
+        }
+    });
+}
+
+/// Balanced contiguous partition of `0..n` into at most `pieces` non-empty
+/// ranges. The partition depends only on `(n, pieces)` — solvers key their
+/// block structure (and block RNG streams) off it for determinism.
+pub fn partition_ranges(n: usize, pieces: usize) -> Vec<std::ops::Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let pieces = pieces.max(1).min(n);
+    let base = n / pieces;
+    let extra = n % pieces;
+    let mut out = Vec::with_capacity(pieces);
+    let mut start = 0;
+    for p in 0..pieces {
+        let len = base + usize::from(p < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::time::Duration;
+
+    #[test]
+    fn executor_runs_all_jobs() {
+        let hits = Arc::new(AtomicU64::new(0));
+        let h2 = hits.clone();
+        let pool = Executor::start("t", 4, 16, move |_w, v: u64| {
+            h2.fetch_add(v, Ordering::Relaxed);
+        });
+        for v in 1..=10u64 {
+            pool.submit(v).unwrap();
+        }
+        let stats = pool.stats();
+        pool.shutdown();
+        assert_eq!(hits.load(Ordering::Relaxed), 55);
+        assert_eq!(stats.jobs_completed.load(Ordering::Relaxed), 10);
+        assert_eq!(stats.worker_jobs().iter().sum::<u64>(), 10);
+        assert_eq!(stats.jobs_inflight.load(Ordering::Relaxed), 0);
+        assert_eq!(stats.workers_busy.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn executor_isolates_panicking_jobs() {
+        let ok = Arc::new(AtomicU64::new(0));
+        let ok2 = ok.clone();
+        let pool = Executor::start("t", 2, 8, move |_w, v: i32| {
+            if v < 0 {
+                panic!("boom");
+            }
+            ok2.fetch_add(1, Ordering::Relaxed);
+        });
+        pool.submit(1).unwrap();
+        pool.submit(-1).unwrap();
+        pool.submit(2).unwrap();
+        pool.submit(3).unwrap();
+        let stats = pool.stats();
+        pool.shutdown();
+        assert_eq!(ok.load(Ordering::Relaxed), 3);
+        assert_eq!(stats.jobs_panicked.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.jobs_completed.load(Ordering::Relaxed), 3);
+        assert_eq!(stats.jobs_inflight.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn shutdown_drains_pending_jobs() {
+        let done = Arc::new(AtomicU64::new(0));
+        let d2 = done.clone();
+        let pool = Executor::start("t", 1, 32, move |_w, _v: u32| {
+            std::thread::sleep(Duration::from_millis(2));
+            d2.fetch_add(1, Ordering::Relaxed);
+        });
+        for v in 0..10 {
+            pool.submit(v).unwrap();
+        }
+        // Immediate shutdown: intake closes, but queued jobs still run.
+        pool.shutdown();
+        assert_eq!(done.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn par_map_chunks_ordered_and_complete() {
+        for threads in [1usize, 2, 3, 8] {
+            let out = par_map_chunks(threads, 17, |i| i * i);
+            assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>());
+        }
+        assert!(par_map_chunks(4, 0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn par_for_disjoint_covers_every_slot() {
+        let mut v = vec![0u32; 23];
+        par_for_disjoint(4, &mut v, |start, chunk| {
+            for (k, slot) in chunk.iter_mut().enumerate() {
+                *slot = (start + k) as u32 + 1;
+            }
+        });
+        assert_eq!(v, (1..=23).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn partition_ranges_balanced_cover() {
+        for (n, p) in [(10usize, 3usize), (7, 7), (7, 20), (1, 4), (64, 8)] {
+            let parts = partition_ranges(n, p);
+            assert!(parts.len() <= p.max(1));
+            assert_eq!(parts.first().map(|r| r.start), Some(0));
+            assert_eq!(parts.last().map(|r| r.end), Some(n));
+            let total: usize = parts.iter().map(|r| r.len()).sum();
+            assert_eq!(total, n);
+            let lens: Vec<usize> = parts.iter().map(|r| r.len()).collect();
+            let (mn, mx) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(mx - mn <= 1, "balanced: {lens:?}");
+            for w in parts.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "contiguous");
+            }
+        }
+        assert!(partition_ranges(0, 4).is_empty());
+    }
+
+    #[test]
+    fn stream_seed_distinct_and_stable() {
+        let a = stream_seed(42, 0);
+        let b = stream_seed(42, 1);
+        let c = stream_seed(43, 0);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, stream_seed(42, 0));
+    }
+}

@@ -1,0 +1,222 @@
+//! Bounded MPMC job queue with blocking backpressure, built on
+//! `Mutex + Condvar` (the offline registry has no crossbeam-channel).
+//!
+//! This is the injector behind [`super::pool::Executor`] and the
+//! coordinator's submit queue (which re-exports it as
+//! `coordinator::queue` for compatibility).
+//!
+//! Semantics:
+//! * `push` blocks while the queue is at capacity (backpressure to
+//!   producers), fails once the queue is closed.
+//! * `pop` blocks while empty, returns `None` once closed AND drained.
+//! * `close` wakes everyone; producers error, consumers drain.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded blocking queue.
+pub struct BoundedQueue<T> {
+    state: Mutex<State<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+/// Error returned by `push` on a closed queue.
+#[derive(Debug, PartialEq, Eq)]
+pub struct Closed;
+
+impl<T> BoundedQueue<T> {
+    /// Create with the given capacity (>= 1).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1);
+        Self {
+            state: Mutex::new(State { items: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Blocking push; returns Err(Closed) if the queue was closed.
+    pub fn push(&self, item: T) -> Result<(), Closed> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(Closed);
+            }
+            if st.items.len() < self.capacity {
+                st.items.push_back(item);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking push attempt. Err(item) if full or closed.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed || st.items.len() >= self.capacity {
+            return Err(item);
+        }
+        st.items.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; None once closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Pop everything currently queued without blocking.
+    pub fn drain_now(&self) -> Vec<T> {
+        let mut st = self.state.lock().unwrap();
+        let out: Vec<T> = st.items.drain(..).collect();
+        if !out.is_empty() {
+            self.not_full.notify_all();
+        }
+        out
+    }
+
+    /// Close the queue: producers fail, consumers drain then get None.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    /// Current depth (racy; for metrics only).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(10);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.push(3).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn try_push_full() {
+        let q = BoundedQueue::new(1);
+        q.push(1).unwrap();
+        assert_eq!(q.try_push(2), Err(2));
+        assert_eq!(q.pop(), Some(1));
+        assert!(q.try_push(2).is_ok());
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.close();
+        assert_eq!(q.push(9), Err(Closed));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn backpressure_blocks_until_pop() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(1).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.push(2)); // blocks
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(!h.is_finished(), "push should be blocked on full queue");
+        assert_eq!(q.pop(), Some(1));
+        h.join().unwrap().unwrap();
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn pop_blocks_until_push() {
+        let q = Arc::new(BoundedQueue::<u32>::new(2));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(!h.is_finished(), "pop should be blocked on empty queue");
+        q.push(42).unwrap();
+        assert_eq!(h.join().unwrap(), Some(42));
+    }
+
+    #[test]
+    fn multi_producer_multi_consumer_conserves_items() {
+        let q = Arc::new(BoundedQueue::new(8));
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..100 {
+                        q.push(p * 1000 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = q.pop() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<i32> = consumers.into_iter().flat_map(|c| c.join().unwrap()).collect();
+        all.sort_unstable();
+        let mut want: Vec<i32> = (0..4).flat_map(|p| (0..100).map(move |i| p * 1000 + i)).collect();
+        want.sort_unstable();
+        assert_eq!(all, want);
+    }
+
+    #[test]
+    fn drain_now_empties() {
+        let q = BoundedQueue::new(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        let d = q.drain_now();
+        assert_eq!(d, vec![0, 1, 2, 3, 4]);
+        assert!(q.is_empty());
+    }
+}

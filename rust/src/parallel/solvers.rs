@@ -1,0 +1,765 @@
+//! Block-parallel solver variants: the paper's column-action iteration is
+//! "by definition, vectorized" — these run it on real threads.
+//!
+//! * [`solve_bak_par`] / [`solve_bak_par_csc`] — column-partitioned
+//!   SolveBak: the columns are split into `opts.threads` contiguous
+//!   blocks; each block runs one paper-style inner sweep concurrently
+//!   against its own copy of the shared residual (fresh within the block,
+//!   stale across blocks), then the blocks sync: coefficient deltas merge
+//!   additively (blocks own disjoint columns) and the shared residual is
+//!   rebuilt row-parallel from the per-block locals,
+//!   `e' = Σ_b e_b − (B−1)·e`, in f64. Cross-block staleness carries the
+//!   same §6 caveat as SolveBakP's in-block staleness — correlated columns
+//!   split across blocks can overshoot — and the same guard applies: the
+//!   residual-tolerance loop with stall/divergence detection.
+//! * [`solve_kaczmarz_par`] / [`solve_kaczmarz_par_csr`] — row-partitioned
+//!   randomized Kaczmarz with averaging sync (the parallel RK scheme of
+//!   Fliege 2012 / Needell et al.): each block projects onto its own rows
+//!   (norm-weighted sampling restricted to the block), and the iterates
+//!   merge as a row-norm-mass-weighted average every sweep.
+//! * [`solve_bak_multi_par`] / [`solve_bak_multi_par_csc`] — multi-RHS
+//!   SolveBak: column norms are computed ONCE and shared by every worker;
+//!   right-hand sides are chunked across threads and each chunk walks the
+//!   matrix (dense columns or CSC traversal) once per sweep for all of its
+//!   systems.
+//!
+//! Determinism: block structure is derived from `(shape, opts.threads)`
+//! via [`super::pool::partition_ranges`], anything randomized (Kaczmarz
+//! row sampling, the Shuffled column order) seeds off
+//! `(opts.seed, block, sweep)` via [`super::pool::stream_seed`], and every
+//! merge folds in block order — so results are identical across runs for a
+//! fixed `(seed, threads)`, no matter how the OS schedules the workers.
+//! With `threads = 1` and the default cyclic column order the BAK variants
+//! reduce to the serial algorithms bit-for-bit (Shuffled uses the
+//! per-(block, sweep) RNG streams above, so its permutation sequence
+//! differs from the serial solver's single persistent stream).
+//!
+//! Dense and sparse storage share the same schedulers through the small
+//! [`ColAccess`]/[`RowAccess`] traits below; the per-step cost is
+//! O(obs)/O(vars) dense and O(nnz(col))/O(nnz(row)) sparse, exactly like
+//! the serial pairs.
+
+use crate::linalg::{blas1, Mat};
+use crate::solver::{ColumnOrder, SolveOptions, SolveReport, StopReason};
+use crate::sparse::{sp_axpy_into_dense, sp_cd_step, sp_dot_dense, CscMat, CsrMat};
+use crate::util::rng::Rng;
+
+use super::pool::{par_for_disjoint, par_map_chunks, partition_ranges, stream_seed};
+
+/// Column access shared by the dense and CSC block schedulers.
+trait ColAccess: Sync {
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+    /// 1/<x_j,x_j> per column, zero columns mapped to 0.
+    fn colnorms_inv_vec(&self) -> Vec<f32>;
+    /// The Algorithm-1 inner step: `da = <x_j, e> * cninv; e -= da * x_j`.
+    fn cd_step(&self, j: usize, e: &mut [f32], cninv: f32) -> f32;
+}
+
+impl ColAccess for Mat {
+    fn rows(&self) -> usize {
+        Mat::rows(self)
+    }
+
+    fn cols(&self) -> usize {
+        Mat::cols(self)
+    }
+
+    fn colnorms_inv_vec(&self) -> Vec<f32> {
+        crate::solver::colnorms_inv(self)
+    }
+
+    fn cd_step(&self, j: usize, e: &mut [f32], cninv: f32) -> f32 {
+        blas1::cd_step(self.col(j), e, cninv)
+    }
+}
+
+impl ColAccess for CscMat {
+    fn rows(&self) -> usize {
+        CscMat::rows(self)
+    }
+
+    fn cols(&self) -> usize {
+        CscMat::cols(self)
+    }
+
+    fn colnorms_inv_vec(&self) -> Vec<f32> {
+        crate::sparse::solve::colnorms_inv_csc(self)
+    }
+
+    fn cd_step(&self, j: usize, e: &mut [f32], cninv: f32) -> f32 {
+        let (idx, vals) = self.col(j);
+        sp_cd_step(idx, vals, e, cninv)
+    }
+}
+
+/// Row access shared by the dense and CSR Kaczmarz schedulers.
+trait RowAccess: Sync {
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+    fn row_norms_sq_vec(&self) -> Vec<f32>;
+    /// `<row_i, a>`.
+    fn dot_row(&self, i: usize, a: &[f32]) -> f32;
+    /// `a += scale * row_i`.
+    fn axpy_row(&self, i: usize, scale: f32, a: &mut [f32]);
+    /// `y - X a`.
+    fn residual_vec(&self, y: &[f32], a: &[f32]) -> Vec<f32>;
+}
+
+impl RowAccess for Mat {
+    fn rows(&self) -> usize {
+        Mat::rows(self)
+    }
+
+    fn cols(&self) -> usize {
+        Mat::cols(self)
+    }
+
+    fn row_norms_sq_vec(&self) -> Vec<f32> {
+        // One column-major pass (sequential reads), as in solve_kaczmarz.
+        let mut out = vec![0.0f32; Mat::rows(self)];
+        for j in 0..Mat::cols(self) {
+            for (rn, &v) in out.iter_mut().zip(self.col(j)) {
+                *rn = v.mul_add(v, *rn);
+            }
+        }
+        out
+    }
+
+    fn dot_row(&self, i: usize, a: &[f32]) -> f32 {
+        blas1::dot_strided(&self.as_slice()[i..], Mat::rows(self), a)
+    }
+
+    fn axpy_row(&self, i: usize, scale: f32, a: &mut [f32]) {
+        blas1::axpy_strided(scale, &self.as_slice()[i..], Mat::rows(self), a)
+    }
+
+    fn residual_vec(&self, y: &[f32], a: &[f32]) -> Vec<f32> {
+        crate::linalg::residual(self, y, a)
+    }
+}
+
+impl RowAccess for CsrMat {
+    fn rows(&self) -> usize {
+        CsrMat::rows(self)
+    }
+
+    fn cols(&self) -> usize {
+        CsrMat::cols(self)
+    }
+
+    fn row_norms_sq_vec(&self) -> Vec<f32> {
+        self.row_norms_sq()
+    }
+
+    fn dot_row(&self, i: usize, a: &[f32]) -> f32 {
+        let (idx, vals) = self.row(i);
+        sp_dot_dense(idx, vals, a)
+    }
+
+    fn axpy_row(&self, i: usize, scale: f32, a: &mut [f32]) {
+        let (idx, vals) = self.row(i);
+        sp_axpy_into_dense(scale, idx, vals, a)
+    }
+
+    fn residual_vec(&self, y: &[f32], a: &[f32]) -> Vec<f32> {
+        let xa = self.spmv(a);
+        y.iter().zip(&xa).map(|(&yi, &xi)| yi - xi).collect()
+    }
+}
+
+/// Block-parallel SolveBak on dense columns. `opts.threads` sets the block
+/// count; 1 reduces to [`crate::solver::solve_bak`] exactly.
+pub fn solve_bak_par(x: &Mat, y: &[f32], opts: &SolveOptions) -> SolveReport {
+    bak_par_generic(x, y, opts)
+}
+
+/// Block-parallel SolveBak on CSC storage (O(nnz) per sweep per block).
+pub fn solve_bak_par_csc(x: &CscMat, y: &[f32], opts: &SolveOptions) -> SolveReport {
+    bak_par_generic(x, y, opts)
+}
+
+fn bak_par_generic<C: ColAccess>(x: &C, y: &[f32], opts: &SolveOptions) -> SolveReport {
+    let (obs, vars) = (x.rows(), x.cols());
+    assert_eq!(y.len(), obs, "y length must equal obs");
+    let threads = opts.threads.max(1);
+    let cninv = x.colnorms_inv_vec();
+    let y_norm_sq = blas1::sum_sq_f64(y);
+    let tol_sq = opts.tol * opts.tol * y_norm_sq;
+    let blocks = partition_ranges(vars, threads);
+    let nb = blocks.len();
+
+    let mut a = vec![0.0f32; vars];
+    let mut e = y.to_vec();
+    let mut history = Vec::with_capacity(opts.max_sweeps.min(1024));
+    let mut stop = StopReason::MaxSweeps;
+    let mut sweeps = 0;
+    let mut prev_r2 = f64::INFINITY;
+
+    for sweep in 0..opts.max_sweeps {
+        // Phase 1 — concurrent inner sweeps: each block refreshes its own
+        // residual copy per column (Algorithm 1 within the block) but sees
+        // the other blocks' updates only at the sync below.
+        let e_shared: &[f32] = &e;
+        let mut results: Vec<(Vec<f32>, Vec<f32>)> = par_map_chunks(threads, nb, |b| {
+            let blk = &blocks[b];
+            let mut e_loc = e_shared.to_vec();
+            let mut da = vec![0.0f32; blk.len()];
+            // Column visit order within the block: cyclic by default;
+            // Shuffled draws a fresh in-block permutation per sweep from
+            // the (seed, block, sweep) stream — deterministic, like every
+            // other randomized piece of this module.
+            let mut order: Vec<usize> = blk.clone().collect();
+            if opts.order == ColumnOrder::Shuffled {
+                let mut rng =
+                    Rng::seed(stream_seed(opts.seed, (sweep * nb + b) as u64));
+                rng.shuffle(&mut order);
+            }
+            for &j in &order {
+                let cn = cninv[j];
+                if cn == 0.0 {
+                    continue; // zero column
+                }
+                da[j - blk.start] = x.cd_step(j, &mut e_loc, cn);
+            }
+            (da, e_loc)
+        });
+
+        // Phase 2 — sync. Coefficients merge additively (disjoint column
+        // ownership); the residual is rebuilt from the block locals:
+        // e_b = e − X_b da_b, so e' = e − Σ_b X_b da_b = Σ_b e_b − (B−1)e,
+        // an O(B·obs) row-parallel fold instead of re-touching the matrix.
+        if nb == 1 {
+            let (da, e_loc) = results.pop().expect("one block");
+            for (k, &d) in da.iter().enumerate() {
+                a[k] += d;
+            }
+            e = e_loc;
+        } else {
+            for (blk, (da, _)) in blocks.iter().zip(&results) {
+                for (k, &d) in da.iter().enumerate() {
+                    a[blk.start + k] += d;
+                }
+            }
+            let coeff = (nb - 1) as f64;
+            par_for_disjoint(threads, &mut e, |r0, window| {
+                for (i, w) in window.iter_mut().enumerate() {
+                    let r = r0 + i;
+                    let mut acc = -coeff * (*w as f64);
+                    for (_, e_loc) in &results {
+                        acc += e_loc[r] as f64;
+                    }
+                    *w = acc as f32;
+                }
+            });
+        }
+
+        sweeps = sweep + 1;
+        let check_now = opts.check_every != 0 && sweeps % opts.check_every == 0;
+        if check_now || sweeps == opts.max_sweeps {
+            let r2 = blas1::sum_sq_f64(&e);
+            history.push(r2);
+            if opts.tol > 0.0 && r2 <= tol_sq {
+                stop = StopReason::Converged;
+                break;
+            }
+            // Guard for the cross-block staleness caveat: stalls AND
+            // divergence (correlated columns split across blocks) both
+            // stop here instead of burning sweeps.
+            if r2 >= prev_r2 * (1.0 - 1e-9) && sweeps > 1 {
+                stop = StopReason::Stalled;
+                break;
+            }
+            prev_r2 = r2;
+        }
+    }
+
+    SolveReport { a, e, history, y_norm_sq, sweeps, stop }
+}
+
+/// Row-partitioned parallel randomized Kaczmarz (averaging sync) on the
+/// dense layout.
+pub fn solve_kaczmarz_par(x: &Mat, y: &[f32], opts: &SolveOptions) -> SolveReport {
+    kaczmarz_par_generic(x, y, opts)
+}
+
+/// Row-partitioned parallel randomized Kaczmarz on CSR storage.
+pub fn solve_kaczmarz_par_csr(x: &CsrMat, y: &[f32], opts: &SolveOptions) -> SolveReport {
+    kaczmarz_par_generic(x, y, opts)
+}
+
+fn kaczmarz_par_generic<R: RowAccess>(x: &R, y: &[f32], opts: &SolveOptions) -> SolveReport {
+    let (obs, vars) = (x.rows(), x.cols());
+    assert_eq!(y.len(), obs, "y length must equal obs");
+    let threads = opts.threads.max(1);
+    let row_norms_sq = x.row_norms_sq_vec();
+    let total: f64 = row_norms_sq.iter().map(|&v| v as f64).sum();
+    let y_norm_sq = blas1::sum_sq_f64(y);
+    if total == 0.0 {
+        // All-zero matrix: no projection moves the iterate (mirrors the
+        // serial solvers' trivial-report path).
+        let stop = if y_norm_sq == 0.0 { StopReason::Converged } else { StopReason::Stalled };
+        return SolveReport {
+            a: vec![0.0f32; vars],
+            e: y.to_vec(),
+            history: vec![y_norm_sq],
+            y_norm_sq,
+            sweeps: 0,
+            stop,
+        };
+    }
+
+    // Per-block sampling state: Strohmer-Vershynin norm-weighted CDF
+    // restricted to the block's rows, plus the block's share of the total
+    // row-norm mass (its averaging weight).
+    struct Block {
+        range: std::ops::Range<usize>,
+        cdf: Vec<f64>,
+        mass: f64,
+    }
+    let blocks: Vec<Block> = partition_ranges(obs, threads)
+        .into_iter()
+        .map(|range| {
+            let mass: f64 =
+                row_norms_sq[range.clone()].iter().map(|&v| v as f64).sum();
+            let mut cdf = Vec::with_capacity(range.len());
+            let mut acc = 0.0f64;
+            for &v in &row_norms_sq[range.clone()] {
+                acc += if mass > 0.0 { v as f64 / mass } else { 0.0 };
+                cdf.push(acc);
+            }
+            Block { range, cdf, mass }
+        })
+        .collect();
+    let nb = blocks.len();
+
+    let tol_sq = opts.tol * opts.tol * y_norm_sq;
+    let mut a = vec![0.0f32; vars];
+    let mut history = Vec::new();
+    let mut stop = StopReason::MaxSweeps;
+    let mut sweeps = 0;
+    let mut prev_r2 = f64::INFINITY;
+
+    for sweep in 0..opts.max_sweeps {
+        // Each block projects onto its own rows; the RNG stream is keyed
+        // by (seed, block, sweep) — never by the OS worker — so the result
+        // is deterministic per (seed, threads).
+        let a_shared: &[f32] = &a;
+        let iterates: Vec<Vec<f32>> = par_map_chunks(threads, nb, |b| {
+            let blk = &blocks[b];
+            let mut ab = a_shared.to_vec();
+            if blk.mass == 0.0 {
+                return ab; // all-zero rows; weight 0 below
+            }
+            let mut rng =
+                Rng::seed(stream_seed(opts.seed, (sweep * nb + b) as u64));
+            for _ in 0..blk.range.len() {
+                let u = rng.uniform();
+                let k = match blk.cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+                    Ok(k) => k,
+                    Err(k) => k.min(blk.range.len() - 1),
+                };
+                let i = blk.range.start + k;
+                let nrm = row_norms_sq[i];
+                if nrm == 0.0 {
+                    continue;
+                }
+                let ri = y[i] - x.dot_row(i, &ab);
+                x.axpy_row(i, ri / nrm, &mut ab);
+            }
+            ab
+        });
+
+        // Averaging sync: mass-weighted mean of the block iterates (f64
+        // accumulation, block order) — weights sum to 1 by construction.
+        for (j, aj) in a.iter_mut().enumerate() {
+            let mut acc = 0.0f64;
+            for (blk, ab) in blocks.iter().zip(&iterates) {
+                acc += (blk.mass / total) * ab[j] as f64;
+            }
+            *aj = acc as f32;
+        }
+
+        sweeps = sweep + 1;
+        let e = x.residual_vec(y, &a);
+        let r2 = blas1::sum_sq_f64(&e);
+        history.push(r2);
+        if opts.tol > 0.0 && r2 <= tol_sq {
+            stop = StopReason::Converged;
+            break;
+        }
+        if r2 >= prev_r2 * (1.0 - 1e-9) && sweeps > 1 {
+            stop = StopReason::Stalled;
+            break;
+        }
+        prev_r2 = r2;
+    }
+    let e = x.residual_vec(y, &a);
+    SolveReport { a, e, history, y_norm_sq, sweeps, stop }
+}
+
+/// Multi-RHS SolveBak with the RHS set chunked across `opts.threads`
+/// workers: column norms are computed once and shared, and every chunk's
+/// matrix walk serves all of its systems per sweep.
+pub fn solve_bak_multi_par(x: &Mat, ys: &[Vec<f32>], opts: &SolveOptions) -> Vec<SolveReport> {
+    bak_multi_par_generic(x, ys, opts)
+}
+
+/// Multi-RHS SolveBak on CSC storage: one O(nnz) traversal per sweep per
+/// chunk serves every right-hand side in the chunk.
+pub fn solve_bak_multi_par_csc(
+    x: &CscMat,
+    ys: &[Vec<f32>],
+    opts: &SolveOptions,
+) -> Vec<SolveReport> {
+    bak_multi_par_generic(x, ys, opts)
+}
+
+fn bak_multi_par_generic<C: ColAccess>(
+    x: &C,
+    ys: &[Vec<f32>],
+    opts: &SolveOptions,
+) -> Vec<SolveReport> {
+    let obs = x.rows();
+    for y in ys {
+        assert_eq!(y.len(), obs, "every RHS must have obs rows");
+    }
+    if ys.is_empty() {
+        return Vec::new();
+    }
+    let threads = opts.threads.max(1);
+    let cninv = x.colnorms_inv_vec(); // once, for every RHS on every worker
+    let chunks = partition_ranges(ys.len(), threads);
+    let per_chunk: Vec<Vec<SolveReport>> = par_map_chunks(threads, chunks.len(), |c| {
+        bak_multi_chunk(x, &cninv, &ys[chunks[c].clone()], opts)
+    });
+    per_chunk.into_iter().flatten().collect()
+}
+
+/// Serial multi-RHS walk for one chunk (mirrors
+/// [`crate::solver::solve_bak_multi`], with the column norms hoisted out).
+fn bak_multi_chunk<C: ColAccess>(
+    x: &C,
+    cninv: &[f32],
+    ys: &[Vec<f32>],
+    opts: &SolveOptions,
+) -> Vec<SolveReport> {
+    let vars = x.cols();
+    let nrhs = ys.len();
+    let mut a: Vec<Vec<f32>> = vec![vec![0.0f32; vars]; nrhs];
+    let mut e: Vec<Vec<f32>> = ys.to_vec();
+    let y_norm_sq: Vec<f64> = ys.iter().map(|y| blas1::sum_sq_f64(y)).collect();
+    let mut history: Vec<Vec<f64>> = vec![Vec::new(); nrhs];
+    let mut done: Vec<Option<StopReason>> = vec![None; nrhs];
+    let mut prev_r2 = vec![f64::INFINITY; nrhs];
+    let mut sweeps_done = vec![0usize; nrhs];
+
+    for sweep in 0..opts.max_sweeps {
+        if done.iter().all(Option::is_some) {
+            break;
+        }
+        for j in 0..vars {
+            let cn = cninv[j];
+            if cn == 0.0 {
+                continue;
+            }
+            for r in 0..nrhs {
+                if done[r].is_some() {
+                    continue;
+                }
+                let da = x.cd_step(j, &mut e[r], cn);
+                a[r][j] += da;
+            }
+        }
+        for r in 0..nrhs {
+            if done[r].is_some() {
+                continue;
+            }
+            sweeps_done[r] = sweep + 1;
+            let r2 = blas1::sum_sq_f64(&e[r]);
+            history[r].push(r2);
+            if opts.tol > 0.0 && r2 <= opts.tol * opts.tol * y_norm_sq[r] {
+                done[r] = Some(StopReason::Converged);
+            } else if r2 >= prev_r2[r] * (1.0 - 1e-9) && sweep > 0 {
+                done[r] = Some(StopReason::Stalled);
+            }
+            prev_r2[r] = r2;
+        }
+    }
+
+    (0..nrhs)
+        .map(|r| SolveReport {
+            a: std::mem::take(&mut a[r]),
+            e: std::mem::take(&mut e[r]),
+            history: std::mem::take(&mut history[r]),
+            y_norm_sq: y_norm_sq[r],
+            sweeps: sweeps_done[r],
+            stop: done[r].unwrap_or(StopReason::MaxSweeps),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::{solve_bak, solve_bak_multi, solve_kaczmarz};
+    use crate::util::stats::rel_l2;
+
+    fn planted(seed: u64, obs: usize, vars: usize) -> (Mat, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::seed(seed);
+        let x = Mat::randn(&mut rng, obs, vars);
+        let a: Vec<f32> = (0..vars).map(|_| rng.normal_f32()).collect();
+        let y = x.matvec(&a);
+        (x, y, a)
+    }
+
+    fn planted_sparse(
+        seed: u64,
+        obs: usize,
+        vars: usize,
+        density: f64,
+    ) -> (CscMat, Vec<f32>, Vec<f32>) {
+        let w = crate::bench::workload::SparseWorkload::uniform(
+            crate::bench::workload::WorkloadSpec::new(obs, vars, seed),
+            density,
+        );
+        (w.x, w.y, w.a_true)
+    }
+
+    #[test]
+    fn bak_par_single_thread_matches_serial_exactly() {
+        let (x, y, _) = planted(900, 120, 24);
+        let mut o = SolveOptions::default();
+        o.max_sweeps = 4;
+        o.tol = 0.0;
+        o.threads = 1;
+        let rp = solve_bak_par(&x, &y, &o);
+        let rs = solve_bak(&x, &y, &o);
+        assert_eq!(rp.a, rs.a, "threads=1 must be Algorithm 1 bit-for-bit");
+        assert_eq!(rp.e, rs.e);
+    }
+
+    #[test]
+    fn bak_par_converges_and_is_deterministic_across_thread_counts() {
+        let (x, y, a_true) = planted(901, 600, 48);
+        for threads in [1usize, 2, 8] {
+            let mut o = SolveOptions::accurate();
+            o.threads = threads;
+            let r1 = solve_bak_par(&x, &y, &o);
+            let r2 = solve_bak_par(&x, &y, &o);
+            assert_eq!(r1.a, r2.a, "threads={threads} must be deterministic");
+            assert!(
+                r1.rel_residual() < 1e-4,
+                "threads={threads} rel={}",
+                r1.rel_residual()
+            );
+            assert!(
+                rel_l2(&r1.a, &a_true) < 1e-3,
+                "threads={threads} err={}",
+                rel_l2(&r1.a, &a_true)
+            );
+        }
+    }
+
+    #[test]
+    fn bak_par_exit_invariant() {
+        let (x, y, _) = planted(902, 200, 32);
+        let mut o = SolveOptions::default();
+        o.threads = 4;
+        let rep = solve_bak_par(&x, &y, &o);
+        let fresh = crate::linalg::residual(&x, &y, &rep.a);
+        for (f, g) in fresh.iter().zip(&rep.e) {
+            assert!((f - g).abs() < 1e-3, "{f} vs {g}");
+        }
+    }
+
+    #[test]
+    fn bak_par_csc_matches_dense_blocks() {
+        let (x, y, _) = planted_sparse(903, 150, 20, 0.2);
+        let dense = x.to_dense();
+        let mut o = SolveOptions::default();
+        o.max_sweeps = 4;
+        o.tol = 0.0;
+        o.threads = 3;
+        let rs = solve_bak_par_csc(&x, &y, &o);
+        let rd = solve_bak_par(&dense, &y, &o);
+        assert_eq!(rs.sweeps, rd.sweeps);
+        for (s, d) in rs.a.iter().zip(&rd.a) {
+            assert!((s - d).abs() < 1e-3, "{s} vs {d}");
+        }
+    }
+
+    #[test]
+    fn bak_par_zero_column_ignored() {
+        let mut rng = Rng::seed(904);
+        let mut x = Mat::randn(&mut rng, 60, 9);
+        x.col_mut(4).fill(0.0);
+        let y: Vec<f32> = (0..60).map(|_| rng.normal_f32()).collect();
+        let mut o = SolveOptions::default();
+        o.threads = 3;
+        let rep = solve_bak_par(&x, &y, &o);
+        assert_eq!(rep.a[4], 0.0);
+        assert!(rep.a.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn bak_par_shuffled_order_converges_and_is_deterministic() {
+        let (x, y, a_true) = planted(915, 500, 40);
+        let mut o = SolveOptions::accurate();
+        o.order = ColumnOrder::Shuffled;
+        o.threads = 3;
+        let r1 = solve_bak_par(&x, &y, &o);
+        let r2 = solve_bak_par(&x, &y, &o);
+        assert_eq!(r1.a, r2.a, "shuffled order still deterministic per seed");
+        assert!(r1.rel_residual() < 1e-4, "rel={}", r1.rel_residual());
+        assert!(rel_l2(&r1.a, &a_true) < 1e-3);
+        // A different seed draws different permutations.
+        let mut o2 = o.clone();
+        o2.seed = o.seed ^ 0xdead;
+        let r3 = solve_bak_par(&x, &y, &o2);
+        assert_ne!(r1.a, r3.a, "permutation stream depends on the seed");
+    }
+
+    #[test]
+    fn kaczmarz_par_converges_and_is_deterministic() {
+        // 240x20: even at 8 blocks every 30-row block is overdetermined,
+        // so each block's projections pull hard toward the unique solution
+        // and the averaging sync converges for every thread count.
+        let (x, y, a_true) = planted(905, 240, 20);
+        for threads in [1usize, 2, 8] {
+            let mut o = SolveOptions::default();
+            o.max_sweeps = 2000;
+            o.tol = 1e-4;
+            o.threads = threads;
+            let r1 = solve_kaczmarz_par(&x, &y, &o);
+            let r2 = solve_kaczmarz_par(&x, &y, &o);
+            assert_eq!(r1.a, r2.a, "threads={threads} must be deterministic");
+            assert!(
+                r1.rel_residual() < 1e-3,
+                "threads={threads} rel={}",
+                r1.rel_residual()
+            );
+            assert!(rel_l2(&r1.a, &a_true) < 0.05, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn kaczmarz_par_matches_serial_quality() {
+        let (x, y, _) = planted(906, 160, 20);
+        let mut o = SolveOptions::default();
+        o.max_sweeps = 400;
+        o.tol = 1e-5;
+        let serial = solve_kaczmarz(&x, &y, &o);
+        o.threads = 4;
+        let par = solve_kaczmarz_par(&x, &y, &o);
+        // Different sampling sequences, same target: both land within the
+        // tolerance regime of the serial solution.
+        assert!(par.rel_residual() < serial.rel_residual().max(1e-4) * 10.0 + 1e-4);
+        assert!(rel_l2(&par.a, &serial.a) < 0.05);
+    }
+
+    #[test]
+    fn kaczmarz_par_csr_matches_dense_variant_exactly() {
+        let (x, y, _) = planted_sparse(907, 80, 16, 0.3);
+        let csr = x.to_csr();
+        let dense = x.to_dense();
+        let mut o = SolveOptions::default();
+        o.max_sweeps = 5;
+        o.tol = 0.0;
+        o.threads = 2;
+        let rs = solve_kaczmarz_par_csr(&csr, &y, &o);
+        let rd = solve_kaczmarz_par(&dense, &y, &o);
+        assert_eq!(rs.sweeps, rd.sweeps);
+        for (s, d) in rs.a.iter().zip(&rd.a) {
+            assert!((s - d).abs() < 1e-3, "{s} vs {d}");
+        }
+    }
+
+    #[test]
+    fn kaczmarz_par_zero_matrix_trivial() {
+        let x = Mat::zeros(6, 3);
+        let mut o = SolveOptions::default();
+        o.threads = 4;
+        let rep = solve_kaczmarz_par(&x, &[1.0; 6], &o);
+        assert_eq!(rep.a, vec![0.0; 3]);
+        assert_eq!(rep.stop, StopReason::Stalled);
+        let rep = solve_kaczmarz_par(&x, &[0.0; 6], &o);
+        assert_eq!(rep.stop, StopReason::Converged);
+    }
+
+    #[test]
+    fn multi_par_matches_serial_multi() {
+        let (x, _, _) = planted(908, 150, 25);
+        let mut rng = Rng::seed(909);
+        let ys: Vec<Vec<f32>> = (0..5)
+            .map(|_| {
+                let a: Vec<f32> = (0..25).map(|_| rng.normal_f32()).collect();
+                x.matvec(&a)
+            })
+            .collect();
+        let mut o = SolveOptions::default();
+        o.max_sweeps = 50;
+        o.tol = 1e-6;
+        let serial = solve_bak_multi(&x, &ys, &o);
+        o.threads = 3;
+        let par = solve_bak_multi_par(&x, &ys, &o);
+        assert_eq!(par.len(), serial.len());
+        for (p, s) in par.iter().zip(&serial) {
+            assert!(rel_l2(&p.a, &s.a) < 1e-4, "{}", rel_l2(&p.a, &s.a));
+            assert_eq!(p.stop, s.stop);
+        }
+    }
+
+    #[test]
+    fn multi_par_csc_solves_every_rhs() {
+        let (x, _, _) = planted_sparse(910, 200, 15, 0.2);
+        let mut rng = Rng::seed(911);
+        let ys: Vec<Vec<f32>> = (0..4)
+            .map(|_| {
+                let a: Vec<f32> = (0..15).map(|_| rng.normal_f32()).collect();
+                x.matvec(&a)
+            })
+            .collect();
+        let mut o = SolveOptions::accurate();
+        o.threads = 2;
+        let reps = solve_bak_multi_par_csc(&x, &ys, &o);
+        assert_eq!(reps.len(), 4);
+        for rep in &reps {
+            assert!(rep.converged(), "rel={}", rep.rel_residual());
+        }
+    }
+
+    #[test]
+    fn multi_par_empty_rhs_set() {
+        let (x, _, _) = planted(912, 20, 4);
+        assert!(solve_bak_multi_par(&x, &[], &SolveOptions::default()).is_empty());
+    }
+
+    #[test]
+    fn bak_par_more_threads_than_columns() {
+        let (x, y, a_true) = planted(913, 300, 3);
+        let mut o = SolveOptions::accurate();
+        o.threads = 16; // clamped to vars blocks internally
+        let rep = solve_bak_par(&x, &y, &o);
+        assert!(rep.rel_residual() < 1e-4, "rel={}", rep.rel_residual());
+        assert!(rel_l2(&rep.a, &a_true) < 1e-3);
+    }
+
+    #[test]
+    fn bak_par_history_guard_stops_on_non_improvement() {
+        // Correlated columns split across blocks: the §6-style overshoot
+        // must be caught by the guard, not loop to max_sweeps.
+        let mut rng = Rng::seed(914);
+        let obs = 80;
+        let vars = 32;
+        let base: Vec<f32> = (0..obs).map(|_| rng.normal_f32()).collect();
+        let x = Mat::from_fn(obs, vars, |i, _| base[i] + 0.02 * rng.normal_f32());
+        let y: Vec<f32> = (0..obs).map(|_| rng.normal_f32()).collect();
+        let mut o = SolveOptions::default();
+        o.threads = 8;
+        o.max_sweeps = 100_000;
+        o.tol = 1e-30; // unreachable
+        let rep = solve_bak_par(&x, &y, &o);
+        assert!(rep.sweeps < 100_000, "guard must fire");
+    }
+}

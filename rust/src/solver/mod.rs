@@ -55,7 +55,10 @@ pub struct SolveOptions {
     pub order: ColumnOrder,
     /// Block width for SolveBakP (the paper's `thr`).
     pub thr: usize,
-    /// Worker threads for SolveBakP's in-block loop. 1 = serial.
+    /// Worker threads: SolveBakP's in-block loop, and the block count for
+    /// the [`crate::parallel`] solvers (`bak_par` / `kaczmarz_par` /
+    /// multi-RHS chunking). 1 = serial. The CLI/server default honours
+    /// `PALLAS_THREADS`.
     pub threads: usize,
     /// Check the tolerance every this many sweeps (checking costs a pass
     /// over e; the paper's "control the accuracy and execution time").

@@ -125,8 +125,11 @@ fn every_registered_solver_answers_sparse_problems() {
             Err(e) => panic!("{} failed on sparse input: {e}", solver.name()),
         }
     }
-    // Both paths were exercised: the native quartet and the fallback.
-    assert_eq!(native, 4, "bak/bakp/kaczmarz/cgls solve natively");
+    // Both paths were exercised: the native sextet and the fallback.
+    assert_eq!(
+        native, 6,
+        "bak/bakp/bak_par/kaczmarz/kaczmarz_par/cgls solve natively"
+    );
     assert!(densified >= 4, "dense-only backends answered via densification");
 }
 
@@ -154,6 +157,11 @@ fn aliases_and_unknowns() {
     assert_eq!("lapack".parse::<SolverKind>().unwrap(), SolverKind::Qr);
     assert_eq!("QR".parse::<SolverKind>().unwrap(), SolverKind::Qr);
     assert_eq!("bak-multi".parse::<SolverKind>().unwrap(), SolverKind::BakMulti);
+    assert_eq!("bak-par".parse::<SolverKind>().unwrap(), SolverKind::BakPar);
+    assert_eq!(
+        "kaczmarz-par".parse::<SolverKind>().unwrap(),
+        SolverKind::KaczmarzPar
+    );
     let err = "warp-drive".parse::<SolverKind>().unwrap_err();
     assert!(matches!(err, SolverError::UnknownKind(_)));
     assert!(err.to_string().contains("warp_drive") || err.to_string().contains("warp-drive"));

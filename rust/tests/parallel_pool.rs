@@ -1,0 +1,180 @@
+//! Integration contract for the parallel execution layer (ISSUE 3
+//! acceptance): the worker pool isolates panics and drains on shutdown,
+//! and the block-parallel solvers are deterministic per (seed, threads)
+//! with residuals within tolerance of their serial counterparts for
+//! threads in {1, 2, 8}.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use solvebak::api::{solver_for, Problem, SolverKind};
+use solvebak::bench::workload::{SparseWorkload, WorkloadSpec};
+use solvebak::linalg::Mat;
+use solvebak::parallel::{self, Executor};
+use solvebak::solver::{solve_bak, solve_kaczmarz, SolveOptions};
+use solvebak::util::rng::Rng;
+use solvebak::util::stats::rel_l2;
+
+fn planted(seed: u64, obs: usize, vars: usize) -> (Mat, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::seed(seed);
+    let x = Mat::randn(&mut rng, obs, vars);
+    let a: Vec<f32> = (0..vars).map(|_| rng.normal_f32()).collect();
+    let y = x.matvec(&a);
+    (x, y, a)
+}
+
+#[test]
+fn executor_runs_jobs_across_workers() {
+    let sum = Arc::new(AtomicU64::new(0));
+    let s2 = sum.clone();
+    let pool = Executor::start("itest", 4, 64, move |_w, v: u64| {
+        s2.fetch_add(v, Ordering::Relaxed);
+    });
+    for v in 1..=100u64 {
+        pool.submit(v).unwrap();
+    }
+    let stats = pool.stats();
+    pool.shutdown();
+    assert_eq!(sum.load(Ordering::Relaxed), 5050);
+    assert_eq!(stats.jobs_completed.load(Ordering::Relaxed), 100);
+    assert_eq!(stats.worker_jobs().iter().sum::<u64>(), 100);
+}
+
+#[test]
+fn executor_panic_isolation_keeps_serving() {
+    let ok = Arc::new(AtomicU64::new(0));
+    let ok2 = ok.clone();
+    let pool = Executor::start("itest-panic", 2, 16, move |_w, v: i64| {
+        if v % 5 == 0 {
+            panic!("job {v} exploded");
+        }
+        ok2.fetch_add(1, Ordering::Relaxed);
+    });
+    for v in 1..=20i64 {
+        pool.submit(v).unwrap();
+    }
+    let stats = pool.stats();
+    pool.shutdown();
+    // 4 of 20 jobs panic (5, 10, 15, 20); the other 16 all complete.
+    assert_eq!(ok.load(Ordering::Relaxed), 16);
+    assert_eq!(stats.jobs_panicked.load(Ordering::Relaxed), 4);
+    assert_eq!(stats.jobs_completed.load(Ordering::Relaxed), 16);
+    assert_eq!(stats.jobs_inflight.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn executor_shutdown_with_pending_jobs_drains_cleanly() {
+    let done = Arc::new(AtomicU64::new(0));
+    let d2 = done.clone();
+    // One slow worker, a queue full of pending jobs, immediate shutdown:
+    // every queued job must still execute before the workers exit.
+    let pool = Executor::start("itest-drain", 1, 64, move |_w, _v: u32| {
+        std::thread::sleep(Duration::from_millis(3));
+        d2.fetch_add(1, Ordering::Relaxed);
+    });
+    for v in 0..20u32 {
+        pool.submit(v).unwrap();
+    }
+    pool.shutdown();
+    assert_eq!(done.load(Ordering::Relaxed), 20, "pending jobs drained");
+}
+
+#[test]
+fn bak_par_deterministic_and_within_tolerance_of_serial() {
+    let (x, y, _) = planted(7001, 800, 64);
+    let opts_serial = SolveOptions::accurate();
+    let serial = solve_bak(&x, &y, &opts_serial);
+    for threads in [1usize, 2, 8] {
+        let mut o = SolveOptions::accurate();
+        o.threads = threads;
+        let r1 = parallel::solve_bak_par(&x, &y, &o);
+        let r2 = parallel::solve_bak_par(&x, &y, &o);
+        assert_eq!(r1.a, r2.a, "threads={threads}: repeat runs identical");
+        // Acceptance: residual within tolerance of the serial counterpart.
+        assert!(
+            r1.rel_residual() < 1e-4,
+            "threads={threads} rel={}",
+            r1.rel_residual()
+        );
+        assert!(
+            rel_l2(&r1.a, &serial.a) < 1e-2,
+            "threads={threads} drift={}",
+            rel_l2(&r1.a, &serial.a)
+        );
+    }
+}
+
+#[test]
+fn kaczmarz_par_deterministic_and_within_tolerance_of_serial() {
+    let (x, y, _) = planted(7002, 320, 24);
+    let mut opts_serial = SolveOptions::default();
+    opts_serial.max_sweeps = 2000;
+    opts_serial.tol = 1e-4;
+    let serial = solve_kaczmarz(&x, &y, &opts_serial);
+    for threads in [1usize, 2, 8] {
+        let mut o = opts_serial.clone();
+        o.threads = threads;
+        let r1 = parallel::solve_kaczmarz_par(&x, &y, &o);
+        let r2 = parallel::solve_kaczmarz_par(&x, &y, &o);
+        assert_eq!(r1.a, r2.a, "threads={threads}: repeat runs identical");
+        assert!(
+            r1.rel_residual() < 1e-3,
+            "threads={threads} rel={}",
+            r1.rel_residual()
+        );
+        assert!(
+            rel_l2(&r1.a, &serial.a) < 0.05,
+            "threads={threads} drift={}",
+            rel_l2(&r1.a, &serial.a)
+        );
+    }
+}
+
+#[test]
+fn sparse_parallel_variants_through_the_registry() {
+    let w = SparseWorkload::uniform(WorkloadSpec::new(640, 32, 7003), 0.1);
+    let opts = SolveOptions::builder()
+        .max_sweeps(2000)
+        .tol(1e-4)
+        .threads(2)
+        .build();
+    for kind in [SolverKind::BakPar, SolverKind::KaczmarzPar] {
+        let solver = solver_for(kind).expect("registered");
+        assert!(solver.capabilities().supports_parallel, "{kind}");
+        assert!(solver.capabilities().supports_sparse, "{kind}");
+        let p = Problem::new_sparse(&w.x, &w.y).expect("valid");
+        let rep = solver.solve(&p, &opts).expect("sparse parallel solve");
+        assert!(
+            rep.rel_residual() < 1e-3,
+            "{kind}: rel={}",
+            rep.rel_residual()
+        );
+    }
+}
+
+#[test]
+fn multi_rhs_parallel_matches_individual_serial_solves() {
+    let (x, _, _) = planted(7004, 400, 32);
+    let mut rng = Rng::seed(7005);
+    let ys: Vec<Vec<f32>> = (0..6)
+        .map(|_| {
+            let a: Vec<f32> = (0..32).map(|_| rng.normal_f32()).collect();
+            x.matvec(&a)
+        })
+        .collect();
+    let mut o = SolveOptions::accurate();
+    o.threads = 3;
+    let reps = parallel::solve_bak_multi_par(&x, &ys, &o);
+    assert_eq!(reps.len(), 6);
+    let mut o_serial = SolveOptions::accurate();
+    o_serial.threads = 1;
+    for (rep, y) in reps.iter().zip(&ys) {
+        let single = solve_bak(&x, y, &o_serial);
+        assert!(
+            rel_l2(&rep.a, &single.a) < 1e-4,
+            "multi-par member drifted: {}",
+            rel_l2(&rep.a, &single.a)
+        );
+    }
+}
