@@ -13,6 +13,7 @@
 use solvebak::bench::workload::{SparseWorkload, Workload, WorkloadSpec};
 use solvebak::cli::Args;
 use solvebak::parallel;
+use solvebak::util::alloc::peak_rss_bytes;
 use solvebak::solver::{self, SolveOptions};
 use solvebak::util::json::{Json, ObjBuilder};
 use solvebak::util::rng::Rng;
@@ -27,6 +28,9 @@ struct Row {
     seconds: f64,
     rel_residual: f64,
     sweeps: usize,
+    /// `VmHWM` after the measurement (0 off-Linux) — a process-wide
+    /// high-water mark, monotone across rows within one run.
+    peak_rss_bytes: u64,
 }
 
 impl Row {
@@ -39,6 +43,7 @@ impl Row {
             .num("seconds", self.seconds)
             .num("rel_residual", self.rel_residual)
             .num("sweeps", self.sweeps as f64)
+            .num("peak_rss_bytes", self.peak_rss_bytes as f64)
             .build()
     }
 }
@@ -98,6 +103,7 @@ fn main() {
             seconds: tm.min,
             rel_residual: rep.rel_residual(),
             sweeps: rep.sweeps,
+            peak_rss_bytes: peak_rss_bytes(),
         });
     }
 
@@ -124,6 +130,7 @@ fn main() {
             seconds: tm.min,
             rel_residual: rep.rel_residual(),
             sweeps: rep.sweeps,
+            peak_rss_bytes: peak_rss_bytes(),
         });
     }
 
@@ -150,6 +157,7 @@ fn main() {
             seconds: tm.min,
             rel_residual: rep.rel_residual(),
             sweeps: rep.sweeps,
+            peak_rss_bytes: peak_rss_bytes(),
         });
     }
 
@@ -192,6 +200,7 @@ fn main() {
             seconds: tm.min,
             rel_residual: worst,
             sweeps: reps.iter().map(|r| r.sweeps).max().unwrap_or(0),
+            peak_rss_bytes: peak_rss_bytes(),
         });
     }
 
@@ -208,6 +217,7 @@ fn main() {
         seconds: tm.min,
         rel_residual: rep.rel_residual(),
         sweeps: rep.sweeps,
+        peak_rss_bytes: peak_rss_bytes(),
     });
 
     if let Some(path) = out_path {

@@ -1,0 +1,163 @@
+//! Out-of-core streaming bench: in-memory BAK vs `solve_bak_stream` on the
+//! same planted system at three sizes — wall-time, peak RSS (`VmHWM`), and
+//! the stream's read/stall counters. The streamed run holds only the
+//! prefetch buffer pool resident (`--mem-budget`, default 8 MiB), so the
+//! peak-RSS columns show what the out-of-core path buys as the matrix
+//! outgrows the budget.
+//!
+//! This is the CI `stream-smoke` trajectory producer: `--out FILE` writes
+//! every row as a JSON array; the job runs
+//! `--smoke --out BENCH_PR6.json` and uploads the artifact.
+//!
+//! Run: `cargo bench --bench streaming_oom [-- --smoke] [--samples N]
+//!       [--mem-budget BYTES] [--out FILE]`
+
+use solvebak::bench::workload::{Workload, WorkloadSpec};
+use solvebak::cli::Args;
+use solvebak::solver::{self, SolveOptions};
+use solvebak::stream::{
+    default_chunk_cols, solve_bak_stream, temp_chunk_path, write_chunked_dense, StreamedMatrix,
+};
+use solvebak::util::alloc::{mib, peak_rss_bytes};
+use solvebak::util::json::{Json, ObjBuilder};
+use solvebak::util::stats::Summary;
+use solvebak::util::timer::{sample, BenchConfig};
+
+struct Row {
+    mode: &'static str,
+    obs: usize,
+    vars: usize,
+    seconds: f64,
+    rel_residual: f64,
+    sweeps: usize,
+    peak_rss_bytes: u64,
+    mem_budget: usize,
+    chunks_read: u64,
+    bytes_read: u64,
+    buffer_stalls: u64,
+}
+
+impl Row {
+    fn to_json(&self) -> Json {
+        ObjBuilder::new()
+            .str("solver", "bak")
+            .str("mode", self.mode)
+            .num("obs", self.obs as f64)
+            .num("vars", self.vars as f64)
+            .num("seconds", self.seconds)
+            .num("rel_residual", self.rel_residual)
+            .num("sweeps", self.sweeps as f64)
+            .num("peak_rss_bytes", self.peak_rss_bytes as f64)
+            .num("mem_budget", self.mem_budget as f64)
+            .num("stream_chunks_read", self.chunks_read as f64)
+            .num("stream_bytes_read", self.bytes_read as f64)
+            .num("stream_buffer_stalls", self.buffer_stalls as f64)
+            .build()
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv).expect("args");
+    let smoke = args.flag("smoke");
+    let samples = args.get_usize("samples", if smoke { 1 } else { 3 }).expect("samples");
+    let cfg = BenchConfig { warmup: 1, samples, ..BenchConfig::default() };
+    let out_path = args.get("out").map(str::to_string);
+    let budget = args.get_usize("mem-budget", 0).expect("mem-budget");
+
+    let shapes: &[(usize, usize)] = if smoke {
+        &[(2_000, 64), (4_000, 96), (8_000, 128)]
+    } else {
+        &[(20_000, 256), (50_000, 384), (100_000, 512)]
+    };
+    let mut opts = SolveOptions::default();
+    opts.max_sweeps = if smoke { 4 } else { 8 };
+    opts.tol = 0.0;
+
+    println!("# streaming vs in-memory BAK — {} sweeps, budget {}", opts.max_sweeps,
+        if budget == 0 { "default".to_string() } else { format!("{budget} B") });
+    println!(
+        "{:<14} {:>9} {:>6} | {:>10} {:>12} {:>10} {:>8} {:>7}",
+        "mode", "obs", "vars", "time_ms", "rel_resid", "rss_mib", "chunks", "stalls"
+    );
+    let mut rows: Vec<Row> = Vec::new();
+
+    for &(obs, vars) in shapes {
+        let w = Workload::consistent(WorkloadSpec::new(obs, vars, 42));
+
+        // In-memory reference.
+        let rep_mem = solver::solve_bak(&w.x, &w.y, &opts);
+        let tm = Summary::of(&sample(&cfg, || {
+            std::hint::black_box(solver::solve_bak(&w.x, &w.y, &opts));
+        }));
+        let rss = peak_rss_bytes();
+        println!(
+            "{:<14} {:>9} {:>6} | {:>10.2} {:>12.3e} {:>10.1} {:>8} {:>7}",
+            "in_memory", obs, vars, tm.min * 1e3, rep_mem.rel_residual(), mib(rss), "-", "-"
+        );
+        rows.push(Row {
+            mode: "in_memory",
+            obs,
+            vars,
+            seconds: tm.min,
+            rel_residual: rep_mem.rel_residual(),
+            sweeps: rep_mem.sweeps,
+            peak_rss_bytes: rss,
+            mem_budget: 0,
+            chunks_read: 0,
+            bytes_read: 0,
+            buffer_stalls: 0,
+        });
+
+        // Streamed run over the same matrix serialized to a chunked file.
+        let path = temp_chunk_path(&format!("bench_{obs}x{vars}"));
+        write_chunked_dense(&w.x, default_chunk_cols(obs, vars), &path).expect("write chunked");
+        let mut sm = StreamedMatrix::open(&path).expect("open chunked");
+        if budget > 0 {
+            sm = sm.with_budget(budget);
+        }
+        let rep_stream = solve_bak_stream(&sm, &w.y, &opts).expect("streamed solve");
+        assert_eq!(
+            rep_mem.a, rep_stream.report.a,
+            "streamed BAK must be bit-identical to in-memory at {obs}x{vars}"
+        );
+        let tm = Summary::of(&sample(&cfg, || {
+            std::hint::black_box(solve_bak_stream(&sm, &w.y, &opts).expect("streamed solve"));
+        }));
+        let rss = peak_rss_bytes();
+        let st = rep_stream.stats;
+        println!(
+            "{:<14} {:>9} {:>6} | {:>10.2} {:>12.3e} {:>10.1} {:>8} {:>7}",
+            "streamed", obs, vars, tm.min * 1e3,
+            rep_stream.report.rel_residual(), mib(rss), st.chunks_read, st.buffer_stalls
+        );
+        rows.push(Row {
+            mode: "streamed",
+            obs,
+            vars,
+            seconds: tm.min,
+            rel_residual: rep_stream.report.rel_residual(),
+            sweeps: rep_stream.report.sweeps,
+            peak_rss_bytes: rss,
+            mem_budget: sm.mem_budget(),
+            chunks_read: st.chunks_read,
+            bytes_read: st.bytes_read,
+            buffer_stalls: st.buffer_stalls,
+        });
+        let _ = std::fs::remove_file(&path);
+    }
+
+    if let Some(path) = out_path {
+        let json = Json::Arr(rows.iter().map(Row::to_json).collect());
+        std::fs::write(&path, json.to_string()).expect("write bench json");
+        println!("# wrote {} rows to {path}", rows.len());
+    }
+    println!("# done.");
+    // Sanity floor for CI: every solve stayed finite and every streamed
+    // row actually read chunks from disk.
+    assert!(rows.iter().all(|r| r.rel_residual.is_finite() && r.seconds > 0.0));
+    assert!(rows
+        .iter()
+        .filter(|r| r.mode == "streamed")
+        .all(|r| r.chunks_read > 0 && r.bytes_read > 0));
+}

@@ -21,14 +21,36 @@ use super::{
     SolverError, SolverKind,
 };
 
+/// The typed refusal for file-backed matrices on backends without an
+/// out-of-core path. Never densify these: the matrix was put on disk
+/// precisely because it may not fit in RAM, so "helpfully" materialising
+/// it trades a clear error for an OOM kill.
+fn streamed_unsupported(backend: &'static str) -> SolverError {
+    SolverError::Unavailable {
+        backend: backend.into(),
+        reason: "no out-of-core path for file-backed (streamed) matrices; \
+                 use a streaming-native backend (bak, kaczmarz, bak_multi) \
+                 or load the matrix into RAM yourself"
+            .into(),
+    }
+}
+
 /// Dense view of the problem's matrix for a backend without a native
 /// sparse path: borrows when already dense; materialises (O(obs*vars))
-/// when sparse. The first densification per backend logs at Warn; repeat
-/// calls — a batch of members against the same matrix, or a bench
-/// harness's timing loop — drop to Debug so one request logs the event
-/// once instead of once per solve. The coordinator layers a
-/// once-per-job `densified_jobs` metric on top of the same event.
-fn dense_or_warn<'a>(p: &Problem<'a>, backend: &'static str) -> Cow<'a, Mat> {
+/// when sparse; refuses streamed input with [`streamed_unsupported`]
+/// (out-of-core matrices must never be silently loaded). The first
+/// densification per backend logs at Warn; repeat calls — a batch of
+/// members against the same matrix, or a bench harness's timing loop —
+/// drop to Debug so one request logs the event once instead of once per
+/// solve. The coordinator layers a once-per-job `densified_jobs` metric
+/// on top of the same event.
+fn dense_or_warn<'a>(
+    p: &Problem<'a>,
+    backend: &'static str,
+) -> Result<Cow<'a, Mat>, SolverError> {
+    if p.x().is_streamed() {
+        return Err(streamed_unsupported(backend));
+    }
     if let MatrixRef::SparseCsc(s) = p.x() {
         static WARNED: std::sync::OnceLock<std::sync::Mutex<Vec<&'static str>>> =
             std::sync::OnceLock::new();
@@ -55,7 +77,7 @@ fn dense_or_warn<'a>(p: &Problem<'a>, backend: &'static str) -> Cow<'a, Mat> {
             ),
         );
     }
-    p.x().to_dense()
+    Ok(p.x().to_dense())
 }
 
 /// Algorithm 1 — sequential cyclic coordinate descent.
@@ -97,6 +119,14 @@ impl Solver for BakSolver {
                 }
                 None => Ok(sparse::solve::solve_bak_csc(s, p.y(), opts)),
             },
+            MatrixRef::Streamed(s) => {
+                if p.warm_start().is_some() {
+                    return Err(SolverError::InvalidInput(
+                        "warm start is not supported for streamed problems".into(),
+                    ));
+                }
+                crate::stream::solve_bak_stream(s, p.y(), opts).map(|r| r.report)
+            }
         }
     }
 }
@@ -122,6 +152,7 @@ impl Solver for BakpSolver {
         match p.x() {
             MatrixRef::Dense(x) => Ok(solver::solve_bakp(x, p.y(), opts)),
             MatrixRef::SparseCsc(s) => Ok(sparse::solve::solve_bakp_csc(s, p.y(), opts)),
+            MatrixRef::Streamed(_) => Err(streamed_unsupported("bakp")),
         }
     }
 }
@@ -151,6 +182,7 @@ impl Solver for BakParSolver {
             MatrixRef::SparseCsc(s) => {
                 Ok(crate::parallel::solve_bak_par_csc(s, p.y(), opts))
             }
+            MatrixRef::Streamed(_) => Err(streamed_unsupported("bak_par")),
         }
     }
 }
@@ -181,6 +213,7 @@ impl Solver for KaczmarzParSolver {
                 let csr = s.to_csr();
                 Ok(crate::parallel::solve_kaczmarz_par_csr(&csr, p.y(), opts))
             }
+            MatrixRef::Streamed(_) => Err(streamed_unsupported("kaczmarz_par")),
         }
     }
 }
@@ -205,7 +238,15 @@ impl Solver for BakMultiSolver {
         opts: &SolveOptions,
     ) -> Result<SolveReport, SolverError> {
         self.capabilities().check(p.obs(), p.vars())?;
-        let x = dense_or_warn(p, "bak_multi");
+        if let MatrixRef::Streamed(s) = p.x() {
+            let mut out =
+                crate::stream::solve_bak_multi_stream(s, &[p.y().to_vec()], opts)?;
+            return out.reports.pop().ok_or_else(|| SolverError::Backend {
+                backend: "bak_multi".into(),
+                reason: "no report produced".into(),
+            });
+        }
+        let x = dense_or_warn(p, "bak_multi")?;
         let mut reports = solver::solve_bak_multi(&x, &[p.y().to_vec()], opts);
         reports.pop().ok_or_else(|| SolverError::Backend {
             backend: "bak_multi".into(),
@@ -240,6 +281,9 @@ impl Solver for KaczmarzSolver {
                 let csr = s.to_csr();
                 Ok(sparse::solve::solve_kaczmarz_csr(&csr, p.y(), opts))
             }
+            MatrixRef::Streamed(s) => {
+                crate::stream::solve_kaczmarz_stream(s, p.y(), opts).map(|r| r.report)
+            }
         }
     }
 }
@@ -262,7 +306,7 @@ impl Solver for GaussSouthwellSolver {
         opts: &SolveOptions,
     ) -> Result<SolveReport, SolverError> {
         self.capabilities().check(p.obs(), p.vars())?;
-        let x = dense_or_warn(p, "gauss_southwell");
+        let x = dense_or_warn(p, "gauss_southwell")?;
         Ok(solver::solve_gauss_southwell(&x, p.y(), opts))
     }
 }
@@ -287,7 +331,7 @@ impl Solver for QrSolver {
     ) -> Result<SolveReport, SolverError> {
         let _ = opts; // direct method: convergence knobs don't apply
         self.capabilities().check(p.obs(), p.vars())?;
-        let x = dense_or_warn(p, "qr");
+        let x = dense_or_warn(p, "qr")?;
         let a = baselines::qr::lstsq_qr(&x, p.y())?;
         Ok(report_from_coefficients(&x, p.y(), a))
     }
@@ -312,7 +356,7 @@ impl Solver for CholeskySolver {
     ) -> Result<SolveReport, SolverError> {
         let _ = opts;
         self.capabilities().check(p.obs(), p.vars())?;
-        let x = dense_or_warn(p, "cholesky");
+        let x = dense_or_warn(p, "cholesky")?;
         let a = baselines::cholesky::solve_normal_equations(&x, p.y(), 0.0)?;
         Ok(report_from_coefficients(&x, p.y(), a))
     }
@@ -337,7 +381,7 @@ impl Solver for GaussSolver {
     ) -> Result<SolveReport, SolverError> {
         let _ = opts;
         self.capabilities().check(p.obs(), p.vars())?;
-        let x = dense_or_warn(p, "gauss");
+        let x = dense_or_warn(p, "gauss")?;
         let a = baselines::gauss::gauss_solve(&x, p.y())?;
         Ok(report_from_coefficients(&x, p.y(), a))
     }
@@ -368,6 +412,7 @@ impl Solver for CglsSolver {
             MatrixRef::SparseCsc(s) => {
                 sparse::solve::cgls_csc(s, p.y(), opts.max_sweeps, opts.tol)
             }
+            MatrixRef::Streamed(_) => return Err(streamed_unsupported("cgls")),
         };
         let e = residual_ref(p.x(), p.y(), &rep.a);
         Ok(SolveReport {
@@ -429,7 +474,7 @@ impl Solver for PjrtSolver {
             Some(eng) => {
                 // Densify only once an engine exists — detached solves
                 // must stay O(1).
-                let x = dense_or_warn(p, "pjrt");
+                let x = dense_or_warn(p, "pjrt")?;
                 eng.solve(&x, p.y(), opts, ArtifactKind::BakpSweep)
                     .map(|o| o.report)
                     .map_err(|e| SolverError::Backend {
@@ -610,6 +655,74 @@ mod tests {
         let rep = KaczmarzParSolver.solve(&p, &opts).unwrap();
         assert!(rep.rel_residual() < 1e-3, "rel={}", rep.rel_residual());
         assert!(rel_l2(&rep.a, &a_true) < 0.05);
+    }
+
+    fn planted_streamed(
+        seed: u64,
+        obs: usize,
+        vars: usize,
+        chunk: usize,
+    ) -> (Mat, Vec<f32>, crate::stream::StreamedMatrix, std::path::PathBuf) {
+        let (x, y, _) = planted(seed, obs, vars);
+        let path = crate::stream::temp_chunk_path("backend");
+        crate::stream::write_chunked_dense(&x, chunk, &path).unwrap();
+        let s = crate::stream::StreamedMatrix::open(&path).unwrap();
+        (x, y, s, path)
+    }
+
+    #[test]
+    fn streaming_trio_solves_file_backed_problems() {
+        let (x, y, s, path) = planted_streamed(720, 120, 16, 5);
+        let opts = SolveOptions::builder().max_sweeps(30).tol(1e-6).build();
+        let p = Problem::new_streamed(&s, &y).unwrap();
+        // bak: bit-identical to the in-memory trait run.
+        let dense_p = Problem::new(&x, &y).unwrap();
+        let via_stream = BakSolver.solve(&p, &opts).unwrap();
+        let via_dense = BakSolver.solve(&dense_p, &opts).unwrap();
+        assert_eq!(via_stream.a, via_dense.a);
+        // kaczmarz and bak_multi answer too.
+        assert!(KaczmarzSolver.solve(&p, &opts).unwrap().a.iter().all(|v| v.is_finite()));
+        let multi = BakMultiSolver.solve(&p, &opts).unwrap();
+        assert_eq!(multi.a, BakMultiSolver.solve(&dense_p, &opts).unwrap().a);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn non_streaming_backends_reject_file_backed_problems() {
+        let (_, y, s, path) = planted_streamed(721, 30, 10, 4);
+        let p = Problem::new_streamed(&s, &y).unwrap();
+        let opts = SolveOptions::default();
+        for kind in [
+            SolverKind::Bakp,
+            SolverKind::BakPar,
+            SolverKind::KaczmarzPar,
+            SolverKind::GaussSouthwell,
+            SolverKind::Qr,
+            SolverKind::Cholesky,
+            SolverKind::Cgls,
+        ] {
+            let err = super::super::solver_for(kind).unwrap().solve(&p, &opts).unwrap_err();
+            assert!(
+                matches!(err, SolverError::Unavailable { .. }),
+                "{kind}: expected a typed streaming refusal, got {err:?}"
+            );
+        }
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn streamed_warm_start_is_invalid_input() {
+        let (_, y, s, path) = planted_streamed(722, 20, 6, 3);
+        let a0 = vec![0.5f32; 6];
+        let p = Problem::new_streamed(&s, &y)
+            .unwrap()
+            .with_warm_start(&a0)
+            .unwrap();
+        assert!(matches!(
+            BakSolver.solve(&p, &SolveOptions::default()),
+            Err(SolverError::InvalidInput(_))
+        ));
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

@@ -99,11 +99,13 @@ impl SolverKind {
             warm_start: false,
             supports_sparse: false,
             supports_parallel: false,
+            supports_streaming: false,
         };
         match self {
             SolverKind::Bak => Some(Capabilities {
                 warm_start: true,
                 supports_sparse: true,
+                supports_streaming: true,
                 ..ITERATIVE
             }),
             // Bakp threads its in-block phases on the dense path; the
@@ -118,12 +120,20 @@ impl SolverKind {
                 supports_parallel: true,
                 ..ITERATIVE
             }),
-            SolverKind::Kaczmarz | SolverKind::Cgls => {
-                Some(Capabilities { supports_sparse: true, ..ITERATIVE })
+            // The streaming-native trio (bak, kaczmarz, bak_multi) run
+            // their serial inner steps over disk chunks bit-identically;
+            // the block-parallel variants interleave block-local work and
+            // cannot consume a single sequential chunk stream.
+            SolverKind::Kaczmarz => Some(Capabilities {
+                supports_sparse: true,
+                supports_streaming: true,
+                ..ITERATIVE
+            }),
+            SolverKind::Cgls => Some(Capabilities { supports_sparse: true, ..ITERATIVE }),
+            SolverKind::BakMulti => {
+                Some(Capabilities { supports_streaming: true, ..ITERATIVE })
             }
-            SolverKind::BakMulti | SolverKind::GaussSouthwell | SolverKind::Pjrt => {
-                Some(ITERATIVE)
-            }
+            SolverKind::GaussSouthwell | SolverKind::Pjrt => Some(ITERATIVE),
             SolverKind::Qr => Some(Capabilities { iterative: false, ..ITERATIVE }),
             SolverKind::Cholesky => Some(Capabilities {
                 supports_wide: false,
@@ -132,6 +142,7 @@ impl SolverKind {
                 warm_start: false,
                 supports_sparse: false,
                 supports_parallel: false,
+                supports_streaming: false,
             }),
             SolverKind::Gauss => Some(Capabilities {
                 supports_wide: false,
@@ -140,6 +151,7 @@ impl SolverKind {
                 warm_start: false,
                 supports_sparse: false,
                 supports_parallel: false,
+                supports_streaming: false,
             }),
             SolverKind::Auto => None,
         }
@@ -289,6 +301,19 @@ mod tests {
         assert_eq!(
             par,
             vec![SolverKind::Bakp, SolverKind::BakPar, SolverKind::KaczmarzPar]
+        );
+    }
+
+    #[test]
+    fn streaming_kinds_are_the_serial_trio() {
+        let stream: Vec<SolverKind> = SolverKind::CONCRETE
+            .iter()
+            .copied()
+            .filter(|k| k.capabilities().is_some_and(|c| c.supports_streaming))
+            .collect();
+        assert_eq!(
+            stream,
+            vec![SolverKind::Bak, SolverKind::BakMulti, SolverKind::Kaczmarz]
         );
     }
 

@@ -22,20 +22,20 @@
 //!
 //! ## Capability matrix
 //!
-//! | kind              | supports_wide | iterative | needs_square | warm_start | supports_sparse | parallel |
-//! |-------------------|---------------|-----------|--------------|------------|-----------------|----------|
-//! | `bak`             | yes           | yes       | no           | yes        | yes (CSC)       | no       |
-//! | `bakp`            | yes           | yes       | no           | no         | yes (CSC)       | in-block |
-//! | `bak_par`         | yes           | yes       | no           | no         | yes (CSC)       | yes      |
-//! | `bak_multi`       | yes           | yes       | no           | no         | no (densifies)  | no       |
-//! | `kaczmarz`        | yes           | yes       | no           | no         | yes (CSR)       | no       |
-//! | `kaczmarz_par`    | yes           | yes       | no           | no         | yes (CSR)       | yes      |
-//! | `gauss_southwell` | yes           | yes       | no           | no         | no (densifies)  | no       |
-//! | `qr`              | yes (min-norm)| no        | no           | no         | no (densifies)  | no       |
-//! | `cholesky`        | no            | no        | no           | no         | no (densifies)  | no       |
-//! | `gauss`           | no            | no        | yes          | no         | no (densifies)  | no       |
-//! | `cgls`            | yes           | yes       | no           | no         | yes (CSC)       | no       |
-//! | `pjrt`            | yes (bucketed)| yes       | no           | no         | no (densifies)  | no       |
+//! | kind              | supports_wide | iterative | needs_square | warm_start | supports_sparse | parallel | streaming |
+//! |-------------------|---------------|-----------|--------------|------------|-----------------|----------|-----------|
+//! | `bak`             | yes           | yes       | no           | yes        | yes (CSC)       | no       | yes       |
+//! | `bakp`            | yes           | yes       | no           | no         | yes (CSC)       | in-block | no        |
+//! | `bak_par`         | yes           | yes       | no           | no         | yes (CSC)       | yes      | no        |
+//! | `bak_multi`       | yes           | yes       | no           | no         | no (densifies)  | no       | yes       |
+//! | `kaczmarz`        | yes           | yes       | no           | no         | yes (CSR)       | no       | yes       |
+//! | `kaczmarz_par`    | yes           | yes       | no           | no         | yes (CSR)       | yes      | no        |
+//! | `gauss_southwell` | yes           | yes       | no           | no         | no (densifies)  | no       | no        |
+//! | `qr`              | yes (min-norm)| no        | no           | no         | no (densifies)  | no       | no        |
+//! | `cholesky`        | no            | no        | no           | no         | no (densifies)  | no       | no        |
+//! | `gauss`           | no            | no        | yes          | no         | no (densifies)  | no       | no        |
+//! | `cgls`            | yes           | yes       | no           | no         | yes (CSC)       | no       | no        |
+//! | `pjrt`            | yes (bucketed)| yes       | no           | no         | no (densifies)  | no       | no        |
 //!
 //! The `parallel` column is the `supports_parallel` capability: the
 //! backend scales with [`crate::solver::SolveOptions::threads`]
@@ -49,6 +49,13 @@
 //! densifies the matrix (with a logged warning — and a `densified_jobs`
 //! metric when it happens inside the coordinator) so *all* registered
 //! solvers answer sparse requests.
+//!
+//! The `streaming` column is `supports_streaming`: the backend runs
+//! file-backed problems ([`Problem::new_streamed`]) out-of-core, reading
+//! the matrix in chunks (see [`crate::stream`]). Unlike sparse, there is
+//! NO transparent fallback — densifying a matrix that was put on disk
+//! precisely because it may not fit in RAM would defeat the point, so
+//! non-streaming backends return a typed [`SolverError`] instead.
 
 pub mod backends;
 pub mod kind;
@@ -61,6 +68,7 @@ use std::borrow::Cow;
 use crate::linalg::{blas1, Mat};
 use crate::solver::{SolveOptions, SolveReport, StopReason};
 use crate::sparse::CscMat;
+use crate::stream::StreamedMatrix;
 
 /// Typed solver failure. Replaces the crate's previous mix of
 /// `Result<_, String>` and `expect(...)` panic paths.
@@ -86,6 +94,11 @@ pub enum SolverError {
     Backend { backend: String, reason: String },
     /// Service-level failure (coordinator shut down, reply channel lost).
     Service(String),
+    /// A request or option is malformed (inconsistent COO triplet lengths,
+    /// an unsupported option combination, a bad file path, …). Unlike
+    /// [`SolverError::Shape`] the *dimensions* may be fine — the payload
+    /// itself is self-contradictory.
+    InvalidInput(String),
 }
 
 impl std::fmt::Display for SolverError {
@@ -109,6 +122,7 @@ impl std::fmt::Display for SolverError {
                 write!(f, "backend '{backend}' failed: {reason}")
             }
             SolverError::Service(s) => write!(f, "service error: {s}"),
+            SolverError::InvalidInput(s) => write!(f, "invalid input: {s}"),
         }
     }
 }
@@ -126,19 +140,25 @@ impl From<crate::baselines::qr::SolveError> for SolverError {
     }
 }
 
-/// A borrowed view of the system matrix: dense col-major [`Mat`] or
-/// compressed sparse column [`CscMat`].
+/// A borrowed view of the system matrix: dense col-major [`Mat`],
+/// compressed sparse column [`CscMat`], or a file-backed
+/// [`StreamedMatrix`] whose payload stays on disk.
 ///
 /// This is the type [`Problem`] carries, so every [`Solver`] sees one
-/// dispatch surface for both representations. Solvers with native sparse
+/// dispatch surface for all representations. Solvers with native sparse
 /// paths match on it; dense-only solvers call [`MatrixRef::to_dense`]
-/// (borrowing when already dense, materialising O(obs*vars) when sparse).
+/// (borrowing when already dense, materialising O(obs*vars) otherwise).
+/// Backends without `supports_streaming` must NOT densify a `Streamed`
+/// matrix — the whole point is that it may not fit in RAM — they return a
+/// typed [`SolverError`] instead (see [`backends`]).
 #[derive(Clone, Copy)]
 pub enum MatrixRef<'a> {
     /// Dense column-major storage.
     Dense(&'a Mat),
     /// Compressed sparse column storage.
     SparseCsc(&'a CscMat),
+    /// On-disk chunked column-major storage (see [`crate::stream`]).
+    Streamed(&'a StreamedMatrix),
 }
 
 impl<'a> MatrixRef<'a> {
@@ -147,6 +167,7 @@ impl<'a> MatrixRef<'a> {
         match self {
             MatrixRef::Dense(m) => m.rows(),
             MatrixRef::SparseCsc(s) => s.rows(),
+            MatrixRef::Streamed(s) => s.rows(),
         }
     }
 
@@ -155,6 +176,7 @@ impl<'a> MatrixRef<'a> {
         match self {
             MatrixRef::Dense(m) => m.cols(),
             MatrixRef::SparseCsc(s) => s.cols(),
+            MatrixRef::Streamed(s) => s.cols(),
         }
     }
 
@@ -164,11 +186,12 @@ impl<'a> MatrixRef<'a> {
         (self.rows(), self.cols())
     }
 
-    /// Stored entries: `rows*cols` for dense, `nnz` for sparse.
+    /// Stored entries: `rows*cols` for dense/streamed, `nnz` for sparse.
     pub fn nnz(&self) -> usize {
         match self {
             MatrixRef::Dense(m) => m.rows() * m.cols(),
             MatrixRef::SparseCsc(s) => s.nnz(),
+            MatrixRef::Streamed(s) => s.rows() * s.cols(),
         }
     }
 
@@ -176,29 +199,42 @@ impl<'a> MatrixRef<'a> {
         matches!(self, MatrixRef::SparseCsc(_))
     }
 
+    /// True when the matrix payload lives on disk ([`crate::stream`]).
+    pub fn is_streamed(&self) -> bool {
+        matches!(self, MatrixRef::Streamed(_))
+    }
+
     /// Dense view: borrows when already dense, materialises (O(rows*cols))
-    /// when sparse. Callers that care about the cost should check
-    /// [`MatrixRef::is_sparse`] and log/count the densification.
+    /// otherwise. Callers that care about the cost should check
+    /// [`MatrixRef::is_sparse`] / [`MatrixRef::is_streamed`] first —
+    /// backends never call this on a streamed matrix (it defeats
+    /// out-of-core and panics if the file read fails); the [`backends`]
+    /// layer returns a typed error before reaching here.
     pub fn to_dense(&self) -> Cow<'a, Mat> {
         match *self {
             MatrixRef::Dense(m) => Cow::Borrowed(m),
             MatrixRef::SparseCsc(s) => Cow::Owned(s.to_dense()),
+            MatrixRef::Streamed(s) => {
+                Cow::Owned(s.to_mat().expect("read streamed matrix into RAM"))
+            }
         }
     }
 
-    /// y = X a (O(nnz) on sparse storage).
+    /// y = X a (O(nnz) on sparse storage; one disk pass on streamed).
     pub fn matvec(&self, a: &[f32]) -> Vec<f32> {
         match self {
             MatrixRef::Dense(m) => m.matvec(a),
             MatrixRef::SparseCsc(s) => s.matvec(a),
+            MatrixRef::Streamed(s) => s.matvec(a),
         }
     }
 
-    /// out = Xᵀ v (O(nnz) on sparse storage).
+    /// out = Xᵀ v (O(nnz) on sparse storage; one disk pass on streamed).
     pub fn matvec_t(&self, v: &[f32]) -> Vec<f32> {
         match self {
             MatrixRef::Dense(m) => m.matvec_t(v),
             MatrixRef::SparseCsc(s) => s.matvec_t(v),
+            MatrixRef::Streamed(s) => s.matvec_t(v),
         }
     }
 
@@ -207,6 +243,7 @@ impl<'a> MatrixRef<'a> {
         match self {
             MatrixRef::Dense(m) => m.colnorms_sq(),
             MatrixRef::SparseCsc(s) => s.colnorms_sq(),
+            MatrixRef::Streamed(s) => s.colnorms_sq(),
         }
     }
 }
@@ -239,6 +276,15 @@ impl<'a> Problem<'a> {
     pub fn new_sparse(x: &'a CscMat, y: &'a [f32]) -> Result<Self, SolverError> {
         Self::validate_sparse_matrix(x)?;
         Self::prevalidated_sparse(x, y)
+    }
+
+    /// Wrap a file-backed `(X, y)`. The payload stays on disk, so only the
+    /// header-derived shape and the O(obs) y side are validated — no
+    /// finite-scan of X (that would be a full read of a matrix chosen to
+    /// be bigger than RAM). Solve it through a backend whose
+    /// [`Capabilities::supports_streaming`] is true.
+    pub fn new_streamed(x: &'a StreamedMatrix, y: &'a [f32]) -> Result<Self, SolverError> {
+        Self::prevalidated_ref(MatrixRef::Streamed(x), y)
     }
 
     /// Matrix-side validation only: non-empty and finite. `O(obs*vars)`.
@@ -333,6 +379,11 @@ impl<'a> Problem<'a> {
         self.x.is_sparse()
     }
 
+    /// True when the matrix payload lives on disk.
+    pub fn is_streamed(&self) -> bool {
+        self.x.is_streamed()
+    }
+
     pub fn y(&self) -> &'a [f32] {
         self.y
     }
@@ -385,6 +436,11 @@ pub struct Capabilities {
     /// [`crate::parallel`] layer. The router prefers such backends when a
     /// request asks for `threads > 1`.
     pub supports_parallel: bool,
+    /// Runs file-backed ([`MatrixRef::Streamed`]) problems out-of-core via
+    /// [`crate::stream`]; false = the backend returns a typed error for
+    /// streamed input (it is never silently densified — see the module
+    /// docs).
+    pub supports_streaming: bool,
 }
 
 impl Capabilities {
@@ -533,6 +589,7 @@ mod tests {
             warm_start: false,
             supports_sparse: false,
             supports_parallel: false,
+            supports_streaming: false,
         };
         assert!(square_only.check(5, 5).is_ok());
         assert!(matches!(
@@ -599,6 +656,32 @@ mod tests {
         let dense = ps.dense_x();
         assert!(matches!(dense, std::borrow::Cow::Owned(_)));
         assert_eq!(*dense, x.to_dense());
+    }
+
+    #[test]
+    fn streamed_problem_validates_and_reports_shape() {
+        let mut rng = Rng::seed(7);
+        let m = Mat::randn(&mut rng, 6, 4);
+        let path = crate::stream::temp_chunk_path("api");
+        crate::stream::write_chunked_dense(&m, 2, &path).unwrap();
+        let s = StreamedMatrix::open(&path).unwrap();
+        let y = vec![0.0f32; 6];
+        let p = Problem::new_streamed(&s, &y).unwrap();
+        assert!(p.is_streamed() && !p.is_sparse());
+        assert_eq!(p.shape(), (6, 4));
+        assert!(matches!(
+            Problem::new_streamed(&s, &[0.0; 5]),
+            Err(SolverError::Shape(_))
+        ));
+        // MatrixRef ops agree with the in-memory original.
+        let sref = MatrixRef::Streamed(&s);
+        assert!(sref.is_streamed());
+        assert_eq!(sref.nnz(), 24);
+        let a = [1.0f32, -2.0, 0.5, 3.0];
+        assert_eq!(sref.matvec(&a), m.matvec(&a));
+        assert_eq!(sref.colnorms_sq(), m.colnorms_sq());
+        assert_eq!(*sref.to_dense(), m);
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

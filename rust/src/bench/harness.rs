@@ -42,6 +42,10 @@ pub struct MethodResult {
     /// Bytes allocated by ONE run (0 unless the counting allocator is the
     /// binary's global allocator).
     pub alloc_bytes: u64,
+    /// Process peak RSS (`VmHWM`) after the measurement, in bytes — 0 on
+    /// non-Linux platforms ([`alloc::peak_rss_bytes`]). A high-water mark,
+    /// so it reflects the largest method measured so far in the process.
+    pub peak_rss_bytes: u64,
     /// MAPE of the solution against the planted coefficients.
     pub mape: f64,
 }
@@ -53,6 +57,10 @@ impl MethodResult {
 
     pub fn mem_mib(&self) -> f64 {
         alloc::mib(self.alloc_bytes)
+    }
+
+    pub fn peak_rss_mib(&self) -> f64 {
+        alloc::mib(self.peak_rss_bytes)
     }
 }
 
@@ -97,6 +105,7 @@ pub fn run_method(
         method_label: method_label(kind, opts),
         time: Summary::of(&times),
         alloc_bytes: snap.bytes,
+        peak_rss_bytes: alloc::peak_rss_bytes(),
         mape: acc,
     })
 }
@@ -115,6 +124,9 @@ mod tests {
             let r = run_method(&w, kind, &opts, &cfg).expect("consistent workload");
             assert!(r.time.min > 0.0, "{}", r.method_label);
             assert!(r.mape < 1e-2, "{} mape={}", r.method_label, r.mape);
+            if cfg!(target_os = "linux") {
+                assert!(r.peak_rss_bytes > 0, "{} VmHWM missing", r.method_label);
+            }
         }
     }
 

@@ -26,7 +26,8 @@ pub struct Args {
 const VALUED: &[&str] = &[
     "obs", "vars", "thr", "threads", "sweeps", "tol", "seed", "backend",
     "artifacts", "scale", "samples", "max-feat", "workers", "queue",
-    "requests", "out", "rows", "noise", "level", "density",
+    "requests", "out", "rows", "noise", "level", "density", "port",
+    "x-file", "y-file", "mem-budget", "chunk",
 ];
 
 impl Args {
@@ -142,6 +143,21 @@ mod tests {
     #[test]
     fn missing_value_errors() {
         assert!(Args::parse(&sv(&["--obs"])).is_err());
+    }
+
+    #[test]
+    fn streaming_options_are_valued() {
+        let a = Args::parse(&sv(&[
+            "--x-file", "/tmp/x.sbck", "--y-file", "/tmp/x.sbck.y",
+            "--mem-budget", "8e6", "--chunk", "64", "--port", "7447",
+        ]))
+        .unwrap();
+        assert_eq!(a.get("x-file"), Some("/tmp/x.sbck"));
+        assert_eq!(a.get("y-file"), Some("/tmp/x.sbck.y"));
+        assert_eq!(a.get_usize("mem-budget", 0).unwrap(), 8_000_000);
+        assert_eq!(a.get_usize("chunk", 0).unwrap(), 64);
+        assert_eq!(a.get_usize("port", 0).unwrap(), 7447);
+        assert!(a.positionals().is_empty());
     }
 
     #[test]

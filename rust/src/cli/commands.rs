@@ -3,6 +3,8 @@
 //! ```text
 //! solvebak solve    --obs 1e5 --vars 100 [--backend bak|bakp|qr|pjrt|auto]
 //!                   [--sparse --density 0.01]
+//!                   [--x-file X.sbck --mem-budget 8e6]
+//! solvebak convert  --obs 1e6 --vars 256 --out X.sbck [--chunk 64]
 //! solvebak features --obs 1e4 --vars 200 --max-feat 10
 //! solvebak serve    --requests 64 --workers 4 [--artifacts DIR]
 //! solvebak info     [--artifacts DIR]
@@ -35,6 +37,9 @@ USAGE:
 
 COMMANDS:
   solve      solve one synthetic system and report accuracy/time
+  convert    generate a planted system straight into a chunked .sbck file
+             (plus a .y right-hand-side sidecar) — out-of-core, one chunk
+             resident at a time; --sparse converts a COO workload instead
   features   run SolveBakF feature selection on a planted workload
   serve      run the coordinator service against synthetic request load
   serve-tcp  expose the coordinator on a TCP port (newline-JSON protocol)
@@ -53,6 +58,13 @@ COMMON OPTIONS:
                         in-block threading; auto-routing prefers the
                         parallel variants when > 1)
                         [PALLAS_THREADS, else 1]
+  --x-file PATH         solve a file-backed chunked (.sbck) matrix with the
+                        out-of-core streaming engine; the right-hand side
+                        comes from --y-file, default PATH.y
+  --y-file PATH         f32-LE right-hand-side sidecar for --x-file
+  --mem-budget BYTES    streaming buffer-pool byte budget [8 MiB]
+  --chunk N             convert: columns per chunk       [~1 MiB per chunk]
+  --out PATH            convert: output .sbck path (required)
   --sweeps N --tol X    convergence control      [200/1e-6]
   --artifacts DIR       PJRT artifact directory  [artifacts]
   --max-feat N          features to select       [10]
@@ -81,6 +93,7 @@ fn run_inner(argv: Vec<String>) -> Result<(), ArgError> {
     let args = Args::parse(&argv[argv.len().min(1)..])?;
     match cmd.as_str() {
         "solve" => cmd_solve(&args),
+        "convert" => cmd_convert(&args),
         "features" => cmd_features(&args),
         "serve" => cmd_serve(&args),
         "serve-tcp" => cmd_serve_tcp(&args),
@@ -119,18 +132,41 @@ fn opts_of(args: &Args) -> Result<SolveOptions, ArgError> {
 }
 
 fn cmd_solve(args: &Args) -> Result<(), ArgError> {
-    let obs = args.get_usize("obs", 10_000)?;
-    let vars = args.get_usize("vars", 100)?;
+    let mut obs = args.get_usize("obs", 10_000)?;
+    let mut vars = args.get_usize("vars", 100)?;
     let seed = args.get_u64("seed", 42)?;
     let sparse = args.flag("sparse") || args.get("density").is_some();
     let density = args.get_f64("density", 0.01)?;
     let backend = backend_of(args)?;
     let opts = opts_of(args)?;
 
-    // Dense path plants via Workload::consistent; sparse via the CSC
-    // generator — both exactly consistent, so mape is comparable.
+    // --x-file solves an on-disk chunked matrix (the payload never loads
+    // into RAM); otherwise the dense path plants via Workload::consistent
+    // and sparse via the CSC generator — both exactly consistent, so mape
+    // is comparable.
     let spec = WorkloadSpec::new(obs, vars, seed);
-    let (matrix, y, a_true, nnz) = if sparse {
+    let (matrix, y, a_true, nnz) = if let Some(xf) = args.get("x-file") {
+        let mut s = crate::stream::StreamedMatrix::open(xf)
+            .map_err(|e| ArgError(format!("--x-file {xf}: {e}")))?;
+        let budget = args.get_usize("mem-budget", 0)?;
+        if budget > 0 {
+            s = s.with_budget(budget);
+        }
+        let y_path = args
+            .get("y-file")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|| sidecar_y_path(s.path()));
+        let y = crate::stream::read_vec_f32(&y_path)
+            .map_err(|e| ArgError(format!("y file {}: {e}", y_path.display())))?;
+        (obs, vars) = s.shape();
+        let nnz = obs * vars;
+        (
+            crate::coordinator::request::SharedMatrix::Streamed(Arc::new(s)),
+            y,
+            None,
+            nnz,
+        )
+    } else if sparse {
         let w = SparseWorkload::uniform(spec, density);
         let nnz = w.x.nnz();
         (
@@ -149,6 +185,7 @@ fn cmd_solve(args: &Args) -> Result<(), ArgError> {
             nnz,
         )
     };
+    let streamed = matrix.is_streamed();
 
     let coord = Coordinator::start(CoordinatorConfig {
         workers: 1,
@@ -162,11 +199,18 @@ fn cmd_solve(args: &Args) -> Result<(), ArgError> {
     let report = out.report.map_err(|e| ArgError(e.to_string()))?;
     let acc = a_true.as_ref().map(|t| mape(&report.a, t)).unwrap_or(f64::NAN);
 
-    let kind = if sparse { "sparse " } else { "" };
+    let kind = if streamed {
+        "streamed "
+    } else if sparse {
+        "sparse "
+    } else {
+        ""
+    };
+    let peak_rss = crate::util::alloc::peak_rss_bytes();
     println!(
-        "solved {kind}{obs}x{vars} (nnz={nnz}) via {}: {} | sweeps={} stop={:?} rel_resid={:.3e} mape={:.3e}",
+        "solved {kind}{obs}x{vars} (nnz={nnz}) via {}: {} | sweeps={} stop={:?} rel_resid={:.3e} mape={:.3e} peak_rss={:.1}MiB",
         out.backend, fmt_seconds(secs), report.sweeps, report.stop,
-        report.rel_residual(), acc,
+        report.rel_residual(), acc, crate::util::alloc::mib(peak_rss),
     );
     println!(
         "{}",
@@ -175,16 +219,105 @@ fn cmd_solve(args: &Args) -> Result<(), ArgError> {
             .num("obs", obs as f64)
             .num("vars", vars as f64)
             .bool("sparse", sparse)
+            .bool("streamed", streamed)
             .num("nnz", nnz as f64)
             .str("backend", out.backend.to_string())
             .num("seconds", secs)
             .num("sweeps", report.sweeps as f64)
             .num("rel_residual", report.rel_residual())
             .num("mape", acc)
+            .num("peak_rss_bytes", peak_rss as f64)
             .build()
             .to_string()
     );
     coord.shutdown();
+    Ok(())
+}
+
+/// The `<x>.y` sidecar path next to a chunked matrix file.
+fn sidecar_y_path(x: &std::path::Path) -> std::path::PathBuf {
+    let mut s = x.as_os_str().to_os_string();
+    s.push(".y");
+    std::path::PathBuf::from(s)
+}
+
+/// `solvebak convert`: generate a planted system straight into a chunked
+/// `.sbck` file plus its `.y` sidecar. The dense path streams
+/// chunk-by-chunk through [`crate::stream::write_chunked_with`] — peak
+/// memory is one chunk plus the y vector, never the full matrix — so CI
+/// can produce inputs far larger than the solve-side `--mem-budget`.
+fn cmd_convert(args: &Args) -> Result<(), ArgError> {
+    let obs = args.get_usize("obs", 10_000)?;
+    let vars = args.get_usize("vars", 100)?;
+    let seed = args.get_u64("seed", 42)?;
+    let sparse = args.flag("sparse") || args.get("density").is_some();
+    let density = args.get_f64("density", 0.01)?;
+    let out = args
+        .get("out")
+        .ok_or_else(|| ArgError("convert: --out PATH is required".into()))?;
+    if obs == 0 || vars == 0 {
+        return Err(ArgError(format!("convert: empty shape {obs}x{vars}")));
+    }
+    let path = std::path::PathBuf::from(out);
+    let chunk = match args.get_usize("chunk", 0)? {
+        0 => crate::stream::default_chunk_cols(obs, vars),
+        c => c,
+    };
+    let io_err = |e: std::io::Error| ArgError(format!("{}: {e}", path.display()));
+
+    let t0 = std::time::Instant::now();
+    let y = if sparse {
+        let w = SparseWorkload::uniform(WorkloadSpec::new(obs, vars, seed), density);
+        crate::stream::write_chunked_csc(&w.x, chunk, &path).map_err(io_err)?;
+        w.y
+    } else {
+        // Planted coefficients from a split stream, then X generated in
+        // column-major chunk order while y = X·a accumulates per column.
+        let mut rng = crate::util::rng::Rng::seed(seed);
+        let mut arng = rng.split();
+        let a_true: Vec<f32> = (0..vars).map(|_| arng.normal_f32()).collect();
+        let mut y = vec![0.0f32; obs];
+        crate::stream::write_chunked_with(&path, obs, vars, chunk, |j0, width, buf| {
+            rng.fill_normal(buf);
+            for l in 0..width {
+                let col = &buf[l * obs..(l + 1) * obs];
+                crate::linalg::blas1::axpy(a_true[j0 + l], col, &mut y);
+            }
+        })
+        .map_err(io_err)?;
+        y
+    };
+    let y_path = sidecar_y_path(&path);
+    crate::stream::write_vec_f32(&y_path, &y)
+        .map_err(|e| ArgError(format!("{}: {e}", y_path.display())))?;
+    let secs = t0.elapsed().as_secs_f64();
+
+    let meta = crate::stream::StreamedMatrix::open(&path).map_err(io_err)?;
+    let peak_rss = crate::util::alloc::peak_rss_bytes();
+    println!(
+        "wrote {} ({obs}x{vars}, chunk_cols={}, {:.1} MiB) + {} in {} | peak_rss={:.1}MiB",
+        path.display(),
+        meta.chunk_cols(),
+        crate::util::alloc::mib(meta.nbytes() as u64),
+        y_path.display(),
+        fmt_seconds(secs),
+        crate::util::alloc::mib(peak_rss),
+    );
+    println!(
+        "{}",
+        ObjBuilder::new()
+            .str("cmd", "convert")
+            .num("obs", obs as f64)
+            .num("vars", vars as f64)
+            .bool("sparse", sparse)
+            .num("chunk_cols", meta.chunk_cols() as f64)
+            .num("bytes", meta.nbytes() as f64)
+            .str("out", path.display().to_string())
+            .num("seconds", secs)
+            .num("peak_rss_bytes", peak_rss as f64)
+            .build()
+            .to_string()
+    );
     Ok(())
 }
 
@@ -445,6 +578,67 @@ mod tests {
             ])),
             0
         );
+    }
+
+    #[test]
+    fn convert_then_solve_streamed_roundtrip() {
+        let path = crate::stream::temp_chunk_path("cli_roundtrip");
+        let out = path.display().to_string();
+        assert_eq!(
+            run(sv(&["convert", "--obs", "300", "--vars", "12", "--chunk", "5",
+                     "--seed", "7", "--out", &out])),
+            0
+        );
+        assert!(path.exists());
+        assert!(sidecar_y_path(&path).exists());
+        // Auto routes the file-backed solve to the streaming BAK path.
+        assert_eq!(
+            run(sv(&["solve", "--x-file", &out, "--mem-budget", "16384",
+                     "--sweeps", "2000", "--tol", "1e-9"])),
+            0
+        );
+        // An explicit streaming-capable hint works too.
+        assert_eq!(
+            run(sv(&["solve", "--x-file", &out, "--backend", "kaczmarz",
+                     "--sweeps", "2000"])),
+            0
+        );
+        let _ = std::fs::remove_file(sidecar_y_path(&path));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn convert_sparse_then_solve() {
+        let path = crate::stream::temp_chunk_path("cli_sparse_convert");
+        let out = path.display().to_string();
+        assert_eq!(
+            run(sv(&["convert", "--obs", "80", "--vars", "8", "--density", "0.2",
+                     "--out", &out])),
+            0
+        );
+        assert_eq!(run(sv(&["solve", "--x-file", &out])), 0);
+        let _ = std::fs::remove_file(sidecar_y_path(&path));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn convert_requires_out() {
+        assert_eq!(run(sv(&["convert", "--obs", "10", "--vars", "2"])), 2);
+    }
+
+    #[test]
+    fn solve_missing_x_file_fails_cleanly() {
+        assert_eq!(run(sv(&["solve", "--x-file", "/nonexistent/x.sbck"])), 2);
+    }
+
+    #[test]
+    fn usage_mentions_streaming_flags() {
+        let u = usage();
+        assert!(u.contains("convert"));
+        assert!(u.contains("--x-file"));
+        assert!(u.contains("--y-file"));
+        assert!(u.contains("--mem-budget"));
+        assert!(u.contains("--chunk"));
     }
 
     #[test]

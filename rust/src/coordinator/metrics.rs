@@ -96,6 +96,13 @@ pub struct Metrics {
     /// Gauge: jobs currently sitting in the job queue (scheduled but not
     /// yet picked up by a worker).
     pub job_queue_depth: AtomicU64,
+    /// Chunks read from disk by streaming (file-backed) jobs.
+    pub stream_chunks_read: AtomicU64,
+    /// Bytes read from disk by streaming jobs.
+    pub stream_bytes_read: AtomicU64,
+    /// Times a streaming consumer blocked waiting on the prefetch thread
+    /// (high values mean the job is IO-bound at the configured budget).
+    pub stream_buffer_stalls: AtomicU64,
     /// Jobs executed per backend, indexed in [`SolverKind::CONCRETE`]
     /// order (the backend that actually ran, post-routing).
     backend_jobs: [AtomicU64; SolverKind::CONCRETE.len()],
@@ -117,6 +124,9 @@ impl Default for Metrics {
             queue_rejections: AtomicU64::new(0),
             densified_jobs: AtomicU64::new(0),
             job_queue_depth: AtomicU64::new(0),
+            stream_chunks_read: AtomicU64::new(0),
+            stream_bytes_read: AtomicU64::new(0),
+            stream_buffer_stalls: AtomicU64::new(0),
             backend_jobs: std::array::from_fn(|_| AtomicU64::new(0)),
             pool: OnceLock::new(),
             solve_latency: Histogram::new(),
@@ -188,6 +198,9 @@ impl Metrics {
             .num("queue_rejections", c(&self.queue_rejections))
             .num("densified_jobs", c(&self.densified_jobs))
             .num("job_queue_depth", c(&self.job_queue_depth))
+            .num("stream_chunks_read", c(&self.stream_chunks_read))
+            .num("stream_bytes_read", c(&self.stream_bytes_read))
+            .num("stream_buffer_stalls", c(&self.stream_buffer_stalls))
             .num("workers", workers)
             .num("workers_busy", busy)
             .num("jobs_inflight", inflight)
@@ -260,6 +273,18 @@ mod tests {
         let j = m.to_json();
         assert_eq!(j.get("densified_jobs").unwrap().as_f64(), Some(3.0));
         assert_eq!(j.get("job_queue_depth").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn stream_counters_exported() {
+        let m = Metrics::new();
+        m.stream_chunks_read.store(7, Ordering::Relaxed);
+        m.stream_bytes_read.store(4096, Ordering::Relaxed);
+        m.stream_buffer_stalls.store(1, Ordering::Relaxed);
+        let j = m.to_json();
+        assert_eq!(j.get("stream_chunks_read").unwrap().as_f64(), Some(7.0));
+        assert_eq!(j.get("stream_bytes_read").unwrap().as_f64(), Some(4096.0));
+        assert_eq!(j.get("stream_buffer_stalls").unwrap().as_f64(), Some(1.0));
     }
 
     #[test]

@@ -6,19 +6,24 @@ use crate::api::{MatrixRef, SolverError, SolverKind};
 use crate::linalg::Mat;
 use crate::solver::{SolveOptions, SolveReport};
 use crate::sparse::CscMat;
+use crate::stream::StreamedMatrix;
 
 /// Backwards-compatible alias: the coordinator used to define its own
 /// `Backend` enum; requests are now addressed by the crate-wide
 /// [`SolverKind`] (any registered solver, not just the original four).
 pub use crate::api::SolverKind as Backend;
 
-/// A shareable system matrix: dense or compressed sparse column, behind
-/// an `Arc` so the batcher can coalesce requests over the same data
-/// without copies. The owned counterpart of [`MatrixRef`].
+/// A shareable system matrix: dense, compressed sparse column, or a
+/// file-backed streamed handle, behind an `Arc` so the batcher can
+/// coalesce requests over the same data without copies. The owned
+/// counterpart of [`MatrixRef`].
 #[derive(Clone)]
 pub enum SharedMatrix {
     Dense(Arc<Mat>),
     SparseCsc(Arc<CscMat>),
+    /// On-disk chunked matrix ([`crate::stream`]); the handle is tiny —
+    /// only chunk buffers are ever resident.
+    Streamed(Arc<StreamedMatrix>),
 }
 
 impl SharedMatrix {
@@ -26,6 +31,7 @@ impl SharedMatrix {
         match self {
             SharedMatrix::Dense(m) => m.rows(),
             SharedMatrix::SparseCsc(s) => s.rows(),
+            SharedMatrix::Streamed(s) => s.rows(),
         }
     }
 
@@ -33,6 +39,7 @@ impl SharedMatrix {
         match self {
             SharedMatrix::Dense(m) => m.cols(),
             SharedMatrix::SparseCsc(s) => s.cols(),
+            SharedMatrix::Streamed(s) => s.cols(),
         }
     }
 
@@ -45,20 +52,27 @@ impl SharedMatrix {
         matches!(self, SharedMatrix::SparseCsc(_))
     }
 
+    /// True when the matrix payload lives on disk.
+    pub fn is_streamed(&self) -> bool {
+        matches!(self, SharedMatrix::Streamed(_))
+    }
+
     /// Borrowed view for the [`crate::api::Problem`] layer.
     pub fn matrix_ref(&self) -> MatrixRef<'_> {
         match self {
             SharedMatrix::Dense(m) => MatrixRef::Dense(m),
             SharedMatrix::SparseCsc(s) => MatrixRef::SparseCsc(s),
+            SharedMatrix::Streamed(s) => MatrixRef::Streamed(s),
         }
     }
 
     /// A stable identity (pointer identity of the Arc allocation) — the
-    /// batching key. Dense and sparse allocations can never collide.
+    /// batching key. Allocations of different kinds can never collide.
     pub fn key(&self) -> usize {
         match self {
             SharedMatrix::Dense(m) => Arc::as_ptr(m) as usize,
             SharedMatrix::SparseCsc(s) => Arc::as_ptr(s) as usize,
+            SharedMatrix::Streamed(s) => Arc::as_ptr(s) as usize,
         }
     }
 }
@@ -83,6 +97,11 @@ impl SolveRequest {
     /// Construct a sparse request with defaults.
     pub fn new_sparse(id: u64, x: Arc<CscMat>, y: Vec<f32>) -> Self {
         Self::with_matrix(id, SharedMatrix::SparseCsc(x), y)
+    }
+
+    /// Construct a file-backed (streamed) request with defaults.
+    pub fn new_streamed(id: u64, x: Arc<StreamedMatrix>, y: Vec<f32>) -> Self {
+        Self::with_matrix(id, SharedMatrix::Streamed(x), y)
     }
 
     /// Construct from an already-wrapped [`SharedMatrix`].

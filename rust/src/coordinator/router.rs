@@ -39,11 +39,18 @@ pub const NONSQUARE_RATIO: f64 = 4.0;
 /// * Auto + sparse: native O(nnz) CD — block-parallel BAK_PAR when
 ///   `threads > 1`, sequential BAK otherwise. Densifying for QR would
 ///   forfeit the O(nnz) win the sparse representation exists for.
+/// * Auto + streamed (file-backed matrix): BAK, the streaming-native
+///   sequential CD — regardless of threads or artifacts, since only the
+///   serial trio (bak, kaczmarz, bak_multi) can consume a sequential
+///   chunk stream. A hinted backend stays honoured (hints are contracts);
+///   non-streaming backends then return a typed `SolverError` from the
+///   [`crate::api::backends`] layer instead of OOMing.
 pub fn route(
     backend: SolverKind,
     obs: usize,
     vars: usize,
     sparse: bool,
+    streamed: bool,
     threads: usize,
     manifest: Option<&Manifest>,
 ) -> RouteDecision {
@@ -59,6 +66,10 @@ pub fn route(
         SolverKind::Pjrt if !has_artifact => RouteDecision {
             backend: SolverKind::Bakp,
             reason: "pjrt requested but no artifact bucket fits; native bakp fallback",
+        },
+        SolverKind::Auto if streamed => RouteDecision {
+            backend: SolverKind::Bak,
+            reason: "file-backed system: streaming-native sequential CD",
         },
         SolverKind::Auto if sparse && parallel => RouteDecision {
             backend: SolverKind::BakPar,
@@ -142,84 +153,84 @@ mod tests {
 
     #[test]
     fn explicit_hint_honoured() {
-        let d = route(SolverKind::Qr, 10_000, 10, false, 1, None);
+        let d = route(SolverKind::Qr, 10_000, 10, false, false, 1, None);
         assert_eq!(d.backend, SolverKind::Qr);
-        let d = route(SolverKind::Bak, 100, 100, false, 1, None);
+        let d = route(SolverKind::Bak, 100, 100, false, false, 1, None);
         assert_eq!(d.backend, SolverKind::Bak);
-        let d = route(SolverKind::Cgls, 500, 20, false, 1, None);
+        let d = route(SolverKind::Cgls, 500, 20, false, false, 1, None);
         assert_eq!(d.backend, SolverKind::Cgls);
         // A serial hint stays honoured even when threads are requested —
         // an explicit hint is a contract.
-        let d = route(SolverKind::Bak, 10_000, 10, false, 8, None);
+        let d = route(SolverKind::Bak, 10_000, 10, false, false, 8, None);
         assert_eq!(d.backend, SolverKind::Bak);
     }
 
     #[test]
     fn auto_square_goes_qr() {
-        let d = route(SolverKind::Auto, 128, 100, false, 1, None);
+        let d = route(SolverKind::Auto, 128, 100, false, false, 1, None);
         assert_eq!(d.backend, SolverKind::Qr);
         // Direct methods don't thread; square-ish stays QR regardless.
-        let d = route(SolverKind::Auto, 128, 100, false, 8, None);
+        let d = route(SolverKind::Auto, 128, 100, false, false, 8, None);
         assert_eq!(d.backend, SolverKind::Qr);
     }
 
     #[test]
     fn auto_tall_small_goes_bak() {
-        let d = route(SolverKind::Auto, 4000, 10, false, 1, None);
+        let d = route(SolverKind::Auto, 4000, 10, false, false, 1, None);
         assert_eq!(d.backend, SolverKind::Bak);
     }
 
     #[test]
     fn auto_tall_large_goes_bakp() {
-        let d = route(SolverKind::Auto, 2_000_000, 100, false, 1, None);
+        let d = route(SolverKind::Auto, 2_000_000, 100, false, false, 1, None);
         assert_eq!(d.backend, SolverKind::Bakp);
     }
 
     #[test]
     fn auto_with_threads_prefers_bak_par() {
-        let d = route(SolverKind::Auto, 2_000_000, 100, false, 8, None);
+        let d = route(SolverKind::Auto, 2_000_000, 100, false, false, 8, None);
         assert_eq!(d.backend, SolverKind::BakPar);
-        let d = route(SolverKind::Auto, 4000, 10, false, 2, None);
+        let d = route(SolverKind::Auto, 4000, 10, false, false, 2, None);
         assert_eq!(d.backend, SolverKind::BakPar);
     }
 
     #[test]
     fn auto_prefers_pjrt_when_bucket_fits() {
         let m = tiny_manifest();
-        let d = route(SolverKind::Auto, 200, 40, false, 1, Some(&m));
+        let d = route(SolverKind::Auto, 200, 40, false, false, 1, Some(&m));
         assert_eq!(d.backend, SolverKind::Pjrt);
     }
 
     #[test]
     fn pjrt_hint_falls_back_without_bucket() {
         let m = tiny_manifest();
-        let d = route(SolverKind::Pjrt, 100_000, 500, false, 1, Some(&m));
+        let d = route(SolverKind::Pjrt, 100_000, 500, false, false, 1, Some(&m));
         assert_eq!(d.backend, SolverKind::Bakp);
-        let d = route(SolverKind::Pjrt, 100, 100, false, 1, None);
+        let d = route(SolverKind::Pjrt, 100, 100, false, false, 1, None);
         assert_eq!(d.backend, SolverKind::Bakp);
         // ...and to the threaded variant when the request asks for it.
-        let d = route(SolverKind::Pjrt, 100, 100, false, 4, None);
+        let d = route(SolverKind::Pjrt, 100, 100, false, false, 4, None);
         assert_eq!(d.backend, SolverKind::BakPar);
     }
 
     #[test]
     fn wide_counts_as_nonsquare() {
-        let d = route(SolverKind::Auto, 10, 4000, false, 1, None);
+        let d = route(SolverKind::Auto, 10, 4000, false, false, 1, None);
         assert_ne!(d.backend, SolverKind::Qr);
     }
 
     #[test]
     fn capability_mismatch_falls_back_to_qr() {
         // Gaussian elimination on a tall system: needs_square.
-        let d = route(SolverKind::Gauss, 400, 20, false, 1, None);
+        let d = route(SolverKind::Gauss, 400, 20, false, false, 1, None);
         assert_eq!(d.backend, SolverKind::Qr);
         // Cholesky on a wide system: !supports_wide.
-        let d = route(SolverKind::Cholesky, 20, 400, false, 1, None);
+        let d = route(SolverKind::Cholesky, 20, 400, false, false, 1, None);
         assert_eq!(d.backend, SolverKind::Qr);
         // Both are honoured on shapes they handle.
-        assert_eq!(route(SolverKind::Gauss, 64, 64, false, 1, None).backend, SolverKind::Gauss);
+        assert_eq!(route(SolverKind::Gauss, 64, 64, false, false, 1, None).backend, SolverKind::Gauss);
         assert_eq!(
-            route(SolverKind::Cholesky, 400, 20, false, 1, None).backend,
+            route(SolverKind::Cholesky, 400, 20, false, false, 1, None).backend,
             SolverKind::Cholesky
         );
     }
@@ -228,27 +239,50 @@ mod tests {
     fn auto_sparse_never_picks_a_densifying_backend() {
         // Square-ish sparse would have gone to QR; the sparse route keeps
         // it on the native O(nnz) solver instead, at every scale.
-        let d = route(SolverKind::Auto, 128, 100, true, 1, None);
+        let d = route(SolverKind::Auto, 128, 100, true, false, 1, None);
         assert_eq!(d.backend, SolverKind::Bak);
-        let d = route(SolverKind::Auto, 100_000, 256, true, 1, None);
+        let d = route(SolverKind::Auto, 100_000, 256, true, false, 1, None);
         assert_eq!(d.backend, SolverKind::Bak);
         // ...even when a PJRT bucket would fit the shape.
         let m = tiny_manifest();
-        let d = route(SolverKind::Auto, 200, 40, true, 1, Some(&m));
+        let d = route(SolverKind::Auto, 200, 40, true, false, 1, Some(&m));
         assert_eq!(d.backend, SolverKind::Bak);
         // Threads keep it sparse-native too, on the block-parallel path.
-        let d = route(SolverKind::Auto, 200, 40, true, 8, Some(&m));
+        let d = route(SolverKind::Auto, 200, 40, true, false, 8, Some(&m));
         assert_eq!(d.backend, SolverKind::BakPar);
+    }
+
+    #[test]
+    fn auto_streamed_routes_to_bak() {
+        // File-backed jobs always land on the streaming-native sequential
+        // CD, regardless of shape, threads, or available artifacts.
+        let d = route(SolverKind::Auto, 128, 100, false, true, 1, None);
+        assert_eq!(d.backend, SolverKind::Bak);
+        let d = route(SolverKind::Auto, 2_000_000, 100, false, true, 8, None);
+        assert_eq!(d.backend, SolverKind::Bak);
+        let m = tiny_manifest();
+        let d = route(SolverKind::Auto, 200, 40, false, true, 1, Some(&m));
+        assert_eq!(d.backend, SolverKind::Bak);
+    }
+
+    #[test]
+    fn explicit_hint_kept_on_streamed_jobs() {
+        // Hints are contracts even for backends with no streaming path —
+        // those return a typed SolverError from the backends layer.
+        let d = route(SolverKind::Qr, 10_000, 10, false, true, 1, None);
+        assert_eq!(d.backend, SolverKind::Qr);
+        let d = route(SolverKind::Kaczmarz, 10_000, 10, false, true, 1, None);
+        assert_eq!(d.backend, SolverKind::Kaczmarz);
     }
 
     #[test]
     fn explicit_dense_only_hint_kept_on_sparse_jobs() {
         // The executor densifies (and counts densified_jobs); routing
         // honours the contract.
-        let d = route(SolverKind::Qr, 4096, 1024, true, 1, None);
+        let d = route(SolverKind::Qr, 4096, 1024, true, false, 1, None);
         assert_eq!(d.backend, SolverKind::Qr);
         assert_eq!(
-            route(SolverKind::Kaczmarz, 400, 20, true, 1, None).backend,
+            route(SolverKind::Kaczmarz, 400, 20, true, false, 1, None).backend,
             SolverKind::Kaczmarz
         );
     }

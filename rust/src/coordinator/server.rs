@@ -10,6 +10,13 @@
 //! `{"x_coo": {"rows": [i...], "cols": [j...], "vals": [v...]}}` — which
 //! are compressed to CSC and solved natively on sparse-capable backends
 //! (duplicate coordinates sum; indices are validated against obs/vars).
+//! File-backed systems replace it with `{"x_path": "/path/to/x.sbck"}`
+//! (a [`crate::stream`] chunked file; optional `"mem_budget"` bytes caps
+//! the prefetch buffer pool) — the payload stays on disk and the router
+//! picks a streaming-native backend.
+//! Malformed payloads get a structured error line carrying a stable
+//! `"error_kind"` discriminant (e.g. `"invalid_input"` for mismatched
+//! `x_coo` triplet lengths) instead of a dropped connection.
 //! Response (one line):
 //! ```json
 //! {"id": 1, "ok": true, "backend": "bak", "a": [...],
@@ -26,10 +33,11 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use crate::api::SolverKind;
+use crate::api::{SolverError, SolverKind};
 use crate::linalg::Mat;
 use crate::solver::SolveOptions;
 use crate::sparse::{CooBuilder, CscMat};
+use crate::stream::StreamedMatrix;
 use crate::util::json::{Json, ObjBuilder};
 
 use super::request::{SharedMatrix, SolveRequest};
@@ -165,6 +173,7 @@ fn handle_line(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
         Err(e) => {
             return ObjBuilder::new()
                 .bool("ok", false)
+                .str("error_kind", "bad_json")
                 .str("error", format!("bad json: {e}"))
                 .build()
         }
@@ -201,14 +210,34 @@ fn handle_line(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
                         .num("batch_size", out.batch_size as f64)
                         .build()
                 }
-                Err(e) => ObjBuilder::new()
-                    .bool("ok", false)
-                    .num("id", id as f64)
-                    .str("error", e.to_string())
-                    .build(),
+                Err(e) => error_json(Some(id), &e),
             }
         }
-        Err(e) => ObjBuilder::new().bool("ok", false).str("error", e).build(),
+        Err(e) => error_json(None, &SolverError::InvalidInput(e)),
+    }
+}
+
+/// A structured error line: stable `error_kind` discriminant plus the
+/// human-readable message, so clients can branch without parsing prose.
+fn error_json(id: Option<u64>, e: &SolverError) -> Json {
+    let mut b = ObjBuilder::new().bool("ok", false);
+    if let Some(id) = id {
+        b = b.num("id", id as f64);
+    }
+    b.str("error_kind", error_kind(e)).str("error", e.to_string()).build()
+}
+
+fn error_kind(e: &SolverError) -> &'static str {
+    match e {
+        SolverError::Shape(_) => "shape",
+        SolverError::NonFinite { .. } => "non_finite",
+        SolverError::NeedsSquare { .. } => "needs_square",
+        SolverError::RankDeficient { .. } => "rank_deficient",
+        SolverError::Unavailable { .. } => "unavailable",
+        SolverError::UnknownKind(_) => "unknown_kind",
+        SolverError::Backend { .. } => "backend",
+        SolverError::Service(_) => "service",
+        SolverError::InvalidInput(_) => "invalid_input",
     }
 }
 
@@ -225,10 +254,24 @@ fn parse_solve(j: &Json) -> Result<SolveRequest, String> {
         return Err("y contains non-numbers".into());
     }
 
-    let matrix = if let Some(coo) = j.get("x_coo") {
+    let matrix = if let Some(p) = j.get("x_path").and_then(Json::as_str) {
+        let mut s =
+            StreamedMatrix::open(p).map_err(|e| format!("x_path '{p}': {e}"))?;
+        if let Some(b) = j.get("mem_budget").and_then(Json::as_usize) {
+            s = s.with_budget(b);
+        }
+        if s.shape() != (obs, vars) {
+            return Err(format!(
+                "x_path matrix is {}x{}, request says {obs}x{vars}",
+                s.rows(),
+                s.cols()
+            ));
+        }
+        SharedMatrix::Streamed(Arc::new(s))
+    } else if let Some(coo) = j.get("x_coo") {
         SharedMatrix::SparseCsc(Arc::new(parse_coo(coo, obs, vars)?))
     } else {
-        let xs = j.get("x").map(Json::items).ok_or("missing x (or x_coo)")?;
+        let xs = j.get("x").map(Json::items).ok_or("missing x (or x_coo / x_path)")?;
         if xs.len() != obs * vars {
             return Err(format!("x has {} values, want {}", xs.len(), obs * vars));
         }
@@ -417,6 +460,72 @@ mod tests {
             m.get("backend_jobs").unwrap().get("qr").unwrap().as_f64(),
             Some(1.0)
         );
+        server.stop();
+    }
+
+    #[test]
+    fn streamed_solve_over_tcp_with_x_path() {
+        let (_c, server) = start();
+        // Plant a 60x4 system, write it as a chunked file, solve by path.
+        let mut rng = crate::util::rng::Rng::seed(77);
+        let x = Mat::randn(&mut rng, 60, 4);
+        let a_true = [1.5f32, -0.5, 2.0, 0.25];
+        let y = x.matvec(&a_true);
+        let path = crate::stream::temp_chunk_path("server_xpath");
+        crate::stream::write_chunked_dense(&x, 3, &path).expect("write chunked");
+        let ys: Vec<String> = y.iter().map(|v| format!("{v}")).collect();
+        let req = format!(
+            r#"{{"id": 11, "obs": 60, "vars": 4, "x_path": "{}",
+               "mem_budget": 4096, "y": [{}], "sweeps": 2000, "tol": 1e-10}}"#,
+            path.display(),
+            ys.join(",")
+        )
+        .replace('\n', " ");
+        let j = roundtrip(server.addr(), &req);
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true), "{j:?}");
+        // Auto + streamed routes to the streaming-native BAK.
+        assert_eq!(j.get("backend").unwrap().as_str(), Some("bak"));
+        let a = j.get("a").unwrap().items();
+        for (got, want) in a.iter().zip(a_true) {
+            assert!((got.as_f64().unwrap() - want as f64).abs() < 1e-3);
+        }
+        // The metrics snapshot shows disk reads from the streamed job.
+        let m = roundtrip(server.addr(), r#"{"cmd": "metrics"}"#);
+        assert!(m.get("stream_chunks_read").unwrap().as_f64().unwrap() > 0.0);
+        assert!(m.get("stream_bytes_read").unwrap().as_f64().unwrap() > 0.0);
+        assert!(m.get("stream_buffer_stalls").is_some());
+        server.stop();
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn missing_x_path_file_reported() {
+        let (_c, server) = start();
+        let req = r#"{"id": 12, "obs": 4, "vars": 2,
+            "x_path": "/nonexistent/no_such_file.sbck", "y": [0, 0, 0, 0]}"#
+            .replace('\n', " ");
+        let j = roundtrip(server.addr(), &req);
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("error_kind").unwrap().as_str(), Some("invalid_input"));
+        assert!(j.get("error").unwrap().as_str().unwrap().contains("x_path"));
+        server.stop();
+    }
+
+    #[test]
+    fn mismatched_coo_lengths_get_structured_invalid_input() {
+        // Satellite contract: self-contradictory x_coo payloads (rows,
+        // cols, vals of different lengths) produce a typed error line,
+        // not a dropped connection.
+        let (_c, server) = start();
+        let req = r#"{"id": 13, "obs": 3, "vars": 2,
+            "x_coo": {"rows": [0, 1], "cols": [0], "vals": [1.0]},
+            "y": [0, 0, 0]}"#
+            .replace('\n', " ");
+        let j = roundtrip(server.addr(), &req);
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("error_kind").unwrap().as_str(), Some("invalid_input"));
+        let msg = j.get("error").unwrap().as_str().unwrap();
+        assert!(msg.contains("triplet length mismatch"), "{msg}");
         server.stop();
     }
 

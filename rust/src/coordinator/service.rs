@@ -288,6 +288,7 @@ fn run_job(env: JobEnvelope, engine: Option<&Arc<Engine>>, metrics: &Metrics) {
         job.x.rows(),
         job.x.cols(),
         job.x.is_sparse(),
+        job.x.is_streamed(),
         job.opts.threads,
         engine.map(|e| e.manifest()),
     );
@@ -312,7 +313,9 @@ fn run_job(env: JobEnvelope, engine: Option<&Arc<Engine>>, metrics: &Metrics) {
 /// matrix representation first: sparse jobs run natively on backends whose
 /// `supports_sparse` capability is set; for every other backend the matrix
 /// is densified once per job (logged + counted in `densified_jobs`) and
-/// the dense path below takes over.
+/// the dense path below takes over. Streamed (file-backed) jobs run the
+/// chunk-pass solvers for the streaming trio and are never densified —
+/// non-streaming backends return a typed error instead.
 fn execute_job(
     job: &SolveJob,
     backend: SolverKind,
@@ -387,6 +390,83 @@ fn execute_job(
                 );
                 let dense = s.to_dense();
                 execute_dense_job(job, &dense, backend, engine)
+            }
+        }
+        SharedMatrix::Streamed(s) => {
+            // File-backed jobs never materialise X in RAM: the streaming
+            // trio consumes sequential chunk passes (recording the
+            // read/stall counters), and every other backend returns its
+            // typed refusal from the backends layer instead of OOMing.
+            let record = |st: &crate::stream::StreamStatsSnapshot| {
+                use std::sync::atomic::Ordering::Relaxed;
+                metrics.stream_chunks_read.fetch_add(st.chunks_read, Relaxed);
+                metrics.stream_bytes_read.fetch_add(st.bytes_read, Relaxed);
+                metrics.stream_buffer_stalls.fetch_add(st.buffer_stalls, Relaxed);
+            };
+            match backend {
+                SolverKind::Bak => per_member(job, backend, |y| {
+                    let r = crate::stream::solve_bak_stream(s, y, &job.opts)?;
+                    record(&r.stats);
+                    Ok(r.report)
+                }),
+                SolverKind::Kaczmarz => per_member(job, backend, |y| {
+                    let r = crate::stream::solve_kaczmarz_stream(s, y, &job.opts)?;
+                    record(&r.stats);
+                    Ok(r.report)
+                }),
+                SolverKind::BakMulti => {
+                    // Every valid member in ONE set of chunk passes
+                    // (mirrors the dense multi path); invalid members get
+                    // their own error without demoting the batch.
+                    let t0 = Instant::now();
+                    let checks: Vec<Result<(), SolverError>> = job
+                        .members
+                        .iter()
+                        .map(|(_, y)| Problem::new_streamed(s, y).map(|_| ()))
+                        .collect();
+                    let ys: Vec<Vec<f32>> = job
+                        .members
+                        .iter()
+                        .zip(&checks)
+                        .filter(|(_, c)| c.is_ok())
+                        .map(|((_, y), _)| y.clone())
+                        .collect();
+                    match crate::stream::solve_bak_multi_stream(s, &ys, &job.opts) {
+                        Ok(multi) => {
+                            record(&multi.stats);
+                            let mut reports = multi.reports.into_iter();
+                            let secs =
+                                t0.elapsed().as_secs_f64() / job.len().max(1) as f64;
+                            checks
+                                .into_iter()
+                                .map(|c| SolveOutcome {
+                                    id: 0,
+                                    report: c.map(|()| {
+                                        reports
+                                            .next()
+                                            .expect("one report per valid member")
+                                    }),
+                                    backend,
+                                    seconds: secs,
+                                    batch_size: 0,
+                                })
+                                .collect()
+                        }
+                        Err(e) => per_member(job, backend, |_| Err(e.clone())),
+                    }
+                }
+                _ => match solver_for(backend) {
+                    Some(solver) => per_member(job, backend, |y| {
+                        let p = Problem::new_streamed(s, y)?;
+                        solver.solve(&p, &job.opts)
+                    }),
+                    None => per_member(job, backend, |_| {
+                        Err(SolverError::Unavailable {
+                            backend: backend.to_string(),
+                            reason: "routing pseudo-kind; not directly executable".into(),
+                        })
+                    }),
+                },
             }
         }
     }
@@ -813,6 +893,93 @@ mod tests {
             1,
             "densification counted once for the whole job"
         );
+    }
+
+    fn planted_streamed(
+        seed: u64,
+        obs: usize,
+        vars: usize,
+        chunk: usize,
+        tag: &str,
+    ) -> (Arc<crate::stream::StreamedMatrix>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::seed(seed);
+        let x = Mat::randn(&mut rng, obs, vars);
+        let a: Vec<f32> = (0..vars).map(|_| rng.normal_f32()).collect();
+        let y = x.matvec(&a);
+        let path = crate::stream::temp_chunk_path(tag);
+        crate::stream::write_chunked_dense(&x, chunk, &path).expect("write chunked");
+        let s = crate::stream::StreamedMatrix::open(&path).expect("open chunked");
+        (Arc::new(s), y, a)
+    }
+
+    #[test]
+    fn streamed_auto_routes_to_bak_and_counts_stream_metrics() {
+        let coord = Coordinator::start(CoordinatorConfig::default());
+        let (x, y, a_true) = planted_streamed(420, 600, 30, 7, "svc_auto");
+        let path = x.path().to_path_buf();
+        let mut req = SolveRequest::new_streamed(1, x, y);
+        req.opts = solver::SolveOptions::accurate();
+        let out = coord.solve_blocking(req);
+        assert_eq!(out.backend, SolverKind::Bak);
+        let rep = out.report.expect("streamed solve ok");
+        assert!(crate::util::stats::rel_l2(&rep.a, &a_true) < 1e-3);
+        let m = coord.metrics();
+        use std::sync::atomic::Ordering::Relaxed;
+        assert!(m.stream_chunks_read.load(Relaxed) > 0);
+        assert!(m.stream_bytes_read.load(Relaxed) > 0);
+        assert_eq!(m.densified_jobs.load(Relaxed), 0);
+        coord.shutdown();
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn streamed_job_on_non_streaming_backend_gets_typed_error() {
+        let coord = Coordinator::start(CoordinatorConfig::default());
+        let (x, y, _) = planted_streamed(421, 120, 10, 4, "svc_refuse");
+        let path = x.path().to_path_buf();
+        let mut req = SolveRequest::new_streamed(2, x, y);
+        req.backend = SolverKind::Qr;
+        let out = coord.solve_blocking(req);
+        assert_eq!(out.backend, SolverKind::Qr, "hint honoured through routing");
+        match out.report {
+            Err(SolverError::Unavailable { backend, .. }) => assert_eq!(backend, "qr"),
+            other => panic!("expected typed Unavailable, got {other:?}"),
+        }
+        assert_eq!(
+            coord.metrics().densified_jobs.load(std::sync::atomic::Ordering::Relaxed),
+            0,
+            "streamed jobs are never densified"
+        );
+        coord.shutdown();
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn streamed_multi_batch_all_answered_in_one_walk() {
+        let (x, _, _) = planted_streamed(422, 200, 12, 5, "svc_multi");
+        let path = x.path().to_path_buf();
+        let mut rng = Rng::seed(423);
+        let members: Vec<(u64, Vec<f32>)> = (0..4u64)
+            .map(|i| {
+                let a: Vec<f32> = (0..12).map(|_| rng.normal_f32()).collect();
+                let y = x.to_mat().unwrap().matvec(&a);
+                (i, y)
+            })
+            .collect();
+        let job = super::super::request::SolveJob {
+            x: super::super::request::SharedMatrix::Streamed(x),
+            members,
+            opts: solver::SolveOptions::accurate(),
+            backend: SolverKind::BakMulti,
+        };
+        let metrics = Metrics::new();
+        let outcomes = execute_job(&job, SolverKind::BakMulti, None, &metrics);
+        assert_eq!(outcomes.len(), 4);
+        assert!(outcomes.iter().all(|o| o.report.is_ok()));
+        assert!(
+            metrics.stream_chunks_read.load(std::sync::atomic::Ordering::Relaxed) > 0
+        );
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

@@ -130,12 +130,59 @@
 //! the coordinator sizes its worker pool the same way (`--workers`). The
 //! router prefers the parallel variants automatically when a request asks
 //! for `threads > 1`.
+//!
+//! ## Out-of-core streaming
+//!
+//! Algorithm 1 walks the matrix one column at a time, so X never needs to
+//! be resident: the [`stream`] module stores it as a chunked on-disk file
+//! (`.sbck`: versioned header + f32-LE column-major chunks, see
+//! [`stream::format`]) and a prefetch thread double-buffers chunks into a
+//! pool capped at a byte budget while the solver consumes the previous
+//! one. [`stream::solve_bak_stream`], [`stream::solve_kaczmarz_stream`],
+//! and [`stream::solve_bak_multi_stream`] are bit-identical to their
+//! in-memory counterparts for the same seed — only the residency changes:
+//!
+//! ```no_run
+//! use solvebak::api::{solver_for, Problem, SolverKind};
+//! use solvebak::linalg::Mat;
+//! use solvebak::solver::SolveOptions;
+//! use solvebak::stream::{write_chunked_dense, StreamedMatrix};
+//! use solvebak::util::rng::Rng;
+//! use std::path::Path;
+//!
+//! // Convert once (or out-of-core via `stream::write_chunked_with`, or
+//! // from the shell: `solvebak convert --obs 1e6 --vars 200 --out x.sbck`).
+//! let mut rng = Rng::seed(42);
+//! let x = Mat::randn(&mut rng, 10_000, 64);
+//! let y = x.matvec(&vec![0.5; 64]);
+//! write_chunked_dense(&x, 16, Path::new("x.sbck")).expect("convert");
+//!
+//! // Solve with only `mem_budget` bytes of X resident at a time.
+//! let sm = StreamedMatrix::open("x.sbck").expect("header validated")
+//!     .with_budget(8 << 20);
+//! let problem = Problem::new_streamed(&sm, &y).expect("validated");
+//! let solver = solver_for(SolverKind::Bak).expect("registered");
+//! let report = solver.solve(&problem, &SolveOptions::default()).expect("solves");
+//! assert!(report.rel_residual() < 1e-4);
+//! ```
+//!
+//! `bak`, `bak_multi`, and `kaczmarz` run file-backed problems natively
+//! (capability flag `supports_streaming`); any other backend returns a
+//! typed [`SolverError::Unavailable`] instead of silently loading the file
+//! into RAM — streamed jobs are never densified. The coordinator accepts
+//! `{"x_path": "x.sbck", "mem_budget": 8388608}` over the wire (routing
+//! `auto` to BAK) and exports `stream_chunks_read` / `stream_bytes_read` /
+//! `stream_buffer_stalls` metrics; the CLI front-end is
+//! `solvebak solve --x-file x.sbck --mem-budget 8388608`. The CI
+//! `stream-smoke` job holds the acceptance bar: a 96 MiB matrix solved
+//! under an 8 MiB budget with peak RSS checked against budget + slack.
 
 pub mod util;
 pub mod linalg;
 pub mod sparse;
 pub mod baselines;
 pub mod solver;
+pub mod stream;
 pub mod parallel;
 pub mod api;
 pub mod runtime;

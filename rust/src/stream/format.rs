@@ -1,0 +1,567 @@
+//! The on-disk chunked matrix format and its reader/writer.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! offset  0: magic  b"SBCK"                  (4 bytes)
+//! offset  4: format version                  (1 byte, currently 1)
+//! offset  5: reserved zero padding           (3 bytes)
+//! offset  8: rows       u64
+//! offset 16: cols       u64
+//! offset 24: chunk_cols u64   (columns per chunk; last chunk may be narrower)
+//! offset 32: payload — rows*cols f32 values, column-major, i.e. the exact
+//!            byte image of [`Mat::as_slice`] split into groups of
+//!            `chunk_cols` consecutive whole columns
+//! ```
+//!
+//! Whole-column chunks are the point: a chunk-resident column is the same
+//! contiguous `&[f32]` slice the in-memory solvers feed to
+//! [`crate::linalg::blas1`], so the streamed inner steps replay the
+//! identical f32 operations (see [`super::solve`]).
+//!
+//! The version byte is the compatibility contract: readers reject any
+//! version they do not know (see CONTRIBUTING.md); bump it on any layout
+//! change.
+
+use std::fs::File;
+use std::io::{self, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use crate::linalg::{blas1, Mat};
+use crate::sparse::CscMat;
+
+/// File magic: "SolveBak ChunKs".
+pub const MAGIC: [u8; 4] = *b"SBCK";
+/// Current format version (the byte at offset 4).
+pub const FORMAT_VERSION: u8 = 1;
+/// Header length in bytes; the payload starts here.
+pub const HEADER_LEN: u64 = 32;
+/// Default buffer-pool byte budget when the caller does not set one.
+pub const DEFAULT_MEM_BUDGET: usize = 8 << 20; // 8 MiB
+
+/// Chunk width targeting ~1 MiB chunks: small enough that the
+/// double-buffered pool fits comfortable budgets, large enough that reads
+/// are sequential-friendly.
+pub fn default_chunk_cols(rows: usize, cols: usize) -> usize {
+    let per_col = (rows * 4).max(1);
+    ((1usize << 20) / per_col).clamp(1, cols.max(1))
+}
+
+fn invalid(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+fn write_header(w: &mut impl Write, rows: usize, cols: usize, chunk_cols: usize) -> io::Result<()> {
+    w.write_all(&MAGIC)?;
+    w.write_all(&[FORMAT_VERSION, 0, 0, 0])?;
+    w.write_all(&(rows as u64).to_le_bytes())?;
+    w.write_all(&(cols as u64).to_le_bytes())?;
+    w.write_all(&(chunk_cols as u64).to_le_bytes())?;
+    Ok(())
+}
+
+/// Write a chunked file whose columns are produced on the fly:
+/// `fill(start_col, width, buf)` must fill `buf` (rows*width, column-major)
+/// with columns [start_col, start_col+width). This is the out-of-core
+/// generation path — peak memory is one chunk, never the full matrix.
+pub fn write_chunked_with(
+    path: &Path,
+    rows: usize,
+    cols: usize,
+    chunk_cols: usize,
+    mut fill: impl FnMut(usize, usize, &mut [f32]),
+) -> io::Result<()> {
+    assert!(chunk_cols >= 1, "chunk_cols must be >= 1");
+    let mut w = BufWriter::new(File::create(path)?);
+    write_header(&mut w, rows, cols, chunk_cols)?;
+    let mut buf = vec![0.0f32; rows * chunk_cols];
+    let mut bytes = Vec::with_capacity(rows * chunk_cols * 4);
+    let mut j0 = 0;
+    while j0 < cols {
+        let width = chunk_cols.min(cols - j0);
+        let chunk = &mut buf[..rows * width];
+        chunk.fill(0.0);
+        fill(j0, width, chunk);
+        bytes.clear();
+        for &v in chunk.iter() {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(&bytes)?;
+        j0 += width;
+    }
+    w.flush()
+}
+
+/// Convert an in-memory dense matrix to a chunked file.
+pub fn write_chunked_dense(x: &Mat, chunk_cols: usize, path: &Path) -> io::Result<()> {
+    let (rows, _) = x.shape();
+    write_chunked_with(path, x.rows(), x.cols(), chunk_cols, |j0, width, buf| {
+        buf.copy_from_slice(&x.as_slice()[j0 * rows..(j0 + width) * rows]);
+    })
+}
+
+/// Convert a sparse (CSC) matrix to a chunked (dense-payload) file. COO
+/// inputs go through [`crate::sparse::CooBuilder`] first, which validates
+/// triplets and sums duplicates.
+pub fn write_chunked_csc(x: &CscMat, chunk_cols: usize, path: &Path) -> io::Result<()> {
+    let rows = x.rows();
+    write_chunked_with(path, rows, x.cols(), chunk_cols, |j0, width, buf| {
+        for l in 0..width {
+            let (idx, vals) = x.col(j0 + l);
+            for (&i, &v) in idx.iter().zip(vals) {
+                buf[l * rows + i] = v;
+            }
+        }
+    })
+}
+
+/// Write a raw f32-LE vector sidecar (the CLI's `<x>.y` right-hand side).
+pub fn write_vec_f32(path: &Path, v: &[f32]) -> io::Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    let mut bytes = Vec::with_capacity(v.len() * 4);
+    for &x in v {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&bytes)?;
+    w.flush()
+}
+
+/// Read a raw f32-LE vector sidecar written by [`write_vec_f32`].
+pub fn read_vec_f32(path: &Path) -> io::Result<Vec<f32>> {
+    let bytes = std::fs::read(path)?;
+    if bytes.len() % 4 != 0 {
+        return Err(invalid(format!("{}: length {} not a multiple of 4", path.display(), bytes.len())));
+    }
+    Ok(bytes.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect())
+}
+
+/// Handle to an on-disk chunked matrix: the header metadata plus the
+/// buffer-pool byte budget used when streaming it. Cheap to clone/share;
+/// actual I/O happens through [`StreamedMatrix::reader`] /
+/// [`super::ChunkStream`].
+#[derive(Debug)]
+pub struct StreamedMatrix {
+    path: PathBuf,
+    rows: usize,
+    cols: usize,
+    chunk_cols: usize,
+    /// Buffer-pool byte budget; 0 means [`DEFAULT_MEM_BUDGET`].
+    mem_budget: usize,
+}
+
+impl StreamedMatrix {
+    /// Open and validate a chunked file (magic, version, payload length).
+    pub fn open(path: impl AsRef<Path>) -> io::Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let mut f = File::open(&path)?;
+        let mut header = [0u8; HEADER_LEN as usize];
+        f.read_exact(&mut header)
+            .map_err(|_| invalid(format!("{}: truncated header", path.display())))?;
+        if header[..4] != MAGIC {
+            return Err(invalid(format!("{}: not a chunked matrix (bad magic)", path.display())));
+        }
+        if header[4] != FORMAT_VERSION {
+            return Err(invalid(format!(
+                "{}: unsupported chunk format version {} (expected {FORMAT_VERSION})",
+                path.display(),
+                header[4]
+            )));
+        }
+        let u64_at = |o: usize| u64::from_le_bytes(header[o..o + 8].try_into().unwrap());
+        let (rows, cols, chunk_cols) = (u64_at(8) as usize, u64_at(16) as usize, u64_at(24) as usize);
+        if cols > 0 && chunk_cols == 0 {
+            return Err(invalid(format!("{}: chunk_cols must be >= 1", path.display())));
+        }
+        let want = HEADER_LEN + (rows * cols * 4) as u64;
+        let got = f.metadata()?.len();
+        if got != want {
+            return Err(invalid(format!(
+                "{}: payload length mismatch (file {got} bytes, header implies {want})",
+                path.display()
+            )));
+        }
+        Ok(Self { path, rows, cols, chunk_cols: chunk_cols.max(1), mem_budget: 0 })
+    }
+
+    /// Set the buffer-pool byte budget (0 restores the default).
+    pub fn with_budget(mut self, bytes: usize) -> Self {
+        self.mem_budget = bytes;
+        self
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// (rows, cols).
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Columns per chunk (the last chunk may be narrower).
+    #[inline]
+    pub fn chunk_cols(&self) -> usize {
+        self.chunk_cols
+    }
+
+    /// Number of chunks; `cols` is never padded, so an exact divisor means
+    /// no empty trailing chunk.
+    #[inline]
+    pub fn num_chunks(&self) -> usize {
+        if self.cols == 0 { 0 } else { self.cols.div_ceil(self.chunk_cols) }
+    }
+
+    /// Width (columns) of chunk `c`.
+    #[inline]
+    pub fn chunk_width(&self, c: usize) -> usize {
+        debug_assert!(c < self.num_chunks());
+        self.chunk_cols.min(self.cols - c * self.chunk_cols)
+    }
+
+    /// Payload bytes of the full matrix (what an in-memory [`Mat`] would
+    /// occupy).
+    pub fn nbytes(&self) -> usize {
+        self.rows * self.cols * 4
+    }
+
+    /// Effective buffer-pool budget in bytes.
+    pub fn mem_budget(&self) -> usize {
+        if self.mem_budget == 0 { DEFAULT_MEM_BUDGET } else { self.mem_budget }
+    }
+
+    /// Open a sequential chunk reader over this file.
+    pub fn reader(&self) -> io::Result<FileChunkSource> {
+        FileChunkSource::open(self)
+    }
+
+    /// One synchronous pass over every chunk in order (no prefetch thread);
+    /// `f(start_col, width, data)` sees rows×width column-major data.
+    pub fn for_each_chunk(&self, mut f: impl FnMut(usize, usize, &[f32])) -> io::Result<()> {
+        let mut src = self.reader()?;
+        let mut buf = Vec::new();
+        for c in 0..self.num_chunks() {
+            let width = src.read_chunk(c, &mut buf)?;
+            f(c * self.chunk_cols, width, &buf);
+        }
+        Ok(())
+    }
+
+    /// Materialise the full matrix in memory. This defeats the purpose of
+    /// streaming — it exists for tests, conversion round-trips, and the
+    /// explicit [`crate::api::MatrixRef::to_dense`] escape hatch.
+    pub fn to_mat(&self) -> io::Result<Mat> {
+        let mut data = vec![0.0f32; self.rows * self.cols];
+        self.for_each_chunk(|j0, _width, chunk| {
+            data[j0 * self.rows..j0 * self.rows + chunk.len()].copy_from_slice(chunk);
+        })?;
+        Ok(Mat::from_col_major(self.rows, self.cols, data))
+    }
+
+    /// y = X a by streaming column accumulation — the same per-element
+    /// `mul_add` order as the in-memory [`crate::linalg::blas2::gemv`].
+    /// Panics on I/O errors (use the solver entry points for typed errors).
+    pub fn matvec(&self, a: &[f32]) -> Vec<f32> {
+        assert_eq!(a.len(), self.cols, "matvec dim mismatch");
+        let mut acc = vec![0.0f32; self.rows];
+        self.for_each_chunk(|j0, width, chunk| {
+            for l in 0..width {
+                let aj = a[j0 + l];
+                if aj != 0.0 {
+                    blas1::axpy(aj, &chunk[l * self.rows..(l + 1) * self.rows], &mut acc);
+                }
+            }
+        })
+        .expect("streamed matvec: chunk read failed");
+        acc
+    }
+
+    /// out = Xᵀ v by streaming per-column dots. Panics on I/O errors.
+    pub fn matvec_t(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(v.len(), self.rows, "matvec_t dim mismatch");
+        let mut out = vec![0.0f32; self.cols];
+        self.for_each_chunk(|j0, width, chunk| {
+            for l in 0..width {
+                out[j0 + l] = blas1::dot(&chunk[l * self.rows..(l + 1) * self.rows], v);
+            }
+        })
+        .expect("streamed matvec_t: chunk read failed");
+        out
+    }
+
+    /// <x_j, x_j> for every column — bit-identical to
+    /// [`Mat::colnorms_sq`] (same `nrm2_sq` on the same column slices).
+    /// Panics on I/O errors.
+    pub fn colnorms_sq(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cols];
+        self.for_each_chunk(|j0, width, chunk| {
+            for l in 0..width {
+                out[j0 + l] = blas1::nrm2_sq(&chunk[l * self.rows..(l + 1) * self.rows]);
+            }
+        })
+        .expect("streamed colnorms_sq: chunk read failed");
+        out
+    }
+}
+
+/// A source of column-major chunks, read by index. The prefetch pipeline
+/// ([`super::ChunkStream`]) drives one of these from its reader thread;
+/// synchronous passes use it directly.
+pub trait ChunkSource: Send {
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+    /// Columns per chunk (last chunk may be narrower).
+    fn chunk_cols(&self) -> usize;
+    fn num_chunks(&self) -> usize {
+        if self.cols() == 0 { 0 } else { self.cols().div_ceil(self.chunk_cols().max(1)) }
+    }
+    /// Fill `buf` with chunk `c` (column-major, rows × width) and return
+    /// the chunk's width.
+    fn read_chunk(&mut self, c: usize, buf: &mut Vec<f32>) -> io::Result<usize>;
+}
+
+/// [`ChunkSource`] over a chunked file: seek + buffered `read_exact` per
+/// chunk (std-only; no mmap in the offline toolchain).
+pub struct FileChunkSource {
+    file: File,
+    rows: usize,
+    cols: usize,
+    chunk_cols: usize,
+    /// Reused raw-byte scratch for one chunk.
+    scratch: Vec<u8>,
+}
+
+impl FileChunkSource {
+    fn open(m: &StreamedMatrix) -> io::Result<Self> {
+        Ok(Self {
+            file: File::open(m.path())?,
+            rows: m.rows(),
+            cols: m.cols(),
+            chunk_cols: m.chunk_cols(),
+            scratch: Vec::new(),
+        })
+    }
+}
+
+impl ChunkSource for FileChunkSource {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn chunk_cols(&self) -> usize {
+        self.chunk_cols
+    }
+
+    fn read_chunk(&mut self, c: usize, buf: &mut Vec<f32>) -> io::Result<usize> {
+        assert!(c < self.num_chunks(), "chunk {c} out of range");
+        let start_col = c * self.chunk_cols;
+        let width = self.chunk_cols.min(self.cols - start_col);
+        let nbytes = self.rows * width * 4;
+        self.scratch.resize(nbytes, 0);
+        self.file
+            .seek(SeekFrom::Start(HEADER_LEN + (start_col * self.rows * 4) as u64))?;
+        self.file.read_exact(&mut self.scratch)?;
+        buf.clear();
+        buf.reserve(self.rows * width);
+        buf.extend(
+            self.scratch
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])),
+        );
+        Ok(width)
+    }
+}
+
+/// A fresh temp-file path for tests and synthetic conversions (unique per
+/// process + call; no external tempfile crate offline).
+pub fn temp_chunk_path(tag: &str) -> PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("solvebak_{tag}_{}_{n}.sbck", std::process::id()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CooBuilder;
+    use crate::util::rng::Rng;
+
+    fn randmat(seed: u64, rows: usize, cols: usize) -> Mat {
+        let mut rng = Rng::seed(seed);
+        Mat::randn(&mut rng, rows, cols)
+    }
+
+    fn roundtrip(rows: usize, cols: usize, chunk: usize) -> (Mat, StreamedMatrix, PathBuf) {
+        let x = randmat(1000 + rows as u64 + cols as u64 + chunk as u64, rows, cols);
+        let path = temp_chunk_path("fmt");
+        write_chunked_dense(&x, chunk, &path).unwrap();
+        let m = StreamedMatrix::open(&path).unwrap();
+        (x, m, path)
+    }
+
+    #[test]
+    fn dense_roundtrip_exact() {
+        for &(rows, cols, chunk) in &[(11usize, 7usize, 3usize), (5, 5, 5), (8, 6, 2), (3, 1, 1)] {
+            let (x, m, path) = roundtrip(rows, cols, chunk);
+            assert_eq!(m.shape(), (rows, cols));
+            assert_eq!(m.to_mat().unwrap(), x, "rows={rows} cols={cols} chunk={chunk}");
+            let _ = std::fs::remove_file(path);
+        }
+    }
+
+    #[test]
+    fn chunk_count_indivisible_width() {
+        // 7 cols, chunk 3 -> widths 3, 3, 1.
+        let (_, m, path) = roundtrip(4, 7, 3);
+        assert_eq!(m.num_chunks(), 3);
+        assert_eq!(m.chunk_width(0), 3);
+        assert_eq!(m.chunk_width(1), 3);
+        assert_eq!(m.chunk_width(2), 1);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn chunk_count_exact_divisor_has_no_empty_trailing_chunk() {
+        let (_, m, path) = roundtrip(4, 6, 3);
+        assert_eq!(m.num_chunks(), 2);
+        assert_eq!(m.chunk_width(0), 3);
+        assert_eq!(m.chunk_width(1), 3);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn single_chunk_matrix() {
+        // chunk >= cols: everything in one chunk.
+        let (_, m, path) = roundtrip(5, 4, 9);
+        assert_eq!(m.num_chunks(), 1);
+        assert_eq!(m.chunk_width(0), 4);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn chunk_width_one_yields_one_chunk_per_column() {
+        let (x, m, path) = roundtrip(6, 5, 1);
+        assert_eq!(m.num_chunks(), 5);
+        let mut seen = Vec::new();
+        m.for_each_chunk(|j0, width, data| {
+            assert_eq!(width, 1);
+            assert_eq!(data, x.col(j0));
+            seen.push(j0);
+        })
+        .unwrap();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn csc_converter_matches_dense_payload() {
+        let mut b = CooBuilder::new(6, 4);
+        b.push(0, 0, 1.5);
+        b.push(5, 0, -2.0);
+        b.push(2, 2, 3.25);
+        b.push(2, 2, 0.75); // duplicate summed -> 4.0
+        b.push(1, 3, 7.0);
+        let csc = b.to_csc();
+        let path = temp_chunk_path("csc");
+        write_chunked_csc(&csc, 3, &path).unwrap();
+        let m = StreamedMatrix::open(&path).unwrap();
+        assert_eq!(m.to_mat().unwrap(), csc.to_dense());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn streamed_matvec_and_colnorms_match_dense() {
+        let (x, m, path) = roundtrip(16, 10, 4);
+        let a: Vec<f32> = (0..10).map(|i| (i as f32 - 4.5) * 0.3).collect();
+        assert_eq!(m.matvec(&a), x.matvec(&a));
+        let v: Vec<f32> = (0..16).map(|i| (i as f32).sin()).collect();
+        assert_eq!(m.matvec_t(&v), x.matvec_t(&v));
+        assert_eq!(m.colnorms_sq(), x.colnorms_sq());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn open_rejects_bad_magic_version_and_length() {
+        let (_, m, path) = roundtrip(3, 3, 2);
+        drop(m);
+        let good = std::fs::read(&path).unwrap();
+
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        std::fs::write(&path, &bad).unwrap();
+        assert!(StreamedMatrix::open(&path).is_err(), "bad magic accepted");
+
+        let mut bad = good.clone();
+        bad[4] = FORMAT_VERSION + 1;
+        std::fs::write(&path, &bad).unwrap();
+        let err = StreamedMatrix::open(&path).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+
+        let mut bad = good.clone();
+        bad.pop();
+        std::fs::write(&path, &bad).unwrap();
+        assert!(StreamedMatrix::open(&path).is_err(), "truncated payload accepted");
+
+        std::fs::write(&path, &good[..8]).unwrap();
+        assert!(StreamedMatrix::open(&path).is_err(), "truncated header accepted");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn write_chunked_with_streams_generation() {
+        // Generate column j = constant j without materialising the matrix.
+        let path = temp_chunk_path("gen");
+        write_chunked_with(&path, 4, 5, 2, |j0, width, buf| {
+            for l in 0..width {
+                buf[l * 4..(l + 1) * 4].fill((j0 + l) as f32);
+            }
+        })
+        .unwrap();
+        let m = StreamedMatrix::open(&path).unwrap();
+        let mat = m.to_mat().unwrap();
+        for j in 0..5 {
+            assert!(mat.col(j).iter().all(|&v| v == j as f32));
+        }
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn vec_sidecar_roundtrip() {
+        let path = temp_chunk_path("vec");
+        let v: Vec<f32> = vec![1.0, -2.5, 3.25, f32::MIN_POSITIVE];
+        write_vec_f32(&path, &v).unwrap();
+        assert_eq!(read_vec_f32(&path).unwrap(), v);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn default_chunk_cols_bounds() {
+        assert_eq!(default_chunk_cols(1 << 20, 100), 1); // huge rows -> 1 col
+        assert_eq!(default_chunk_cols(4, 3), 3); // tiny matrix -> all cols
+        assert!(default_chunk_cols(1024, 4096) >= 1);
+    }
+
+    #[test]
+    fn budget_defaults_and_override() {
+        let (_, m, path) = roundtrip(3, 3, 2);
+        assert_eq!(m.mem_budget(), DEFAULT_MEM_BUDGET);
+        let m = m.with_budget(1 << 16);
+        assert_eq!(m.mem_budget(), 1 << 16);
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -1,0 +1,44 @@
+//! Out-of-core streaming: solve systems whose X never fits in RAM.
+//!
+//! The paper's structural claim — each iteration "utilizes only one
+//! dimension of the given input matrix X" — means the solvers never need
+//! the whole operand resident. This module makes that real:
+//!
+//! * [`format`] — the `.sbck` on-disk tiled store: a 32-byte header
+//!   (magic `SBCK`, format version byte, rows/cols/chunk_cols) followed by
+//!   the f32-LE column-major payload in chunks of whole columns, written
+//!   from dense ([`write_chunked_dense`]), sparse ([`write_chunked_csc`]),
+//!   or generated chunk-at-a-time ([`write_chunked_with`]) without ever
+//!   materialising the matrix. [`StreamedMatrix`] is the typed handle;
+//!   [`ChunkSource`] abstracts the reader.
+//! * [`prefetch`] — the double-buffered pipeline: a reader thread fills a
+//!   budget-bounded pool of chunk buffers (backpressure via
+//!   [`crate::parallel::BoundedQueue`]) while the solver consumes the
+//!   previous chunk. Peak resident payload ≤ pool budget; I/O counters in
+//!   [`StreamStatsSnapshot`].
+//! * [`solve`] — [`solve_bak_stream`] / [`solve_kaczmarz_stream`] /
+//!   [`solve_bak_multi_stream`]: the existing per-column/per-row inner
+//!   steps over streamed chunks, **bit-identical** to the in-memory path
+//!   for the same seed (asserted with `assert_eq!` in the tests).
+//!
+//! Upstack: [`crate::api::MatrixRef::Streamed`] carries a
+//! `&StreamedMatrix` through [`crate::api::Problem`], backends advertise
+//! `supports_streaming` in their [`crate::api::Capabilities`], the
+//! coordinator accepts `{"x_path": "..."}` requests and exports
+//! `stream_*` metrics, and the CLI adds `convert` plus
+//! `solve --x-file --mem-budget`.
+
+pub mod format;
+pub mod prefetch;
+pub mod solve;
+
+pub use format::{
+    default_chunk_cols, read_vec_f32, temp_chunk_path, write_chunked_csc, write_chunked_dense,
+    write_chunked_with, write_vec_f32, ChunkSource, FileChunkSource, StreamedMatrix,
+    DEFAULT_MEM_BUDGET, FORMAT_VERSION, HEADER_LEN, MAGIC,
+};
+pub use prefetch::{Chunk, ChunkStream, StreamStats, StreamStatsSnapshot};
+pub use solve::{
+    solve_bak_multi_stream, solve_bak_stream, solve_kaczmarz_stream, StreamMultiReport,
+    StreamReport,
+};

@@ -1,0 +1,339 @@
+//! Double-buffered chunk prefetch: a reader thread fills chunk buffers
+//! from disk while the solver consumes the previous one.
+//!
+//! Backpressure and memory bounding both come from
+//! [`crate::parallel::BoundedQueue`]: a fixed pool of `n` chunk buffers
+//! circulates between a `recycle` queue (empty buffers, popped by the
+//! reader) and a `data` queue (filled chunks, popped by the solver).
+//! `n = clamp(budget / chunk_bytes, 2, 64)`, so peak resident payload is
+//! at most `n * chunk_bytes` — bounded by the buffer-pool byte budget
+//! (floor: two chunks, the minimum for double buffering) and measurable
+//! via `/proc/self/status` VmHWM (see [`crate::util::alloc::peak_rss_bytes`]).
+//!
+//! The reader loops over the file pass after pass (every consumer pass —
+//! colnorms, sweeps, gathers, residuals — reads all chunks in order), so
+//! solvers with data-dependent sweep counts just stop consuming and call
+//! [`ChunkStream::stop`]; the queues close and the reader exits at its
+//! next push/pop.
+
+use std::io;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::parallel::BoundedQueue;
+
+use super::format::{ChunkSource, StreamedMatrix};
+
+/// Cumulative I/O counters for one stream (exported by the coordinator as
+/// `stream_chunks_read` / `stream_bytes_read` / `stream_buffer_stalls`).
+#[derive(Debug, Default)]
+pub struct StreamStats {
+    chunks_read: AtomicU64,
+    bytes_read: AtomicU64,
+    buffer_stalls: AtomicU64,
+}
+
+impl StreamStats {
+    fn add_chunk(&self, bytes: u64) {
+        self.chunks_read.fetch_add(1, Ordering::Relaxed);
+        self.bytes_read.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    fn add_stall(&self) {
+        self.buffer_stalls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> StreamStatsSnapshot {
+        StreamStatsSnapshot {
+            chunks_read: self.chunks_read.load(Ordering::Relaxed),
+            bytes_read: self.bytes_read.load(Ordering::Relaxed),
+            buffer_stalls: self.buffer_stalls.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of [`StreamStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StreamStatsSnapshot {
+    /// Chunks delivered by the reader thread.
+    pub chunks_read: u64,
+    /// Payload bytes delivered.
+    pub bytes_read: u64,
+    /// Times the consumer found the data queue empty (reader behind —
+    /// I/O-bound phases show up here).
+    pub buffer_stalls: u64,
+}
+
+impl StreamStatsSnapshot {
+    /// Elementwise sum (for aggregating multi-stream solves).
+    pub fn merged(self, other: StreamStatsSnapshot) -> StreamStatsSnapshot {
+        StreamStatsSnapshot {
+            chunks_read: self.chunks_read + other.chunks_read,
+            bytes_read: self.bytes_read + other.bytes_read,
+            buffer_stalls: self.buffer_stalls + other.buffer_stalls,
+        }
+    }
+}
+
+/// One filled chunk: columns [start_col, start_col+width) of the matrix,
+/// column-major in `data` (rows × width). Return `data` to the pool with
+/// [`ChunkStream::recycle`] when done.
+pub struct Chunk {
+    pub index: usize,
+    pub start_col: usize,
+    pub width: usize,
+    pub data: Vec<f32>,
+}
+
+/// The prefetch pipeline handle owned by the consuming solver.
+pub struct ChunkStream {
+    rows: usize,
+    num_chunks: usize,
+    data: Arc<BoundedQueue<Chunk>>,
+    recycle: Arc<BoundedQueue<Vec<f32>>>,
+    stats: Arc<StreamStats>,
+    /// First I/O error hit by the reader (it closes `data` after storing).
+    error: Arc<Mutex<Option<io::Error>>>,
+    reader: Option<JoinHandle<()>>,
+    buffers: usize,
+}
+
+impl ChunkStream {
+    /// Spawn the reader thread over `m` with its configured byte budget.
+    pub fn start(m: &StreamedMatrix) -> io::Result<Self> {
+        let mut src = m.reader()?;
+        let rows = m.rows();
+        let chunk_cols = m.chunk_cols();
+        let num_chunks = m.num_chunks();
+        let chunk_bytes = (rows * chunk_cols * 4).max(1);
+        let buffers = (m.mem_budget() / chunk_bytes).clamp(2, 64);
+
+        let data = Arc::new(BoundedQueue::new(buffers));
+        let recycle = Arc::new(BoundedQueue::new(buffers));
+        for _ in 0..buffers {
+            recycle.try_push(Vec::new()).ok().expect("fresh recycle queue has room");
+        }
+        let stats = Arc::new(StreamStats::default());
+        let error = Arc::new(Mutex::new(None));
+
+        let reader = {
+            let (data, recycle) = (data.clone(), recycle.clone());
+            let (stats, error) = (stats.clone(), error.clone());
+            std::thread::Builder::new()
+                .name("chunk-prefetch".into())
+                .spawn(move || loop {
+                    if num_chunks == 0 {
+                        data.close();
+                        return;
+                    }
+                    for c in 0..num_chunks {
+                        let Some(mut buf) = recycle.pop() else { return }; // stopped
+                        match src.read_chunk(c, &mut buf) {
+                            Ok(width) => {
+                                stats.add_chunk((src.rows() * width * 4) as u64);
+                                let chunk = Chunk {
+                                    index: c,
+                                    start_col: c * src.chunk_cols(),
+                                    width,
+                                    data: buf,
+                                };
+                                if data.push(chunk).is_err() {
+                                    return; // stopped
+                                }
+                            }
+                            Err(e) => {
+                                *error.lock().unwrap() = Some(e);
+                                data.close();
+                                return;
+                            }
+                        }
+                    }
+                })
+                .expect("spawn chunk-prefetch thread")
+        };
+
+        Ok(Self {
+            rows,
+            num_chunks,
+            data,
+            recycle,
+            stats,
+            error,
+            reader: Some(reader),
+            buffers,
+        })
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Chunks per full pass over the matrix.
+    #[inline]
+    pub fn num_chunks(&self) -> usize {
+        self.num_chunks
+    }
+
+    /// Buffers in the pool (the budget-derived bound).
+    pub fn buffers(&self) -> usize {
+        self.buffers
+    }
+
+    /// Next chunk in pass order; `None` means the reader stopped on an
+    /// I/O error (see [`ChunkStream::take_error`]). Blocks when the reader
+    /// is behind, counting a buffer stall.
+    pub fn next(&self) -> Option<Chunk> {
+        if self.data.is_empty() {
+            self.stats.add_stall();
+        }
+        self.data.pop()
+    }
+
+    /// Return a consumed chunk's buffer to the pool.
+    pub fn recycle(&self, buf: Vec<f32>) {
+        let _ = self.recycle.try_push(buf); // only fails once stopped
+    }
+
+    pub fn stats(&self) -> StreamStatsSnapshot {
+        self.stats.snapshot()
+    }
+
+    /// The reader's I/O error, if it hit one.
+    pub fn take_error(&self) -> Option<io::Error> {
+        self.error.lock().unwrap().take()
+    }
+
+    /// Stop the reader and reclaim the thread.
+    pub fn stop(mut self) {
+        self.close_and_join();
+    }
+
+    fn close_and_join(&mut self) {
+        self.data.close();
+        self.recycle.close();
+        let _ = self.data.drain_now(); // free any in-flight buffers
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ChunkStream {
+    fn drop(&mut self) {
+        self.close_and_join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::stream::format::{temp_chunk_path, write_chunked_dense};
+    use crate::util::rng::Rng;
+
+    fn stream_over(rows: usize, cols: usize, chunk: usize, budget: usize) -> (Mat, ChunkStream, std::path::PathBuf) {
+        let mut rng = Rng::seed(42 + chunk as u64);
+        let x = Mat::randn(&mut rng, rows, cols);
+        let path = temp_chunk_path("pf");
+        write_chunked_dense(&x, chunk, &path).unwrap();
+        let m = StreamedMatrix::open(&path).unwrap().with_budget(budget);
+        let s = ChunkStream::start(&m).unwrap();
+        (x, s, path)
+    }
+
+    #[test]
+    fn delivers_chunks_in_pass_order_repeatedly() {
+        let (x, s, path) = stream_over(8, 7, 3, 1 << 20);
+        // Two full passes: indices cycle 0,1,2,0,1,2 with correct payloads.
+        for pass in 0..2 {
+            for c in 0..s.num_chunks() {
+                let ch = s.next().expect("reader alive");
+                assert_eq!(ch.index, c, "pass {pass}");
+                assert_eq!(ch.start_col, c * 3);
+                assert_eq!(ch.data.len(), 8 * ch.width);
+                assert_eq!(&ch.data[..], x.col_block(ch.start_col, ch.width));
+                s.recycle(ch.data);
+            }
+        }
+        let st = s.stats();
+        assert!(st.chunks_read >= 6);
+        assert!(st.bytes_read >= (8 * 7 * 4) as u64 * 2);
+        s.stop();
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn buffer_pool_respects_budget() {
+        // Budget of exactly 2 chunks -> 2 buffers (double buffering floor).
+        let chunk_bytes = 8 * 3 * 4;
+        let (_, s, path) = stream_over(8, 7, 3, 2 * chunk_bytes);
+        assert_eq!(s.buffers(), 2);
+        s.stop();
+        let _ = std::fs::remove_file(path);
+
+        // Large budget is capped.
+        let (_, s, path) = stream_over(8, 7, 3, usize::MAX / 2);
+        assert_eq!(s.buffers(), 64);
+        s.stop();
+        let _ = std::fs::remove_file(path);
+
+        // Sub-floor budget still gets the minimum 2 buffers.
+        let (_, s, path) = stream_over(8, 7, 3, 1);
+        assert_eq!(s.buffers(), 2);
+        s.stop();
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn stop_mid_pass_terminates_reader() {
+        let (_, s, path) = stream_over(16, 64, 1, 1 << 20);
+        let ch = s.next().unwrap();
+        s.recycle(ch.data);
+        s.stop(); // must not hang with 63 chunks undelivered
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn drop_without_stop_terminates_reader() {
+        let (_, s, path) = stream_over(16, 64, 1, 1 << 20);
+        drop(s);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn reader_error_surfaces_as_none_plus_error() {
+        let (_, s, path) = stream_over(8, 6, 2, 1 << 20);
+        // Truncate the file under the reader: later reads fail.
+        std::fs::write(&path, b"gone").unwrap();
+        let mut got_none = false;
+        for _ in 0..200 {
+            match s.next() {
+                Some(ch) => s.recycle(ch.data), // buffered pre-truncation reads
+                None => {
+                    got_none = true;
+                    break;
+                }
+            }
+        }
+        assert!(got_none, "reader should stop after the file vanished");
+        assert!(s.take_error().is_some());
+        s.stop();
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn stall_counter_moves_when_consumer_outruns_reader() {
+        let (_, s, path) = stream_over(4, 2, 1, 1 << 20);
+        // The very first next() almost always beats the reader; stalls is
+        // monotone and recorded.
+        let before = s.stats().buffer_stalls;
+        if let Some(ch) = s.next() {
+            s.recycle(ch.data);
+        }
+        assert!(s.stats().buffer_stalls >= before);
+        s.stop();
+        let _ = std::fs::remove_file(path);
+    }
+}

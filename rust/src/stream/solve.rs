@@ -1,0 +1,582 @@
+//! Streaming solvers: the in-memory inner steps run over prefetched
+//! chunks, bit-identical to the RAM path.
+//!
+//! Why bit-identical is achievable (and tested with `assert_eq!`, not a
+//! tolerance):
+//!
+//! * **BAK / multi-RHS BAK** consume whole columns in cyclic order. A
+//!   chunk-resident column is the same contiguous `&[f32]` the in-memory
+//!   solver passes to [`blas1::cd_step`] / [`blas1::dot`] /
+//!   [`blas1::axpy`], and the chunk layout never reorders columns, so
+//!   every f32 operation replays in the same order with the same
+//!   operands — for ANY chunk width.
+//! * **Kaczmarz** samples rows. The RNG draws are hoisted: all `obs` row
+//!   indices for a sweep are drawn up front (same `uniform()` sequence as
+//!   the interleaved in-memory loop, which never touches the RNG between
+//!   draws), the sampled rows are gathered in sequential chunk passes, and
+//!   the projections replay in draw order. [`blas1::dot_strided`] /
+//!   [`blas1::axpy_strided`] have stride-independent lane structure, so a
+//!   stride-1 replay over a gathered row buffer is bitwise equal to the
+//!   stride-`obs` in-memory call. Per-sweep residuals accumulate column-
+//!   major with the same per-element `mul_add` order as
+//!   [`crate::linalg::blas2::gemv`].
+//!
+//! Memory: chunk buffers are bounded by the [`StreamedMatrix::mem_budget`]
+//! buffer pool ([`ChunkStream`]); the Kaczmarz row-gather buffer is capped
+//! at half the budget by splitting each sweep's draws into batches (extra
+//! sequential passes, never extra memory).
+
+use crate::api::SolverError;
+use crate::linalg::blas1;
+use crate::solver::{ColumnOrder, SolveOptions, SolveReport, StopReason};
+use crate::util::rng::Rng;
+
+use super::format::StreamedMatrix;
+use super::prefetch::{Chunk, ChunkStream, StreamStatsSnapshot};
+
+/// Outcome of a single-RHS streaming solve.
+#[derive(Clone, Debug)]
+pub struct StreamReport {
+    pub report: SolveReport,
+    pub stats: StreamStatsSnapshot,
+}
+
+/// Outcome of a multi-RHS streaming solve (one report per RHS).
+#[derive(Clone, Debug)]
+pub struct StreamMultiReport {
+    pub reports: Vec<SolveReport>,
+    pub stats: StreamStatsSnapshot,
+}
+
+fn reader_err(stream: &ChunkStream) -> SolverError {
+    SolverError::Backend {
+        backend: "stream".into(),
+        reason: stream
+            .take_error()
+            .map(|e| format!("chunk read failed: {e}"))
+            .unwrap_or_else(|| "chunk reader terminated".into()),
+    }
+}
+
+fn next_or_err(stream: &ChunkStream) -> Result<Chunk, SolverError> {
+    stream.next().ok_or_else(|| reader_err(stream))
+}
+
+/// One full pass over the matrix: every chunk in order through `f`.
+fn pass(
+    stream: &ChunkStream,
+    mut f: impl FnMut(usize, usize, &[f32]),
+) -> Result<(), SolverError> {
+    for _ in 0..stream.num_chunks() {
+        let ch = next_or_err(stream)?;
+        f(ch.start_col, ch.width, &ch.data);
+        stream.recycle(ch.data);
+    }
+    Ok(())
+}
+
+fn start_stream(x: &StreamedMatrix) -> Result<ChunkStream, SolverError> {
+    ChunkStream::start(x).map_err(|e| SolverError::Backend {
+        backend: "stream".into(),
+        reason: format!("open {}: {e}", x.path().display()),
+    })
+}
+
+fn validate(x: &StreamedMatrix, y: &[f32], opts: &SolveOptions) -> Result<(), SolverError> {
+    let (rows, cols) = x.shape();
+    if rows == 0 || cols == 0 {
+        return Err(SolverError::Shape(format!("empty streamed matrix {rows}x{cols}")));
+    }
+    if y.len() != rows {
+        return Err(SolverError::Shape(format!("y has {} rows, x has {rows}", y.len())));
+    }
+    if opts.order == ColumnOrder::Shuffled {
+        return Err(SolverError::InvalidInput(
+            "streamed solvers require ColumnOrder::Cyclic (chunks are read sequentially)".into(),
+        ));
+    }
+    Ok(())
+}
+
+/// `1/<x_j,x_j>` via one streamed pass — bit-identical to
+/// [`crate::solver::colnorms_inv`] (same `nrm2_sq` on the same slices,
+/// same zero-column mapping).
+fn streamed_colnorms_inv(stream: &ChunkStream, cols: usize) -> Result<Vec<f32>, SolverError> {
+    let rows = stream.rows();
+    let mut cninv = vec![0.0f32; cols];
+    pass(stream, |j0, width, data| {
+        for l in 0..width {
+            let n = blas1::nrm2_sq(&data[l * rows..(l + 1) * rows]);
+            cninv[j0 + l] = if n > 0.0 { 1.0 / n } else { 0.0 };
+        }
+    })?;
+    Ok(cninv)
+}
+
+/// Streaming Algorithm 1: [`crate::solver::solve_bak`] over chunks.
+/// Bit-identical to the in-memory run for any chunk width.
+pub fn solve_bak_stream(
+    x: &StreamedMatrix,
+    y: &[f32],
+    opts: &SolveOptions,
+) -> Result<StreamReport, SolverError> {
+    validate(x, y, opts)?;
+    let (rows, vars) = x.shape();
+    let stream = start_stream(x)?;
+    let cninv = streamed_colnorms_inv(&stream, vars)?;
+
+    let mut a = vec![0.0f32; vars];
+    let mut e = y.to_vec();
+    let y_norm_sq = blas1::sum_sq_f64(y);
+    let tol_sq = opts.tol * opts.tol * y_norm_sq;
+    let mut history = Vec::with_capacity(opts.max_sweeps.min(1024));
+    let mut stop = StopReason::MaxSweeps;
+    let mut sweeps = 0;
+    let mut prev_r2 = f64::INFINITY;
+
+    for sweep in 0..opts.max_sweeps {
+        pass(&stream, |j0, width, data| {
+            for l in 0..width {
+                let j = j0 + l;
+                let cn = cninv[j];
+                if cn == 0.0 {
+                    continue; // zero column
+                }
+                let da = blas1::cd_step(&data[l * rows..(l + 1) * rows], &mut e, cn);
+                a[j] += da;
+            }
+        })?;
+        sweeps = sweep + 1;
+        let check_now = opts.check_every != 0 && sweeps % opts.check_every == 0;
+        if check_now || sweeps == opts.max_sweeps {
+            let r2 = blas1::sum_sq_f64(&e);
+            history.push(r2);
+            if opts.tol > 0.0 && r2 <= tol_sq {
+                stop = StopReason::Converged;
+                break;
+            }
+            if r2 >= prev_r2 * (1.0 - 1e-9) && sweeps > 1 {
+                stop = StopReason::Stalled;
+                break;
+            }
+            prev_r2 = r2;
+        }
+    }
+
+    let stats = stream.stats();
+    stream.stop();
+    Ok(StreamReport {
+        report: SolveReport { a, e, history, y_norm_sq, sweeps, stop },
+        stats,
+    })
+}
+
+/// Streaming multi-RHS BAK: [`crate::solver::solve_bak_multi`] over
+/// chunks — one chunk load serves every RHS. Bit-identical per RHS.
+pub fn solve_bak_multi_stream(
+    x: &StreamedMatrix,
+    ys: &[Vec<f32>],
+    opts: &SolveOptions,
+) -> Result<StreamMultiReport, SolverError> {
+    let (rows, vars) = x.shape();
+    for y in ys {
+        validate(x, y, opts)?;
+    }
+    if ys.is_empty() {
+        return Ok(StreamMultiReport { reports: Vec::new(), stats: StreamStatsSnapshot::default() });
+    }
+    let nrhs = ys.len();
+    let stream = start_stream(x)?;
+    let cninv = streamed_colnorms_inv(&stream, vars)?;
+
+    let mut a: Vec<Vec<f32>> = vec![vec![0.0f32; vars]; nrhs];
+    let mut e: Vec<Vec<f32>> = ys.to_vec();
+    let y_norm_sq: Vec<f64> = ys.iter().map(|y| blas1::sum_sq_f64(y)).collect();
+    let mut history: Vec<Vec<f64>> = vec![Vec::new(); nrhs];
+    let mut done: Vec<Option<StopReason>> = vec![None; nrhs];
+    let mut prev_r2 = vec![f64::INFINITY; nrhs];
+    let mut sweeps_done = vec![0usize; nrhs];
+
+    for sweep in 0..opts.max_sweeps {
+        if done.iter().all(Option::is_some) {
+            break;
+        }
+        pass(&stream, |j0, width, data| {
+            for l in 0..width {
+                let j = j0 + l;
+                let cn = cninv[j];
+                if cn == 0.0 {
+                    continue;
+                }
+                let xj = &data[l * rows..(l + 1) * rows];
+                for r in 0..nrhs {
+                    if done[r].is_some() {
+                        continue;
+                    }
+                    let da = blas1::dot(xj, &e[r]) * cn;
+                    blas1::axpy(-da, xj, &mut e[r]);
+                    a[r][j] += da;
+                }
+            }
+        })?;
+        for r in 0..nrhs {
+            if done[r].is_some() {
+                continue;
+            }
+            sweeps_done[r] = sweep + 1;
+            let r2 = blas1::sum_sq_f64(&e[r]);
+            history[r].push(r2);
+            if opts.tol > 0.0 && r2 <= opts.tol * opts.tol * y_norm_sq[r] {
+                done[r] = Some(StopReason::Converged);
+            } else if r2 >= prev_r2[r] * (1.0 - 1e-9) && sweep > 0 {
+                done[r] = Some(StopReason::Stalled);
+            }
+            prev_r2[r] = r2;
+        }
+    }
+
+    let stats = stream.stats();
+    stream.stop();
+    let reports = (0..nrhs)
+        .map(|r| SolveReport {
+            a: std::mem::take(&mut a[r]),
+            e: std::mem::take(&mut e[r]),
+            history: std::mem::take(&mut history[r]),
+            y_norm_sq: y_norm_sq[r],
+            sweeps: sweeps_done[r],
+            stop: done[r].unwrap_or(StopReason::MaxSweeps),
+        })
+        .collect();
+    Ok(StreamMultiReport { reports, stats })
+}
+
+/// `e = y - X a` by streamed column accumulation: the same per-element
+/// `mul_add` order as [`crate::linalg::residual`]'s gemv (serial and
+/// threaded branches are elementwise identical).
+fn streamed_residual(
+    stream: &ChunkStream,
+    y: &[f32],
+    a: &[f32],
+) -> Result<Vec<f32>, SolverError> {
+    let rows = stream.rows();
+    let mut acc = vec![0.0f32; rows];
+    pass(stream, |j0, width, data| {
+        for l in 0..width {
+            let aj = a[j0 + l];
+            if aj != 0.0 {
+                blas1::axpy(aj, &data[l * rows..(l + 1) * rows], &mut acc);
+            }
+        }
+    })?;
+    Ok(y.iter().zip(&acc).map(|(&yi, &xi)| yi - xi).collect())
+}
+
+/// Streaming randomized Kaczmarz: [`crate::solver::solve_kaczmarz`] with
+/// hoisted row draws and batched sequential row gathers. Bit-identical to
+/// the in-memory run (same seed) for any chunk width and batch size.
+pub fn solve_kaczmarz_stream(
+    x: &StreamedMatrix,
+    y: &[f32],
+    opts: &SolveOptions,
+) -> Result<StreamReport, SolverError> {
+    validate(x, y, opts)?;
+    let (obs, vars) = x.shape();
+    let mut rng = Rng::seed(opts.seed);
+    let stream = start_stream(x)?;
+
+    // ||row_i||^2 in one chunk pass, columns in global order — the same
+    // `mul_add` sequence as the in-memory column-major pass.
+    let mut row_norms_sq = vec![0.0f32; obs];
+    pass(&stream, |_j0, width, data| {
+        for l in 0..width {
+            for (rn, &v) in row_norms_sq.iter_mut().zip(&data[l * obs..(l + 1) * obs]) {
+                *rn = v.mul_add(v, *rn);
+            }
+        }
+    })?;
+    let total: f64 = row_norms_sq.iter().map(|&v| v as f64).sum();
+    let y_norm_sq = blas1::sum_sq_f64(y);
+    if total == 0.0 {
+        let stats = stream.stats();
+        stream.stop();
+        let stop = if y_norm_sq == 0.0 { StopReason::Converged } else { StopReason::Stalled };
+        return Ok(StreamReport {
+            report: SolveReport {
+                a: vec![0.0f32; vars],
+                e: y.to_vec(),
+                history: vec![y_norm_sq],
+                y_norm_sq,
+                sweeps: 0,
+                stop,
+            },
+            stats,
+        });
+    }
+    let mut cdf = Vec::with_capacity(obs);
+    let mut acc = 0.0f64;
+    for &v in &row_norms_sq {
+        acc += v as f64 / total;
+        cdf.push(acc);
+    }
+
+    // Row-gather batches capped at half the byte budget (the other half
+    // bounds the chunk buffer pool).
+    let rows_per_batch = ((x.mem_budget() / 2) / (vars * 4).max(1)).max(1);
+
+    let tol_sq = opts.tol * opts.tol * y_norm_sq;
+    let mut a = vec![0.0f32; vars];
+    let mut history = Vec::new();
+    let mut stop = StopReason::MaxSweeps;
+    let mut sweeps = 0;
+    let mut prev_r2 = f64::INFINITY;
+    let mut draws = Vec::with_capacity(obs);
+
+    for sweep in 0..opts.max_sweeps {
+        // Hoist the sweep's RNG draws: the in-memory loop consumes exactly
+        // one uniform() per projection and nothing else, so drawing them
+        // up front replays the identical sequence.
+        draws.clear();
+        for _ in 0..obs {
+            let u = rng.uniform();
+            let i = match cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+                Ok(k) => k,
+                Err(k) => k.min(obs - 1),
+            };
+            draws.push(i);
+        }
+
+        // Gather-and-replay in batches: each batch gathers its distinct
+        // sampled rows in one sequential pass, then replays that batch's
+        // projections in draw order (projections read the matrix, never
+        // write it, so gathers are iterate-independent).
+        let mut pos = 0;
+        while pos < draws.len() {
+            let mut slots: std::collections::BTreeMap<usize, usize> = std::collections::BTreeMap::new();
+            let mut end = pos;
+            while end < draws.len() {
+                let i = draws[end];
+                if row_norms_sq[i] != 0.0 && !slots.contains_key(&i) {
+                    if slots.len() == rows_per_batch {
+                        break;
+                    }
+                    slots.insert(i, slots.len());
+                }
+                end += 1;
+            }
+            let mut gather = vec![0.0f32; slots.len() * vars];
+            pass(&stream, |j0, width, data| {
+                for (&row, &slot) in &slots {
+                    for l in 0..width {
+                        gather[slot * vars + j0 + l] = data[l * obs + row];
+                    }
+                }
+            })?;
+            for &i in &draws[pos..end] {
+                let nrm = row_norms_sq[i];
+                if nrm == 0.0 {
+                    continue;
+                }
+                let slot = slots[&i];
+                let row = &gather[slot * vars..(slot + 1) * vars];
+                let ri = y[i] - blas1::dot_strided(row, 1, &a);
+                blas1::axpy_strided(ri / nrm, row, 1, &mut a);
+            }
+            pos = end;
+        }
+
+        sweeps = sweep + 1;
+        let e = streamed_residual(&stream, y, &a)?;
+        let r2 = blas1::sum_sq_f64(&e);
+        history.push(r2);
+        if opts.tol > 0.0 && r2 <= tol_sq {
+            stop = StopReason::Converged;
+            break;
+        }
+        if r2 >= prev_r2 * (1.0 - 1e-9) && sweeps > 1 {
+            stop = StopReason::Stalled;
+            break;
+        }
+        prev_r2 = r2;
+    }
+    let e = streamed_residual(&stream, y, &a)?;
+    let stats = stream.stats();
+    stream.stop();
+    Ok(StreamReport {
+        report: SolveReport { a, e, history, y_norm_sq, sweeps, stop },
+        stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::solver::{solve_bak, solve_bak_multi, solve_kaczmarz};
+    use crate::stream::format::{temp_chunk_path, write_chunked_dense};
+
+    fn planted(seed: u64, obs: usize, vars: usize) -> (Mat, Vec<f32>) {
+        let mut rng = Rng::seed(seed);
+        let x = Mat::randn(&mut rng, obs, vars);
+        let a: Vec<f32> = (0..vars).map(|_| rng.normal_f32()).collect();
+        let y = x.matvec(&a);
+        (x, y)
+    }
+
+    fn on_disk(x: &Mat, chunk: usize, budget: usize) -> (StreamedMatrix, std::path::PathBuf) {
+        let path = temp_chunk_path("solve");
+        write_chunked_dense(x, chunk, &path).unwrap();
+        (StreamedMatrix::open(&path).unwrap().with_budget(budget), path)
+    }
+
+    // The satellite-3 agreement matrix: chunk width 1, a non-divisor (7),
+    // and an exact divisor of vars.
+    const CHUNKS: [usize; 3] = [1, 7, 5];
+
+    #[test]
+    fn bak_stream_bit_identical_across_chunk_sizes() {
+        let (x, y) = planted(900, 120, 20);
+        let opts = SolveOptions::builder().max_sweeps(40).tol(1e-6).build();
+        let mem = solve_bak(&x, &y, &opts);
+        for &chunk in &CHUNKS {
+            let (m, path) = on_disk(&x, chunk, 1 << 20);
+            let got = solve_bak_stream(&m, &y, &opts).unwrap();
+            assert_eq!(got.report.a, mem.a, "chunk={chunk}");
+            assert_eq!(got.report.e, mem.e, "chunk={chunk}");
+            assert_eq!(got.report.history, mem.history, "chunk={chunk}");
+            assert_eq!(got.report.sweeps, mem.sweeps, "chunk={chunk}");
+            assert_eq!(got.report.stop, mem.stop, "chunk={chunk}");
+            assert!(got.stats.chunks_read > 0 && got.stats.bytes_read > 0);
+            let _ = std::fs::remove_file(path);
+        }
+    }
+
+    #[test]
+    fn bak_stream_solves_matrix_bigger_than_budget() {
+        // The acceptance-criteria shape: X bytes >> buffer-pool budget.
+        let (x, y) = planted(901, 600, 40);
+        let budget = 16 * 1024; // 16 KiB pool vs 93.75 KiB matrix
+        let (m, path) = on_disk(&x, 4, budget);
+        assert!(m.nbytes() > budget, "workload must exceed the budget");
+        let opts = SolveOptions::accurate();
+        let got = solve_bak_stream(&m, &y, &opts).unwrap();
+        let mem = solve_bak(&x, &y, &opts);
+        assert_eq!(got.report.a, mem.a);
+        assert!(got.report.rel_residual() < 1e-5);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn kaczmarz_stream_bit_identical_across_chunk_sizes() {
+        let (x, y) = planted(902, 60, 20);
+        let mut opts = SolveOptions::default();
+        opts.max_sweeps = 8;
+        opts.tol = 1e-6;
+        let mem = solve_kaczmarz(&x, &y, &opts);
+        for &chunk in &CHUNKS {
+            let (m, path) = on_disk(&x, chunk, 1 << 20);
+            let got = solve_kaczmarz_stream(&m, &y, &opts).unwrap();
+            assert_eq!(got.report.a, mem.a, "chunk={chunk}");
+            assert_eq!(got.report.e, mem.e, "chunk={chunk}");
+            assert_eq!(got.report.history, mem.history, "chunk={chunk}");
+            assert_eq!(got.report.stop, mem.stop, "chunk={chunk}");
+            let _ = std::fs::remove_file(path);
+        }
+    }
+
+    #[test]
+    fn kaczmarz_stream_identical_with_tiny_gather_batches() {
+        // A budget so small every sweep needs many gather passes; the
+        // replay order (hence the arithmetic) must not change.
+        let (x, y) = planted(903, 40, 12);
+        let mut opts = SolveOptions::default();
+        opts.max_sweeps = 4;
+        opts.tol = 0.0;
+        let mem = solve_kaczmarz(&x, &y, &opts);
+        let (m, path) = on_disk(&x, 3, 1); // floor: 1 row per gather batch
+        let got = solve_kaczmarz_stream(&m, &y, &opts).unwrap();
+        assert_eq!(got.report.a, mem.a);
+        assert_eq!(got.report.history, mem.history);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn kaczmarz_stream_zero_matrix_early_return() {
+        let x = Mat::zeros(5, 3);
+        let (m, path) = on_disk(&x, 2, 1 << 16);
+        let got = solve_kaczmarz_stream(&m, &[1.0; 5], &SolveOptions::default()).unwrap();
+        assert_eq!(got.report.a, vec![0.0; 3]);
+        assert_eq!(got.report.stop, StopReason::Stalled);
+        let got = solve_kaczmarz_stream(&m, &[0.0; 5], &SolveOptions::default()).unwrap();
+        assert_eq!(got.report.stop, StopReason::Converged);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn multi_stream_bit_identical_per_rhs() {
+        let (x, _) = planted(904, 90, 15);
+        let mut rng = Rng::seed(905);
+        let ys: Vec<Vec<f32>> = (0..3)
+            .map(|_| {
+                let a: Vec<f32> = (0..15).map(|_| rng.normal_f32()).collect();
+                x.matvec(&a)
+            })
+            .collect();
+        let opts = SolveOptions::builder().max_sweeps(30).tol(1e-6).build();
+        let mem = solve_bak_multi(&x, &ys, &opts);
+        for &chunk in &CHUNKS {
+            let (m, path) = on_disk(&x, chunk, 1 << 20);
+            let got = solve_bak_multi_stream(&m, &ys, &opts).unwrap();
+            assert_eq!(got.reports.len(), 3);
+            for r in 0..3 {
+                assert_eq!(got.reports[r].a, mem[r].a, "chunk={chunk} rhs={r}");
+                assert_eq!(got.reports[r].e, mem[r].e, "chunk={chunk} rhs={r}");
+                assert_eq!(got.reports[r].history, mem[r].history, "chunk={chunk} rhs={r}");
+                assert_eq!(got.reports[r].stop, mem[r].stop, "chunk={chunk} rhs={r}");
+            }
+            let _ = std::fs::remove_file(path);
+        }
+    }
+
+    #[test]
+    fn multi_stream_empty_rhs_list() {
+        let (x, _) = planted(906, 10, 4);
+        let (m, path) = on_disk(&x, 2, 1 << 16);
+        let got = solve_bak_multi_stream(&m, &[], &SolveOptions::default()).unwrap();
+        assert!(got.reports.is_empty());
+        assert_eq!(got.stats, StreamStatsSnapshot::default());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn shuffled_order_rejected_with_typed_error() {
+        let (x, y) = planted(907, 20, 5);
+        let (m, path) = on_disk(&x, 2, 1 << 16);
+        let mut opts = SolveOptions::default();
+        opts.order = ColumnOrder::Shuffled;
+        let err = solve_bak_stream(&m, &y, &opts).unwrap_err();
+        assert!(matches!(err, SolverError::InvalidInput(_)), "{err:?}");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let (x, _) = planted(908, 20, 5);
+        let (m, path) = on_disk(&x, 2, 1 << 16);
+        let err = solve_bak_stream(&m, &[1.0; 7], &SolveOptions::default()).unwrap_err();
+        assert!(matches!(err, SolverError::Shape(_)), "{err:?}");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn stats_count_passes() {
+        let (x, y) = planted(909, 30, 8);
+        let (m, path) = on_disk(&x, 4, 1 << 16);
+        let opts = SolveOptions::builder().max_sweeps(3).tol(0.0).build();
+        let got = solve_bak_stream(&m, &y, &opts).unwrap();
+        // colnorms pass + 3 sweeps = 4 consumed passes of 2 chunks; the
+        // prefetcher may have read a few chunks ahead before stopping.
+        assert!(got.stats.chunks_read >= 8, "{:?}", got.stats);
+        assert!(got.stats.bytes_read >= (30 * 8 * 4 * 4) as u64);
+        let _ = std::fs::remove_file(path);
+    }
+}

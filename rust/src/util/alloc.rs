@@ -76,6 +76,32 @@ pub fn mib(bytes: u64) -> f64 {
     bytes as f64 / (1024.0 * 1024.0)
 }
 
+/// Peak resident set size of this process in bytes: the `VmHWM` high-water
+/// mark from `/proc/self/status` on Linux, 0 elsewhere (callers treat 0 as
+/// "unavailable"). This is the number the out-of-core benches and the CI
+/// `stream-smoke` budget check record — unlike the allocation counters
+/// above it captures what the OS actually had resident, including the
+/// streaming chunk buffers.
+pub fn peak_rss_bytes() -> u64 {
+    #[cfg(target_os = "linux")]
+    {
+        let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+            return 0;
+        };
+        for line in status.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                let kb = rest.trim().trim_end_matches("kB").trim();
+                return kb.parse::<u64>().unwrap_or(0) * 1024;
+            }
+        }
+        0
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,6 +127,17 @@ mod tests {
         // Without the global allocator installed the delta is 0; with it,
         // at least 4096. Both are valid here.
         assert!(d.bytes == 0 || d.bytes >= 4096);
+    }
+
+    #[test]
+    fn peak_rss_positive_on_linux_zero_elsewhere() {
+        let v = peak_rss_bytes();
+        if cfg!(target_os = "linux") {
+            // A running test process has megabytes resident.
+            assert!(v > 1024 * 1024, "VmHWM = {v}");
+        } else {
+            assert_eq!(v, 0);
+        }
     }
 
     #[test]
