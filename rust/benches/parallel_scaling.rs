@@ -4,12 +4,14 @@
 //!
 //! This is also the CI perf-trajectory producer: `--out FILE` writes every
 //! measured row as a JSON array (solver, obs, vars, threads, seconds,
-//! rel_residual, sweeps) — the `bench-smoke` job runs it with
+//! rel_residual, sweeps, and a downsampled per-sweep residual
+//! `trajectory`) — the `bench-smoke` job runs it with
 //! `--smoke --out BENCH_PR3.json` and uploads the artifact on every PR.
 //!
 //! Run: `cargo bench --bench parallel_scaling [-- --smoke] [--samples N]
 //!       [--out FILE]`
 
+use solvebak::bench::harness::{downsample_history, TRAJECTORY_CAP};
 use solvebak::bench::workload::{SparseWorkload, Workload, WorkloadSpec};
 use solvebak::cli::Args;
 use solvebak::parallel;
@@ -31,10 +33,20 @@ struct Row {
     /// `VmHWM` after the measurement (0 off-Linux) — a process-wide
     /// high-water mark, monotone across rows within one run.
     peak_rss_bytes: u64,
+    /// Downsampled `(sweep, residual_norm)` convergence curve of the
+    /// probe run, so the uploaded artifact shows not just how fast each
+    /// solver finished but how its residual got there.
+    trajectory: Vec<(usize, f64)>,
 }
 
 impl Row {
     fn to_json(&self) -> Json {
+        let traj = Json::Arr(
+            self.trajectory
+                .iter()
+                .map(|&(s, r)| Json::Arr(vec![Json::Num(s as f64), Json::Num(r)]))
+                .collect(),
+        );
         ObjBuilder::new()
             .str("solver", self.solver)
             .num("obs", self.obs as f64)
@@ -44,6 +56,7 @@ impl Row {
             .num("rel_residual", self.rel_residual)
             .num("sweeps", self.sweeps as f64)
             .num("peak_rss_bytes", self.peak_rss_bytes as f64)
+            .val("trajectory", traj)
             .build()
     }
 }
@@ -104,6 +117,9 @@ fn main() {
             rel_residual: rep.rel_residual(),
             sweeps: rep.sweeps,
             peak_rss_bytes: peak_rss_bytes(),
+            trajectory: downsample_history(
+                &rep.history, opts.check_every, rep.sweeps, TRAJECTORY_CAP,
+            ),
         });
     }
 
@@ -131,6 +147,9 @@ fn main() {
             rel_residual: rep.rel_residual(),
             sweeps: rep.sweeps,
             peak_rss_bytes: peak_rss_bytes(),
+            trajectory: downsample_history(
+                &rep.history, opts.check_every, rep.sweeps, TRAJECTORY_CAP,
+            ),
         });
     }
 
@@ -158,6 +177,9 @@ fn main() {
             rel_residual: rep.rel_residual(),
             sweeps: rep.sweeps,
             peak_rss_bytes: peak_rss_bytes(),
+            trajectory: downsample_history(
+                &rep.history, opts.check_every, rep.sweeps, TRAJECTORY_CAP,
+            ),
         });
     }
 
@@ -201,6 +223,11 @@ fn main() {
             rel_residual: worst,
             sweeps: reps.iter().map(|r| r.sweeps).max().unwrap_or(0),
             peak_rss_bytes: peak_rss_bytes(),
+            // First member's curve — all members share the matrix walk.
+            trajectory: reps
+                .first()
+                .map(|r| downsample_history(&r.history, opts.check_every, r.sweeps, TRAJECTORY_CAP))
+                .unwrap_or_default(),
         });
     }
 
@@ -218,6 +245,7 @@ fn main() {
         rel_residual: rep.rel_residual(),
         sweeps: rep.sweeps,
         peak_rss_bytes: peak_rss_bytes(),
+        trajectory: downsample_history(&rep.history, opts.check_every, rep.sweeps, TRAJECTORY_CAP),
     });
 
     if let Some(path) = out_path {

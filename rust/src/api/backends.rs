@@ -406,12 +406,20 @@ impl Solver for CglsSolver {
     ) -> Result<SolveReport, SolverError> {
         self.capabilities().check(p.obs(), p.vars())?;
         let rep = match p.x() {
-            MatrixRef::Dense(x) => {
-                baselines::cgls::cgls_solve(x, p.y(), opts.max_sweeps, opts.tol)
-            }
-            MatrixRef::SparseCsc(s) => {
-                sparse::solve::cgls_csc(s, p.y(), opts.max_sweeps, opts.tol)
-            }
+            MatrixRef::Dense(x) => baselines::cgls::cgls_solve_probed(
+                x,
+                p.y(),
+                opts.max_sweeps,
+                opts.tol,
+                &opts.probe,
+            ),
+            MatrixRef::SparseCsc(s) => sparse::solve::cgls_csc_probed(
+                s,
+                p.y(),
+                opts.max_sweeps,
+                opts.tol,
+                &opts.probe,
+            ),
             MatrixRef::Streamed(_) => return Err(streamed_unsupported("cgls")),
         };
         let e = residual_ref(p.x(), p.y(), &rep.a);

@@ -100,6 +100,7 @@ impl SolverKind {
             supports_sparse: false,
             supports_parallel: false,
             supports_streaming: false,
+            supports_probe: true,
         };
         match self {
             SolverKind::Bak => Some(Capabilities {
@@ -133,8 +134,15 @@ impl SolverKind {
             SolverKind::BakMulti => {
                 Some(Capabilities { supports_streaming: true, ..ITERATIVE })
             }
-            SolverKind::GaussSouthwell | SolverKind::Pjrt => Some(ITERATIVE),
-            SolverKind::Qr => Some(Capabilities { iterative: false, ..ITERATIVE }),
+            SolverKind::GaussSouthwell => Some(ITERATIVE),
+            // PJRT executes opaque compiled artifacts: there is no place
+            // to observe a per-sweep residual, so no probe support.
+            SolverKind::Pjrt => Some(Capabilities { supports_probe: false, ..ITERATIVE }),
+            SolverKind::Qr => Some(Capabilities {
+                iterative: false,
+                supports_probe: false,
+                ..ITERATIVE
+            }),
             SolverKind::Cholesky => Some(Capabilities {
                 supports_wide: false,
                 iterative: false,
@@ -143,6 +151,7 @@ impl SolverKind {
                 supports_sparse: false,
                 supports_parallel: false,
                 supports_streaming: false,
+                supports_probe: false,
             }),
             SolverKind::Gauss => Some(Capabilities {
                 supports_wide: false,
@@ -152,6 +161,7 @@ impl SolverKind {
                 supports_sparse: false,
                 supports_parallel: false,
                 supports_streaming: false,
+                supports_probe: false,
             }),
             SolverKind::Auto => None,
         }
@@ -315,6 +325,32 @@ mod tests {
             stream,
             vec![SolverKind::Bak, SolverKind::BakMulti, SolverKind::Kaczmarz]
         );
+    }
+
+    #[test]
+    fn probe_kinds_are_the_loop_observable_iteratives() {
+        let probed: Vec<SolverKind> = SolverKind::CONCRETE
+            .iter()
+            .copied()
+            .filter(|k| k.capabilities().is_some_and(|c| c.supports_probe))
+            .collect();
+        assert_eq!(
+            probed,
+            vec![
+                SolverKind::Bak,
+                SolverKind::Bakp,
+                SolverKind::BakPar,
+                SolverKind::BakMulti,
+                SolverKind::Kaczmarz,
+                SolverKind::KaczmarzPar,
+                SolverKind::GaussSouthwell,
+                SolverKind::Cgls
+            ]
+        );
+        // Direct methods and opaque artifact execution never probe.
+        for k in [SolverKind::Qr, SolverKind::Cholesky, SolverKind::Gauss, SolverKind::Pjrt] {
+            assert!(!k.capabilities().unwrap().supports_probe, "{k}");
+        }
     }
 
     #[test]

@@ -22,20 +22,20 @@
 //!
 //! ## Capability matrix
 //!
-//! | kind              | supports_wide | iterative | needs_square | warm_start | supports_sparse | parallel | streaming |
-//! |-------------------|---------------|-----------|--------------|------------|-----------------|----------|-----------|
-//! | `bak`             | yes           | yes       | no           | yes        | yes (CSC)       | no       | yes       |
-//! | `bakp`            | yes           | yes       | no           | no         | yes (CSC)       | in-block | no        |
-//! | `bak_par`         | yes           | yes       | no           | no         | yes (CSC)       | yes      | no        |
-//! | `bak_multi`       | yes           | yes       | no           | no         | no (densifies)  | no       | yes       |
-//! | `kaczmarz`        | yes           | yes       | no           | no         | yes (CSR)       | no       | yes       |
-//! | `kaczmarz_par`    | yes           | yes       | no           | no         | yes (CSR)       | yes      | no        |
-//! | `gauss_southwell` | yes           | yes       | no           | no         | no (densifies)  | no       | no        |
-//! | `qr`              | yes (min-norm)| no        | no           | no         | no (densifies)  | no       | no        |
-//! | `cholesky`        | no            | no        | no           | no         | no (densifies)  | no       | no        |
-//! | `gauss`           | no            | no        | yes          | no         | no (densifies)  | no       | no        |
-//! | `cgls`            | yes           | yes       | no           | no         | yes (CSC)       | no       | no        |
-//! | `pjrt`            | yes (bucketed)| yes       | no           | no         | no (densifies)  | no       | no        |
+//! | kind              | supports_wide | iterative | needs_square | warm_start | supports_sparse | parallel | streaming | probe |
+//! |-------------------|---------------|-----------|--------------|------------|-----------------|----------|-----------|-------|
+//! | `bak`             | yes           | yes       | no           | yes        | yes (CSC)       | no       | yes       | yes   |
+//! | `bakp`            | yes           | yes       | no           | no         | yes (CSC)       | in-block | no        | yes   |
+//! | `bak_par`         | yes           | yes       | no           | no         | yes (CSC)       | yes      | no        | yes   |
+//! | `bak_multi`       | yes           | yes       | no           | no         | no (densifies)  | no       | yes       | yes   |
+//! | `kaczmarz`        | yes           | yes       | no           | no         | yes (CSR)       | no       | yes       | yes   |
+//! | `kaczmarz_par`    | yes           | yes       | no           | no         | yes (CSR)       | yes      | no        | yes   |
+//! | `gauss_southwell` | yes           | yes       | no           | no         | no (densifies)  | no       | no        | yes   |
+//! | `qr`              | yes (min-norm)| no        | no           | no         | no (densifies)  | no       | no        | no    |
+//! | `cholesky`        | no            | no        | no           | no         | no (densifies)  | no       | no        | no    |
+//! | `gauss`           | no            | no        | yes          | no         | no (densifies)  | no       | no        | no    |
+//! | `cgls`            | yes           | yes       | no           | no         | yes (CSC)       | no       | no        | yes   |
+//! | `pjrt`            | yes (bucketed)| yes       | no           | no         | no (densifies)  | no       | no        | no    |
 //!
 //! The `parallel` column is the `supports_parallel` capability: the
 //! backend scales with [`crate::solver::SolveOptions::threads`]
@@ -56,6 +56,14 @@
 //! NO transparent fallback — densifying a matrix that was put on disk
 //! precisely because it may not fit in RAM would defeat the point, so
 //! non-streaming backends return a typed [`SolverError`] instead.
+//!
+//! The `probe` column is `supports_probe`: the backend calls the
+//! [`crate::obs::SolveProbe`] attached via
+//! [`crate::solver::SolveOptions::probe`] once per residual check, so
+//! traced requests get a live convergence trajectory. Direct methods (qr,
+//! cholesky, gauss) and the opaque PJRT artifact path have no per-sweep
+//! residual to report; they ignore the probe and their trajectory is the
+//! single exit residual.
 
 pub mod backends;
 pub mod kind;
@@ -441,6 +449,11 @@ pub struct Capabilities {
     /// streamed input (it is never silently densified — see the module
     /// docs).
     pub supports_streaming: bool,
+    /// Reports per-sweep residuals to the [`crate::obs::SolveProbe`]
+    /// attached via [`SolveOptions::probe`]; false = the probe is ignored
+    /// (direct methods and opaque artifact execution have no per-sweep
+    /// residual).
+    pub supports_probe: bool,
 }
 
 impl Capabilities {
@@ -590,6 +603,7 @@ mod tests {
             supports_sparse: false,
             supports_parallel: false,
             supports_streaming: false,
+            supports_probe: false,
         };
         assert!(square_only.check(5, 5).is_ok());
         assert!(matches!(

@@ -23,6 +23,18 @@ pub struct CglsReport {
 /// Stops when the *relative* residual-norm improvement of the normal-
 /// equations residual drops below `tol`, or after `max_iter` iterations.
 pub fn cgls_solve(x: &Mat, y: &[f32], max_iter: usize, tol: f64) -> CglsReport {
+    cgls_solve_probed(x, y, max_iter, tol, &crate::obs::ProbeHandle::none())
+}
+
+/// [`cgls_solve`] with a per-iteration convergence probe (one CGLS
+/// iteration counts as one "sweep" for the probe).
+pub fn cgls_solve_probed(
+    x: &Mat,
+    y: &[f32],
+    max_iter: usize,
+    tol: f64,
+    probe: &crate::obs::ProbeHandle,
+) -> CglsReport {
     let (m, n) = x.shape();
     assert_eq!(y.len(), m);
     let mut a = vec![0.0f32; n];
@@ -34,6 +46,7 @@ pub fn cgls_solve(x: &Mat, y: &[f32], max_iter: usize, tol: f64) -> CglsReport {
     let mut history = Vec::with_capacity(max_iter);
     let mut converged = false;
     let mut iterations = 0;
+    let t0 = std::time::Instant::now();
 
     for _ in 0..max_iter {
         iterations += 1;
@@ -46,7 +59,9 @@ pub fn cgls_solve(x: &Mat, y: &[f32], max_iter: usize, tol: f64) -> CglsReport {
         let alpha = (gamma / qq) as f32;
         blas1::axpy(alpha, &p, &mut a);
         blas1::axpy(-alpha, &q, &mut r);
-        history.push(blas1::sum_sq_f64(&r));
+        let r2 = blas1::sum_sq_f64(&r);
+        history.push(r2);
+        probe.observe(iterations, r2, t0);
         s = x.matvec_t(&r);
         let gamma_new = blas1::sum_sq_f64(&s);
         if gamma_new <= tol * tol * gamma0 {
@@ -111,6 +126,24 @@ mod tests {
         let rep = cgls_solve(&x, &y, 200, 1e-9);
         let a_qr = crate::baselines::qr::lstsq_qr(&x, &y).unwrap();
         assert!(rel_l2(&rep.a, &a_qr) < 1e-2);
+    }
+
+    #[test]
+    fn probed_variant_matches_history() {
+        let mut rng = Rng::seed(55);
+        let x = Mat::randn(&mut rng, 120, 10);
+        let y: Vec<f32> = (0..120).map(|_| rng.normal_f32()).collect();
+        let probe = crate::obs::RingProbe::new(256);
+        let handle = crate::obs::ProbeHandle::new(probe.clone());
+        let rep = cgls_solve_probed(&x, &y, 30, 0.0, &handle);
+        let snap = probe.snapshot();
+        assert_eq!(snap.len(), rep.history.len());
+        for (p, &h) in snap.iter().zip(&rep.history) {
+            assert!((p.residual_norm - h.sqrt()).abs() < 1e-12);
+        }
+        // The unprobed wrapper is the same computation.
+        let plain = cgls_solve(&x, &y, 30, 0.0);
+        assert_eq!(rep.a, plain.a);
     }
 
     #[test]

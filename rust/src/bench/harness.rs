@@ -48,6 +48,50 @@ pub struct MethodResult {
     pub peak_rss_bytes: u64,
     /// MAPE of the solution against the planted coefficients.
     pub mape: f64,
+    /// Downsampled convergence trajectory of the probe run (the first,
+    /// untimed solve): `(sweep, residual_norm)` pairs, at most
+    /// [`TRAJECTORY_CAP`] points, last checkpoint always kept. Direct
+    /// methods (QR/Cholesky/Gauss) collapse to the single terminal point.
+    pub trajectory: Vec<(usize, f64)>,
+}
+
+/// Point cap for [`MethodResult::trajectory`] — small enough to embed in
+/// every `BENCH_*.json` row, dense enough to plot a convergence curve.
+pub const TRAJECTORY_CAP: usize = 32;
+
+/// Downsample a solver's per-checkpoint squared-residual `history` to at
+/// most `cap` `(sweep, residual_norm)` points. Checkpoint `k` happened at
+/// sweep `min((k+1)*check_every, total_sweeps)`; the final checkpoint is
+/// always kept so the curve ends where the solver stopped.
+pub fn downsample_history(
+    history: &[f64],
+    check_every: usize,
+    total_sweeps: usize,
+    cap: usize,
+) -> Vec<(usize, f64)> {
+    if history.is_empty() || cap == 0 {
+        return Vec::new();
+    }
+    let c = check_every.max(1);
+    let sweep_of = |k: usize| ((k + 1) * c).min(total_sweeps.max(1));
+    let stride = history.len().div_ceil(cap).max(1);
+    let mut out: Vec<(usize, f64)> = history
+        .iter()
+        .enumerate()
+        .step_by(stride)
+        .map(|(k, &r2)| (sweep_of(k), r2.max(0.0).sqrt()))
+        .collect();
+    let last = history.len() - 1;
+    if out.last().map(|&(s, _)| s) != Some(sweep_of(last)) {
+        out.push((sweep_of(last), history[last].max(0.0).sqrt()));
+    }
+    if out.len() > cap {
+        // Drop an interior point, never the endpoint.
+        let end = out.pop().unwrap();
+        out.truncate(cap - 1);
+        out.push(end);
+    }
+    out
 }
 
 impl MethodResult {
@@ -93,8 +137,10 @@ pub fn run_method(
     // Allocation measurement doubles as the failure probe: if the solver
     // cannot handle this workload, report that instead of timing it.
     let (first, snap) = alloc::measure(|| solver.solve(&problem, opts));
-    let a_hat = first?.a;
-    let acc = w.a_true.as_ref().map(|t| mape(&a_hat, t)).unwrap_or(f64::NAN);
+    let report = first?;
+    let trajectory =
+        downsample_history(&report.history, opts.check_every, report.sweeps, TRAJECTORY_CAP);
+    let acc = w.a_true.as_ref().map(|t| mape(&report.a, t)).unwrap_or(f64::NAN);
 
     // Timing loop.
     let times = sample(cfg, || {
@@ -107,6 +153,7 @@ pub fn run_method(
         alloc_bytes: snap.bytes,
         peak_rss_bytes: alloc::peak_rss_bytes(),
         mape: acc,
+        trajectory,
     })
 }
 
@@ -170,6 +217,47 @@ mod tests {
         assert_ne!(method_label(SolverKind::Qr, &o), method_label(SolverKind::Bak, &o));
         assert!(method_label(SolverKind::Bakp, &o).contains("50"));
         assert_eq!(method_label(SolverKind::Cgls, &o), "CGLS");
+    }
+
+    #[test]
+    fn downsample_caps_and_keeps_the_endpoint() {
+        let history: Vec<f64> = (0..100).map(|k| 1.0 / (k + 1) as f64).collect();
+        let t = downsample_history(&history, 1, 100, 32);
+        assert!(t.len() <= 32, "{}", t.len());
+        assert_eq!(t.first().unwrap().0, 1);
+        assert_eq!(t.last().unwrap().0, 100, "endpoint kept");
+        assert!((t.last().unwrap().1 - (1.0f64 / 100.0).sqrt()).abs() < 1e-12);
+        for w in t.windows(2) {
+            assert!(w[0].0 < w[1].0, "sweeps strictly increase");
+        }
+        // Short histories pass through untouched.
+        let short = downsample_history(&[4.0, 1.0], 1, 2, 32);
+        assert_eq!(short, vec![(1, 2.0), (2, 1.0)]);
+        assert!(downsample_history(&[], 1, 0, 32).is_empty());
+    }
+
+    #[test]
+    fn downsample_respects_check_every() {
+        // 5 checkpoints at check_every=3 with 14 total sweeps: the last
+        // check happens at the final sweep, not at 15.
+        let t = downsample_history(&[1.0; 5], 3, 14, 32);
+        assert_eq!(t.iter().map(|p| p.0).collect::<Vec<_>>(), vec![3, 6, 9, 12, 14]);
+    }
+
+    #[test]
+    fn iterative_methods_record_a_trajectory() {
+        let w = Workload::consistent(WorkloadSpec::new(150, 10, 81));
+        let cfg = BenchConfig::quick();
+        let opts = table1_opts(4, 1);
+        let bak = run_method(&w, SolverKind::Bak, &opts, &cfg).unwrap();
+        assert!(bak.trajectory.len() >= 2, "{:?}", bak.trajectory);
+        assert!(bak.trajectory.len() <= TRAJECTORY_CAP);
+        // Residual norms are finite and end low on a consistent system.
+        assert!(bak.trajectory.iter().all(|p| p.1.is_finite()));
+        assert!(bak.trajectory.last().unwrap().1 < bak.trajectory[0].1);
+        // A direct method collapses to its single terminal residual.
+        let qr = run_method(&w, SolverKind::Qr, &opts, &cfg).unwrap();
+        assert_eq!(qr.trajectory.len(), 1);
     }
 
     #[test]

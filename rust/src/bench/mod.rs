@@ -6,5 +6,7 @@ pub mod workload;
 pub mod paper;
 pub mod harness;
 
-pub use harness::{method_label, run_method, table1_opts, MethodResult};
+pub use harness::{
+    downsample_history, method_label, run_method, table1_opts, MethodResult, TRAJECTORY_CAP,
+};
 pub use workload::{WorkloadSpec, Workload};

@@ -27,7 +27,7 @@ const VALUED: &[&str] = &[
     "obs", "vars", "thr", "threads", "sweeps", "tol", "seed", "backend",
     "artifacts", "scale", "samples", "max-feat", "workers", "queue",
     "requests", "out", "rows", "noise", "level", "density", "port",
-    "x-file", "y-file", "mem-budget", "chunk",
+    "x-file", "y-file", "mem-budget", "chunk", "addr", "interval", "count",
 ];
 
 impl Args {
@@ -158,6 +158,17 @@ mod tests {
         assert_eq!(a.get_usize("chunk", 0).unwrap(), 64);
         assert_eq!(a.get_usize("port", 0).unwrap(), 7447);
         assert!(a.positionals().is_empty());
+    }
+
+    #[test]
+    fn stats_options_are_valued() {
+        let a = Args::parse(&sv(&[
+            "--addr", "127.0.0.1:7447", "--interval", "0.5", "--count", "3",
+        ]))
+        .unwrap();
+        assert_eq!(a.get("addr"), Some("127.0.0.1:7447"));
+        assert_eq!(a.get_f64("interval", 1.0).unwrap(), 0.5);
+        assert_eq!(a.get_usize("count", 0).unwrap(), 3);
     }
 
     #[test]

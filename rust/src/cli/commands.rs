@@ -7,6 +7,7 @@
 //! solvebak convert  --obs 1e6 --vars 256 --out X.sbck [--chunk 64]
 //! solvebak features --obs 1e4 --vars 200 --max-feat 10
 //! solvebak serve    --requests 64 --workers 4 [--artifacts DIR]
+//! solvebak stats    --addr 127.0.0.1:7447 [--interval 1.0 --count 0]
 //! solvebak info     [--artifacts DIR]
 //! ```
 //!
@@ -43,6 +44,8 @@ COMMANDS:
   features   run SolveBakF feature selection on a planted workload
   serve      run the coordinator service against synthetic request load
   serve-tcp  expose the coordinator on a TCP port (newline-JSON protocol)
+  stats      live dashboard: poll a serve-tcp instance's metrics and print
+             one line per interval (req/s, latency quantiles, queue depth)
   info       environment + artifact inventory
   help       this text
 
@@ -71,6 +74,9 @@ COMMON OPTIONS:
   --workers N           service worker threads   [PALLAS_THREADS, else
                         available parallelism]
   --requests N          synthetic request count  [32]
+  --addr HOST:PORT      stats: serve-tcp address [127.0.0.1:7447]
+  --interval SECS       stats: polling period    [1.0]
+  --count N             stats: lines to print, 0 = until interrupted [0]
 ",
         backends.join("|")
     )
@@ -97,6 +103,7 @@ fn run_inner(argv: Vec<String>) -> Result<(), ArgError> {
         "features" => cmd_features(&args),
         "serve" => cmd_serve(&args),
         "serve-tcp" => cmd_serve_tcp(&args),
+        "stats" => cmd_stats(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             println!("{}", usage());
@@ -424,6 +431,102 @@ fn cmd_serve_tcp(args: &Args) -> Result<(), ArgError> {
     Ok(())
 }
 
+/// One polled metrics snapshot — the fields the `stats` dashboard renders.
+#[derive(Clone, Copy, Debug, Default)]
+struct StatsSnap {
+    requests_completed: f64,
+    requests_failed: f64,
+    p50_s: f64,
+    p99_s: f64,
+    queue_depth: f64,
+    workers: f64,
+    workers_busy: f64,
+    stream_stalls: f64,
+}
+
+impl StatsSnap {
+    /// Extract from a `{"cmd":"metrics"}` response.
+    fn from_json(j: &crate::util::json::Json) -> Self {
+        let f = |k: &str| j.get(k).and_then(crate::util::json::Json::as_f64).unwrap_or(0.0);
+        Self {
+            requests_completed: f("requests_completed"),
+            requests_failed: f("requests_failed"),
+            p50_s: f("solve_latency_p50_s"),
+            p99_s: f("solve_latency_p99_s"),
+            queue_depth: f("job_queue_depth"),
+            workers: f("workers"),
+            workers_busy: f("workers_busy"),
+            stream_stalls: f("stream_buffer_stalls"),
+        }
+    }
+}
+
+/// Render one dashboard line. Rates are deltas against the previous poll
+/// over `dt` seconds; the first line (no previous) shows absolute totals.
+/// Pure — unit-tested without a TCP server.
+fn stats_line(cur: &StatsSnap, prev: Option<&StatsSnap>, dt: f64) -> String {
+    let (rate, fail_rate) = match prev {
+        Some(p) if dt > 0.0 => (
+            (cur.requests_completed - p.requests_completed).max(0.0) / dt,
+            (cur.requests_failed - p.requests_failed).max(0.0) / dt,
+        ),
+        _ => (cur.requests_completed, cur.requests_failed),
+    };
+    let unit = if prev.is_some() { "req/s" } else { "req total" };
+    format!(
+        "{rate:8.1} {unit} | fail {fail_rate:6.1} | p50 {:7.2}ms p99 {:7.2}ms | queue {:4.0} | busy {:.0}/{:.0} | stalls {:5.0}",
+        cur.p50_s * 1e3,
+        cur.p99_s * 1e3,
+        cur.queue_depth,
+        cur.workers_busy,
+        cur.workers,
+        cur.stream_stalls,
+    )
+}
+
+/// `solvebak stats`: poll a running serve-tcp instance's `metrics` command
+/// and print a one-line dashboard per interval.
+fn cmd_stats(args: &Args) -> Result<(), ArgError> {
+    use std::io::{BufRead, BufReader, Write};
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7447");
+    let interval = args.get_f64("interval", 1.0)?.max(0.05);
+    let count = args.get_usize("count", 0)?;
+
+    let stream = std::net::TcpStream::connect(addr)
+        .map_err(|e| ArgError(format!("connect {addr}: {e}")))?;
+    let mut writer = stream
+        .try_clone()
+        .map_err(|e| ArgError(format!("clone stream: {e}")))?;
+    let mut reader = BufReader::new(stream);
+    println!("polling {addr} every {interval}s ({} lines)",
+             if count == 0 { "unbounded".to_string() } else { count.to_string() });
+
+    let mut prev: Option<StatsSnap> = None;
+    let mut printed = 0usize;
+    loop {
+        writer
+            .write_all(b"{\"cmd\":\"metrics\"}\n")
+            .map_err(|e| ArgError(format!("{addr}: {e}")))?;
+        let mut line = String::new();
+        reader
+            .read_line(&mut line)
+            .map_err(|e| ArgError(format!("{addr}: {e}")))?;
+        if line.is_empty() {
+            return Err(ArgError(format!("{addr}: server closed the connection")));
+        }
+        let j = crate::util::json::Json::parse(line.trim())
+            .map_err(|e| ArgError(format!("bad metrics line: {e}")))?;
+        let cur = StatsSnap::from_json(&j);
+        println!("{}", stats_line(&cur, prev.as_ref(), interval));
+        prev = Some(cur);
+        printed += 1;
+        if count != 0 && printed >= count {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_secs_f64(interval));
+    }
+}
+
 fn cmd_info(args: &Args) -> Result<(), ArgError> {
     println!("solvebak {} — three-layer Rust+JAX+Pallas SolveBak", crate::VERSION);
     println!("threads available: {}", crate::linalg::blas2::num_threads());
@@ -639,6 +742,79 @@ mod tests {
         assert!(u.contains("--y-file"));
         assert!(u.contains("--mem-budget"));
         assert!(u.contains("--chunk"));
+    }
+
+    #[test]
+    fn stats_line_first_poll_shows_totals_then_rates() {
+        let a = StatsSnap {
+            requests_completed: 40.0,
+            requests_failed: 1.0,
+            p50_s: 0.004,
+            p99_s: 0.020,
+            queue_depth: 2.0,
+            workers: 4.0,
+            workers_busy: 3.0,
+            stream_stalls: 0.0,
+        };
+        let first = stats_line(&a, None, 1.0);
+        assert!(first.contains("req total"), "{first}");
+        assert!(first.contains("40.0"), "{first}");
+        assert!(first.contains("p50    4.00ms"), "{first}");
+        assert!(first.contains("busy 3/4"), "{first}");
+        let b = StatsSnap { requests_completed: 90.0, ..a };
+        let second = stats_line(&b, Some(&a), 2.0);
+        assert!(second.contains("req/s"), "{second}");
+        // (90 - 40) / 2s = 25 req/s.
+        assert!(second.contains("25.0"), "{second}");
+    }
+
+    #[test]
+    fn stats_snap_extracts_metrics_fields() {
+        let j = crate::util::json::Json::parse(
+            r#"{"requests_completed": 7, "requests_failed": 2,
+                "solve_latency_p50_s": 0.001, "solve_latency_p99_s": 0.1,
+                "job_queue_depth": 3, "workers": 2, "workers_busy": 1,
+                "stream_buffer_stalls": 5}"#,
+        )
+        .unwrap();
+        let s = StatsSnap::from_json(&j);
+        assert_eq!(s.requests_completed, 7.0);
+        assert_eq!(s.requests_failed, 2.0);
+        assert_eq!(s.p50_s, 0.001);
+        assert_eq!(s.queue_depth, 3.0);
+        assert_eq!(s.stream_stalls, 5.0);
+        // Missing keys default to 0 instead of failing the dashboard.
+        let empty = StatsSnap::from_json(&crate::util::json::Json::parse("{}").unwrap());
+        assert_eq!(empty.workers, 0.0);
+    }
+
+    #[test]
+    fn stats_polls_a_live_server() {
+        let coord = Arc::new(Coordinator::start(CoordinatorConfig {
+            workers: 1,
+            ..CoordinatorConfig::default()
+        }));
+        let server = crate::coordinator::server::Server::bind(coord, 0).expect("bind");
+        let addr = server.addr().to_string();
+        assert_eq!(
+            run(sv(&["stats", "--addr", &addr, "--interval", "0.05", "--count", "2"])),
+            0
+        );
+        server.stop();
+    }
+
+    #[test]
+    fn stats_unreachable_address_fails_cleanly() {
+        // Port 1 on localhost is essentially never listening.
+        assert_eq!(run(sv(&["stats", "--addr", "127.0.0.1:1", "--count", "1"])), 2);
+    }
+
+    #[test]
+    fn usage_mentions_stats() {
+        let u = usage();
+        assert!(u.contains("stats"));
+        assert!(u.contains("--addr"));
+        assert!(u.contains("--interval"));
     }
 
     #[test]

@@ -55,6 +55,10 @@ pub fn coalesce(requests: Vec<SolveRequest>, policy: &BatchPolicy) -> Vec<SolveJ
                 opts: first.opts.clone(),
                 backend: first.backend,
                 members: chunk.iter().map(|r| (r.id, r.y.clone())).collect(),
+                // Traced requests never reach the coalescer (the scheduler
+                // partitions them into singleton jobs first), so a batch
+                // job carries no trace.
+                trace: None,
             });
         }
     }

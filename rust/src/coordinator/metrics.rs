@@ -43,15 +43,49 @@ impl Histogram {
         idx.clamp(0.0, (NBUCKETS - 1) as f64) as usize
     }
 
-    /// Record one observation.
+    /// Upper edge (seconds) of bucket `i` — the `le` bound Prometheus
+    /// exposition publishes for it.
+    pub fn bucket_upper_edge(i: usize) -> f64 {
+        10f64.powf((i + 1) as f64 / 4.0 - 7.0)
+    }
+
+    /// Snapshot of the per-bucket counts, in bucket order.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Record one observation. Non-finite or negative durations clamp to
+    /// zero (bucket 0) instead of poisoning the running sum; the sum
+    /// saturates at `u64::MAX` ns rather than wrapping.
     pub fn record(&self, seconds: f64) {
-        self.buckets[Self::bucket_of(seconds)].fetch_add(1, Ordering::Relaxed);
+        let s = if seconds.is_finite() && seconds > 0.0 { seconds } else { 0.0 };
+        self.buckets[Self::bucket_of(s)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_ns.fetch_add((seconds * 1e9) as u64, Ordering::Relaxed);
+        // f64→u64 casts already saturate (and map NaN to 0), but the CAS
+        // loop is what keeps the *accumulated* sum from wrapping.
+        let ns = (s * 1e9).min(u64::MAX as f64) as u64;
+        let mut cur = self.sum_ns.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_add(ns);
+            match self.sum_ns.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
     }
 
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
+    }
+
+    /// Total observed time in seconds (saturating, see [`Histogram::record`]).
+    pub fn sum_seconds(&self) -> f64 {
+        self.sum_ns.load(Ordering::Relaxed) as f64 / 1e9
     }
 
     /// Mean in seconds (0 when empty).
@@ -64,21 +98,27 @@ impl Histogram {
         }
     }
 
-    /// Approximate quantile (upper edge of the bucket containing it).
+    /// Approximate quantile: log-space interpolation within the bucket
+    /// containing the target rank (observations inside a bucket are
+    /// assumed log-uniform, matching the log-scale bucket layout). The
+    /// old upper-edge answer biased every quantile high by up to one
+    /// bucket width (10^0.25 ≈ 1.78×).
     pub fn quantile(&self, q: f64) -> f64 {
         let total = self.count();
         if total == 0 {
             return 0.0;
         }
-        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
         let mut seen = 0u64;
         for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= target {
-                return 10f64.powf((i + 1) as f64 / 4.0 - 7.0);
+            let n = b.load(Ordering::Relaxed);
+            if n > 0 && seen + n >= target {
+                let frac = (target - seen) as f64 / n as f64;
+                return 10f64.powf(i as f64 / 4.0 - 7.0 + frac * 0.25);
             }
+            seen += n;
         }
-        10f64.powf(NBUCKETS as f64 / 4.0 - 7.0)
+        Self::bucket_upper_edge(NBUCKETS - 1)
     }
 }
 
@@ -210,8 +250,87 @@ impl Metrics {
             .num("solve_latency_mean_s", self.solve_latency.mean())
             .num("solve_latency_p50_s", self.solve_latency.quantile(0.5))
             .num("solve_latency_p99_s", self.solve_latency.quantile(0.99))
+            .num("solve_latency_count", self.solve_latency.count() as f64)
             .num("queue_wait_mean_s", self.queue_wait.mean())
+            .num("queue_wait_p50_s", self.queue_wait.quantile(0.5))
+            .num("queue_wait_p99_s", self.queue_wait.quantile(0.99))
+            .num("queue_wait_count", self.queue_wait.count() as f64)
             .build()
+    }
+
+    /// Serialize a snapshot in the Prometheus text exposition format
+    /// (v0.0.4): counters as `_total`, gauges bare, histograms as
+    /// cumulative `_bucket{le=...}` series plus `_sum`/`_count`. All
+    /// metric names carry the `pallas_` prefix.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        let c = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        let mut counter = |out: &mut String, name: &str, v: u64| {
+            out.push_str(&format!(
+                "# TYPE pallas_{name}_total counter\npallas_{name}_total {v}\n"
+            ));
+        };
+        counter(&mut out, "requests_submitted", c(&self.requests_submitted));
+        counter(&mut out, "requests_completed", c(&self.requests_completed));
+        counter(&mut out, "requests_failed", c(&self.requests_failed));
+        counter(&mut out, "jobs_run", c(&self.jobs_run));
+        counter(&mut out, "batched_members", c(&self.batched_members));
+        counter(&mut out, "queue_rejections", c(&self.queue_rejections));
+        counter(&mut out, "densified_jobs", c(&self.densified_jobs));
+        counter(&mut out, "stream_chunks_read", c(&self.stream_chunks_read));
+        counter(&mut out, "stream_bytes_read", c(&self.stream_bytes_read));
+        counter(&mut out, "stream_buffer_stalls", c(&self.stream_buffer_stalls));
+
+        out.push_str("# TYPE pallas_backend_jobs_total counter\n");
+        for (i, &kind) in SolverKind::CONCRETE.iter().enumerate() {
+            out.push_str(&format!(
+                "pallas_backend_jobs_total{{backend=\"{}\"}} {}\n",
+                kind.as_str(),
+                self.backend_jobs[i].load(Ordering::Relaxed)
+            ));
+        }
+
+        let mut gauge = |out: &mut String, name: &str, v: f64| {
+            out.push_str(&format!("# TYPE pallas_{name} gauge\npallas_{name} {v}\n"));
+        };
+        gauge(&mut out, "job_queue_depth", c(&self.job_queue_depth) as f64);
+        let (workers, busy, inflight, panicked) = match self.pool.get() {
+            Some(p) => (
+                p.workers() as f64,
+                p.workers_busy.load(Ordering::Relaxed) as f64,
+                p.jobs_inflight.load(Ordering::Relaxed) as f64,
+                p.jobs_panicked.load(Ordering::Relaxed) as f64,
+            ),
+            None => (0.0, 0.0, 0.0, 0.0),
+        };
+        gauge(&mut out, "workers", workers);
+        gauge(&mut out, "workers_busy", busy);
+        gauge(&mut out, "jobs_inflight", inflight);
+        gauge(&mut out, "worker_panics", panicked);
+
+        let histogram = |out: &mut String, name: &str, h: &Histogram| {
+            out.push_str(&format!("# TYPE pallas_{name}_seconds histogram\n"));
+            let mut cum = 0u64;
+            for (i, n) in h.bucket_counts().into_iter().enumerate() {
+                cum += n;
+                out.push_str(&format!(
+                    "pallas_{name}_seconds_bucket{{le=\"{:e}\"}} {cum}\n",
+                    Histogram::bucket_upper_edge(i)
+                ));
+            }
+            out.push_str(&format!(
+                "pallas_{name}_seconds_bucket{{le=\"+Inf\"}} {}\n",
+                h.count()
+            ));
+            out.push_str(&format!(
+                "pallas_{name}_seconds_sum {}\n",
+                h.sum_seconds()
+            ));
+            out.push_str(&format!("pallas_{name}_seconds_count {}\n", h.count()));
+        };
+        histogram(&mut out, "solve_latency", &self.solve_latency);
+        histogram(&mut out, "queue_wait", &self.queue_wait);
+        out
     }
 }
 
@@ -229,7 +348,7 @@ mod tests {
     }
 
     #[test]
-    fn histogram_quantile_monotone() {
+    fn histogram_quantile_monotone_and_interpolated() {
         let h = Histogram::new();
         for i in 1..=100 {
             h.record(i as f64 * 1e-4);
@@ -237,7 +356,60 @@ mod tests {
         let p50 = h.quantile(0.5);
         let p99 = h.quantile(0.99);
         assert!(p50 <= p99);
-        assert!(p50 > 1e-3 && p50 < 1e-2, "p50={p50}");
+        // True p50 is ~5.0e-3. In-bucket interpolation must land within
+        // one bucket width (10^0.25 ≈ 1.78×) of it — the old upper-edge
+        // answer could be a full bucket high.
+        let true_p50 = 5.0e-3;
+        let width = 10f64.powf(0.25);
+        assert!(
+            p50 > true_p50 / width && p50 < true_p50 * width,
+            "p50={p50} not within a bucket width of {true_p50}"
+        );
+    }
+
+    #[test]
+    fn histogram_interpolates_within_a_single_bucket() {
+        // All mass in one bucket: quantiles must spread across the bucket
+        // instead of all collapsing to its upper edge.
+        let h = Histogram::new();
+        for _ in 0..1000 {
+            h.record(2e-3); // bucket [1.78e-3, 3.16e-3)
+        }
+        let p10 = h.quantile(0.10);
+        let p90 = h.quantile(0.90);
+        assert!(p10 < p90, "p10={p10} p90={p90}");
+        let lo = 10f64.powf(-11.0 / 4.0); // bucket lower edge
+        let hi = 10f64.powf(-10.0 / 4.0); // bucket upper edge
+        assert!(p10 >= lo && p90 <= hi, "quantiles escaped the bucket");
+    }
+
+    #[test]
+    fn record_clamps_pathological_inputs() {
+        let h = Histogram::new();
+        h.record(f64::NAN);
+        h.record(-5.0);
+        h.record(f64::INFINITY);
+        assert_eq!(h.count(), 3);
+        // NaN and negative clamp to 0s; +Inf clamps to the u64 ns ceiling
+        // — the mean stays finite either way.
+        assert!(h.mean().is_finite());
+        assert_eq!(h.bucket_counts()[0], 2);
+    }
+
+    #[test]
+    fn record_sum_saturates_instead_of_wrapping() {
+        let h = Histogram::new();
+        // Two observations that each saturate the ns sum on their own:
+        // a wrapping add would land near zero and wreck the mean.
+        h.record(1e30);
+        h.record(1e30);
+        assert_eq!(h.count(), 2);
+        let expected = u64::MAX as f64 / 1e9 / 2.0;
+        assert!(
+            (h.mean() - expected).abs() / expected < 1e-9,
+            "mean={} should sit at the saturation ceiling",
+            h.mean()
+        );
     }
 
     #[test]
@@ -263,6 +435,108 @@ mod tests {
         let j = m.to_json();
         assert_eq!(j.get("requests_submitted").unwrap().as_f64(), Some(5.0));
         assert!(j.get("solve_latency_mean_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn json_exports_full_quartet_for_both_histograms() {
+        let m = Metrics::new();
+        m.solve_latency.record(0.01);
+        m.solve_latency.record(0.02);
+        m.queue_wait.record(0.001);
+        let j = m.to_json();
+        for key in [
+            "solve_latency_mean_s",
+            "solve_latency_p50_s",
+            "solve_latency_p99_s",
+            "solve_latency_count",
+            "queue_wait_mean_s",
+            "queue_wait_p50_s",
+            "queue_wait_p99_s",
+            "queue_wait_count",
+        ] {
+            let v = j.get(key).unwrap_or_else(|| panic!("{key} missing")).as_f64().unwrap();
+            assert!(v > 0.0, "{key}={v}");
+        }
+        assert_eq!(j.get("solve_latency_count").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("queue_wait_count").unwrap().as_f64(), Some(1.0));
+    }
+
+    /// The obs-smoke CI job runs this format checker: every sample's
+    /// metric family is declared with `# TYPE`, histogram buckets are
+    /// cumulative, and every histogram closes with `+Inf`/`_sum`/`_count`.
+    #[test]
+    fn prometheus_exposition_well_formed() {
+        let m = Metrics::new();
+        m.requests_submitted.store(7, Ordering::Relaxed);
+        m.record_backend_job(SolverKind::Bak);
+        m.solve_latency.record(0.004);
+        m.solve_latency.record(0.04);
+        m.queue_wait.record(0.0001);
+        let text = m.to_prometheus();
+
+        let mut declared: Vec<String> = Vec::new();
+        for line in text.lines() {
+            assert!(!line.trim().is_empty(), "no blank lines in exposition");
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut it = rest.split_whitespace();
+                let fam = it.next().unwrap().to_string();
+                let kind = it.next().unwrap();
+                assert!(matches!(kind, "counter" | "gauge" | "histogram"), "{line}");
+                assert!(!declared.contains(&fam), "family {fam} declared twice");
+                declared.push(fam);
+                continue;
+            }
+            // Sample line: name{labels} value — its family must have been
+            // declared. Histogram samples belong to the base family.
+            let name = line.split(['{', ' ']).next().unwrap();
+            let fam = name
+                .strip_suffix("_bucket")
+                .or_else(|| name.strip_suffix("_sum"))
+                .or_else(|| name.strip_suffix("_count"))
+                .unwrap_or(name);
+            assert!(
+                declared.iter().any(|d| d == fam || d == name),
+                "sample {name} has no # TYPE declaration"
+            );
+            assert!(name.starts_with("pallas_"), "unprefixed metric {name}");
+            let value = line.rsplit(' ').next().unwrap();
+            assert!(value.parse::<f64>().is_ok(), "unparseable value in {line}");
+        }
+
+        for hist in ["pallas_solve_latency_seconds", "pallas_queue_wait_seconds"] {
+            let buckets: Vec<u64> = text
+                .lines()
+                .filter(|l| l.starts_with(&format!("{hist}_bucket")) && !l.contains("+Inf"))
+                .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+                .collect();
+            assert_eq!(buckets.len(), 40, "{hist} bucket series");
+            assert!(buckets.windows(2).all(|w| w[0] <= w[1]), "{hist} not cumulative");
+            let inf: u64 = text
+                .lines()
+                .find(|l| l.starts_with(&format!("{hist}_bucket{{le=\"+Inf\"}}")))
+                .expect("+Inf bucket")
+                .rsplit(' ')
+                .next()
+                .unwrap()
+                .parse()
+                .unwrap();
+            let count: u64 = text
+                .lines()
+                .find(|l| l.starts_with(&format!("{hist}_count")))
+                .expect("_count sample")
+                .rsplit(' ')
+                .next()
+                .unwrap()
+                .parse()
+                .unwrap();
+            assert_eq!(inf, count, "{hist}: +Inf bucket must equal _count");
+            assert_eq!(*buckets.last().unwrap(), count, "last bucket must reach _count");
+            assert!(
+                text.lines().any(|l| l.starts_with(&format!("{hist}_sum"))),
+                "{hist}_sum missing"
+            );
+        }
+        assert!(text.contains("pallas_backend_jobs_total{backend=\"bak\"} 1"));
     }
 
     #[test]

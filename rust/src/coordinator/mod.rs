@@ -12,10 +12,14 @@
 //!   input matrix into one multi-RHS job (amortises column norms and the
 //!   matrix walk — the serving-batch analogue for solvers).
 //! * [`metrics`] — counters + latency histograms + worker-pool gauges,
-//!   JSON-dumpable.
+//!   JSON-dumpable and exportable as Prometheus text
+//!   ([`metrics::Metrics::to_prometheus`]).
 //! * [`service`] — the leader: scheduler + [`crate::parallel::Executor`]
 //!   worker pool (panic isolation per job, graceful drain-on-shutdown),
-//!   request lifecycle.
+//!   request lifecycle. Traced requests ([`SolveRequest::traced`]) run as
+//!   singleton jobs and come back with a [`crate::obs::Telemetry`]: span
+//!   timeline + convergence trajectory, retained in a bounded ring of
+//!   recent traces ([`service::Coordinator::traces`]).
 
 pub mod batch;
 pub mod metrics;

@@ -86,6 +86,12 @@ pub struct SolveRequest {
     pub y: Vec<f32>,
     pub opts: SolveOptions,
     pub backend: SolverKind,
+    /// Optional trace context ([`crate::obs::TraceCtx`]): when set, the
+    /// coordinator records a per-stage span timeline and a convergence
+    /// trajectory for this request, returns them in the outcome's
+    /// `telemetry`, and never coalesces the request with others (the
+    /// timeline must describe exactly one solve).
+    pub trace: Option<Arc<crate::obs::TraceCtx>>,
 }
 
 impl SolveRequest {
@@ -106,7 +112,20 @@ impl SolveRequest {
 
     /// Construct from an already-wrapped [`SharedMatrix`].
     pub fn with_matrix(id: u64, x: SharedMatrix, y: Vec<f32>) -> Self {
-        Self { id, x, y, opts: SolveOptions::default(), backend: SolverKind::Auto }
+        Self {
+            id,
+            x,
+            y,
+            opts: SolveOptions::default(),
+            backend: SolverKind::Auto,
+            trace: None,
+        }
+    }
+
+    /// Attach a fresh trace context (see the `trace` field).
+    pub fn traced(mut self) -> Self {
+        self.trace = Some(crate::obs::TraceCtx::fresh());
+        self
     }
 
     /// A stable identity for the shared matrix — the batching key.
@@ -122,6 +141,9 @@ pub struct SolveJob {
     pub members: Vec<(u64, Vec<f32>)>,
     pub opts: SolveOptions,
     pub backend: SolverKind,
+    /// Trace context carried over from a traced request (always a
+    /// singleton job — the scheduler never coalesces traced requests).
+    pub trace: Option<Arc<crate::obs::TraceCtx>>,
 }
 
 impl SolveJob {
@@ -132,6 +154,7 @@ impl SolveJob {
             members: vec![(req.id, req.y)],
             opts: req.opts,
             backend: req.backend,
+            trace: req.trace,
         }
     }
 
@@ -157,6 +180,9 @@ pub struct SolveOutcome {
     pub seconds: f64,
     /// How many requests were coalesced into the job this ran in.
     pub batch_size: usize,
+    /// Span timeline + convergence trajectory, present only for traced
+    /// requests ([`SolveRequest::traced`]).
+    pub telemetry: Option<crate::obs::Telemetry>,
 }
 
 #[cfg(test)]

@@ -26,7 +26,16 @@
 //! One coordinator, many TCP clients; each connection gets a handler
 //! thread that parses requests, submits to the service, and streams
 //! responses back in arrival order. `{"cmd": "metrics"}` returns the
-//! metrics snapshot; `{"cmd": "shutdown"}` stops the listener.
+//! metrics snapshot; `{"cmd": "metrics_prom"}` returns the same counters
+//! in Prometheus text exposition format (under `"text"`);
+//! `{"cmd": "traces", "n": 16}` returns the most recent traced-solve
+//! timelines; `{"cmd": "shutdown"}` stops the listener.
+//!
+//! Adding `"trace": true` to a solve request threads a
+//! [`crate::obs::TraceCtx`] through the coordinator: the response gains a
+//! `"telemetry"` object with the trace id, per-stage span timeline
+//! (`queue_wait`/`route`/`solve`/...), and the solver's convergence
+//! trajectory (see [`crate::obs`]).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -181,6 +190,17 @@ fn handle_line(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
     if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
         return match cmd {
             "metrics" => coord.metrics().to_json(),
+            "metrics_prom" => ObjBuilder::new()
+                .bool("ok", true)
+                .str("text", coord.metrics().to_prometheus())
+                .build(),
+            "traces" => {
+                let n = req.get("n").and_then(Json::as_usize).unwrap_or(16);
+                let traces = Json::Arr(
+                    coord.traces().recent(n).iter().map(|t| t.to_json()).collect(),
+                );
+                ObjBuilder::new().bool("ok", true).val("traces", traces).build()
+            }
             "ping" => ObjBuilder::new().bool("ok", true).str("pong", "pong").build(),
             "shutdown" => {
                 stop.store(true, Ordering::Relaxed);
@@ -199,7 +219,7 @@ fn handle_line(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
             match out.report {
                 Ok(rep) => {
                     let a = Json::Arr(rep.a.iter().map(|&v| Json::Num(v as f64)).collect());
-                    ObjBuilder::new()
+                    let mut b = ObjBuilder::new()
                         .bool("ok", true)
                         .num("id", id as f64)
                         .str("backend", out.backend.to_string())
@@ -207,8 +227,11 @@ fn handle_line(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
                         .num("rel_residual", rep.rel_residual())
                         .num("sweeps", rep.sweeps as f64)
                         .num("seconds", out.seconds)
-                        .num("batch_size", out.batch_size as f64)
-                        .build()
+                        .num("batch_size", out.batch_size as f64);
+                    if let Some(t) = &out.telemetry {
+                        b = b.val("telemetry", t.to_json());
+                    }
+                    b.build()
                 }
                 Err(e) => error_json(Some(id), &e),
             }
@@ -303,6 +326,9 @@ fn parse_solve(j: &Json) -> Result<SolveRequest, String> {
         opts.threads = t.max(1);
     }
     req.opts = opts;
+    if j.get("trace").and_then(Json::as_bool) == Some(true) {
+        req = req.traced();
+    }
     Ok(req)
 }
 
@@ -416,6 +442,79 @@ mod tests {
         assert!(j.get("workers_busy").is_some());
         assert!(j.get("jobs_inflight").is_some());
         assert!(j.get("worker_panics").is_some());
+        server.stop();
+    }
+
+    #[test]
+    fn traced_solve_returns_telemetry_and_traces_cmd_recalls_it() {
+        let (_c, server) = start();
+        let req = r#"{"id": 21, "backend": "bak", "obs": 4, "vars": 2,
+            "x": [1,0, 0,1, 1,1, 1,-1], "y": [2, 3, 5, -1],
+            "sweeps": 200, "tol": 1e-6, "trace": true}"#
+            .replace('\n', " ");
+        let j = roundtrip(server.addr(), &req);
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true), "{j:?}");
+        let tel = j.get("telemetry").expect("traced response carries telemetry");
+        let trace_id = tel.get("trace_id").unwrap().as_f64().unwrap();
+        assert!(trace_id > 0.0);
+        // Span timeline covers the coordinator stages.
+        let names: Vec<&str> = tel
+            .get("spans")
+            .unwrap()
+            .items()
+            .iter()
+            .map(|s| s.get("name").unwrap().as_str().unwrap())
+            .collect();
+        for stage in ["queue_wait", "route", "solve", "merge"] {
+            assert!(names.contains(&stage), "{stage} missing from {names:?}");
+        }
+        // Convergence trajectory is present and residuals do not increase
+        // (BAK reduces the residual norm at every accepted step).
+        let traj = tel.get("trajectory").unwrap().items();
+        assert!(!traj.is_empty());
+        let rs: Vec<f64> =
+            traj.iter().map(|p| p.get("residual_norm").unwrap().as_f64().unwrap()).collect();
+        for w in rs.windows(2) {
+            assert!(w[1] <= w[0] * (1.0 + 1e-9), "residuals increased: {rs:?}");
+        }
+        // The trace is recallable after the fact.
+        let t = roundtrip(server.addr(), r#"{"cmd": "traces"}"#);
+        assert_eq!(t.get("ok").unwrap().as_bool(), Some(true));
+        let ids: Vec<f64> = t
+            .get("traces")
+            .unwrap()
+            .items()
+            .iter()
+            .map(|x| x.get("trace_id").unwrap().as_f64().unwrap())
+            .collect();
+        assert!(ids.contains(&trace_id), "{trace_id} not in {ids:?}");
+        // Untraced requests carry no telemetry.
+        let plain = roundtrip(
+            server.addr(),
+            r#"{"id": 22, "backend": "qr", "obs": 2, "vars": 2, "x": [1,0, 0,1], "y": [1, 2]}"#,
+        );
+        assert_eq!(plain.get("ok").unwrap().as_bool(), Some(true));
+        assert!(plain.get("telemetry").is_none());
+        server.stop();
+    }
+
+    #[test]
+    fn metrics_prom_over_tcp() {
+        let (_c, server) = start();
+        // One solve so the counters are non-trivial.
+        let req = r#"{"id": 31, "backend": "bak", "obs": 4, "vars": 2,
+            "x": [1,0, 0,1, 1,1, 1,-1], "y": [2, 3, 5, -1], "sweeps": 50}"#
+            .replace('\n', " ");
+        let j = roundtrip(server.addr(), &req);
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true), "{j:?}");
+        let m = roundtrip(server.addr(), r#"{"cmd": "metrics_prom"}"#);
+        assert_eq!(m.get("ok").unwrap().as_bool(), Some(true));
+        let text = m.get("text").unwrap().as_str().unwrap();
+        assert!(text.contains("# TYPE pallas_requests_submitted_total counter"));
+        assert!(text.contains("pallas_solve_latency_seconds_bucket"));
+        assert!(text.contains("le=\"+Inf\""));
+        assert!(text.contains("pallas_solve_latency_seconds_count 1"));
+        assert!(text.contains("pallas_backend_jobs_total{backend=\"bak\"} 1"));
         server.stop();
     }
 

@@ -35,13 +35,22 @@ use crate::linalg::Mat;
 use crate::parallel::Executor;
 use crate::runtime::Engine;
 use crate::solver::{self, SolveReport};
-use crate::util::log::{emit, Level};
+use crate::util::log::{emit, emit_traced, Level};
+
+use crate::obs::{ProbeHandle, RingProbe, Telemetry, TraceCtx, TraceRing};
 
 use super::batch::{coalesce, BatchPolicy};
 use super::metrics::Metrics;
 use super::queue::BoundedQueue;
 use super::request::{SharedMatrix, SolveJob, SolveOutcome, SolveRequest};
 use super::router::route;
+
+/// Points kept per traced solve's convergence trajectory (the probe
+/// downsamples past this, never reallocates).
+const TRACE_TRAJECTORY_CAP: usize = 256;
+
+/// Completed traced solves retained for the server's `traces` command.
+const TRACE_RING_CAP: usize = 64;
 
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
@@ -83,6 +92,7 @@ struct JobEnvelope {
 pub struct Coordinator {
     submit_q: Arc<BoundedQueue<Envelope>>,
     metrics: Arc<Metrics>,
+    traces: Arc<TraceRing>,
     engine: Option<Arc<Engine>>,
     scheduler: Option<std::thread::JoinHandle<()>>,
     executor: Option<Arc<Executor<JobEnvelope>>>,
@@ -93,6 +103,7 @@ impl Coordinator {
     /// `config.workers`-wide [`Executor`].
     pub fn start(config: CoordinatorConfig) -> Self {
         let metrics = Arc::new(Metrics::new());
+        let traces = Arc::new(TraceRing::new(TRACE_RING_CAP));
         let engine = config.artifact_dir.as_ref().and_then(|dir| match Engine::new(dir) {
             Ok(e) => Some(Arc::new(e)),
             Err(err) => {
@@ -112,6 +123,7 @@ impl Coordinator {
         let executor = {
             let metrics = metrics.clone();
             let engine = engine.clone();
+            let traces = traces.clone();
             Arc::new(Executor::start(
                 "bak-worker",
                 config.workers.max(1),
@@ -120,7 +132,7 @@ impl Coordinator {
                     metrics
                         .job_queue_depth
                         .fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
-                    run_job(env, engine.as_ref(), &metrics);
+                    run_job(env, engine.as_ref(), &metrics, &traces);
                 },
             ))
         };
@@ -146,7 +158,14 @@ impl Coordinator {
                 .expect("spawn scheduler")
         };
 
-        Self { submit_q, metrics, engine, scheduler: Some(scheduler), executor: Some(executor) }
+        Self {
+            submit_q,
+            metrics,
+            traces,
+            engine,
+            scheduler: Some(scheduler),
+            executor: Some(executor),
+        }
     }
 
     /// Submit a request; returns the reply receiver. Blocks when the
@@ -194,6 +213,7 @@ impl Coordinator {
                 backend: SolverKind::Auto,
                 seconds: 0.0,
                 batch_size: 0,
+                telemetry: None,
             }),
             Err(e) => SolveOutcome {
                 id: 0,
@@ -201,6 +221,7 @@ impl Coordinator {
                 backend: SolverKind::Auto,
                 seconds: 0.0,
                 batch_size: 0,
+                telemetry: None,
             },
         }
     }
@@ -208,6 +229,12 @@ impl Coordinator {
     /// Service metrics.
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// Ring of recently completed traced solves (oldest first in
+    /// [`TraceRing::recent`]).
+    pub fn traces(&self) -> &Arc<TraceRing> {
+        &self.traces
     }
 
     /// The PJRT engine, when artifacts were loaded.
@@ -256,6 +283,21 @@ fn schedule_batch(
     let mut reqs = Vec::with_capacity(envs.len());
     for env in envs {
         metrics.queue_wait.record(env.submitted.elapsed().as_secs_f64());
+        if let Some(ctx) = env.req.trace.clone() {
+            // Traced requests become singleton jobs — coalescing would
+            // make the span timeline and trajectory describe a batch, not
+            // the request. The queue wait is recorded retroactively: the
+            // span began when the request was submitted.
+            ctx.record_ns("queue_wait", ctx.ns_of(env.submitted), ctx.now_ns(), None);
+            metrics.job_queue_depth.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let job = SolveJob::single(env.req);
+            let env = JobEnvelope { job, replies: vec![(env.reply, env.submitted)] };
+            if executor.submit(env).is_err() {
+                metrics.job_queue_depth.fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
+                return; // shutting down
+            }
+            continue;
+        }
         replies.insert(env.req.id, (env.reply, env.submitted));
         reqs.push(env.req);
     }
@@ -280,9 +322,23 @@ fn schedule_batch(
     }
 }
 
-fn run_job(env: JobEnvelope, engine: Option<&Arc<Engine>>, metrics: &Metrics) {
-    let JobEnvelope { job, replies } = env;
+fn run_job(
+    env: JobEnvelope,
+    engine: Option<&Arc<Engine>>,
+    metrics: &Metrics,
+    traces: &TraceRing,
+) {
+    let JobEnvelope { mut job, replies } = env;
     metrics.jobs_run.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    // Traced job: mint a probe into the options so the solver loop feeds
+    // the trajectory ring, and open per-stage spans around route / solve /
+    // merge below. Untraced jobs skip all of it (probe stays disabled).
+    let tracing: Option<(Arc<TraceCtx>, Arc<RingProbe>)> = job.trace.clone().map(|ctx| {
+        let probe = RingProbe::new(TRACE_TRAJECTORY_CAP);
+        job.opts.probe = ProbeHandle::new(probe.clone());
+        (ctx, probe)
+    });
+    let route_span = tracing.as_ref().map(|(ctx, _)| ctx.begin("route", None));
     let decision = route(
         job.backend,
         job.x.rows(),
@@ -292,12 +348,25 @@ fn run_job(env: JobEnvelope, engine: Option<&Arc<Engine>>, metrics: &Metrics) {
         job.opts.threads,
         engine.map(|e| e.manifest()),
     );
+    if let (Some((ctx, _)), Some(idx)) = (&tracing, route_span) {
+        ctx.end(idx);
+    }
     metrics.record_backend_job(decision.backend);
     let batch_size = job.len();
-    let outcomes = execute_job(&job, decision.backend, engine, metrics);
-    for (((id, _), outcome), (reply, _submitted)) in
-        job.members.iter().zip(outcomes).zip(replies)
-    {
+    let solve_span = tracing.as_ref().map(|(ctx, _)| ctx.begin("solve", None));
+    let trace_arg: Option<(&TraceCtx, usize)> = match (&tracing, solve_span) {
+        (Some((ctx, _)), Some(idx)) => Some((ctx.as_ref(), idx)),
+        _ => None,
+    };
+    let outcomes = execute_job(&job, decision.backend, engine, metrics, trace_arg);
+    if let (Some((ctx, _)), Some(idx)) = (&tracing, solve_span) {
+        ctx.end(idx);
+    }
+
+    // Merge stage: attribute latencies and stitch ids back on.
+    let merge_span = tracing.as_ref().map(|(ctx, _)| ctx.begin("merge", None));
+    let mut merged = Vec::with_capacity(outcomes.len());
+    for ((id, _), outcome) in job.members.iter().zip(outcomes) {
         let ok = outcome.report.is_ok();
         metrics.solve_latency.record(outcome.seconds);
         if ok {
@@ -305,7 +374,42 @@ fn run_job(env: JobEnvelope, engine: Option<&Arc<Engine>>, metrics: &Metrics) {
         } else {
             metrics.requests_failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         }
-        let _ = reply.send(SolveOutcome { id: *id, batch_size, ..outcome });
+        merged.push(SolveOutcome { id: *id, batch_size, ..outcome });
+    }
+    if let (Some((ctx, _)), Some(idx)) = (&tracing, merge_span) {
+        ctx.end(idx);
+    }
+
+    // Assemble the telemetry AFTER every span closed so the snapshot is
+    // complete, keep a copy in the service-wide ring, and attach it to the
+    // (singleton) traced outcome.
+    let telemetry = tracing.map(|(ctx, probe)| {
+        let tel = Telemetry {
+            trace_id: ctx.id(),
+            spans: ctx.spans(),
+            trajectory: probe.snapshot(),
+        };
+        traces.push(tel.clone());
+        tel
+    });
+    if let Some(t) = &telemetry {
+        emit_traced(
+            Level::Debug,
+            "coordinator",
+            Some(t.trace_id),
+            format_args!(
+                "traced solve on '{}': {} spans, {} trajectory points",
+                decision.backend,
+                t.spans.len(),
+                t.trajectory.len()
+            ),
+        );
+    }
+    for (mut outcome, (reply, _submitted)) in merged.into_iter().zip(replies) {
+        if let Some(t) = &telemetry {
+            outcome.telemetry = Some(t.clone());
+        }
+        let _ = reply.send(outcome);
     }
 }
 
@@ -321,6 +425,7 @@ fn execute_job(
     backend: SolverKind,
     engine: Option<&Arc<Engine>>,
     metrics: &Metrics,
+    trace: Option<(&TraceCtx, usize)>,
 ) -> Vec<SolveOutcome> {
     match &job.x {
         SharedMatrix::Dense(x) => {
@@ -388,7 +493,11 @@ fn execute_job(
                         job.len()
                     ),
                 );
+                let densify_span = trace.map(|(ctx, parent)| ctx.begin("densify", Some(parent)));
                 let dense = s.to_dense();
+                if let (Some((ctx, _)), Some(idx)) = (trace, densify_span) {
+                    ctx.end(idx);
+                }
                 execute_dense_job(job, &dense, backend, engine)
             }
         }
@@ -403,16 +512,32 @@ fn execute_job(
                 metrics.stream_bytes_read.fetch_add(st.bytes_read, Relaxed);
                 metrics.stream_buffer_stalls.fetch_add(st.buffer_stalls, Relaxed);
             };
+            // Streamed solves interleave disk reads with compute, so the
+            // `stream_io` child span covers the whole chunk-pass solve —
+            // it marks the phase whose wall time includes IO, not an
+            // isolated IO measurement (the stall *count* is in metrics).
+            let io_spanned = |f: &mut dyn FnMut() -> Result<SolveReport, SolverError>| {
+                let io_span = trace.map(|(ctx, parent)| ctx.begin("stream_io", Some(parent)));
+                let r = f();
+                if let (Some((ctx, _)), Some(idx)) = (trace, io_span) {
+                    ctx.end(idx);
+                }
+                r
+            };
             match backend {
                 SolverKind::Bak => per_member(job, backend, |y| {
-                    let r = crate::stream::solve_bak_stream(s, y, &job.opts)?;
-                    record(&r.stats);
-                    Ok(r.report)
+                    io_spanned(&mut || {
+                        let r = crate::stream::solve_bak_stream(s, y, &job.opts)?;
+                        record(&r.stats);
+                        Ok(r.report)
+                    })
                 }),
                 SolverKind::Kaczmarz => per_member(job, backend, |y| {
-                    let r = crate::stream::solve_kaczmarz_stream(s, y, &job.opts)?;
-                    record(&r.stats);
-                    Ok(r.report)
+                    io_spanned(&mut || {
+                        let r = crate::stream::solve_kaczmarz_stream(s, y, &job.opts)?;
+                        record(&r.stats);
+                        Ok(r.report)
+                    })
                 }),
                 SolverKind::BakMulti => {
                     // Every valid member in ONE set of chunk passes
@@ -431,7 +556,13 @@ fn execute_job(
                         .filter(|(_, c)| c.is_ok())
                         .map(|((_, y), _)| y.clone())
                         .collect();
-                    match crate::stream::solve_bak_multi_stream(s, &ys, &job.opts) {
+                    let io_span =
+                        trace.map(|(ctx, parent)| ctx.begin("stream_io", Some(parent)));
+                    let multi_res = crate::stream::solve_bak_multi_stream(s, &ys, &job.opts);
+                    if let (Some((ctx, _)), Some(idx)) = (trace, io_span) {
+                        ctx.end(idx);
+                    }
+                    match multi_res {
                         Ok(multi) => {
                             record(&multi.stats);
                             let mut reports = multi.reports.into_iter();
@@ -449,6 +580,7 @@ fn execute_job(
                                     backend,
                                     seconds: secs,
                                     batch_size: 0,
+                                    telemetry: None,
                                 })
                                 .collect()
                         }
@@ -502,6 +634,7 @@ fn execute_dense_job(
                             backend,
                             seconds: factor_s + t1.elapsed().as_secs_f64(),
                             batch_size: 0,
+                            telemetry: None,
                         }
                     })
                     .collect()
@@ -556,6 +689,7 @@ fn execute_dense_job(
                     backend,
                     seconds: secs,
                     batch_size: 0,
+                    telemetry: None,
                 })
                 .collect()
         }
@@ -605,6 +739,7 @@ fn per_member(
                 backend,
                 seconds: t0.elapsed().as_secs_f64(),
                 batch_size: 0,
+                telemetry: None,
             }
         })
         .collect()
@@ -883,9 +1018,10 @@ mod tests {
             members,
             opts: solver::SolveOptions::default(),
             backend: SolverKind::Qr,
+            trace: None,
         };
         let metrics = Metrics::new();
-        let outcomes = execute_job(&job, SolverKind::Qr, None, &metrics);
+        let outcomes = execute_job(&job, SolverKind::Qr, None, &metrics, None);
         assert_eq!(outcomes.len(), 5);
         assert!(outcomes.iter().all(|o| o.report.is_ok()));
         assert_eq!(
@@ -971,15 +1107,58 @@ mod tests {
             members,
             opts: solver::SolveOptions::accurate(),
             backend: SolverKind::BakMulti,
+            trace: None,
         };
         let metrics = Metrics::new();
-        let outcomes = execute_job(&job, SolverKind::BakMulti, None, &metrics);
+        let outcomes = execute_job(&job, SolverKind::BakMulti, None, &metrics, None);
         assert_eq!(outcomes.len(), 4);
         assert!(outcomes.iter().all(|o| o.report.is_ok()));
         assert!(
             metrics.stream_chunks_read.load(std::sync::atomic::Ordering::Relaxed) > 0
         );
         let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn traced_request_returns_telemetry_and_fills_ring() {
+        let coord = Coordinator::start(CoordinatorConfig::default());
+        let (x, y, _) = planted(430, 300, 20);
+        let mut req = SolveRequest::new(11, x, y).traced();
+        req.backend = SolverKind::Bak;
+        req.opts = solver::SolveOptions::builder().max_sweeps(20).tol(0.0).build();
+        let out = coord.solve_blocking(req);
+        let rep = out.report.expect("traced solve ok");
+        let tel = out.telemetry.expect("telemetry present on traced outcome");
+        assert!(tel.trace_id > 0);
+        // The trajectory mirrors the solver's residual history.
+        assert!(!tel.trajectory.is_empty());
+        assert_eq!(tel.trajectory.len(), rep.history.len().min(256));
+        for w in tel.trajectory.windows(2) {
+            assert!(w[0].sweep < w[1].sweep, "sweeps strictly increase");
+        }
+        // Spans: queue_wait + route + solve + merge at minimum, all closed.
+        let names: Vec<&str> = tel.spans.iter().map(|s| s.name).collect();
+        for stage in ["queue_wait", "route", "solve", "merge"] {
+            assert!(names.contains(&stage), "{stage} span missing: {names:?}");
+        }
+        for s in &tel.spans {
+            assert!(s.end_ns >= s.start_ns, "span {} never closed", s.name);
+        }
+        // The completed trace is retained in the service ring.
+        let recent = coord.traces().recent(8);
+        assert!(recent.iter().any(|t| t.trace_id == tel.trace_id));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn untraced_request_has_no_telemetry() {
+        let coord = Coordinator::start(CoordinatorConfig::default());
+        let (x, y, _) = planted(431, 60, 8);
+        let out = coord.solve_blocking(SolveRequest::new(12, x, y));
+        assert!(out.report.is_ok());
+        assert!(out.telemetry.is_none());
+        assert!(coord.traces().is_empty());
+        coord.shutdown();
     }
 
     #[test]

@@ -176,8 +176,69 @@
 //! `solvebak solve --x-file x.sbck --mem-budget 8388608`. The CI
 //! `stream-smoke` job holds the acceptance bar: a 96 MiB matrix solved
 //! under an 8 MiB budget with peak RSS checked against budget + slack.
+//!
+//! ## Observability
+//!
+//! The [`obs`] module makes the two things the paper advertises —
+//! controllable accuracy and O(mn) runtime — measurable in production:
+//!
+//! * **Convergence probes.** Every iterative solver (dense, sparse,
+//!   parallel, and streaming BAK/Kaczmarz/CGLS loops) calls an optional
+//!   [`obs::SolveProbe`] once per residual check with
+//!   `(sweep, residual_norm, elapsed_ns)`. The probe rides inside
+//!   [`solver::SolveOptions::probe`]; the disabled default costs one
+//!   branch per sweep — no allocation, no clock read. See the
+//!   capability-matrix `probe` column in [`api`] for which backends
+//!   report (the direct methods `qr`/`cholesky`/`gauss` and the bucketed
+//!   `pjrt` runtime have no per-sweep residual to report).
+//!
+//! ```no_run
+//! use solvebak::api::{solver_for, Problem, SolverKind};
+//! use solvebak::linalg::Mat;
+//! use solvebak::obs::{ProbeHandle, RingProbe};
+//! use solvebak::solver::SolveOptions;
+//! use solvebak::util::rng::Rng;
+//!
+//! let mut rng = Rng::seed(42);
+//! let x = Mat::randn(&mut rng, 1000, 100);
+//! let y = x.matvec(&vec![0.5; 100]);
+//! let problem = Problem::new(&x, &y).expect("validated");
+//!
+//! let probe = RingProbe::new(64); // <= 64 downsampled points
+//! let opts = SolveOptions::builder()
+//!     .tol(1e-6)
+//!     .probe(ProbeHandle::new(probe.clone()))
+//!     .build();
+//! solver_for(SolverKind::Bak).unwrap().solve(&problem, &opts).unwrap();
+//! for p in probe.snapshot() {
+//!     println!("sweep {} residual {}", p.sweep, p.residual_norm);
+//! }
+//! ```
+//!
+//! * **Spans & traces.** A request submitted to the coordinator with
+//!   `"trace": true` gets a process-unique trace id and a per-stage span
+//!   timeline (`queue_wait`, `route`, `solve` with `densify`/`stream_io`
+//!   children, `merge`), returned in the response under `"telemetry"`
+//!   together with the downsampled residual trajectory, and retained in a
+//!   bounded ring served by `{"cmd":"traces"}`:
+//!
+//! ```text
+//! $ echo '{"id":1,"obs":2,"vars":2,"x":[1,0,0,1],"y":[2,3],"trace":true}' | nc 127.0.0.1 7447
+//! {"ok":true,...,"telemetry":{"trace_id":1,"spans":[...],"trajectory":[...]}}
+//! ```
+//!
+//! * **Metrics exposition & the live dashboard.** `{"cmd":"metrics"}`
+//!   returns the JSON counters; `{"cmd":"metrics_prom"}` returns the same
+//!   registry in Prometheus text exposition format v0.0.4 (counters,
+//!   gauges, cumulative histogram `_bucket`/`_sum`/`_count` series) ready
+//!   to scrape; `solvebak stats --addr 127.0.0.1:7447 --interval 1` polls
+//!   a running coordinator and prints a one-line-per-poll dashboard
+//!   (req/s, p50/p99 latency, queue depth, busy workers, stream stalls).
+//!   Set `PALLAS_LOG_FORMAT=json` to switch [`util::log`] to structured
+//!   one-object-per-line output with optional `trace_id` correlation.
 
 pub mod util;
+pub mod obs;
 pub mod linalg;
 pub mod sparse;
 pub mod baselines;

@@ -1,0 +1,469 @@
+//! Observability primitives: solver convergence probes, request spans, and
+//! the bounded ring of recent traces.
+//!
+//! Three pieces, designed so the disabled path costs nothing:
+//!
+//! * [`SolveProbe`] / [`ProbeHandle`] — a per-sweep callback carried inside
+//!   [`crate::solver::SolveOptions`]. The handle is a newtype over
+//!   `Option<Arc<dyn SolveProbe>>`: when no probe is attached the solver's
+//!   per-sweep cost is a single `is_some()` branch — no allocation, no
+//!   clock read, no virtual call. [`RingProbe`] is the standard
+//!   implementation: a bounded, stride-downsampled residual trajectory.
+//! * [`TraceCtx`] / [`SpanRecord`] — a per-request trace: a process-unique
+//!   id ([`next_trace_id`]) plus a list of named spans with nanosecond
+//!   monotonic timestamps relative to the trace epoch and optional parent
+//!   links. Spans are appended under a short mutex hold (the coordinator
+//!   records a handful per request, never per sweep).
+//! * [`Telemetry`] / [`TraceRing`] — the per-request result (trace id,
+//!   span timeline, residual trajectory), returned to traced clients under
+//!   `"telemetry"` and retained in a bounded in-memory ring for the
+//!   server's `{"cmd":"traces"}` endpoint.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::{Json, ObjBuilder};
+
+/// Per-sweep convergence observer. Implementations must be cheap and
+/// lock-light: iterative solvers call [`SolveProbe::on_sweep`] once per
+/// residual check (at most once per sweep) from the solving thread.
+pub trait SolveProbe: Send + Sync {
+    /// `sweep` is 1-based (the solver's `sweeps` counter at the check),
+    /// `residual_norm` is `||y - Xa||` (not squared), `elapsed_ns` is time
+    /// since the solve loop started.
+    fn on_sweep(&self, sweep: usize, residual_norm: f64, elapsed_ns: u64);
+}
+
+/// A cloneable, optionally-attached probe, carried by value inside
+/// [`crate::solver::SolveOptions`].
+///
+/// The disabled default is the zero-overhead path the acceptance criteria
+/// pin: `observe` is one branch on `Option::is_some`; the clock is read
+/// and the sqrt taken only when a probe is attached.
+#[derive(Clone, Default)]
+pub struct ProbeHandle(Option<Arc<dyn SolveProbe>>);
+
+impl ProbeHandle {
+    /// The disabled probe (same as `ProbeHandle::default()`).
+    pub fn none() -> Self {
+        ProbeHandle(None)
+    }
+
+    /// Attach a probe.
+    pub fn new(probe: Arc<dyn SolveProbe>) -> Self {
+        ProbeHandle(Some(probe))
+    }
+
+    /// True when a probe is attached.
+    pub fn is_enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Called by solver loops right after they push `r2` (the squared
+    /// residual) into the report history. `t0` is the loop's start
+    /// instant; the elapsed time is computed only when a probe is
+    /// attached.
+    #[inline]
+    pub fn observe(&self, sweep: usize, r2: f64, t0: Instant) {
+        if let Some(p) = &self.0 {
+            p.on_sweep(sweep, r2.sqrt(), t0.elapsed().as_nanos() as u64);
+        }
+    }
+}
+
+impl std::fmt::Debug for ProbeHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(if self.0.is_some() { "ProbeHandle(on)" } else { "ProbeHandle(off)" })
+    }
+}
+
+/// One point of a downsampled residual trajectory.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TrajectoryPoint {
+    /// 1-based sweep index at the residual check.
+    pub sweep: usize,
+    /// `||y - Xa||` at that sweep.
+    pub residual_norm: f64,
+    /// Nanoseconds since the solve loop started.
+    pub elapsed_ns: u64,
+}
+
+struct RingInner {
+    points: Vec<TrajectoryPoint>,
+    stride: usize,
+}
+
+/// A [`SolveProbe`] that keeps a bounded residual trajectory by stride
+/// doubling: it records every `stride`-th sweep, and when the buffer
+/// fills it drops every other retained point and doubles the stride — so
+/// an N-point budget covers any sweep count with roughly even spacing and
+/// O(1) amortised work per sweep.
+pub struct RingProbe {
+    cap: usize,
+    inner: Mutex<RingInner>,
+}
+
+impl RingProbe {
+    /// `cap` points are retained at most; cap < 2 is clamped to 2 so the
+    /// stride-doubling invariant (always room for sweep 1 and the latest
+    /// recorded sweep) holds.
+    pub fn new(cap: usize) -> Arc<Self> {
+        Arc::new(RingProbe {
+            cap: cap.max(2),
+            inner: Mutex::new(RingInner { points: Vec::new(), stride: 1 }),
+        })
+    }
+
+    /// The trajectory recorded so far, in sweep order.
+    pub fn snapshot(&self) -> Vec<TrajectoryPoint> {
+        self.inner.lock().expect("ring probe lock").points.clone()
+    }
+}
+
+impl SolveProbe for RingProbe {
+    fn on_sweep(&self, sweep: usize, residual_norm: f64, elapsed_ns: u64) {
+        let mut g = self.inner.lock().expect("ring probe lock");
+        // Solvers may check less often than every sweep (check_every);
+        // accept any sweep aligned to the stride, plus the very first
+        // observation so short solves are never empty.
+        if !g.points.is_empty() && sweep % g.stride != 0 {
+            return;
+        }
+        if g.points.len() == self.cap {
+            let s2 = g.stride * 2;
+            g.points.retain(|p| p.sweep % s2 == 0 || p.sweep == 1);
+            g.stride = s2;
+            if sweep % g.stride != 0 {
+                return;
+            }
+        }
+        g.points.push(TrajectoryPoint { sweep, residual_norm, elapsed_ns });
+    }
+}
+
+static TRACE_IDS: AtomicU64 = AtomicU64::new(1);
+
+/// Mint a process-unique trace id (monotone from 1).
+pub fn next_trace_id() -> u64 {
+    TRACE_IDS.fetch_add(1, Ordering::Relaxed)
+}
+
+/// One named span inside a trace. Timestamps are nanoseconds since the
+/// owning [`TraceCtx`]'s epoch; `end_ns == 0` means still open.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanRecord {
+    /// Stage name (`queue_wait`, `route`, `densify`, `stream_io`,
+    /// `solve`, `merge`, …).
+    pub name: &'static str,
+    /// Start, ns since the trace epoch.
+    pub start_ns: u64,
+    /// End, ns since the trace epoch (0 while open).
+    pub end_ns: u64,
+    /// Index of the parent span in the trace's span list, if any.
+    pub parent: Option<usize>,
+}
+
+impl SpanRecord {
+    /// Span duration (0 while the span is open).
+    pub fn duration_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+}
+
+/// A per-request trace: unique id, a monotonic epoch, and the recorded
+/// spans. Shared across threads as `Arc<TraceCtx>` (the request travels
+/// submit thread → scheduler → worker).
+pub struct TraceCtx {
+    id: u64,
+    epoch: Instant,
+    spans: Mutex<Vec<SpanRecord>>,
+}
+
+impl TraceCtx {
+    /// A fresh trace with a newly minted id, epoch = now.
+    pub fn fresh() -> Arc<Self> {
+        Arc::new(TraceCtx {
+            id: next_trace_id(),
+            epoch: Instant::now(),
+            spans: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Nanoseconds from the trace epoch to now.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Nanoseconds from the trace epoch to `t` (0 if `t` precedes the
+    /// epoch — e.g. a request submitted before tracing was attached).
+    pub fn ns_of(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_nanos() as u64
+    }
+
+    /// Open a span now; returns its index for [`TraceCtx::end`].
+    pub fn begin(&self, name: &'static str, parent: Option<usize>) -> usize {
+        let start_ns = self.now_ns();
+        let mut g = self.spans.lock().expect("trace lock");
+        g.push(SpanRecord { name, start_ns, end_ns: 0, parent });
+        g.len() - 1
+    }
+
+    /// Close the span opened by [`TraceCtx::begin`].
+    pub fn end(&self, idx: usize) {
+        let end_ns = self.now_ns();
+        let mut g = self.spans.lock().expect("trace lock");
+        if let Some(s) = g.get_mut(idx) {
+            s.end_ns = end_ns;
+        }
+    }
+
+    /// Record a span whose start/end are already known (e.g. queue wait
+    /// reconstructed from the submit timestamp). Returns its index.
+    pub fn record_ns(
+        &self,
+        name: &'static str,
+        start_ns: u64,
+        end_ns: u64,
+        parent: Option<usize>,
+    ) -> usize {
+        let mut g = self.spans.lock().expect("trace lock");
+        g.push(SpanRecord { name, start_ns, end_ns, parent });
+        g.len() - 1
+    }
+
+    /// Snapshot of the spans recorded so far.
+    pub fn spans(&self) -> Vec<SpanRecord> {
+        self.spans.lock().expect("trace lock").clone()
+    }
+}
+
+impl std::fmt::Debug for TraceCtx {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceCtx").field("id", &self.id).finish_non_exhaustive()
+    }
+}
+
+/// The observable result of one traced request: span timeline + residual
+/// trajectory. Returned under `"telemetry"` in server responses and kept
+/// in the coordinator's [`TraceRing`].
+#[derive(Clone, Debug)]
+pub struct Telemetry {
+    pub trace_id: u64,
+    pub spans: Vec<SpanRecord>,
+    pub trajectory: Vec<TrajectoryPoint>,
+}
+
+impl Telemetry {
+    /// JSON shape:
+    /// `{"trace_id":n,"spans":[{"name","start_ns","end_ns","parent"}],
+    ///   "trajectory":[{"sweep","residual_norm","elapsed_ns"}]}`.
+    pub fn to_json(&self) -> Json {
+        let spans: Vec<Json> = self
+            .spans
+            .iter()
+            .map(|s| {
+                let mut b = ObjBuilder::new()
+                    .str("name", s.name)
+                    .num("start_ns", s.start_ns as f64)
+                    .num("end_ns", s.end_ns as f64);
+                if let Some(p) = s.parent {
+                    b = b.num("parent", p as f64);
+                }
+                b.build()
+            })
+            .collect();
+        let traj: Vec<Json> = self
+            .trajectory
+            .iter()
+            .map(|p| {
+                ObjBuilder::new()
+                    .num("sweep", p.sweep as f64)
+                    .num("residual_norm", p.residual_norm)
+                    .num("elapsed_ns", p.elapsed_ns as f64)
+                    .build()
+            })
+            .collect();
+        ObjBuilder::new()
+            .num("trace_id", self.trace_id as f64)
+            .val("spans", Json::Arr(spans))
+            .val("trajectory", Json::Arr(traj))
+            .build()
+    }
+}
+
+/// Bounded in-memory ring of the most recent [`Telemetry`] records.
+pub struct TraceRing {
+    cap: usize,
+    inner: Mutex<VecDeque<Telemetry>>,
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> Self {
+        TraceRing { cap: cap.max(1), inner: Mutex::new(VecDeque::new()) }
+    }
+
+    /// Append a completed trace, evicting the oldest past capacity.
+    pub fn push(&self, t: Telemetry) {
+        let mut g = self.inner.lock().expect("trace ring lock");
+        if g.len() == self.cap {
+            g.pop_front();
+        }
+        g.push_back(t);
+    }
+
+    /// The most recent `n` traces, oldest first.
+    pub fn recent(&self, n: usize) -> Vec<Telemetry> {
+        let g = self.inner.lock().expect("trace ring lock");
+        g.iter().rev().take(n).rev().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("trace ring lock").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_handle_disabled_is_inert() {
+        let h = ProbeHandle::default();
+        assert!(!h.is_enabled());
+        // Must be callable with no probe attached (the solver hot path).
+        h.observe(1, 4.0, Instant::now());
+        assert_eq!(format!("{h:?}"), "ProbeHandle(off)");
+    }
+
+    #[test]
+    fn ring_probe_records_residual_norm_not_squared() {
+        let p = RingProbe::new(8);
+        let h = ProbeHandle::new(p.clone());
+        assert!(h.is_enabled());
+        h.observe(1, 9.0, Instant::now());
+        let snap = p.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].sweep, 1);
+        assert!((snap[0].residual_norm - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ring_probe_downsamples_past_capacity() {
+        let p = RingProbe::new(8);
+        for sweep in 1..=1000usize {
+            p.on_sweep(sweep, 1.0 / sweep as f64, sweep as u64);
+        }
+        let snap = p.snapshot();
+        assert!(snap.len() <= 8, "cap respected, got {}", snap.len());
+        assert!(snap.len() >= 2, "long solve keeps multiple points");
+        // Sweep order preserved, strictly increasing.
+        for w in snap.windows(2) {
+            assert!(w[0].sweep < w[1].sweep);
+        }
+    }
+
+    #[test]
+    fn ring_probe_short_solves_keep_every_point() {
+        let p = RingProbe::new(32);
+        for sweep in 1..=5usize {
+            p.on_sweep(sweep, 1.0, 0);
+        }
+        assert_eq!(p.snapshot().len(), 5);
+    }
+
+    #[test]
+    fn ring_probe_accepts_sparse_check_cadence() {
+        // check_every=50: sweeps arrive as 50, 100, 150, ... — the first
+        // observation must be recorded regardless of stride alignment.
+        let p = RingProbe::new(8);
+        for k in 1..=4usize {
+            p.on_sweep(50 * k, 1.0, 0);
+        }
+        assert!(!p.snapshot().is_empty());
+    }
+
+    #[test]
+    fn trace_ids_unique_and_monotone() {
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert!(b > a);
+    }
+
+    #[test]
+    fn trace_ctx_spans_nest_and_close() {
+        let ctx = TraceCtx::fresh();
+        let solve = ctx.begin("solve", None);
+        let child = ctx.begin("densify", Some(solve));
+        ctx.end(child);
+        ctx.end(solve);
+        let spans = ctx.spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].name, "solve");
+        assert_eq!(spans[1].parent, Some(0));
+        assert!(spans[1].end_ns >= spans[1].start_ns);
+        assert!(spans[0].end_ns >= spans[1].end_ns, "parent closes after child");
+    }
+
+    #[test]
+    fn trace_ctx_record_ns_and_ns_of_saturate() {
+        let ctx = TraceCtx::fresh();
+        // An instant before the epoch must clamp to 0, not underflow.
+        let before = Instant::now();
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        let ctx2 = TraceCtx::fresh();
+        assert_eq!(ctx2.ns_of(before), 0);
+        let idx = ctx.record_ns("queue_wait", 5, 10, None);
+        assert_eq!(ctx.spans()[idx].duration_ns(), 5);
+    }
+
+    #[test]
+    fn telemetry_json_shape() {
+        let t = Telemetry {
+            trace_id: 7,
+            spans: vec![SpanRecord { name: "solve", start_ns: 1, end_ns: 9, parent: None }],
+            trajectory: vec![TrajectoryPoint {
+                sweep: 1,
+                residual_norm: 0.5,
+                elapsed_ns: 100,
+            }],
+        };
+        let j = t.to_json();
+        assert_eq!(j.get("trace_id").unwrap().as_f64(), Some(7.0));
+        let spans = match j.get("spans").unwrap() {
+            Json::Arr(v) => v,
+            other => panic!("spans not an array: {other:?}"),
+        };
+        assert_eq!(spans[0].get("name").unwrap().as_str(), Some("solve"));
+        let traj = match j.get("trajectory").unwrap() {
+            Json::Arr(v) => v,
+            other => panic!("trajectory not an array: {other:?}"),
+        };
+        assert_eq!(traj[0].get("sweep").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn trace_ring_bounded_and_recent_ordered() {
+        let ring = TraceRing::new(3);
+        for i in 0..5u64 {
+            ring.push(Telemetry { trace_id: i, spans: vec![], trajectory: vec![] });
+        }
+        assert_eq!(ring.len(), 3);
+        let recent = ring.recent(2);
+        assert_eq!(recent.len(), 2);
+        assert_eq!(recent[0].trace_id, 3);
+        assert_eq!(recent[1].trace_id, 4);
+        // Asking for more than retained returns all, oldest first.
+        let all = ring.recent(10);
+        assert_eq!(all.iter().map(|t| t.trace_id).collect::<Vec<_>>(), vec![2, 3, 4]);
+    }
+}

@@ -195,6 +195,7 @@ fn bak_par_generic<C: ColAccess>(x: &C, y: &[f32], opts: &SolveOptions) -> Solve
     let mut stop = StopReason::MaxSweeps;
     let mut sweeps = 0;
     let mut prev_r2 = f64::INFINITY;
+    let t0 = std::time::Instant::now();
 
     for sweep in 0..opts.max_sweeps {
         // Phase 1 — concurrent inner sweeps: each block refreshes its own
@@ -259,6 +260,7 @@ fn bak_par_generic<C: ColAccess>(x: &C, y: &[f32], opts: &SolveOptions) -> Solve
         if check_now || sweeps == opts.max_sweeps {
             let r2 = blas1::sum_sq_f64(&e);
             history.push(r2);
+            opts.probe.observe(sweeps, r2, t0);
             if opts.tol > 0.0 && r2 <= tol_sq {
                 stop = StopReason::Converged;
                 break;
@@ -339,6 +341,7 @@ fn kaczmarz_par_generic<R: RowAccess>(x: &R, y: &[f32], opts: &SolveOptions) -> 
     let mut stop = StopReason::MaxSweeps;
     let mut sweeps = 0;
     let mut prev_r2 = f64::INFINITY;
+    let t0 = std::time::Instant::now();
 
     for sweep in 0..opts.max_sweeps {
         // Each block projects onto its own rows; the RNG stream is keyed
@@ -384,6 +387,7 @@ fn kaczmarz_par_generic<R: RowAccess>(x: &R, y: &[f32], opts: &SolveOptions) -> 
         let e = x.residual_vec(y, &a);
         let r2 = blas1::sum_sq_f64(&e);
         history.push(r2);
+        opts.probe.observe(sweeps, r2, t0);
         if opts.tol > 0.0 && r2 <= tol_sq {
             stop = StopReason::Converged;
             break;
@@ -430,8 +434,12 @@ fn bak_multi_par_generic<C: ColAccess>(
     let threads = opts.threads.max(1);
     let cninv = x.colnorms_inv_vec(); // once, for every RHS on every worker
     let chunks = partition_ranges(ys.len(), threads);
+    // Only the chunk holding the global first RHS reports to the probe
+    // (one trajectory per solve, mirroring the serial multi-RHS solver).
+    let no_probe = crate::obs::ProbeHandle::none();
     let per_chunk: Vec<Vec<SolveReport>> = par_map_chunks(threads, chunks.len(), |c| {
-        bak_multi_chunk(x, &cninv, &ys[chunks[c].clone()], opts)
+        let probe = if c == 0 { &opts.probe } else { &no_probe };
+        bak_multi_chunk(x, &cninv, &ys[chunks[c].clone()], opts, probe)
     });
     per_chunk.into_iter().flatten().collect()
 }
@@ -443,6 +451,7 @@ fn bak_multi_chunk<C: ColAccess>(
     cninv: &[f32],
     ys: &[Vec<f32>],
     opts: &SolveOptions,
+    probe: &crate::obs::ProbeHandle,
 ) -> Vec<SolveReport> {
     let vars = x.cols();
     let nrhs = ys.len();
@@ -453,6 +462,7 @@ fn bak_multi_chunk<C: ColAccess>(
     let mut done: Vec<Option<StopReason>> = vec![None; nrhs];
     let mut prev_r2 = vec![f64::INFINITY; nrhs];
     let mut sweeps_done = vec![0usize; nrhs];
+    let t0 = std::time::Instant::now();
 
     for sweep in 0..opts.max_sweeps {
         if done.iter().all(Option::is_some) {
@@ -478,6 +488,9 @@ fn bak_multi_chunk<C: ColAccess>(
             sweeps_done[r] = sweep + 1;
             let r2 = blas1::sum_sq_f64(&e[r]);
             history[r].push(r2);
+            if r == 0 {
+                probe.observe(sweeps_done[r], r2, t0);
+            }
             if opts.tol > 0.0 && r2 <= opts.tol * opts.tol * y_norm_sq[r] {
                 done[r] = Some(StopReason::Converged);
             } else if r2 >= prev_r2[r] * (1.0 - 1e-9) && sweep > 0 {

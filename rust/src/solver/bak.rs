@@ -56,6 +56,7 @@ pub fn solve_bak_warm(
     let mut stop = StopReason::MaxSweeps;
     let mut sweeps = 0;
     let mut prev_r2 = f64::INFINITY;
+    let t0 = std::time::Instant::now();
 
     for sweep in 0..opts.max_sweeps {
         if opts.order == ColumnOrder::Shuffled {
@@ -74,6 +75,7 @@ pub fn solve_bak_warm(
         if check_now || sweeps == opts.max_sweeps {
             let r2 = blas1::sum_sq_f64(e);
             history.push(r2);
+            opts.probe.observe(sweeps, r2, t0);
             if opts.tol > 0.0 && r2 <= tol_sq {
                 stop = StopReason::Converged;
                 break;
@@ -253,6 +255,27 @@ mod tests {
         o.check_every = 5;
         let rep = solve_bak(&x, &y, &o);
         assert!(rep.history.len() <= 5); // 20/5 + final
+    }
+
+    #[test]
+    fn probe_sees_every_check_and_does_not_perturb_solve() {
+        let (x, y, _) = planted(114, 100, 20);
+        let probe = crate::obs::RingProbe::new(64);
+        let mut o = SolveOptions::default();
+        o.tol = 0.0;
+        o.max_sweeps = 10;
+        o.probe = crate::obs::ProbeHandle::new(probe.clone());
+        let rep = solve_bak(&x, &y, &o);
+        let snap = probe.snapshot();
+        assert_eq!(snap.len(), rep.history.len());
+        for (p, &h) in snap.iter().zip(&rep.history) {
+            assert!((p.residual_norm - h.sqrt()).abs() < 1e-12);
+        }
+        // Same solve without the probe is bit-identical.
+        let mut o2 = o.clone();
+        o2.probe = crate::obs::ProbeHandle::none();
+        let rep2 = solve_bak(&x, &y, &o2);
+        assert_eq!(rep.a, rep2.a);
     }
 
     #[test]

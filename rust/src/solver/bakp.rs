@@ -35,6 +35,7 @@ pub fn solve_bakp(x: &Mat, y: &[f32], opts: &SolveOptions) -> SolveReport {
     let mut sweeps = 0;
     let mut prev_r2 = f64::INFINITY;
     let threads = opts.threads.max(1);
+    let t0 = std::time::Instant::now();
 
     for sweep in 0..opts.max_sweeps {
         let mut j0 = 0;
@@ -48,6 +49,7 @@ pub fn solve_bakp(x: &Mat, y: &[f32], opts: &SolveOptions) -> SolveReport {
         if check_now || sweeps == opts.max_sweeps {
             let r2 = blas1::sum_sq_f64(&e);
             history.push(r2);
+            opts.probe.observe(sweeps, r2, t0);
             if opts.tol > 0.0 && r2 <= tol_sq {
                 stop = StopReason::Converged;
                 break;

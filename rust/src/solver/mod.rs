@@ -65,6 +65,11 @@ pub struct SolveOptions {
     pub check_every: usize,
     /// Seed for the shuffled order.
     pub seed: u64,
+    /// Optional per-sweep convergence observer
+    /// ([`crate::obs::SolveProbe`]): iterative solvers report
+    /// `(sweep, residual_norm, elapsed_ns)` at every residual check. The
+    /// disabled default costs a single branch per sweep.
+    pub probe: crate::obs::ProbeHandle,
 }
 
 impl Default for SolveOptions {
@@ -77,6 +82,7 @@ impl Default for SolveOptions {
             threads: 1,
             check_every: 1,
             seed: 0x5eed,
+            probe: crate::obs::ProbeHandle::none(),
         }
     }
 }
@@ -141,6 +147,11 @@ impl SolveOptionsBuilder {
 
     pub fn seed(mut self, v: u64) -> Self {
         self.opts.seed = v;
+        self
+    }
+
+    pub fn probe(mut self, v: crate::obs::ProbeHandle) -> Self {
+        self.opts.probe = v;
         self
     }
 
@@ -238,6 +249,17 @@ mod tests {
         assert_eq!(o.order, d.order);
         assert_eq!(o.check_every, d.check_every);
         assert_eq!(o.seed, d.seed);
+        assert!(!o.probe.is_enabled(), "probe defaults to disabled");
+    }
+
+    #[test]
+    fn builder_attaches_probe() {
+        let probe = crate::obs::RingProbe::new(8);
+        let o = SolveOptions::builder()
+            .probe(crate::obs::ProbeHandle::new(probe))
+            .build();
+        assert!(o.probe.is_enabled());
+        assert!(!SolveOptions::default().probe.is_enabled());
     }
 
     #[test]

@@ -74,6 +74,7 @@ pub fn solve_kaczmarz(x: &Mat, y: &[f32], opts: &SolveOptions) -> SolveReport {
     let mut stop = StopReason::MaxSweeps;
     let mut sweeps = 0;
     let mut prev_r2 = f64::INFINITY;
+    let t0 = std::time::Instant::now();
 
     // One "sweep" = obs row projections (comparable work to a BAK sweep
     // on square systems; obs/vars ratio otherwise).
@@ -98,6 +99,7 @@ pub fn solve_kaczmarz(x: &Mat, y: &[f32], opts: &SolveOptions) -> SolveReport {
         let e = crate::linalg::residual(x, y, &a);
         let r2 = blas1::sum_sq_f64(&e);
         history.push(r2);
+        opts.probe.observe(sweeps, r2, t0);
         if opts.tol > 0.0 && r2 <= tol_sq {
             stop = StopReason::Converged;
             break;
@@ -129,6 +131,7 @@ pub fn solve_gauss_southwell(x: &Mat, y: &[f32], opts: &SolveOptions) -> SolveRe
     let mut stop = StopReason::MaxSweeps;
     let mut sweeps = 0;
     let mut prev_r2 = f64::INFINITY;
+    let t0 = std::time::Instant::now();
 
     for sweep in 0..opts.max_sweeps {
         for _ in 0..vars {
@@ -153,6 +156,7 @@ pub fn solve_gauss_southwell(x: &Mat, y: &[f32], opts: &SolveOptions) -> SolveRe
         sweeps = sweep + 1;
         let r2 = blas1::sum_sq_f64(&e);
         history.push(r2);
+        opts.probe.observe(sweeps, r2, t0);
         if opts.tol > 0.0 && r2 <= tol_sq {
             stop = StopReason::Converged;
             break;
@@ -189,6 +193,7 @@ pub fn solve_bakp_damped(
     let mut stop = StopReason::MaxSweeps;
     let mut sweeps = 0;
     let mut prev_r2 = f64::INFINITY;
+    let t0 = std::time::Instant::now();
 
     for sweep in 0..opts.max_sweeps {
         let mut j0 = 0;
@@ -208,6 +213,7 @@ pub fn solve_bakp_damped(
         sweeps = sweep + 1;
         let r2 = blas1::sum_sq_f64(&e);
         history.push(r2);
+        opts.probe.observe(sweeps, r2, t0);
         if opts.tol > 0.0 && r2 <= tol_sq {
             stop = StopReason::Converged;
             break;
@@ -239,6 +245,7 @@ pub fn solve_bak_multi(x: &Mat, ys: &[Vec<f32>], opts: &SolveOptions) -> Vec<Sol
     let mut done: Vec<Option<StopReason>> = vec![None; nrhs];
     let mut prev_r2 = vec![f64::INFINITY; nrhs];
     let mut sweeps_done = vec![0usize; nrhs];
+    let t0 = std::time::Instant::now();
 
     for sweep in 0..opts.max_sweeps {
         if done.iter().all(Option::is_some) {
@@ -266,6 +273,11 @@ pub fn solve_bak_multi(x: &Mat, ys: &[Vec<f32>], opts: &SolveOptions) -> Vec<Sol
             sweeps_done[r] = sweep + 1;
             let r2 = blas1::sum_sq_f64(&e[r]);
             history[r].push(r2);
+            if r == 0 {
+                // Multi-RHS solves report the first system's trajectory
+                // (members of a coalesced batch share the matrix walk).
+                opts.probe.observe(sweeps_done[r], r2, t0);
+            }
             if opts.tol > 0.0 && r2 <= opts.tol * opts.tol * y_norm_sq[r] {
                 done[r] = Some(StopReason::Converged);
             } else if r2 >= prev_r2[r] * (1.0 - 1e-9) && sweep > 0 {

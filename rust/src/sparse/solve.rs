@@ -70,6 +70,7 @@ pub fn solve_bak_csc_warm(
     let mut stop = StopReason::MaxSweeps;
     let mut sweeps = 0;
     let mut prev_r2 = f64::INFINITY;
+    let t0 = std::time::Instant::now();
 
     for sweep in 0..opts.max_sweeps {
         if opts.order == ColumnOrder::Shuffled {
@@ -89,6 +90,7 @@ pub fn solve_bak_csc_warm(
         if check_now || sweeps == opts.max_sweeps {
             let r2 = blas1::sum_sq_f64(e);
             history.push(r2);
+            opts.probe.observe(sweeps, r2, t0);
             if opts.tol > 0.0 && r2 <= tol_sq {
                 stop = StopReason::Converged;
                 break;
@@ -130,6 +132,7 @@ pub fn solve_bakp_csc(x: &CscMat, y: &[f32], opts: &SolveOptions) -> SolveReport
     let mut stop = StopReason::MaxSweeps;
     let mut sweeps = 0;
     let mut prev_r2 = f64::INFINITY;
+    let t0 = std::time::Instant::now();
 
     for sweep in 0..opts.max_sweeps {
         let mut j0 = 0;
@@ -155,6 +158,7 @@ pub fn solve_bakp_csc(x: &CscMat, y: &[f32], opts: &SolveOptions) -> SolveReport
         if check_now || sweeps == opts.max_sweeps {
             let r2 = blas1::sum_sq_f64(&e);
             history.push(r2);
+            opts.probe.observe(sweeps, r2, t0);
             if opts.tol > 0.0 && r2 <= tol_sq {
                 stop = StopReason::Converged;
                 break;
@@ -207,6 +211,7 @@ pub fn solve_kaczmarz_csr(x: &CsrMat, y: &[f32], opts: &SolveOptions) -> SolveRe
     let mut stop = StopReason::MaxSweeps;
     let mut sweeps = 0;
     let mut prev_r2 = f64::INFINITY;
+    let t0 = std::time::Instant::now();
 
     for sweep in 0..opts.max_sweeps {
         for _ in 0..obs {
@@ -227,6 +232,7 @@ pub fn solve_kaczmarz_csr(x: &CsrMat, y: &[f32], opts: &SolveOptions) -> SolveRe
         let e = residual_csr(x, y, &a);
         let r2 = blas1::sum_sq_f64(&e);
         history.push(r2);
+        opts.probe.observe(sweeps, r2, t0);
         if opts.tol > 0.0 && r2 <= tol_sq {
             stop = StopReason::Converged;
             break;
@@ -250,6 +256,18 @@ fn residual_csr(x: &CsrMat, y: &[f32], a: &[f32]) -> Vec<f32> {
 /// O(nnz) matvec/matvec_t per iteration. Mirrors
 /// [`crate::baselines::cgls::cgls_solve`].
 pub fn cgls_csc(x: &CscMat, y: &[f32], max_iter: usize, tol: f64) -> CglsReport {
+    cgls_csc_probed(x, y, max_iter, tol, &crate::obs::ProbeHandle::none())
+}
+
+/// [`cgls_csc`] with a per-iteration convergence probe (one CGLS
+/// iteration counts as one "sweep").
+pub fn cgls_csc_probed(
+    x: &CscMat,
+    y: &[f32],
+    max_iter: usize,
+    tol: f64,
+    probe: &crate::obs::ProbeHandle,
+) -> CglsReport {
     let (m, n) = x.shape();
     assert_eq!(y.len(), m);
     let mut a = vec![0.0f32; n];
@@ -261,6 +279,7 @@ pub fn cgls_csc(x: &CscMat, y: &[f32], max_iter: usize, tol: f64) -> CglsReport 
     let mut history = Vec::with_capacity(max_iter);
     let mut converged = false;
     let mut iterations = 0;
+    let t0 = std::time::Instant::now();
 
     for _ in 0..max_iter {
         iterations += 1;
@@ -273,7 +292,9 @@ pub fn cgls_csc(x: &CscMat, y: &[f32], max_iter: usize, tol: f64) -> CglsReport 
         let alpha = (gamma / qq) as f32;
         blas1::axpy(alpha, &p, &mut a);
         blas1::axpy(-alpha, &q, &mut r);
-        history.push(blas1::sum_sq_f64(&r));
+        let r2 = blas1::sum_sq_f64(&r);
+        history.push(r2);
+        probe.observe(iterations, r2, t0);
         s = x.matvec_t(&r);
         let gamma_new = blas1::sum_sq_f64(&s);
         if gamma_new <= tol * tol * gamma0 {

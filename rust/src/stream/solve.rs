@@ -133,6 +133,7 @@ pub fn solve_bak_stream(
     let mut stop = StopReason::MaxSweeps;
     let mut sweeps = 0;
     let mut prev_r2 = f64::INFINITY;
+    let t0 = std::time::Instant::now();
 
     for sweep in 0..opts.max_sweeps {
         pass(&stream, |j0, width, data| {
@@ -151,6 +152,7 @@ pub fn solve_bak_stream(
         if check_now || sweeps == opts.max_sweeps {
             let r2 = blas1::sum_sq_f64(&e);
             history.push(r2);
+            opts.probe.observe(sweeps, r2, t0);
             if opts.tol > 0.0 && r2 <= tol_sq {
                 stop = StopReason::Converged;
                 break;
@@ -196,6 +198,7 @@ pub fn solve_bak_multi_stream(
     let mut done: Vec<Option<StopReason>> = vec![None; nrhs];
     let mut prev_r2 = vec![f64::INFINITY; nrhs];
     let mut sweeps_done = vec![0usize; nrhs];
+    let t0 = std::time::Instant::now();
 
     for sweep in 0..opts.max_sweeps {
         if done.iter().all(Option::is_some) {
@@ -226,6 +229,11 @@ pub fn solve_bak_multi_stream(
             sweeps_done[r] = sweep + 1;
             let r2 = blas1::sum_sq_f64(&e[r]);
             history[r].push(r2);
+            if r == 0 {
+                // Like the in-memory multi-RHS solver: the probe follows the
+                // first system's trajectory.
+                opts.probe.observe(sweeps_done[r], r2, t0);
+            }
             if opts.tol > 0.0 && r2 <= opts.tol * opts.tol * y_norm_sq[r] {
                 done[r] = Some(StopReason::Converged);
             } else if r2 >= prev_r2[r] * (1.0 - 1e-9) && sweep > 0 {
@@ -330,6 +338,7 @@ pub fn solve_kaczmarz_stream(
     let mut sweeps = 0;
     let mut prev_r2 = f64::INFINITY;
     let mut draws = Vec::with_capacity(obs);
+    let t0 = std::time::Instant::now();
 
     for sweep in 0..opts.max_sweeps {
         // Hoist the sweep's RNG draws: the in-memory loop consumes exactly
@@ -388,6 +397,7 @@ pub fn solve_kaczmarz_stream(
         let e = streamed_residual(&stream, y, &a)?;
         let r2 = blas1::sum_sq_f64(&e);
         history.push(r2);
+        opts.probe.observe(sweeps, r2, t0);
         if opts.tol > 0.0 && r2 <= tol_sq {
             stop = StopReason::Converged;
             break;

@@ -1,5 +1,12 @@
 //! Tiny leveled logger (the offline registry has `log` but no emitter;
 //! this is self-contained and used by the coordinator + benches).
+//!
+//! Setting `PALLAS_LOG_FORMAT=json` switches every record to one JSON
+//! object per line (`{"ts": ..., "level": ..., "target": ..., "msg": ...}`)
+//! so log shippers can ingest them without a parser; records emitted via
+//! [`emit_traced`] additionally carry the solve's `trace_id`, joining log
+//! lines to the span timelines returned by the coordinator's `traces`
+//! command.
 
 use std::io::Write;
 use std::sync::atomic::{AtomicU8, Ordering};
@@ -37,20 +44,77 @@ pub fn level() -> Level {
     }
 }
 
-/// Emit a record (used by the macros).
-pub fn emit(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
-    if level < self::level() {
-        return;
+/// True when `PALLAS_LOG_FORMAT=json` was set at first emit (cached —
+/// the format cannot flip mid-process).
+fn json_format() -> bool {
+    static JSON: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *JSON.get_or_init(|| {
+        std::env::var("PALLAS_LOG_FORMAT").map(|v| v == "json").unwrap_or(false)
+    })
+}
+
+/// Render one record. Pure (no clock, no env, no IO) so both formats are
+/// unit-testable; `emit_traced` supplies the elapsed time and format flag.
+fn format_record(
+    json: bool,
+    t: f64,
+    level: Level,
+    target: &str,
+    trace_id: Option<u64>,
+    msg: &str,
+) -> String {
+    if json {
+        let mut b = crate::util::json::ObjBuilder::new()
+            .num("ts", t)
+            .str(
+                "level",
+                match level {
+                    Level::Debug => "debug",
+                    Level::Info => "info",
+                    Level::Warn => "warn",
+                    Level::Error => "error",
+                },
+            )
+            .str("target", target)
+            .str("msg", msg);
+        if let Some(id) = trace_id {
+            b = b.num("trace_id", id as f64);
+        }
+        return b.build().to_string();
     }
-    let t = start().elapsed().as_secs_f64();
     let tag = match level {
         Level::Debug => "DEBUG",
         Level::Info => "INFO ",
         Level::Warn => "WARN ",
         Level::Error => "ERROR",
     };
+    match trace_id {
+        Some(id) => format!("[{t:9.3}s {tag} {target}] (trace {id}) {msg}"),
+        None => format!("[{t:9.3}s {tag} {target}] {msg}"),
+    }
+}
+
+/// Emit a record (used by the macros).
+pub fn emit(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    emit_traced(level, target, None, msg);
+}
+
+/// Emit a record tied to a traced solve: in JSON mode the line carries a
+/// `trace_id` field, in text mode a `(trace N)` prefix, so operators can
+/// grep a request's logs from its trace id (and vice versa).
+pub fn emit_traced(
+    level: Level,
+    target: &str,
+    trace_id: Option<u64>,
+    msg: std::fmt::Arguments<'_>,
+) {
+    if level < self::level() {
+        return;
+    }
+    let t = start().elapsed().as_secs_f64();
+    let line = format_record(json_format(), t, level, target, trace_id, &msg.to_string());
     let mut err = std::io::stderr().lock();
-    let _ = writeln!(err, "[{t:9.3}s {tag} {target}] {msg}");
+    let _ = writeln!(err, "{line}");
 }
 
 /// Log at INFO.
@@ -104,5 +168,43 @@ mod tests {
     #[test]
     fn emit_does_not_panic() {
         emit(Level::Error, "test", format_args!("hello {}", 1));
+        emit_traced(Level::Error, "test", Some(42), format_args!("traced"));
+    }
+
+    #[test]
+    fn text_format_with_and_without_trace() {
+        let plain = format_record(false, 1.5, Level::Info, "server", None, "started");
+        assert!(plain.contains("INFO"));
+        assert!(plain.contains("server"));
+        assert!(plain.contains("started"));
+        assert!(!plain.contains("trace"));
+        let traced = format_record(false, 1.5, Level::Warn, "service", Some(7), "slow");
+        assert!(traced.contains("(trace 7)"));
+        assert!(traced.contains("WARN"));
+    }
+
+    #[test]
+    fn json_format_is_parseable_and_escapes() {
+        let line = format_record(
+            true,
+            0.25,
+            Level::Error,
+            "server",
+            Some(99),
+            "bad \"quoted\" input",
+        );
+        let j = crate::util::json::Json::parse(&line).expect("valid json log line");
+        assert_eq!(j.get("level").unwrap().as_str(), Some("error"));
+        assert_eq!(j.get("target").unwrap().as_str(), Some("server"));
+        assert_eq!(j.get("ts").unwrap().as_f64(), Some(0.25));
+        assert_eq!(j.get("trace_id").unwrap().as_f64(), Some(99.0));
+        assert_eq!(j.get("msg").unwrap().as_str(), Some("bad \"quoted\" input"));
+    }
+
+    #[test]
+    fn json_format_omits_trace_id_when_absent() {
+        let line = format_record(true, 0.0, Level::Debug, "t", None, "m");
+        let j = crate::util::json::Json::parse(&line).unwrap();
+        assert!(j.get("trace_id").is_none());
     }
 }

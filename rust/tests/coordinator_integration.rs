@@ -175,6 +175,111 @@ fn queue_wait_metric_recorded() {
 }
 
 #[test]
+fn traced_request_end_to_end_trajectory_and_span_accounting() {
+    // The PR-7 acceptance path: a traced solve returns (a) a per-sweep
+    // residual trajectory that never increases — the paper's "accuracy is
+    // straightforwardly controlled" claim made observable — and (b) a span
+    // timeline whose top-level stage durations are bounded by the
+    // request's total wall latency.
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 2,
+        ..CoordinatorConfig::default()
+    });
+    let mut rng = Rng::seed(907);
+    let x = Arc::new(Mat::randn(&mut rng, 500, 30));
+    let (y, a_true) = planted_rhs(&x, 7000);
+    let mut req = SolveRequest::new(1, x, y).traced();
+    req.backend = Backend::Bak;
+    req.opts = SolveOptions::accurate();
+
+    let t0 = std::time::Instant::now();
+    let out = coord.solve_blocking(req);
+    let total_ns = t0.elapsed().as_nanos() as u64;
+
+    let rep = out.report.expect("traced solve ok");
+    assert!(rel_l2(&rep.a, &a_true) < 1e-3);
+    let tel = out.telemetry.expect("telemetry on traced outcome");
+
+    // (a) Monotonically non-increasing residual trajectory.
+    assert!(tel.trajectory.len() >= 2, "want a real curve, got {:?}", tel.trajectory);
+    for w in tel.trajectory.windows(2) {
+        assert!(
+            w[1].residual_norm <= w[0].residual_norm * (1.0 + 1e-9),
+            "residual increased: {} -> {} at sweep {}",
+            w[0].residual_norm,
+            w[1].residual_norm,
+            w[1].sweep
+        );
+    }
+    // Probe timestamps move forward with the sweeps.
+    for w in tel.trajectory.windows(2) {
+        assert!(w[1].elapsed_ns >= w[0].elapsed_ns);
+        assert!(w[1].sweep > w[0].sweep);
+    }
+
+    // (b) Span accounting: every span closed, and the top-level stages
+    // (parent == None) sum to no more than the observed wall latency.
+    let names: Vec<&str> = tel.spans.iter().map(|s| s.name).collect();
+    for stage in ["queue_wait", "route", "solve", "merge"] {
+        assert!(names.contains(&stage), "missing {stage} in {names:?}");
+    }
+    let mut top_level_ns = 0u64;
+    for s in &tel.spans {
+        assert!(s.end_ns >= s.start_ns, "span {} not closed", s.name);
+        if s.parent.is_none() {
+            top_level_ns += s.duration_ns();
+        }
+    }
+    assert!(
+        top_level_ns <= total_ns,
+        "stage durations {top_level_ns}ns exceed total latency {total_ns}ns"
+    );
+
+    // The trace is also retained service-side for the `traces` command.
+    let recent = coord.traces().recent(4);
+    assert!(recent.iter().any(|t| t.trace_id == tel.trace_id));
+    coord.shutdown();
+}
+
+#[test]
+fn traced_and_untraced_requests_coexist_in_a_burst() {
+    // Traced requests must become singleton jobs while the untraced rest
+    // of the burst still batches — and answers stay correct for all.
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        batch: BatchPolicy { max_batch: 64 },
+        ..CoordinatorConfig::default()
+    });
+    let mut rng = Rng::seed(908);
+    let x = Arc::new(Mat::randn(&mut rng, 400, 24));
+    let rxs: Vec<_> = (0..12u64)
+        .map(|i| {
+            let (y, a) = planted_rhs(&x, 8000 + i);
+            let mut req = SolveRequest::new(i, x.clone(), y);
+            req.backend = Backend::Bak;
+            req.opts = SolveOptions::accurate();
+            if i % 3 == 0 {
+                req = req.traced();
+            }
+            (i, a, coord.submit(req).unwrap())
+        })
+        .collect();
+    for (i, a_true, rx) in rxs {
+        let out = rx.recv().unwrap();
+        let rep = out.report.expect("solve ok");
+        assert!(rel_l2(&rep.a, &a_true) < 1e-3, "request {i}");
+        if i % 3 == 0 {
+            let tel = out.telemetry.expect("traced member has telemetry");
+            assert_eq!(out.batch_size, 1, "traced request was coalesced");
+            assert!(!tel.trajectory.is_empty());
+        } else {
+            assert!(out.telemetry.is_none(), "untraced member grew telemetry");
+        }
+    }
+    coord.shutdown();
+}
+
+#[test]
 fn drop_without_shutdown_is_clean() {
     let mut rng = Rng::seed(906);
     let x = Arc::new(Mat::randn(&mut rng, 50, 5));
