@@ -107,6 +107,27 @@ pub enum SolverError {
     /// [`SolverError::Shape`] the *dimensions* may be fine — the payload
     /// itself is self-contradictory.
     InvalidInput(String),
+    /// The request's deadline expired before the solve finished. Carries
+    /// the best-so-far coefficients and the relative residual they
+    /// achieve — the BAK family's partial answer is always usable.
+    DeadlineExceeded {
+        /// Best-so-far coefficient vector at cancellation (vars; all
+        /// zeros when the deadline expired before the first sweep).
+        best: Vec<f32>,
+        /// Relative residual achieved by `best`.
+        rel_residual: f64,
+        /// Sweeps completed before the deadline hit.
+        sweeps: usize,
+    },
+    /// Admission control shed the request: the service is saturated.
+    Overloaded {
+        /// Suggested client backoff before retrying.
+        retry_after_ms: u64,
+    },
+    /// The request used a protocol feature this build does not speak
+    /// (unknown wire field, unknown command, unsupported protocol
+    /// version).
+    Unsupported(String),
 }
 
 impl std::fmt::Display for SolverError {
@@ -131,6 +152,14 @@ impl std::fmt::Display for SolverError {
             }
             SolverError::Service(s) => write!(f, "service error: {s}"),
             SolverError::InvalidInput(s) => write!(f, "invalid input: {s}"),
+            SolverError::DeadlineExceeded { rel_residual, sweeps, .. } => write!(
+                f,
+                "deadline exceeded after {sweeps} sweeps (best rel_residual {rel_residual:.3e})"
+            ),
+            SolverError::Overloaded { retry_after_ms } => {
+                write!(f, "service overloaded, retry after {retry_after_ms}ms")
+            }
+            SolverError::Unsupported(s) => write!(f, "unsupported: {s}"),
         }
     }
 }

@@ -28,6 +28,8 @@ const VALUED: &[&str] = &[
     "artifacts", "scale", "samples", "max-feat", "workers", "queue",
     "requests", "out", "rows", "noise", "level", "density", "port",
     "x-file", "y-file", "mem-budget", "chunk", "addr", "interval", "count",
+    "deadline-ms", "max-inflight", "max-queue-wait-ms", "degraded-sweeps",
+    "faults", "retries",
 ];
 
 impl Args {

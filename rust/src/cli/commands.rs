@@ -77,6 +77,18 @@ COMMON OPTIONS:
   --addr HOST:PORT      stats: serve-tcp address [127.0.0.1:7447]
   --interval SECS       stats: polling period    [1.0]
   --count N             stats: lines to print, 0 = until interrupted [0]
+
+ROBUSTNESS (see PROTOCOL.md):
+  --deadline-ms N       solve: wall-clock budget; an expired solve reports
+                        deadline_exceeded instead of running to completion
+  --max-inflight N      serve-tcp: admission-gate slots, 0 = unlimited
+  --max-queue-wait-ms N serve-tcp: wait this long for a slot before shedding
+  --degraded-sweeps N   serve-tcp: answer shed requests with a reduced-sweep
+                        BAK solve instead of an overloaded error
+  --faults SPEC         serve-tcp: arm fault injection, e.g.
+                        worker_panic_every=7,queue_stall_ms=20
+                        (the PALLAS_FAULTS env var arms the same knobs)
+  --retries N           stats: client retry budget on overload/transport [3]
 ",
         backends.join("|")
     )
@@ -199,10 +211,23 @@ fn cmd_solve(args: &Args) -> Result<(), ArgError> {
         artifact_dir: Some(args.get("artifacts").unwrap_or("artifacts").into()),
         ..CoordinatorConfig::default()
     });
-    let mut req = SolveRequest::with_matrix(1, matrix, y);
-    req.backend = backend;
-    req.opts = opts;
-    let (out, secs) = time_once(|| coord.solve_blocking(req));
+    let mut builder = SolveRequest::builder(1, matrix, y).backend(backend).opts(opts);
+    if let Some(ms) = args.get("deadline-ms") {
+        builder = builder.deadline_ms(
+            ms.parse::<u64>()
+                .map_err(|_| ArgError(format!("--deadline-ms: bad integer '{ms}'")))?,
+        );
+    }
+    let req = builder.build();
+    // submit_robust (not solve_blocking) so --deadline-ms arms the
+    // cancellation token exactly like a TCP request would.
+    let (res, secs) = time_once(|| match coord.submit_robust(req) {
+        Ok(rx) => rx
+            .recv()
+            .map_err(|_| crate::api::SolverError::Service("reply channel dropped".into())),
+        Err(e) => Err(e),
+    });
+    let out = res.map_err(|e| ArgError(e.to_string()))?;
     let report = out.report.map_err(|e| ArgError(e.to_string()))?;
     let acc = a_true.as_ref().map(|t| mape(&report.a, t)).unwrap_or(f64::NAN);
 
@@ -388,8 +413,7 @@ fn cmd_serve(args: &Args) -> Result<(), ArgError> {
             let x = pool[i % pool.len()].clone();
             let a: Vec<f32> = (0..vars).map(|_| rng.normal_f32()).collect();
             let y = x.matvec(&a);
-            let mut req = SolveRequest::new(i as u64, x, y);
-            req.backend = backend;
+            let req = SolveRequest::builder(i as u64, x, y).backend(backend).build();
             coord.submit(req).map_err(|e| ArgError(e.to_string()))
         })
         .collect::<Result<_, _>>()?;
@@ -412,15 +436,36 @@ fn cmd_serve(args: &Args) -> Result<(), ArgError> {
 fn cmd_serve_tcp(args: &Args) -> Result<(), ArgError> {
     let workers = args.get_usize("workers", crate::parallel::default_threads())?;
     let port = args.get_usize("port", 7447)? as u16;
+    let max_inflight = args.get_usize("max-inflight", 0)?;
+    let max_queue_wait_ms = args.get_u64("max-queue-wait-ms", 0)?;
+    let degraded_sweeps = match args.get_usize("degraded-sweeps", 0)? {
+        0 => None,
+        n => Some(n),
+    };
+    if let Some(spec) = args.get("faults") {
+        let plan = crate::robust::faults::FaultPlan::parse(spec).map_err(ArgError)?;
+        crate::robust::faults::install(&plan);
+        println!("fault injection armed: {plan}");
+    }
     let coord = Arc::new(Coordinator::start(CoordinatorConfig {
         workers,
         artifact_dir: Some(args.get("artifacts").unwrap_or("artifacts").into()),
+        max_inflight,
+        max_queue_wait_ms,
+        degraded_sweeps,
         ..CoordinatorConfig::default()
     }));
     let server = crate::coordinator::server::Server::bind(coord.clone(), port)
         .map_err(|e| ArgError(format!("bind: {e}")))?;
     println!("listening on {} ({} workers)", server.addr(), workers);
-    println!("protocol: newline-delimited JSON; send {{\"cmd\":\"shutdown\"}} to stop.");
+    if max_inflight > 0 {
+        println!(
+            "admission gate: {max_inflight} in flight, {max_queue_wait_ms}ms queue wait, \
+             degraded sweeps: {}",
+            degraded_sweeps.map_or("off".to_string(), |n| n.to_string()),
+        );
+    }
+    println!("protocol: v1 newline-delimited JSON (PROTOCOL.md); send {{\"cmd\":\"shutdown\"}} to stop.");
     // Block until a client sends the shutdown command (the accept loop
     // exits when the stop flag flips).
     while !server.stopped() {
@@ -485,37 +530,31 @@ fn stats_line(cur: &StatsSnap, prev: Option<&StatsSnap>, dt: f64) -> String {
 }
 
 /// `solvebak stats`: poll a running serve-tcp instance's `metrics` command
-/// and print a one-line dashboard per interval.
+/// and print a one-line dashboard per interval. Polls go through
+/// [`crate::client::Client`], so a restarting or briefly overloaded server
+/// costs retries (`--retries`), not a dead dashboard.
 fn cmd_stats(args: &Args) -> Result<(), ArgError> {
-    use std::io::{BufRead, BufReader, Write};
     let addr = args.get("addr").unwrap_or("127.0.0.1:7447");
     let interval = args.get_f64("interval", 1.0)?.max(0.05);
     let count = args.get_usize("count", 0)?;
+    let retries = args.get_usize("retries", 3)? as u32;
 
-    let stream = std::net::TcpStream::connect(addr)
-        .map_err(|e| ArgError(format!("connect {addr}: {e}")))?;
-    let mut writer = stream
-        .try_clone()
-        .map_err(|e| ArgError(format!("clone stream: {e}")))?;
-    let mut reader = BufReader::new(stream);
-    println!("polling {addr} every {interval}s ({} lines)",
+    let policy = crate::client::RetryPolicy {
+        max_retries: retries,
+        ..crate::client::RetryPolicy::default()
+    };
+    let mut client = crate::client::Client::with_policy(addr, policy);
+    let req = crate::util::json::Json::parse(r#"{"cmd": "metrics"}"#)
+        .expect("static metrics request parses");
+    println!("polling {addr} every {interval}s ({} lines, {retries} retries)",
              if count == 0 { "unbounded".to_string() } else { count.to_string() });
 
     let mut prev: Option<StatsSnap> = None;
     let mut printed = 0usize;
     loop {
-        writer
-            .write_all(b"{\"cmd\":\"metrics\"}\n")
+        let j = client
+            .request(&req)
             .map_err(|e| ArgError(format!("{addr}: {e}")))?;
-        let mut line = String::new();
-        reader
-            .read_line(&mut line)
-            .map_err(|e| ArgError(format!("{addr}: {e}")))?;
-        if line.is_empty() {
-            return Err(ArgError(format!("{addr}: server closed the connection")));
-        }
-        let j = crate::util::json::Json::parse(line.trim())
-            .map_err(|e| ArgError(format!("bad metrics line: {e}")))?;
         let cur = StatsSnap::from_json(&j);
         println!("{}", stats_line(&cur, prev.as_ref(), interval));
         prev = Some(cur);
@@ -815,6 +854,41 @@ mod tests {
         assert!(u.contains("stats"));
         assert!(u.contains("--addr"));
         assert!(u.contains("--interval"));
+    }
+
+    #[test]
+    fn usage_mentions_robustness_knobs() {
+        let u = usage();
+        for knob in [
+            "--deadline-ms", "--max-inflight", "--max-queue-wait-ms",
+            "--degraded-sweeps", "--faults", "--retries", "PROTOCOL.md",
+        ] {
+            assert!(u.contains(knob), "usage missing '{knob}'");
+        }
+    }
+
+    #[test]
+    fn solve_with_generous_deadline_succeeds() {
+        assert_eq!(
+            run(sv(&["solve", "--obs", "200", "--vars", "10", "--backend", "bak",
+                     "--deadline-ms", "60000"])),
+            0
+        );
+    }
+
+    #[test]
+    fn solve_with_expired_deadline_fails_cleanly() {
+        // deadline 0 expires before the job runs: typed error, exit 2.
+        assert_eq!(
+            run(sv(&["solve", "--obs", "200", "--vars", "10", "--backend", "bak",
+                     "--deadline-ms", "0"])),
+            2
+        );
+    }
+
+    #[test]
+    fn serve_tcp_rejects_bad_fault_spec() {
+        assert_eq!(run(sv(&["serve-tcp", "--faults", "bogus=1"])), 2);
     }
 
     #[test]

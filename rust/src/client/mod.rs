@@ -1,0 +1,393 @@
+//! Client-side robustness for the TCP protocol: one-line JSON roundtrips
+//! wrapped in a budget-capped, jittered exponential-backoff retry loop.
+//!
+//! [`Client`] opens a fresh connection per request (the server is
+//! connection-per-thread; reconnecting is also what makes connect-level
+//! failures retryable) and retries on transport errors — refused, reset,
+//! mid-reply EOF — and on structured `error_kind: "overloaded"` replies,
+//! where the server's `retry_after_ms` hint becomes the backoff floor.
+//! Retried requests carry `"attempt": n` so the server's
+//! `retries_attempted` counter sees them (see `PROTOCOL.md`).
+//!
+//! Backoff is *full-jitter* exponential: retry `n` sleeps a uniform draw
+//! from `[cap/2, cap]` with `cap = min(base_ms * 2^(n-1), max_backoff_ms)`
+//! raised to any server floor. The jitter source is the repo's
+//! deterministic [`Rng`], seeded per client, so tests are reproducible
+//! while distinct clients still decorrelate. A wall-clock `budget_ms`
+//! bounds the whole loop: a retry that cannot finish its sleep inside the
+//! budget is not attempted, and the last reply or error is surfaced.
+
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Knobs for [`Client`]'s retry loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt (0 = fail fast).
+    pub max_retries: u32,
+    /// Backoff cap for the first retry; doubles per retry.
+    pub base_ms: u64,
+    /// Ceiling on any single backoff sleep.
+    pub max_backoff_ms: u64,
+    /// Wall-clock budget for the whole request including sleeps.
+    pub budget_ms: u64,
+    /// Seed for the jitter stream (vary per client to decorrelate).
+    pub jitter_seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 3,
+            base_ms: 50,
+            max_backoff_ms: 2_000,
+            budget_ms: 10_000,
+            jitter_seed: 0x9e37_79b9,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Fail-fast policy: one attempt, no sleeps.
+    pub fn none() -> Self {
+        RetryPolicy { max_retries: 0, ..RetryPolicy::default() }
+    }
+
+    /// The sleep before retry `n` (1-based): full jitter over
+    /// `[cap/2, cap]` where `cap = min(base * 2^(n-1), max_backoff_ms)`,
+    /// raised to `floor_ms` when the server sent a `retry_after_ms` hint.
+    pub fn backoff_ms(&self, retry: u32, floor_ms: u64, rng: &mut Rng) -> u64 {
+        let pow = retry.saturating_sub(1).min(32);
+        let exp = self.base_ms.saturating_mul(1u64 << pow);
+        let cap = exp.min(self.max_backoff_ms).max(floor_ms).max(1);
+        let half = (cap / 2).max(1);
+        half + rng.next_u64() % (cap - half + 1)
+    }
+}
+
+/// What ultimately stopped a [`Client::request`] loop.
+#[derive(Debug)]
+pub enum ClientError {
+    /// Transport failure that was not retryable (or exhausted the policy).
+    Io(io::Error),
+    /// The server answered with something that is not one JSON line.
+    BadReply(String),
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "transport: {e}"),
+            ClientError::BadReply(m) => write!(f, "bad reply: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+/// A retrying newline-JSON client for the coordinator's TCP server.
+pub struct Client {
+    addr: String,
+    policy: RetryPolicy,
+    rng: Rng,
+    retries_attempted: u64,
+}
+
+impl Client {
+    /// Client for `addr` (`host:port`) with the default [`RetryPolicy`].
+    pub fn connect(addr: impl Into<String>) -> Self {
+        Self::with_policy(addr, RetryPolicy::default())
+    }
+
+    /// Client for `addr` with an explicit policy.
+    pub fn with_policy(addr: impl Into<String>, policy: RetryPolicy) -> Self {
+        Client {
+            addr: addr.into(),
+            rng: Rng::seed(policy.jitter_seed),
+            policy,
+            retries_attempted: 0,
+        }
+    }
+
+    /// Retries this client has performed across all requests (mirrors the
+    /// server-side `retries_attempted` counter from this client's view).
+    pub fn retries_attempted(&self) -> u64 {
+        self.retries_attempted
+    }
+
+    /// Send `req` as one JSON line and return the server's one-line JSON
+    /// reply, retrying per the policy. Structured non-`overloaded` errors
+    /// (bad input, deadline exceeded, ...) are *successful* roundtrips —
+    /// the caller branches on `error_kind` — and are never retried. An
+    /// `overloaded` reply that outlives the retry budget is returned
+    /// as-is so the caller still sees `retry_after_ms`.
+    pub fn request(&mut self, req: &Json) -> Result<Json, ClientError> {
+        let start = Instant::now();
+        let mut attempt: u32 = 0;
+        loop {
+            let mut wire = req.clone();
+            if attempt > 0 {
+                if let Json::Obj(fields) = &mut wire {
+                    fields.insert("attempt".into(), Json::Num(attempt as f64));
+                }
+            }
+            match self.roundtrip_once(&wire) {
+                Ok(reply) => {
+                    let overloaded =
+                        reply.get("error_kind").and_then(Json::as_str) == Some("overloaded");
+                    if !overloaded {
+                        return Ok(reply);
+                    }
+                    let floor = reply
+                        .get("retry_after_ms")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(0.0) as u64;
+                    if !self.sleep_before_retry(&mut attempt, floor, start, "overloaded") {
+                        return Ok(reply);
+                    }
+                }
+                Err(RoundtripError::Io(e)) if retryable(&e) => {
+                    let why = e.to_string();
+                    if !self.sleep_before_retry(&mut attempt, 0, start, &why) {
+                        return Err(ClientError::Io(e));
+                    }
+                }
+                Err(RoundtripError::Io(e)) => return Err(ClientError::Io(e)),
+                Err(RoundtripError::BadReply(m)) => return Err(ClientError::BadReply(m)),
+            }
+        }
+    }
+
+    /// True when another retry fits the policy and budget (and the
+    /// backoff sleep has already happened); false to give up.
+    fn sleep_before_retry(
+        &mut self,
+        attempt: &mut u32,
+        floor_ms: u64,
+        start: Instant,
+        why: &str,
+    ) -> bool {
+        if *attempt >= self.policy.max_retries {
+            return false;
+        }
+        *attempt += 1;
+        let wait = self.policy.backoff_ms(*attempt, floor_ms, &mut self.rng);
+        let elapsed = start.elapsed().as_millis() as u64;
+        if elapsed.saturating_add(wait) > self.policy.budget_ms {
+            return false;
+        }
+        self.retries_attempted += 1;
+        crate::debug!("client", "retry #{attempt} in {wait}ms after: {why}");
+        std::thread::sleep(Duration::from_millis(wait));
+        true
+    }
+
+    fn roundtrip_once(&self, req: &Json) -> Result<Json, RoundtripError> {
+        let mut stream = TcpStream::connect(&self.addr).map_err(RoundtripError::Io)?;
+        let mut line = req.to_string();
+        line.push('\n');
+        stream.write_all(line.as_bytes()).map_err(RoundtripError::Io)?;
+        let mut reader = BufReader::new(stream);
+        let mut reply = String::new();
+        let n = reader.read_line(&mut reply).map_err(RoundtripError::Io)?;
+        if n == 0 {
+            // Server dropped the connection before answering: retryable.
+            return Err(RoundtripError::Io(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "connection closed before reply",
+            )));
+        }
+        Json::parse(reply.trim()).map_err(|e| RoundtripError::BadReply(format!("{e}")))
+    }
+}
+
+enum RoundtripError {
+    Io(io::Error),
+    BadReply(String),
+}
+
+fn retryable(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::ConnectionRefused
+            | io::ErrorKind::ConnectionReset
+            | io::ErrorKind::ConnectionAborted
+            | io::ErrorKind::BrokenPipe
+            | io::ErrorKind::UnexpectedEof
+            | io::ErrorKind::TimedOut
+            | io::ErrorKind::WouldBlock
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+    use std::sync::{Arc, Mutex};
+
+    /// One-reply-per-connection fake server; records each request line.
+    fn fake_server(replies: Vec<String>) -> (std::net::SocketAddr, Arc<Mutex<Vec<String>>>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let seen2 = seen.clone();
+        std::thread::spawn(move || {
+            for reply in replies {
+                let (mut s, _) = match listener.accept() {
+                    Ok(c) => c,
+                    Err(_) => return,
+                };
+                let mut r = BufReader::new(s.try_clone().unwrap());
+                let mut line = String::new();
+                let _ = r.read_line(&mut line);
+                seen2.lock().unwrap().push(line.trim().to_string());
+                let _ = s.write_all(reply.as_bytes());
+                let _ = s.write_all(b"\n");
+            }
+        });
+        (addr, seen)
+    }
+
+    fn fast_policy(max_retries: u32) -> RetryPolicy {
+        RetryPolicy {
+            max_retries,
+            base_ms: 1,
+            max_backoff_ms: 4,
+            budget_ms: 5_000,
+            jitter_seed: 7,
+        }
+    }
+
+    #[test]
+    fn ok_reply_needs_no_retry() {
+        let (addr, seen) = fake_server(vec![r#"{"ok": true, "pong": "pong"}"#.into()]);
+        let mut c = Client::with_policy(addr.to_string(), fast_policy(3));
+        let req = Json::parse(r#"{"cmd": "ping"}"#).unwrap();
+        let reply = c.request(&req).unwrap();
+        assert_eq!(reply.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(c.retries_attempted(), 0);
+        assert!(!seen.lock().unwrap()[0].contains("attempt"));
+    }
+
+    #[test]
+    fn overloaded_reply_is_retried_with_attempt_field() {
+        let (addr, seen) = fake_server(vec![
+            r#"{"ok": false, "error_kind": "overloaded", "retry_after_ms": 1}"#.into(),
+            r#"{"ok": true, "id": 1}"#.into(),
+        ]);
+        let mut c = Client::with_policy(addr.to_string(), fast_policy(3));
+        let req = Json::parse(r#"{"id": 1, "obs": 1, "vars": 1, "x": [1], "y": [1]}"#).unwrap();
+        let reply = c.request(&req).unwrap();
+        assert_eq!(reply.get("ok").unwrap().as_bool(), Some(true), "{reply:?}");
+        assert_eq!(c.retries_attempted(), 1);
+        let seen = seen.lock().unwrap();
+        assert_eq!(seen.len(), 2);
+        assert!(!seen[0].contains("attempt"));
+        assert!(seen[1].contains("\"attempt\""), "{}", seen[1]);
+    }
+
+    #[test]
+    fn exhausted_retries_surface_the_overloaded_reply() {
+        let over = r#"{"ok": false, "error_kind": "overloaded", "retry_after_ms": 1}"#;
+        let (addr, _) = fake_server(vec![over.into(), over.into()]);
+        let mut c = Client::with_policy(addr.to_string(), fast_policy(1));
+        let req = Json::parse(r#"{"cmd": "ping"}"#).unwrap();
+        let reply = c.request(&req).unwrap();
+        // The caller still gets the structured overload, hint included.
+        assert_eq!(reply.get("error_kind").unwrap().as_str(), Some("overloaded"));
+        assert_eq!(reply.get("retry_after_ms").unwrap().as_f64(), Some(1.0));
+        assert_eq!(c.retries_attempted(), 1);
+    }
+
+    #[test]
+    fn non_overloaded_errors_are_not_retried() {
+        let (addr, seen) = fake_server(vec![
+            r#"{"ok": false, "error_kind": "invalid_input", "error": "missing obs"}"#.into(),
+            r#"{"ok": true}"#.into(),
+        ]);
+        let mut c = Client::with_policy(addr.to_string(), fast_policy(3));
+        let req = Json::parse(r#"{"id": 1}"#).unwrap();
+        let reply = c.request(&req).unwrap();
+        assert_eq!(reply.get("error_kind").unwrap().as_str(), Some("invalid_input"));
+        assert_eq!(c.retries_attempted(), 0);
+        assert_eq!(seen.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn connect_failure_retries_then_errors() {
+        // Bind-then-drop: the port is (almost certainly) refusing now.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let mut c = Client::with_policy(addr.to_string(), fast_policy(2));
+        let req = Json::parse(r#"{"cmd": "ping"}"#).unwrap();
+        match c.request(&req) {
+            Err(ClientError::Io(_)) => {}
+            other => panic!("want Io error, got {other:?}"),
+        }
+        assert_eq!(c.retries_attempted(), 2);
+    }
+
+    #[test]
+    fn zero_budget_fails_fast_without_sleeping() {
+        let over = r#"{"ok": false, "error_kind": "overloaded", "retry_after_ms": 500}"#;
+        let (addr, _) = fake_server(vec![over.into()]);
+        let mut c = Client::with_policy(
+            addr.to_string(),
+            RetryPolicy { budget_ms: 0, ..fast_policy(5) },
+        );
+        let req = Json::parse(r#"{"cmd": "ping"}"#).unwrap();
+        let t0 = Instant::now();
+        let reply = c.request(&req).unwrap();
+        assert_eq!(reply.get("error_kind").unwrap().as_str(), Some("overloaded"));
+        assert!(t0.elapsed() < Duration::from_millis(400), "budget must gate the sleep");
+        assert_eq!(c.retries_attempted(), 0);
+    }
+
+    #[test]
+    fn backoff_doubles_caps_and_respects_server_floor() {
+        let p = RetryPolicy {
+            max_retries: 10,
+            base_ms: 50,
+            max_backoff_ms: 300,
+            budget_ms: 10_000,
+            jitter_seed: 1,
+        };
+        let mut rng = Rng::seed(1);
+        for retry in 1..=8u32 {
+            let cap = (50u64 << (retry - 1)).min(300);
+            let w = p.backoff_ms(retry, 0, &mut rng);
+            assert!(w >= cap / 2 && w <= cap, "retry {retry}: {w} not in [{}, {cap}]", cap / 2);
+        }
+        // The server's hint raises the floor past the exponential cap.
+        let w = p.backoff_ms(1, 900, &mut rng);
+        assert!(w >= 450 && w <= 900, "{w}");
+    }
+
+    #[test]
+    fn roundtrips_against_the_real_server() {
+        let coord = Arc::new(crate::coordinator::Coordinator::start(
+            crate::coordinator::CoordinatorConfig {
+                workers: 1,
+                ..crate::coordinator::CoordinatorConfig::default()
+            },
+        ));
+        let server = crate::coordinator::server::Server::bind(coord, 0).unwrap();
+        let mut c = Client::with_policy(server.addr().to_string(), fast_policy(2));
+        let req = Json::parse(
+            r#"{"v": 1, "id": 9, "backend": "qr", "obs": 2, "vars": 2,
+                "x": [1,0, 0,1], "y": [4, 5]}"#,
+        )
+        .unwrap();
+        let reply = c.request(&req).unwrap();
+        assert_eq!(reply.get("ok").unwrap().as_bool(), Some(true), "{reply:?}");
+        let a = reply.get("a").unwrap().items();
+        assert!((a[0].as_f64().unwrap() - 4.0).abs() < 1e-4);
+        server.stop();
+    }
+}

@@ -133,6 +133,17 @@ pub struct Metrics {
     /// Sparse jobs that ran on a backend without a native sparse path and
     /// were densified before execution.
     pub densified_jobs: AtomicU64,
+    /// Requests rejected by admission control (saturated gate, no
+    /// degraded mode) with a structured `overloaded` error.
+    pub jobs_shed: AtomicU64,
+    /// Requests whose deadline expired (queued or mid-solve); clients got
+    /// [`crate::api::SolverError::DeadlineExceeded`] with best-so-far.
+    pub jobs_deadline_exceeded: AtomicU64,
+    /// Client retry attempts observed by the server (`attempt > 0`).
+    pub retries_attempted: AtomicU64,
+    /// Requests answered in degraded mode (reduced-sweep BAK) instead of
+    /// being shed.
+    pub degraded_solves: AtomicU64,
     /// Gauge: jobs currently sitting in the job queue (scheduled but not
     /// yet picked up by a worker).
     pub job_queue_depth: AtomicU64,
@@ -163,6 +174,10 @@ impl Default for Metrics {
             batched_members: AtomicU64::new(0),
             queue_rejections: AtomicU64::new(0),
             densified_jobs: AtomicU64::new(0),
+            jobs_shed: AtomicU64::new(0),
+            jobs_deadline_exceeded: AtomicU64::new(0),
+            retries_attempted: AtomicU64::new(0),
+            degraded_solves: AtomicU64::new(0),
             job_queue_depth: AtomicU64::new(0),
             stream_chunks_read: AtomicU64::new(0),
             stream_bytes_read: AtomicU64::new(0),
@@ -237,6 +252,10 @@ impl Metrics {
             .num("batched_members", c(&self.batched_members))
             .num("queue_rejections", c(&self.queue_rejections))
             .num("densified_jobs", c(&self.densified_jobs))
+            .num("jobs_shed", c(&self.jobs_shed))
+            .num("jobs_deadline_exceeded", c(&self.jobs_deadline_exceeded))
+            .num("retries_attempted", c(&self.retries_attempted))
+            .num("degraded_solves", c(&self.degraded_solves))
             .num("job_queue_depth", c(&self.job_queue_depth))
             .num("stream_chunks_read", c(&self.stream_chunks_read))
             .num("stream_bytes_read", c(&self.stream_bytes_read))
@@ -277,6 +296,10 @@ impl Metrics {
         counter(&mut out, "batched_members", c(&self.batched_members));
         counter(&mut out, "queue_rejections", c(&self.queue_rejections));
         counter(&mut out, "densified_jobs", c(&self.densified_jobs));
+        counter(&mut out, "jobs_shed", c(&self.jobs_shed));
+        counter(&mut out, "jobs_deadline_exceeded", c(&self.jobs_deadline_exceeded));
+        counter(&mut out, "retries_attempted", c(&self.retries_attempted));
+        counter(&mut out, "degraded_solves", c(&self.degraded_solves));
         counter(&mut out, "stream_chunks_read", c(&self.stream_chunks_read));
         counter(&mut out, "stream_bytes_read", c(&self.stream_bytes_read));
         counter(&mut out, "stream_buffer_stalls", c(&self.stream_buffer_stalls));
@@ -547,6 +570,25 @@ mod tests {
         let j = m.to_json();
         assert_eq!(j.get("densified_jobs").unwrap().as_f64(), Some(3.0));
         assert_eq!(j.get("job_queue_depth").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn robustness_counters_exported() {
+        let m = Metrics::new();
+        m.jobs_shed.store(2, Ordering::Relaxed);
+        m.jobs_deadline_exceeded.store(1, Ordering::Relaxed);
+        m.retries_attempted.store(4, Ordering::Relaxed);
+        m.degraded_solves.store(3, Ordering::Relaxed);
+        let j = m.to_json();
+        assert_eq!(j.get("jobs_shed").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("jobs_deadline_exceeded").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("retries_attempted").unwrap().as_f64(), Some(4.0));
+        assert_eq!(j.get("degraded_solves").unwrap().as_f64(), Some(3.0));
+        let text = m.to_prometheus();
+        assert!(text.contains("pallas_jobs_shed_total 2"));
+        assert!(text.contains("pallas_jobs_deadline_exceeded_total 1"));
+        assert!(text.contains("pallas_retries_attempted_total 4"));
+        assert!(text.contains("pallas_degraded_solves_total 3"));
     }
 
     #[test]

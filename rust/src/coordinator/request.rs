@@ -77,6 +77,24 @@ impl SharedMatrix {
     }
 }
 
+impl From<Arc<Mat>> for SharedMatrix {
+    fn from(m: Arc<Mat>) -> Self {
+        SharedMatrix::Dense(m)
+    }
+}
+
+impl From<Arc<CscMat>> for SharedMatrix {
+    fn from(s: Arc<CscMat>) -> Self {
+        SharedMatrix::SparseCsc(s)
+    }
+}
+
+impl From<Arc<StreamedMatrix>> for SharedMatrix {
+    fn from(s: Arc<StreamedMatrix>) -> Self {
+        SharedMatrix::Streamed(s)
+    }
+}
+
 /// A solve request: one matrix, one or more right-hand sides.
 #[derive(Clone)]
 pub struct SolveRequest {
@@ -92,6 +110,15 @@ pub struct SolveRequest {
     /// `telemetry`, and never coalesces the request with others (the
     /// timeline must describe exactly one solve).
     pub trace: Option<Arc<crate::obs::TraceCtx>>,
+    /// Optional wall-clock budget for the whole job (queue wait included).
+    /// The coordinator arms a [`crate::robust::CancelToken`] at submit
+    /// time; an expired solve returns
+    /// [`SolverError::DeadlineExceeded`] carrying the best-so-far
+    /// solution. Deadline-armed requests are never coalesced.
+    pub deadline_ms: Option<u64>,
+    /// Set by the coordinator when admission control downgraded this
+    /// request to a reduced-sweep solve instead of shedding it.
+    pub degraded: bool,
 }
 
 impl SolveRequest {
@@ -101,11 +128,13 @@ impl SolveRequest {
     }
 
     /// Construct a sparse request with defaults.
+    #[deprecated(since = "0.8.0", note = "use SolveRequest::builder(id, csc, y).build()")]
     pub fn new_sparse(id: u64, x: Arc<CscMat>, y: Vec<f32>) -> Self {
         Self::with_matrix(id, SharedMatrix::SparseCsc(x), y)
     }
 
     /// Construct a file-backed (streamed) request with defaults.
+    #[deprecated(since = "0.8.0", note = "use SolveRequest::builder(id, streamed, y).build()")]
     pub fn new_streamed(id: u64, x: Arc<StreamedMatrix>, y: Vec<f32>) -> Self {
         Self::with_matrix(id, SharedMatrix::Streamed(x), y)
     }
@@ -119,10 +148,28 @@ impl SolveRequest {
             opts: SolveOptions::default(),
             backend: SolverKind::Auto,
             trace: None,
+            deadline_ms: None,
+            degraded: false,
+        }
+    }
+
+    /// Start building a request. `x` accepts any of `Arc<Mat>`,
+    /// `Arc<CscMat>`, `Arc<StreamedMatrix>` or a [`SharedMatrix`]:
+    ///
+    /// ```ignore
+    /// let req = SolveRequest::builder(1, x, y)
+    ///     .backend(SolverKind::Bak)
+    ///     .deadline_ms(250)
+    ///     .build();
+    /// ```
+    pub fn builder(id: u64, x: impl Into<SharedMatrix>, y: Vec<f32>) -> SolveRequestBuilder {
+        SolveRequestBuilder {
+            req: Self::with_matrix(id, x.into(), y),
         }
     }
 
     /// Attach a fresh trace context (see the `trace` field).
+    #[deprecated(since = "0.8.0", note = "use SolveRequest::builder(..).trace(true)")]
     pub fn traced(mut self) -> Self {
         self.trace = Some(crate::obs::TraceCtx::fresh());
         self
@@ -131,6 +178,46 @@ impl SolveRequest {
     /// A stable identity for the shared matrix — the batching key.
     pub fn matrix_key(&self) -> usize {
         self.x.key()
+    }
+}
+
+/// Fluent construction for [`SolveRequest`], mirroring
+/// [`SolveOptions::builder`]. Unset knobs keep the request defaults.
+pub struct SolveRequestBuilder {
+    req: SolveRequest,
+}
+
+impl SolveRequestBuilder {
+    /// Replace the solver options wholesale.
+    pub fn opts(mut self, opts: SolveOptions) -> Self {
+        self.req.opts = opts;
+        self
+    }
+
+    /// Pin a solver backend (default: [`SolverKind::Auto`]).
+    pub fn backend(mut self, backend: SolverKind) -> Self {
+        self.req.backend = backend;
+        self
+    }
+
+    /// Arm a wall-clock deadline in milliseconds.
+    pub fn deadline_ms(mut self, ms: u64) -> Self {
+        self.req.deadline_ms = Some(ms);
+        self
+    }
+
+    /// Record a span timeline + convergence trajectory for this request.
+    pub fn trace(mut self, on: bool) -> Self {
+        self.req.trace = if on {
+            Some(crate::obs::TraceCtx::fresh())
+        } else {
+            None
+        };
+        self
+    }
+
+    pub fn build(self) -> SolveRequest {
+        self.req
     }
 }
 
@@ -144,6 +231,9 @@ pub struct SolveJob {
     /// Trace context carried over from a traced request (always a
     /// singleton job — the scheduler never coalesces traced requests).
     pub trace: Option<Arc<crate::obs::TraceCtx>>,
+    /// True when admission control downgraded this job to a
+    /// reduced-sweep solve (propagated to every member outcome).
+    pub degraded: bool,
 }
 
 impl SolveJob {
@@ -155,6 +245,7 @@ impl SolveJob {
             opts: req.opts,
             backend: req.backend,
             trace: req.trace,
+            degraded: req.degraded,
         }
     }
 
@@ -181,8 +272,11 @@ pub struct SolveOutcome {
     /// How many requests were coalesced into the job this ran in.
     pub batch_size: usize,
     /// Span timeline + convergence trajectory, present only for traced
-    /// requests ([`SolveRequest::traced`]).
+    /// requests (`SolveRequest::builder(..).trace(true)`).
     pub telemetry: Option<crate::obs::Telemetry>,
+    /// True when admission control answered this request with a
+    /// reduced-sweep (degraded-mode) solve.
+    pub degraded: bool,
 }
 
 #[cfg(test)]
@@ -218,8 +312,8 @@ mod tests {
         b.push(0, 0, 1.0);
         b.push(3, 1, 2.0);
         let s = Arc::new(b.to_csc());
-        let r1 = SolveRequest::new_sparse(1, s.clone(), vec![0.0; 4]);
-        let r2 = SolveRequest::new_sparse(2, s.clone(), vec![1.0; 4]);
+        let r1 = SolveRequest::builder(1, s.clone(), vec![0.0; 4]).build();
+        let r2 = SolveRequest::builder(2, s.clone(), vec![1.0; 4]).build();
         assert_eq!(r1.matrix_key(), r2.matrix_key());
         assert!(r1.x.is_sparse());
         assert_eq!(r1.x.shape(), (4, 2));
@@ -230,5 +324,60 @@ mod tests {
         let r3 = SolveRequest::new(3, d, vec![0.0; 4]);
         assert_ne!(r1.matrix_key(), r3.matrix_key());
         assert!(!r3.x.is_sparse());
+    }
+
+    #[test]
+    fn builder_defaults_match_with_matrix() {
+        let mut rng = Rng::seed(3);
+        let x = Arc::new(Mat::randn(&mut rng, 4, 2));
+        let r = SolveRequest::builder(9, x, vec![0.0; 4]).build();
+        assert_eq!(r.id, 9);
+        assert_eq!(r.backend, SolverKind::Auto);
+        assert!(r.trace.is_none());
+        assert!(r.deadline_ms.is_none());
+        assert!(!r.degraded);
+        assert!(!r.opts.cancel.is_enabled());
+    }
+
+    #[test]
+    fn builder_sets_every_knob() {
+        let mut rng = Rng::seed(4);
+        let x = Arc::new(Mat::randn(&mut rng, 4, 2));
+        let mut opts = SolveOptions::default();
+        opts.max_sweeps = 7;
+        let r = SolveRequest::builder(5, x, vec![1.0; 4])
+            .opts(opts)
+            .backend(SolverKind::Bak)
+            .deadline_ms(250)
+            .trace(true)
+            .build();
+        assert_eq!(r.opts.max_sweeps, 7);
+        assert_eq!(r.backend, SolverKind::Bak);
+        assert_eq!(r.deadline_ms, Some(250));
+        assert!(r.trace.is_some());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_constructors_still_work() {
+        let mut b = crate::sparse::CooBuilder::new(4, 2);
+        b.push(0, 0, 1.0);
+        let s = Arc::new(b.to_csc());
+        let r = SolveRequest::new_sparse(1, s, vec![0.0; 4]);
+        assert!(r.x.is_sparse());
+        let mut rng = Rng::seed(5);
+        let d = Arc::new(Mat::randn(&mut rng, 4, 2));
+        let t = SolveRequest::new(2, d, vec![0.0; 4]).traced();
+        assert!(t.trace.is_some());
+    }
+
+    #[test]
+    fn degraded_flag_propagates_to_job() {
+        let mut rng = Rng::seed(6);
+        let x = Arc::new(Mat::randn(&mut rng, 4, 2));
+        let mut r = SolveRequest::builder(1, x, vec![0.0; 4]).build();
+        r.degraded = true;
+        let job = SolveJob::single(r);
+        assert!(job.degraded);
     }
 }

@@ -1,5 +1,13 @@
 //! TCP front-end for the coordinator: newline-delimited JSON protocol.
 //!
+//! **Protocol v1** (the full contract lives in `PROTOCOL.md` at the repo
+//! root): requests may carry `"v": 1` — an absent `"v"` means v1 — and
+//! the server rejects other versions, unknown commands, and unknown
+//! top-level request fields with `error_kind: "unsupported"` instead of
+//! guessing. `{"cmd": "hello"}` reports `proto_version`, the concrete
+//! `solver_kinds`, and per-kind capability flags so clients can
+//! negotiate before submitting work.
+//!
 //! Request (one line):
 //! ```json
 //! {"id": 1, "backend": "auto", "obs": 100, "vars": 4,
@@ -29,7 +37,15 @@
 //! metrics snapshot; `{"cmd": "metrics_prom"}` returns the same counters
 //! in Prometheus text exposition format (under `"text"`);
 //! `{"cmd": "traces", "n": 16}` returns the most recent traced-solve
-//! timelines; `{"cmd": "shutdown"}` stops the listener.
+//! timelines; `{"cmd": "faults"}` queries (or, with `"plan"`, installs)
+//! the fault-injection plan; `{"cmd": "shutdown"}` stops the listener.
+//!
+//! Robustness fields on solve requests: `"deadline_ms"` arms a wall-clock
+//! budget (an expired solve answers `error_kind: "deadline_exceeded"`
+//! carrying the best-so-far `"a"`/`"rel_residual"`/`"sweeps"`), and
+//! `"attempt"` (> 0 on client retries) feeds the `retries_attempted`
+//! counter. A saturated admission gate answers `error_kind: "overloaded"`
+//! with a `"retry_after_ms"` backoff hint.
 //!
 //! Adding `"trace": true` to a solve request threads a
 //! [`crate::obs::TraceCtx`] through the coordinator: the response gains a
@@ -51,6 +67,33 @@ use crate::util::json::{Json, ObjBuilder};
 
 use super::request::{SharedMatrix, SolveRequest};
 use super::service::Coordinator;
+
+/// The wire-protocol version this server speaks. Requests may pin it with
+/// `"v": <n>`; anything else is answered with `error_kind: "unsupported"`.
+pub const PROTO_VERSION: u64 = 1;
+
+/// Every top-level field a v1 solve request may carry. Unknown fields are
+/// rejected (not ignored): a client setting a knob this server does not
+/// understand must find out, not get a silently different answer.
+const SOLVE_FIELDS: &[&str] = &[
+    "v",
+    "id",
+    "obs",
+    "vars",
+    "x",
+    "x_coo",
+    "x_path",
+    "mem_budget",
+    "y",
+    "backend",
+    "sweeps",
+    "tol",
+    "thr",
+    "threads",
+    "trace",
+    "deadline_ms",
+    "attempt",
+];
 
 /// A running TCP server bound to a local port.
 pub struct Server {
@@ -146,7 +189,23 @@ fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>, stop: Arc<AtomicBool>
             break;
         }
         match reader.read_line(&mut line) {
-            Ok(0) => break, // EOF
+            Ok(0) => {
+                // EOF with a half-written line still buffered: answer it
+                // with a structured error (the peer may have shut down
+                // only its write half) instead of silently dropping it.
+                if !line.trim().is_empty() {
+                    let resp = error_json(
+                        None,
+                        &SolverError::InvalidInput(
+                            "half-written request: connection closed mid-line".into(),
+                        ),
+                    );
+                    let mut out = resp.to_string();
+                    out.push('\n');
+                    let _ = writer.write_all(out.as_bytes());
+                }
+                break;
+            }
             Ok(_) if !line.ends_with('\n') => continue, // partial at EOF edge
             Ok(_) => {}
             Err(e)
@@ -202,20 +261,52 @@ fn handle_line(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
                 ObjBuilder::new().bool("ok", true).val("traces", traces).build()
             }
             "ping" => ObjBuilder::new().bool("ok", true).str("pong", "pong").build(),
+            "hello" => hello_json(),
+            "faults" => match req.get("plan").and_then(Json::as_str) {
+                Some(spec) => match crate::robust::faults::FaultPlan::parse(spec) {
+                    Ok(plan) => {
+                        crate::robust::faults::install(&plan);
+                        ObjBuilder::new().bool("ok", true).str("plan", plan.to_string()).build()
+                    }
+                    Err(e) => error_json(None, &SolverError::InvalidInput(format!("faults: {e}"))),
+                },
+                None => ObjBuilder::new()
+                    .bool("ok", true)
+                    .str("plan", crate::robust::faults::current().to_string())
+                    .build(),
+            },
             "shutdown" => {
                 stop.store(true, Ordering::Relaxed);
                 ObjBuilder::new().bool("ok", true).str("bye", "bye").build()
             }
-            other => ObjBuilder::new()
-                .bool("ok", false)
-                .str("error", format!("unknown cmd '{other}'"))
-                .build(),
+            other => error_json(
+                None,
+                &SolverError::Unsupported(format!("unknown cmd '{other}'")),
+            ),
         };
+    }
+    if let Err(e) = validate_envelope(&req) {
+        let id = req.get("id").and_then(Json::as_f64).map(|f| f as u64);
+        return error_json(id, &e);
     }
     match parse_solve(&req) {
         Ok(sreq) => {
             let id = sreq.id;
-            let out = coord.solve_blocking(sreq);
+            if req.get("attempt").and_then(Json::as_usize).unwrap_or(0) > 0 {
+                coord.metrics().retries_attempted.fetch_add(1, Ordering::Relaxed);
+            }
+            let out = match coord.submit_robust(sreq) {
+                Ok(rx) => match rx.recv() {
+                    Ok(out) => out,
+                    Err(_) => {
+                        return error_json(
+                            Some(id),
+                            &SolverError::Service("reply channel dropped".into()),
+                        )
+                    }
+                },
+                Err(e) => return error_json(Some(id), &e),
+            };
             match out.report {
                 Ok(rep) => {
                     let a = Json::Arr(rep.a.iter().map(|&v| Json::Num(v as f64)).collect());
@@ -228,6 +319,9 @@ fn handle_line(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
                         .num("sweeps", rep.sweeps as f64)
                         .num("seconds", out.seconds)
                         .num("batch_size", out.batch_size as f64);
+                    if out.degraded {
+                        b = b.bool("degraded", true);
+                    }
                     if let Some(t) = &out.telemetry {
                         b = b.val("telemetry", t.to_json());
                     }
@@ -240,17 +334,95 @@ fn handle_line(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
     }
 }
 
+/// The `{"cmd": "hello"}` response: protocol version, concrete solver
+/// kinds, and each kind's capability flags.
+fn hello_json() -> Json {
+    let kinds = Json::Arr(
+        SolverKind::CONCRETE
+            .iter()
+            .map(|k| Json::Str(k.as_str().to_string()))
+            .collect(),
+    );
+    let mut caps = ObjBuilder::new();
+    for k in SolverKind::CONCRETE {
+        if let Some(c) = k.capabilities() {
+            caps = caps.val(
+                k.as_str(),
+                ObjBuilder::new()
+                    .bool("supports_wide", c.supports_wide)
+                    .bool("iterative", c.iterative)
+                    .bool("needs_square", c.needs_square)
+                    .bool("warm_start", c.warm_start)
+                    .bool("supports_sparse", c.supports_sparse)
+                    .bool("supports_parallel", c.supports_parallel)
+                    .bool("supports_streaming", c.supports_streaming)
+                    .bool("supports_probe", c.supports_probe)
+                    .build(),
+            );
+        }
+    }
+    ObjBuilder::new()
+        .bool("ok", true)
+        .num("proto_version", PROTO_VERSION as f64)
+        .val("solver_kinds", kinds)
+        .val("capabilities", caps.build())
+        .build()
+}
+
+/// Version + field gate for solve requests: reject protocol versions this
+/// server does not speak and top-level fields it does not understand.
+fn validate_envelope(req: &Json) -> Result<(), SolverError> {
+    if let Some(v) = req.get("v") {
+        if v.as_f64() != Some(PROTO_VERSION as f64) {
+            return Err(SolverError::Unsupported(format!(
+                "protocol version {v} (this server speaks v{PROTO_VERSION})"
+            )));
+        }
+    }
+    if let Json::Obj(fields) = req {
+        for key in fields.keys() {
+            if !SOLVE_FIELDS.contains(&key.as_str()) {
+                return Err(SolverError::Unsupported(format!(
+                    "unknown request field '{key}'"
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
 /// A structured error line: stable `error_kind` discriminant plus the
 /// human-readable message, so clients can branch without parsing prose.
+/// Variants with actionable payloads flatten them into the line:
+/// `deadline_exceeded` carries the best-so-far `a`/`rel_residual`/`sweeps`
+/// and `overloaded` carries the `retry_after_ms` backoff hint.
 fn error_json(id: Option<u64>, e: &SolverError) -> Json {
     let mut b = ObjBuilder::new().bool("ok", false);
     if let Some(id) = id {
         b = b.num("id", id as f64);
     }
-    b.str("error_kind", error_kind(e)).str("error", e.to_string()).build()
+    b = b.str("error_kind", error_kind(e)).str("error", e.to_string());
+    match e {
+        SolverError::DeadlineExceeded { best, rel_residual, sweeps } => {
+            let a = Json::Arr(best.iter().map(|&v| Json::Num(v as f64)).collect());
+            b = b
+                .val("a", a)
+                .num("rel_residual", *rel_residual)
+                .num("sweeps", *sweeps as f64);
+        }
+        SolverError::Overloaded { retry_after_ms } => {
+            b = b.num("retry_after_ms", *retry_after_ms as f64);
+        }
+        _ => {}
+    }
+    b.build()
 }
 
-fn error_kind(e: &SolverError) -> &'static str {
+/// The stable wire discriminant for `e` (the `error_kind` response field;
+/// the full table lives in `PROTOCOL.md`). The match is exhaustive on
+/// purpose: adding a [`SolverError`] variant without choosing its wire
+/// kind is a compile error, not a silent `"unknown"`.
+pub fn error_kind(e: &SolverError) -> &'static str {
     match e {
         SolverError::Shape(_) => "shape",
         SolverError::NonFinite { .. } => "non_finite",
@@ -261,6 +433,9 @@ fn error_kind(e: &SolverError) -> &'static str {
         SolverError::Backend { .. } => "backend",
         SolverError::Service(_) => "service",
         SolverError::InvalidInput(_) => "invalid_input",
+        SolverError::DeadlineExceeded { .. } => "deadline_exceeded",
+        SolverError::Overloaded { .. } => "overloaded",
+        SolverError::Unsupported(_) => "unsupported",
     }
 }
 
@@ -305,8 +480,7 @@ fn parse_solve(j: &Json) -> Result<SolveRequest, String> {
         SharedMatrix::Dense(Arc::new(Mat::from_row_major(obs, vars, &xv)))
     };
 
-    let mut req = SolveRequest::with_matrix(id, matrix, y);
-    req.backend = j
+    let backend = j
         .get("backend")
         .and_then(Json::as_str)
         .unwrap_or("auto")
@@ -325,9 +499,13 @@ fn parse_solve(j: &Json) -> Result<SolveRequest, String> {
     if let Some(t) = j.get("threads").and_then(Json::as_usize) {
         opts.threads = t.max(1);
     }
-    req.opts = opts;
-    if j.get("trace").and_then(Json::as_bool) == Some(true) {
-        req = req.traced();
+    let mut req = SolveRequest::builder(id, matrix, y)
+        .backend(backend)
+        .opts(opts)
+        .trace(j.get("trace").and_then(Json::as_bool) == Some(true))
+        .build();
+    if let Some(ms) = j.get("deadline_ms").and_then(Json::as_usize) {
+        req.deadline_ms = Some(ms as u64);
     }
     Ok(req)
 }
@@ -661,6 +839,130 @@ mod tests {
             let a = j.get("a").unwrap().items();
             assert!((a[0].as_f64().unwrap() - i as f64).abs() < 1e-4);
         }
+        server.stop();
+    }
+
+    #[test]
+    fn hello_reports_protocol_version_kinds_and_capabilities() {
+        let (_c, server) = start();
+        let j = roundtrip(server.addr(), r#"{"cmd": "hello"}"#);
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("proto_version").unwrap().as_f64(), Some(PROTO_VERSION as f64));
+        let kinds = j.get("solver_kinds").unwrap().items();
+        assert_eq!(kinds.len(), SolverKind::CONCRETE.len());
+        let names: Vec<&str> = kinds.iter().map(|k| k.as_str().unwrap()).collect();
+        assert!(names.contains(&"bak") && names.contains(&"qr"), "{names:?}");
+        let caps = j.get("capabilities").unwrap();
+        assert_eq!(
+            caps.get("bak").unwrap().get("supports_streaming").unwrap().as_bool(),
+            Some(true)
+        );
+        assert_eq!(caps.get("qr").unwrap().get("iterative").unwrap().as_bool(), Some(false));
+        server.stop();
+    }
+
+    #[test]
+    fn unknown_cmd_is_unsupported() {
+        let (_c, server) = start();
+        let j = roundtrip(server.addr(), r#"{"cmd": "frobnicate"}"#);
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("error_kind").unwrap().as_str(), Some("unsupported"));
+        assert!(j.get("error").unwrap().as_str().unwrap().contains("frobnicate"));
+        server.stop();
+    }
+
+    #[test]
+    fn unknown_field_and_wrong_version_are_unsupported() {
+        let (_c, server) = start();
+        // Unknown top-level field: rejected, echoing the field name and id.
+        let j = roundtrip(
+            server.addr(),
+            r#"{"id": 1, "obs": 2, "vars": 2, "x": [1,0, 0,1], "y": [1, 1], "frobnicate": true}"#,
+        );
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("error_kind").unwrap().as_str(), Some("unsupported"));
+        assert!(j.get("error").unwrap().as_str().unwrap().contains("frobnicate"));
+        assert_eq!(j.get("id").unwrap().as_f64(), Some(1.0));
+        // A version this server does not speak: rejected.
+        let j = roundtrip(
+            server.addr(),
+            r#"{"v": 2, "id": 2, "obs": 2, "vars": 2, "x": [1,0, 0,1], "y": [1, 1]}"#,
+        );
+        assert_eq!(j.get("error_kind").unwrap().as_str(), Some("unsupported"));
+        // An explicit "v": 1 is accepted and solves normally.
+        let ok = roundtrip(
+            server.addr(),
+            r#"{"v": 1, "id": 3, "backend": "qr", "obs": 2, "vars": 2, "x": [1,0, 0,1], "y": [4, 5]}"#,
+        );
+        assert_eq!(ok.get("ok").unwrap().as_bool(), Some(true), "{ok:?}");
+        server.stop();
+    }
+
+    #[test]
+    fn half_written_line_gets_structured_error() {
+        let (_c, server) = start();
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        s.write_all(br#"{"id": 1, "obs": 4"#).unwrap(); // no trailing newline
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut r = BufReader::new(s);
+        let mut resp = String::new();
+        r.read_line(&mut resp).unwrap();
+        let j = Json::parse(resp.trim()).expect("structured reply for half-written line");
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("error_kind").unwrap().as_str(), Some("invalid_input"));
+        assert!(j.get("error").unwrap().as_str().unwrap().contains("half-written"));
+        server.stop();
+    }
+
+    #[test]
+    fn faults_cmd_installs_queries_and_clears() {
+        let _guard = crate::robust::faults::test_guard();
+        let (_c, server) = start();
+        let j = roundtrip(
+            server.addr(),
+            r#"{"cmd": "faults", "plan": "slow_read_ms=5,slow_read_every=2"}"#,
+        );
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true), "{j:?}");
+        let q = roundtrip(server.addr(), r#"{"cmd": "faults"}"#);
+        assert!(q.get("plan").unwrap().as_str().unwrap().contains("slow_read_ms=5"), "{q:?}");
+        let bad = roundtrip(server.addr(), r#"{"cmd": "faults", "plan": "bogus=1"}"#);
+        assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(bad.get("error_kind").unwrap().as_str(), Some("invalid_input"));
+        // The empty plan is the documented "all faults off" spec.
+        let off = roundtrip(server.addr(), r#"{"cmd": "faults", "plan": ""}"#);
+        assert_eq!(off.get("ok").unwrap().as_bool(), Some(true));
+        assert!(crate::robust::faults::current().is_noop());
+        server.stop();
+    }
+
+    #[test]
+    fn deadline_exceeded_over_tcp_carries_best_so_far() {
+        let (_c, server) = start();
+        // deadline_ms = 0 expires before the job runs: the reply is a
+        // typed error that still carries a (zeroed) coefficient vector.
+        let req = r#"{"v": 1, "id": 41, "backend": "bak", "obs": 4, "vars": 2,
+            "x": [1,0, 0,1, 1,1, 1,-1], "y": [2, 3, 5, -1],
+            "sweeps": 200, "deadline_ms": 0}"#
+            .replace('\n', " ");
+        let j = roundtrip(server.addr(), &req);
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false), "{j:?}");
+        assert_eq!(j.get("error_kind").unwrap().as_str(), Some("deadline_exceeded"));
+        assert_eq!(j.get("id").unwrap().as_f64(), Some(41.0));
+        assert_eq!(j.get("a").unwrap().items().len(), 2);
+        assert!(j.get("rel_residual").unwrap().as_f64().unwrap() >= 1.0 - 1e-12);
+        assert_eq!(j.get("sweeps").unwrap().as_f64(), Some(0.0));
+        server.stop();
+    }
+
+    #[test]
+    fn attempt_field_feeds_retry_counter() {
+        let (coord, server) = start();
+        let req = r#"{"id": 51, "backend": "qr", "obs": 2, "vars": 2,
+            "x": [1,0, 0,1], "y": [1, 2], "attempt": 1}"#
+            .replace('\n', " ");
+        let j = roundtrip(server.addr(), &req);
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true), "{j:?}");
+        assert_eq!(coord.metrics().retries_attempted.load(Ordering::Relaxed), 1);
         server.stop();
     }
 

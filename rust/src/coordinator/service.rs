@@ -64,6 +64,15 @@ pub struct CoordinatorConfig {
     pub batch: BatchPolicy,
     /// Artifact directory; enables the PJRT backend when present & valid.
     pub artifact_dir: Option<PathBuf>,
+    /// Admission control: max concurrently admitted [`Coordinator::submit_robust`]
+    /// requests. `0` disables the gate (every request admitted).
+    pub max_inflight: usize,
+    /// How long a robust submission may wait for a permit before the gate
+    /// sheds (or degrades) it. `0` = don't wait: shed immediately.
+    pub max_queue_wait_ms: u64,
+    /// When set, a saturated gate answers with a reduced-sweep BAK solve
+    /// (capped at this many sweeps) instead of shedding the request.
+    pub degraded_sweeps: Option<usize>,
 }
 
 impl Default for CoordinatorConfig {
@@ -73,6 +82,9 @@ impl Default for CoordinatorConfig {
             queue_capacity: 256,
             batch: BatchPolicy::default(),
             artifact_dir: None,
+            max_inflight: 0,
+            max_queue_wait_ms: 0,
+            degraded_sweeps: None,
         }
     }
 }
@@ -81,11 +93,16 @@ struct Envelope {
     req: SolveRequest,
     reply: mpsc::Sender<SolveOutcome>,
     submitted: Instant,
+    /// Admission permit ([`crate::robust::AdmissionGate`]); released by
+    /// RAII wherever the envelope dies — reply, shed, panic or shutdown.
+    permit: Option<crate::robust::Permit>,
 }
 
 struct JobEnvelope {
     job: SolveJob,
     replies: Vec<(mpsc::Sender<SolveOutcome>, Instant)>,
+    /// Permits of every admitted member; dropped when the job finishes.
+    permits: Vec<crate::robust::Permit>,
 }
 
 /// The running service. Dropping it shuts down cleanly.
@@ -96,12 +113,16 @@ pub struct Coordinator {
     engine: Option<Arc<Engine>>,
     scheduler: Option<std::thread::JoinHandle<()>>,
     executor: Option<Arc<Executor<JobEnvelope>>>,
+    gate: Option<Arc<crate::robust::AdmissionGate>>,
+    max_queue_wait_ms: u64,
+    degraded_sweeps: Option<usize>,
 }
 
 impl Coordinator {
     /// Start the service: spawns the scheduler and a
     /// `config.workers`-wide [`Executor`].
     pub fn start(config: CoordinatorConfig) -> Self {
+        crate::robust::faults::init_from_env();
         let metrics = Arc::new(Metrics::new());
         let traces = Arc::new(TraceRing::new(TRACE_RING_CAP));
         let engine = config.artifact_dir.as_ref().and_then(|dir| match Engine::new(dir) {
@@ -132,6 +153,10 @@ impl Coordinator {
                     metrics
                         .job_queue_depth
                         .fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
+                    // Fault injection: a panicking worker is the executor's
+                    // panic-isolation path — reply senders (and permits)
+                    // drop, clients observe a typed Service error.
+                    crate::robust::faults::maybe_panic_worker();
                     run_job(env, engine.as_ref(), &metrics, &traces);
                 },
             ))
@@ -148,6 +173,9 @@ impl Coordinator {
                 .name("bak-scheduler".into())
                 .spawn(move || {
                     while let Some(first) = submit_q.pop() {
+                        if let Some(d) = crate::robust::faults::queue_stall() {
+                            std::thread::sleep(d);
+                        }
                         // Opportunistic coalescing window: whatever else is
                         // already queued right now.
                         let mut envs = vec![first];
@@ -165,6 +193,10 @@ impl Coordinator {
             engine,
             scheduler: Some(scheduler),
             executor: Some(executor),
+            gate: (config.max_inflight > 0)
+                .then(|| crate::robust::AdmissionGate::new(config.max_inflight)),
+            max_queue_wait_ms: config.max_queue_wait_ms,
+            degraded_sweeps: config.degraded_sweeps,
         }
     }
 
@@ -174,12 +206,80 @@ impl Coordinator {
         &self,
         req: SolveRequest,
     ) -> Result<mpsc::Receiver<SolveOutcome>, SolverError> {
+        self.submit_with_permit(req, None)
+    }
+
+    fn submit_with_permit(
+        &self,
+        req: SolveRequest,
+        permit: Option<crate::robust::Permit>,
+    ) -> Result<mpsc::Receiver<SolveOutcome>, SolverError> {
         let (tx, rx) = mpsc::channel();
         self.metrics.requests_submitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.submit_q
-            .push(Envelope { req, reply: tx, submitted: Instant::now() })
+            .push(Envelope { req, reply: tx, submitted: Instant::now(), permit })
             .map_err(|_| SolverError::Service("coordinator is shut down".into()))?;
         Ok(rx)
+    }
+
+    /// Submit through the robustness layer: arms the request's deadline
+    /// (when [`SolveRequest::deadline_ms`] is set — queue wait consumes
+    /// budget) and passes the admission gate when one is configured.
+    ///
+    /// A saturated gate either sheds the request with a typed
+    /// [`SolverError::Overloaded`] (carrying a `retry_after_ms` hint from
+    /// the recent solve-latency mean) or — when
+    /// [`CoordinatorConfig::degraded_sweeps`] is set — admits it past the
+    /// gate as a reduced-sweep BAK solve flagged `degraded`.
+    pub fn submit_robust(
+        &self,
+        mut req: SolveRequest,
+    ) -> Result<mpsc::Receiver<SolveOutcome>, SolverError> {
+        if let Some(ms) = req.deadline_ms {
+            req.opts.cancel = crate::robust::CancelToken::with_deadline_ms(ms);
+        }
+        let mut permit = None;
+        if let Some(gate) = &self.gate {
+            let wait = std::time::Duration::from_millis(self.max_queue_wait_ms);
+            permit = gate.try_acquire().or_else(|| {
+                if self.max_queue_wait_ms > 0 {
+                    gate.acquire_timeout(wait)
+                } else {
+                    None
+                }
+            });
+            if permit.is_none() {
+                match self.degraded_sweeps {
+                    Some(sweeps) => {
+                        // Degraded mode: answer anyway, but cheaply — the
+                        // sweep budget is the solver family's natural
+                        // degradation axis.
+                        req.opts.max_sweeps = req.opts.max_sweeps.min(sweeps.max(1));
+                        req.backend = SolverKind::Bak;
+                        req.degraded = true;
+                        self.metrics
+                            .degraded_solves
+                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                    None => {
+                        self.metrics
+                            .jobs_shed
+                            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        return Err(SolverError::Overloaded {
+                            retry_after_ms: self.retry_after_hint_ms(),
+                        });
+                    }
+                }
+            }
+        }
+        self.submit_with_permit(req, permit)
+    }
+
+    /// Backoff hint for shed clients: the recent mean solve latency,
+    /// clamped to [25ms, 5s] so a cold (or pathological) histogram still
+    /// yields a sane hint.
+    fn retry_after_hint_ms(&self) -> u64 {
+        ((self.metrics.solve_latency.mean() * 1e3) as u64).clamp(25, 5000)
     }
 
     /// Submit without blocking; Err(request) when the queue is full.
@@ -188,7 +288,12 @@ impl Coordinator {
         req: SolveRequest,
     ) -> Result<mpsc::Receiver<SolveOutcome>, SolveRequest> {
         let (tx, rx) = mpsc::channel();
-        match self.submit_q.try_push(Envelope { req, reply: tx, submitted: Instant::now() }) {
+        match self.submit_q.try_push(Envelope {
+            req,
+            reply: tx,
+            submitted: Instant::now(),
+            permit: None,
+        }) {
             Ok(()) => {
                 self.metrics
                     .requests_submitted
@@ -214,6 +319,7 @@ impl Coordinator {
                 seconds: 0.0,
                 batch_size: 0,
                 telemetry: None,
+                degraded: false,
             }),
             Err(e) => SolveOutcome {
                 id: 0,
@@ -222,6 +328,7 @@ impl Coordinator {
                 seconds: 0.0,
                 batch_size: 0,
                 telemetry: None,
+                degraded: false,
             },
         }
     }
@@ -277,36 +384,47 @@ fn schedule_batch(
     executor: &Executor<JobEnvelope>,
     metrics: &Metrics,
 ) {
-    // Preserve reply channels through the coalescer by id.
-    let mut replies: std::collections::HashMap<u64, (mpsc::Sender<SolveOutcome>, Instant)> =
-        std::collections::HashMap::new();
+    // Preserve reply channels (and admission permits) through the
+    // coalescer by id.
+    type ReplySlot = (mpsc::Sender<SolveOutcome>, Instant, Option<crate::robust::Permit>);
+    let mut replies: std::collections::HashMap<u64, ReplySlot> = std::collections::HashMap::new();
     let mut reqs = Vec::with_capacity(envs.len());
     for env in envs {
         metrics.queue_wait.record(env.submitted.elapsed().as_secs_f64());
-        if let Some(ctx) = env.req.trace.clone() {
-            // Traced requests become singleton jobs — coalescing would
-            // make the span timeline and trajectory describe a batch, not
-            // the request. The queue wait is recorded retroactively: the
-            // span began when the request was submitted.
-            ctx.record_ns("queue_wait", ctx.ns_of(env.submitted), ctx.now_ns(), None);
+        // Singleton jobs: traced requests (the span timeline must describe
+        // exactly one solve), deadline-armed requests (one member's budget
+        // must not cancel batch-mates), and degraded requests (their
+        // clamped sweep budget must not infect a batch).
+        let singleton = env.req.trace.is_some()
+            || env.req.opts.cancel.is_enabled()
+            || env.req.degraded;
+        if singleton {
+            if let Some(ctx) = env.req.trace.clone() {
+                // The queue wait is recorded retroactively: the span began
+                // when the request was submitted.
+                ctx.record_ns("queue_wait", ctx.ns_of(env.submitted), ctx.now_ns(), None);
+            }
             metrics.job_queue_depth.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let permits = env.permit.into_iter().collect();
             let job = SolveJob::single(env.req);
-            let env = JobEnvelope { job, replies: vec![(env.reply, env.submitted)] };
+            let env = JobEnvelope { job, replies: vec![(env.reply, env.submitted)], permits };
             if executor.submit(env).is_err() {
                 metrics.job_queue_depth.fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
                 return; // shutting down
             }
             continue;
         }
-        replies.insert(env.req.id, (env.reply, env.submitted));
+        replies.insert(env.req.id, (env.reply, env.submitted, env.permit));
         reqs.push(env.req);
     }
     for job in coalesce(reqs, policy) {
-        let job_replies: Vec<_> = job
-            .members
-            .iter()
-            .map(|(id, _)| replies.remove(id).expect("reply channel per member"))
-            .collect();
+        let mut job_replies = Vec::with_capacity(job.len());
+        let mut permits = Vec::new();
+        for (id, _) in &job.members {
+            let (tx, sub, permit) = replies.remove(id).expect("reply channel per member");
+            job_replies.push((tx, sub));
+            permits.extend(permit);
+        }
         if job.len() > 1 {
             metrics
                 .batched_members
@@ -315,7 +433,7 @@ fn schedule_batch(
         // Gauge up BEFORE the submit so a worker's pop-side decrement can
         // never observe the queue entry ahead of the increment.
         metrics.job_queue_depth.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        if executor.submit(JobEnvelope { job, replies: job_replies }).is_err() {
+        if executor.submit(JobEnvelope { job, replies: job_replies, permits }).is_err() {
             metrics.job_queue_depth.fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
             return; // shutting down; remaining replies drop -> RecvError
         }
@@ -328,8 +446,36 @@ fn run_job(
     metrics: &Metrics,
     traces: &TraceRing,
 ) {
-    let JobEnvelope { mut job, replies } = env;
+    // `_permits` stays alive until the function returns, so the admission
+    // gate frees capacity only after every reply has been sent.
+    let JobEnvelope { mut job, replies, permits: _permits } = env;
     metrics.jobs_run.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    // A deadline that expired while the job sat in the queue: answer every
+    // member immediately with a typed error (zero-coefficient "best", unit
+    // relative residual) instead of burning a worker on a doomed solve.
+    if job.opts.cancel.is_cancelled() {
+        let batch_size = job.len();
+        metrics
+            .jobs_deadline_exceeded
+            .fetch_add(batch_size as u64, std::sync::atomic::Ordering::Relaxed);
+        for ((id, _), (reply, _submitted)) in job.members.iter().zip(replies) {
+            metrics.requests_failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let _ = reply.send(SolveOutcome {
+                id: *id,
+                report: Err(SolverError::DeadlineExceeded {
+                    best: vec![0.0; job.x.cols()],
+                    rel_residual: 1.0,
+                    sweeps: 0,
+                }),
+                backend: job.backend,
+                seconds: 0.0,
+                batch_size,
+                telemetry: None,
+                degraded: job.degraded,
+            });
+        }
+        return;
+    }
     // Traced job: mint a probe into the options so the solver loop feeds
     // the trajectory ring, and open per-stage spans around route / solve /
     // merge below. Untraced jobs skip all of it (probe stays disabled).
@@ -366,7 +512,29 @@ fn run_job(
     // Merge stage: attribute latencies and stitch ids back on.
     let merge_span = tracing.as_ref().map(|(ctx, _)| ctx.begin("merge", None));
     let mut merged = Vec::with_capacity(outcomes.len());
-    for ((id, _), outcome) in job.members.iter().zip(outcomes) {
+    for ((id, _), mut outcome) in job.members.iter().zip(outcomes) {
+        // A deadline-armed solve that stopped on Cancelled surfaces as the
+        // typed DeadlineExceeded error, carrying the best-so-far solution
+        // (the solver's exit invariant guarantees `e == y - Xa` for it).
+        if job.opts.cancel.is_enabled()
+            && matches!(&outcome.report, Ok(rep) if rep.stop == solver::StopReason::Cancelled)
+        {
+            if let Ok(rep) = std::mem::replace(
+                &mut outcome.report,
+                Err(SolverError::Service(String::new())),
+            ) {
+                metrics
+                    .jobs_deadline_exceeded
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let rel_residual = rep.rel_residual();
+                let sweeps = rep.sweeps;
+                outcome.report = Err(SolverError::DeadlineExceeded {
+                    best: rep.a,
+                    rel_residual,
+                    sweeps,
+                });
+            }
+        }
         let ok = outcome.report.is_ok();
         metrics.solve_latency.record(outcome.seconds);
         if ok {
@@ -374,7 +542,7 @@ fn run_job(
         } else {
             metrics.requests_failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         }
-        merged.push(SolveOutcome { id: *id, batch_size, ..outcome });
+        merged.push(SolveOutcome { id: *id, batch_size, degraded: job.degraded, ..outcome });
     }
     if let (Some((ctx, _)), Some(idx)) = (&tracing, merge_span) {
         ctx.end(idx);
@@ -581,6 +749,7 @@ fn execute_job(
                                     seconds: secs,
                                     batch_size: 0,
                                     telemetry: None,
+                                    degraded: job.degraded,
                                 })
                                 .collect()
                         }
@@ -635,6 +804,7 @@ fn execute_dense_job(
                             seconds: factor_s + t1.elapsed().as_secs_f64(),
                             batch_size: 0,
                             telemetry: None,
+                            degraded: job.degraded,
                         }
                     })
                     .collect()
@@ -690,6 +860,7 @@ fn execute_dense_job(
                     seconds: secs,
                     batch_size: 0,
                     telemetry: None,
+                    degraded: job.degraded,
                 })
                 .collect()
         }
@@ -740,6 +911,7 @@ fn per_member(
                 seconds: t0.elapsed().as_secs_f64(),
                 batch_size: 0,
                 telemetry: None,
+                degraded: job.degraded,
             }
         })
         .collect()
@@ -893,7 +1065,7 @@ mod tests {
     fn sparse_auto_runs_natively_without_densification() {
         let coord = Coordinator::start(CoordinatorConfig::default());
         let (x, y, a_true) = planted_sparse(407, 300, 24, 0.1);
-        let mut req = SolveRequest::new_sparse(1, x, y);
+        let mut req = SolveRequest::builder(1, x, y).build();
         req.opts = solver::SolveOptions::accurate();
         let out = coord.solve_blocking(req);
         // Auto + sparse routes to a sparse-native solver...
@@ -911,7 +1083,7 @@ mod tests {
     fn sparse_request_on_dense_only_backend_densifies_and_counts() {
         let coord = Coordinator::start(CoordinatorConfig::default());
         let (x, y, a_true) = planted_sparse(408, 120, 16, 0.15);
-        let mut req = SolveRequest::new_sparse(2, x, y);
+        let mut req = SolveRequest::builder(2, x, y).build();
         req.backend = SolverKind::Qr;
         let out = coord.solve_blocking(req);
         assert_eq!(out.backend, SolverKind::Qr);
@@ -935,7 +1107,7 @@ mod tests {
         for i in 0..6u64 {
             let a: Vec<f32> = (0..12).map(|_| rng.normal_f32()).collect();
             let y = x.matvec(&a);
-            let mut req = SolveRequest::new_sparse(i, x.clone(), y);
+            let mut req = SolveRequest::builder(i, x.clone(), y).build();
             req.backend = SolverKind::Cgls;
             req.opts = solver::SolveOptions::accurate();
             rxs.push((i, a, coord.submit(req).unwrap()));
@@ -1019,6 +1191,7 @@ mod tests {
             opts: solver::SolveOptions::default(),
             backend: SolverKind::Qr,
             trace: None,
+            degraded: false,
         };
         let metrics = Metrics::new();
         let outcomes = execute_job(&job, SolverKind::Qr, None, &metrics, None);
@@ -1053,7 +1226,7 @@ mod tests {
         let coord = Coordinator::start(CoordinatorConfig::default());
         let (x, y, a_true) = planted_streamed(420, 600, 30, 7, "svc_auto");
         let path = x.path().to_path_buf();
-        let mut req = SolveRequest::new_streamed(1, x, y);
+        let mut req = SolveRequest::builder(1, x, y).build();
         req.opts = solver::SolveOptions::accurate();
         let out = coord.solve_blocking(req);
         assert_eq!(out.backend, SolverKind::Bak);
@@ -1073,7 +1246,7 @@ mod tests {
         let coord = Coordinator::start(CoordinatorConfig::default());
         let (x, y, _) = planted_streamed(421, 120, 10, 4, "svc_refuse");
         let path = x.path().to_path_buf();
-        let mut req = SolveRequest::new_streamed(2, x, y);
+        let mut req = SolveRequest::builder(2, x, y).build();
         req.backend = SolverKind::Qr;
         let out = coord.solve_blocking(req);
         assert_eq!(out.backend, SolverKind::Qr, "hint honoured through routing");
@@ -1108,6 +1281,7 @@ mod tests {
             opts: solver::SolveOptions::accurate(),
             backend: SolverKind::BakMulti,
             trace: None,
+            degraded: false,
         };
         let metrics = Metrics::new();
         let outcomes = execute_job(&job, SolverKind::BakMulti, None, &metrics, None);
@@ -1123,7 +1297,7 @@ mod tests {
     fn traced_request_returns_telemetry_and_fills_ring() {
         let coord = Coordinator::start(CoordinatorConfig::default());
         let (x, y, _) = planted(430, 300, 20);
-        let mut req = SolveRequest::new(11, x, y).traced();
+        let mut req = SolveRequest::builder(11, x, y).trace(true).build();
         req.backend = SolverKind::Bak;
         req.opts = solver::SolveOptions::builder().max_sweeps(20).tol(0.0).build();
         let out = coord.solve_blocking(req);
@@ -1181,4 +1355,137 @@ mod tests {
         assert!(total >= 4.0, "every job counted against a worker");
         coord.shutdown();
     }
+
+    #[test]
+    fn expired_deadline_returns_typed_error_without_solving() {
+        let coord = Coordinator::start(CoordinatorConfig::default());
+        let (x, y, _) = planted(440, 200, 16);
+        let req = SolveRequest::builder(1, x, y).deadline_ms(0).build();
+        let rx = coord.submit_robust(req).expect("deadline requests are admitted");
+        let out = rx.recv().unwrap();
+        match out.report {
+            Err(SolverError::DeadlineExceeded { best, rel_residual, sweeps }) => {
+                assert_eq!(best.len(), 16);
+                assert_eq!(sweeps, 0);
+                assert!(rel_residual >= 1.0 - 1e-12);
+            }
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        use std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(coord.metrics().jobs_deadline_exceeded.load(Relaxed), 1);
+        assert_eq!(coord.metrics().requests_failed.load(Relaxed), 1);
+        coord.shutdown();
+    }
+
+    /// Cancels the token from inside the solver's first residual check, so
+    /// the mid-solve cancellation path is exercised deterministically.
+    struct CancelOnFirstSweep(crate::robust::CancelToken);
+
+    impl crate::obs::SolveProbe for CancelOnFirstSweep {
+        fn on_sweep(&self, _sweep: usize, _residual_norm: f64, _elapsed_ns: u64) {
+            self.0.cancel();
+        }
+    }
+
+    #[test]
+    fn mid_solve_cancellation_surfaces_best_so_far() {
+        let coord = Coordinator::start(CoordinatorConfig::default());
+        let (x, y, _) = planted(441, 300, 24);
+        let token = crate::robust::CancelToken::manual();
+        let mut req = SolveRequest::builder(2, x, y)
+            .backend(SolverKind::Bak)
+            .opts(
+                solver::SolveOptions::builder()
+                    .max_sweeps(500)
+                    .tol(1e-8)
+                    .check_every(1)
+                    .cancel(token.clone())
+                    .probe(ProbeHandle::new(Arc::new(CancelOnFirstSweep(token))))
+                    .build(),
+            )
+            .build();
+        req.opts.thr = 1;
+        let out = coord.solve_blocking(req);
+        match out.report {
+            Err(SolverError::DeadlineExceeded { best, rel_residual, sweeps }) => {
+                assert_eq!(sweeps, 1, "cancelled at the first residual check");
+                assert_eq!(best.len(), 24);
+                assert!(
+                    rel_residual < 1.0,
+                    "one sweep already improved on the zero solution: {rel_residual}"
+                );
+            }
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn saturated_gate_sheds_with_retry_hint() {
+        let _guard = crate::robust::faults::test_guard();
+        crate::robust::faults::install(&crate::robust::FaultPlan {
+            queue_stall_ms: 60,
+            ..Default::default()
+        });
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 1,
+            max_inflight: 1,
+            ..CoordinatorConfig::default()
+        });
+        let (x, y, _) = planted(442, 100, 10);
+        // First robust submission takes the only permit; the scheduler is
+        // stalled by the injected fault, so the permit cannot be released
+        // before the second submission arrives.
+        let rx = coord
+            .submit_robust(SolveRequest::builder(1, x.clone(), y.clone()).build())
+            .expect("first request admitted");
+        let shed = coord.submit_robust(SolveRequest::builder(2, x, y).build());
+        match shed {
+            Err(SolverError::Overloaded { retry_after_ms }) => {
+                assert!((25..=5000).contains(&retry_after_ms), "hint {retry_after_ms}ms");
+            }
+            Err(other) => panic!("expected Overloaded, got {other:?}"),
+            Ok(_) => panic!("expected Overloaded, got admission"),
+        }
+        crate::robust::faults::clear();
+        assert!(rx.recv().unwrap().report.is_ok());
+        use std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(coord.metrics().jobs_shed.load(Relaxed), 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn saturated_gate_degrades_when_configured() {
+        let _guard = crate::robust::faults::test_guard();
+        crate::robust::faults::install(&crate::robust::FaultPlan {
+            queue_stall_ms: 60,
+            ..Default::default()
+        });
+        let coord = Coordinator::start(CoordinatorConfig {
+            workers: 1,
+            max_inflight: 1,
+            degraded_sweeps: Some(2),
+            ..CoordinatorConfig::default()
+        });
+        let (x, y, _) = planted(443, 120, 12);
+        let rx1 = coord
+            .submit_robust(SolveRequest::builder(1, x.clone(), y.clone()).build())
+            .expect("first request admitted");
+        let rx2 = coord
+            .submit_robust(SolveRequest::builder(2, x, y).build())
+            .expect("degraded mode admits past the gate");
+        crate::robust::faults::clear();
+        let out1 = rx1.recv().unwrap();
+        let out2 = rx2.recv().unwrap();
+        assert!(!out1.degraded);
+        assert!(out2.degraded, "second request answered in degraded mode");
+        assert_eq!(out2.backend, SolverKind::Bak);
+        let rep = out2.report.expect("degraded solve still answers");
+        assert!(rep.sweeps <= 2, "sweep budget clamped: {}", rep.sweeps);
+        use std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(coord.metrics().degraded_solves.load(Relaxed), 1);
+        assert_eq!(coord.metrics().jobs_shed.load(Relaxed), 0);
+        coord.shutdown();
+    }
+
 }

@@ -236,6 +236,69 @@
 //!   (req/s, p50/p99 latency, queue depth, busy workers, stream stalls).
 //!   Set `PALLAS_LOG_FORMAT=json` to switch [`util::log`] to structured
 //!   one-object-per-line output with optional `trace_id` correlation.
+//!
+//! ## Robustness
+//!
+//! The [`robust`] module keeps the service answering under pressure. The
+//! BAK family's accuracy is "straightforwardly controlled" by the sweep
+//! budget, so a partial answer is always available — the robustness layer
+//! turns that into deadlines, admission control, and graceful
+//! degradation:
+//!
+//! * **Deadlines & cancellation.** A [`robust::CancelToken`] rides inside
+//!   [`solver::SolveOptions::cancel`] and is polled at every residual
+//!   check (the same hook points as the convergence probe; one branch
+//!   when disabled, so undeadlined solves stay bit-identical). Over the
+//!   wire, `"deadline_ms"` arms the token when the request is admitted —
+//!   queue wait spends the same budget — and an expired job stops
+//!   mid-sweep, returning [`SolverError::DeadlineExceeded`] with the
+//!   best-so-far coefficients and achieved residual:
+//!
+//! ```no_run
+//! use solvebak::api::{solver_for, Problem, SolverKind};
+//! use solvebak::linalg::Mat;
+//! use solvebak::robust::CancelToken;
+//! use solvebak::solver::{SolveOptions, StopReason};
+//! use solvebak::util::rng::Rng;
+//!
+//! let mut rng = Rng::seed(42);
+//! let x = Mat::randn(&mut rng, 100_000, 512);
+//! let y = x.matvec(&vec![0.5; 512]);
+//! let problem = Problem::new(&x, &y).expect("validated");
+//!
+//! // Give the solve 50 ms; whatever it reached by then comes back.
+//! let opts = SolveOptions::builder()
+//!     .max_sweeps(10_000)
+//!     .cancel(CancelToken::with_deadline_ms(50))
+//!     .build();
+//! let report = solver_for(SolverKind::Bak).unwrap().solve(&problem, &opts).unwrap();
+//! if report.stop == StopReason::Cancelled {
+//!     println!("deadline hit after {} sweeps, residual {}",
+//!              report.sweeps, report.rel_residual());
+//! }
+//! ```
+//!
+//! * **Admission control & load-shedding.** `serve-tcp --max-inflight N
+//!   --max-queue-wait-ms M` puts a [`robust::AdmissionGate`] in front of
+//!   the job queue: saturated requests get an immediate structured
+//!   `{"error_kind":"overloaded","retry_after_ms":...}` reply instead of
+//!   queueing forever, and `--degraded-sweeps K` answers them with a
+//!   reduced-sweep BAK solve (`"degraded":true`) instead of rejecting.
+//! * **Client retries.** The [`client`] module's
+//!   [`client::RetryPolicy`] (jittered exponential backoff, budget-capped,
+//!   honouring `retry_after_ms`) backs a small [`client::Client`] used by
+//!   the CLI and the stats dashboard.
+//! * **Fault injection.** A [`robust::FaultPlan`]
+//!   (`PALLAS_FAULTS=worker_panic_every=7,slow_read_ms=50,...` or the TCP
+//!   `{"cmd":"faults","plan":"..."}` command) injects worker panics, slow
+//!   prefetch reads, and scheduler stalls; CI's `chaos-smoke` job uses it
+//!   to prove every client still gets a structured reply. Metrics:
+//!   `jobs_shed`, `jobs_deadline_exceeded`, `retries_attempted`,
+//!   `degraded_solves`.
+//!
+//! The wire protocol itself is versioned (`"v": 1`, `{"cmd":"hello"}`
+//! capability discovery, structured `error_kind: "unsupported"` for
+//! unknown commands/fields) and documented in `PROTOCOL.md`.
 
 pub mod util;
 pub mod obs;
@@ -245,9 +308,11 @@ pub mod baselines;
 pub mod solver;
 pub mod stream;
 pub mod parallel;
+pub mod robust;
 pub mod api;
 pub mod runtime;
 pub mod coordinator;
+pub mod client;
 pub mod bench;
 pub mod cli;
 

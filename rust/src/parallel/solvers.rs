@@ -261,6 +261,10 @@ fn bak_par_generic<C: ColAccess>(x: &C, y: &[f32], opts: &SolveOptions) -> Solve
             let r2 = blas1::sum_sq_f64(&e);
             history.push(r2);
             opts.probe.observe(sweeps, r2, t0);
+            if opts.cancel.is_cancelled() {
+                stop = StopReason::Cancelled;
+                break;
+            }
             if opts.tol > 0.0 && r2 <= tol_sq {
                 stop = StopReason::Converged;
                 break;
@@ -388,6 +392,10 @@ fn kaczmarz_par_generic<R: RowAccess>(x: &R, y: &[f32], opts: &SolveOptions) -> 
         let r2 = blas1::sum_sq_f64(&e);
         history.push(r2);
         opts.probe.observe(sweeps, r2, t0);
+        if opts.cancel.is_cancelled() {
+            stop = StopReason::Cancelled;
+            break;
+        }
         if opts.tol > 0.0 && r2 <= tol_sq {
             stop = StopReason::Converged;
             break;
@@ -497,6 +505,14 @@ fn bak_multi_chunk<C: ColAccess>(
                 done[r] = Some(StopReason::Stalled);
             }
             prev_r2[r] = r2;
+        }
+        if opts.cancel.is_cancelled() {
+            for d in done.iter_mut() {
+                if d.is_none() {
+                    *d = Some(StopReason::Cancelled);
+                }
+            }
+            break;
         }
     }
 

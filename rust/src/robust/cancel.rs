@@ -1,0 +1,144 @@
+//! Cooperative cancellation tokens with optional deadlines.
+//!
+//! A [`CancelToken`] rides inside [`crate::solver::SolveOptions`] and is
+//! polled by every iterative solver at its residual-check points — the
+//! same places the convergence probe observes. The disabled default is a
+//! `None` that costs a single branch per check: no clock read, no atomic
+//! load, no allocation, so solves without a deadline remain bit-identical
+//! to builds that predate cancellation.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+#[derive(Debug)]
+struct CancelInner {
+    /// Absolute deadline; `None` for manually-cancelled-only tokens.
+    deadline: Option<Instant>,
+    /// Explicit cancellation flag (set by [`CancelToken::cancel`]).
+    flag: AtomicBool,
+}
+
+/// Shared cancellation token. Cloning shares the underlying state, so a
+/// coordinator can arm one token and hand clones to every stage of a job.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Option<Arc<CancelInner>>);
+
+impl CancelToken {
+    /// The disabled token: never cancels, costs one branch to poll.
+    pub fn none() -> Self {
+        CancelToken(None)
+    }
+
+    /// An armed token with no deadline; cancels only via [`cancel`].
+    ///
+    /// [`cancel`]: CancelToken::cancel
+    pub fn manual() -> Self {
+        CancelToken(Some(Arc::new(CancelInner {
+            deadline: None,
+            flag: AtomicBool::new(false),
+        })))
+    }
+
+    /// A token that expires `budget` from now (or earlier via [`cancel`]).
+    ///
+    /// [`cancel`]: CancelToken::cancel
+    pub fn with_deadline(budget: Duration) -> Self {
+        CancelToken(Some(Arc::new(CancelInner {
+            deadline: Some(Instant::now() + budget),
+            flag: AtomicBool::new(false),
+        })))
+    }
+
+    /// Millisecond shorthand for [`with_deadline`] — the wire-protocol
+    /// unit (`"deadline_ms"`).
+    ///
+    /// [`with_deadline`]: CancelToken::with_deadline
+    pub fn with_deadline_ms(ms: u64) -> Self {
+        Self::with_deadline(Duration::from_millis(ms))
+    }
+
+    /// Whether this token can ever cancel (armed manually or by deadline).
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Request cancellation. No-op on a disabled token.
+    pub fn cancel(&self) {
+        if let Some(inner) = &self.0 {
+            inner.flag.store(true, Ordering::Relaxed);
+        }
+    }
+
+    /// Poll the token: `true` once cancelled or past the deadline.
+    ///
+    /// Hot-loop contract: one branch when disabled; one relaxed load plus
+    /// at most one clock read when armed.
+    #[inline]
+    pub fn is_cancelled(&self) -> bool {
+        match &self.0 {
+            None => false,
+            Some(inner) => {
+                inner.flag.load(Ordering::Relaxed)
+                    || inner.deadline.is_some_and(|d| Instant::now() >= d)
+            }
+        }
+    }
+
+    /// Milliseconds left before the deadline (`None` when no deadline is
+    /// armed; `Some(0)` once expired). Used for `retry_after_ms` hints.
+    pub fn remaining_ms(&self) -> Option<u64> {
+        let inner = self.0.as_ref()?;
+        let deadline = inner.deadline?;
+        Some(deadline.saturating_duration_since(Instant::now()).as_millis() as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_token_never_cancels() {
+        let t = CancelToken::none();
+        assert!(!t.is_enabled());
+        assert!(!t.is_cancelled());
+        t.cancel(); // no-op
+        assert!(!t.is_cancelled());
+        assert_eq!(t.remaining_ms(), None);
+    }
+
+    #[test]
+    fn default_is_disabled() {
+        assert!(!CancelToken::default().is_enabled());
+    }
+
+    #[test]
+    fn manual_cancel_is_shared_across_clones() {
+        let t = CancelToken::manual();
+        let clone = t.clone();
+        assert!(t.is_enabled());
+        assert!(!clone.is_cancelled());
+        t.cancel();
+        assert!(clone.is_cancelled());
+        assert_eq!(t.remaining_ms(), None); // no deadline armed
+    }
+
+    #[test]
+    fn deadline_expires() {
+        let t = CancelToken::with_deadline(Duration::from_millis(0));
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.is_cancelled());
+        assert_eq!(t.remaining_ms(), Some(0));
+    }
+
+    #[test]
+    fn far_deadline_not_yet_cancelled() {
+        let t = CancelToken::with_deadline_ms(60_000);
+        assert!(t.is_enabled());
+        assert!(!t.is_cancelled());
+        let rem = t.remaining_ms().expect("deadline armed");
+        assert!(rem > 55_000, "remaining {rem}ms");
+    }
+}

@@ -1,0 +1,276 @@
+//! Fault injection for chaos testing.
+//!
+//! A [`FaultPlan`] describes which faults to inject and how often; it is
+//! installed into process-global state (env var `PALLAS_FAULTS` at
+//! startup, or the TCP `faults` command at runtime) and polled from three
+//! hook points:
+//!
+//! * [`maybe_panic_worker`] — coordinator worker, at job start: panics
+//!   every Nth job so the executor's `catch_unwind` isolation and the
+//!   reply path for poisoned jobs get exercised.
+//! * [`slow_read_delay`] — stream prefetch reader, before each chunk
+//!   read: sleeps to simulate a slow disk and force deadline expiry on
+//!   streamed solves.
+//! * [`queue_stall`] — coordinator scheduler loop: sleeps before
+//!   dispatching a batch, backing the submit queue up so admission
+//!   control has something to shed.
+//!
+//! The disabled state (no plan, or an all-zero plan) costs one relaxed
+//! atomic load per hook — faults never perturb a production solve.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Duration;
+
+/// Environment variable read by [`init_from_env`].
+pub const FAULTS_ENV: &str = "PALLAS_FAULTS";
+
+/// A parsed fault-injection plan. All knobs default to 0 (= off).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Panic the worker on every Nth job (0 = never).
+    pub worker_panic_every: u64,
+    /// Sleep this long before an injected slow chunk read (0 = never).
+    pub slow_read_ms: u64,
+    /// Inject the slow read on every Nth chunk (0 or 1 = every chunk,
+    /// when `slow_read_ms` > 0).
+    pub slow_read_every: u64,
+    /// Sleep this long in the scheduler before each dispatch (0 = never).
+    pub queue_stall_ms: u64,
+}
+
+impl FaultPlan {
+    /// Parse a comma-separated `key=value` spec, e.g.
+    /// `"worker_panic_every=7,slow_read_ms=50,slow_read_every=3"`.
+    /// The empty string parses to the all-off plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault spec '{part}' is not key=value"))?;
+            let n: u64 = val
+                .trim()
+                .parse()
+                .map_err(|_| format!("fault knob '{}': bad integer '{}'", key.trim(), val.trim()))?;
+            match key.trim() {
+                "worker_panic_every" => plan.worker_panic_every = n,
+                "slow_read_ms" => plan.slow_read_ms = n,
+                "slow_read_every" => plan.slow_read_every = n,
+                "queue_stall_ms" => plan.queue_stall_ms = n,
+                other => return Err(format!("unknown fault knob '{other}'")),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// True when no fault can ever fire.
+    pub fn is_noop(&self) -> bool {
+        *self == FaultPlan::default()
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "worker_panic_every={},slow_read_ms={},slow_read_every={},queue_stall_ms={}",
+            self.worker_panic_every, self.slow_read_ms, self.slow_read_every, self.queue_stall_ms
+        )
+    }
+}
+
+/// Process-global knobs + hook-call counters. Atomics (not a locked
+/// `FaultPlan`) so the hot hooks never take a lock.
+struct FaultState {
+    worker_panic_every: AtomicU64,
+    slow_read_ms: AtomicU64,
+    slow_read_every: AtomicU64,
+    queue_stall_ms: AtomicU64,
+    worker_calls: AtomicU64,
+    read_calls: AtomicU64,
+}
+
+/// Fast-path switch: hooks bail on one relaxed load when no plan is live.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static STATE: OnceLock<FaultState> = OnceLock::new();
+
+fn state() -> &'static FaultState {
+    STATE.get_or_init(|| FaultState {
+        worker_panic_every: AtomicU64::new(0),
+        slow_read_ms: AtomicU64::new(0),
+        slow_read_every: AtomicU64::new(0),
+        queue_stall_ms: AtomicU64::new(0),
+        worker_calls: AtomicU64::new(0),
+        read_calls: AtomicU64::new(0),
+    })
+}
+
+/// Install `plan` as the live process-global plan (replacing any prior
+/// one). An all-off plan flips the hooks back to their one-load fast path.
+pub fn install(plan: &FaultPlan) {
+    let s = state();
+    s.worker_panic_every.store(plan.worker_panic_every, Ordering::Relaxed);
+    s.slow_read_ms.store(plan.slow_read_ms, Ordering::Relaxed);
+    s.slow_read_every.store(plan.slow_read_every, Ordering::Relaxed);
+    s.queue_stall_ms.store(plan.queue_stall_ms, Ordering::Relaxed);
+    ENABLED.store(!plan.is_noop(), Ordering::Relaxed);
+}
+
+/// Disarm all faults.
+pub fn clear() {
+    install(&FaultPlan::default());
+}
+
+/// The live plan (all-off when nothing was installed).
+pub fn current() -> FaultPlan {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return FaultPlan::default();
+    }
+    let s = state();
+    FaultPlan {
+        worker_panic_every: s.worker_panic_every.load(Ordering::Relaxed),
+        slow_read_ms: s.slow_read_ms.load(Ordering::Relaxed),
+        slow_read_every: s.slow_read_every.load(Ordering::Relaxed),
+        queue_stall_ms: s.queue_stall_ms.load(Ordering::Relaxed),
+    }
+}
+
+/// Install a plan from `PALLAS_FAULTS` if the variable is set. Called by
+/// `serve-tcp` and `Coordinator::start`; a malformed spec is logged and
+/// ignored rather than killing the server.
+pub fn init_from_env() {
+    let Ok(spec) = std::env::var(FAULTS_ENV) else {
+        return;
+    };
+    match FaultPlan::parse(&spec) {
+        Ok(plan) => {
+            if !plan.is_noop() {
+                crate::warn_!("faults", "fault injection armed from {FAULTS_ENV}: {plan}");
+            }
+            install(&plan);
+        }
+        Err(e) => crate::warn_!("faults", "ignoring malformed {FAULTS_ENV}: {e}"),
+    }
+}
+
+/// Worker hook: panics on every Nth call when armed. The coordinator's
+/// executor catches the unwind per job (`worker_panics` metric).
+#[inline]
+pub fn maybe_panic_worker() {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    let s = state();
+    let every = s.worker_panic_every.load(Ordering::Relaxed);
+    if every == 0 {
+        return;
+    }
+    let n = s.worker_calls.fetch_add(1, Ordering::Relaxed) + 1;
+    if n % every == 0 {
+        panic!("injected fault: worker panic (job call {n})");
+    }
+}
+
+/// Prefetch-reader hook: the delay to sleep before this chunk read, if
+/// the plan says this call is the unlucky Nth one.
+#[inline]
+pub fn slow_read_delay() -> Option<Duration> {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let s = state();
+    let ms = s.slow_read_ms.load(Ordering::Relaxed);
+    if ms == 0 {
+        return None;
+    }
+    let every = s.slow_read_every.load(Ordering::Relaxed).max(1);
+    let n = s.read_calls.fetch_add(1, Ordering::Relaxed) + 1;
+    if n % every == 0 {
+        Some(Duration::from_millis(ms))
+    } else {
+        None
+    }
+}
+
+/// Scheduler hook: the stall to sleep before dispatching, when armed.
+#[inline]
+pub fn queue_stall() -> Option<Duration> {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let ms = state().queue_stall_ms.load(Ordering::Relaxed);
+    if ms == 0 {
+        None
+    } else {
+        Some(Duration::from_millis(ms))
+    }
+}
+
+/// Serialises tests that touch the process-global fault state (this
+/// module's hook tests and the server's `faults`-command tests share one
+/// test binary and would otherwise race).
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_and_defaults() {
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::default());
+        let p = FaultPlan::parse("worker_panic_every=7, slow_read_ms=50,slow_read_every=3")
+            .unwrap();
+        assert_eq!(p.worker_panic_every, 7);
+        assert_eq!(p.slow_read_ms, 50);
+        assert_eq!(p.slow_read_every, 3);
+        assert_eq!(p.queue_stall_ms, 0);
+        assert!(!p.is_noop());
+        assert_eq!(FaultPlan::parse(&p.to_string()).unwrap(), p);
+    }
+
+    #[test]
+    fn parse_rejects_junk() {
+        assert!(FaultPlan::parse("worker_panic_every").is_err());
+        assert!(FaultPlan::parse("worker_panic_every=abc").is_err());
+        assert!(FaultPlan::parse("bogus_knob=1").is_err());
+    }
+
+    // The install/hook tests below mutate process-global state, so they
+    // run as one test to avoid racing each other under the parallel test
+    // harness. Every path ends with `clear()`.
+    #[test]
+    fn global_hooks_honour_the_installed_plan() {
+        let _guard = test_guard();
+        clear();
+        assert!(current().is_noop());
+        assert!(slow_read_delay().is_none());
+        assert!(queue_stall().is_none());
+        maybe_panic_worker(); // must not panic when disarmed
+
+        install(&FaultPlan { queue_stall_ms: 5, ..FaultPlan::default() });
+        assert_eq!(queue_stall(), Some(Duration::from_millis(5)));
+        assert!(slow_read_delay().is_none(), "slow reads still off");
+        assert_eq!(current().queue_stall_ms, 5);
+
+        install(&FaultPlan { slow_read_ms: 9, slow_read_every: 2, ..FaultPlan::default() });
+        // every=2: exactly one of two consecutive calls fires.
+        let fired = [slow_read_delay(), slow_read_delay()];
+        assert_eq!(fired.iter().flatten().count(), 1, "{fired:?}");
+        assert_eq!(fired.iter().flatten().next(), Some(&Duration::from_millis(9)));
+
+        let caught = std::panic::catch_unwind(|| {
+            install(&FaultPlan { worker_panic_every: 1, ..FaultPlan::default() });
+            maybe_panic_worker();
+        });
+        assert!(caught.is_err(), "worker panic fault fires");
+
+        clear();
+        assert!(current().is_noop());
+        maybe_panic_worker(); // disarmed again
+    }
+}

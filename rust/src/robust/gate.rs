@@ -1,0 +1,139 @@
+//! Admission control: a semaphore-style gate in front of the job queue.
+//!
+//! The coordinator takes a [`Permit`] before a request may enter the
+//! submit queue and holds it until the reply is sent, so `max_inflight`
+//! bounds *end-to-end* concurrency (queued + executing), not just pool
+//! width. Saturated callers wait up to `max_queue_wait_ms`; past that the
+//! service sheds the request with a structured `overloaded` error (or
+//! degrades it — see [`crate::coordinator`]). Permits release on `Drop`,
+//! so error and panic paths can never leak a slot.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Counting gate with a hard capacity. Construct via [`AdmissionGate::new`].
+#[derive(Debug)]
+pub struct AdmissionGate {
+    max: usize,
+    inflight: Mutex<usize>,
+    freed: Condvar,
+}
+
+/// RAII admission slot; dropping it frees capacity and wakes one waiter.
+#[derive(Debug)]
+pub struct Permit {
+    gate: Arc<AdmissionGate>,
+}
+
+impl AdmissionGate {
+    /// A gate admitting at most `max` concurrent requests (`max >= 1`).
+    pub fn new(max: usize) -> Arc<Self> {
+        Arc::new(AdmissionGate {
+            max: max.max(1),
+            inflight: Mutex::new(0),
+            freed: Condvar::new(),
+        })
+    }
+
+    /// Immediate acquisition attempt; `None` when saturated.
+    pub fn try_acquire(self: &Arc<Self>) -> Option<Permit> {
+        let mut n = self.inflight.lock().expect("gate poisoned");
+        if *n < self.max {
+            *n += 1;
+            Some(Permit { gate: Arc::clone(self) })
+        } else {
+            None
+        }
+    }
+
+    /// Wait up to `wait` for a slot; `None` on timeout.
+    pub fn acquire_timeout(self: &Arc<Self>, wait: Duration) -> Option<Permit> {
+        let deadline = Instant::now() + wait;
+        let mut n = self.inflight.lock().expect("gate poisoned");
+        loop {
+            if *n < self.max {
+                *n += 1;
+                return Some(Permit { gate: Arc::clone(self) });
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _timeout) = self
+                .freed
+                .wait_timeout(n, deadline - now)
+                .expect("gate poisoned");
+            n = guard;
+            // Loop re-checks capacity and the deadline; spurious wakeups
+            // and timed-out waits both land back here.
+        }
+    }
+
+    /// Currently admitted requests (queued + executing).
+    pub fn inflight(&self) -> usize {
+        *self.inflight.lock().expect("gate poisoned")
+    }
+
+    /// Configured capacity.
+    pub fn capacity(&self) -> usize {
+        self.max
+    }
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        let mut n = self.gate.inflight.lock().expect("gate poisoned");
+        *n = n.saturating_sub(1);
+        self.gate.freed.notify_one();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_up_to_capacity_then_rejects() {
+        let g = AdmissionGate::new(2);
+        let p1 = g.try_acquire().expect("slot 1");
+        let p2 = g.try_acquire().expect("slot 2");
+        assert!(g.try_acquire().is_none(), "gate full");
+        assert_eq!(g.inflight(), 2);
+        drop(p1);
+        assert_eq!(g.inflight(), 1);
+        let p3 = g.try_acquire().expect("slot freed by drop");
+        drop((p2, p3));
+        assert_eq!(g.inflight(), 0);
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let g = AdmissionGate::new(0);
+        assert_eq!(g.capacity(), 1);
+        let _p = g.try_acquire().expect("one slot");
+        assert!(g.try_acquire().is_none());
+    }
+
+    #[test]
+    fn acquire_timeout_times_out_when_saturated() {
+        let g = AdmissionGate::new(1);
+        let _held = g.try_acquire().expect("slot");
+        let t0 = Instant::now();
+        assert!(g.acquire_timeout(Duration::from_millis(20)).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+    }
+
+    #[test]
+    fn acquire_timeout_wakes_when_permit_drops() {
+        let g = AdmissionGate::new(1);
+        let held = g.try_acquire().expect("slot");
+        let g2 = Arc::clone(&g);
+        let waiter = std::thread::spawn(move || {
+            g2.acquire_timeout(Duration::from_secs(5)).is_some()
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        drop(held);
+        assert!(waiter.join().expect("no panic"), "waiter got the freed slot");
+        assert_eq!(g.inflight(), 0);
+    }
+}

@@ -1,0 +1,31 @@
+//! Robustness layer: deadlines & cancellation, admission control, and
+//! fault injection.
+//!
+//! The BAK family degrades gracefully by construction — accuracy is
+//! controlled by the sweep budget — so the service can always trade
+//! precision for latency instead of queueing forever. This module holds
+//! the three mechanisms that exploit that:
+//!
+//! * [`CancelToken`] — a shared, deadline-carrying token checked at every
+//!   residual probe in the iterative solvers (the PR 7 `SolveProbe` hook
+//!   points). Disabled tokens cost one branch per check, mirroring
+//!   [`crate::obs::ProbeHandle`]'s zero-cost contract, so deterministic
+//!   solves stay bit-identical when no deadline is armed.
+//! * [`AdmissionGate`] — a semaphore-style gate in front of the
+//!   coordinator's job queue (`max_inflight` / `max_queue_wait_ms`).
+//!   Saturation produces a structured `overloaded` reply with a
+//!   `retry_after_ms` hint, or — in degraded mode — a reduced-sweep BAK
+//!   answer instead of a rejection.
+//! * [`FaultPlan`] — process-global fault injection (worker panics, slow
+//!   chunk reads in the stream prefetcher, scheduler stalls), configured
+//!   from the `PALLAS_FAULTS` environment variable or the TCP `faults`
+//!   command, so CI's `chaos-smoke` job can prove the two mechanisms
+//!   above actually hold under fire.
+
+pub mod cancel;
+pub mod faults;
+pub mod gate;
+
+pub use cancel::CancelToken;
+pub use faults::FaultPlan;
+pub use gate::{AdmissionGate, Permit};

@@ -76,6 +76,10 @@ pub fn solve_bak_warm(
             let r2 = blas1::sum_sq_f64(e);
             history.push(r2);
             opts.probe.observe(sweeps, r2, t0);
+            if opts.cancel.is_cancelled() {
+                stop = StopReason::Cancelled;
+                break;
+            }
             if opts.tol > 0.0 && r2 <= tol_sq {
                 stop = StopReason::Converged;
                 break;
@@ -276,6 +280,39 @@ mod tests {
         o2.probe = crate::obs::ProbeHandle::none();
         let rep2 = solve_bak(&x, &y, &o2);
         assert_eq!(rep.a, rep2.a);
+    }
+
+    #[test]
+    fn cancel_token_stops_mid_run_with_best_so_far() {
+        let (x, y, _) = planted(115, 100, 20);
+        let token = crate::robust::CancelToken::manual();
+        token.cancel(); // expired before the first residual check
+        let mut o = SolveOptions::default();
+        o.tol = 0.0;
+        o.max_sweeps = 1000;
+        o.cancel = token;
+        let rep = solve_bak(&x, &y, &o);
+        assert_eq!(rep.stop, StopReason::Cancelled);
+        assert_eq!(rep.sweeps, 1, "stops at the first check");
+        // Best-so-far state still upholds e == y - X a.
+        let fresh = residual(&x, &y, &rep.a);
+        for (f, g) in fresh.iter().zip(&rep.e) {
+            assert!((f - g).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn disabled_cancel_token_does_not_perturb_solve() {
+        let (x, y, _) = planted(116, 100, 20);
+        let mut o = SolveOptions::default();
+        o.tol = 0.0;
+        o.max_sweeps = 10;
+        let rep = solve_bak(&x, &y, &o);
+        let mut armed = o.clone();
+        armed.cancel = crate::robust::CancelToken::with_deadline_ms(600_000);
+        let rep2 = solve_bak(&x, &y, &armed);
+        assert_eq!(rep.a, rep2.a, "un-expired token is bit-identical");
+        assert_eq!(rep2.stop, StopReason::MaxSweeps);
     }
 
     #[test]

@@ -50,6 +50,10 @@ pub fn solve_bakp(x: &Mat, y: &[f32], opts: &SolveOptions) -> SolveReport {
             let r2 = blas1::sum_sq_f64(&e);
             history.push(r2);
             opts.probe.observe(sweeps, r2, t0);
+            if opts.cancel.is_cancelled() {
+                stop = StopReason::Cancelled;
+                break;
+            }
             if opts.tol > 0.0 && r2 <= tol_sq {
                 stop = StopReason::Converged;
                 break;

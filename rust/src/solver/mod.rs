@@ -70,6 +70,12 @@ pub struct SolveOptions {
     /// `(sweep, residual_norm, elapsed_ns)` at every residual check. The
     /// disabled default costs a single branch per sweep.
     pub probe: crate::obs::ProbeHandle,
+    /// Cooperative cancellation ([`crate::robust::CancelToken`]): polled
+    /// at the same residual-check points the probe observes, so an
+    /// expired deadline stops the solve mid-run with
+    /// [`StopReason::Cancelled`] and the best-so-far coefficients. The
+    /// disabled default costs a single branch per check.
+    pub cancel: crate::robust::CancelToken,
 }
 
 impl Default for SolveOptions {
@@ -83,6 +89,7 @@ impl Default for SolveOptions {
             check_every: 1,
             seed: 0x5eed,
             probe: crate::obs::ProbeHandle::none(),
+            cancel: crate::robust::CancelToken::none(),
         }
     }
 }
@@ -155,6 +162,11 @@ impl SolveOptionsBuilder {
         self
     }
 
+    pub fn cancel(mut self, v: crate::robust::CancelToken) -> Self {
+        self.opts.cancel = v;
+        self
+    }
+
     pub fn build(self) -> SolveOptions {
         self.opts
     }
@@ -169,6 +181,9 @@ pub enum StopReason {
     Stalled,
     /// Ran out of sweeps.
     MaxSweeps,
+    /// Stopped early by a [`crate::robust::CancelToken`] (deadline expiry
+    /// or explicit cancellation); `a`/`e` hold the best-so-far state.
+    Cancelled,
 }
 
 /// Solve outcome: coefficients, final residual, and the per-sweep history.
@@ -250,6 +265,17 @@ mod tests {
         assert_eq!(o.check_every, d.check_every);
         assert_eq!(o.seed, d.seed);
         assert!(!o.probe.is_enabled(), "probe defaults to disabled");
+        assert!(!o.cancel.is_enabled(), "cancel defaults to disabled");
+    }
+
+    #[test]
+    fn builder_attaches_cancel_token() {
+        let token = crate::robust::CancelToken::manual();
+        let o = SolveOptions::builder().cancel(token.clone()).build();
+        assert!(o.cancel.is_enabled());
+        assert!(!o.cancel.is_cancelled());
+        token.cancel();
+        assert!(o.cancel.is_cancelled(), "builder shares the token state");
     }
 
     #[test]

@@ -100,6 +100,10 @@ pub fn solve_kaczmarz(x: &Mat, y: &[f32], opts: &SolveOptions) -> SolveReport {
         let r2 = blas1::sum_sq_f64(&e);
         history.push(r2);
         opts.probe.observe(sweeps, r2, t0);
+        if opts.cancel.is_cancelled() {
+            stop = StopReason::Cancelled;
+            break;
+        }
         if opts.tol > 0.0 && r2 <= tol_sq {
             stop = StopReason::Converged;
             break;
@@ -157,6 +161,10 @@ pub fn solve_gauss_southwell(x: &Mat, y: &[f32], opts: &SolveOptions) -> SolveRe
         let r2 = blas1::sum_sq_f64(&e);
         history.push(r2);
         opts.probe.observe(sweeps, r2, t0);
+        if opts.cancel.is_cancelled() {
+            stop = StopReason::Cancelled;
+            break;
+        }
         if opts.tol > 0.0 && r2 <= tol_sq {
             stop = StopReason::Converged;
             break;
@@ -214,6 +222,10 @@ pub fn solve_bakp_damped(
         let r2 = blas1::sum_sq_f64(&e);
         history.push(r2);
         opts.probe.observe(sweeps, r2, t0);
+        if opts.cancel.is_cancelled() {
+            stop = StopReason::Cancelled;
+            break;
+        }
         if opts.tol > 0.0 && r2 <= tol_sq {
             stop = StopReason::Converged;
             break;
@@ -284,6 +296,14 @@ pub fn solve_bak_multi(x: &Mat, ys: &[Vec<f32>], opts: &SolveOptions) -> Vec<Sol
                 done[r] = Some(StopReason::Stalled);
             }
             prev_r2[r] = r2;
+        }
+        if opts.cancel.is_cancelled() {
+            for d in done.iter_mut() {
+                if d.is_none() {
+                    *d = Some(StopReason::Cancelled);
+                }
+            }
+            break;
         }
     }
 

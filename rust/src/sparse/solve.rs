@@ -91,6 +91,10 @@ pub fn solve_bak_csc_warm(
             let r2 = blas1::sum_sq_f64(e);
             history.push(r2);
             opts.probe.observe(sweeps, r2, t0);
+            if opts.cancel.is_cancelled() {
+                stop = StopReason::Cancelled;
+                break;
+            }
             if opts.tol > 0.0 && r2 <= tol_sq {
                 stop = StopReason::Converged;
                 break;
@@ -159,6 +163,10 @@ pub fn solve_bakp_csc(x: &CscMat, y: &[f32], opts: &SolveOptions) -> SolveReport
             let r2 = blas1::sum_sq_f64(&e);
             history.push(r2);
             opts.probe.observe(sweeps, r2, t0);
+            if opts.cancel.is_cancelled() {
+                stop = StopReason::Cancelled;
+                break;
+            }
             if opts.tol > 0.0 && r2 <= tol_sq {
                 stop = StopReason::Converged;
                 break;
@@ -233,6 +241,10 @@ pub fn solve_kaczmarz_csr(x: &CsrMat, y: &[f32], opts: &SolveOptions) -> SolveRe
         let r2 = blas1::sum_sq_f64(&e);
         history.push(r2);
         opts.probe.observe(sweeps, r2, t0);
+        if opts.cancel.is_cancelled() {
+            stop = StopReason::Cancelled;
+            break;
+        }
         if opts.tol > 0.0 && r2 <= tol_sq {
             stop = StopReason::Converged;
             break;

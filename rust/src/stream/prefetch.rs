@@ -129,6 +129,9 @@ impl ChunkStream {
                     }
                     for c in 0..num_chunks {
                         let Some(mut buf) = recycle.pop() else { return }; // stopped
+                        if let Some(d) = crate::robust::faults::slow_read_delay() {
+                            std::thread::sleep(d);
+                        }
                         match src.read_chunk(c, &mut buf) {
                             Ok(width) => {
                                 stats.add_chunk((src.rows() * width * 4) as u64);

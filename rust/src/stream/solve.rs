@@ -153,6 +153,10 @@ pub fn solve_bak_stream(
             let r2 = blas1::sum_sq_f64(&e);
             history.push(r2);
             opts.probe.observe(sweeps, r2, t0);
+            if opts.cancel.is_cancelled() {
+                stop = StopReason::Cancelled;
+                break;
+            }
             if opts.tol > 0.0 && r2 <= tol_sq {
                 stop = StopReason::Converged;
                 break;
@@ -240,6 +244,14 @@ pub fn solve_bak_multi_stream(
                 done[r] = Some(StopReason::Stalled);
             }
             prev_r2[r] = r2;
+        }
+        if opts.cancel.is_cancelled() {
+            for d in done.iter_mut() {
+                if d.is_none() {
+                    *d = Some(StopReason::Cancelled);
+                }
+            }
+            break;
         }
     }
 
@@ -398,6 +410,10 @@ pub fn solve_kaczmarz_stream(
         let r2 = blas1::sum_sq_f64(&e);
         history.push(r2);
         opts.probe.observe(sweeps, r2, t0);
+        if opts.cancel.is_cancelled() {
+            stop = StopReason::Cancelled;
+            break;
+        }
         if opts.tol > 0.0 && r2 <= tol_sq {
             stop = StopReason::Converged;
             break;

@@ -188,9 +188,11 @@ fn traced_request_end_to_end_trajectory_and_span_accounting() {
     let mut rng = Rng::seed(907);
     let x = Arc::new(Mat::randn(&mut rng, 500, 30));
     let (y, a_true) = planted_rhs(&x, 7000);
-    let mut req = SolveRequest::new(1, x, y).traced();
-    req.backend = Backend::Bak;
-    req.opts = SolveOptions::accurate();
+    let req = SolveRequest::builder(1, x, y)
+        .backend(Backend::Bak)
+        .opts(SolveOptions::accurate())
+        .trace(true)
+        .build();
 
     let t0 = std::time::Instant::now();
     let out = coord.solve_blocking(req);
@@ -255,12 +257,11 @@ fn traced_and_untraced_requests_coexist_in_a_burst() {
     let rxs: Vec<_> = (0..12u64)
         .map(|i| {
             let (y, a) = planted_rhs(&x, 8000 + i);
-            let mut req = SolveRequest::new(i, x.clone(), y);
-            req.backend = Backend::Bak;
-            req.opts = SolveOptions::accurate();
-            if i % 3 == 0 {
-                req = req.traced();
-            }
+            let req = SolveRequest::builder(i, x.clone(), y)
+                .backend(Backend::Bak)
+                .opts(SolveOptions::accurate())
+                .trace(i % 3 == 0)
+                .build();
             (i, a, coord.submit(req).unwrap())
         })
         .collect();

@@ -1,0 +1,258 @@
+//! Chaos-style robustness integration: a TCP server under fault injection,
+//! admission control, and deadlines must give every client a structured
+//! reply — never a hang, never a dropped connection — and drain cleanly.
+//!
+//! Fault plans are process-global, so every test here serializes on one
+//! mutex (this binary is its own process, so arming worker panics cannot
+//! leak into the library's unit tests).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use solvebak::api::SolverError;
+use solvebak::client::{Client, RetryPolicy};
+use solvebak::coordinator::server::{error_kind, Server};
+use solvebak::coordinator::{Coordinator, CoordinatorConfig};
+use solvebak::robust::faults::{self, FaultPlan};
+use solvebak::util::json::Json;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn start(config: CoordinatorConfig) -> (Arc<Coordinator>, Server) {
+    let coord = Arc::new(Coordinator::start(config));
+    let server = Server::bind(coord.clone(), 0).expect("bind");
+    (coord, server)
+}
+
+/// A small consistent dense system as one request line.
+fn solve_line(id: u64, deadline_ms: Option<u64>) -> String {
+    let deadline = deadline_ms
+        .map(|ms| format!(r#", "deadline_ms": {ms}"#))
+        .unwrap_or_default();
+    format!(
+        r#"{{"v": 1, "id": {id}, "backend": "bak", "obs": 4, "vars": 2, "x": [1,0, 0,1, 1,1, 1,-1], "y": [2, 3, 5, -1], "sweeps": 200, "tol": 1e-7{deadline}}}"#
+    )
+}
+
+fn roundtrip(addr: std::net::SocketAddr, line: &str) -> Json {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(line.as_bytes()).unwrap();
+    s.write_all(b"\n").unwrap();
+    let mut r = BufReader::new(s);
+    let mut resp = String::new();
+    r.read_line(&mut resp).unwrap();
+    Json::parse(resp.trim()).expect("structured json reply")
+}
+
+fn metric(coord: &Coordinator, name: &str) -> f64 {
+    coord.metrics().to_json().get(name).and_then(Json::as_f64).unwrap_or(0.0)
+}
+
+#[test]
+fn burst_under_faults_every_client_gets_a_structured_reply() {
+    let _g = serial();
+    faults::install(&FaultPlan {
+        worker_panic_every: 5,
+        queue_stall_ms: 2,
+        ..FaultPlan::default()
+    });
+    let (coord, server) = start(CoordinatorConfig {
+        workers: 2,
+        max_inflight: 4,
+        max_queue_wait_ms: 50,
+        ..CoordinatorConfig::default()
+    });
+    let addr = server.addr();
+
+    // 8 clients x 6 requests, some deadline-armed, all through the
+    // retrying client. Every request must come back as one JSON line with
+    // a known shape — ok, or a structured error from the allowed set.
+    let handles: Vec<_> = (0..8u64)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut client = Client::with_policy(
+                    addr.to_string(),
+                    RetryPolicy {
+                        max_retries: 2,
+                        base_ms: 2,
+                        max_backoff_ms: 20,
+                        budget_ms: 5_000,
+                        jitter_seed: t,
+                    },
+                );
+                let mut replies = Vec::new();
+                for i in 0..6u64 {
+                    let id = t * 100 + i;
+                    let deadline = if i % 3 == 2 { Some(1) } else { None };
+                    let req = Json::parse(&solve_line(id, deadline)).unwrap();
+                    replies.push(client.request(&req).expect("a structured reply"));
+                }
+                replies
+            })
+        })
+        .collect();
+    let mut replies: Vec<Json> = handles
+        .into_iter()
+        .flat_map(|h| h.join().expect("client thread survives"))
+        .collect();
+    // Two guaranteed-expired requests so the deadline path always fires.
+    for id in [900u64, 901] {
+        replies.push(roundtrip(addr, &solve_line(id, Some(0))));
+    }
+
+    assert_eq!(replies.len(), 50);
+    for j in &replies {
+        let ok = j.get("ok").and_then(Json::as_bool).expect("every reply carries ok");
+        if !ok {
+            let kind = j.get("error_kind").and_then(Json::as_str).expect("typed error");
+            assert!(
+                ["deadline_exceeded", "overloaded", "service", "backend"].contains(&kind),
+                "unexpected error_kind {kind}: {j:?}"
+            );
+        }
+    }
+
+    // The deadline counter moved, and injected panics were contained by
+    // the pool (workers survive; panicked jobs answer as service errors).
+    // >= 1, not 2: a deadline-0 job can instead land on an injected
+    // worker panic (and answer as a service error), but never both.
+    assert!(metric(&coord, "jobs_deadline_exceeded") >= 1.0);
+    assert!(metric(&coord, "worker_panics") >= 1.0);
+
+    // Graceful drain: shutdown over the wire, then joining the accept
+    // thread (and its per-connection handlers) must terminate.
+    faults::clear();
+    let bye = roundtrip(addr, r#"{"cmd": "shutdown"}"#);
+    assert_eq!(bye.get("ok").unwrap().as_bool(), Some(true));
+    server.stop();
+}
+
+#[test]
+fn saturated_server_sheds_with_retry_hint() {
+    let _g = serial();
+    // One permit, no queue wait, and a 200ms scheduler stall: the permit
+    // cannot be released faster than one job per stall, so a burst of 5
+    // back-to-back requests must shed at least 3.
+    faults::install(&FaultPlan { queue_stall_ms: 200, ..FaultPlan::default() });
+    let (coord, server) = start(CoordinatorConfig {
+        workers: 1,
+        max_inflight: 1,
+        ..CoordinatorConfig::default()
+    });
+    let addr = server.addr();
+
+    let handles: Vec<_> = (0..5u64)
+        .map(|i| std::thread::spawn(move || roundtrip(addr, &solve_line(i, None))))
+        .collect();
+    let replies: Vec<Json> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    faults::clear();
+
+    let shed: Vec<&Json> = replies
+        .iter()
+        .filter(|j| j.get("error_kind").and_then(Json::as_str) == Some("overloaded"))
+        .collect();
+    assert!(shed.len() >= 3, "want >=3 shed replies, got {}", shed.len());
+    for j in &shed {
+        let hint = j.get("retry_after_ms").and_then(Json::as_f64).expect("backoff hint");
+        assert!((25.0..=5000.0).contains(&hint), "hint {hint} out of range");
+    }
+    // Admitted requests still solved correctly.
+    assert!(replies.iter().any(|j| j.get("ok").unwrap().as_bool() == Some(true)));
+    assert!(metric(&coord, "jobs_shed") >= 3.0);
+    server.stop();
+}
+
+#[test]
+fn degraded_mode_answers_instead_of_shedding() {
+    let _g = serial();
+    faults::install(&FaultPlan { queue_stall_ms: 200, ..FaultPlan::default() });
+    let (coord, server) = start(CoordinatorConfig {
+        workers: 1,
+        max_inflight: 1,
+        degraded_sweeps: Some(2),
+        ..CoordinatorConfig::default()
+    });
+    let addr = server.addr();
+
+    let handles: Vec<_> = (0..4u64)
+        .map(|i| std::thread::spawn(move || roundtrip(addr, &solve_line(i, None))))
+        .collect();
+    let replies: Vec<Json> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    faults::clear();
+
+    // Nobody was shed; everyone got an answer; the overflow was served in
+    // degraded (sweep-clamped) mode and flagged as such.
+    for j in &replies {
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true), "{j:?}");
+    }
+    let degraded = replies
+        .iter()
+        .filter(|j| j.get("degraded").and_then(Json::as_bool) == Some(true))
+        .count();
+    assert!(degraded >= 1, "no degraded replies in {replies:?}");
+    assert_eq!(metric(&coord, "jobs_shed"), 0.0);
+    assert!(metric(&coord, "degraded_solves") >= 1.0);
+    server.stop();
+}
+
+#[test]
+fn no_fault_solves_are_bit_identical() {
+    let _g = serial();
+    faults::clear();
+    let (_coord, server) = start(CoordinatorConfig {
+        workers: 1,
+        ..CoordinatorConfig::default()
+    });
+    let a = roundtrip(server.addr(), &solve_line(1, None));
+    let b = roundtrip(server.addr(), &solve_line(2, None));
+    assert_eq!(a.get("ok").unwrap().as_bool(), Some(true), "{a:?}");
+    // Same request, no faults: the solve is deterministic down to the bit
+    // (only id/timing fields may differ).
+    assert_eq!(a.get("a"), b.get("a"));
+    assert_eq!(a.get("sweeps"), b.get("sweeps"));
+    assert_eq!(a.get("rel_residual"), b.get("rel_residual"));
+    server.stop();
+}
+
+#[test]
+fn error_kind_table_is_exhaustive_over_solver_error() {
+    // One value per SolverError variant; the wire table must give each a
+    // distinct stable kind. (The match inside error_kind() is exhaustive,
+    // so a new variant without a wire kind is already a compile error —
+    // this test pins the *names* so they cannot silently change.)
+    let every: Vec<(SolverError, &str)> = vec![
+        (SolverError::Shape("bad".into()), "shape"),
+        (SolverError::NonFinite { what: "x" }, "non_finite"),
+        (SolverError::NeedsSquare { obs: 3, vars: 2 }, "needs_square"),
+        (SolverError::RankDeficient { column: 1 }, "rank_deficient"),
+        (
+            SolverError::Unavailable { backend: "pjrt".into(), reason: "no engine".into() },
+            "unavailable",
+        ),
+        (SolverError::UnknownKind("gpu4000".into()), "unknown_kind"),
+        (
+            SolverError::Backend { backend: "bak".into(), reason: "boom".into() },
+            "backend",
+        ),
+        (SolverError::Service("shut down".into()), "service"),
+        (SolverError::InvalidInput("half-written".into()), "invalid_input"),
+        (
+            SolverError::DeadlineExceeded { best: vec![0.0], rel_residual: 1.0, sweeps: 0 },
+            "deadline_exceeded",
+        ),
+        (SolverError::Overloaded { retry_after_ms: 50 }, "overloaded"),
+        (SolverError::Unsupported("v2".into()), "unsupported"),
+    ];
+    let mut kinds = std::collections::BTreeSet::new();
+    for (err, want) in &every {
+        assert_eq!(&error_kind(err), want, "{err:?}");
+        kinds.insert(*want);
+    }
+    // All kinds distinct: the discriminant really discriminates.
+    assert_eq!(kinds.len(), every.len());
+}
