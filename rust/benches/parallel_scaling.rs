@@ -30,9 +30,9 @@ struct Row {
     seconds: f64,
     rel_residual: f64,
     sweeps: usize,
-    /// `VmHWM` after the measurement (0 off-Linux) — a process-wide
-    /// high-water mark, monotone across rows within one run.
-    peak_rss_bytes: u64,
+    /// `VmHWM` after the measurement (`None` where unavailable) — a
+    /// process-wide high-water mark, monotone across rows within one run.
+    peak_rss_bytes: Option<u64>,
     /// Downsampled `(sweep, residual_norm)` convergence curve of the
     /// probe run, so the uploaded artifact shows not just how fast each
     /// solver finished but how its residual got there.
@@ -47,17 +47,19 @@ impl Row {
                 .map(|&(s, r)| Json::Arr(vec![Json::Num(s as f64), Json::Num(r)]))
                 .collect(),
         );
-        ObjBuilder::new()
+        let mut b = ObjBuilder::new()
             .str("solver", self.solver)
             .num("obs", self.obs as f64)
             .num("vars", self.vars as f64)
             .num("threads", self.threads as f64)
             .num("seconds", self.seconds)
             .num("rel_residual", self.rel_residual)
-            .num("sweeps", self.sweeps as f64)
-            .num("peak_rss_bytes", self.peak_rss_bytes as f64)
-            .val("trajectory", traj)
-            .build()
+            .num("sweeps", self.sweeps as f64);
+        // Omitted (not zero) where the RSS metric is unavailable.
+        if let Some(rss) = self.peak_rss_bytes {
+            b = b.num("peak_rss_bytes", rss as f64);
+        }
+        b.val("trajectory", traj).build()
     }
 }
 

@@ -30,7 +30,7 @@ struct Row {
     seconds: f64,
     rel_residual: f64,
     sweeps: usize,
-    peak_rss_bytes: u64,
+    peak_rss_bytes: Option<u64>,
     mem_budget: usize,
     chunks_read: u64,
     bytes_read: u64,
@@ -39,21 +39,30 @@ struct Row {
 
 impl Row {
     fn to_json(&self) -> Json {
-        ObjBuilder::new()
+        let mut b = ObjBuilder::new()
             .str("solver", "bak")
             .str("mode", self.mode)
             .num("obs", self.obs as f64)
             .num("vars", self.vars as f64)
             .num("seconds", self.seconds)
             .num("rel_residual", self.rel_residual)
-            .num("sweeps", self.sweeps as f64)
-            .num("peak_rss_bytes", self.peak_rss_bytes as f64)
-            .num("mem_budget", self.mem_budget as f64)
+            .num("sweeps", self.sweeps as f64);
+        // Omitted (not zero) where the RSS metric is unavailable.
+        if let Some(rss) = self.peak_rss_bytes {
+            b = b.num("peak_rss_bytes", rss as f64);
+        }
+        b.num("mem_budget", self.mem_budget as f64)
             .num("stream_chunks_read", self.chunks_read as f64)
             .num("stream_bytes_read", self.bytes_read as f64)
             .num("stream_buffer_stalls", self.buffer_stalls as f64)
             .build()
     }
+}
+
+/// Console cell for the RSS column: "123.4", or "n/a" where the metric
+/// is unavailable (non-Linux; see `util::alloc::peak_rss_bytes`).
+fn fmt_rss_mib(rss: Option<u64>) -> String {
+    rss.map_or_else(|| "n/a".to_string(), |b| format!("{:.1}", mib(b)))
 }
 
 fn main() {
@@ -92,8 +101,8 @@ fn main() {
         }));
         let rss = peak_rss_bytes();
         println!(
-            "{:<14} {:>9} {:>6} | {:>10.2} {:>12.3e} {:>10.1} {:>8} {:>7}",
-            "in_memory", obs, vars, tm.min * 1e3, rep_mem.rel_residual(), mib(rss), "-", "-"
+            "{:<14} {:>9} {:>6} | {:>10.2} {:>12.3e} {:>10} {:>8} {:>7}",
+            "in_memory", obs, vars, tm.min * 1e3, rep_mem.rel_residual(), fmt_rss_mib(rss), "-", "-"
         );
         rows.push(Row {
             mode: "in_memory",
@@ -127,9 +136,9 @@ fn main() {
         let rss = peak_rss_bytes();
         let st = rep_stream.stats;
         println!(
-            "{:<14} {:>9} {:>6} | {:>10.2} {:>12.3e} {:>10.1} {:>8} {:>7}",
+            "{:<14} {:>9} {:>6} | {:>10.2} {:>12.3e} {:>10} {:>8} {:>7}",
             "streamed", obs, vars, tm.min * 1e3,
-            rep_stream.report.rel_residual(), mib(rss), st.chunks_read, st.buffer_stalls
+            rep_stream.report.rel_residual(), fmt_rss_mib(rss), st.chunks_read, st.buffer_stalls
         );
         rows.push(Row {
             mode: "streamed",

@@ -103,7 +103,14 @@ impl Solver for BakSolver {
                 Some(a0) => {
                     let cninv = solver::colnorms_inv(x);
                     let mut a = a0.to_vec();
-                    let mut e = crate::linalg::residual(x, p.y(), &a);
+                    // Checkpointed warm state carries its own residual —
+                    // resuming from it (instead of recomputing y - Xa) is
+                    // what makes a resumed solve bit-identical to an
+                    // uninterrupted one.
+                    let mut e = match p.warm_residual() {
+                        Some(e0) => e0.to_vec(),
+                        None => crate::linalg::residual(x, p.y(), &a),
+                    };
                     Ok(solver::bak::solve_bak_warm(x, &cninv, &mut a, &mut e, p.y(), opts))
                 }
                 None => Ok(solver::solve_bak(x, p.y(), opts)),
@@ -112,21 +119,29 @@ impl Solver for BakSolver {
                 Some(a0) => {
                     let cninv = sparse::solve::colnorms_inv_csc(s);
                     let mut a = a0.to_vec();
-                    let mut e = residual_ref(p.x(), p.y(), &a);
+                    let mut e = match p.warm_residual() {
+                        Some(e0) => e0.to_vec(),
+                        None => residual_ref(p.x(), p.y(), &a),
+                    };
                     Ok(sparse::solve::solve_bak_csc_warm(
                         s, &cninv, &mut a, &mut e, p.y(), opts,
                     ))
                 }
                 None => Ok(sparse::solve::solve_bak_csc(s, p.y(), opts)),
             },
-            MatrixRef::Streamed(s) => {
-                if p.warm_start().is_some() {
-                    return Err(SolverError::InvalidInput(
-                        "warm start is not supported for streamed problems".into(),
-                    ));
+            MatrixRef::Streamed(s) => match p.warm_start() {
+                Some(a0) => {
+                    // Without a stored residual this costs one extra disk
+                    // pass (matvec) before the sweeps start.
+                    let e = match p.warm_residual() {
+                        Some(e0) => e0.to_vec(),
+                        None => residual_ref(p.x(), p.y(), a0),
+                    };
+                    crate::stream::solve_bak_stream_warm(s, p.y(), a0.to_vec(), e, opts)
+                        .map(|r| r.report)
                 }
-                crate::stream::solve_bak_stream(s, p.y(), opts).map(|r| r.report)
-            }
+                None => crate::stream::solve_bak_stream(s, p.y(), opts).map(|r| r.report),
+            },
         }
     }
 }
@@ -719,18 +734,34 @@ mod tests {
     }
 
     #[test]
-    fn streamed_warm_start_is_invalid_input() {
-        let (_, y, s, path) = planted_streamed(722, 20, 6, 3);
-        let a0 = vec![0.5f32; 6];
-        let p = Problem::new_streamed(&s, &y)
-            .unwrap()
-            .with_warm_start(&a0)
-            .unwrap();
-        assert!(matches!(
-            BakSolver.solve(&p, &SolveOptions::default()),
-            Err(SolverError::InvalidInput(_))
-        ));
+    fn streamed_warm_start_matches_dense_warm_start() {
+        let (x, y, s, path) = planted_streamed(722, 60, 8, 3);
+        let a0 = vec![0.5f32; 8];
+        let opts = SolveOptions::builder().max_sweeps(5).tol(0.0).build();
+        let ps = Problem::new_streamed(&s, &y).unwrap().with_warm_start(&a0).unwrap();
+        let pd = Problem::new(&x, &y).unwrap().with_warm_start(&a0).unwrap();
+        let rs = BakSolver.solve(&ps, &opts).unwrap();
+        let rd = BakSolver.solve(&pd, &opts).unwrap();
+        assert_eq!(rs.a, rd.a, "streamed warm start diverges from dense");
         let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn warm_state_resumes_from_stored_residual() {
+        let (x, y, _) = planted(723, 100, 10);
+        let opts = SolveOptions::builder().max_sweeps(3).tol(0.0).build();
+        let p = Problem::new(&x, &y).unwrap();
+        // Run 3 sweeps, capture (a, e), resume for 3 more via warm state.
+        let first = BakSolver.solve(&p, &opts).unwrap();
+        let resumed = BakSolver
+            .solve(&p.with_warm_state(&first.a, &first.e).unwrap(), &opts)
+            .unwrap();
+        // One uninterrupted 6-sweep run must match bit-for-bit.
+        let full = BakSolver
+            .solve(&p, &SolveOptions::builder().max_sweeps(6).tol(0.0).build())
+            .unwrap();
+        assert_eq!(resumed.a, full.a, "resume is not bit-identical");
+        assert_eq!(resumed.e, full.e);
     }
 
     #[test]

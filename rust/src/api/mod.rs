@@ -128,6 +128,27 @@ pub enum SolverError {
     /// (unknown wire field, unknown command, unsupported protocol
     /// version).
     Unsupported(String),
+    /// A stored chunk failed its integrity check: the CRC32 recorded when
+    /// the `.sbck` file was written does not match the bytes read back.
+    /// The data is damaged (bit rot, truncated write, bad disk) — retrying
+    /// the solve will not help until the file is regenerated.
+    CorruptData {
+        /// Zero-based index of the damaged chunk.
+        chunk: usize,
+        /// CRC32 stored in the file at write time.
+        expected: u32,
+        /// CRC32 computed over the bytes actually read.
+        actual: u32,
+    },
+    /// The iterate became numerical garbage mid-solve (residual went
+    /// NaN/Inf, or the watchdog saw sustained divergence) and the solver
+    /// stopped instead of burning the remaining sweeps on noise.
+    NumericalBreakdown {
+        /// What the watchdog/solver observed ("residual is NaN", …).
+        detail: String,
+        /// Sweeps completed before the breakdown was detected.
+        sweeps: usize,
+    },
 }
 
 impl std::fmt::Display for SolverError {
@@ -160,6 +181,13 @@ impl std::fmt::Display for SolverError {
                 write!(f, "service overloaded, retry after {retry_after_ms}ms")
             }
             SolverError::Unsupported(s) => write!(f, "unsupported: {s}"),
+            SolverError::CorruptData { chunk, expected, actual } => write!(
+                f,
+                "corrupt data: chunk {chunk} stored crc32 {expected:#010x} but bytes hash to {actual:#010x}"
+            ),
+            SolverError::NumericalBreakdown { detail, sweeps } => {
+                write!(f, "numerical breakdown after {sweeps} sweeps: {detail}")
+            }
         }
     }
 }
@@ -300,6 +328,7 @@ pub struct Problem<'a> {
     x: MatrixRef<'a>,
     y: &'a [f32],
     warm: Option<&'a [f32]>,
+    warm_e: Option<&'a [f32]>,
 }
 
 impl<'a> Problem<'a> {
@@ -378,7 +407,7 @@ impl<'a> Problem<'a> {
         if !y.iter().all(|v| v.is_finite()) {
             return Err(SolverError::NonFinite { what: "y" });
         }
-        Ok(Self { x, y, warm: None })
+        Ok(Self { x, y, warm: None, warm_e: None })
     }
 
     /// Attach an initial coefficient guess (honoured by solvers whose
@@ -396,6 +425,34 @@ impl<'a> Problem<'a> {
         }
         self.warm = Some(a0);
         Ok(self)
+    }
+
+    /// Attach a full warm *state*: coefficients plus the residual
+    /// `e ≈ y - X a0` they had when captured. Solvers that track the
+    /// residual incrementally (the BAK family) resume from the stored `e`
+    /// instead of recomputing it — the property that makes a
+    /// checkpoint-resumed solve bit-identical to one that never stopped,
+    /// since the incrementally-updated residual drifts from the
+    /// from-scratch product by accumulated f32 rounding. Backends without
+    /// that resume path fall back to treating this as a plain warm start.
+    pub fn with_warm_state(
+        self,
+        a0: &'a [f32],
+        e0: &'a [f32],
+    ) -> Result<Self, SolverError> {
+        if e0.len() != self.obs() {
+            return Err(SolverError::Shape(format!(
+                "warm residual length {} != obs {}",
+                e0.len(),
+                self.obs()
+            )));
+        }
+        if !e0.iter().all(|v| v.is_finite()) {
+            return Err(SolverError::NonFinite { what: "warm residual" });
+        }
+        let mut p = self.with_warm_start(a0)?;
+        p.warm_e = Some(e0);
+        Ok(p)
     }
 
     /// The system matrix, dense or sparse.
@@ -427,6 +484,12 @@ impl<'a> Problem<'a> {
 
     pub fn warm_start(&self) -> Option<&'a [f32]> {
         self.warm
+    }
+
+    /// The checkpointed residual attached via [`Problem::with_warm_state`]
+    /// (None for a plain [`Problem::with_warm_start`]).
+    pub fn warm_residual(&self) -> Option<&'a [f32]> {
+        self.warm_e
     }
 
     pub fn obs(&self) -> usize {
@@ -607,6 +670,28 @@ mod tests {
         let a0 = [0.5f32; 4];
         let p = p.with_warm_start(&a0).unwrap();
         assert_eq!(p.warm_start(), Some(&a0[..]));
+        assert_eq!(p.warm_residual(), None);
+    }
+
+    #[test]
+    fn warm_state_validated() {
+        let mut rng = Rng::seed(8);
+        let x = Mat::randn(&mut rng, 10, 4);
+        let y = vec![1.0f32; 10];
+        let p = Problem::new(&x, &y).unwrap();
+        let a0 = [0.5f32; 4];
+        let e0 = [0.25f32; 10];
+        assert!(p.with_warm_state(&a0, &[0.0; 9]).is_err(), "short residual");
+        assert!(p.with_warm_state(&[0.0; 3], &e0).is_err(), "short coeffs");
+        let mut bad_e = e0;
+        bad_e[4] = f32::NAN;
+        assert_eq!(
+            p.with_warm_state(&a0, &bad_e).unwrap_err(),
+            SolverError::NonFinite { what: "warm residual" }
+        );
+        let p = p.with_warm_state(&a0, &e0).unwrap();
+        assert_eq!(p.warm_start(), Some(&a0[..]));
+        assert_eq!(p.warm_residual(), Some(&e0[..]));
     }
 
     #[test]

@@ -42,10 +42,11 @@ pub struct MethodResult {
     /// Bytes allocated by ONE run (0 unless the counting allocator is the
     /// binary's global allocator).
     pub alloc_bytes: u64,
-    /// Process peak RSS (`VmHWM`) after the measurement, in bytes — 0 on
-    /// non-Linux platforms ([`alloc::peak_rss_bytes`]). A high-water mark,
-    /// so it reflects the largest method measured so far in the process.
-    pub peak_rss_bytes: u64,
+    /// Process peak RSS (`VmHWM`) after the measurement, in bytes — `None`
+    /// where the metric is unavailable ([`alloc::peak_rss_bytes`]). A
+    /// high-water mark, so it reflects the largest method measured so far
+    /// in the process.
+    pub peak_rss_bytes: Option<u64>,
     /// MAPE of the solution against the planted coefficients.
     pub mape: f64,
     /// Downsampled convergence trajectory of the probe run (the first,
@@ -103,8 +104,8 @@ impl MethodResult {
         alloc::mib(self.alloc_bytes)
     }
 
-    pub fn peak_rss_mib(&self) -> f64 {
-        alloc::mib(self.peak_rss_bytes)
+    pub fn peak_rss_mib(&self) -> Option<f64> {
+        self.peak_rss_bytes.map(alloc::mib)
     }
 }
 
@@ -172,7 +173,11 @@ mod tests {
             assert!(r.time.min > 0.0, "{}", r.method_label);
             assert!(r.mape < 1e-2, "{} mape={}", r.method_label, r.mape);
             if cfg!(target_os = "linux") {
-                assert!(r.peak_rss_bytes > 0, "{} VmHWM missing", r.method_label);
+                assert!(
+                    r.peak_rss_bytes.unwrap_or(0) > 0,
+                    "{} VmHWM missing",
+                    r.method_label
+                );
             }
         }
     }

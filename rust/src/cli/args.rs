@@ -29,7 +29,7 @@ const VALUED: &[&str] = &[
     "requests", "out", "rows", "noise", "level", "density", "port",
     "x-file", "y-file", "mem-budget", "chunk", "addr", "interval", "count",
     "deadline-ms", "max-inflight", "max-queue-wait-ms", "degraded-sweeps",
-    "faults", "retries",
+    "faults", "retries", "journal-dir", "checkpoint-every",
 ];
 
 impl Args {

@@ -89,6 +89,12 @@ ROBUSTNESS (see PROTOCOL.md):
                         worker_panic_every=7,queue_stall_ms=20
                         (the PALLAS_FAULTS env var arms the same knobs)
   --retries N           stats: client retry budget on overload/transport [3]
+
+DURABILITY (see PROTOCOL.md §durability):
+  --journal-dir DIR     serve-tcp: persist per-job checkpoints so a solve
+                        re-submitted under the same job_id resumes instead
+                        of starting over [off]
+  --checkpoint-every N  serve-tcp: sweeps between checkpoint writes [8]
 ",
         backends.join("|")
     )
@@ -240,30 +246,37 @@ fn cmd_solve(args: &Args) -> Result<(), ArgError> {
     };
     let peak_rss = crate::util::alloc::peak_rss_bytes();
     println!(
-        "solved {kind}{obs}x{vars} (nnz={nnz}) via {}: {} | sweeps={} stop={:?} rel_resid={:.3e} mape={:.3e} peak_rss={:.1}MiB",
+        "solved {kind}{obs}x{vars} (nnz={nnz}) via {}: {} | sweeps={} stop={:?} rel_resid={:.3e} mape={:.3e} peak_rss={}",
         out.backend, fmt_seconds(secs), report.sweeps, report.stop,
-        report.rel_residual(), acc, crate::util::alloc::mib(peak_rss),
+        report.rel_residual(), acc, fmt_peak_rss(peak_rss),
     );
-    println!(
-        "{}",
-        ObjBuilder::new()
-            .str("cmd", "solve")
-            .num("obs", obs as f64)
-            .num("vars", vars as f64)
-            .bool("sparse", sparse)
-            .bool("streamed", streamed)
-            .num("nnz", nnz as f64)
-            .str("backend", out.backend.to_string())
-            .num("seconds", secs)
-            .num("sweeps", report.sweeps as f64)
-            .num("rel_residual", report.rel_residual())
-            .num("mape", acc)
-            .num("peak_rss_bytes", peak_rss as f64)
-            .build()
-            .to_string()
-    );
+    let mut b = ObjBuilder::new()
+        .str("cmd", "solve")
+        .num("obs", obs as f64)
+        .num("vars", vars as f64)
+        .bool("sparse", sparse)
+        .bool("streamed", streamed)
+        .num("nnz", nnz as f64)
+        .str("backend", out.backend.to_string())
+        .num("seconds", secs)
+        .num("sweeps", report.sweeps as f64)
+        .num("rel_residual", report.rel_residual())
+        .num("mape", acc);
+    if let Some(rss) = peak_rss {
+        b = b.num("peak_rss_bytes", rss as f64);
+    }
+    println!("{}", b.build().to_string());
     coord.shutdown();
     Ok(())
+}
+
+/// Human-readable peak-RSS suffix: "12.3MiB", or "n/a" where the metric
+/// is unavailable (see [`crate::util::alloc::peak_rss_bytes`]).
+fn fmt_peak_rss(rss: Option<u64>) -> String {
+    rss.map_or_else(
+        || "n/a".to_string(),
+        |b| format!("{:.1}MiB", crate::util::alloc::mib(b)),
+    )
 }
 
 /// The `<x>.y` sidecar path next to a chunked matrix file.
@@ -327,29 +340,27 @@ fn cmd_convert(args: &Args) -> Result<(), ArgError> {
     let meta = crate::stream::StreamedMatrix::open(&path).map_err(io_err)?;
     let peak_rss = crate::util::alloc::peak_rss_bytes();
     println!(
-        "wrote {} ({obs}x{vars}, chunk_cols={}, {:.1} MiB) + {} in {} | peak_rss={:.1}MiB",
+        "wrote {} ({obs}x{vars}, chunk_cols={}, {:.1} MiB) + {} in {} | peak_rss={}",
         path.display(),
         meta.chunk_cols(),
         crate::util::alloc::mib(meta.nbytes() as u64),
         y_path.display(),
         fmt_seconds(secs),
-        crate::util::alloc::mib(peak_rss),
+        fmt_peak_rss(peak_rss),
     );
-    println!(
-        "{}",
-        ObjBuilder::new()
-            .str("cmd", "convert")
-            .num("obs", obs as f64)
-            .num("vars", vars as f64)
-            .bool("sparse", sparse)
-            .num("chunk_cols", meta.chunk_cols() as f64)
-            .num("bytes", meta.nbytes() as f64)
-            .str("out", path.display().to_string())
-            .num("seconds", secs)
-            .num("peak_rss_bytes", peak_rss as f64)
-            .build()
-            .to_string()
-    );
+    let mut b = ObjBuilder::new()
+        .str("cmd", "convert")
+        .num("obs", obs as f64)
+        .num("vars", vars as f64)
+        .bool("sparse", sparse)
+        .num("chunk_cols", meta.chunk_cols() as f64)
+        .num("bytes", meta.nbytes() as f64)
+        .str("out", path.display().to_string())
+        .num("seconds", secs);
+    if let Some(rss) = peak_rss {
+        b = b.num("peak_rss_bytes", rss as f64);
+    }
+    println!("{}", b.build().to_string());
     Ok(())
 }
 
@@ -442,6 +453,8 @@ fn cmd_serve_tcp(args: &Args) -> Result<(), ArgError> {
         0 => None,
         n => Some(n),
     };
+    let journal_dir = args.get("journal-dir").map(std::path::PathBuf::from);
+    let checkpoint_every = args.get_usize("checkpoint-every", 8)?;
     if let Some(spec) = args.get("faults") {
         let plan = crate::robust::faults::FaultPlan::parse(spec).map_err(ArgError)?;
         crate::robust::faults::install(&plan);
@@ -453,11 +466,19 @@ fn cmd_serve_tcp(args: &Args) -> Result<(), ArgError> {
         max_inflight,
         max_queue_wait_ms,
         degraded_sweeps,
+        journal_dir: journal_dir.clone(),
+        checkpoint_every,
         ..CoordinatorConfig::default()
     }));
     let server = crate::coordinator::server::Server::bind(coord.clone(), port)
         .map_err(|e| ArgError(format!("bind: {e}")))?;
     println!("listening on {} ({} workers)", server.addr(), workers);
+    if let Some(dir) = &journal_dir {
+        println!(
+            "durable jobs: journal at {} (checkpoint every {checkpoint_every} sweeps)",
+            dir.display()
+        );
+    }
     if max_inflight > 0 {
         println!(
             "admission gate: {max_inflight} in flight, {max_queue_wait_ms}ms queue wait, \

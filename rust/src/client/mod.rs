@@ -370,6 +370,60 @@ mod tests {
     }
 
     #[test]
+    fn backoff_sequence_is_pinned_to_the_documented_spec() {
+        // Exact pin of the backoff algorithm against PROTOCOL.md's spec:
+        // retry n consumes exactly one `next_u64` and sleeps
+        // `half + draw % (cap - half + 1)` with `half = cap/2` and
+        // `cap = min(base * 2^(n-1), max_backoff_ms)` raised to any
+        // server floor. `spec` is an independent generator stepped in
+        // lockstep, so any change to the formula, the draw count, or
+        // the jitter window breaks the equality below.
+        let p = RetryPolicy {
+            max_retries: 10,
+            base_ms: 50,
+            max_backoff_ms: 2_000,
+            budget_ms: 60_000,
+            jitter_seed: RetryPolicy::default().jitter_seed,
+        };
+        let mut live = Rng::seed(p.jitter_seed);
+        let mut spec = Rng::seed(p.jitter_seed);
+        let caps: [u64; 8] = [50, 100, 200, 400, 800, 1600, 2_000, 2_000];
+        for (i, &cap) in caps.iter().enumerate() {
+            let half = cap / 2;
+            let want = half + spec.next_u64() % (cap - half + 1);
+            let got = p.backoff_ms(i as u32 + 1, 0, &mut live);
+            assert_eq!(got, want, "retry {}: sequence diverged from spec", i + 1);
+        }
+        // A retry_after_ms hint above both the exponential cap and the
+        // ceiling raises the whole window: sleep lands in [1500, 3000].
+        let want = 1_500 + spec.next_u64() % 1_501;
+        assert_eq!(p.backoff_ms(1, 3_000, &mut live), want);
+        // A hint below the current cap is a no-op on the window.
+        let want = 400 + spec.next_u64() % 401;
+        assert_eq!(p.backoff_ms(5, 30, &mut live), want);
+        // Deep retries clamp the shift (no overflow) at the ceiling.
+        let want = 1_000 + spec.next_u64() % 1_001;
+        assert_eq!(p.backoff_ms(64, 0, &mut live), want);
+    }
+
+    #[test]
+    fn backoff_never_sleeps_zero() {
+        // Degenerate policies still yield a >= 1ms sleep so the retry
+        // loop cannot spin.
+        let p = RetryPolicy {
+            max_retries: 1,
+            base_ms: 0,
+            max_backoff_ms: 0,
+            budget_ms: 1_000,
+            jitter_seed: 3,
+        };
+        let mut rng = Rng::seed(3);
+        for retry in 1..=4 {
+            assert_eq!(p.backoff_ms(retry, 0, &mut rng), 1);
+        }
+    }
+
+    #[test]
     fn roundtrips_against_the_real_server() {
         let coord = Arc::new(crate::coordinator::Coordinator::start(
             crate::coordinator::CoordinatorConfig {

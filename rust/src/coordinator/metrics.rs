@@ -144,6 +144,16 @@ pub struct Metrics {
     /// Requests answered in degraded mode (reduced-sweep BAK) instead of
     /// being shed.
     pub degraded_solves: AtomicU64,
+    /// Backend-ladder escalation attempts (numerical breakdown with
+    /// `escalate` set re-runs on the next rung: BAK → CGLS → QR).
+    pub escalations: AtomicU64,
+    /// `.ckpt` snapshots written by durable (`job_id`-carrying) jobs.
+    pub checkpoints_written: AtomicU64,
+    /// Durable jobs that warm-started from a journal checkpoint.
+    pub resumes: AtomicU64,
+    /// Requests that failed on a `.sbck` chunk whose CRC32 did not match
+    /// ([`crate::api::SolverError::CorruptData`]).
+    pub corrupt_chunks: AtomicU64,
     /// Gauge: jobs currently sitting in the job queue (scheduled but not
     /// yet picked up by a worker).
     pub job_queue_depth: AtomicU64,
@@ -178,6 +188,10 @@ impl Default for Metrics {
             jobs_deadline_exceeded: AtomicU64::new(0),
             retries_attempted: AtomicU64::new(0),
             degraded_solves: AtomicU64::new(0),
+            escalations: AtomicU64::new(0),
+            checkpoints_written: AtomicU64::new(0),
+            resumes: AtomicU64::new(0),
+            corrupt_chunks: AtomicU64::new(0),
             job_queue_depth: AtomicU64::new(0),
             stream_chunks_read: AtomicU64::new(0),
             stream_bytes_read: AtomicU64::new(0),
@@ -256,6 +270,10 @@ impl Metrics {
             .num("jobs_deadline_exceeded", c(&self.jobs_deadline_exceeded))
             .num("retries_attempted", c(&self.retries_attempted))
             .num("degraded_solves", c(&self.degraded_solves))
+            .num("escalations", c(&self.escalations))
+            .num("checkpoints_written", c(&self.checkpoints_written))
+            .num("resumes", c(&self.resumes))
+            .num("corrupt_chunks", c(&self.corrupt_chunks))
             .num("job_queue_depth", c(&self.job_queue_depth))
             .num("stream_chunks_read", c(&self.stream_chunks_read))
             .num("stream_bytes_read", c(&self.stream_bytes_read))
@@ -300,6 +318,10 @@ impl Metrics {
         counter(&mut out, "jobs_deadline_exceeded", c(&self.jobs_deadline_exceeded));
         counter(&mut out, "retries_attempted", c(&self.retries_attempted));
         counter(&mut out, "degraded_solves", c(&self.degraded_solves));
+        counter(&mut out, "escalations", c(&self.escalations));
+        counter(&mut out, "checkpoints_written", c(&self.checkpoints_written));
+        counter(&mut out, "resumes", c(&self.resumes));
+        counter(&mut out, "corrupt_chunks", c(&self.corrupt_chunks));
         counter(&mut out, "stream_chunks_read", c(&self.stream_chunks_read));
         counter(&mut out, "stream_bytes_read", c(&self.stream_bytes_read));
         counter(&mut out, "stream_buffer_stalls", c(&self.stream_buffer_stalls));
@@ -579,16 +601,28 @@ mod tests {
         m.jobs_deadline_exceeded.store(1, Ordering::Relaxed);
         m.retries_attempted.store(4, Ordering::Relaxed);
         m.degraded_solves.store(3, Ordering::Relaxed);
+        m.escalations.store(5, Ordering::Relaxed);
+        m.checkpoints_written.store(6, Ordering::Relaxed);
+        m.resumes.store(7, Ordering::Relaxed);
+        m.corrupt_chunks.store(8, Ordering::Relaxed);
         let j = m.to_json();
         assert_eq!(j.get("jobs_shed").unwrap().as_f64(), Some(2.0));
         assert_eq!(j.get("jobs_deadline_exceeded").unwrap().as_f64(), Some(1.0));
         assert_eq!(j.get("retries_attempted").unwrap().as_f64(), Some(4.0));
         assert_eq!(j.get("degraded_solves").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("escalations").unwrap().as_f64(), Some(5.0));
+        assert_eq!(j.get("checkpoints_written").unwrap().as_f64(), Some(6.0));
+        assert_eq!(j.get("resumes").unwrap().as_f64(), Some(7.0));
+        assert_eq!(j.get("corrupt_chunks").unwrap().as_f64(), Some(8.0));
         let text = m.to_prometheus();
         assert!(text.contains("pallas_jobs_shed_total 2"));
         assert!(text.contains("pallas_jobs_deadline_exceeded_total 1"));
         assert!(text.contains("pallas_retries_attempted_total 4"));
         assert!(text.contains("pallas_degraded_solves_total 3"));
+        assert!(text.contains("pallas_escalations_total 5"));
+        assert!(text.contains("pallas_checkpoints_written_total 6"));
+        assert!(text.contains("pallas_resumes_total 7"));
+        assert!(text.contains("pallas_corrupt_chunks_total 8"));
     }
 
     #[test]

@@ -119,6 +119,18 @@ pub struct SolveRequest {
     /// Set by the coordinator when admission control downgraded this
     /// request to a reduced-sweep solve instead of shedding it.
     pub degraded: bool,
+    /// Client-supplied idempotency key. When set (and the coordinator has
+    /// a journal directory), the solve checkpoints its resumable state to
+    /// `<journal>/<job_id>.ckpt` every N sweeps, and a re-submission under
+    /// the same key warm-starts from the last checkpoint instead of
+    /// solving from scratch. Durable requests are never coalesced.
+    pub job_id: Option<String>,
+    /// On numerical breakdown (NaN/Inf residual, sustained divergence),
+    /// retry on the next backend up the robustness ladder
+    /// (BAK → CGLS → QR) instead of failing with
+    /// [`SolverError::NumericalBreakdown`]. Escalating requests are never
+    /// coalesced.
+    pub escalate: bool,
 }
 
 impl SolveRequest {
@@ -150,6 +162,8 @@ impl SolveRequest {
             trace: None,
             deadline_ms: None,
             degraded: false,
+            job_id: None,
+            escalate: false,
         }
     }
 
@@ -216,6 +230,22 @@ impl SolveRequestBuilder {
         self
     }
 
+    /// Attach an idempotency key: the solve journals resumable
+    /// checkpoints under it, and a crash-recovery re-submission with the
+    /// same key warm-starts from the last one (see
+    /// [`SolveRequest::job_id`]).
+    pub fn job_id(mut self, id: impl Into<String>) -> Self {
+        self.req.job_id = Some(id.into());
+        self
+    }
+
+    /// Escalate numerical breakdowns up the backend ladder instead of
+    /// failing (see [`SolveRequest::escalate`]).
+    pub fn escalate(mut self, on: bool) -> Self {
+        self.req.escalate = on;
+        self
+    }
+
     pub fn build(self) -> SolveRequest {
         self.req
     }
@@ -234,6 +264,13 @@ pub struct SolveJob {
     /// True when admission control downgraded this job to a
     /// reduced-sweep solve (propagated to every member outcome).
     pub degraded: bool,
+    /// Idempotency key carried over from a durable request (always a
+    /// singleton job — durable requests are never coalesced, so the
+    /// journal checkpoint describes exactly one solve).
+    pub job_id: Option<String>,
+    /// Breakdown-escalation flag carried over from the request (also a
+    /// singleton: a ladder retry must not re-run batch-mates).
+    pub escalate: bool,
 }
 
 impl SolveJob {
@@ -246,6 +283,8 @@ impl SolveJob {
             backend: req.backend,
             trace: req.trace,
             degraded: req.degraded,
+            job_id: req.job_id,
+            escalate: req.escalate,
         }
     }
 
@@ -277,6 +316,13 @@ pub struct SolveOutcome {
     /// True when admission control answered this request with a
     /// reduced-sweep (degraded-mode) solve.
     pub degraded: bool,
+    /// True when a durable (`job_id`-keyed) request warm-started from a
+    /// journal checkpoint instead of solving from scratch.
+    pub resumed: bool,
+    /// The ladder rung that finally answered, when a numerical breakdown
+    /// was escalated (`SolveRequest::escalate`); `backend` is set to the
+    /// same kind.
+    pub escalated_to: Option<SolverKind>,
 }
 
 #[cfg(test)]
@@ -336,6 +382,8 @@ mod tests {
         assert!(r.trace.is_none());
         assert!(r.deadline_ms.is_none());
         assert!(!r.degraded);
+        assert!(r.job_id.is_none());
+        assert!(!r.escalate);
         assert!(!r.opts.cancel.is_enabled());
     }
 
@@ -350,11 +398,15 @@ mod tests {
             .backend(SolverKind::Bak)
             .deadline_ms(250)
             .trace(true)
+            .job_id("job-1")
+            .escalate(true)
             .build();
         assert_eq!(r.opts.max_sweeps, 7);
         assert_eq!(r.backend, SolverKind::Bak);
         assert_eq!(r.deadline_ms, Some(250));
         assert!(r.trace.is_some());
+        assert_eq!(r.job_id.as_deref(), Some("job-1"));
+        assert!(r.escalate);
     }
 
     #[test]
@@ -379,5 +431,18 @@ mod tests {
         r.degraded = true;
         let job = SolveJob::single(r);
         assert!(job.degraded);
+    }
+
+    #[test]
+    fn durability_knobs_propagate_to_job() {
+        let mut rng = Rng::seed(7);
+        let x = Arc::new(Mat::randn(&mut rng, 4, 2));
+        let r = SolveRequest::builder(1, x, vec![0.0; 4])
+            .job_id("ckpt-key")
+            .escalate(true)
+            .build();
+        let job = SolveJob::single(r);
+        assert_eq!(job.job_id.as_deref(), Some("ckpt-key"));
+        assert!(job.escalate);
     }
 }

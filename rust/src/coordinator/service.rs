@@ -37,7 +37,8 @@ use crate::runtime::Engine;
 use crate::solver::{self, SolveReport};
 use crate::util::log::{emit, emit_traced, Level};
 
-use crate::obs::{ProbeHandle, RingProbe, Telemetry, TraceCtx, TraceRing};
+use crate::obs::{MultiProbe, ProbeHandle, RingProbe, SolveProbe, Telemetry, TraceCtx, TraceRing};
+use crate::robust::{CancelToken, Checkpoint, CheckpointProbe, Watchdog};
 
 use super::batch::{coalesce, BatchPolicy};
 use super::metrics::Metrics;
@@ -73,6 +74,18 @@ pub struct CoordinatorConfig {
     /// When set, a saturated gate answers with a reduced-sweep BAK solve
     /// (capped at this many sweeps) instead of shedding the request.
     pub degraded_sweeps: Option<usize>,
+    /// Durable job journal directory. When set, requests carrying a
+    /// [`SolveRequest::job_id`] checkpoint their iterate here every
+    /// [`CoordinatorConfig::checkpoint_every`] sweeps and resume from a
+    /// compatible `.ckpt` on re-submission (same id, solver, seed and
+    /// shape). `None` disables the journal entirely.
+    pub journal_dir: Option<PathBuf>,
+    /// Sweeps between journal checkpoints (clamped to at least 1).
+    pub checkpoint_every: usize,
+    /// Numerical-health watchdog thresholds, applied to every journaled or
+    /// escalation-enabled solve. The default only watches for NaN/Inf and
+    /// sustained divergence; stagnation detection is opt-in.
+    pub watchdog: crate::robust::WatchdogConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -85,8 +98,20 @@ impl Default for CoordinatorConfig {
             max_inflight: 0,
             max_queue_wait_ms: 0,
             degraded_sweeps: None,
+            journal_dir: None,
+            checkpoint_every: 8,
+            watchdog: crate::robust::WatchdogConfig::default(),
         }
     }
+}
+
+/// Durable-execution knobs, derived from [`CoordinatorConfig`] once at
+/// startup and shared by every worker.
+#[derive(Clone)]
+struct Durability {
+    journal_dir: Option<PathBuf>,
+    checkpoint_every: usize,
+    watchdog: crate::robust::WatchdogConfig,
 }
 
 struct Envelope {
@@ -137,6 +162,22 @@ impl Coordinator {
         let submit_q: Arc<BoundedQueue<Envelope>> =
             Arc::new(BoundedQueue::new(config.queue_capacity));
 
+        if let Some(dir) = &config.journal_dir {
+            if let Err(err) = std::fs::create_dir_all(dir) {
+                // Stay up: the checkpoint probe swallows write failures,
+                // so an uncreatable journal degrades durability, not
+                // availability.
+                emit(Level::Warn, "coordinator", format_args!(
+                    "journal dir {} not creatable ({err}); checkpoints will not persist",
+                    dir.display()));
+            }
+        }
+        let durability = Durability {
+            journal_dir: config.journal_dir.clone(),
+            checkpoint_every: config.checkpoint_every.max(1),
+            watchdog: config.watchdog,
+        };
+
         // The worker pool: N workers pulling jobs from a bounded injector,
         // panic-isolated per job (a panicking solve drops its reply
         // senders — clients observe a typed Service error — and the
@@ -145,6 +186,7 @@ impl Coordinator {
             let metrics = metrics.clone();
             let engine = engine.clone();
             let traces = traces.clone();
+            let dur = durability.clone();
             Arc::new(Executor::start(
                 "bak-worker",
                 config.workers.max(1),
@@ -157,7 +199,7 @@ impl Coordinator {
                     // panic-isolation path — reply senders (and permits)
                     // drop, clients observe a typed Service error.
                     crate::robust::faults::maybe_panic_worker();
-                    run_job(env, engine.as_ref(), &metrics, &traces);
+                    run_job(env, engine.as_ref(), &metrics, &traces, &dur);
                 },
             ))
         };
@@ -320,6 +362,8 @@ impl Coordinator {
                 batch_size: 0,
                 telemetry: None,
                 degraded: false,
+                resumed: false,
+                escalated_to: None,
             }),
             Err(e) => SolveOutcome {
                 id: 0,
@@ -329,6 +373,8 @@ impl Coordinator {
                 batch_size: 0,
                 telemetry: None,
                 degraded: false,
+                resumed: false,
+                escalated_to: None,
             },
         }
     }
@@ -393,11 +439,15 @@ fn schedule_batch(
         metrics.queue_wait.record(env.submitted.elapsed().as_secs_f64());
         // Singleton jobs: traced requests (the span timeline must describe
         // exactly one solve), deadline-armed requests (one member's budget
-        // must not cancel batch-mates), and degraded requests (their
-        // clamped sweep budget must not infect a batch).
+        // must not cancel batch-mates), degraded requests (their clamped
+        // sweep budget must not infect a batch), and durable/escalating
+        // requests (the journal and the watchdog's cancel token are both
+        // strictly per-solve).
         let singleton = env.req.trace.is_some()
             || env.req.opts.cancel.is_enabled()
-            || env.req.degraded;
+            || env.req.degraded
+            || env.req.job_id.is_some()
+            || env.req.escalate;
         if singleton {
             if let Some(ctx) = env.req.trace.clone() {
                 // The queue wait is recorded retroactively: the span began
@@ -445,6 +495,7 @@ fn run_job(
     engine: Option<&Arc<Engine>>,
     metrics: &Metrics,
     traces: &TraceRing,
+    dur: &Durability,
 ) {
     // `_permits` stays alive until the function returns, so the admission
     // gate frees capacity only after every reply has been sent.
@@ -472,6 +523,8 @@ fn run_job(
                 batch_size,
                 telemetry: None,
                 degraded: job.degraded,
+                resumed: false,
+                escalated_to: None,
             });
         }
         return;
@@ -481,7 +534,13 @@ fn run_job(
     // merge below. Untraced jobs skip all of it (probe stays disabled).
     let tracing: Option<(Arc<TraceCtx>, Arc<RingProbe>)> = job.trace.clone().map(|ctx| {
         let probe = RingProbe::new(TRACE_TRAJECTORY_CAP);
-        job.opts.probe = ProbeHandle::new(probe.clone());
+        // Fold an already-attached probe (a caller's, or — on guarded jobs
+        // below — soon the checkpoint/watchdog members) into a fan-out
+        // instead of silently replacing it.
+        job.opts.probe = match job.opts.probe.inner() {
+            Some(existing) => ProbeHandle::new(MultiProbe::new(vec![existing, probe.clone()])),
+            None => ProbeHandle::new(probe.clone()),
+        };
         (ctx, probe)
     });
     let route_span = tracing.as_ref().map(|(ctx, _)| ctx.begin("route", None));
@@ -504,7 +563,15 @@ fn run_job(
         (Some((ctx, _)), Some(idx)) => Some((ctx.as_ref(), idx)),
         _ => None,
     };
-    let outcomes = execute_job(&job, decision.backend, engine, metrics, trace_arg);
+    // Durable (`job_id`) and self-healing (`escalate`) requests take the
+    // guarded path: always singleton (the scheduler guarantees it), with
+    // checkpoint + watchdog probes folded in around the solve.
+    let guarded = job.len() == 1 && (job.job_id.is_some() || job.escalate);
+    let outcomes = if guarded {
+        vec![run_guarded(&job, decision.backend, engine, metrics, dur)]
+    } else {
+        execute_job(&job, decision.backend, engine, metrics, trace_arg)
+    };
     if let (Some((ctx, _)), Some(idx)) = (&tracing, solve_span) {
         ctx.end(idx);
     }
@@ -513,6 +580,21 @@ fn run_job(
     let merge_span = tracing.as_ref().map(|(ctx, _)| ctx.begin("merge", None));
     let mut merged = Vec::with_capacity(outcomes.len());
     for ((id, _), mut outcome) in job.members.iter().zip(outcomes) {
+        // A solve whose residual went non-finite stopped on Breakdown;
+        // surface it as the typed NumericalBreakdown error. (Guarded jobs
+        // already converted — their watchdog carries the detail — so this
+        // only catches breakdowns on the plain path.)
+        if matches!(&outcome.report, Ok(rep) if rep.stop == solver::StopReason::Breakdown) {
+            if let Ok(rep) = std::mem::replace(
+                &mut outcome.report,
+                Err(SolverError::Service(String::new())),
+            ) {
+                outcome.report = Err(SolverError::NumericalBreakdown {
+                    detail: "residual became non-finite".into(),
+                    sweeps: rep.sweeps,
+                });
+            }
+        }
         // A deadline-armed solve that stopped on Cancelled surfaces as the
         // typed DeadlineExceeded error, carrying the best-so-far solution
         // (the solver's exit invariant guarantees `e == y - Xa` for it).
@@ -534,6 +616,9 @@ fn run_job(
                     sweeps,
                 });
             }
+        }
+        if matches!(&outcome.report, Err(SolverError::CorruptData { .. })) {
+            metrics.corrupt_chunks.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         }
         let ok = outcome.report.is_ok();
         metrics.solve_latency.record(outcome.seconds);
@@ -578,6 +663,268 @@ fn run_job(
             outcome.telemetry = Some(t.clone());
         }
         let _ = reply.send(outcome);
+    }
+}
+
+/// The backend escalation ladder: cheapest first, most robust last. A
+/// breakdown on one rung retries on the rungs above it — coordinate
+/// descent's conditioning sensitivity hands off to CGLS (normal-equation
+/// Krylov, better conditioned per iteration), then to Householder QR,
+/// which is direct and cannot diverge.
+const ESCALATION_LADDER: [SolverKind; 3] = [SolverKind::Bak, SolverKind::Cgls, SolverKind::Qr];
+
+/// The rungs above `from`. Off-ladder kinds (the BAK/Kaczmarz variants)
+/// start above BAK: retrying the same iteration family against the same
+/// conditioning would break down the same way.
+fn escalation_ladder(from: SolverKind) -> &'static [SolverKind] {
+    let next = ESCALATION_LADDER.iter().position(|&k| k == from).map_or(1, |i| i + 1);
+    &ESCALATION_LADDER[next.min(ESCALATION_LADDER.len())..]
+}
+
+/// Journal file name for a job id: a sanitised, length-capped stem for
+/// humans plus the CRC32 of the *full* id so distinct ids never collide
+/// (and path metacharacters never escape the journal directory).
+fn journal_file_name(job_id: &str) -> String {
+    let stem: String = job_id
+        .chars()
+        .take(64)
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.') {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect();
+    format!("{stem}-{:08x}.ckpt", crate::util::crc32::crc32(job_id.as_bytes()))
+}
+
+/// Execute a singleton durable/escalating job: resume from the journal
+/// when a compatible checkpoint exists, checkpoint the iterate as it
+/// runs, watch its numerical health, and — when asked — climb the
+/// backend ladder on breakdown instead of failing.
+fn run_guarded(
+    job: &SolveJob,
+    backend: SolverKind,
+    engine: Option<&Arc<Engine>>,
+    metrics: &Metrics,
+    dur: &Durability,
+) -> SolveOutcome {
+    use std::sync::atomic::Ordering::Relaxed;
+    let t0 = Instant::now();
+    let y = &job.members[0].1;
+    let mut opts = job.opts.clone();
+
+    // Probe fan-out, preserving whatever is already attached (a caller's
+    // probe, or the tracing RingProbe minted by `run_job`).
+    let mut probes: Vec<Arc<dyn SolveProbe>> = opts.probe.inner().into_iter().collect();
+
+    // Durable journal: resume from a compatible checkpoint — same id,
+    // same solver, same seed, same shape — then keep checkpointing.
+    // Incompatible or unreadable (CRC-rejected) checkpoints are ignored:
+    // a cold start is always a safe answer.
+    let ckpt_path = match (&dur.journal_dir, &job.job_id) {
+        (Some(dir), Some(id)) => Some(dir.join(journal_file_name(id))),
+        _ => None,
+    };
+    let warm = match (&ckpt_path, &job.job_id) {
+        (Some(path), Some(id)) => Checkpoint::load(path).ok().filter(|c| {
+            c.job_id == *id
+                && c.solver == backend.as_str()
+                && c.seed == opts.seed
+                && c.a.len() == job.x.cols()
+                && c.e.len() == y.len()
+        }),
+        _ => None,
+    };
+    let resumed = warm.is_some();
+    if resumed {
+        metrics.resumes.fetch_add(1, Relaxed);
+    }
+    let ckpt_probe = match (&ckpt_path, &job.job_id) {
+        (Some(path), Some(id)) => {
+            let p = CheckpointProbe::new(
+                path.clone(),
+                id.clone(),
+                backend.as_str(),
+                opts.seed,
+                dur.checkpoint_every,
+            );
+            probes.push(p.clone());
+            Some(p)
+        }
+        _ => None,
+    };
+
+    // Health watchdog. When the job already carries an armed deadline
+    // token the watchdog guards that same token (one token serves both;
+    // `tripped()` disambiguates afterwards, and `job.opts.cancel` stays
+    // untouched so the merge loop still attributes genuine deadline hits
+    // correctly). Otherwise it gets its own.
+    let wd = Watchdog::guarding(
+        dur.watchdog,
+        if opts.cancel.is_enabled() { opts.cancel.clone() } else { CancelToken::manual() },
+    );
+    opts.cancel = wd.cancel_token();
+    probes.push(wd.probe());
+    opts.probe = ProbeHandle::new(MultiProbe::new(probes));
+
+    let mut report = guarded_solve(job, y, backend, engine, warm.as_ref(), &opts);
+
+    // Fold watchdog trips and non-finite exits into the typed breakdown.
+    let mut verdict: Option<SolverError> = if wd.tripped() {
+        wd.verdict().to_error()
+    } else {
+        match &report {
+            Ok(rep) if rep.stop == solver::StopReason::Breakdown => {
+                Some(SolverError::NumericalBreakdown {
+                    detail: "residual became non-finite".into(),
+                    sweeps: rep.sweeps,
+                })
+            }
+            _ => None,
+        }
+    };
+
+    let mut escalated_to = None;
+    if verdict.is_some() && job.escalate {
+        for &kind in escalation_ladder(backend) {
+            metrics.escalations.fetch_add(1, Relaxed);
+            // Each rung gets a fresh watchdog with its own token: a trip
+            // on the rung below must not pre-cancel this attempt, and a
+            // job deadline token that already fired would make every rung
+            // a no-op anyway.
+            let esc_wd = Watchdog::new(dur.watchdog);
+            let mut esc_opts = job.opts.clone();
+            esc_opts.cancel = esc_wd.cancel_token();
+            let mut esc_probes: Vec<Arc<dyn SolveProbe>> =
+                job.opts.probe.inner().into_iter().collect();
+            esc_probes.push(esc_wd.probe());
+            esc_opts.probe = ProbeHandle::new(MultiProbe::new(esc_probes));
+            match guarded_solve(job, y, kind, engine, None, &esc_opts) {
+                Ok(rep)
+                    if !esc_wd.tripped()
+                        && rep.stop != solver::StopReason::Breakdown
+                        && rep.a.iter().all(|v| v.is_finite()) =>
+                {
+                    metrics.record_backend_job(kind);
+                    emit(
+                        Level::Warn,
+                        "coordinator",
+                        format_args!(
+                            "numerical breakdown on '{backend}'; escalated to '{kind}'"
+                        ),
+                    );
+                    escalated_to = Some(kind);
+                    report = Ok(rep);
+                    verdict = None;
+                    break;
+                }
+                Ok(_) => {
+                    // This rung broke down too; carry its (fresher)
+                    // verdict up and keep climbing.
+                    if let Some(err) = esc_wd.verdict().to_error() {
+                        verdict = Some(err);
+                    }
+                }
+                Err(_) => {
+                    // Rung unavailable for this matrix shape (e.g. QR on
+                    // a streamed job); try the next one.
+                }
+            }
+        }
+    }
+    if let Some(err) = verdict {
+        report = Err(err);
+    }
+
+    // A deadline hit mid-solve: persist the best-so-far state so a retry
+    // under the same job_id resumes instead of restarting. (The solver's
+    // exit invariant guarantees `e == y - Xa` even on Cancelled.)
+    if let (Some(path), Some(id)) = (&ckpt_path, &job.job_id) {
+        if let Ok(rep) = &report {
+            if rep.stop == solver::StopReason::Cancelled && !wd.tripped() {
+                let ck = Checkpoint {
+                    job_id: id.clone(),
+                    solver: backend.as_str().to_string(),
+                    sweeps: rep.sweeps as u64,
+                    seed: job.opts.seed,
+                    a: rep.a.clone(),
+                    e: rep.e.clone(),
+                };
+                if ck.save_atomic(path).is_ok() {
+                    metrics.checkpoints_written.fetch_add(1, Relaxed);
+                }
+            }
+        }
+    }
+    if let Some(p) = &ckpt_probe {
+        metrics.checkpoints_written.fetch_add(p.written(), Relaxed);
+    }
+    // A finished solve's journal entry is spent — delete it so a reused
+    // job id starts cold. Failed or deadline-cut solves keep theirs so
+    // the retry resumes.
+    if let Some(path) = &ckpt_path {
+        if matches!(&report, Ok(rep) if rep.stop != solver::StopReason::Cancelled) {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+
+    SolveOutcome {
+        id: 0,
+        report,
+        backend: escalated_to.unwrap_or(backend),
+        seconds: t0.elapsed().as_secs_f64(),
+        batch_size: 0,
+        telemetry: None,
+        degraded: job.degraded,
+        resumed,
+        escalated_to,
+    }
+}
+
+/// One solve on the guarded path: build the problem for the job's matrix
+/// representation, splice in the warm state when resuming, and dispatch
+/// through the api registry (so the warm-start-aware backend adapters
+/// run, not the batch-amortised paths).
+fn guarded_solve(
+    job: &SolveJob,
+    y: &[f32],
+    backend: SolverKind,
+    engine: Option<&Arc<Engine>>,
+    warm: Option<&Checkpoint>,
+    opts: &solver::SolveOptions,
+) -> Result<SolveReport, SolverError> {
+    let p = match &job.x {
+        SharedMatrix::Dense(x) => {
+            Problem::validate_matrix(x)?;
+            Problem::prevalidated(x, y)?
+        }
+        SharedMatrix::SparseCsc(s) => {
+            Problem::validate_sparse_matrix(s)?;
+            Problem::prevalidated_sparse(s, y)?
+        }
+        SharedMatrix::Streamed(s) => Problem::new_streamed(s, y)?,
+    };
+    let p = match warm {
+        Some(c) => p.with_warm_state(&c.a, &c.e)?,
+        None => p,
+    };
+    match backend {
+        SolverKind::Pjrt => {
+            let pjrt = match engine {
+                Some(eng) => PjrtSolver::with_engine(eng.clone()),
+                None => PjrtSolver::detached(),
+            };
+            pjrt.solve(&p, opts)
+        }
+        kind => match solver_for(kind) {
+            Some(s) => s.solve(&p, opts),
+            None => Err(SolverError::Unavailable {
+                backend: kind.to_string(),
+                reason: "routing pseudo-kind; not directly executable".into(),
+            }),
+        },
     }
 }
 
@@ -750,6 +1097,8 @@ fn execute_job(
                                     batch_size: 0,
                                     telemetry: None,
                                     degraded: job.degraded,
+                                    resumed: false,
+                                    escalated_to: None,
                                 })
                                 .collect()
                         }
@@ -805,6 +1154,8 @@ fn execute_dense_job(
                             batch_size: 0,
                             telemetry: None,
                             degraded: job.degraded,
+                            resumed: false,
+                            escalated_to: None,
                         }
                     })
                     .collect()
@@ -861,6 +1212,8 @@ fn execute_dense_job(
                     batch_size: 0,
                     telemetry: None,
                     degraded: job.degraded,
+                    resumed: false,
+                    escalated_to: None,
                 })
                 .collect()
         }
@@ -912,6 +1265,8 @@ fn per_member(
                 batch_size: 0,
                 telemetry: None,
                 degraded: job.degraded,
+                resumed: false,
+                escalated_to: None,
             }
         })
         .collect()
@@ -1192,6 +1547,8 @@ mod tests {
             backend: SolverKind::Qr,
             trace: None,
             degraded: false,
+            job_id: None,
+            escalate: false,
         };
         let metrics = Metrics::new();
         let outcomes = execute_job(&job, SolverKind::Qr, None, &metrics, None);
@@ -1282,6 +1639,8 @@ mod tests {
             backend: SolverKind::BakMulti,
             trace: None,
             degraded: false,
+            job_id: None,
+            escalate: false,
         };
         let metrics = Metrics::new();
         let outcomes = execute_job(&job, SolverKind::BakMulti, None, &metrics, None);
@@ -1488,4 +1847,221 @@ mod tests {
         coord.shutdown();
     }
 
+    #[test]
+    fn escalation_ladder_orders_bak_cgls_qr() {
+        assert_eq!(escalation_ladder(SolverKind::Bak), &[SolverKind::Cgls, SolverKind::Qr]);
+        assert_eq!(escalation_ladder(SolverKind::Cgls), &[SolverKind::Qr]);
+        assert!(escalation_ladder(SolverKind::Qr).is_empty());
+        // Off-ladder kinds start above BAK: retrying the same iteration
+        // family against the same conditioning fails the same way.
+        assert_eq!(escalation_ladder(SolverKind::Bakp), &[SolverKind::Cgls, SolverKind::Qr]);
+        assert_eq!(
+            escalation_ladder(SolverKind::Kaczmarz),
+            &[SolverKind::Cgls, SolverKind::Qr]
+        );
+    }
+
+    #[test]
+    fn journal_file_names_are_sanitised_and_collision_free() {
+        let traversal = journal_file_name("../../etc/passwd");
+        assert!(!traversal.contains('/'), "{traversal}");
+        assert!(traversal.ends_with(".ckpt"));
+        // Distinct ids that sanitise to the same stem still get distinct
+        // files (the CRC of the full id disambiguates).
+        assert_ne!(journal_file_name("job:1"), journal_file_name("job?1"));
+        // Deterministic: resubmission finds the same file.
+        assert_eq!(journal_file_name("job-1"), journal_file_name("job-1"));
+    }
+
+    fn temp_journal(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("pallas_journal_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn durable_job_checkpoints_and_clears_journal_on_success() {
+        let dir = temp_journal("success");
+        let coord = Coordinator::start(CoordinatorConfig {
+            journal_dir: Some(dir.clone()),
+            checkpoint_every: 1,
+            ..CoordinatorConfig::default()
+        });
+        let (x, y, _) = planted(450, 200, 16);
+        let mut req = SolveRequest::builder(1, x, y).job_id("job-ok").build();
+        req.backend = SolverKind::Bak;
+        req.opts = solver::SolveOptions::builder()
+            .max_sweeps(30)
+            .tol(0.0)
+            .check_every(1)
+            .build();
+        let out = coord.solve_blocking(req);
+        assert!(out.report.is_ok());
+        assert!(!out.resumed, "no prior checkpoint to resume from");
+        use std::sync::atomic::Ordering::Relaxed;
+        assert!(coord.metrics().checkpoints_written.load(Relaxed) > 0);
+        assert_eq!(coord.metrics().resumes.load(Relaxed), 0);
+        // The journal entry is spent once the solve finishes.
+        let left: Vec<_> = std::fs::read_dir(&dir).unwrap().flatten().collect();
+        assert!(left.is_empty(), "journal not cleared: {left:?}");
+        coord.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resubmitted_job_id_resumes_bit_identically() {
+        let dir = temp_journal("resume");
+        std::fs::create_dir_all(&dir).unwrap();
+        let (x, y, _) = planted(451, 240, 18);
+        let mk_opts = |sweeps| {
+            solver::SolveOptions::builder()
+                .max_sweeps(sweeps)
+                .tol(0.0)
+                .check_every(1)
+                .build()
+        };
+        // Reference: six uninterrupted sweeps through the same registry
+        // adapter the guarded path dispatches to.
+        let bak = solver_for(SolverKind::Bak).unwrap();
+        let p = Problem::new(&x, &y).unwrap();
+        let full = bak.solve(&p, &mk_opts(6)).unwrap();
+        // "Crash" after three sweeps: the journal holds what the
+        // checkpoint probe would have written at sweep 3.
+        let part = bak.solve(&p, &mk_opts(3)).unwrap();
+        let opts = mk_opts(3);
+        Checkpoint {
+            job_id: "resume-key".into(),
+            solver: "bak".into(),
+            sweeps: part.sweeps as u64,
+            seed: opts.seed,
+            a: part.a.clone(),
+            e: part.e.clone(),
+        }
+        .save_atomic(&dir.join(journal_file_name("resume-key")))
+        .unwrap();
+
+        // Re-submission under the same job id picks the checkpoint up and
+        // runs the remaining three sweeps.
+        let coord = Coordinator::start(CoordinatorConfig {
+            journal_dir: Some(dir.clone()),
+            ..CoordinatorConfig::default()
+        });
+        let mut req = SolveRequest::builder(2, x, y).job_id("resume-key").build();
+        req.backend = SolverKind::Bak;
+        req.opts = mk_opts(3);
+        let out = coord.solve_blocking(req);
+        assert!(out.resumed, "checkpoint not picked up");
+        let rep = out.report.expect("resumed solve ok");
+        assert_eq!(rep.a, full.a, "resume is not bit-identical");
+        use std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(coord.metrics().resumes.load(Relaxed), 1);
+        coord.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn incompatible_checkpoint_is_ignored_and_solve_starts_cold() {
+        let dir = temp_journal("mismatch");
+        std::fs::create_dir_all(&dir).unwrap();
+        let (x, y, _) = planted(453, 100, 10);
+        // A checkpoint from a *different* solver under the same id: the
+        // guarded path must refuse to splice it in.
+        Checkpoint {
+            job_id: "cold-key".into(),
+            solver: "cgls".into(),
+            sweeps: 5,
+            seed: solver::SolveOptions::default().seed,
+            a: vec![0.5; 10],
+            e: y.clone(),
+        }
+        .save_atomic(&dir.join(journal_file_name("cold-key")))
+        .unwrap();
+        let coord = Coordinator::start(CoordinatorConfig {
+            journal_dir: Some(dir.clone()),
+            ..CoordinatorConfig::default()
+        });
+        let mut req = SolveRequest::builder(3, x, y).job_id("cold-key").build();
+        req.backend = SolverKind::Bak;
+        req.opts = solver::SolveOptions::accurate();
+        let out = coord.solve_blocking(req);
+        assert!(!out.resumed, "incompatible checkpoint must not resume");
+        assert!(out.report.is_ok());
+        use std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(coord.metrics().resumes.load(Relaxed), 0);
+        coord.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn breakdown_escalates_up_the_ladder_when_asked() {
+        // An intentionally hair-trigger watchdog (any check that fails to
+        // improve on the best residual trips it) stands in for a genuine
+        // numerical breakdown: deterministic, and exercises the same
+        // abort-and-climb machinery.
+        let coord = Coordinator::start(CoordinatorConfig {
+            watchdog: crate::robust::WatchdogConfig {
+                stagnation_patience: 1,
+                stagnation_epsilon: 1.0,
+                ..crate::robust::WatchdogConfig::default()
+            },
+            ..CoordinatorConfig::default()
+        });
+        let (x, y, a_true) = planted(452, 120, 12);
+        let mut req = SolveRequest::builder(4, x, y).escalate(true).build();
+        req.backend = SolverKind::Bak;
+        req.opts = solver::SolveOptions::builder()
+            .max_sweeps(50)
+            .tol(0.0)
+            .check_every(1)
+            .build();
+        let out = coord.solve_blocking(req);
+        // BAK trips the watchdog; so does CGLS (it reports residuals
+        // through the same probe). QR is direct — it never touches the
+        // probe and cannot trip — so it answers.
+        assert_eq!(out.escalated_to, Some(SolverKind::Qr));
+        assert_eq!(out.backend, SolverKind::Qr);
+        let rep = out.report.expect("escalated solve answers");
+        assert!(rep.a.iter().all(|v| v.is_finite()));
+        assert!(crate::util::stats::rel_l2(&rep.a, &a_true) < 1e-3);
+        use std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(coord.metrics().escalations.load(Relaxed), 2);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn breakdown_without_escalation_is_a_typed_error() {
+        let dir = temp_journal("breakdown");
+        let coord = Coordinator::start(CoordinatorConfig {
+            watchdog: crate::robust::WatchdogConfig {
+                stagnation_patience: 1,
+                stagnation_epsilon: 1.0,
+                ..crate::robust::WatchdogConfig::default()
+            },
+            // A journal dir so the job takes the guarded path via job_id.
+            journal_dir: Some(dir.clone()),
+            ..CoordinatorConfig::default()
+        });
+        let (x, y, _) = planted(454, 120, 12);
+        let mut req = SolveRequest::builder(5, x, y).job_id("doomed").build();
+        req.backend = SolverKind::Bak;
+        req.opts = solver::SolveOptions::builder()
+            .max_sweeps(50)
+            .tol(0.0)
+            .check_every(1)
+            .build();
+        let out = coord.solve_blocking(req);
+        match out.report {
+            Err(SolverError::NumericalBreakdown { detail, sweeps }) => {
+                assert!(detail.contains("stagnating"), "{detail}");
+                assert!(sweeps >= 1);
+            }
+            other => panic!("expected NumericalBreakdown, got {other:?}"),
+        }
+        assert!(out.escalated_to.is_none());
+        use std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(coord.metrics().escalations.load(Relaxed), 0);
+        coord.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }

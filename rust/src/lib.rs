@@ -299,6 +299,43 @@
 //! The wire protocol itself is versioned (`"v": 1`, `{"cmd":"hello"}`
 //! capability discovery, structured `error_kind: "unsupported"` for
 //! unknown commands/fields) and documented in `PROTOCOL.md`.
+//!
+//! ## Durability & self-healing
+//!
+//! The same probe points that power observability and deadlines also make
+//! solves durable and numerically self-healing (protocol v1.1 — additive
+//! fields, `"v"` stays 1; see `PROTOCOL.md`):
+//!
+//! * **Checkpoint/resume.** A request carrying `"job_id"` on a server
+//!   started with `--journal-dir DIR` is journalled: a
+//!   [`robust::CheckpointProbe`] writes a versioned, CRC-sealed `.ckpt`
+//!   snapshot ([`robust::Checkpoint`]) every `--checkpoint-every` sweeps,
+//!   atomically (temp file + rename). Kill the process mid-solve,
+//!   restart, re-submit the same `job_id`, and the solve warm-starts from
+//!   the snapshot via [`api::Problem::with_warm_state`] — bit-identical
+//!   to an uninterrupted run, because the checkpoint stores the
+//!   maintained residual `e` alongside the iterate `a` instead of
+//!   recomputing it. The reply carries `"resume": true`; a deadline-cut
+//!   durable solve persists its best-so-far state so the retry resumes
+//!   rather than starting over. A checkpoint whose solver, seed, or shape
+//!   does not match is ignored (cold start), and the journal entry is
+//!   removed once the job completes.
+//! * **Chunk integrity.** `.sbck` files are format v2: every chunk is
+//!   sealed with a CRC32 word, verified on every read (sync passes and
+//!   the prefetch pipeline alike). A flipped bit surfaces as
+//!   [`SolverError::CorruptData`] with the chunk index and both CRCs —
+//!   never silently wrong math. v1 files (no checksums) remain readable.
+//!   The `corrupt_chunk_every` fault knob injects exactly this damage so
+//!   CI's `recovery-smoke` job can prove the detection path.
+//! * **Numerical-health watchdog.** A [`robust::Watchdog`] rides the
+//!   probe and trips on NaN/Inf residuals, sustained divergence, or
+//!   stagnation, aborting the solve through its [`robust::CancelToken`].
+//!   Without escalation the job answers
+//!   `{"error_kind": "numerical_breakdown", "detail": ..., "sweeps": N}`;
+//!   with `"escalate": true` the coordinator retries up the backend
+//!   ladder (BAK → CGLS → QR) and the reply names the survivor in
+//!   `"escalated_to"`. Metrics: `escalations`, `checkpoints_written`,
+//!   `resumes`, `corrupt_chunks`.
 
 pub mod util;
 pub mod obs;

@@ -34,6 +34,24 @@ pub trait SolveProbe: Send + Sync {
     /// `residual_norm` is `||y - Xa||` (not squared), `elapsed_ns` is time
     /// since the solve loop started.
     fn on_sweep(&self, sweep: usize, residual_norm: f64, elapsed_ns: u64);
+
+    /// True when this probe wants [`SolveProbe::on_state`] calls. Solvers
+    /// skip borrowing/cloning the iterate entirely when every attached
+    /// probe returns false (the default), so state observation is strictly
+    /// opt-in and existing probes keep their zero extra cost.
+    fn wants_state(&self) -> bool {
+        false
+    }
+
+    /// Full-state observation at a residual check: the iterate `a`, the
+    /// maintained residual `e`, and the squared residual `r2`. Called only
+    /// when [`SolveProbe::wants_state`] is true; used by
+    /// [`crate::robust::checkpoint::CheckpointProbe`] to persist
+    /// resumable state. Implementations must copy out what they need —
+    /// the slices are borrowed from the live solve.
+    fn on_state(&self, sweep: usize, a: &[f32], e: &[f32], r2: f64) {
+        let _ = (sweep, a, e, r2);
+    }
 }
 
 /// A cloneable, optionally-attached probe, carried by value inside
@@ -61,6 +79,14 @@ impl ProbeHandle {
         self.0.is_some()
     }
 
+    /// The attached probe, when one is present. The coordinator uses this
+    /// to fold an already-attached probe (a caller's, or the tracing
+    /// [`RingProbe`]) into a [`MultiProbe`] alongside checkpoint and
+    /// watchdog members instead of silently replacing it.
+    pub fn inner(&self) -> Option<Arc<dyn SolveProbe>> {
+        self.0.clone()
+    }
+
     /// Called by solver loops right after they push `r2` (the squared
     /// residual) into the report history. `t0` is the loop's start
     /// instant; the elapsed time is computed only when a probe is
@@ -69,6 +95,29 @@ impl ProbeHandle {
     pub fn observe(&self, sweep: usize, r2: f64, t0: Instant) {
         if let Some(p) = &self.0 {
             p.on_sweep(sweep, r2.sqrt(), t0.elapsed().as_nanos() as u64);
+        }
+    }
+
+    /// True when an attached probe asked for full-state observation
+    /// ([`SolveProbe::wants_state`]). Disabled handles return false.
+    #[inline]
+    pub fn wants_state(&self) -> bool {
+        match &self.0 {
+            Some(p) => p.wants_state(),
+            None => false,
+        }
+    }
+
+    /// Forward the live iterate to a state-hungry probe. Solvers call
+    /// this at the same residual-check points as [`ProbeHandle::observe`],
+    /// gated on [`ProbeHandle::wants_state`] so the common path pays one
+    /// extra branch and nothing else.
+    #[inline]
+    pub fn observe_state(&self, sweep: usize, a: &[f32], e: &[f32], r2: f64) {
+        if let Some(p) = &self.0 {
+            if p.wants_state() {
+                p.on_state(sweep, a, e, r2);
+            }
         }
     }
 }
@@ -140,6 +189,42 @@ impl SolveProbe for RingProbe {
             }
         }
         g.points.push(TrajectoryPoint { sweep, residual_norm, elapsed_ns });
+    }
+}
+
+/// Fans one probe slot out to several observers: a traced, checkpointed,
+/// watchdog-guarded solve needs a [`RingProbe`], a
+/// [`crate::robust::checkpoint::CheckpointProbe`], and a
+/// [`crate::robust::watchdog::Watchdog`] on the same
+/// [`crate::solver::SolveOptions::probe`] slot. `wants_state` is the OR
+/// of the members', and `on_state` forwards only to members that asked.
+pub struct MultiProbe {
+    members: Vec<Arc<dyn SolveProbe>>,
+}
+
+impl MultiProbe {
+    pub fn new(members: Vec<Arc<dyn SolveProbe>>) -> Arc<Self> {
+        Arc::new(MultiProbe { members })
+    }
+}
+
+impl SolveProbe for MultiProbe {
+    fn on_sweep(&self, sweep: usize, residual_norm: f64, elapsed_ns: u64) {
+        for m in &self.members {
+            m.on_sweep(sweep, residual_norm, elapsed_ns);
+        }
+    }
+
+    fn wants_state(&self) -> bool {
+        self.members.iter().any(|m| m.wants_state())
+    }
+
+    fn on_state(&self, sweep: usize, a: &[f32], e: &[f32], r2: f64) {
+        for m in &self.members {
+            if m.wants_state() {
+                m.on_state(sweep, a, e, r2);
+            }
+        }
     }
 }
 
@@ -343,6 +428,72 @@ mod tests {
         // Must be callable with no probe attached (the solver hot path).
         h.observe(1, 4.0, Instant::now());
         assert_eq!(format!("{h:?}"), "ProbeHandle(off)");
+    }
+
+    #[test]
+    fn state_observation_is_opt_in() {
+        struct StateSink {
+            seen: Mutex<Vec<(usize, Vec<f32>, Vec<f32>)>>,
+        }
+        impl SolveProbe for StateSink {
+            fn on_sweep(&self, _s: usize, _r: f64, _e: u64) {}
+            fn wants_state(&self) -> bool {
+                true
+            }
+            fn on_state(&self, sweep: usize, a: &[f32], e: &[f32], _r2: f64) {
+                self.seen.lock().unwrap().push((sweep, a.to_vec(), e.to_vec()));
+            }
+        }
+        // Default probes (RingProbe) do not want state; disabled handles
+        // never do.
+        assert!(!ProbeHandle::none().wants_state());
+        assert!(!ProbeHandle::new(RingProbe::new(4)).wants_state());
+        let sink = Arc::new(StateSink { seen: Mutex::new(Vec::new()) });
+        let h = ProbeHandle::new(sink.clone());
+        assert!(h.wants_state());
+        h.observe_state(3, &[1.0, 2.0], &[0.5], 0.25);
+        let seen = sink.seen.lock().unwrap();
+        assert_eq!(seen.len(), 1);
+        assert_eq!(seen[0], (3, vec![1.0, 2.0], vec![0.5]));
+    }
+
+    #[test]
+    fn multi_probe_fans_out_and_ors_wants_state() {
+        struct Counter {
+            sweeps: AtomicU64,
+            states: AtomicU64,
+            hungry: bool,
+        }
+        impl SolveProbe for Counter {
+            fn on_sweep(&self, _s: usize, _r: f64, _e: u64) {
+                self.sweeps.fetch_add(1, Ordering::Relaxed);
+            }
+            fn wants_state(&self) -> bool {
+                self.hungry
+            }
+            fn on_state(&self, _s: usize, _a: &[f32], _e: &[f32], _r2: f64) {
+                self.states.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let plain = Arc::new(Counter {
+            sweeps: AtomicU64::new(0),
+            states: AtomicU64::new(0),
+            hungry: false,
+        });
+        let hungry = Arc::new(Counter {
+            sweeps: AtomicU64::new(0),
+            states: AtomicU64::new(0),
+            hungry: true,
+        });
+        let multi = MultiProbe::new(vec![plain.clone(), hungry.clone()]);
+        let h = ProbeHandle::new(multi);
+        assert!(h.wants_state(), "one hungry member makes the fan-out hungry");
+        h.observe(1, 4.0, Instant::now());
+        h.observe_state(1, &[0.0], &[0.0], 0.0);
+        assert_eq!(plain.sweeps.load(Ordering::Relaxed), 1);
+        assert_eq!(hungry.sweeps.load(Ordering::Relaxed), 1);
+        assert_eq!(plain.states.load(Ordering::Relaxed), 0, "non-hungry member skipped");
+        assert_eq!(hungry.states.load(Ordering::Relaxed), 1);
     }
 
     #[test]

@@ -261,6 +261,11 @@ fn bak_par_generic<C: ColAccess>(x: &C, y: &[f32], opts: &SolveOptions) -> Solve
             let r2 = blas1::sum_sq_f64(&e);
             history.push(r2);
             opts.probe.observe(sweeps, r2, t0);
+            if !r2.is_finite() {
+                stop = StopReason::Breakdown;
+                break;
+            }
+            opts.probe.observe_state(sweeps, &a, &e, r2);
             if opts.cancel.is_cancelled() {
                 stop = StopReason::Cancelled;
                 break;
@@ -392,6 +397,11 @@ fn kaczmarz_par_generic<R: RowAccess>(x: &R, y: &[f32], opts: &SolveOptions) -> 
         let r2 = blas1::sum_sq_f64(&e);
         history.push(r2);
         opts.probe.observe(sweeps, r2, t0);
+        if !r2.is_finite() {
+            stop = StopReason::Breakdown;
+            break;
+        }
+        opts.probe.observe_state(sweeps, &a, &e, r2);
         if opts.cancel.is_cancelled() {
             stop = StopReason::Cancelled;
             break;
@@ -498,8 +508,13 @@ fn bak_multi_chunk<C: ColAccess>(
             history[r].push(r2);
             if r == 0 {
                 probe.observe(sweeps_done[r], r2, t0);
+                if r2.is_finite() {
+                    probe.observe_state(sweeps_done[r], &a[r], &e[r], r2);
+                }
             }
-            if opts.tol > 0.0 && r2 <= opts.tol * opts.tol * y_norm_sq[r] {
+            if !r2.is_finite() {
+                done[r] = Some(StopReason::Breakdown);
+            } else if opts.tol > 0.0 && r2 <= opts.tol * opts.tol * y_norm_sq[r] {
                 done[r] = Some(StopReason::Converged);
             } else if r2 >= prev_r2[r] * (1.0 - 1e-9) && sweep > 0 {
                 done[r] = Some(StopReason::Stalled);

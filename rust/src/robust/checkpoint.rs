@@ -1,0 +1,386 @@
+//! Durable solver checkpoints: a versioned on-disk snapshot of an
+//! iterative solve's resumable state, written atomically from the probe
+//! hook so a killed process can warm-start instead of recomputing.
+//!
+//! Two pieces:
+//!
+//! * [`Checkpoint`] — the snapshot itself: job id, solver kind, sweep
+//!   count, seed, the iterate `a` AND the maintained residual `e`, sealed
+//!   with a CRC32 trailer. Storing `e` (instead of recomputing `y - Xa`
+//!   on resume) is what makes a resumed solve bit-identical to an
+//!   uninterrupted one: the incrementally-updated residual drifts from
+//!   the from-scratch product by accumulated f32 rounding, so a
+//!   recomputed residual would fork the trajectory.
+//! * [`CheckpointProbe`] — a [`SolveProbe`] that persists a [`Checkpoint`]
+//!   every `every` sweeps via the opt-in `on_state` hook. Writes are
+//!   atomic (temp file + rename), so a crash mid-write leaves the
+//!   previous checkpoint intact, and write failures are recorded but
+//!   never abort the solve — a full disk must not kill a converging job.
+//!
+//! ## File format (`.ckpt`, version 1, little-endian)
+//!
+//! ```text
+//! offset  size          field
+//! 0       4             magic "PCKP"
+//! 4       1             format version (1)
+//! 5       2             job id length (u16)
+//! 7       j             job id bytes (UTF-8)
+//! 7+j     1             solver kind length (u8)
+//! 8+j     k             solver kind bytes (UTF-8, SolverKind::as_str)
+//! ...     8             sweeps completed (u64)
+//! ...     8             solve seed (u64)
+//! ...     8             vars = len(a) (u64)
+//! ...     8             obs  = len(e) (u64)
+//! ...     vars*4        a, f32 little-endian
+//! ...     obs*4         e, f32 little-endian
+//! ...     4             CRC32 (IEEE) of every preceding byte
+//! ```
+//!
+//! The version byte follows the same policy as `.sbck` (see
+//! CONTRIBUTING.md): readers reject versions they do not know, and any
+//! layout change bumps the byte.
+
+use std::fs;
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::obs::SolveProbe;
+use crate::util::crc32::crc32;
+
+/// First four bytes of every checkpoint file.
+pub const CKPT_MAGIC: [u8; 4] = *b"PCKP";
+
+/// Format version written by this build.
+pub const CKPT_VERSION: u8 = 1;
+
+/// Resumable state of an iterative solve at one residual check.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// Client-supplied idempotency key (the coordinator's journal is
+    /// keyed by it).
+    pub job_id: String,
+    /// Solver kind string ([`crate::api::SolverKind`]`::as_str`), so a
+    /// resume can refuse to splice state into a different algorithm.
+    pub solver: String,
+    /// Sweeps completed when the snapshot was taken.
+    pub sweeps: u64,
+    /// The solve seed (resume must not reshuffle randomized orders).
+    pub seed: u64,
+    /// The iterate.
+    pub a: Vec<f32>,
+    /// The maintained residual `e = y - Xa` as the solver tracked it.
+    pub e: Vec<f32>,
+}
+
+fn bad(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+/// Bounds-checked forward reader over the checkpoint body.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).ok_or_else(|| bad("length overflow"))?;
+        let s = self.buf.get(self.pos..end).ok_or_else(|| bad("checkpoint truncated"))?;
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn f32s(&mut self, n: usize) -> io::Result<Vec<f32>> {
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| bad("length overflow"))?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes")))
+            .collect())
+    }
+}
+
+impl Checkpoint {
+    /// Serialise to the on-disk layout (format docs above).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            4 + 1 + 2 + self.job_id.len() + 1 + self.solver.len() + 32
+                + 4 * (self.a.len() + self.e.len())
+                + 4,
+        );
+        out.extend_from_slice(&CKPT_MAGIC);
+        out.push(CKPT_VERSION);
+        let jid = self.job_id.as_bytes();
+        out.extend_from_slice(&(jid.len().min(u16::MAX as usize) as u16).to_le_bytes());
+        out.extend_from_slice(&jid[..jid.len().min(u16::MAX as usize)]);
+        let kind = self.solver.as_bytes();
+        out.push(kind.len().min(u8::MAX as usize) as u8);
+        out.extend_from_slice(&kind[..kind.len().min(u8::MAX as usize)]);
+        out.extend_from_slice(&self.sweeps.to_le_bytes());
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&(self.a.len() as u64).to_le_bytes());
+        out.extend_from_slice(&(self.e.len() as u64).to_le_bytes());
+        for v in &self.a {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in &self.e {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Parse and verify a serialised checkpoint. Rejects a bad magic, an
+    /// unknown version, a short buffer, and any CRC mismatch.
+    pub fn from_bytes(bytes: &[u8]) -> io::Result<Self> {
+        if bytes.len() < 4 + 1 + 2 + 1 + 32 + 4 {
+            return Err(bad("checkpoint too short"));
+        }
+        let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
+        let stored = u32::from_le_bytes(crc_bytes.try_into().expect("4 bytes"));
+        let actual = crc32(body);
+        if stored != actual {
+            return Err(bad(format!(
+                "checkpoint crc mismatch: stored {stored:#010x}, computed {actual:#010x}"
+            )));
+        }
+        if body[0..4] != CKPT_MAGIC {
+            return Err(bad("not a checkpoint file (bad magic)"));
+        }
+        if body[4] != CKPT_VERSION {
+            return Err(bad(format!("unknown checkpoint version {}", body[4])));
+        }
+        let mut cur = Cursor { buf: body, pos: 5 };
+        let jlen = u16::from_le_bytes(cur.take(2)?.try_into().expect("2 bytes")) as usize;
+        let job_id = String::from_utf8(cur.take(jlen)?.to_vec())
+            .map_err(|_| bad("job id is not UTF-8"))?;
+        let klen = cur.take(1)?[0] as usize;
+        let solver = String::from_utf8(cur.take(klen)?.to_vec())
+            .map_err(|_| bad("solver kind is not UTF-8"))?;
+        let sweeps = cur.u64()?;
+        let seed = cur.u64()?;
+        let vars = cur.u64()? as usize;
+        let obs = cur.u64()? as usize;
+        let a = cur.f32s(vars)?;
+        let e = cur.f32s(obs)?;
+        if cur.pos != body.len() {
+            return Err(bad("checkpoint has trailing bytes"));
+        }
+        Ok(Checkpoint { job_id, solver, sweeps, seed, a, e })
+    }
+
+    /// Write atomically: serialise to `<path>.tmp`, then rename over
+    /// `path`. A crash at any point leaves either the old checkpoint or
+    /// none — never a torn file.
+    pub fn save_atomic(&self, path: &Path) -> io::Result<()> {
+        let mut tmp_name = path.as_os_str().to_os_string();
+        tmp_name.push(".tmp");
+        let tmp = PathBuf::from(tmp_name);
+        {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(&self.to_bytes())?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, path)
+    }
+
+    /// Read and verify a checkpoint file.
+    pub fn load(path: &Path) -> io::Result<Self> {
+        Self::from_bytes(&fs::read(path)?)
+    }
+}
+
+/// A [`SolveProbe`] that persists a [`Checkpoint`] every `every` sweeps.
+///
+/// Attach it (alone or inside a [`crate::obs::MultiProbe`]) to
+/// [`crate::solver::SolveOptions::probe`]; it opts into the state hook
+/// via `wants_state`, so solves without a checkpoint probe pay nothing.
+/// Write failures are swallowed into [`CheckpointProbe::last_error`] —
+/// durability is best-effort and must never abort a healthy solve.
+pub struct CheckpointProbe {
+    path: PathBuf,
+    job_id: String,
+    solver: String,
+    seed: u64,
+    every: usize,
+    written: AtomicU64,
+    last_error: Mutex<Option<String>>,
+}
+
+impl CheckpointProbe {
+    /// Checkpoint to `path` every `every` sweeps (`every` is clamped to
+    /// at least 1).
+    pub fn new(
+        path: impl Into<PathBuf>,
+        job_id: impl Into<String>,
+        solver: impl Into<String>,
+        seed: u64,
+        every: usize,
+    ) -> Arc<Self> {
+        Arc::new(CheckpointProbe {
+            path: path.into(),
+            job_id: job_id.into(),
+            solver: solver.into(),
+            seed,
+            every: every.max(1),
+            written: AtomicU64::new(0),
+            last_error: Mutex::new(None),
+        })
+    }
+
+    /// Checkpoints successfully written so far.
+    pub fn written(&self) -> u64 {
+        self.written.load(Ordering::Relaxed)
+    }
+
+    /// The most recent write failure, if any.
+    pub fn last_error(&self) -> Option<String> {
+        self.last_error.lock().unwrap_or_else(std::sync::PoisonError::into_inner).clone()
+    }
+
+    /// The checkpoint file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl SolveProbe for CheckpointProbe {
+    fn on_sweep(&self, _sweep: usize, _residual_norm: f64, _elapsed_ns: u64) {}
+
+    fn wants_state(&self) -> bool {
+        true
+    }
+
+    fn on_state(&self, sweep: usize, a: &[f32], e: &[f32], r2: f64) {
+        // Solvers only forward finite states, but a checkpoint of garbage
+        // would poison every future resume — re-check here.
+        if !r2.is_finite() || sweep % self.every != 0 {
+            return;
+        }
+        let ck = Checkpoint {
+            job_id: self.job_id.clone(),
+            solver: self.solver.clone(),
+            sweeps: sweep as u64,
+            seed: self.seed,
+            a: a.to_vec(),
+            e: e.to_vec(),
+        };
+        match ck.save_atomic(&self.path) {
+            Ok(()) => {
+                self.written.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(err) => {
+                *self
+                    .last_error
+                    .lock()
+                    .unwrap_or_else(std::sync::PoisonError::into_inner) =
+                    Some(err.to_string());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            job_id: "job-abc".into(),
+            solver: "bak".into(),
+            sweeps: 42,
+            seed: 0x5eed,
+            a: vec![1.0, -2.5, 0.0, 3.25],
+            e: vec![0.5, -0.125, 7.0],
+        }
+    }
+
+    fn temp_ckpt(tag: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!(
+            "pallas_ckpt_{tag}_{}.ckpt",
+            std::process::id()
+        ));
+        p
+    }
+
+    #[test]
+    fn roundtrips_through_bytes_and_disk() {
+        let ck = sample();
+        assert_eq!(Checkpoint::from_bytes(&ck.to_bytes()).unwrap(), ck);
+        let path = temp_ckpt("roundtrip");
+        ck.save_atomic(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), ck);
+        let _ = fs::remove_file(path);
+    }
+
+    #[test]
+    fn any_flipped_byte_is_rejected() {
+        let bytes = sample().to_bytes();
+        // Flip one byte in the payload region and one in the header: both
+        // must fail the CRC before any field is trusted.
+        for idx in [6usize, bytes.len() / 2] {
+            let mut bad = bytes.clone();
+            bad[idx] ^= 0x01;
+            assert!(
+                Checkpoint::from_bytes(&bad).is_err(),
+                "flip at {idx} accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn truncated_and_junk_rejected() {
+        let bytes = sample().to_bytes();
+        assert!(Checkpoint::from_bytes(&bytes[..bytes.len() - 5]).is_err());
+        assert!(Checkpoint::from_bytes(&[]).is_err());
+        assert!(Checkpoint::from_bytes(&[0u8; 64]).is_err());
+        // Wrong version, CRC re-sealed so only the version check can fire.
+        let mut wrong = bytes[..bytes.len() - 4].to_vec();
+        wrong[4] = CKPT_VERSION + 1;
+        let crc = crc32(&wrong);
+        wrong.extend_from_slice(&crc.to_le_bytes());
+        let err = Checkpoint::from_bytes(&wrong).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
+    fn save_atomic_replaces_and_leaves_no_temp() {
+        let path = temp_ckpt("atomic");
+        let mut ck = sample();
+        ck.save_atomic(&path).unwrap();
+        ck.sweeps = 100;
+        ck.save_atomic(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap().sweeps, 100);
+        let mut tmp_name = path.as_os_str().to_os_string();
+        tmp_name.push(".tmp");
+        assert!(!PathBuf::from(tmp_name).exists(), "temp file left behind");
+        let _ = fs::remove_file(path);
+    }
+
+    #[test]
+    fn probe_writes_every_n_and_skips_non_finite() {
+        let path = temp_ckpt("probe");
+        let probe = CheckpointProbe::new(&path, "j1", "bak", 7, 2);
+        assert!(probe.wants_state());
+        probe.on_state(1, &[1.0], &[0.0], 1.0); // 1 % 2 != 0
+        assert_eq!(probe.written(), 0);
+        probe.on_state(2, &[1.0], &[0.0], f64::NAN); // never persist NaN
+        assert_eq!(probe.written(), 0);
+        probe.on_state(2, &[1.5], &[0.25], 1.0);
+        assert_eq!(probe.written(), 1);
+        let ck = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.sweeps, 2);
+        assert_eq!(ck.a, vec![1.5]);
+        assert_eq!(ck.e, vec![0.25]);
+        assert_eq!(ck.seed, 7);
+        assert!(probe.last_error().is_none());
+        let _ = fs::remove_file(path);
+    }
+}

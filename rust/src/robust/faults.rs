@@ -14,6 +14,9 @@
 //! * [`queue_stall`] — coordinator scheduler loop: sleeps before
 //!   dispatching a batch, backing the submit queue up so admission
 //!   control has something to shed.
+//! * [`corrupt_chunk`] — chunk-file reader, after each chunk read: tells
+//!   the reader to flip one payload byte so the `.sbck` v2 per-chunk CRC
+//!   check and the `corrupt_data` error path get exercised end-to-end.
 //!
 //! The disabled state (no plan, or an all-zero plan) costs one relaxed
 //! atomic load per hook — faults never perturb a production solve.
@@ -37,6 +40,10 @@ pub struct FaultPlan {
     pub slow_read_every: u64,
     /// Sleep this long in the scheduler before each dispatch (0 = never).
     pub queue_stall_ms: u64,
+    /// Flip one byte in every Nth chunk read from a `.sbck` file
+    /// (0 = never). Only v2 files detect the flip — that is the point of
+    /// the knob.
+    pub corrupt_chunk_every: u64,
 }
 
 impl FaultPlan {
@@ -58,6 +65,7 @@ impl FaultPlan {
                 "slow_read_ms" => plan.slow_read_ms = n,
                 "slow_read_every" => plan.slow_read_every = n,
                 "queue_stall_ms" => plan.queue_stall_ms = n,
+                "corrupt_chunk_every" => plan.corrupt_chunk_every = n,
                 other => return Err(format!("unknown fault knob '{other}'")),
             }
         }
@@ -74,8 +82,12 @@ impl std::fmt::Display for FaultPlan {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "worker_panic_every={},slow_read_ms={},slow_read_every={},queue_stall_ms={}",
-            self.worker_panic_every, self.slow_read_ms, self.slow_read_every, self.queue_stall_ms
+            "worker_panic_every={},slow_read_ms={},slow_read_every={},queue_stall_ms={},corrupt_chunk_every={}",
+            self.worker_panic_every,
+            self.slow_read_ms,
+            self.slow_read_every,
+            self.queue_stall_ms,
+            self.corrupt_chunk_every
         )
     }
 }
@@ -87,8 +99,10 @@ struct FaultState {
     slow_read_ms: AtomicU64,
     slow_read_every: AtomicU64,
     queue_stall_ms: AtomicU64,
+    corrupt_chunk_every: AtomicU64,
     worker_calls: AtomicU64,
     read_calls: AtomicU64,
+    chunk_calls: AtomicU64,
 }
 
 /// Fast-path switch: hooks bail on one relaxed load when no plan is live.
@@ -101,8 +115,10 @@ fn state() -> &'static FaultState {
         slow_read_ms: AtomicU64::new(0),
         slow_read_every: AtomicU64::new(0),
         queue_stall_ms: AtomicU64::new(0),
+        corrupt_chunk_every: AtomicU64::new(0),
         worker_calls: AtomicU64::new(0),
         read_calls: AtomicU64::new(0),
+        chunk_calls: AtomicU64::new(0),
     })
 }
 
@@ -114,6 +130,7 @@ pub fn install(plan: &FaultPlan) {
     s.slow_read_ms.store(plan.slow_read_ms, Ordering::Relaxed);
     s.slow_read_every.store(plan.slow_read_every, Ordering::Relaxed);
     s.queue_stall_ms.store(plan.queue_stall_ms, Ordering::Relaxed);
+    s.corrupt_chunk_every.store(plan.corrupt_chunk_every, Ordering::Relaxed);
     ENABLED.store(!plan.is_noop(), Ordering::Relaxed);
 }
 
@@ -133,6 +150,7 @@ pub fn current() -> FaultPlan {
         slow_read_ms: s.slow_read_ms.load(Ordering::Relaxed),
         slow_read_every: s.slow_read_every.load(Ordering::Relaxed),
         queue_stall_ms: s.queue_stall_ms.load(Ordering::Relaxed),
+        corrupt_chunk_every: s.corrupt_chunk_every.load(Ordering::Relaxed),
     }
 }
 
@@ -193,6 +211,25 @@ pub fn slow_read_delay() -> Option<Duration> {
     }
 }
 
+/// Chunk-reader hook: true when this chunk read should have one payload
+/// byte flipped (every Nth call when armed). The flip happens in
+/// [`crate::stream::format::FileChunkSource`], after the bytes are read
+/// and before the v2 CRC check, so the corruption is detected exactly
+/// where real bit rot would be.
+#[inline]
+pub fn corrupt_chunk() -> bool {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return false;
+    }
+    let s = state();
+    let every = s.corrupt_chunk_every.load(Ordering::Relaxed);
+    if every == 0 {
+        return false;
+    }
+    let n = s.chunk_calls.fetch_add(1, Ordering::Relaxed) + 1;
+    n % every == 0
+}
+
 /// Scheduler hook: the stall to sleep before dispatching, when armed.
 #[inline]
 pub fn queue_stall() -> Option<Duration> {
@@ -223,12 +260,15 @@ mod tests {
     #[test]
     fn parse_roundtrip_and_defaults() {
         assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::default());
-        let p = FaultPlan::parse("worker_panic_every=7, slow_read_ms=50,slow_read_every=3")
-            .unwrap();
+        let p = FaultPlan::parse(
+            "worker_panic_every=7, slow_read_ms=50,slow_read_every=3,corrupt_chunk_every=4",
+        )
+        .unwrap();
         assert_eq!(p.worker_panic_every, 7);
         assert_eq!(p.slow_read_ms, 50);
         assert_eq!(p.slow_read_every, 3);
         assert_eq!(p.queue_stall_ms, 0);
+        assert_eq!(p.corrupt_chunk_every, 4);
         assert!(!p.is_noop());
         assert_eq!(FaultPlan::parse(&p.to_string()).unwrap(), p);
     }
@@ -262,6 +302,11 @@ mod tests {
         let fired = [slow_read_delay(), slow_read_delay()];
         assert_eq!(fired.iter().flatten().count(), 1, "{fired:?}");
         assert_eq!(fired.iter().flatten().next(), Some(&Duration::from_millis(9)));
+
+        install(&FaultPlan { corrupt_chunk_every: 3, ..FaultPlan::default() });
+        // every=3: exactly one of three consecutive reads is corrupted.
+        let hits = [corrupt_chunk(), corrupt_chunk(), corrupt_chunk()];
+        assert_eq!(hits.iter().filter(|h| **h).count(), 1, "{hits:?}");
 
         let caught = std::panic::catch_unwind(|| {
             install(&FaultPlan { worker_panic_every: 1, ..FaultPlan::default() });

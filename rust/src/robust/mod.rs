@@ -17,15 +17,32 @@
 //!   `retry_after_ms` hint, or — in degraded mode — a reduced-sweep BAK
 //!   answer instead of a rejection.
 //! * [`FaultPlan`] — process-global fault injection (worker panics, slow
-//!   chunk reads in the stream prefetcher, scheduler stalls), configured
-//!   from the `PALLAS_FAULTS` environment variable or the TCP `faults`
-//!   command, so CI's `chaos-smoke` job can prove the two mechanisms
-//!   above actually hold under fire.
+//!   chunk reads in the stream prefetcher, scheduler stalls, chunk
+//!   corruption), configured from the `PALLAS_FAULTS` environment
+//!   variable or the TCP `faults` command, so CI's `chaos-smoke` and
+//!   `recovery-smoke` jobs can prove the mechanisms above actually hold
+//!   under fire.
+//!
+//! The durability layer rides the same probe points:
+//!
+//! * [`Checkpoint`] / [`checkpoint::CheckpointProbe`] — versioned,
+//!   CRC-sealed `.ckpt` snapshots written atomically every N sweeps, so a
+//!   killed solve resumes bit-identically via
+//!   [`crate::api::Problem::with_warm_state`].
+//! * [`Watchdog`] — numerical-health monitoring (NaN/Inf, divergence,
+//!   stagnation) that aborts through a [`CancelToken`] and yields a
+//!   [`watchdog::Verdict`] the coordinator maps to
+//!   `numerical_breakdown` — or, with `"escalate": true`, to a retry on
+//!   the next backend up the ladder.
 
 pub mod cancel;
+pub mod checkpoint;
 pub mod faults;
 pub mod gate;
+pub mod watchdog;
 
 pub use cancel::CancelToken;
+pub use checkpoint::{Checkpoint, CheckpointProbe};
 pub use faults::FaultPlan;
 pub use gate::{AdmissionGate, Permit};
+pub use watchdog::{Watchdog, WatchdogConfig};

@@ -1,0 +1,308 @@
+//! Numerical-health watchdog: a [`SolveProbe`] that watches the residual
+//! trajectory for NaN/Inf, sustained divergence, and (optionally)
+//! stagnation, and aborts the solve through a [`CancelToken`] the moment
+//! a pathology is confirmed — instead of burning the remaining sweep
+//! budget iterating on garbage.
+//!
+//! The watchdog does not return errors itself (probes have no error
+//! channel). It cancels the token it guards and records a [`Verdict`];
+//! after the solve, the caller checks [`Watchdog::verdict`] to tell a
+//! watchdog abort apart from a genuine deadline hit — both surface as
+//! `StopReason::Cancelled` — and maps it to
+//! [`SolverError::NumericalBreakdown`]. The coordinator does exactly
+//! this, and with `"escalate": true` re-routes the job down the backend
+//! ladder (BAK → CGLS → QR) instead of failing it.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::api::SolverError;
+use crate::obs::SolveProbe;
+use crate::robust::CancelToken;
+
+/// Detection thresholds. The defaults are deliberately conservative:
+/// coordinate descent's residual is near-monotone, so five consecutive
+/// increases that end an order of magnitude above the best seen is a
+/// clear pathology, not noise.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WatchdogConfig {
+    /// Consecutive residual increases before divergence is declared.
+    pub divergence_patience: usize,
+    /// The residual must also exceed `best * divergence_factor` for the
+    /// divergence verdict to fire (filters benign plateau wiggle).
+    pub divergence_factor: f64,
+    /// Checks without meaningful improvement before stagnation is
+    /// declared; 0 disables stagnation detection (the default — solvers
+    /// already stop on their own `thr` stall counter, so this knob is for
+    /// callers that disabled it).
+    pub stagnation_patience: usize,
+    /// Relative improvement below which a check counts as stagnant.
+    pub stagnation_epsilon: f64,
+}
+
+impl Default for WatchdogConfig {
+    fn default() -> Self {
+        WatchdogConfig {
+            divergence_patience: 5,
+            divergence_factor: 10.0,
+            stagnation_patience: 0,
+            stagnation_epsilon: 1e-6,
+        }
+    }
+}
+
+/// What the watchdog concluded about the solve.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Verdict {
+    /// No pathology observed.
+    Healthy,
+    /// The watchdog aborted the solve.
+    Breakdown {
+        /// Human-readable reason ("residual is NaN", "diverging: …").
+        detail: String,
+        /// Sweep count at the abort.
+        sweeps: usize,
+    },
+}
+
+impl Verdict {
+    /// The typed error for a breakdown verdict (None when healthy).
+    pub fn to_error(&self) -> Option<SolverError> {
+        match self {
+            Verdict::Healthy => None,
+            Verdict::Breakdown { detail, sweeps } => Some(SolverError::NumericalBreakdown {
+                detail: detail.clone(),
+                sweeps: *sweeps,
+            }),
+        }
+    }
+}
+
+struct WdState {
+    best: f64,
+    prev: f64,
+    rising: usize,
+    stagnant: usize,
+    verdict: Verdict,
+}
+
+/// The watchdog probe. Attach via [`Watchdog::probe`] (alone or inside a
+/// [`crate::obs::MultiProbe`]) and put [`Watchdog::cancel_token`] into
+/// [`crate::solver::SolveOptions::cancel`]; after the solve, check
+/// [`Watchdog::verdict`].
+pub struct Watchdog {
+    cfg: WatchdogConfig,
+    cancel: CancelToken,
+    tripped: AtomicBool,
+    state: Mutex<WdState>,
+}
+
+impl Watchdog {
+    /// A watchdog guarding a fresh manual [`CancelToken`].
+    pub fn new(cfg: WatchdogConfig) -> Arc<Self> {
+        Self::guarding(cfg, CancelToken::manual())
+    }
+
+    /// A watchdog that cancels an existing armed token — use this when
+    /// the job already carries a deadline token, so one token serves
+    /// both; [`Watchdog::tripped`] disambiguates afterwards.
+    pub fn guarding(cfg: WatchdogConfig, cancel: CancelToken) -> Arc<Self> {
+        Arc::new(Watchdog {
+            cfg,
+            cancel,
+            tripped: AtomicBool::new(false),
+            state: Mutex::new(WdState {
+                best: f64::INFINITY,
+                prev: f64::INFINITY,
+                rising: 0,
+                stagnant: 0,
+                verdict: Verdict::Healthy,
+            }),
+        })
+    }
+
+    /// The token this watchdog cancels on breakdown (clone it into
+    /// [`crate::solver::SolveOptions::cancel`]).
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+
+    /// This watchdog as a probe member.
+    pub fn probe(self: &Arc<Self>) -> Arc<dyn SolveProbe> {
+        self.clone()
+    }
+
+    /// True once the watchdog aborted the solve. Check this before
+    /// attributing a `StopReason::Cancelled` to the deadline.
+    pub fn tripped(&self) -> bool {
+        self.tripped.load(Ordering::Relaxed)
+    }
+
+    /// The verdict so far.
+    pub fn verdict(&self) -> Verdict {
+        self.state
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .verdict
+            .clone()
+    }
+
+    fn trip(&self, g: &mut WdState, detail: String, sweeps: usize) {
+        g.verdict = Verdict::Breakdown { detail, sweeps };
+        self.tripped.store(true, Ordering::Relaxed);
+        self.cancel.cancel();
+    }
+}
+
+impl SolveProbe for Watchdog {
+    fn on_sweep(&self, sweep: usize, residual_norm: f64, _elapsed_ns: u64) {
+        if self.tripped.load(Ordering::Relaxed) {
+            return;
+        }
+        let mut g = self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        if !residual_norm.is_finite() {
+            self.trip(&mut g, "residual is NaN/Inf".into(), sweep);
+            return;
+        }
+        if residual_norm > g.prev {
+            g.rising += 1;
+            if g.rising >= self.cfg.divergence_patience
+                && residual_norm > g.best * self.cfg.divergence_factor
+            {
+                let detail = format!(
+                    "diverging: residual {residual_norm:.3e} rose {} checks in a row \
+                     ({}x the best seen {:.3e})",
+                    g.rising,
+                    self.cfg.divergence_factor,
+                    g.best
+                );
+                self.trip(&mut g, detail, sweep);
+                return;
+            }
+        } else {
+            g.rising = 0;
+        }
+        if self.cfg.stagnation_patience > 0 {
+            if residual_norm > g.best * (1.0 - self.cfg.stagnation_epsilon) {
+                g.stagnant += 1;
+                if g.stagnant >= self.cfg.stagnation_patience {
+                    let detail = format!(
+                        "stagnating: no {:.1e} relative improvement in {} checks \
+                         (best {:.3e})",
+                        self.cfg.stagnation_epsilon, g.stagnant, g.best
+                    );
+                    self.trip(&mut g, detail, sweep);
+                    return;
+                }
+            } else {
+                g.stagnant = 0;
+            }
+        }
+        g.prev = residual_norm;
+        g.best = g.best.min(residual_norm);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_convergence_never_trips() {
+        let wd = Watchdog::new(WatchdogConfig::default());
+        for k in 1..=100usize {
+            wd.on_sweep(k, 1.0 / k as f64, 0);
+        }
+        assert!(!wd.tripped());
+        assert_eq!(wd.verdict(), Verdict::Healthy);
+        assert!(!wd.cancel_token().is_cancelled());
+        assert!(wd.verdict().to_error().is_none());
+    }
+
+    #[test]
+    fn nan_residual_trips_immediately() {
+        let wd = Watchdog::new(WatchdogConfig::default());
+        wd.on_sweep(1, 4.0, 0);
+        wd.on_sweep(2, f64::NAN, 0);
+        assert!(wd.tripped());
+        assert!(wd.cancel_token().is_cancelled());
+        match wd.verdict() {
+            Verdict::Breakdown { detail, sweeps } => {
+                assert_eq!(sweeps, 2);
+                assert!(detail.contains("NaN"), "{detail}");
+            }
+            v => panic!("expected breakdown, got {v:?}"),
+        }
+        // Verdict is sticky: later healthy observations don't erase it.
+        wd.on_sweep(3, 0.1, 0);
+        assert!(wd.tripped());
+    }
+
+    #[test]
+    fn sustained_divergence_trips_but_wiggle_does_not() {
+        let cfg = WatchdogConfig::default();
+        // Benign wiggle: rises never sustained for `patience` checks.
+        let wd = Watchdog::new(cfg);
+        for k in 1..=50usize {
+            let base = 1.0 / k as f64;
+            wd.on_sweep(k, if k % 3 == 0 { base * 1.5 } else { base }, 0);
+        }
+        assert!(!wd.tripped(), "wiggle misdiagnosed as divergence");
+
+        // Geometric blow-up: trips once patience and factor are both met.
+        let wd = Watchdog::new(cfg);
+        wd.on_sweep(1, 1.0, 0);
+        let mut r = 1.0;
+        let mut tripped_at = None;
+        for k in 2..=20usize {
+            r *= 2.0;
+            wd.on_sweep(k, r, 0);
+            if wd.tripped() {
+                tripped_at = Some(k);
+                break;
+            }
+        }
+        let at = tripped_at.expect("divergence never tripped");
+        assert!(at >= 1 + cfg.divergence_patience, "tripped too eagerly at {at}");
+        let err = wd.verdict().to_error().expect("breakdown error");
+        assert!(matches!(err, SolverError::NumericalBreakdown { .. }), "{err}");
+    }
+
+    #[test]
+    fn stagnation_is_opt_in() {
+        // Default config: a flat residual forever never trips.
+        let wd = Watchdog::new(WatchdogConfig::default());
+        for k in 1..=200usize {
+            wd.on_sweep(k, 0.5, 0);
+        }
+        assert!(!wd.tripped());
+
+        // Opted in: a flat residual trips after the patience window.
+        let wd = Watchdog::new(WatchdogConfig {
+            stagnation_patience: 10,
+            ..WatchdogConfig::default()
+        });
+        for k in 1..=200usize {
+            wd.on_sweep(k, 0.5, 0);
+            if wd.tripped() {
+                break;
+            }
+        }
+        assert!(wd.tripped());
+        match wd.verdict() {
+            Verdict::Breakdown { detail, .. } => {
+                assert!(detail.contains("stagnating"), "{detail}")
+            }
+            v => panic!("expected breakdown, got {v:?}"),
+        }
+    }
+
+    #[test]
+    fn guarding_shares_the_callers_token() {
+        let token = CancelToken::manual();
+        let wd = Watchdog::guarding(WatchdogConfig::default(), token.clone());
+        wd.on_sweep(1, f64::INFINITY, 0);
+        assert!(token.is_cancelled(), "caller's token not cancelled");
+        assert!(wd.tripped());
+    }
+}

@@ -76,6 +76,11 @@ pub fn solve_bak_warm(
             let r2 = blas1::sum_sq_f64(e);
             history.push(r2);
             opts.probe.observe(sweeps, r2, t0);
+            if !r2.is_finite() {
+                stop = StopReason::Breakdown;
+                break;
+            }
+            opts.probe.observe_state(sweeps, a, e, r2);
             if opts.cancel.is_cancelled() {
                 stop = StopReason::Cancelled;
                 break;
@@ -313,6 +318,18 @@ mod tests {
         let rep2 = solve_bak(&x, &y, &armed);
         assert_eq!(rep.a, rep2.a, "un-expired token is bit-identical");
         assert_eq!(rep2.stop, StopReason::MaxSweeps);
+    }
+
+    #[test]
+    fn poisoned_input_breaks_down_within_one_check() {
+        let (x, mut y, _) = planted(117, 100, 20);
+        y[3] = f32::NAN;
+        let mut o = SolveOptions::default();
+        o.tol = 0.0;
+        o.max_sweeps = 10_000;
+        let rep = solve_bak(&x, &y, &o);
+        assert_eq!(rep.stop, StopReason::Breakdown);
+        assert_eq!(rep.sweeps, 1, "NaN must surface at the first check, not max_sweeps");
     }
 
     #[test]

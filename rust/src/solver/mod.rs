@@ -184,6 +184,11 @@ pub enum StopReason {
     /// Stopped early by a [`crate::robust::CancelToken`] (deadline expiry
     /// or explicit cancellation); `a`/`e` hold the best-so-far state.
     Cancelled,
+    /// The residual norm became NaN/Inf — the iterate is numerical
+    /// garbage (poisoned input or f32 overflow). Surfaced within one
+    /// residual check instead of iterating to `max_sweeps`; callers map
+    /// it to [`crate::api::SolverError::NumericalBreakdown`].
+    Breakdown,
 }
 
 /// Solve outcome: coefficients, final residual, and the per-sweep history.

@@ -100,6 +100,11 @@ pub fn solve_kaczmarz(x: &Mat, y: &[f32], opts: &SolveOptions) -> SolveReport {
         let r2 = blas1::sum_sq_f64(&e);
         history.push(r2);
         opts.probe.observe(sweeps, r2, t0);
+        if !r2.is_finite() {
+            stop = StopReason::Breakdown;
+            break;
+        }
+        opts.probe.observe_state(sweeps, &a, &e, r2);
         if opts.cancel.is_cancelled() {
             stop = StopReason::Cancelled;
             break;
@@ -161,6 +166,11 @@ pub fn solve_gauss_southwell(x: &Mat, y: &[f32], opts: &SolveOptions) -> SolveRe
         let r2 = blas1::sum_sq_f64(&e);
         history.push(r2);
         opts.probe.observe(sweeps, r2, t0);
+        if !r2.is_finite() {
+            stop = StopReason::Breakdown;
+            break;
+        }
+        opts.probe.observe_state(sweeps, &a, &e, r2);
         if opts.cancel.is_cancelled() {
             stop = StopReason::Cancelled;
             break;
@@ -222,6 +232,11 @@ pub fn solve_bakp_damped(
         let r2 = blas1::sum_sq_f64(&e);
         history.push(r2);
         opts.probe.observe(sweeps, r2, t0);
+        if !r2.is_finite() {
+            stop = StopReason::Breakdown;
+            break;
+        }
+        opts.probe.observe_state(sweeps, &a, &e, r2);
         if opts.cancel.is_cancelled() {
             stop = StopReason::Cancelled;
             break;
@@ -289,8 +304,13 @@ pub fn solve_bak_multi(x: &Mat, ys: &[Vec<f32>], opts: &SolveOptions) -> Vec<Sol
                 // Multi-RHS solves report the first system's trajectory
                 // (members of a coalesced batch share the matrix walk).
                 opts.probe.observe(sweeps_done[r], r2, t0);
+                if r2.is_finite() {
+                    opts.probe.observe_state(sweeps_done[r], &a[r], &e[r], r2);
+                }
             }
-            if opts.tol > 0.0 && r2 <= opts.tol * opts.tol * y_norm_sq[r] {
+            if !r2.is_finite() {
+                done[r] = Some(StopReason::Breakdown);
+            } else if opts.tol > 0.0 && r2 <= opts.tol * opts.tol * y_norm_sq[r] {
                 done[r] = Some(StopReason::Converged);
             } else if r2 >= prev_r2[r] * (1.0 - 1e-9) && sweep > 0 {
                 done[r] = Some(StopReason::Stalled);

@@ -91,6 +91,11 @@ pub fn solve_bak_csc_warm(
             let r2 = blas1::sum_sq_f64(e);
             history.push(r2);
             opts.probe.observe(sweeps, r2, t0);
+            if !r2.is_finite() {
+                stop = StopReason::Breakdown;
+                break;
+            }
+            opts.probe.observe_state(sweeps, a, e, r2);
             if opts.cancel.is_cancelled() {
                 stop = StopReason::Cancelled;
                 break;
@@ -163,6 +168,11 @@ pub fn solve_bakp_csc(x: &CscMat, y: &[f32], opts: &SolveOptions) -> SolveReport
             let r2 = blas1::sum_sq_f64(&e);
             history.push(r2);
             opts.probe.observe(sweeps, r2, t0);
+            if !r2.is_finite() {
+                stop = StopReason::Breakdown;
+                break;
+            }
+            opts.probe.observe_state(sweeps, &a, &e, r2);
             if opts.cancel.is_cancelled() {
                 stop = StopReason::Cancelled;
                 break;
@@ -241,6 +251,11 @@ pub fn solve_kaczmarz_csr(x: &CsrMat, y: &[f32], opts: &SolveOptions) -> SolveRe
         let r2 = blas1::sum_sq_f64(&e);
         history.push(r2);
         opts.probe.observe(sweeps, r2, t0);
+        if !r2.is_finite() {
+            stop = StopReason::Breakdown;
+            break;
+        }
+        opts.probe.observe_state(sweeps, &a, &e, r2);
         if opts.cancel.is_cancelled() {
             stop = StopReason::Cancelled;
             break;

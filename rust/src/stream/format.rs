@@ -4,20 +4,27 @@
 //!
 //! ```text
 //! offset  0: magic  b"SBCK"                  (4 bytes)
-//! offset  4: format version                  (1 byte, currently 1)
+//! offset  4: format version                  (1 byte, currently 2)
 //! offset  5: reserved zero padding           (3 bytes)
 //! offset  8: rows       u64
 //! offset 16: cols       u64
 //! offset 24: chunk_cols u64   (columns per chunk; last chunk may be narrower)
-//! offset 32: payload — rows*cols f32 values, column-major, i.e. the exact
-//!            byte image of [`Mat::as_slice`] split into groups of
-//!            `chunk_cols` consecutive whole columns
+//! offset 32: payload — per chunk: rows*width f32 values, column-major (the
+//!            exact byte image of [`Mat::as_slice`] for those columns),
+//!            followed (v2) by the CRC32 (u32 LE) of that chunk's payload
+//!            bytes
 //! ```
 //!
 //! Whole-column chunks are the point: a chunk-resident column is the same
 //! contiguous `&[f32]` slice the in-memory solvers feed to
 //! [`crate::linalg::blas1`], so the streamed inner steps replay the
 //! identical f32 operations (see [`super::solve`]).
+//!
+//! Version history: v1 had no per-chunk checksum; v2 appends a CRC32
+//! integrity word after every chunk, verified on every read (sync passes
+//! and the prefetch pipeline alike) so a flipped bit surfaces as a typed
+//! corruption error instead of silently wrong math. Readers accept v1 for
+//! compatibility — v1 chunks are simply not checksummed.
 //!
 //! The version byte is the compatibility contract: readers reject any
 //! version they do not know (see CONTRIBUTING.md); bump it on any layout
@@ -32,8 +39,10 @@ use crate::sparse::CscMat;
 
 /// File magic: "SolveBak ChunKs".
 pub const MAGIC: [u8; 4] = *b"SBCK";
-/// Current format version (the byte at offset 4).
-pub const FORMAT_VERSION: u8 = 1;
+/// Current format version (the byte at offset 4). v2 = per-chunk CRC32.
+pub const FORMAT_VERSION: u8 = 2;
+/// Oldest format version readers still accept (v1 = no chunk checksums).
+pub const MIN_FORMAT_VERSION: u8 = 1;
 /// Header length in bytes; the payload starts here.
 pub const HEADER_LEN: u64 = 32;
 /// Default buffer-pool byte budget when the caller does not set one.
@@ -50,6 +59,32 @@ pub fn default_chunk_cols(rows: usize, cols: usize) -> usize {
 fn invalid(msg: String) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, msg)
 }
+
+/// A chunk whose stored CRC32 does not match its payload. Travels as the
+/// inner error of an `InvalidData` [`io::Error`] through the prefetch
+/// pipeline; [`super::solve`] downcasts it back out to produce the typed
+/// `SolverError::CorruptData` the wire protocol reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CorruptChunk {
+    /// Zero-based chunk index.
+    pub chunk: usize,
+    /// CRC32 stored in the file.
+    pub expected: u32,
+    /// CRC32 computed over the bytes actually read.
+    pub actual: u32,
+}
+
+impl std::fmt::Display for CorruptChunk {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "chunk {} corrupt: stored crc32 {:#010x}, computed {:#010x}",
+            self.chunk, self.expected, self.actual
+        )
+    }
+}
+
+impl std::error::Error for CorruptChunk {}
 
 fn write_header(w: &mut impl Write, rows: usize, cols: usize, chunk_cols: usize) -> io::Result<()> {
     w.write_all(&MAGIC)?;
@@ -87,6 +122,9 @@ pub fn write_chunked_with(
             bytes.extend_from_slice(&v.to_le_bytes());
         }
         w.write_all(&bytes)?;
+        // v2: per-chunk integrity word, CRC32 of the payload bytes just
+        // written.
+        w.write_all(&crate::util::crc32::crc32(&bytes).to_le_bytes())?;
         j0 += width;
     }
     w.flush()
@@ -145,6 +183,8 @@ pub struct StreamedMatrix {
     rows: usize,
     cols: usize,
     chunk_cols: usize,
+    /// On-disk format version ([`MIN_FORMAT_VERSION`]..=[`FORMAT_VERSION`]).
+    version: u8,
     /// Buffer-pool byte budget; 0 means [`DEFAULT_MEM_BUDGET`].
     mem_budget: usize,
 }
@@ -160,11 +200,11 @@ impl StreamedMatrix {
         if header[..4] != MAGIC {
             return Err(invalid(format!("{}: not a chunked matrix (bad magic)", path.display())));
         }
-        if header[4] != FORMAT_VERSION {
+        let version = header[4];
+        if !(MIN_FORMAT_VERSION..=FORMAT_VERSION).contains(&version) {
             return Err(invalid(format!(
-                "{}: unsupported chunk format version {} (expected {FORMAT_VERSION})",
-                path.display(),
-                header[4]
+                "{}: unsupported chunk format version {version} (expected {MIN_FORMAT_VERSION}..={FORMAT_VERSION})",
+                path.display()
             )));
         }
         let u64_at = |o: usize| u64::from_le_bytes(header[o..o + 8].try_into().unwrap());
@@ -172,7 +212,12 @@ impl StreamedMatrix {
         if cols > 0 && chunk_cols == 0 {
             return Err(invalid(format!("{}: chunk_cols must be >= 1", path.display())));
         }
-        let want = HEADER_LEN + (rows * cols * 4) as u64;
+        let num_chunks =
+            if cols == 0 { 0u64 } else { cols.div_ceil(chunk_cols.max(1)) as u64 };
+        // v2 appends a 4-byte CRC32 after every chunk; v1 is bare payload.
+        let want = HEADER_LEN
+            + (rows * cols * 4) as u64
+            + if version >= 2 { num_chunks * 4 } else { 0 };
         let got = f.metadata()?.len();
         if got != want {
             return Err(invalid(format!(
@@ -180,7 +225,7 @@ impl StreamedMatrix {
                 path.display()
             )));
         }
-        Ok(Self { path, rows, cols, chunk_cols: chunk_cols.max(1), mem_budget: 0 })
+        Ok(Self { path, rows, cols, chunk_cols: chunk_cols.max(1), version, mem_budget: 0 })
     }
 
     /// Set the buffer-pool byte budget (0 restores the default).
@@ -213,6 +258,13 @@ impl StreamedMatrix {
     #[inline]
     pub fn chunk_cols(&self) -> usize {
         self.chunk_cols
+    }
+
+    /// On-disk format version byte (1 = no chunk checksums, 2 = CRC32 per
+    /// chunk).
+    #[inline]
+    pub fn version(&self) -> u8 {
+        self.version
     }
 
     /// Number of chunks; `cols` is never padded, so an exact divisor means
@@ -337,6 +389,7 @@ pub struct FileChunkSource {
     rows: usize,
     cols: usize,
     chunk_cols: usize,
+    version: u8,
     /// Reused raw-byte scratch for one chunk.
     scratch: Vec<u8>,
 }
@@ -348,6 +401,7 @@ impl FileChunkSource {
             rows: m.rows(),
             cols: m.cols(),
             chunk_cols: m.chunk_cols(),
+            version: m.version(),
             scratch: Vec::new(),
         })
     }
@@ -372,9 +426,32 @@ impl ChunkSource for FileChunkSource {
         let width = self.chunk_cols.min(self.cols - start_col);
         let nbytes = self.rows * width * 4;
         self.scratch.resize(nbytes, 0);
+        // v2 files carry 4 CRC bytes after every chunk, so chunk c's
+        // payload starts 4*c bytes later than the bare v1 layout.
+        let crc_skew = if self.version >= 2 { (c * 4) as u64 } else { 0 };
         self.file
-            .seek(SeekFrom::Start(HEADER_LEN + (start_col * self.rows * 4) as u64))?;
+            .seek(SeekFrom::Start(HEADER_LEN + (start_col * self.rows * 4) as u64 + crc_skew))?;
         self.file.read_exact(&mut self.scratch)?;
+        // Chaos hook: flip one payload byte after the read, before the CRC
+        // check — exactly the corruption v2's integrity word exists to
+        // catch (v1 files, having no checksum, pass it through silently).
+        if crate::robust::faults::corrupt_chunk() {
+            if let Some(b) = self.scratch.get_mut(nbytes / 2) {
+                *b ^= 0x40;
+            }
+        }
+        if self.version >= 2 {
+            let mut crc_bytes = [0u8; 4];
+            self.file.read_exact(&mut crc_bytes)?;
+            let expected = u32::from_le_bytes(crc_bytes);
+            let actual = crate::util::crc32::crc32(&self.scratch);
+            if actual != expected {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    CorruptChunk { chunk: c, expected, actual },
+                ));
+            }
+        }
         buf.clear();
         buf.reserve(self.rows * width);
         buf.extend(
@@ -519,6 +596,65 @@ mod tests {
 
         std::fs::write(&path, &good[..8]).unwrap();
         assert!(StreamedMatrix::open(&path).is_err(), "truncated header accepted");
+        let _ = std::fs::remove_file(path);
+    }
+
+    /// Hand-roll the legacy v1 layout: version byte 1, bare column-major
+    /// payload, no per-chunk CRC words.
+    fn write_v1_file(x: &Mat, chunk_cols: usize, path: &Path) {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bytes.extend_from_slice(&[1u8, 0, 0, 0]);
+        bytes.extend_from_slice(&(x.rows() as u64).to_le_bytes());
+        bytes.extend_from_slice(&(x.cols() as u64).to_le_bytes());
+        bytes.extend_from_slice(&(chunk_cols as u64).to_le_bytes());
+        for &v in x.as_slice() {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(path, bytes).unwrap();
+    }
+
+    #[test]
+    fn v1_files_still_readable_after_v2_bump() {
+        let x = randmat(42, 9, 7);
+        let path = temp_chunk_path("v1compat");
+        write_v1_file(&x, 3, &path);
+        let m = StreamedMatrix::open(&path).unwrap();
+        assert_eq!(m.version(), 1);
+        assert_eq!(m.shape(), (9, 7));
+        assert_eq!(m.to_mat().unwrap(), x, "v1 payload reads back exactly");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn fresh_files_are_v2_with_per_chunk_crc() {
+        let (x, m, path) = roundtrip(8, 6, 2);
+        assert_eq!(m.version(), FORMAT_VERSION);
+        assert_eq!(m.to_mat().unwrap(), x);
+        // Length accounts for one CRC word per chunk.
+        let got = std::fs::metadata(&path).unwrap().len();
+        assert_eq!(got, HEADER_LEN + (8 * 6 * 4) + 3 * 4);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn flipped_byte_in_v2_chunk_detected_as_corrupt() {
+        let (_, m, path) = roundtrip(8, 6, 2);
+        drop(m);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // One bit inside chunk 1's payload (chunk 0 = 8*2 f32 + its CRC).
+        let off = HEADER_LEN as usize + (8 * 2 * 4) + 4 + 3;
+        bytes[off] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let m = StreamedMatrix::open(&path).unwrap(); // length still valid
+        let err = m.to_mat().unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        let c = err
+            .get_ref()
+            .and_then(|i| i.downcast_ref::<CorruptChunk>())
+            .expect("inner error must be CorruptChunk");
+        assert_eq!(c.chunk, 1);
+        assert_ne!(c.expected, c.actual);
         let _ = std::fs::remove_file(path);
     }
 

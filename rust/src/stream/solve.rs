@@ -49,12 +49,28 @@ pub struct StreamMultiReport {
 }
 
 fn reader_err(stream: &ChunkStream) -> SolverError {
-    SolverError::Backend {
-        backend: "stream".into(),
-        reason: stream
-            .take_error()
-            .map(|e| format!("chunk read failed: {e}"))
-            .unwrap_or_else(|| "chunk reader terminated".into()),
+    match stream.take_error() {
+        Some(e) => {
+            // A failed chunk CRC travels as a CorruptChunk payload inside
+            // the io::Error; surface it as the typed wire-visible variant
+            // instead of an opaque backend failure.
+            if let Some(c) = e.get_ref().and_then(|i| i.downcast_ref::<super::format::CorruptChunk>())
+            {
+                return SolverError::CorruptData {
+                    chunk: c.chunk,
+                    expected: c.expected,
+                    actual: c.actual,
+                };
+            }
+            SolverError::Backend {
+                backend: "stream".into(),
+                reason: format!("chunk read failed: {e}"),
+            }
+        }
+        None => SolverError::Backend {
+            backend: "stream".into(),
+            reason: "chunk reader terminated".into(),
+        },
     }
 }
 
@@ -121,12 +137,36 @@ pub fn solve_bak_stream(
     opts: &SolveOptions,
 ) -> Result<StreamReport, SolverError> {
     validate(x, y, opts)?;
+    solve_bak_stream_warm(x, y, vec![0.0f32; x.cols()], y.to_vec(), opts)
+}
+
+/// Warm-start variant of [`solve_bak_stream`]: continues from a
+/// caller-provided iterate and residual — the checkpoint/resume path. The
+/// caller must guarantee `e0 == y - X a0`; the residual is carried
+/// explicitly (never recomputed from `a0`) so a resumed run replays the
+/// exact f32 state of the interrupted one and stays bit-identical to an
+/// uninterrupted solve.
+pub fn solve_bak_stream_warm(
+    x: &StreamedMatrix,
+    y: &[f32],
+    a0: Vec<f32>,
+    e0: Vec<f32>,
+    opts: &SolveOptions,
+) -> Result<StreamReport, SolverError> {
+    validate(x, y, opts)?;
     let (rows, vars) = x.shape();
+    if a0.len() != vars || e0.len() != rows {
+        return Err(SolverError::Shape(format!(
+            "warm state ({} coeffs, {} residuals) does not match streamed matrix {rows}x{vars}",
+            a0.len(),
+            e0.len()
+        )));
+    }
     let stream = start_stream(x)?;
     let cninv = streamed_colnorms_inv(&stream, vars)?;
 
-    let mut a = vec![0.0f32; vars];
-    let mut e = y.to_vec();
+    let mut a = a0;
+    let mut e = e0;
     let y_norm_sq = blas1::sum_sq_f64(y);
     let tol_sq = opts.tol * opts.tol * y_norm_sq;
     let mut history = Vec::with_capacity(opts.max_sweeps.min(1024));
@@ -153,6 +193,11 @@ pub fn solve_bak_stream(
             let r2 = blas1::sum_sq_f64(&e);
             history.push(r2);
             opts.probe.observe(sweeps, r2, t0);
+            if !r2.is_finite() {
+                stop = StopReason::Breakdown;
+                break;
+            }
+            opts.probe.observe_state(sweeps, &a, &e, r2);
             if opts.cancel.is_cancelled() {
                 stop = StopReason::Cancelled;
                 break;
@@ -237,8 +282,13 @@ pub fn solve_bak_multi_stream(
                 // Like the in-memory multi-RHS solver: the probe follows the
                 // first system's trajectory.
                 opts.probe.observe(sweeps_done[r], r2, t0);
+                if r2.is_finite() {
+                    opts.probe.observe_state(sweeps_done[r], &a[r], &e[r], r2);
+                }
             }
-            if opts.tol > 0.0 && r2 <= opts.tol * opts.tol * y_norm_sq[r] {
+            if !r2.is_finite() {
+                done[r] = Some(StopReason::Breakdown);
+            } else if opts.tol > 0.0 && r2 <= opts.tol * opts.tol * y_norm_sq[r] {
                 done[r] = Some(StopReason::Converged);
             } else if r2 >= prev_r2[r] * (1.0 - 1e-9) && sweep > 0 {
                 done[r] = Some(StopReason::Stalled);
@@ -410,6 +460,11 @@ pub fn solve_kaczmarz_stream(
         let r2 = blas1::sum_sq_f64(&e);
         history.push(r2);
         opts.probe.observe(sweeps, r2, t0);
+        if !r2.is_finite() {
+            stop = StopReason::Breakdown;
+            break;
+        }
+        opts.probe.observe_state(sweeps, &a, &e, r2);
         if opts.cancel.is_cancelled() {
             stop = StopReason::Cancelled;
             break;

@@ -77,28 +77,24 @@ pub fn mib(bytes: u64) -> f64 {
 }
 
 /// Peak resident set size of this process in bytes: the `VmHWM` high-water
-/// mark from `/proc/self/status` on Linux, 0 elsewhere (callers treat 0 as
-/// "unavailable"). This is the number the out-of-core benches and the CI
-/// `stream-smoke` budget check record — unlike the allocation counters
-/// above it captures what the OS actually had resident, including the
-/// streaming chunk buffers.
-pub fn peak_rss_bytes() -> u64 {
+/// mark from `/proc/self/status` on Linux. Returns `None` when the metric
+/// is unavailable — non-Linux platforms, an unreadable `/proc/self/status`,
+/// or a missing/malformed `VmHWM` line — so callers omit the field instead
+/// of recording a bogus zero. This is the number the out-of-core benches
+/// and the CI `stream-smoke` budget check record — unlike the allocation
+/// counters above it captures what the OS actually had resident, including
+/// the streaming chunk buffers.
+pub fn peak_rss_bytes() -> Option<u64> {
     #[cfg(target_os = "linux")]
     {
-        let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
-            return 0;
-        };
-        for line in status.lines() {
-            if let Some(rest) = line.strip_prefix("VmHWM:") {
-                let kb = rest.trim().trim_end_matches("kB").trim();
-                return kb.parse::<u64>().unwrap_or(0) * 1024;
-            }
-        }
-        0
+        let status = std::fs::read_to_string("/proc/self/status").ok()?;
+        let rest = status.lines().find_map(|l| l.strip_prefix("VmHWM:"))?;
+        let kb = rest.trim().trim_end_matches("kB").trim();
+        kb.parse::<u64>().ok().map(|kb| kb * 1024)
     }
     #[cfg(not(target_os = "linux"))]
     {
-        0
+        None
     }
 }
 
@@ -130,13 +126,14 @@ mod tests {
     }
 
     #[test]
-    fn peak_rss_positive_on_linux_zero_elsewhere() {
+    fn peak_rss_some_on_linux_none_elsewhere() {
         let v = peak_rss_bytes();
         if cfg!(target_os = "linux") {
             // A running test process has megabytes resident.
+            let v = v.expect("VmHWM available on Linux");
             assert!(v > 1024 * 1024, "VmHWM = {v}");
         } else {
-            assert_eq!(v, 0);
+            assert_eq!(v, None);
         }
     }
 

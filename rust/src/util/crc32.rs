@@ -1,0 +1,95 @@
+//! CRC32 (IEEE 802.3, polynomial 0xEDB88320) implemented in-tree — the
+//! offline registry carries no checksum crates. Used by the `.sbck` chunk
+//! store (per-chunk integrity words) and the `.ckpt` checkpoint format
+//! (whole-file trailer).
+//!
+//! The table is built at first use behind a `OnceLock`; hashing is the
+//! classic byte-at-a-time table walk, which is plenty for the chunk sizes
+//! involved (a few MiB per checksum at most).
+
+use std::sync::OnceLock;
+
+fn table() -> &'static [u32; 256] {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, slot) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        t
+    })
+}
+
+/// Streaming CRC32 state. `Hasher::new()` → repeated [`Hasher::update`] →
+/// [`Hasher::finalize`]; equivalent to [`crc32`] over the concatenation.
+#[derive(Clone, Debug)]
+pub struct Hasher {
+    state: u32,
+}
+
+impl Hasher {
+    pub fn new() -> Self {
+        Hasher { state: 0xFFFF_FFFF }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        let t = table();
+        let mut c = self.state;
+        for &b in bytes {
+            c = t[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.state = c;
+    }
+
+    pub fn finalize(&self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+impl Default for Hasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One-shot CRC32 of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut h = Hasher::new();
+    h.update(bytes);
+    h.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Check values from the IEEE CRC32 reference ("check" = 0xCBF43926).
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn streaming_matches_one_shot() {
+        let data: Vec<u8> = (0u32..4096).map(|i| (i % 251) as u8).collect();
+        let mut h = Hasher::new();
+        for chunk in data.chunks(97) {
+            h.update(chunk);
+        }
+        assert_eq!(h.finalize(), crc32(&data));
+    }
+
+    #[test]
+    fn detects_single_bit_flip() {
+        let mut data = vec![7u8; 1024];
+        let before = crc32(&data);
+        data[512] ^= 0x10;
+        assert_ne!(crc32(&data), before);
+    }
+}

@@ -3,6 +3,7 @@
 //! allocation-counting global allocator, a minimal JSON reader/writer, and
 //! a tiny logging facility.
 
+pub mod crc32;
 pub mod rng;
 pub mod stats;
 pub mod alloc;

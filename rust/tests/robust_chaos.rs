@@ -247,6 +247,14 @@ fn error_kind_table_is_exhaustive_over_solver_error() {
         ),
         (SolverError::Overloaded { retry_after_ms: 50 }, "overloaded"),
         (SolverError::Unsupported("v2".into()), "unsupported"),
+        (
+            SolverError::CorruptData { chunk: 3, expected: 0xDEAD_BEEF, actual: 0x0BAD_F00D },
+            "corrupt_data",
+        ),
+        (
+            SolverError::NumericalBreakdown { detail: "residual is NaN".into(), sweeps: 7 },
+            "numerical_breakdown",
+        ),
     ];
     let mut kinds = std::collections::BTreeSet::new();
     for (err, want) in &every {

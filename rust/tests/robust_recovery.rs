@@ -1,0 +1,294 @@
+//! Durability & self-healing integration: checkpoint/resume, chunk
+//! integrity, and watchdog escalation exercised end-to-end through the
+//! crate's public surface — the same paths CI's `recovery-smoke` job
+//! drives over TCP.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use solvebak::api::{solver_for, Problem, SolverError, SolverKind};
+use solvebak::coordinator::{Coordinator, CoordinatorConfig, SolveRequest};
+use solvebak::linalg::Mat;
+use solvebak::obs::ProbeHandle;
+use solvebak::robust::watchdog::WatchdogConfig;
+use solvebak::robust::{Checkpoint, CheckpointProbe};
+use solvebak::solver::SolveOptions;
+use solvebak::stream::{temp_chunk_path, StreamedMatrix, MAGIC};
+use solvebak::util::rng::Rng;
+use solvebak::util::stats::rel_l2;
+
+fn planted(seed: u64, obs: usize, vars: usize) -> (Mat, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::seed(seed);
+    let x = Mat::randn(&mut rng, obs, vars);
+    let a_true: Vec<f32> = (0..vars).map(|_| rng.normal_f32()).collect();
+    let y = x.matvec(&a_true);
+    (x, a_true, y)
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("pallas_recovery_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    std::fs::create_dir_all(&p).expect("temp journal dir");
+    p
+}
+
+#[test]
+fn checkpoint_roundtrips_and_rejects_any_flipped_byte() {
+    let ck = Checkpoint {
+        job_id: "recovery-it".into(),
+        solver: "bak".into(),
+        sweeps: 17,
+        seed: 0x5eed,
+        a: vec![0.25, -1.5, 3.0],
+        e: vec![0.5, 0.0, -0.125, 2.0],
+    };
+    let path = temp_dir("roundtrip").join("job.ckpt");
+    ck.save_atomic(&path).expect("atomic save");
+    assert_eq!(Checkpoint::load(&path).expect("load back"), ck);
+
+    // Every single-byte flip anywhere in the file must be rejected by the
+    // CRC trailer before any field is trusted.
+    let good = std::fs::read(&path).unwrap();
+    for idx in 0..good.len() {
+        let mut bad = good.clone();
+        bad[idx] ^= 0x01;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(Checkpoint::load(&path).is_err(), "flip at byte {idx} accepted");
+    }
+    let _ = std::fs::remove_dir_all(path.parent().unwrap());
+}
+
+#[test]
+fn probe_checkpoint_resumes_bit_identically() {
+    // An uninterrupted 8-sweep BAK run is the reference; a 3-sweep run
+    // checkpointed through the public probe hook, resumed via
+    // with_warm_state for the remaining 5, must match it bit-for-bit.
+    let (x, _, y) = planted(4111, 160, 14);
+    let solver = solver_for(SolverKind::Bak).expect("registered");
+    let full_opts = SolveOptions::builder()
+        .max_sweeps(8)
+        .tol(0.0)
+        .check_every(1)
+        .build();
+    let full = solver
+        .solve(&Problem::new(&x, &y).unwrap(), &full_opts)
+        .expect("reference solve");
+
+    let path = temp_dir("resume").join("bitident.ckpt");
+    let probe = CheckpointProbe::new(&path, "bitident", "bak", full_opts.seed, 1);
+    let part_opts = SolveOptions::builder()
+        .max_sweeps(3)
+        .tol(0.0)
+        .check_every(1)
+        .probe(ProbeHandle::new(probe.clone()))
+        .build();
+    let part = solver
+        .solve(&Problem::new(&x, &y).unwrap(), &part_opts)
+        .expect("partial solve");
+    assert_eq!(part.sweeps, 3);
+    assert!(probe.written() >= 1, "probe never persisted");
+    assert!(probe.last_error().is_none(), "{:?}", probe.last_error());
+
+    let ck = Checkpoint::load(&path).expect("checkpoint on disk");
+    assert_eq!(ck.sweeps, 3);
+    assert_eq!(ck.a, part.a, "checkpoint captured the 3-sweep iterate");
+
+    let warm = Problem::new(&x, &y)
+        .unwrap()
+        .with_warm_state(&ck.a, &ck.e)
+        .expect("warm state accepted");
+    let rest_opts = SolveOptions::builder()
+        .max_sweeps(5)
+        .tol(0.0)
+        .check_every(1)
+        .build();
+    let resumed = solver.solve(&warm, &rest_opts).expect("resumed solve");
+    assert_eq!(
+        resumed.a, full.a,
+        "3 + 5 checkpoint-resumed sweeps must equal 8 uninterrupted ones bitwise"
+    );
+    let _ = std::fs::remove_dir_all(path.parent().unwrap());
+}
+
+#[test]
+fn coordinator_journal_survives_job_id_resubmission() {
+    // End-to-end through the coordinator: first submission under a job_id
+    // runs 3 sweeps and leaves a journal entry (deadline-free but
+    // sweep-capped solves keep nothing — so emulate the interrupted run
+    // by planting the checkpoint a killed process would have left), then
+    // the re-submission warm-starts and lands exactly where an
+    // uninterrupted run would.
+    let dir = temp_dir("journal");
+    let (x, _, y) = planted(4222, 140, 10);
+
+    let reference = {
+        let solver = solver_for(SolverKind::Bak).unwrap();
+        let opts = SolveOptions::builder().max_sweeps(7).tol(0.0).check_every(1).build();
+        solver.solve(&Problem::new(&x, &y).unwrap(), &opts).unwrap()
+    };
+    let partial = {
+        let solver = solver_for(SolverKind::Bak).unwrap();
+        let opts = SolveOptions::builder().max_sweeps(3).tol(0.0).check_every(1).build();
+        solver.solve(&Problem::new(&x, &y).unwrap(), &opts).unwrap()
+    };
+
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        journal_dir: Some(dir.clone()),
+        checkpoint_every: 1,
+        ..CoordinatorConfig::default()
+    });
+
+    let opts = SolveOptions::builder().max_sweeps(3).tol(0.0).check_every(1).build();
+    let first = coord.solve_blocking(
+        SolveRequest::builder(1, Arc::new(x.clone()), y.clone())
+            .backend(SolverKind::Bak)
+            .opts(opts.clone())
+            .job_id("journal-key")
+            .build(),
+    );
+    let rep1 = first.report.expect("first durable solve");
+    assert_eq!(rep1.a, partial.a, "first pass is the plain 3-sweep solve");
+    assert!(!first.resumed);
+
+    // The sweep-capped job completed, so its journal entry was cleared;
+    // recreate the "killed mid-solve" state from the partial report.
+    let entries: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+    assert!(entries.is_empty(), "completed job must clear its journal entry");
+    let ck = Checkpoint {
+        job_id: "journal-key".into(),
+        solver: "bak".into(),
+        sweeps: partial.sweeps as u64,
+        seed: opts.seed,
+        a: partial.a.clone(),
+        e: partial.e.clone(),
+    };
+    // Journal file names are `<sanitised-id>-<crc32-hex>.ckpt`; plant the
+    // checkpoint where the coordinator will look for this job_id.
+    let planted_path = dir.join(format!(
+        "journal-key-{:08x}.ckpt",
+        solvebak::util::crc32::crc32(b"journal-key")
+    ));
+    ck.save_atomic(&planted_path).expect("plant checkpoint");
+
+    let second = coord.solve_blocking(
+        SolveRequest::builder(2, Arc::new(x.clone()), y.clone())
+            .backend(SolverKind::Bak)
+            .opts(SolveOptions::builder().max_sweeps(4).tol(0.0).check_every(1).build())
+            .job_id("journal-key")
+            .build(),
+    );
+    let rep2 = second.report.expect("resumed solve");
+    assert!(second.resumed, "planted journal entry must trigger a resume");
+    assert_eq!(
+        rep2.a, reference.a,
+        "3 checkpointed + 4 resumed sweeps must equal 7 uninterrupted ones bitwise"
+    );
+    let m = coord.metrics();
+    assert!(m.resumes.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+    coord.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn escalation_walks_the_ladder_in_order() {
+    // A hair-trigger stagnation watchdog declares breakdown on BAK at the
+    // second residual check; CGLS forwards the probe (and trips it too);
+    // QR — probe-blind, direct — answers. The reply must name QR and the
+    // escalation counter must record both hops, proving the BAK → CGLS →
+    // QR order was walked, not skipped.
+    let (x, a_true, y) = planted(4333, 120, 12);
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        watchdog: WatchdogConfig {
+            stagnation_patience: 1,
+            stagnation_epsilon: 1.0,
+            ..WatchdogConfig::default()
+        },
+        ..CoordinatorConfig::default()
+    });
+    let out = coord.solve_blocking(
+        SolveRequest::builder(9, Arc::new(x), y)
+            .backend(SolverKind::Bak)
+            .opts(SolveOptions::builder().max_sweeps(50).tol(0.0).check_every(1).build())
+            .escalate(true)
+            .build(),
+    );
+    let rep = out.report.expect("escalated solve must answer");
+    assert_eq!(out.escalated_to, Some(SolverKind::Qr), "ladder ends at QR");
+    assert_eq!(out.backend, SolverKind::Qr);
+    assert!(rep.a.iter().all(|v| v.is_finite()));
+    assert!(rel_l2(&rep.a, &a_true) < 1e-3, "QR answer must be accurate");
+    let m = coord.metrics();
+    assert_eq!(
+        m.escalations.load(std::sync::atomic::Ordering::Relaxed),
+        2,
+        "BAK→CGLS and CGLS→QR are two recorded hops"
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn breakdown_without_escalation_is_typed() {
+    let (x, _, y) = planted(4444, 120, 12);
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        watchdog: WatchdogConfig {
+            stagnation_patience: 1,
+            stagnation_epsilon: 1.0,
+            ..WatchdogConfig::default()
+        },
+        ..CoordinatorConfig::default()
+    });
+    let out = coord.solve_blocking(
+        SolveRequest::builder(10, Arc::new(x), y)
+            .backend(SolverKind::Bak)
+            .opts(SolveOptions::builder().max_sweeps(50).tol(0.0).check_every(1).build())
+            .job_id("doomed-recovery")
+            .build(),
+    );
+    match out.report {
+        Err(SolverError::NumericalBreakdown { detail, sweeps }) => {
+            assert!(detail.contains("stagnating"), "{detail}");
+            assert!(sweeps >= 1);
+        }
+        other => panic!("want NumericalBreakdown, got {other:?}"),
+    }
+    coord.shutdown();
+}
+
+/// Hand-rolled legacy v1 `.sbck` bytes: version byte 1, bare column-major
+/// payload, no per-chunk CRC words.
+fn write_v1_sbck(x: &Mat, chunk_cols: usize, path: &std::path::Path) {
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(&MAGIC);
+    bytes.extend_from_slice(&[1u8, 0, 0, 0]);
+    bytes.extend_from_slice(&(x.rows() as u64).to_le_bytes());
+    bytes.extend_from_slice(&(x.cols() as u64).to_le_bytes());
+    bytes.extend_from_slice(&(chunk_cols as u64).to_le_bytes());
+    for &v in x.as_slice() {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, bytes).expect("write v1 file");
+}
+
+#[test]
+fn v1_sbck_files_solve_identically_after_the_v2_bump() {
+    // Pre-CRC files written by older builds must keep solving — and land
+    // on the exact same bits as the in-memory path, because v1 chunks are
+    // the same column slices with no integrity words interleaved.
+    let (x, _, y) = planted(4555, 300, 18);
+    let path = temp_chunk_path("v1_solve_compat");
+    write_v1_sbck(&x, 5, &path);
+    let sm = StreamedMatrix::open(&path).expect("v1 header accepted");
+    assert_eq!(sm.version(), 1);
+
+    let opts = SolveOptions::builder().max_sweeps(12).tol(0.0).check_every(1).build();
+    let solver = solver_for(SolverKind::Bak).unwrap();
+    let mem = solver.solve(&Problem::new(&x, &y).unwrap(), &opts).unwrap();
+    let streamed = solver
+        .solve(&Problem::new_streamed(&sm, &y).unwrap(), &opts)
+        .expect("v1 streamed solve");
+    assert_eq!(streamed.a, mem.a, "v1 streamed solve must match in-memory bitwise");
+    let _ = std::fs::remove_file(&path);
+}
