@@ -1,0 +1,171 @@
+//! Cluster-scaling bench: sharded `kaczmarz_par` / `bak_par` solves
+//! through the [`solvebak::cluster`] driver over 1/2/4 loopback workers,
+//! against the in-process reference at the same `(seed, shards)`.
+//!
+//! Loopback workers pay the full protocol cost — every shard round is
+//! built, serialised, parsed, executed, serialised, and parsed back — so
+//! the numbers isolate wire + merge overhead from socket latency. Each
+//! row records wall time *and* the sync-round count (== sweeps
+//! dispatched), because sync rounds are what a real network multiplies.
+//!
+//! This is also the CI artifact producer: `--out FILE` writes every row
+//! as a JSON array — the `cluster-smoke` job runs it with
+//! `--smoke --out BENCH_PR10.json` and uploads the artifact.
+//!
+//! Run: `cargo bench --bench cluster_scaling [-- --smoke] [--samples N]
+//!       [--out FILE]`
+
+use std::sync::Arc;
+
+use solvebak::api::SolverKind;
+use solvebak::bench::workload::{Workload, WorkloadSpec};
+use solvebak::cli::Args;
+use solvebak::cluster::{ClusterDriver, Membership};
+use solvebak::parallel;
+use solvebak::solver::SolveOptions;
+use solvebak::util::json::{Json, ObjBuilder};
+use solvebak::util::stats::Summary;
+use solvebak::util::timer::{sample, BenchConfig};
+
+struct Row {
+    solver: &'static str,
+    mode: String,
+    obs: usize,
+    vars: usize,
+    shards: usize,
+    workers: usize,
+    seconds: f64,
+    sync_rounds: u64,
+    rel_residual: f64,
+    sweeps: usize,
+    bit_identical: bool,
+}
+
+impl Row {
+    fn to_json(&self) -> Json {
+        ObjBuilder::new()
+            .str("solver", self.solver)
+            .str("mode", self.mode.as_str())
+            .num("obs", self.obs as f64)
+            .num("vars", self.vars as f64)
+            .num("shards", self.shards as f64)
+            .num("workers", self.workers as f64)
+            .num("seconds", self.seconds)
+            .num("sync_rounds", self.sync_rounds as f64)
+            .num("rel_residual", self.rel_residual)
+            .num("sweeps", self.sweeps as f64)
+            .bool("bit_identical", self.bit_identical)
+            .build()
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv).expect("args");
+    let smoke = args.flag("smoke");
+    let samples = args.get_usize("samples", if smoke { 1 } else { 3 }).expect("samples");
+    let cfg = BenchConfig { warmup: 1, samples, ..BenchConfig::default() };
+    let out_path = args.get("out").map(str::to_string);
+
+    let (obs, vars) = if smoke { (2_000, 64) } else { (20_000, 256) };
+    let sweeps = if smoke { 4 } else { 8 };
+    let shards = 4usize;
+    let worker_axis = [1usize, 2, 4];
+
+    let mut opts = SolveOptions::default();
+    opts.max_sweeps = sweeps;
+    opts.tol = 0.0;
+    opts.threads = shards;
+
+    let w = Workload::consistent(WorkloadSpec::new(obs, vars, 42));
+
+    println!("# cluster scaling — {obs}x{vars}, {shards} shards, {sweeps} sweeps");
+    println!(
+        "{:<14} {:>18} | {:>10} {:>11} {:>12} {:>9}",
+        "solver", "mode", "time_ms", "sync_rounds", "rel_resid", "identical"
+    );
+    let mut rows: Vec<Row> = Vec::new();
+
+    for (kind, name, reference) in [
+        (
+            SolverKind::KaczmarzPar,
+            "kaczmarz_par",
+            parallel::solve_kaczmarz_par(&w.x, &w.y, &opts),
+        ),
+        (SolverKind::BakPar, "bak_par", parallel::solve_bak_par(&w.x, &w.y, &opts)),
+    ] {
+        // In-process reference row: the floor every worker count is
+        // measured against.
+        let tm = Summary::of(&sample(&cfg, || {
+            std::hint::black_box(match kind {
+                SolverKind::KaczmarzPar => parallel::solve_kaczmarz_par(&w.x, &w.y, &opts),
+                _ => parallel::solve_bak_par(&w.x, &w.y, &opts),
+            });
+        }));
+        let local_ms = tm.min * 1e3;
+        println!(
+            "{:<14} {:>18} | {:>10.2} {:>11} {:>12.3e} {:>9}",
+            name, "in-process", local_ms, "-", reference.rel_residual(), "-"
+        );
+        rows.push(Row {
+            solver: name,
+            mode: "in-process".into(),
+            obs,
+            vars,
+            shards,
+            workers: 0,
+            seconds: tm.min,
+            sync_rounds: 0,
+            rel_residual: reference.rel_residual(),
+            sweeps: reference.sweeps,
+            bit_identical: true,
+        });
+
+        for &workers in &worker_axis {
+            let (membership, _t) = Membership::loopback(workers, 0);
+            let driver = ClusterDriver::new(Arc::new(membership));
+            let out = driver.solve(kind, &w.x, &w.y, &opts, None).expect("cluster solve");
+            let tm = Summary::of(&sample(&cfg, || {
+                std::hint::black_box(
+                    driver.solve(kind, &w.x, &w.y, &opts, None).expect("cluster solve"),
+                );
+            }));
+            let identical = out.report.a == reference.a
+                && out.report.e == reference.e
+                && out.report.history == reference.history;
+            println!(
+                "{:<14} {:>18} | {:>10.2} {:>11} {:>12.3e} {:>9}",
+                name,
+                format!("{workers} loopback wkr"),
+                tm.min * 1e3,
+                out.sync_rounds,
+                out.report.rel_residual(),
+                identical
+            );
+            rows.push(Row {
+                solver: name,
+                mode: format!("loopback-{workers}"),
+                obs,
+                vars,
+                shards,
+                workers,
+                seconds: tm.min,
+                sync_rounds: out.sync_rounds,
+                rel_residual: out.report.rel_residual(),
+                sweeps: out.report.sweeps,
+                bit_identical: identical,
+            });
+        }
+    }
+
+    if let Some(path) = out_path {
+        let json = Json::Arr(rows.iter().map(Row::to_json).collect());
+        std::fs::write(&path, json.to_string()).expect("write bench json");
+        println!("# wrote {} rows to {path}", rows.len());
+    }
+    println!("# done.");
+    // CI floor: every clustered run must reproduce its in-process
+    // reference bit-for-bit — a fast-but-wrong cluster path fails here.
+    assert!(rows.iter().all(|r| r.bit_identical), "cluster result diverged from in-process");
+    assert!(rows.iter().all(|r| r.rel_residual.is_finite()));
+}

@@ -101,6 +101,7 @@ impl SolverKind {
             supports_parallel: false,
             supports_streaming: false,
             supports_probe: true,
+            supports_sharding: false,
         };
         match self {
             SolverKind::Bak => Some(Capabilities {
@@ -116,9 +117,14 @@ impl SolverKind {
                 supports_parallel: true,
                 ..ITERATIVE
             }),
+            // Only the block-partitioned pair shards across processes:
+            // their between-sync block iterates are independent, so the
+            // cluster layer's mass-weighted merge reproduces the
+            // in-process sync bit-for-bit.
             SolverKind::BakPar | SolverKind::KaczmarzPar => Some(Capabilities {
                 supports_sparse: true,
                 supports_parallel: true,
+                supports_sharding: true,
                 ..ITERATIVE
             }),
             // The streaming-native trio (bak, kaczmarz, bak_multi) run
@@ -152,6 +158,7 @@ impl SolverKind {
                 supports_parallel: false,
                 supports_streaming: false,
                 supports_probe: false,
+                supports_sharding: false,
             }),
             SolverKind::Gauss => Some(Capabilities {
                 supports_wide: false,
@@ -162,6 +169,7 @@ impl SolverKind {
                 supports_parallel: false,
                 supports_streaming: false,
                 supports_probe: false,
+                supports_sharding: false,
             }),
             SolverKind::Auto => None,
         }
@@ -350,6 +358,21 @@ mod tests {
         // Direct methods and opaque artifact execution never probe.
         for k in [SolverKind::Qr, SolverKind::Cholesky, SolverKind::Gauss, SolverKind::Pjrt] {
             assert!(!k.capabilities().unwrap().supports_probe, "{k}");
+        }
+    }
+
+    #[test]
+    fn sharding_kinds_are_the_block_parallel_pair() {
+        let shard: Vec<SolverKind> = SolverKind::CONCRETE
+            .iter()
+            .copied()
+            .filter(|k| k.capabilities().is_some_and(|c| c.supports_sharding))
+            .collect();
+        assert_eq!(shard, vec![SolverKind::BakPar, SolverKind::KaczmarzPar]);
+        // Sharding implies the in-process parallel capability: the
+        // cluster merge is the same math as the threaded sync.
+        for k in shard {
+            assert!(k.capabilities().unwrap().supports_parallel, "{k}");
         }
     }
 

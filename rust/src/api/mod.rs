@@ -22,20 +22,20 @@
 //!
 //! ## Capability matrix
 //!
-//! | kind              | supports_wide | iterative | needs_square | warm_start | supports_sparse | parallel | streaming | probe |
-//! |-------------------|---------------|-----------|--------------|------------|-----------------|----------|-----------|-------|
-//! | `bak`             | yes           | yes       | no           | yes        | yes (CSC)       | no       | yes       | yes   |
-//! | `bakp`            | yes           | yes       | no           | no         | yes (CSC)       | in-block | no        | yes   |
-//! | `bak_par`         | yes           | yes       | no           | no         | yes (CSC)       | yes      | no        | yes   |
-//! | `bak_multi`       | yes           | yes       | no           | no         | no (densifies)  | no       | yes       | yes   |
-//! | `kaczmarz`        | yes           | yes       | no           | no         | yes (CSR)       | no       | yes       | yes   |
-//! | `kaczmarz_par`    | yes           | yes       | no           | no         | yes (CSR)       | yes      | no        | yes   |
-//! | `gauss_southwell` | yes           | yes       | no           | no         | no (densifies)  | no       | no        | yes   |
-//! | `qr`              | yes (min-norm)| no        | no           | no         | no (densifies)  | no       | no        | no    |
-//! | `cholesky`        | no            | no        | no           | no         | no (densifies)  | no       | no        | no    |
-//! | `gauss`           | no            | no        | yes          | no         | no (densifies)  | no       | no        | no    |
-//! | `cgls`            | yes           | yes       | no           | no         | yes (CSC)       | no       | no        | yes   |
-//! | `pjrt`            | yes (bucketed)| yes       | no           | no         | no (densifies)  | no       | no        | no    |
+//! | kind              | supports_wide | iterative | needs_square | warm_start | supports_sparse | parallel | streaming | probe | sharding |
+//! |-------------------|---------------|-----------|--------------|------------|-----------------|----------|-----------|-------|----------|
+//! | `bak`             | yes           | yes       | no           | yes        | yes (CSC)       | no       | yes       | yes   | no       |
+//! | `bakp`            | yes           | yes       | no           | no         | yes (CSC)       | in-block | no        | yes   | no       |
+//! | `bak_par`         | yes           | yes       | no           | no         | yes (CSC)       | yes      | no        | yes   | yes      |
+//! | `bak_multi`       | yes           | yes       | no           | no         | no (densifies)  | no       | yes       | yes   | no       |
+//! | `kaczmarz`        | yes           | yes       | no           | no         | yes (CSR)       | no       | yes       | yes   | no       |
+//! | `kaczmarz_par`    | yes           | yes       | no           | no         | yes (CSR)       | yes      | no        | yes   | yes      |
+//! | `gauss_southwell` | yes           | yes       | no           | no         | no (densifies)  | no       | no        | yes   | no       |
+//! | `qr`              | yes (min-norm)| no        | no           | no         | no (densifies)  | no       | no        | no    | no       |
+//! | `cholesky`        | no            | no        | no           | no         | no (densifies)  | no       | no        | no    | no       |
+//! | `gauss`           | no            | no        | yes          | no         | no (densifies)  | no       | no        | no    | no       |
+//! | `cgls`            | yes           | yes       | no           | no         | yes (CSC)       | no       | no        | yes   | no       |
+//! | `pjrt`            | yes (bucketed)| yes       | no           | no         | no (densifies)  | no       | no        | no    | no       |
 //!
 //! The `parallel` column is the `supports_parallel` capability: the
 //! backend scales with [`crate::solver::SolveOptions::threads`]
@@ -64,6 +64,15 @@
 //! cholesky, gauss) and the opaque PJRT artifact path have no per-sweep
 //! residual to report; they ignore the probe and their trajectory is the
 //! single exit residual.
+//!
+//! The `sharding` column is `supports_sharding`: the backend's
+//! block-partitioned sweep math distributes across contiguous row shards
+//! with a mass-weighted merge at every sync round, which is exactly what
+//! the [`crate::cluster`] layer exploits to run one solve across many
+//! worker processes. Only the block-parallel pair (`bak_par`,
+//! `kaczmarz_par`) qualifies — their per-block iterates are already
+//! independent between syncs — and the cluster coordinator dispatches
+//! shards only to kinds advertising this flag.
 
 pub mod backends;
 pub mod kind;
@@ -546,6 +555,12 @@ pub struct Capabilities {
     /// (direct methods and opaque artifact execution have no per-sweep
     /// residual).
     pub supports_probe: bool,
+    /// The backend's block math allows contiguous row-shard distribution
+    /// with the mass-weighted merge between sync rounds; the
+    /// [`crate::cluster`] layer dispatches only to such kinds. True for
+    /// the block-parallel pair (`bak_par`, `kaczmarz_par`) whose per-block
+    /// iterates are independent between syncs.
+    pub supports_sharding: bool,
 }
 
 impl Capabilities {
@@ -718,6 +733,7 @@ mod tests {
             supports_parallel: false,
             supports_streaming: false,
             supports_probe: false,
+            supports_sharding: false,
         };
         assert!(square_only.check(5, 5).is_ok());
         assert!(matches!(

@@ -30,6 +30,7 @@ const VALUED: &[&str] = &[
     "x-file", "y-file", "mem-budget", "chunk", "addr", "interval", "count",
     "deadline-ms", "max-inflight", "max-queue-wait-ms", "degraded-sweeps",
     "faults", "retries", "journal-dir", "checkpoint-every",
+    "workers-addrs", "heartbeat-ms", "shards", "worker-id",
 ];
 
 impl Args {
@@ -160,6 +161,21 @@ mod tests {
         assert_eq!(a.get_usize("chunk", 0).unwrap(), 64);
         assert_eq!(a.get_usize("port", 0).unwrap(), 7447);
         assert!(a.positionals().is_empty());
+    }
+
+    #[test]
+    fn cluster_options_are_valued() {
+        let a = Args::parse(&sv(&[
+            "--workers-addrs", "127.0.0.1:7450,127.0.0.1:7451",
+            "--heartbeat-ms", "200", "--shards", "4",
+            "--worker-id", "w1", "--cluster",
+        ]))
+        .unwrap();
+        assert_eq!(a.get("workers-addrs"), Some("127.0.0.1:7450,127.0.0.1:7451"));
+        assert_eq!(a.get_u64("heartbeat-ms", 0).unwrap(), 200);
+        assert_eq!(a.get_usize("shards", 0).unwrap(), 4);
+        assert_eq!(a.get("worker-id"), Some("w1"));
+        assert!(a.flag("cluster"));
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! solvebak convert  --obs 1e6 --vars 256 --out X.sbck [--chunk 64]
 //! solvebak features --obs 1e4 --vars 200 --max-feat 10
 //! solvebak serve    --requests 64 --workers 4 [--artifacts DIR]
+//! solvebak serve-worker --port 7450 [--worker-id w1 --max-inflight 4]
 //! solvebak stats    --addr 127.0.0.1:7447 [--interval 1.0 --count 0]
 //! solvebak info     [--artifacts DIR]
 //! ```
@@ -44,6 +45,9 @@ COMMANDS:
   features   run SolveBakF feature selection on a planted workload
   serve      run the coordinator service against synthetic request load
   serve-tcp  expose the coordinator on a TCP port (newline-JSON protocol)
+  serve-worker
+             run a cluster shard worker: answers the v1.2 join/heartbeat/
+             shard_solve commands for a serve-tcp --cluster coordinator
   stats      live dashboard: poll a serve-tcp instance's metrics and print
              one line per interval (req/s, latency quantiles, queue depth)
   info       environment + artifact inventory
@@ -95,6 +99,19 @@ DURABILITY (see PROTOCOL.md §durability):
                         re-submitted under the same job_id resumes instead
                         of starting over [off]
   --checkpoint-every N  serve-tcp: sweeps between checkpoint writes [8]
+
+CLUSTER (see PROTOCOL.md §cluster):
+  --cluster             serve-tcp: shard kaczmarz_par/bak_par solves across
+                        remote workers (requires --workers-addrs)
+  --workers-addrs LIST  serve-tcp: comma-separated worker HOST:PORT list
+  --shards N            serve-tcp: shards per clustered solve; 0 = use the
+                        request's --threads value [0]
+  --heartbeat-ms N      serve-tcp: worker liveness probe period, 0 = off
+                        [500]
+  --worker-id NAME      serve-worker: stable worker identity [worker-PORT]
+  --port N / --max-inflight N
+                        serve-worker: listen port [7450] and shard_solve
+                        admission slots, 0 = unlimited [0]
 ",
         backends.join("|")
     )
@@ -121,6 +138,7 @@ fn run_inner(argv: Vec<String>) -> Result<(), ArgError> {
         "features" => cmd_features(&args),
         "serve" => cmd_serve(&args),
         "serve-tcp" => cmd_serve_tcp(&args),
+        "serve-worker" => cmd_serve_worker(&args),
         "stats" => cmd_stats(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
@@ -444,6 +462,37 @@ fn cmd_serve(args: &Args) -> Result<(), ArgError> {
     Ok(())
 }
 
+/// Parse the `--cluster`/`--workers-addrs`/`--shards`/`--heartbeat-ms`
+/// knobs into a [`crate::cluster::ClusterConfig`]. `None` when neither
+/// cluster flag is present; an error when `--cluster` is armed without
+/// worker addresses.
+fn cluster_config_of(args: &Args) -> Result<Option<crate::cluster::ClusterConfig>, ArgError> {
+    if !args.flag("cluster") && args.get("workers-addrs").is_none() {
+        return Ok(None);
+    }
+    let addrs = args.get("workers-addrs").ok_or_else(|| {
+        ArgError("--cluster needs --workers-addrs HOST:PORT[,HOST:PORT...]".into())
+    })?;
+    let workers: Vec<String> = addrs
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    if workers.is_empty() {
+        return Err(ArgError("--workers-addrs: no addresses given".into()));
+    }
+    let shards = match args.get_usize("shards", 0)? {
+        0 => None,
+        n => Some(n),
+    };
+    Ok(Some(crate::cluster::ClusterConfig {
+        workers,
+        shards,
+        heartbeat_ms: args.get_u64("heartbeat-ms", 500)?,
+    }))
+}
+
 fn cmd_serve_tcp(args: &Args) -> Result<(), ArgError> {
     let workers = args.get_usize("workers", crate::parallel::default_threads())?;
     let port = args.get_usize("port", 7447)? as u16;
@@ -455,6 +504,7 @@ fn cmd_serve_tcp(args: &Args) -> Result<(), ArgError> {
     };
     let journal_dir = args.get("journal-dir").map(std::path::PathBuf::from);
     let checkpoint_every = args.get_usize("checkpoint-every", 8)?;
+    let cluster = cluster_config_of(args)?;
     if let Some(spec) = args.get("faults") {
         let plan = crate::robust::faults::FaultPlan::parse(spec).map_err(ArgError)?;
         crate::robust::faults::install(&plan);
@@ -468,6 +518,7 @@ fn cmd_serve_tcp(args: &Args) -> Result<(), ArgError> {
         degraded_sweeps,
         journal_dir: journal_dir.clone(),
         checkpoint_every,
+        cluster: cluster.clone(),
         ..CoordinatorConfig::default()
     }));
     let server = crate::coordinator::server::Server::bind(coord.clone(), port)
@@ -486,6 +537,15 @@ fn cmd_serve_tcp(args: &Args) -> Result<(), ArgError> {
             degraded_sweeps.map_or("off".to_string(), |n| n.to_string()),
         );
     }
+    if let Some(c) = &cluster {
+        println!(
+            "cluster: {} worker(s) at {} | shards {} | heartbeat {}ms",
+            c.workers.len(),
+            c.workers.join(","),
+            c.shards.map_or("per-request --threads".to_string(), |n| n.to_string()),
+            c.heartbeat_ms,
+        );
+    }
     println!("protocol: v1 newline-delimited JSON (PROTOCOL.md); send {{\"cmd\":\"shutdown\"}} to stop.");
     // Block until a client sends the shutdown command (the accept loop
     // exits when the stop flag flips).
@@ -495,6 +555,35 @@ fn cmd_serve_tcp(args: &Args) -> Result<(), ArgError> {
     println!("shutdown requested; final metrics: {}", coord.metrics().to_json().to_string());
     server.stop();
     Ok(())
+}
+
+/// `solvebak serve-worker`: run one cluster shard worker. It holds no
+/// problem data until a coordinator dispatches shards, so it can start
+/// before, after, or instead of any particular coordinator — membership
+/// is the coordinator's job (PROTOCOL.md §cluster). The process runs
+/// until killed; workers are designed to die abruptly (the coordinator
+/// reshards around the loss), so there is no graceful-shutdown command.
+fn cmd_serve_worker(args: &Args) -> Result<(), ArgError> {
+    let port = args.get_usize("port", 7450)? as u16;
+    let max_inflight = args.get_usize("max-inflight", 0)?;
+    let worker_id = args
+        .get("worker-id")
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("worker-{port}"));
+    let mut core = crate::cluster::WorkerCore::new(worker_id.clone());
+    if max_inflight > 0 {
+        core = core.with_max_inflight(max_inflight);
+    }
+    let server = crate::cluster::WorkerServer::bind(Arc::new(core), port)
+        .map_err(|e| ArgError(format!("bind: {e}")))?;
+    println!(
+        "worker '{worker_id}' listening on {} (v1.2 commands: {}; PROTOCOL.md §cluster)",
+        server.addr(),
+        crate::cluster::worker::WORKER_COMMANDS.join("/"),
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
 }
 
 /// One polled metrics snapshot — the fields the `stats` dashboard renders.
@@ -910,6 +999,49 @@ mod tests {
     #[test]
     fn serve_tcp_rejects_bad_fault_spec() {
         assert_eq!(run(sv(&["serve-tcp", "--faults", "bogus=1"])), 2);
+    }
+
+    #[test]
+    fn usage_mentions_cluster_knobs() {
+        let u = usage();
+        for knob in [
+            "serve-worker", "--cluster", "--workers-addrs", "--shards",
+            "--heartbeat-ms", "--worker-id",
+        ] {
+            assert!(u.contains(knob), "usage missing '{knob}'");
+        }
+    }
+
+    #[test]
+    fn cluster_config_parses_addresses_and_knobs() {
+        let a = Args::parse(&sv(&[
+            "--cluster", "--workers-addrs", "127.0.0.1:7450, 127.0.0.1:7451",
+            "--shards", "4", "--heartbeat-ms", "200",
+        ]))
+        .unwrap();
+        let c = cluster_config_of(&a).unwrap().expect("cluster config");
+        assert_eq!(c.workers, vec!["127.0.0.1:7450".to_string(), "127.0.0.1:7451".to_string()]);
+        assert_eq!(c.shards, Some(4));
+        assert_eq!(c.heartbeat_ms, 200);
+        // --workers-addrs alone implies --cluster; shards 0 means
+        // per-request threads; heartbeat defaults on.
+        let a = Args::parse(&sv(&["--workers-addrs", "127.0.0.1:7450"])).unwrap();
+        let c = cluster_config_of(&a).unwrap().expect("implied cluster");
+        assert_eq!(c.shards, None);
+        assert_eq!(c.heartbeat_ms, 500);
+        // No cluster flags at all: coordinator stays purely in-process.
+        let none = cluster_config_of(&Args::parse(&sv(&[])).unwrap()).unwrap();
+        assert!(none.is_none());
+    }
+
+    #[test]
+    fn serve_tcp_cluster_requires_worker_addresses() {
+        assert_eq!(run(sv(&["serve-tcp", "--cluster"])), 2);
+    }
+
+    #[test]
+    fn serve_worker_rejects_bad_max_inflight() {
+        assert_eq!(run(sv(&["serve-worker", "--max-inflight", "nope"])), 2);
     }
 
     #[test]

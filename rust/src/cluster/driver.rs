@@ -1,0 +1,794 @@
+//! The coordinator side of a cluster solve: [`ClusterDriver`] mirrors
+//! the in-process block schedulers sweep-for-sweep, farming the
+//! per-block inner sweeps out to workers and keeping *all* global solver
+//! state — iterate, residual, history, and the stop ladder — locally.
+//!
+//! Bit-identity: for a fixed `(seed, shards)` the result equals
+//! [`crate::parallel::solve_kaczmarz_par`] / [`crate::parallel::solve_bak_par`]
+//! with `threads = shards`, because every numeric step happens either
+//! (a) on the worker with the same local data, operation sequence, and
+//! `(seed, sweep * nb + shard)` RNG stream the in-process block uses, or
+//! (b) here, verbatim from the in-process scheduler (f64 mass-weighted
+//! merge in block order, residual + stop ladder). Worker identity
+//! appears in neither, so a shard re-dispatched after a worker death
+//! continues the exact same sequence on its new host.
+//!
+//! Failure handling composes with the robust layer instead of
+//! reinventing it: per-round deadlines come from the job's
+//! [`crate::robust::CancelToken`]; `overloaded` workers feed the
+//! [`crate::client::RetryPolicy`] backoff; a dead worker gets its shards
+//! re-dispatched (with data) to survivors and the outcome surfaces
+//! `resharded = true`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+use crate::api::{SolverError, SolverKind};
+use crate::client::RetryPolicy;
+use crate::coordinator::metrics::Metrics;
+use crate::linalg::{blas1, Mat};
+use crate::obs::{shard_span_name, TraceCtx};
+use crate::parallel::stream_seed;
+use crate::robust::CancelToken;
+use crate::solver::{ColumnOrder, SolveOptions, SolveReport, StopReason};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::membership::Membership;
+use super::planner::{self, ShardAxis, ShardPlan};
+use super::proto::{self, ShardData, ShardRound};
+use super::ClusterConfig;
+
+/// What a cluster solve hands back to the coordinator, beyond the
+/// report itself.
+pub struct ClusterSolveOutcome {
+    pub report: SolveReport,
+    /// True when any shard had to move to a surviving worker mid-solve.
+    pub resharded: bool,
+    /// Global sync rounds completed (== sweeps dispatched to workers).
+    pub sync_rounds: u64,
+}
+
+/// Per-job dispatch state: which worker owns which shard, which workers
+/// this job has written off, and what each worker has cached.
+struct JobState {
+    job: String,
+    /// shard -> membership slot.
+    assignment: Vec<usize>,
+    /// Per-slot, per-job ban: a worker that failed this job never gets
+    /// its shards back, even if the global heartbeat revives it — its
+    /// shard cache died with it.
+    banned: Vec<bool>,
+    /// `data_present[slot][shard]`: the worker holds that shard's data.
+    data_present: Vec<Vec<bool>>,
+    /// Round-robin cursor for (re)assignment.
+    cursor: usize,
+    resharded: bool,
+    /// Per-shard `(first_start_ns, last_end_ns)` over all rounds, for
+    /// the trace's per-shard span children.
+    spans: Vec<Option<(u64, u64)>>,
+}
+
+/// Coordinator-side merge driver for distributed shard solves.
+pub struct ClusterDriver {
+    membership: Arc<Membership>,
+    policy: RetryPolicy,
+    heartbeat_ms: u64,
+    metrics: OnceLock<Arc<Metrics>>,
+    job_counter: AtomicU64,
+}
+
+impl ClusterDriver {
+    /// Driver over an explicit roster (tests/benches).
+    pub fn new(membership: Arc<Membership>) -> Self {
+        ClusterDriver {
+            membership,
+            policy: RetryPolicy::default(),
+            heartbeat_ms: 0,
+            metrics: OnceLock::new(),
+            job_counter: AtomicU64::new(0),
+        }
+    }
+
+    /// Driver over TCP workers from a [`ClusterConfig`] (join-probes
+    /// each address; unreachable workers start dead).
+    pub fn from_config(cfg: &ClusterConfig) -> Self {
+        let mut d = Self::new(Arc::new(Membership::connect(&cfg.workers)));
+        d.heartbeat_ms = cfg.heartbeat_ms;
+        d
+    }
+
+    /// Replace the overload backoff policy.
+    pub fn with_policy(mut self, policy: RetryPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn membership(&self) -> &Arc<Membership> {
+        &self.membership
+    }
+
+    /// Attach the coordinator's metrics: seeds the `cluster_workers`
+    /// gauge and starts the background heartbeat (if configured) to keep
+    /// it honest between solves.
+    pub fn attach_metrics(&self, metrics: Arc<Metrics>) {
+        metrics.cluster_workers.store(self.membership.alive_count() as u64, Ordering::Relaxed);
+        if self.metrics.set(metrics.clone()).is_ok() && self.heartbeat_ms > 0 {
+            let gauge = metrics;
+            self.membership.start_heartbeat(
+                self.heartbeat_ms,
+                Arc::new(move |alive| {
+                    gauge.cluster_workers.store(alive as u64, Ordering::Relaxed);
+                }),
+            );
+        }
+    }
+
+    fn metric(&self, f: impl Fn(&Metrics)) {
+        if let Some(m) = self.metrics.get() {
+            f(m);
+        }
+    }
+
+    /// Run one sharded solve. `trace` is the open parent span (the
+    /// coordinator's `solve` span) to hang per-shard children off.
+    pub fn solve(
+        &self,
+        kind: SolverKind,
+        x: &Mat,
+        y: &[f32],
+        opts: &SolveOptions,
+        trace: Option<(&TraceCtx, usize)>,
+    ) -> Result<ClusterSolveOutcome, SolverError> {
+        let (obs, vars) = (x.rows(), x.cols());
+        if y.len() != obs {
+            return Err(SolverError::Shape(format!(
+                "y has {} entries for {obs} observations",
+                y.len()
+            )));
+        }
+        let shards = opts.threads.max(1);
+        let plan = ShardPlan::plan(kind, obs, vars, shards).ok_or_else(|| {
+            SolverError::Unsupported(format!(
+                "cluster: backend {} does not support sharding",
+                kind.as_str()
+            ))
+        })?;
+        let mut state = self.new_job(plan.nb())?;
+        let result = match kind {
+            SolverKind::KaczmarzPar => {
+                self.solve_kaczmarz(&plan, x, y, opts, trace.map(|(c, _)| c), &mut state)
+            }
+            SolverKind::BakPar => {
+                self.solve_bak(&plan, x, y, opts, trace.map(|(c, _)| c), &mut state)
+            }
+            _ => unreachable!("plan() only exists for the sharding pair"),
+        };
+        self.release(&state);
+        if let Some((ctx, parent)) = trace {
+            for (b, span) in state.spans.iter().enumerate() {
+                if let Some((start_ns, end_ns)) = span {
+                    ctx.record_ns(shard_span_name(b), *start_ns, *end_ns, Some(parent));
+                }
+            }
+        }
+        result.map(|(report, sync_rounds)| ClusterSolveOutcome {
+            report,
+            resharded: state.resharded,
+            sync_rounds,
+        })
+    }
+
+    fn new_job(&self, nb: usize) -> Result<JobState, SolverError> {
+        let slots = self.membership.len();
+        let mut state = JobState {
+            job: format!("cluster-{}", self.job_counter.fetch_add(1, Ordering::Relaxed)),
+            assignment: Vec::with_capacity(nb),
+            banned: vec![false; slots],
+            data_present: vec![vec![false; nb]; slots],
+            cursor: 0,
+            resharded: false,
+            spans: vec![None; nb],
+        };
+        for _ in 0..nb {
+            let slot = self.next_slot(&mut state).ok_or_else(|| {
+                SolverError::Service("cluster: no alive workers".to_string())
+            })?;
+            state.assignment.push(slot);
+        }
+        Ok(state)
+    }
+
+    /// Next alive, non-banned slot, round-robin from the cursor.
+    fn next_slot(&self, state: &mut JobState) -> Option<usize> {
+        let n = self.membership.len();
+        for step in 0..n {
+            let slot = (state.cursor + step) % n;
+            if !state.banned[slot] && self.membership.is_alive(slot) {
+                state.cursor = slot + 1;
+                return Some(slot);
+            }
+        }
+        None
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn build_request(
+        &self,
+        state: &JobState,
+        plan: &ShardPlan,
+        x: &Mat,
+        y: &[f32],
+        kind: SolverKind,
+        opts: &SolveOptions,
+        sweep: usize,
+        sync: &[f32],
+        b: usize,
+        with_data: bool,
+    ) -> Json {
+        let round = ShardRound {
+            job: &state.job,
+            kind,
+            shard: b,
+            nb: plan.nb(),
+            sweep,
+            seed: opts.seed,
+            shuffled: opts.order == ColumnOrder::Shuffled,
+            sync,
+            deadline_ms: opts.cancel.remaining_ms(),
+        };
+        if !with_data {
+            return proto::shard_solve_request(&round, None);
+        }
+        let range = &plan.ranges[b];
+        let sub = plan.extract(x, b);
+        let y_slice: &[f32] = match plan.axis {
+            ShardAxis::Rows => &y[range.clone()],
+            ShardAxis::Cols => &[],
+        };
+        let data = ShardData {
+            start: range.start,
+            rows: sub.rows(),
+            cols: sub.cols(),
+            x: sub.as_slice(),
+            y: y_slice,
+        };
+        proto::shard_solve_request(&round, Some(&data))
+    }
+
+    /// One request with the retry-on-`overloaded` backoff; every other
+    /// error surfaces to the caller for the reshard decision.
+    fn call_with_retry(
+        &self,
+        slot: usize,
+        req: &Json,
+        cancel: &CancelToken,
+        stream: u64,
+    ) -> Result<Json, SolverError> {
+        self.metric(|m| {
+            m.shards_dispatched.fetch_add(1, Ordering::Relaxed);
+        });
+        let mut rng = Rng::seed(stream_seed(self.policy.jitter_seed, stream));
+        let mut attempt: u32 = 0;
+        loop {
+            match self
+                .membership
+                .transport(slot)
+                .request(req)
+                .and_then(proto::check_reply)
+            {
+                Ok(r) => return Ok(r),
+                Err(SolverError::Overloaded { retry_after_ms }) => {
+                    if attempt >= self.policy.max_retries || cancel.is_cancelled() {
+                        return Err(SolverError::Overloaded { retry_after_ms });
+                    }
+                    attempt += 1;
+                    let ms = self.policy.backoff_ms(attempt, retry_after_ms, &mut rng);
+                    self.metric(|m| {
+                        m.retries_attempted.fetch_add(1, Ordering::Relaxed);
+                    });
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Dispatch one sync round for every shard (concurrently), then
+    /// re-dispatch any failed shard to a surviving worker. Returns the
+    /// per-shard replies in shard order.
+    #[allow(clippy::too_many_arguments)]
+    fn run_round(
+        &self,
+        state: &mut JobState,
+        plan: &ShardPlan,
+        x: &Mat,
+        y: &[f32],
+        kind: SolverKind,
+        opts: &SolveOptions,
+        sweep: usize,
+        sync: &[f32],
+        trace: Option<&TraceCtx>,
+    ) -> Result<Vec<Json>, SolverError> {
+        let nb = plan.nb();
+        let assignment = state.assignment.clone();
+        let mut reqs = Vec::with_capacity(nb);
+        for (b, &slot) in assignment.iter().enumerate() {
+            let with_data = !state.data_present[slot][b];
+            reqs.push(self.build_request(state, plan, x, y, kind, opts, sweep, sync, b, with_data));
+        }
+        // Phase 1 — concurrent dispatch, one thread per shard (the
+        // cluster analogue of par_map_chunks).
+        let results: Vec<(Result<Json, SolverError>, u64, u64)> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..nb)
+                .map(|b| {
+                    let req = &reqs[b];
+                    let slot = assignment[b];
+                    let cancel = &opts.cancel;
+                    let stream = (sweep * nb + b) as u64;
+                    s.spawn(move || {
+                        let start_ns = trace.map(|c| c.now_ns()).unwrap_or(0);
+                        let r = self.call_with_retry(slot, req, cancel, stream);
+                        let end_ns = trace.map(|c| c.now_ns()).unwrap_or(0);
+                        (r, start_ns, end_ns)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("shard dispatch thread")).collect()
+        });
+
+        // Bookkeeping + phase 2 — sequential re-dispatch of failures.
+        let mut replies: Vec<Json> = Vec::with_capacity(nb);
+        for (b, (result, start_ns, end_ns)) in results.into_iter().enumerate() {
+            state.spans[b] = match state.spans[b] {
+                None => Some((start_ns, end_ns)),
+                Some((first, _)) => Some((first, end_ns)),
+            };
+            match result {
+                Ok(reply) => {
+                    state.data_present[assignment[b]][b] = true;
+                    replies.push(reply);
+                }
+                Err(e @ (SolverError::InvalidInput(_) | SolverError::Unsupported(_))) => {
+                    // The worker understood us and said no — moving the
+                    // shard elsewhere cannot help.
+                    return Err(e);
+                }
+                Err(e) => {
+                    crate::debug!(
+                        "cluster",
+                        "shard {b} failed on worker {} ({e}); resharding",
+                        self.membership.addr(assignment[b])
+                    );
+                    replies.push(self.reshard(state, plan, x, y, kind, opts, sweep, sync, b)?);
+                }
+            }
+        }
+        self.metric(|m| {
+            m.sync_rounds.fetch_add(1, Ordering::Relaxed);
+        });
+        Ok(replies)
+    }
+
+    /// Move shard `b` off its (now banned) worker onto the next
+    /// survivor, resending the shard data; walks the roster until a
+    /// survivor answers or none are left. The round parameters are
+    /// identical to the failed dispatch — the RNG stream is keyed by
+    /// `(seed, sweep, shard)`, not by worker — so the retried round
+    /// produces the exact bytes the dead worker would have.
+    #[allow(clippy::too_many_arguments)]
+    fn reshard(
+        &self,
+        state: &mut JobState,
+        plan: &ShardPlan,
+        x: &Mat,
+        y: &[f32],
+        kind: SolverKind,
+        opts: &SolveOptions,
+        sweep: usize,
+        sync: &[f32],
+        b: usize,
+    ) -> Result<Json, SolverError> {
+        loop {
+            let dead = state.assignment[b];
+            if !state.banned[dead] {
+                state.banned[dead] = true;
+                self.membership.mark_dead(dead);
+                self.metric(|m| {
+                    m.reshards.fetch_add(1, Ordering::Relaxed);
+                    m.cluster_workers.store(self.membership.alive_count() as u64, Ordering::Relaxed);
+                });
+                state.resharded = true;
+            }
+            let Some(slot) = self.next_slot(state) else {
+                return Err(SolverError::Service(
+                    "cluster: no alive workers left after reshard".to_string(),
+                ));
+            };
+            state.assignment[b] = slot;
+            // Warm start: `sync` already carries the last merged global
+            // state, and the replacement worker needs the data again.
+            let req = self.build_request(state, plan, x, y, kind, opts, sweep, sync, b, true);
+            let stream = (sweep * plan.nb() + b) as u64;
+            match self.call_with_retry(slot, &req, &opts.cancel, stream) {
+                Ok(reply) => {
+                    state.data_present[slot][b] = true;
+                    crate::debug!(
+                        "cluster",
+                        "shard {b} re-dispatched to worker {}",
+                        self.membership.addr(slot)
+                    );
+                    return Ok(reply);
+                }
+                Err(e @ (SolverError::InvalidInput(_) | SolverError::Unsupported(_))) => {
+                    return Err(e);
+                }
+                Err(_) => continue, // this survivor died too; ban and move on
+            }
+        }
+    }
+
+    /// Best-effort end-of-job cache release on every worker that holds
+    /// shard data for this job.
+    fn release(&self, state: &JobState) {
+        let req = proto::release_request(&state.job);
+        for slot in 0..self.membership.len() {
+            if state.data_present[slot].iter().any(|&d| d)
+                && !state.banned[slot]
+                && self.membership.is_alive(slot)
+            {
+                let _ = self.membership.transport(slot).request(&req);
+            }
+        }
+    }
+
+    /// Distributed `kaczmarz_par`: the scheduler below is
+    /// `kaczmarz_par_generic` with the per-block closure replaced by a
+    /// `shard_solve` round trip (see `parallel/solvers.rs`).
+    fn solve_kaczmarz(
+        &self,
+        plan: &ShardPlan,
+        x: &Mat,
+        y: &[f32],
+        opts: &SolveOptions,
+        trace: Option<&TraceCtx>,
+        state: &mut JobState,
+    ) -> Result<(SolveReport, u64), SolverError> {
+        let vars = x.cols();
+        let row_norms_sq = planner::row_norms_sq(x);
+        let total: f64 = row_norms_sq.iter().map(|&v| v as f64).sum();
+        let y_norm_sq = blas1::sum_sq_f64(y);
+        if total == 0.0 {
+            // All-zero matrix: same trivial report as in-process, no
+            // rounds dispatched.
+            let stop =
+                if y_norm_sq == 0.0 { StopReason::Converged } else { StopReason::Stalled };
+            return Ok((
+                SolveReport {
+                    a: vec![0.0f32; vars],
+                    e: y.to_vec(),
+                    history: vec![y_norm_sq],
+                    y_norm_sq,
+                    sweeps: 0,
+                    stop,
+                },
+                0,
+            ));
+        }
+        // Block masses over the global row norms — the merge weights.
+        let masses: Vec<f64> = plan
+            .ranges
+            .iter()
+            .map(|r| row_norms_sq[r.clone()].iter().map(|&v| v as f64).sum())
+            .collect();
+
+        let tol_sq = opts.tol * opts.tol * y_norm_sq;
+        let mut a = vec![0.0f32; vars];
+        let mut history = Vec::new();
+        let mut stop = StopReason::MaxSweeps;
+        let mut sweeps = 0;
+        let mut sync_rounds = 0u64;
+        let mut prev_r2 = f64::INFINITY;
+        let t0 = std::time::Instant::now();
+
+        for sweep in 0..opts.max_sweeps {
+            let replies = self.run_round(
+                state,
+                plan,
+                x,
+                y,
+                SolverKind::KaczmarzPar,
+                opts,
+                sweep,
+                &a,
+                trace,
+            )?;
+            let mut iterates = Vec::with_capacity(replies.len());
+            for (b, reply) in replies.iter().enumerate() {
+                let ab = reply.get("ab").and_then(proto::json_to_f32s).ok_or_else(|| {
+                    bad_reply(b, "missing \"ab\"")
+                })?;
+                if ab.len() != vars {
+                    return Err(bad_reply(b, "wrong-length \"ab\""));
+                }
+                iterates.push(ab);
+            }
+
+            // Averaging sync — f64 accumulation in block order, verbatim.
+            for (j, aj) in a.iter_mut().enumerate() {
+                let mut acc = 0.0f64;
+                for (mass, ab) in masses.iter().zip(&iterates) {
+                    acc += (mass / total) * ab[j] as f64;
+                }
+                *aj = acc as f32;
+            }
+            sync_rounds += 1;
+
+            sweeps = sweep + 1;
+            let e = crate::linalg::residual(x, y, &a);
+            let r2 = blas1::sum_sq_f64(&e);
+            history.push(r2);
+            opts.probe.observe(sweeps, r2, t0);
+            if !r2.is_finite() {
+                stop = StopReason::Breakdown;
+                break;
+            }
+            opts.probe.observe_state(sweeps, &a, &e, r2);
+            if opts.cancel.is_cancelled() {
+                stop = StopReason::Cancelled;
+                break;
+            }
+            if opts.tol > 0.0 && r2 <= tol_sq {
+                stop = StopReason::Converged;
+                break;
+            }
+            if r2 >= prev_r2 * (1.0 - 1e-9) && sweeps > 1 {
+                stop = StopReason::Stalled;
+                break;
+            }
+            prev_r2 = r2;
+        }
+        let e = crate::linalg::residual(x, y, &a);
+        Ok((SolveReport { a, e, history, y_norm_sq, sweeps, stop }, sync_rounds))
+    }
+
+    /// Distributed `bak_par`: `bak_par_generic`'s scheduler with the
+    /// per-block closure replaced by a `shard_solve` round trip.
+    fn solve_bak(
+        &self,
+        plan: &ShardPlan,
+        x: &Mat,
+        y: &[f32],
+        opts: &SolveOptions,
+        trace: Option<&TraceCtx>,
+        state: &mut JobState,
+    ) -> Result<(SolveReport, u64), SolverError> {
+        let (obs, vars) = (x.rows(), x.cols());
+        let nb = plan.nb();
+        let y_norm_sq = blas1::sum_sq_f64(y);
+        let tol_sq = opts.tol * opts.tol * y_norm_sq;
+
+        let mut a = vec![0.0f32; vars];
+        let mut e = y.to_vec();
+        let mut history = Vec::with_capacity(opts.max_sweeps.min(1024));
+        let mut stop = StopReason::MaxSweeps;
+        let mut sweeps = 0;
+        let mut sync_rounds = 0u64;
+        let mut prev_r2 = f64::INFINITY;
+        let t0 = std::time::Instant::now();
+
+        for sweep in 0..opts.max_sweeps {
+            let replies =
+                self.run_round(state, plan, x, y, SolverKind::BakPar, opts, sweep, &e, trace)?;
+            let mut results: Vec<(Vec<f32>, Vec<f32>)> = Vec::with_capacity(nb);
+            for (b, reply) in replies.iter().enumerate() {
+                let da = reply.get("da").and_then(proto::json_to_f32s).ok_or_else(|| {
+                    bad_reply(b, "missing \"da\"")
+                })?;
+                let e_loc =
+                    reply.get("e_loc").and_then(proto::json_to_f32s).ok_or_else(|| {
+                        bad_reply(b, "missing \"e_loc\"")
+                    })?;
+                if da.len() != plan.ranges[b].len() || e_loc.len() != obs {
+                    return Err(bad_reply(b, "wrong-length \"da\"/\"e_loc\""));
+                }
+                results.push((da, e_loc));
+            }
+
+            // Sync, verbatim from bak_par_generic: additive coefficient
+            // merge (disjoint column ownership) and the residual fold
+            // e' = Σ_b e_b − (B−1)e in f64, block order per element.
+            if nb == 1 {
+                let (da, e_loc) = results.pop().expect("one shard");
+                for (k, &d) in da.iter().enumerate() {
+                    a[k] += d;
+                }
+                e = e_loc;
+            } else {
+                for (range, (da, _)) in plan.ranges.iter().zip(&results) {
+                    for (k, &d) in da.iter().enumerate() {
+                        a[range.start + k] += d;
+                    }
+                }
+                let coeff = (nb - 1) as f64;
+                for (r, w) in e.iter_mut().enumerate() {
+                    let mut acc = -coeff * (*w as f64);
+                    for (_, e_loc) in &results {
+                        acc += e_loc[r] as f64;
+                    }
+                    *w = acc as f32;
+                }
+            }
+            sync_rounds += 1;
+
+            sweeps = sweep + 1;
+            let check_now = opts.check_every != 0 && sweeps % opts.check_every == 0;
+            if check_now || sweeps == opts.max_sweeps {
+                let r2 = blas1::sum_sq_f64(&e);
+                history.push(r2);
+                opts.probe.observe(sweeps, r2, t0);
+                if !r2.is_finite() {
+                    stop = StopReason::Breakdown;
+                    break;
+                }
+                opts.probe.observe_state(sweeps, &a, &e, r2);
+                if opts.cancel.is_cancelled() {
+                    stop = StopReason::Cancelled;
+                    break;
+                }
+                if opts.tol > 0.0 && r2 <= tol_sq {
+                    stop = StopReason::Converged;
+                    break;
+                }
+                if r2 >= prev_r2 * (1.0 - 1e-9) && sweeps > 1 {
+                    stop = StopReason::Stalled;
+                    break;
+                }
+                prev_r2 = r2;
+            }
+        }
+        Ok((SolveReport { a, e, history, y_norm_sq, sweeps, stop }, sync_rounds))
+    }
+}
+
+fn bad_reply(shard: usize, what: &str) -> SolverError {
+    SolverError::Backend {
+        backend: "cluster-worker".into(),
+        reason: format!("shard {shard} reply: {what}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::{solve_bak_par, solve_kaczmarz_par};
+
+    fn planted(seed: u64, obs: usize, vars: usize) -> (Mat, Vec<f32>) {
+        let mut rng = Rng::seed(seed);
+        let x = Mat::randn(&mut rng, obs, vars);
+        let a_true: Vec<f32> = (0..vars).map(|_| rng.normal_f32()).collect();
+        let y = x.matvec(&a_true);
+        (x, y)
+    }
+
+    fn assert_reports_identical(cluster: &SolveReport, local: &SolveReport) {
+        assert_eq!(cluster.a, local.a, "coefficients must match bit-for-bit");
+        assert_eq!(cluster.e, local.e, "residuals must match bit-for-bit");
+        assert_eq!(cluster.history, local.history, "history must match");
+        assert_eq!(cluster.sweeps, local.sweeps);
+        assert_eq!(cluster.stop, local.stop);
+        assert_eq!(cluster.y_norm_sq, local.y_norm_sq);
+    }
+
+    #[test]
+    fn kaczmarz_two_workers_bit_identical_to_in_process() {
+        let (x, y) = planted(11, 48, 6);
+        let mut opts = SolveOptions::default();
+        opts.threads = 3; // = shards
+        opts.max_sweeps = 20;
+        let (membership, _t) = Membership::loopback(2, 0);
+        let driver = ClusterDriver::new(Arc::new(membership));
+        let out = driver.solve(SolverKind::KaczmarzPar, &x, &y, &opts, None).unwrap();
+        let local = solve_kaczmarz_par(&x, &y, &opts);
+        assert_reports_identical(&out.report, &local);
+        assert!(!out.resharded);
+        assert_eq!(out.sync_rounds as usize, local.sweeps);
+    }
+
+    #[test]
+    fn bak_shuffled_bit_identical_to_in_process() {
+        let (x, y) = planted(12, 40, 8);
+        let mut opts = SolveOptions::default();
+        opts.threads = 4;
+        opts.order = ColumnOrder::Shuffled;
+        opts.max_sweeps = 30;
+        let (membership, _t) = Membership::loopback(3, 0);
+        let driver = ClusterDriver::new(Arc::new(membership));
+        let out = driver.solve(SolverKind::BakPar, &x, &y, &opts, None).unwrap();
+        let local = solve_bak_par(&x, &y, &opts);
+        assert_reports_identical(&out.report, &local);
+        assert!(!out.resharded);
+    }
+
+    #[test]
+    fn worker_death_reshards_and_preserves_bit_identity() {
+        let (x, y) = planted(13, 36, 5);
+        let mut opts = SolveOptions::default();
+        opts.threads = 2;
+        opts.max_sweeps = 25;
+        let (membership, transports) = Membership::loopback(2, 0);
+        let driver = ClusterDriver::new(Arc::new(membership));
+        // Worker 1 serves a few rounds, then dies mid-solve.
+        transports[1].fail_after_requests(3);
+        let out = driver.solve(SolverKind::KaczmarzPar, &x, &y, &opts, None).unwrap();
+        assert!(out.resharded, "the death must surface as a reshard");
+        assert_eq!(driver.membership().alive_count(), 1);
+        let local = solve_kaczmarz_par(&x, &y, &opts);
+        assert_reports_identical(&out.report, &local);
+    }
+
+    #[test]
+    fn all_workers_dead_is_a_service_error() {
+        let (x, y) = planted(14, 12, 3);
+        let opts = SolveOptions::default();
+        let (membership, transports) = Membership::loopback(2, 0);
+        for t in &transports {
+            t.fail_after_requests(0);
+        }
+        let driver = ClusterDriver::new(Arc::new(membership));
+        let err = driver.solve(SolverKind::KaczmarzPar, &x, &y, &opts, None).unwrap_err();
+        assert!(matches!(err, SolverError::Service(_)), "{err:?}");
+    }
+
+    #[test]
+    fn non_sharding_kind_is_unsupported() {
+        let (x, y) = planted(15, 10, 3);
+        let (membership, _t) = Membership::loopback(1, 0);
+        let driver = ClusterDriver::new(Arc::new(membership));
+        let err = driver
+            .solve(SolverKind::Bak, &x, &y, &SolveOptions::default(), None)
+            .unwrap_err();
+        assert!(matches!(err, SolverError::Unsupported(_)), "{err:?}");
+    }
+
+    #[test]
+    fn trace_records_per_shard_spans() {
+        let (x, y) = planted(16, 24, 4);
+        let mut opts = SolveOptions::default();
+        opts.threads = 2;
+        opts.max_sweeps = 5;
+        let (membership, _t) = Membership::loopback(2, 0);
+        let driver = ClusterDriver::new(Arc::new(membership));
+        let ctx = TraceCtx::fresh();
+        let parent = ctx.begin("solve", None);
+        driver.solve(SolverKind::KaczmarzPar, &x, &y, &opts, Some((&ctx, parent))).unwrap();
+        ctx.end(parent);
+        let spans = ctx.spans();
+        let shard_spans: Vec<_> =
+            spans.iter().filter(|s| s.name.starts_with("shard")).collect();
+        assert_eq!(shard_spans.len(), 2, "one child span per shard");
+        for s in shard_spans {
+            assert_eq!(s.parent, Some(parent));
+            assert!(s.end_ns >= s.start_ns);
+        }
+    }
+
+    #[test]
+    fn all_zero_matrix_takes_the_trivial_path_without_dispatch() {
+        let x = Mat::zeros(6, 3);
+        let y = vec![1.0f32; 6];
+        let (membership, transports) = Membership::loopback(1, 0);
+        // A dead worker proves nothing is dispatched on this path.
+        transports[0].fail_after_requests(0);
+        let driver = ClusterDriver::new(Arc::new(membership));
+        let out = driver
+            .solve(SolverKind::KaczmarzPar, &x, &y, &SolveOptions::default(), None)
+            .unwrap();
+        assert_eq!(out.report.stop, StopReason::Stalled);
+        assert_eq!(out.report.sweeps, 0);
+        assert_eq!(out.sync_rounds, 0);
+        let local = solve_kaczmarz_par(&x, &y, &SolveOptions::default());
+        assert_reports_identical(&out.report, &local);
+    }
+}

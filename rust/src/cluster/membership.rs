@@ -1,0 +1,262 @@
+//! The coordinator's view of the worker set: one slot per configured
+//! worker, per-slot liveness, and an optional background heartbeat that
+//! keeps a `cluster_workers` gauge honest between solves.
+//!
+//! Liveness here is *global* (is the process reachable); the driver
+//! additionally keeps a per-job ban list, because a worker that died and
+//! came back has lost its shard cache — global revival must not trick an
+//! in-flight solve into trusting it again without resending data.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+use super::proto;
+use super::transport::{LoopbackTransport, TcpTransport, Transport};
+use super::worker::WorkerCore;
+
+struct WorkerSlot {
+    addr: String,
+    transport: Arc<dyn Transport>,
+    alive: AtomicBool,
+}
+
+/// The worker roster. Construction never fails — unreachable workers
+/// start dead and a later [`Membership::probe`] can revive them.
+pub struct Membership {
+    slots: Vec<WorkerSlot>,
+    hb_stop: Arc<AtomicBool>,
+    hb_thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Membership {
+    /// Roster over explicit transports (tests/benches); every slot
+    /// starts alive.
+    pub fn from_transports(workers: Vec<(String, Arc<dyn Transport>)>) -> Self {
+        let slots = workers
+            .into_iter()
+            .map(|(addr, transport)| WorkerSlot {
+                addr,
+                transport,
+                alive: AtomicBool::new(true),
+            })
+            .collect();
+        Membership {
+            slots,
+            hb_stop: Arc::new(AtomicBool::new(false)),
+            hb_thread: Mutex::new(None),
+        }
+    }
+
+    /// Roster over TCP workers. Each address gets a `join` probe up
+    /// front: responders start alive (and log their worker id),
+    /// non-responders start dead.
+    pub fn connect(addrs: &[String]) -> Self {
+        let slots: Vec<WorkerSlot> = addrs
+            .iter()
+            .map(|addr| {
+                let transport: Arc<dyn Transport> = Arc::new(TcpTransport::new(addr.clone()));
+                let alive = match transport
+                    .request(&proto::join_request())
+                    .and_then(proto::check_reply)
+                {
+                    Ok(reply) => {
+                        let id = reply
+                            .get("worker_id")
+                            .and_then(Json::as_str)
+                            .unwrap_or("?")
+                            .to_string();
+                        crate::debug!("cluster", "worker {addr} joined as '{id}'");
+                        true
+                    }
+                    Err(e) => {
+                        crate::debug!("cluster", "worker {addr} unreachable at join: {e}");
+                        false
+                    }
+                };
+                WorkerSlot { addr: addr.clone(), transport, alive: AtomicBool::new(alive) }
+            })
+            .collect();
+        Membership {
+            slots,
+            hb_stop: Arc::new(AtomicBool::new(false)),
+            hb_thread: Mutex::new(None),
+        }
+    }
+
+    /// In-process roster of `n` loopback workers (tests/benches). Also
+    /// returns the transports so a test can [`LoopbackTransport::fail_after_requests`]
+    /// one of them mid-solve.
+    pub fn loopback(n: usize, max_inflight: usize) -> (Self, Vec<Arc<LoopbackTransport>>) {
+        let mut transports = Vec::with_capacity(n);
+        let mut workers: Vec<(String, Arc<dyn Transport>)> = Vec::with_capacity(n);
+        for i in 0..n {
+            let core =
+                Arc::new(WorkerCore::new(format!("loopback-{i}")).with_max_inflight(max_inflight));
+            let t = Arc::new(LoopbackTransport::new(core));
+            transports.push(t.clone());
+            workers.push((format!("loopback:{i}"), t));
+        }
+        (Membership::from_transports(workers), transports)
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.slots.iter().filter(|s| s.alive.load(Ordering::SeqCst)).count()
+    }
+
+    pub fn is_alive(&self, i: usize) -> bool {
+        self.slots[i].alive.load(Ordering::SeqCst)
+    }
+
+    /// In-band death report from a failed dispatch.
+    pub fn mark_dead(&self, i: usize) {
+        self.slots[i].alive.store(false, Ordering::SeqCst);
+    }
+
+    pub fn transport(&self, i: usize) -> &Arc<dyn Transport> {
+        &self.slots[i].transport
+    }
+
+    pub fn addr(&self, i: usize) -> &str {
+        &self.slots[i].addr
+    }
+
+    /// One heartbeat round-trip; updates liveness in both directions
+    /// (a dead slot that answers revives — with an empty shard cache,
+    /// which is why the driver's per-job ban list exists).
+    pub fn probe(&self, i: usize) -> bool {
+        let ok = self.slots[i]
+            .transport
+            .request(&proto::heartbeat_request())
+            .and_then(proto::check_reply)
+            .is_ok();
+        self.slots[i].alive.store(ok, Ordering::SeqCst);
+        ok
+    }
+
+    /// Start the background heartbeat: every `period_ms`, probe all
+    /// slots and report the alive count (the coordinator points
+    /// `gauge_cb` at its `cluster_workers` gauge). No-op if `period_ms`
+    /// is 0 or a heartbeat is already running.
+    pub fn start_heartbeat(
+        self: &Arc<Self>,
+        period_ms: u64,
+        gauge_cb: Arc<dyn Fn(usize) + Send + Sync>,
+    ) {
+        if period_ms == 0 {
+            return;
+        }
+        let mut guard = self.hb_thread.lock().unwrap();
+        if guard.is_some() {
+            return;
+        }
+        let me = self.clone();
+        let stop = self.hb_stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("cluster-heartbeat".into())
+            .spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    for i in 0..me.len() {
+                        me.probe(i);
+                    }
+                    gauge_cb(me.alive_count());
+                    // Sleep in small slices so Drop joins promptly.
+                    let mut left = period_ms;
+                    while left > 0 && !stop.load(Ordering::SeqCst) {
+                        let step = left.min(25);
+                        std::thread::sleep(Duration::from_millis(step));
+                        left -= step;
+                    }
+                }
+            })
+            .expect("spawn heartbeat thread");
+        *guard = Some(handle);
+    }
+
+    /// Stop and join the heartbeat thread, if any.
+    pub fn stop_heartbeat(&self) {
+        self.hb_stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.hb_thread.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Membership {
+    fn drop(&mut self) {
+        self.hb_stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.hb_thread.get_mut().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn loopback_roster_tracks_death_and_revival() {
+        let (m, transports) = Membership::loopback(3, 0);
+        assert_eq!((m.len(), m.alive_count()), (3, 3));
+        // Kill worker 1: probe notices; the roster shrinks.
+        transports[1].fail_after_requests(0);
+        assert!(!m.probe(1));
+        assert_eq!(m.alive_count(), 2);
+        assert!(m.is_alive(0) && !m.is_alive(1) && m.is_alive(2));
+        // mark_dead is the in-band path to the same state.
+        m.mark_dead(2);
+        assert_eq!(m.alive_count(), 1);
+        // A live worker's probe revives the roster entry.
+        assert!(m.probe(2));
+        assert_eq!(m.alive_count(), 2);
+    }
+
+    #[test]
+    fn heartbeat_feeds_the_gauge_and_stops() {
+        let (m, transports) = Membership::loopback(2, 0);
+        let m = Arc::new(m);
+        let last = Arc::new(AtomicUsize::new(usize::MAX));
+        let seen = last.clone();
+        m.start_heartbeat(
+            5,
+            Arc::new(move |alive| seen.store(alive, Ordering::SeqCst)),
+        );
+        for _ in 0..100 {
+            if last.load(Ordering::SeqCst) == 2 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(last.load(Ordering::SeqCst), 2);
+        transports[0].fail_after_requests(0);
+        for _ in 0..100 {
+            if last.load(Ordering::SeqCst) == 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(last.load(Ordering::SeqCst), 1, "heartbeat must notice the death");
+        m.stop_heartbeat();
+    }
+
+    #[test]
+    fn connect_to_unreachable_addr_starts_dead() {
+        // Port 9 on localhost: nothing listens there in CI.
+        let m = Membership::connect(&["127.0.0.1:9".to_string()]);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.alive_count(), 0);
+    }
+}

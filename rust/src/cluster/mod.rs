@@ -1,0 +1,74 @@
+//! Distributed shard cluster: multi-node row-partitioned solves over an
+//! additive extension of wire protocol v1 (v1.2 — see `PROTOCOL.md`).
+//!
+//! The paper's core rationale — each inner step touches one dimension of
+//! `X` — is what makes the block-parallel pair distributable: between two
+//! sync points the per-block iterates of `kaczmarz_par` (row blocks) and
+//! `bak_par` (column blocks) are fully independent, so the blocks can
+//! live in *other processes* and only the O(obs)/O(vars) sync vectors
+//! cross the wire. This module runs exactly that scheme:
+//!
+//! * [`planner`] — derives the shard plan from `(shape, shards)` via the
+//!   same [`crate::parallel::partition_ranges`] the in-process solvers
+//!   use, and extracts each shard's column-major submatrix.
+//! * [`proto`] — the v1.2 message vocabulary (`join`, `heartbeat`,
+//!   `shard_solve`) as JSON builders/parsers; floats survive the trip
+//!   bit-exactly (f32 → f64 → shortest-roundtrip decimal → f64 → f32).
+//! * [`transport`] — how a shard request reaches a worker: a persistent
+//!   newline-JSON [`transport::TcpTransport`], or the in-process
+//!   [`transport::LoopbackTransport`] used by tests and benches (which
+//!   can also simulate a `kill -9` mid-solve).
+//! * [`worker`] — [`worker::WorkerCore`] answers the v1.2 commands
+//!   (caching shard data per `(job, shard)`), and
+//!   [`worker::WorkerServer`] serves it over TCP for
+//!   `solvebak serve-worker`.
+//! * [`membership`] — the coordinator's view of the worker set: per-slot
+//!   liveness, heartbeat probing, and dead-worker marking.
+//! * [`driver`] — [`driver::ClusterDriver`] mirrors the in-process
+//!   schedulers sweep-for-sweep: it keeps *all* global solver state
+//!   (iterate, residual, history, stop ladder) and only farms out the
+//!   per-block inner sweeps, merging with the same f64 mass-weighted
+//!   fold in block order. For a fixed `(seed, shards)` the result is
+//!   bit-identical to [`crate::parallel::solve_kaczmarz_par`] /
+//!   [`crate::parallel::solve_bak_par`] with `threads = shards` — no
+//!   matter how many workers serve the shards, or whether a shard was
+//!   re-dispatched after a worker died mid-solve.
+//!
+//! Failure composition (nothing here duplicates the robust layer):
+//! per-shard deadlines derive from the job's
+//! [`crate::robust::CancelToken`]; a worker answering `overloaded` feeds
+//! the same [`crate::client::RetryPolicy`] backoff the TCP client uses;
+//! a transport failure marks the worker dead and re-dispatches its
+//! shards to survivors, warm-started from the last synced iterate, and
+//! the outcome surfaces `"resharded": true`.
+
+pub mod driver;
+pub mod membership;
+pub mod planner;
+pub mod proto;
+pub mod transport;
+pub mod worker;
+
+pub use driver::{ClusterDriver, ClusterSolveOutcome};
+pub use membership::Membership;
+pub use transport::{LoopbackTransport, TcpTransport, Transport};
+pub use worker::{WorkerCore, WorkerServer};
+
+/// Cluster knobs carried by
+/// [`crate::coordinator::CoordinatorConfig::cluster`] (None = the
+/// coordinator solves everything in-process, exactly as before).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ClusterConfig {
+    /// Worker addresses (`host:port`), e.g. from `--workers-addrs`.
+    pub workers: Vec<String>,
+    /// Shard count per solve. `None` derives it from the request's
+    /// `threads` knob — the shard count plays exactly the role
+    /// `SolveOptions::threads` plays in-process, which is what makes the
+    /// cluster result bit-identical to the threaded solver at equal
+    /// `(seed, shards)`.
+    pub shards: Option<usize>,
+    /// Liveness probe period for the membership heartbeat thread; 0
+    /// disables the background probe (worker loss is then detected
+    /// in-band, by the failed shard dispatch itself).
+    pub heartbeat_ms: u64,
+}

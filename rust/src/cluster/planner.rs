@@ -1,0 +1,133 @@
+//! Shard planning: which contiguous slice of the system each worker
+//! gets, derived with the *same* partition the in-process solvers use so
+//! the cluster's block structure — and therefore its RNG streams and
+//! merge order — matches `solve_kaczmarz_par` / `solve_bak_par` exactly.
+
+use std::ops::Range;
+
+use crate::api::SolverKind;
+use crate::linalg::Mat;
+use crate::parallel::partition_ranges;
+
+/// Which dimension a kind shards over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardAxis {
+    /// `kaczmarz_par`: contiguous row blocks (the paper's tall systems;
+    /// a wide system is solved row-sharded after transposition upstream).
+    Rows,
+    /// `bak_par`: contiguous column blocks — the transposed view of the
+    /// same idea, and column-major storage makes extraction a memcpy.
+    Cols,
+}
+
+/// The shard plan for one solve: axis plus the contiguous ranges, in
+/// block order (which is also merge order and RNG-stream order).
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    pub axis: ShardAxis,
+    pub ranges: Vec<Range<usize>>,
+}
+
+impl ShardPlan {
+    /// Plan `shards` blocks for `kind` over an `obs x vars` system.
+    /// `shards` plays the role of `SolveOptions::threads` in-process:
+    /// [`partition_ranges`] clamps it to the sharded dimension, exactly
+    /// as the solvers do. `None` for kinds without `supports_sharding`.
+    pub fn plan(kind: SolverKind, obs: usize, vars: usize, shards: usize) -> Option<ShardPlan> {
+        let axis = match kind {
+            SolverKind::KaczmarzPar => ShardAxis::Rows,
+            SolverKind::BakPar => ShardAxis::Cols,
+            _ => return None,
+        };
+        let n = match axis {
+            ShardAxis::Rows => obs,
+            ShardAxis::Cols => vars,
+        };
+        Some(ShardPlan { axis, ranges: partition_ranges(n, shards.max(1)) })
+    }
+
+    /// Block count (the in-process `nb`).
+    pub fn nb(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Extract shard `b`'s column-major submatrix.
+    pub fn extract(&self, x: &Mat, b: usize) -> Mat {
+        match self.axis {
+            ShardAxis::Rows => extract_rows(x, &self.ranges[b]),
+            ShardAxis::Cols => extract_cols(x, &self.ranges[b]),
+        }
+    }
+}
+
+/// Full-matrix squared row norms via the same single column-major
+/// `mul_add` pass the in-process kaczmarz solver uses — the driver needs
+/// the global vector for block masses and the trivial all-zero path, and
+/// the accumulation order must match bit-for-bit.
+pub fn row_norms_sq(x: &Mat) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.rows()];
+    for j in 0..x.cols() {
+        for (rn, &v) in out.iter_mut().zip(x.col(j)) {
+            *rn = v.mul_add(v, *rn);
+        }
+    }
+    out
+}
+
+/// Rows `range` of `x` as a fresh column-major `range.len() x vars`
+/// matrix. The strided gather preserves per-column contiguity, which is
+/// what keeps the worker's row norms and strided row ops bit-identical
+/// to the full matrix restricted to those rows.
+pub fn extract_rows(x: &Mat, range: &Range<usize>) -> Mat {
+    let rows = range.len();
+    let mut data = Vec::with_capacity(rows * x.cols());
+    for j in 0..x.cols() {
+        data.extend_from_slice(&x.col(j)[range.clone()]);
+    }
+    Mat::from_col_major(rows, x.cols(), data)
+}
+
+/// Columns `range` of `x` as a fresh column-major `obs x range.len()`
+/// matrix — one contiguous copy in column-major storage.
+pub fn extract_cols(x: &Mat, range: &Range<usize>) -> Mat {
+    let rows = x.rows();
+    let data = x.as_slice()[range.start * rows..range.end * rows].to_vec();
+    Mat::from_col_major(rows, range.len(), data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn plan_matches_in_process_partition() {
+        let p = ShardPlan::plan(SolverKind::KaczmarzPar, 10, 4, 3).unwrap();
+        assert_eq!(p.axis, ShardAxis::Rows);
+        assert_eq!(p.ranges, partition_ranges(10, 3));
+        let p = ShardPlan::plan(SolverKind::BakPar, 10, 4, 3).unwrap();
+        assert_eq!(p.axis, ShardAxis::Cols);
+        assert_eq!(p.ranges, partition_ranges(4, 3));
+        // More shards than the axis has entries clamps, like threads do.
+        assert_eq!(ShardPlan::plan(SolverKind::BakPar, 10, 2, 8).unwrap().nb(), 2);
+        // Non-shardable kinds have no plan.
+        assert!(ShardPlan::plan(SolverKind::Bak, 10, 4, 2).is_none());
+        assert!(ShardPlan::plan(SolverKind::Qr, 10, 4, 2).is_none());
+    }
+
+    #[test]
+    fn extraction_matches_source_values() {
+        let mut rng = Rng::seed(31);
+        let x = Mat::randn(&mut rng, 7, 5);
+        let rs = extract_rows(&x, &(2..5));
+        assert_eq!((rs.rows(), rs.cols()), (3, 5));
+        for j in 0..5 {
+            assert_eq!(rs.col(j), &x.col(j)[2..5]);
+        }
+        let cs = extract_cols(&x, &(1..4));
+        assert_eq!((cs.rows(), cs.cols()), (7, 3));
+        for (local, global) in (1..4).enumerate() {
+            assert_eq!(cs.col(local), x.col(global));
+        }
+    }
+}

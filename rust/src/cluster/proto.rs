@@ -1,0 +1,225 @@
+//! The v1.2 message vocabulary: JSON builders and parsers for `join`,
+//! `heartbeat`, and `shard_solve`, shared by the coordinator-side driver
+//! and the worker-side core so the two ends cannot drift.
+//!
+//! Float transport is bit-exact: every f32 widens to f64 (exact), the
+//! JSON writer prints the shortest decimal that round-trips the f64, and
+//! the reader narrows back — so a shard iterate survives any number of
+//! wire crossings unchanged, which is a precondition for the driver's
+//! bit-identity guarantee.
+
+use crate::api::{SolverError, SolverKind};
+use crate::util::json::{Json, ObjBuilder};
+
+/// Build a `join` request.
+pub fn join_request() -> Json {
+    ObjBuilder::new().num("v", 1.0).str("cmd", "join").build()
+}
+
+/// Build a `heartbeat` request.
+pub fn heartbeat_request() -> Json {
+    ObjBuilder::new().num("v", 1.0).str("cmd", "heartbeat").build()
+}
+
+/// One shard's worth of matrix data, shipped on the first dispatch of a
+/// `(job, shard)` pair to a worker (and again after a re-dispatch).
+pub struct ShardData<'a> {
+    /// Global index of the shard's first row (kaczmarz) / column (bak).
+    pub start: usize,
+    /// Submatrix shape (`rows x cols`, column-major payload).
+    pub rows: usize,
+    pub cols: usize,
+    /// Column-major submatrix values.
+    pub x: &'a [f32],
+    /// The shard's slice of the right-hand side (kaczmarz only; empty
+    /// for bak, whose shards own columns and read the shared residual).
+    pub y: &'a [f32],
+}
+
+/// Per-round parameters of a `shard_solve` request.
+pub struct ShardRound<'a> {
+    /// Cluster job key (scopes the worker's shard cache).
+    pub job: &'a str,
+    /// Which backend's inner sweep to run.
+    pub kind: SolverKind,
+    /// Shard ordinal and total shard count — together with `seed` and
+    /// `sweep` they key the worker's RNG stream
+    /// (`stream_seed(seed, sweep * nb + shard)`), so a re-dispatched
+    /// shard draws the identical sample sequence on its new worker.
+    pub shard: usize,
+    pub nb: usize,
+    pub sweep: usize,
+    pub seed: u64,
+    /// `true` = SolveBak's Shuffled column order for this solve.
+    pub shuffled: bool,
+    /// Sync vector for this round: the merged iterate `a` (kaczmarz) or
+    /// the shared residual `e` (bak).
+    pub sync: &'a [f32],
+    /// Remaining wall-clock budget for this round, from the job's
+    /// cancellation token (None = no deadline armed).
+    pub deadline_ms: Option<u64>,
+}
+
+/// Build a `shard_solve` request; `data` rides along on first contact.
+pub fn shard_solve_request(round: &ShardRound<'_>, data: Option<&ShardData<'_>>) -> Json {
+    let mut b = ObjBuilder::new()
+        .num("v", 1.0)
+        .str("cmd", "shard_solve")
+        .str("job", round.job)
+        .str("kind", round.kind.as_str())
+        .num("shard", round.shard as f64)
+        .num("nb", round.nb as f64)
+        .num("sweep", round.sweep as f64)
+        // u64 seeds exceed f64's exact-integer range; a decimal string
+        // crosses the wire losslessly.
+        .str("seed", round.seed.to_string())
+        .str("order", if round.shuffled { "shuffled" } else { "cyclic" })
+        .val("sync", f32s_to_json(round.sync));
+    if let Some(ms) = round.deadline_ms {
+        b = b.num("deadline_ms", ms as f64);
+    }
+    if let Some(d) = data {
+        b = b.val(
+            "data",
+            ObjBuilder::new()
+                .num("start", d.start as f64)
+                .num("rows", d.rows as f64)
+                .num("cols", d.cols as f64)
+                .val("x", f32s_to_json(d.x))
+                .val("y", f32s_to_json(d.y))
+                .build(),
+        );
+    }
+    b.build()
+}
+
+/// Build the end-of-job `shard_solve` that releases a worker's cached
+/// shard data for `job`.
+pub fn release_request(job: &str) -> Json {
+    ObjBuilder::new()
+        .num("v", 1.0)
+        .str("cmd", "shard_solve")
+        .str("job", job)
+        .bool("release", true)
+        .build()
+}
+
+/// Lossless f32 slice → JSON array (see the module docs).
+pub fn f32s_to_json(v: &[f32]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+/// JSON array → f32 vector; `None` when any element is not a number.
+pub fn json_to_f32s(j: &Json) -> Option<Vec<f32>> {
+    match j {
+        Json::Arr(items) => {
+            let mut out = Vec::with_capacity(items.len());
+            for it in items {
+                out.push(it.as_f64()? as f32);
+            }
+            Some(out)
+        }
+        _ => None,
+    }
+}
+
+/// Map a structured `ok: false` reply (or pass an `ok: true` one
+/// through) to the coordinator-side error vocabulary, so worker
+/// overloads feed the existing retry path and everything else surfaces
+/// as a typed failure.
+pub fn check_reply(reply: Json) -> Result<Json, SolverError> {
+    if reply.get("ok").and_then(Json::as_bool) == Some(true) {
+        return Ok(reply);
+    }
+    let kind = reply.get("error_kind").and_then(Json::as_str).unwrap_or("service");
+    let msg = reply
+        .get("error")
+        .and_then(Json::as_str)
+        .unwrap_or("worker replied ok: false")
+        .to_string();
+    Err(match kind {
+        "overloaded" => SolverError::Overloaded {
+            retry_after_ms: reply
+                .get("retry_after_ms")
+                .and_then(Json::as_f64)
+                .unwrap_or(25.0) as u64,
+        },
+        "unsupported" => SolverError::Unsupported(msg),
+        "invalid_input" => SolverError::InvalidInput(msg),
+        _ => SolverError::Backend { backend: "cluster-worker".into(), reason: msg },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_arrays_roundtrip_bit_exactly() {
+        // Awkward values: subnormal, near-max, fractions with no finite
+        // decimal expansion.
+        let vals: Vec<f32> = vec![
+            0.1, 1.0e-40, 3.4e38, 1.0 / 3.0, -7.25, f32::MIN_POSITIVE, -0.0,
+        ];
+        let wire = f32s_to_json(&vals).to_string();
+        let back = json_to_f32s(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.len(), vals.len());
+        for (a, b) in vals.iter().zip(&back) {
+            // One benign exception to to_bits equality: the integer fast
+            // path of the JSON writer collapses -0.0 to 0 — numerically
+            // indistinguishable in every operation the solvers perform.
+            if *a == 0.0 {
+                assert_eq!(*b, 0.0);
+            } else {
+                assert_eq!(a.to_bits(), b.to_bits(), "{a} != {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_solve_request_carries_round_and_data() {
+        let sync = vec![1.5f32, -2.0];
+        let x = vec![1.0f32, 2.0, 3.0, 4.0];
+        let y = vec![0.5f32, 0.25];
+        let round = ShardRound {
+            job: "j1",
+            kind: SolverKind::KaczmarzPar,
+            shard: 1,
+            nb: 4,
+            sweep: 7,
+            seed: u64::MAX, // would not survive as a JSON number
+            shuffled: false,
+            sync: &sync,
+            deadline_ms: Some(250),
+        };
+        let data = ShardData { start: 2, rows: 2, cols: 2, x: &x, y: &y };
+        let req = shard_solve_request(&round, Some(&data));
+        assert_eq!(req.get("cmd").unwrap().as_str(), Some("shard_solve"));
+        assert_eq!(req.get("seed").unwrap().as_str(), Some("18446744073709551615"));
+        assert_eq!(req.get("deadline_ms").unwrap().as_f64(), Some(250.0));
+        let d = req.get("data").unwrap();
+        assert_eq!(d.get("start").unwrap().as_usize(), Some(2));
+        assert_eq!(json_to_f32s(d.get("x").unwrap()).unwrap(), x);
+        // Round-only requests omit the payload.
+        let lean = shard_solve_request(&round, None);
+        assert!(lean.get("data").is_none());
+    }
+
+    #[test]
+    fn check_reply_maps_error_kinds() {
+        let ok = Json::parse(r#"{"ok": true, "ab": []}"#).unwrap();
+        assert!(check_reply(ok).is_ok());
+        let over =
+            Json::parse(r#"{"ok": false, "error_kind": "overloaded", "retry_after_ms": 40}"#)
+                .unwrap();
+        assert_eq!(
+            check_reply(over).unwrap_err(),
+            SolverError::Overloaded { retry_after_ms: 40 }
+        );
+        let bad = Json::parse(r#"{"ok": false, "error_kind": "invalid_input", "error": "x"}"#)
+            .unwrap();
+        assert!(matches!(check_reply(bad).unwrap_err(), SolverError::InvalidInput(_)));
+        let vague = Json::parse(r#"{"ok": false}"#).unwrap();
+        assert!(matches!(check_reply(vague).unwrap_err(), SolverError::Backend { .. }));
+    }
+}

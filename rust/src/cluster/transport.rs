@@ -1,0 +1,183 @@
+//! How a shard request reaches a worker. The driver only sees the
+//! [`Transport`] trait, so tests and benches can swap the TCP hop for an
+//! in-process loopback — including one that drops dead mid-solve to
+//! simulate a `kill -9`.
+//!
+//! Error contract: a transport returns `Err` only for *delivery*
+//! failures (connect/read/write) — the worker is presumed gone. A worker
+//! that answered with a structured `ok: false` line comes back as
+//! `Ok(json)`; [`super::proto::check_reply`] maps it afterwards. The
+//! driver relies on this split to tell "re-dispatch the shard" from
+//! "back off and retry" from "fail the job".
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::api::SolverError;
+use crate::util::json::Json;
+
+use super::worker::WorkerCore;
+
+/// One request/reply exchange with a worker.
+pub trait Transport: Send + Sync {
+    fn request(&self, req: &Json) -> Result<Json, SolverError>;
+}
+
+/// Persistent newline-JSON connection to a worker address; reconnects
+/// lazily after failures (same discipline as [`crate::client::Client`],
+/// minus the retry policy — the cluster driver owns retries, because a
+/// failed shard may have to move to a *different* worker rather than be
+/// retried on the same one).
+pub struct TcpTransport {
+    addr: String,
+    stream: Mutex<Option<TcpStream>>,
+}
+
+impl TcpTransport {
+    pub fn new(addr: impl Into<String>) -> Self {
+        TcpTransport { addr: addr.into(), stream: Mutex::new(None) }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn io_err(&self, what: &str, e: std::io::Error) -> SolverError {
+        SolverError::Service(format!("cluster worker {}: {what}: {e}", self.addr))
+    }
+
+    fn roundtrip(
+        &self,
+        s: &mut TcpStream,
+        req: &Json,
+        timeout: Option<Duration>,
+    ) -> Result<Json, SolverError> {
+        s.set_read_timeout(timeout).map_err(|e| self.io_err("set timeout", e))?;
+        let mut line = req.to_string();
+        line.push('\n');
+        s.write_all(line.as_bytes()).map_err(|e| self.io_err("write", e))?;
+        let mut reply = String::new();
+        let mut r = BufReader::new(s.try_clone().map_err(|e| self.io_err("clone", e))?);
+        let n = r.read_line(&mut reply).map_err(|e| self.io_err("read", e))?;
+        if n == 0 {
+            return Err(SolverError::Service(format!(
+                "cluster worker {}: connection closed",
+                self.addr
+            )));
+        }
+        Json::parse(reply.trim()).map_err(|e| {
+            SolverError::Service(format!("cluster worker {}: bad reply: {e}", self.addr))
+        })
+    }
+}
+
+impl Transport for TcpTransport {
+    fn request(&self, req: &Json) -> Result<Json, SolverError> {
+        let mut guard = self.stream.lock().unwrap();
+        if guard.is_none() {
+            let s = TcpStream::connect(&self.addr).map_err(|e| self.io_err("connect", e))?;
+            *guard = Some(s);
+        }
+        // The round's deadline doubles as the socket read timeout, so a
+        // hung worker surfaces as a delivery failure within budget.
+        let timeout = req
+            .get("deadline_ms")
+            .and_then(Json::as_f64)
+            .map(|ms| Duration::from_millis((ms as u64).max(1)));
+        let result =
+            self.roundtrip(guard.as_mut().expect("stream populated above"), req, timeout);
+        if result.is_err() {
+            *guard = None; // force a fresh connection on the next attempt
+        }
+        result
+    }
+}
+
+/// In-process transport straight into a [`WorkerCore`] — what the
+/// loopback tests and benches use. [`LoopbackTransport::fail_after_requests`]
+/// arms a failure point: once the budget is spent every request fails
+/// like a severed connection, forever — the `kill -9` a test can
+/// schedule mid-solve.
+pub struct LoopbackTransport {
+    core: Arc<WorkerCore>,
+    remaining: AtomicU64,
+}
+
+impl LoopbackTransport {
+    pub fn new(core: Arc<WorkerCore>) -> Self {
+        LoopbackTransport { core, remaining: AtomicU64::new(u64::MAX) }
+    }
+
+    /// Serve `n` more requests, then fail every one after (u64::MAX =
+    /// never fail, the default).
+    pub fn fail_after_requests(&self, n: u64) {
+        self.remaining.store(n, Ordering::SeqCst);
+    }
+}
+
+impl Transport for LoopbackTransport {
+    fn request(&self, req: &Json) -> Result<Json, SolverError> {
+        loop {
+            let left = self.remaining.load(Ordering::SeqCst);
+            if left == 0 {
+                return Err(SolverError::Service("cluster worker loopback: killed".into()));
+            }
+            if left == u64::MAX {
+                break; // unlimited; skip the decrement
+            }
+            if self
+                .remaining
+                .compare_exchange(left, left - 1, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+            {
+                break;
+            }
+        }
+        // Round-trip through the wire encoding so loopback exercises the
+        // same f32 -> JSON -> f32 path TCP does (bit-identity included).
+        let wire = req.to_string();
+        let req = Json::parse(&wire).expect("request re-parses");
+        let reply = self.core.handle_request(&req).to_string();
+        Ok(Json::parse(&reply).expect("reply re-parses"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_round_trips_and_kills() {
+        let t = LoopbackTransport::new(Arc::new(WorkerCore::new("lb")));
+        let ping = Json::parse(r#"{"cmd": "ping"}"#).unwrap();
+        assert!(t.request(&ping).is_ok());
+        t.fail_after_requests(1);
+        assert!(t.request(&ping).is_ok(), "one request left in the budget");
+        assert!(matches!(t.request(&ping), Err(SolverError::Service(_))), "killed");
+        assert!(matches!(t.request(&ping), Err(SolverError::Service(_))), "stays dead");
+    }
+
+    #[test]
+    fn tcp_transport_reaches_a_worker_server_and_survives_restart() {
+        use super::super::worker::WorkerServer;
+        let core = Arc::new(WorkerCore::new("w-t"));
+        let srv = WorkerServer::bind(core.clone(), 0).unwrap();
+        let t = TcpTransport::new(srv.addr().to_string());
+        let ping = Json::parse(r#"{"cmd": "ping"}"#).unwrap();
+        let r = t.request(&ping).unwrap();
+        assert_eq!(r.get("pong").unwrap().as_str(), Some("pong"));
+        srv.stop();
+        // Server gone: delivery failure, not a structured error.
+        let mut saw_err = false;
+        for _ in 0..3 {
+            if t.request(&ping).is_err() {
+                saw_err = true;
+                break;
+            }
+        }
+        assert!(saw_err, "requests to a stopped server must fail");
+    }
+}

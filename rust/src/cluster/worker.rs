@@ -1,0 +1,562 @@
+//! The worker side of the cluster: [`WorkerCore`] answers the v1.2
+//! commands against a per-`(job, shard)` data cache, and
+//! [`WorkerServer`] serves it over TCP for `solvebak serve-worker`.
+//!
+//! A worker is deliberately stateless about the *solve*: all global
+//! state (iterate, residual, history, stop decisions) lives on the
+//! coordinator. The worker holds only its shard's immutable data —
+//! submatrix, per-row norms + sampling CDF (kaczmarz) or per-column
+//! inverse norms (bak) — and runs one block inner sweep per
+//! `shard_solve` request. Every derived quantity is computed with the
+//! same operation sequence the in-process solvers use on the full
+//! matrix, which is what makes the round's output bit-identical to the
+//! corresponding in-process block (see `solvers.rs`).
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::api::SolverKind;
+use crate::linalg::{blas1, Mat};
+use crate::parallel::stream_seed;
+use crate::util::json::{Json, ObjBuilder};
+use crate::util::rng::Rng;
+
+use super::proto;
+
+/// The commands a v1.2 worker speaks (advertised by `join` and by the
+/// coordinator's `hello`).
+pub const WORKER_COMMANDS: [&str; 4] = ["join", "heartbeat", "shard_solve", "ping"];
+
+/// Immutable per-shard state, cached after the first `shard_solve` that
+/// carries `data`.
+enum Shard {
+    /// A contiguous row block: local submatrix, its slice of y, and the
+    /// Strohmer-Vershynin sampling state restricted to the block.
+    Kaczmarz {
+        x: Mat,
+        y: Vec<f32>,
+        row_norms_sq: Vec<f32>,
+        cdf: Vec<f64>,
+        mass: f64,
+    },
+    /// A contiguous column block: local submatrix and inverse column
+    /// norms (zero columns mapped to 0, as in the serial solver).
+    Bak { x: Mat, cninv: Vec<f32> },
+}
+
+/// Shard-solve request handler: the embeddable heart of a worker node.
+/// The coordinator's TCP server embeds one too, so a `serve-tcp`
+/// process can also serve shards for *another* coordinator.
+pub struct WorkerCore {
+    worker_id: String,
+    /// Concurrent `shard_solve` cap; 0 = unlimited. A saturated worker
+    /// answers `overloaded` + `retry_after_ms`, feeding the
+    /// coordinator's existing backoff path.
+    max_inflight: usize,
+    inflight: AtomicUsize,
+    shards: Mutex<HashMap<(String, usize), Arc<Shard>>>,
+}
+
+impl WorkerCore {
+    pub fn new(worker_id: impl Into<String>) -> Self {
+        WorkerCore {
+            worker_id: worker_id.into(),
+            max_inflight: 0,
+            inflight: AtomicUsize::new(0),
+            shards: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Cap concurrent `shard_solve`s (0 = unlimited).
+    pub fn with_max_inflight(mut self, n: usize) -> Self {
+        self.max_inflight = n;
+        self
+    }
+
+    /// Shards currently cached (reported by `heartbeat`).
+    pub fn shards_cached(&self) -> usize {
+        self.shards.lock().unwrap().len()
+    }
+
+    /// Answer one v1.2 request; always returns a reply object (errors
+    /// are structured lines, never dropped connections — same contract
+    /// as the coordinator server).
+    pub fn handle_request(&self, req: &Json) -> Json {
+        if let Some(v) = req.get("v").and_then(Json::as_f64) {
+            if v != 1.0 {
+                return error_json("unsupported", format!("protocol version {v} not supported"));
+            }
+        }
+        match req.get("cmd").and_then(Json::as_str) {
+            Some("ping") => ObjBuilder::new().bool("ok", true).str("pong", "pong").build(),
+            Some("join") => {
+                let cmds =
+                    Json::Arr(WORKER_COMMANDS.iter().map(|c| Json::Str(c.to_string())).collect());
+                ObjBuilder::new()
+                    .bool("ok", true)
+                    .num("proto_version", 1.0)
+                    .str("worker_id", self.worker_id.clone())
+                    .val("commands", cmds)
+                    .build()
+            }
+            Some("heartbeat") => ObjBuilder::new()
+                .bool("ok", true)
+                .str("pong", "pong")
+                .num("shards_cached", self.shards_cached() as f64)
+                .build(),
+            Some("shard_solve") => self.shard_solve(req),
+            Some(other) => error_json("unsupported", format!("unknown command '{other}'")),
+            None => error_json("invalid_input", "worker requests need a \"cmd\"".to_string()),
+        }
+    }
+
+    fn shard_solve(&self, req: &Json) -> Json {
+        let Some(job) = req.get("job").and_then(Json::as_str) else {
+            return error_json("invalid_input", "shard_solve needs a \"job\" key".to_string());
+        };
+        // End-of-job cache release.
+        if req.get("release").and_then(Json::as_bool) == Some(true) {
+            let mut shards = self.shards.lock().unwrap();
+            let before = shards.len();
+            shards.retain(|(j, _), _| j != job);
+            let released = before - shards.len();
+            return ObjBuilder::new().bool("ok", true).num("released", released as f64).build();
+        }
+
+        // Admission gate, mirroring the coordinator's load shedding.
+        let _guard = match InflightGuard::enter(self) {
+            Some(g) => g,
+            None => {
+                return ObjBuilder::new()
+                    .bool("ok", false)
+                    .str("error_kind", "overloaded")
+                    .str("error", "worker inflight cap reached")
+                    .num("retry_after_ms", 25.0)
+                    .build()
+            }
+        };
+
+        let kind = match req.get("kind").and_then(Json::as_str).map(str::parse::<SolverKind>) {
+            Some(Ok(k @ (SolverKind::KaczmarzPar | SolverKind::BakPar))) => k,
+            _ => {
+                return error_json(
+                    "invalid_input",
+                    "shard_solve kind must be kaczmarz_par or bak_par".to_string(),
+                )
+            }
+        };
+        let (Some(shard), Some(nb), Some(sweep)) = (
+            req.get("shard").and_then(Json::as_usize),
+            req.get("nb").and_then(Json::as_usize),
+            req.get("sweep").and_then(Json::as_usize),
+        ) else {
+            return error_json("invalid_input", "shard_solve needs shard/nb/sweep".to_string());
+        };
+        // Seeds cross the wire as decimal strings (u64 > 2^53 would not
+        // survive a JSON number).
+        let Some(seed) = req.get("seed").and_then(Json::as_str).and_then(|s| s.parse().ok())
+        else {
+            return error_json("invalid_input", "shard_solve needs a string \"seed\"".to_string());
+        };
+        let shuffled = req.get("order").and_then(Json::as_str) == Some("shuffled");
+        let Some(sync) = req.get("sync").and_then(|j| proto::json_to_f32s(j)) else {
+            return error_json("invalid_input", "shard_solve needs a \"sync\" array".to_string());
+        };
+
+        let key = (job.to_string(), shard);
+        if let Some(data) = req.get("data") {
+            match build_shard(kind, data) {
+                Ok(sh) => {
+                    self.shards.lock().unwrap().insert(key.clone(), Arc::new(sh));
+                }
+                Err(msg) => return error_json("invalid_input", msg),
+            }
+        }
+        // Clone the Arc out so a slow round does not serialize the other
+        // shards this worker holds.
+        let Some(sh) = self.shards.lock().unwrap().get(&key).cloned() else {
+            return error_json(
+                "invalid_input",
+                format!("no cached data for job '{job}' shard {shard}; resend with \"data\""),
+            );
+        };
+
+        match (kind, sh.as_ref()) {
+            (SolverKind::KaczmarzPar, Shard::Kaczmarz { x, y, row_norms_sq, cdf, mass }) => {
+                let ab = kaczmarz_round(x, y, row_norms_sq, cdf, *mass, sync, sweep, nb, shard, seed);
+                ObjBuilder::new()
+                    .bool("ok", true)
+                    .num("shard", shard as f64)
+                    .val("ab", proto::f32s_to_json(&ab))
+                    .build()
+            }
+            (SolverKind::BakPar, Shard::Bak { x, cninv }) => {
+                let (da, e_loc) = bak_round(x, cninv, sync, sweep, nb, shard, seed, shuffled);
+                ObjBuilder::new()
+                    .bool("ok", true)
+                    .num("shard", shard as f64)
+                    .val("da", proto::f32s_to_json(&da))
+                    .val("e_loc", proto::f32s_to_json(&e_loc))
+                    .build()
+            }
+            _ => error_json(
+                "invalid_input",
+                format!("shard {shard} of job '{job}' was cached for a different kind"),
+            ),
+        }
+    }
+}
+
+/// RAII inflight counter; `None` when the cap is hit.
+struct InflightGuard<'a>(&'a WorkerCore);
+
+impl<'a> InflightGuard<'a> {
+    fn enter(core: &'a WorkerCore) -> Option<Self> {
+        let n = core.inflight.fetch_add(1, Ordering::SeqCst) + 1;
+        if core.max_inflight != 0 && n > core.max_inflight {
+            core.inflight.fetch_sub(1, Ordering::SeqCst);
+            return None;
+        }
+        Some(InflightGuard(core))
+    }
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn error_json(kind: &str, msg: String) -> Json {
+    ObjBuilder::new().bool("ok", false).str("error_kind", kind).str("error", msg).build()
+}
+
+/// Build the cached shard state from a `data` payload. Every derived
+/// quantity replicates the in-process solver's operation sequence on
+/// the equivalent slice of the full matrix.
+fn build_shard(kind: SolverKind, data: &Json) -> Result<Shard, String> {
+    let (Some(rows), Some(cols)) = (
+        data.get("rows").and_then(Json::as_usize),
+        data.get("cols").and_then(Json::as_usize),
+    ) else {
+        return Err("shard data needs rows/cols".to_string());
+    };
+    let Some(x) = data.get("x").and_then(|j| proto::json_to_f32s(j)) else {
+        return Err("shard data needs an \"x\" array".to_string());
+    };
+    if x.len() != rows * cols || rows == 0 || cols == 0 {
+        return Err(format!("shard data: x has {} values for a {rows}x{cols} block", x.len()));
+    }
+    let x = Mat::from_col_major(rows, cols, x);
+    match kind {
+        SolverKind::KaczmarzPar => {
+            let Some(y) = data.get("y").and_then(|j| proto::json_to_f32s(j)) else {
+                return Err("kaczmarz shard data needs a \"y\" array".to_string());
+            };
+            if y.len() != rows {
+                return Err(format!("shard data: y has {} values for {rows} rows", y.len()));
+            }
+            // Same column-major mul_add pass as the full-matrix row
+            // norms, restricted to this block's rows — bit-identical.
+            let mut row_norms_sq = vec![0.0f32; rows];
+            for j in 0..cols {
+                for (rn, &v) in row_norms_sq.iter_mut().zip(x.col(j)) {
+                    *rn = v.mul_add(v, *rn);
+                }
+            }
+            // Block CDF exactly as the in-process Block construction.
+            let mass: f64 = row_norms_sq.iter().map(|&v| v as f64).sum();
+            let mut cdf = Vec::with_capacity(rows);
+            let mut acc = 0.0f64;
+            for &v in &row_norms_sq {
+                acc += if mass > 0.0 { v as f64 / mass } else { 0.0 };
+                cdf.push(acc);
+            }
+            Ok(Shard::Kaczmarz { x, y, row_norms_sq, cdf, mass })
+        }
+        SolverKind::BakPar => {
+            // Per-column norms only read their own column, so the local
+            // values equal the full matrix's over this block.
+            let cninv = crate::solver::colnorms_inv(&x);
+            Ok(Shard::Bak { x, cninv })
+        }
+        _ => Err("unsupported shard kind".to_string()),
+    }
+}
+
+/// One kaczmarz block inner sweep — the body of `kaczmarz_par_generic`'s
+/// per-block closure, on local indices. The RNG stream is keyed by
+/// `(seed, sweep * nb + shard)`, never by worker identity, so a
+/// re-dispatched shard draws the identical sample sequence.
+#[allow(clippy::too_many_arguments)]
+fn kaczmarz_round(
+    x: &Mat,
+    y: &[f32],
+    row_norms_sq: &[f32],
+    cdf: &[f64],
+    mass: f64,
+    a: Vec<f32>,
+    sweep: usize,
+    nb: usize,
+    shard: usize,
+    seed: u64,
+) -> Vec<f32> {
+    let mut ab = a;
+    if mass == 0.0 {
+        return ab; // all-zero rows; merge weight 0 on the coordinator
+    }
+    let rows = x.rows();
+    let xs = x.as_slice();
+    let mut rng = Rng::seed(stream_seed(seed, (sweep * nb + shard) as u64));
+    for _ in 0..rows {
+        let u = rng.uniform();
+        let k = match cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+            Ok(k) => k,
+            Err(k) => k.min(rows - 1),
+        };
+        let nrm = row_norms_sq[k];
+        if nrm == 0.0 {
+            continue;
+        }
+        let ri = y[k] - blas1::dot_strided(&xs[k..], rows, &ab);
+        blas1::axpy_strided(ri / nrm, &xs[k..], rows, &mut ab);
+    }
+    ab
+}
+
+/// One bak block inner sweep — the body of `bak_par_generic`'s per-block
+/// closure, on local column indices (the Fisher-Yates permutation is
+/// value-agnostic, so shuffling local indices draws the identical
+/// permutation the in-process block draws over global ones).
+#[allow(clippy::too_many_arguments)]
+fn bak_round(
+    x: &Mat,
+    cninv: &[f32],
+    e: Vec<f32>,
+    sweep: usize,
+    nb: usize,
+    shard: usize,
+    seed: u64,
+    shuffled: bool,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut e_loc = e;
+    let blk_len = x.cols();
+    let mut da = vec![0.0f32; blk_len];
+    let mut order: Vec<usize> = (0..blk_len).collect();
+    if shuffled {
+        let mut rng = Rng::seed(stream_seed(seed, (sweep * nb + shard) as u64));
+        rng.shuffle(&mut order);
+    }
+    for &j in &order {
+        let cn = cninv[j];
+        if cn == 0.0 {
+            continue; // zero column
+        }
+        da[j] = blas1::cd_step(x.col(j), &mut e_loc, cn);
+    }
+    (da, e_loc)
+}
+
+/// A newline-JSON TCP front-end over a [`WorkerCore`]: one request
+/// object per line, one reply per line, connection-per-thread — the
+/// same wire discipline as the coordinator server.
+pub struct WorkerServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl WorkerServer {
+    /// Bind on `127.0.0.1:port` (0 = ephemeral) and start accepting.
+    pub fn bind(core: Arc<WorkerCore>, port: u16) -> std::io::Result<WorkerServer> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept = std::thread::Builder::new()
+            .name("cluster-worker-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let core = core.clone();
+                    let stop3 = stop2.clone();
+                    let _ = std::thread::Builder::new()
+                        .name("cluster-worker-conn".into())
+                        .spawn(move || serve_conn(stream, &core, &stop3));
+                }
+            })?;
+        Ok(WorkerServer { addr, stop, accept_thread: Mutex::new(Some(accept)) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept thread (live connections
+    /// drain on their own).
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_thread.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_conn(stream: TcpStream, core: &WorkerCore, stop: &AtomicBool) {
+    let Ok(peer) = stream.try_clone() else { return };
+    let mut writer = peer;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let reply = match Json::parse(line) {
+            Ok(req) => {
+                if req.get("cmd").and_then(Json::as_str) == Some("shutdown") {
+                    let bye =
+                        ObjBuilder::new().bool("ok", true).str("bye", "bye").build().to_string();
+                    let _ = writeln!(writer, "{bye}");
+                    stop.store(true, Ordering::SeqCst);
+                    return;
+                }
+                core.handle_request(&req)
+            }
+            Err(e) => ObjBuilder::new()
+                .bool("ok", false)
+                .str("error_kind", "bad_json")
+                .str("error", format!("{e}"))
+                .build(),
+        };
+        let line = reply.to_string();
+        if writeln!(writer, "{line}").is_err() {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::SolveOptions;
+    use crate::util::rng::Rng as TestRng;
+
+    fn kaczmarz_data_json(x: &Mat, y: &[f32]) -> Json {
+        ObjBuilder::new()
+            .num("start", 0.0)
+            .num("rows", x.rows() as f64)
+            .num("cols", x.cols() as f64)
+            .val("x", proto::f32s_to_json(x.as_slice()))
+            .val("y", proto::f32s_to_json(y))
+            .build()
+    }
+
+    #[test]
+    fn join_and_heartbeat_report_identity_and_cache() {
+        let core = WorkerCore::new("w0");
+        let j = core.handle_request(&Json::parse(r#"{"cmd": "join"}"#).unwrap());
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("worker_id").unwrap().as_str(), Some("w0"));
+        let cmds: Vec<&str> =
+            j.get("commands").unwrap().items().iter().filter_map(Json::as_str).collect();
+        assert!(cmds.contains(&"shard_solve"));
+        let h = core.handle_request(&Json::parse(r#"{"cmd": "heartbeat"}"#).unwrap());
+        assert_eq!(h.get("shards_cached").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn unknown_command_and_bad_version_are_unsupported() {
+        let core = WorkerCore::new("w0");
+        let r = core.handle_request(&Json::parse(r#"{"cmd": "frobnicate"}"#).unwrap());
+        assert_eq!(r.get("error_kind").unwrap().as_str(), Some("unsupported"));
+        let r = core.handle_request(&Json::parse(r#"{"v": 3, "cmd": "ping"}"#).unwrap());
+        assert_eq!(r.get("error_kind").unwrap().as_str(), Some("unsupported"));
+    }
+
+    #[test]
+    fn single_shard_round_matches_in_process_solver_block() {
+        // One shard covering the whole system: a kaczmarz round must
+        // reproduce solve_kaczmarz_par's first sweep at threads=1.
+        let mut rng = TestRng::seed(77);
+        let x = Mat::randn(&mut rng, 30, 6);
+        let a_true: Vec<f32> = (0..6).map(|_| rng.normal_f32()).collect();
+        let y = x.matvec(&a_true);
+        let opts = SolveOptions::default();
+
+        let core = WorkerCore::new("w0");
+        let round = proto::ShardRound {
+            job: "t1",
+            kind: SolverKind::KaczmarzPar,
+            shard: 0,
+            nb: 1,
+            sweep: 0,
+            seed: opts.seed,
+            shuffled: false,
+            sync: &vec![0.0f32; 6],
+            deadline_ms: None,
+        };
+        let mut req = proto::shard_solve_request(&round, None);
+        if let Json::Obj(m) = &mut req {
+            m.insert("data".into(), kaczmarz_data_json(&x, &y));
+        }
+        let reply = core.handle_request(&req);
+        assert_eq!(reply.get("ok").unwrap().as_bool(), Some(true), "{reply:?}");
+        let ab = proto::json_to_f32s(reply.get("ab").unwrap()).unwrap();
+
+        let mut o = opts.clone();
+        o.max_sweeps = 1;
+        o.tol = 0.0;
+        o.threads = 1;
+        let rep = crate::parallel::solve_kaczmarz_par(&x, &y, &o);
+        // With one block the merge weight is 1, so the merged iterate
+        // IS the block iterate.
+        assert_eq!(ab, rep.a, "worker round must equal the in-process block sweep");
+
+        // The shard is cached now: a data-free round for sweep 1 works.
+        let round2 = proto::ShardRound { sweep: 1, sync: &ab, ..round };
+        let reply2 = core.handle_request(&proto::shard_solve_request(&round2, None));
+        assert_eq!(reply2.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(core.shards_cached(), 1);
+
+        // Release drops the cache; the next data-free round is rejected.
+        let rel = core.handle_request(&proto::release_request("t1"));
+        assert_eq!(rel.get("released").unwrap().as_usize(), Some(1));
+        let reply3 = core.handle_request(&proto::shard_solve_request(&round2, None));
+        assert_eq!(reply3.get("error_kind").unwrap().as_str(), Some("invalid_input"));
+    }
+
+    #[test]
+    fn inflight_cap_sheds_with_retry_hint() {
+        // Cap 0 is unlimited; a saturated gate answers overloaded. The
+        // gate counts entry, so driving it via a zero-cap... instead
+        // assert the guard arithmetic directly with max_inflight = 1 and
+        // a manually held guard.
+        let core = WorkerCore::new("w0").with_max_inflight(1);
+        let g = InflightGuard::enter(&core).expect("first slot free");
+        assert!(InflightGuard::enter(&core).is_none(), "cap of 1 is full");
+        drop(g);
+        assert!(InflightGuard::enter(&core).is_some(), "slot freed");
+    }
+
+    #[test]
+    fn tcp_server_roundtrips_and_stops() {
+        let core = Arc::new(WorkerCore::new("w-tcp"));
+        let srv = WorkerServer::bind(core, 0).unwrap();
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        s.write_all(b"{\"cmd\": \"ping\"}\n").unwrap();
+        let mut line = String::new();
+        BufReader::new(s.try_clone().unwrap()).read_line(&mut line).unwrap();
+        assert!(line.contains("pong"), "{line}");
+        srv.stop();
+    }
+}

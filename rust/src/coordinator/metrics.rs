@@ -164,6 +164,18 @@ pub struct Metrics {
     /// Times a streaming consumer blocked waiting on the prefetch thread
     /// (high values mean the job is IO-bound at the configured budget).
     pub stream_buffer_stalls: AtomicU64,
+    /// Shard dispatches sent to cluster workers (one per shard per sync
+    /// round; re-dispatches after a worker loss count again).
+    pub shards_dispatched: AtomicU64,
+    /// Shards re-dispatched to a surviving worker after a worker died
+    /// mid-solve (each also flips the outcome's `resharded` flag).
+    pub reshards: AtomicU64,
+    /// Global sync rounds completed by cluster solves (one mass-weighted
+    /// merge each).
+    pub sync_rounds: AtomicU64,
+    /// Gauge: cluster workers currently alive in the membership view
+    /// (0 when no cluster is configured).
+    pub cluster_workers: AtomicU64,
     /// Jobs executed per backend, indexed in [`SolverKind::CONCRETE`]
     /// order (the backend that actually ran, post-routing).
     backend_jobs: [AtomicU64; SolverKind::CONCRETE.len()],
@@ -196,6 +208,10 @@ impl Default for Metrics {
             stream_chunks_read: AtomicU64::new(0),
             stream_bytes_read: AtomicU64::new(0),
             stream_buffer_stalls: AtomicU64::new(0),
+            shards_dispatched: AtomicU64::new(0),
+            reshards: AtomicU64::new(0),
+            sync_rounds: AtomicU64::new(0),
+            cluster_workers: AtomicU64::new(0),
             backend_jobs: std::array::from_fn(|_| AtomicU64::new(0)),
             pool: OnceLock::new(),
             solve_latency: Histogram::new(),
@@ -278,6 +294,10 @@ impl Metrics {
             .num("stream_chunks_read", c(&self.stream_chunks_read))
             .num("stream_bytes_read", c(&self.stream_bytes_read))
             .num("stream_buffer_stalls", c(&self.stream_buffer_stalls))
+            .num("shards_dispatched", c(&self.shards_dispatched))
+            .num("reshards", c(&self.reshards))
+            .num("sync_rounds", c(&self.sync_rounds))
+            .num("cluster_workers", c(&self.cluster_workers))
             .num("workers", workers)
             .num("workers_busy", busy)
             .num("jobs_inflight", inflight)
@@ -325,6 +345,9 @@ impl Metrics {
         counter(&mut out, "stream_chunks_read", c(&self.stream_chunks_read));
         counter(&mut out, "stream_bytes_read", c(&self.stream_bytes_read));
         counter(&mut out, "stream_buffer_stalls", c(&self.stream_buffer_stalls));
+        counter(&mut out, "shards_dispatched", c(&self.shards_dispatched));
+        counter(&mut out, "reshards", c(&self.reshards));
+        counter(&mut out, "sync_rounds", c(&self.sync_rounds));
 
         out.push_str("# TYPE pallas_backend_jobs_total counter\n");
         for (i, &kind) in SolverKind::CONCRETE.iter().enumerate() {
@@ -339,6 +362,7 @@ impl Metrics {
             out.push_str(&format!("# TYPE pallas_{name} gauge\npallas_{name} {v}\n"));
         };
         gauge(&mut out, "job_queue_depth", c(&self.job_queue_depth) as f64);
+        gauge(&mut out, "cluster_workers", c(&self.cluster_workers) as f64);
         let (workers, busy, inflight, panicked) = match self.pool.get() {
             Some(p) => (
                 p.workers() as f64,
@@ -623,6 +647,25 @@ mod tests {
         assert!(text.contains("pallas_checkpoints_written_total 6"));
         assert!(text.contains("pallas_resumes_total 7"));
         assert!(text.contains("pallas_corrupt_chunks_total 8"));
+    }
+
+    #[test]
+    fn cluster_counters_exported() {
+        let m = Metrics::new();
+        m.shards_dispatched.store(12, Ordering::Relaxed);
+        m.reshards.store(2, Ordering::Relaxed);
+        m.sync_rounds.store(6, Ordering::Relaxed);
+        m.cluster_workers.store(3, Ordering::Relaxed);
+        let j = m.to_json();
+        assert_eq!(j.get("shards_dispatched").unwrap().as_f64(), Some(12.0));
+        assert_eq!(j.get("reshards").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("sync_rounds").unwrap().as_f64(), Some(6.0));
+        assert_eq!(j.get("cluster_workers").unwrap().as_f64(), Some(3.0));
+        let text = m.to_prometheus();
+        assert!(text.contains("pallas_shards_dispatched_total 12"));
+        assert!(text.contains("pallas_reshards_total 2"));
+        assert!(text.contains("pallas_sync_rounds_total 6"));
+        assert!(text.contains("# TYPE pallas_cluster_workers gauge\npallas_cluster_workers 3"));
     }
 
     #[test]

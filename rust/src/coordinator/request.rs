@@ -323,6 +323,10 @@ pub struct SolveOutcome {
     /// was escalated (`SolveRequest::escalate`); `backend` is set to the
     /// same kind.
     pub escalated_to: Option<SolverKind>,
+    /// True when a cluster solve lost a worker mid-solve and had to
+    /// re-dispatch its shards to survivors
+    /// ([`crate::cluster::ClusterSolveOutcome::resharded`]).
+    pub resharded: bool,
 }
 
 #[cfg(test)]

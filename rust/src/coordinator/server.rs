@@ -64,6 +64,15 @@
 //! `"telemetry"` object with the trace id, per-stage span timeline
 //! (`queue_wait`/`route`/`solve`/...), and the solver's convergence
 //! trajectory (see [`crate::obs`]).
+//!
+//! Cluster commands (protocol v1.2, additive — `proto_version` stays 1):
+//! the server also answers the worker vocabulary — `join`, `heartbeat`,
+//! and `shard_solve` (see [`crate::cluster`] and `PROTOCOL.md`) — so a
+//! coordinator node can double as a shard worker for its peers, and
+//! `hello` advertises per-kind `supports_sharding` plus the full
+//! `commands` list so clients can negotiate v1.2 before using it. When
+//! the coordinator was started with [`crate::coordinator::CoordinatorConfig::cluster`],
+//! a solve that survived a worker death carries `"resharded": true`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -123,6 +132,9 @@ impl Server {
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
+        // The embedded v1.2 worker: lets this node answer `shard_solve`
+        // for peer coordinators over the same port.
+        let worker = Arc::new(crate::cluster::WorkerCore::new(format!("coord-{addr}")));
         let accept_thread = std::thread::Builder::new()
             .name("bak-accept".into())
             .spawn(move || {
@@ -134,8 +146,9 @@ impl Server {
                         Ok((stream, _)) => {
                             let coord = coord.clone();
                             let stop3 = stop2.clone();
+                            let worker = worker.clone();
                             handlers.push(std::thread::spawn(move || {
-                                handle_conn(stream, coord, stop3);
+                                handle_conn(stream, coord, worker, stop3);
                             }));
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -181,7 +194,12 @@ impl Drop for Server {
     }
 }
 
-fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>, stop: Arc<AtomicBool>) {
+fn handle_conn(
+    stream: TcpStream,
+    coord: Arc<Coordinator>,
+    worker: Arc<crate::cluster::WorkerCore>,
+    stop: Arc<AtomicBool>,
+) {
     let peer = stream.peer_addr().ok();
     // Read timeout so the handler can observe the stop flag even while a
     // client keeps an idle connection open (otherwise Server::stop would
@@ -235,7 +253,7 @@ fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>, stop: Arc<AtomicBool>
         if trimmed.is_empty() {
             continue;
         }
-        let resp = handle_line(&trimmed, &coord, &stop);
+        let resp = handle_line(&trimmed, &coord, &worker, &stop);
         let mut out = resp.to_string();
         out.push('\n');
         if writer.write_all(out.as_bytes()).is_err() {
@@ -249,7 +267,12 @@ fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>, stop: Arc<AtomicBool>
     );
 }
 
-fn handle_line(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
+fn handle_line(
+    line: &str,
+    coord: &Coordinator,
+    worker: &crate::cluster::WorkerCore,
+    stop: &AtomicBool,
+) -> Json {
     let req = match Json::parse(line) {
         Ok(j) => j,
         Err(e) => {
@@ -276,6 +299,9 @@ fn handle_line(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
             }
             "ping" => ObjBuilder::new().bool("ok", true).str("pong", "pong").build(),
             "hello" => hello_json(),
+            // v1.2 cluster vocabulary: delegated to the embedded worker
+            // core (which validates "v" and shapes its own errors).
+            "join" | "heartbeat" | "shard_solve" => worker.handle_request(&req),
             "faults" => match req.get("plan").and_then(Json::as_str) {
                 Some(spec) => match crate::robust::faults::FaultPlan::parse(spec) {
                     Ok(plan) => {
@@ -342,6 +368,9 @@ fn handle_line(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
                     if let Some(kind) = out.escalated_to {
                         b = b.str("escalated_to", kind.to_string());
                     }
+                    if out.resharded {
+                        b = b.bool("resharded", true);
+                    }
                     if let Some(t) = &out.telemetry {
                         b = b.val("telemetry", t.to_json());
                     }
@@ -354,8 +383,24 @@ fn handle_line(line: &str, coord: &Coordinator, stop: &AtomicBool) -> Json {
     }
 }
 
+/// Every `cmd` this server answers, advertised by `hello` so v1.2
+/// clients can detect the cluster vocabulary before using it. The
+/// cluster trio at the end is shared with [`crate::cluster::worker`].
+const SERVER_COMMANDS: [&str; 10] = [
+    "ping",
+    "hello",
+    "metrics",
+    "metrics_prom",
+    "traces",
+    "faults",
+    "shutdown",
+    "join",
+    "heartbeat",
+    "shard_solve",
+];
+
 /// The `{"cmd": "hello"}` response: protocol version, concrete solver
-/// kinds, and each kind's capability flags.
+/// kinds, each kind's capability flags, and the command vocabulary.
 fn hello_json() -> Json {
     let kinds = Json::Arr(
         SolverKind::CONCRETE
@@ -377,15 +422,20 @@ fn hello_json() -> Json {
                     .bool("supports_parallel", c.supports_parallel)
                     .bool("supports_streaming", c.supports_streaming)
                     .bool("supports_probe", c.supports_probe)
+                    .bool("supports_sharding", c.supports_sharding)
                     .build(),
             );
         }
     }
+    let commands = Json::Arr(
+        SERVER_COMMANDS.iter().map(|c| Json::Str((*c).to_string())).collect(),
+    );
     ObjBuilder::new()
         .bool("ok", true)
         .num("proto_version", PROTO_VERSION as f64)
         .val("solver_kinds", kinds)
         .val("capabilities", caps.build())
+        .val("commands", commands)
         .build()
 }
 
@@ -896,6 +946,56 @@ mod tests {
             Some(true)
         );
         assert_eq!(caps.get("qr").unwrap().get("iterative").unwrap().as_bool(), Some(false));
+        server.stop();
+    }
+
+    #[test]
+    fn hello_advertises_sharding_and_the_v12_commands() {
+        let (_c, server) = start();
+        let j = roundtrip(server.addr(), r#"{"cmd": "hello"}"#);
+        let caps = j.get("capabilities").unwrap();
+        // Exactly the block-parallel pair shards; the rest do not.
+        for kind in SolverKind::CONCRETE {
+            let Some(c) = caps.get(kind.as_str()) else { continue };
+            let sharding = c.get("supports_sharding").unwrap().as_bool().unwrap();
+            let expect = matches!(kind, SolverKind::KaczmarzPar | SolverKind::BakPar);
+            assert_eq!(sharding, expect, "supports_sharding for {kind}");
+        }
+        // The full command vocabulary, cluster trio included.
+        let cmds: Vec<&str> = j
+            .get("commands")
+            .unwrap()
+            .items()
+            .iter()
+            .map(|c| c.as_str().unwrap())
+            .collect();
+        for cmd in ["join", "heartbeat", "shard_solve", "ping", "hello", "metrics"] {
+            assert!(cmds.contains(&cmd), "'{cmd}' missing from {cmds:?}");
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn cluster_commands_are_answered_by_the_embedded_worker() {
+        let (_c, server) = start();
+        // join: identity + command vocabulary.
+        let j = roundtrip(server.addr(), r#"{"v": 1, "cmd": "join"}"#);
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true), "{j:?}");
+        assert_eq!(j.get("proto_version").unwrap().as_f64(), Some(1.0));
+        assert!(j.get("worker_id").unwrap().as_str().unwrap().starts_with("coord-"));
+        // heartbeat: liveness + cache occupancy.
+        let h = roundtrip(server.addr(), r#"{"cmd": "heartbeat"}"#);
+        assert_eq!(h.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(h.get("shards_cached").unwrap().as_f64(), Some(0.0));
+        // shard_solve without a job is a structured rejection, not a
+        // dropped connection.
+        let s = roundtrip(server.addr(), r#"{"cmd": "shard_solve"}"#);
+        assert_eq!(s.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(s.get("error_kind").unwrap().as_str(), Some("invalid_input"));
+        // And a version the worker does not speak is rejected the same
+        // way the solve path rejects it.
+        let v = roundtrip(server.addr(), r#"{"v": 3, "cmd": "shard_solve"}"#);
+        assert_eq!(v.get("error_kind").unwrap().as_str(), Some("unsupported"));
         server.stop();
     }
 

@@ -86,6 +86,13 @@ pub struct CoordinatorConfig {
     /// escalation-enabled solve. The default only watches for NaN/Inf and
     /// sustained divergence; stagnation detection is opt-in.
     pub watchdog: crate::robust::WatchdogConfig,
+    /// Distributed shard cluster ([`crate::cluster`]): when set, dense
+    /// jobs routed to the block-parallel pair (`kaczmarz_par` /
+    /// `bak_par`) are sharded across the configured workers instead of
+    /// across local threads — bit-identically, at equal `(seed, shards)`.
+    /// Every other job (other backends, sparse/streamed matrices, and
+    /// the guarded durable/escalating path) still runs in-process.
+    pub cluster: Option<crate::cluster::ClusterConfig>,
 }
 
 impl Default for CoordinatorConfig {
@@ -101,8 +108,17 @@ impl Default for CoordinatorConfig {
             journal_dir: None,
             checkpoint_every: 8,
             watchdog: crate::robust::WatchdogConfig::default(),
+            cluster: None,
         }
     }
+}
+
+/// The armed cluster path, derived from [`CoordinatorConfig::cluster`]
+/// once at startup and shared by every worker thread.
+struct ClusterState {
+    driver: Arc<crate::cluster::ClusterDriver>,
+    /// Fixed shard count override; `None` uses each request's `threads`.
+    shards: Option<usize>,
 }
 
 /// Durable-execution knobs, derived from [`CoordinatorConfig`] once at
@@ -141,6 +157,7 @@ pub struct Coordinator {
     gate: Option<Arc<crate::robust::AdmissionGate>>,
     max_queue_wait_ms: u64,
     degraded_sweeps: Option<usize>,
+    cluster: Option<Arc<ClusterState>>,
 }
 
 impl Coordinator {
@@ -178,6 +195,20 @@ impl Coordinator {
             watchdog: config.watchdog,
         };
 
+        // Arm the cluster path: join-probe the roster now (unreachable
+        // workers start dead and solves fail typed rather than hanging),
+        // seed the `cluster_workers` gauge, and start the heartbeat when
+        // one is configured.
+        let cluster: Option<Arc<ClusterState>> = config.cluster.as_ref().map(|cfg| {
+            let driver = Arc::new(crate::cluster::ClusterDriver::from_config(cfg));
+            driver.attach_metrics(metrics.clone());
+            emit(Level::Info, "coordinator", format_args!(
+                "cluster armed: {}/{} workers alive",
+                driver.membership().alive_count(),
+                driver.membership().len()));
+            Arc::new(ClusterState { driver, shards: cfg.shards })
+        });
+
         // The worker pool: N workers pulling jobs from a bounded injector,
         // panic-isolated per job (a panicking solve drops its reply
         // senders — clients observe a typed Service error — and the
@@ -187,6 +218,7 @@ impl Coordinator {
             let engine = engine.clone();
             let traces = traces.clone();
             let dur = durability.clone();
+            let cluster = cluster.clone();
             Arc::new(Executor::start(
                 "bak-worker",
                 config.workers.max(1),
@@ -199,7 +231,7 @@ impl Coordinator {
                     // panic-isolation path — reply senders (and permits)
                     // drop, clients observe a typed Service error.
                     crate::robust::faults::maybe_panic_worker();
-                    run_job(env, engine.as_ref(), &metrics, &traces, &dur);
+                    run_job(env, engine.as_ref(), &metrics, &traces, &dur, cluster.as_deref());
                 },
             ))
         };
@@ -239,6 +271,7 @@ impl Coordinator {
                 .then(|| crate::robust::AdmissionGate::new(config.max_inflight)),
             max_queue_wait_ms: config.max_queue_wait_ms,
             degraded_sweeps: config.degraded_sweeps,
+            cluster,
         }
     }
 
@@ -364,6 +397,7 @@ impl Coordinator {
                 degraded: false,
                 resumed: false,
                 escalated_to: None,
+                resharded: false,
             }),
             Err(e) => SolveOutcome {
                 id: 0,
@@ -375,6 +409,7 @@ impl Coordinator {
                 degraded: false,
                 resumed: false,
                 escalated_to: None,
+                resharded: false,
             },
         }
     }
@@ -393,6 +428,11 @@ impl Coordinator {
     /// The PJRT engine, when artifacts were loaded.
     pub fn engine(&self) -> Option<&Arc<Engine>> {
         self.engine.as_ref()
+    }
+
+    /// The cluster driver, when [`CoordinatorConfig::cluster`] armed one.
+    pub fn cluster(&self) -> Option<&Arc<crate::cluster::ClusterDriver>> {
+        self.cluster.as_ref().map(|c| &c.driver)
     }
 
     /// Graceful shutdown: stop intake, drain, join.
@@ -496,6 +536,7 @@ fn run_job(
     metrics: &Metrics,
     traces: &TraceRing,
     dur: &Durability,
+    cluster: Option<&ClusterState>,
 ) {
     // `_permits` stays alive until the function returns, so the admission
     // gate frees capacity only after every reply has been sent.
@@ -525,6 +566,7 @@ fn run_job(
                 degraded: job.degraded,
                 resumed: false,
                 escalated_to: None,
+                resharded: false,
             });
         }
         return;
@@ -567,8 +609,17 @@ fn run_job(
     // guarded path: always singleton (the scheduler guarantees it), with
     // checkpoint + watchdog probes folded in around the solve.
     let guarded = job.len() == 1 && (job.job_id.is_some() || job.escalate);
+    // Cluster interception: dense jobs on the block-parallel pair go out
+    // over the wire instead of across local threads. Guarded jobs stay
+    // in-process — the checkpoint/watchdog probes hook the local solver
+    // loop, which a remote shard sweep has no access to.
+    let clustered = !guarded
+        && matches!(decision.backend, SolverKind::KaczmarzPar | SolverKind::BakPar)
+        && matches!(&job.x, SharedMatrix::Dense(_));
     let outcomes = if guarded {
         vec![run_guarded(&job, decision.backend, engine, metrics, dur)]
+    } else if let (true, Some(cl), SharedMatrix::Dense(x)) = (clustered, cluster, &job.x) {
+        execute_cluster_job(cl, &job, x, decision.backend, trace_arg)
     } else {
         execute_job(&job, decision.backend, engine, metrics, trace_arg)
     };
@@ -880,6 +931,7 @@ fn run_guarded(
         degraded: job.degraded,
         resumed,
         escalated_to,
+        resharded: false,
     }
 }
 
@@ -1099,6 +1151,7 @@ fn execute_job(
                                     degraded: job.degraded,
                                     resumed: false,
                                     escalated_to: None,
+                                    resharded: false,
                                 })
                                 .collect()
                         }
@@ -1156,6 +1209,7 @@ fn execute_dense_job(
                             degraded: job.degraded,
                             resumed: false,
                             escalated_to: None,
+                            resharded: false,
                         }
                     })
                     .collect()
@@ -1214,6 +1268,7 @@ fn execute_dense_job(
                     degraded: job.degraded,
                     resumed: false,
                     escalated_to: None,
+                    resharded: false,
                 })
                 .collect()
         }
@@ -1247,6 +1302,53 @@ fn execute_dense_job(
     }
 }
 
+/// Execute a dense block-parallel job over the cluster, member by member
+/// (the shard caches on the workers are shared across members of the same
+/// job matrix only through the per-round `(job, shard)` key — each solve
+/// is its own driver job). The shard count plays `threads`' role: a
+/// config override pins it, otherwise the request's `threads` knob
+/// carries over so the result stays bit-identical to the in-process
+/// solver the router would have run.
+fn execute_cluster_job(
+    cl: &ClusterState,
+    job: &SolveJob,
+    x: &Mat,
+    backend: SolverKind,
+    trace: Option<(&TraceCtx, usize)>,
+) -> Vec<SolveOutcome> {
+    if let Err(e) = Problem::validate_matrix(x) {
+        return per_member(job, backend, |_| Err(e.clone()));
+    }
+    let mut opts = job.opts.clone();
+    if let Some(shards) = cl.shards {
+        opts.threads = shards.max(1);
+    }
+    job.members
+        .iter()
+        .map(|(_, y)| {
+            let t0 = Instant::now();
+            let (report, resharded) = match Problem::prevalidated(x, y)
+                .and_then(|_| cl.driver.solve(backend, x, y, &opts, trace))
+            {
+                Ok(out) => (Ok(out.report), out.resharded),
+                Err(e) => (Err(e), false),
+            };
+            SolveOutcome {
+                id: 0,
+                report,
+                backend,
+                seconds: t0.elapsed().as_secs_f64(),
+                batch_size: 0,
+                telemetry: None,
+                degraded: job.degraded,
+                resumed: false,
+                escalated_to: None,
+                resharded,
+            }
+        })
+        .collect()
+}
+
 fn per_member(
     job: &SolveJob,
     backend: SolverKind,
@@ -1267,6 +1369,7 @@ fn per_member(
                 degraded: job.degraded,
                 resumed: false,
                 escalated_to: None,
+                resharded: false,
             }
         })
         .collect()
@@ -2026,6 +2129,85 @@ mod tests {
         assert!(crate::util::stats::rel_l2(&rep.a, &a_true) < 1e-3);
         use std::sync::atomic::Ordering::Relaxed;
         assert_eq!(coord.metrics().escalations.load(Relaxed), 2);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn clustered_kaczmarz_par_is_bit_identical_to_in_process() {
+        // Two real TCP workers behind a clustered coordinator: the
+        // sharded result must equal solve_kaczmarz_par at the same
+        // (seed, shards = threads), bit for bit.
+        use crate::cluster::{WorkerCore, WorkerServer};
+        let w1 = WorkerServer::bind(Arc::new(WorkerCore::new("svc-w1")), 0).unwrap();
+        let w2 = WorkerServer::bind(Arc::new(WorkerCore::new("svc-w2")), 0).unwrap();
+        let coord = Coordinator::start(CoordinatorConfig {
+            cluster: Some(crate::cluster::ClusterConfig {
+                workers: vec![w1.addr().to_string(), w2.addr().to_string()],
+                shards: None,
+                heartbeat_ms: 0,
+            }),
+            ..CoordinatorConfig::default()
+        });
+        let (x, y, _) = planted(460, 48, 6);
+        let opts = solver::SolveOptions::builder()
+            .max_sweeps(12)
+            .tol(1e-10)
+            .threads(3)
+            .build();
+        let reference = crate::parallel::solve_kaczmarz_par(&x, &y, &opts);
+        let mut req = SolveRequest::new(1, x.clone(), y.clone());
+        req.backend = SolverKind::KaczmarzPar;
+        req.opts = opts;
+        let out = coord.solve_blocking(req);
+        assert_eq!(out.backend, SolverKind::KaczmarzPar);
+        assert!(!out.resharded, "no worker died");
+        let rep = out.report.expect("clustered solve ok");
+        assert_eq!(rep.a, reference.a, "iterate differs from in-process");
+        assert_eq!(rep.e, reference.e, "residual differs from in-process");
+        assert_eq!(rep.history, reference.history);
+        assert_eq!(rep.sweeps, reference.sweeps);
+        assert_eq!(rep.stop, reference.stop);
+        use std::sync::atomic::Ordering::Relaxed;
+        let m = coord.metrics();
+        assert!(m.shards_dispatched.load(Relaxed) >= 3, "3 shards per round");
+        assert_eq!(m.sync_rounds.load(Relaxed), rep.sweeps as u64);
+        assert_eq!(m.reshards.load(Relaxed), 0);
+        assert_eq!(m.cluster_workers.load(Relaxed), 2);
+        coord.shutdown();
+        w1.stop();
+        w2.stop();
+    }
+
+    #[test]
+    fn clustered_coordinator_keeps_non_sharding_backends_in_process() {
+        // A dead roster must not affect kinds without supports_sharding:
+        // they never touch the cluster path.
+        let coord = Coordinator::start(CoordinatorConfig {
+            cluster: Some(crate::cluster::ClusterConfig {
+                workers: vec!["127.0.0.1:9".into()], // unreachable
+                shards: None,
+                heartbeat_ms: 0,
+            }),
+            ..CoordinatorConfig::default()
+        });
+        let (x, y, a_true) = planted(461, 200, 16);
+        let mut req = SolveRequest::new(2, x, y);
+        req.backend = SolverKind::Bak;
+        req.opts = solver::SolveOptions::accurate();
+        let out = coord.solve_blocking(req);
+        assert_eq!(out.backend, SolverKind::Bak);
+        let rep = out.report.expect("in-process solve unaffected by dead cluster");
+        assert!(crate::util::stats::rel_l2(&rep.a, &a_true) < 1e-3);
+        // But a sharding kind against the dead roster fails typed.
+        let (x, y, _) = planted(462, 40, 4);
+        let mut req = SolveRequest::new(3, x, y);
+        req.backend = SolverKind::KaczmarzPar;
+        req.opts.threads = 2;
+        let out = coord.solve_blocking(req);
+        assert!(
+            matches!(out.report, Err(SolverError::Service(_))),
+            "sharded solve against an all-dead roster is a typed Service error"
+        );
         coord.shutdown();
     }
 

@@ -336,6 +336,43 @@
 //!   ladder (BAK → CGLS → QR) and the reply names the survivor in
 //!   `"escalated_to"`. Metrics: `escalations`, `checkpoints_written`,
 //!   `resumes`, `corrupt_chunks`.
+//!
+//! ## Distributed solving
+//!
+//! The block-parallel pair shards across *processes* the same way it
+//! shards across threads: between sync points the per-block work of
+//! `kaczmarz_par` (row blocks) and `bak_par` (column blocks) is
+//! independent, and only the O(obs)/O(vars) sync vectors move. The
+//! [`cluster`] module runs that scheme over an additive extension of the
+//! wire protocol (v1.2 — `join`/`heartbeat`/`shard_solve`, `"v"` stays 1;
+//! see `PROTOCOL.md` §cluster): a [`cluster::ClusterDriver`] inside the
+//! coordinator keeps all global solver state, farms the per-sweep block
+//! closures out to [`cluster::WorkerCore`] processes, and merges with the
+//! same f64 mass-weighted fold the in-process schedulers use. For a fixed
+//! `(seed, shards)` the clustered result is **bit-identical** to
+//! [`parallel::solve_kaczmarz_par`] / [`parallel::solve_bak_par`] with
+//! `threads = shards` — RNG streams key off `(seed, sweep, shard)`, never
+//! off which worker ran the shard, so even a mid-solve worker loss (the
+//! survivors absorb the dead worker's shards, warm-started from the last
+//! synced iterate, and the reply carries `"resharded": true`) leaves the
+//! answer unchanged. Two terminals:
+//!
+//! ```text
+//! $ solvebak serve-worker --port 7450 &
+//! $ solvebak serve-worker --port 7451 &
+//! $ solvebak serve-tcp --port 7452 --cluster \
+//!       --workers-addrs 127.0.0.1:7450,127.0.0.1:7451 --shards 4
+//! $ echo '{"id":1,"obs":3,"vars":2,"backend":"kaczmarz_par","threads":4,
+//!          "x":[1,0,0,0,1,0],"y":[2,3,0]}' | nc 127.0.0.1 7452
+//! {"ok":true,...}
+//! ```
+//!
+//! `hello` advertises the per-backend `supports_sharding` capability flag
+//! (true exactly for `kaczmarz_par`/`bak_par`) plus the server's command
+//! list; workers answering `overloaded` feed the coordinator's
+//! [`client::RetryPolicy`] backoff, per-shard deadlines derive from the
+//! job's `deadline_ms`, and the metrics registry exports
+//! `cluster_workers`, `shards_dispatched`, `reshards`, and `sync_rounds`.
 
 pub mod util;
 pub mod obs;
@@ -349,6 +386,7 @@ pub mod robust;
 pub mod api;
 pub mod runtime;
 pub mod coordinator;
+pub mod cluster;
 pub mod client;
 pub mod bench;
 pub mod cli;

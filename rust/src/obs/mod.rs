@@ -228,6 +228,18 @@ impl SolveProbe for MultiProbe {
     }
 }
 
+/// Stable span names for per-shard cluster spans. [`SpanRecord::name`]
+/// is `&'static str` (so the hot path never allocates); a static table
+/// covers the realistic shard counts and everything past it shares one
+/// overflow name.
+pub fn shard_span_name(i: usize) -> &'static str {
+    const NAMES: [&str; 16] = [
+        "shard0", "shard1", "shard2", "shard3", "shard4", "shard5", "shard6", "shard7",
+        "shard8", "shard9", "shard10", "shard11", "shard12", "shard13", "shard14", "shard15",
+    ];
+    NAMES.get(i).copied().unwrap_or("shard")
+}
+
 static TRACE_IDS: AtomicU64 = AtomicU64::new(1);
 
 /// Mint a process-unique trace id (monotone from 1).
@@ -541,6 +553,14 @@ mod tests {
             p.on_sweep(50 * k, 1.0, 0);
         }
         assert!(!p.snapshot().is_empty());
+    }
+
+    #[test]
+    fn shard_span_names_stable_with_overflow() {
+        assert_eq!(shard_span_name(0), "shard0");
+        assert_eq!(shard_span_name(15), "shard15");
+        assert_eq!(shard_span_name(16), "shard");
+        assert_eq!(shard_span_name(usize::MAX), "shard");
     }
 
     #[test]

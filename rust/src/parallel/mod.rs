@@ -44,18 +44,73 @@ pub fn env_threads() -> Option<usize> {
 }
 
 /// The configured default worker/thread count: [`env_threads`] when set,
-/// otherwise the machine's available parallelism (1 when that cannot be
-/// determined).
+/// otherwise the machine's available parallelism capped at the cgroup v2
+/// CPU quota (1 when neither can be determined).
+///
+/// Inside a container, `available_parallelism` often reports the host's
+/// core count while the cgroup caps the process at a fraction of it;
+/// sizing the pool to the host count oversubscribes the quota and every
+/// sweep pays the throttle. The quota is read from
+/// `/sys/fs/cgroup/cpu.max` (cgroup v2: `"<quota> <period>"` in
+/// microseconds, or `"max <period>"` for unlimited) and rounded up, so a
+/// `1.5`-CPU container gets 2 threads, not 16.
 pub fn default_threads() -> usize {
-    env_threads()
-        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    if let Some(n) = env_threads() {
+        return n;
+    }
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let quota = std::fs::read_to_string("/sys/fs/cgroup/cpu.max")
+        .ok()
+        .and_then(|s| parse_cpu_max(&s));
+    match quota {
+        Some(q) => hw.min(q).max(1),
+        None => hw,
+    }
+}
+
+/// Parse a cgroup v2 `cpu.max` file: `"<quota> <period>"` in
+/// microseconds, where quota is `max` for unlimited. Returns the CPU
+/// count the quota allows, rounded up; `None` means no usable limit
+/// (unlimited, malformed, or a zero period).
+fn parse_cpu_max(s: &str) -> Option<usize> {
+    let mut parts = s.split_whitespace();
+    let quota = parts.next()?;
+    let period = parts.next()?.parse::<u64>().ok().filter(|&p| p > 0)?;
+    if quota == "max" {
+        return None;
+    }
+    let quota = quota.parse::<u64>().ok().filter(|&q| q > 0)?;
+    Some(quota.div_ceil(period) as usize)
 }
 
 #[cfg(test)]
 mod tests {
+    use super::parse_cpu_max;
+
     #[test]
     fn default_threads_is_positive() {
         // Whatever the environment says, the answer is a usable count.
         assert!(super::default_threads() >= 1);
+    }
+
+    #[test]
+    fn cpu_max_quota_rounds_up() {
+        // 1.5 CPUs of quota must still run 2 threads, not 1.
+        assert_eq!(parse_cpu_max("150000 100000\n"), Some(2));
+        assert_eq!(parse_cpu_max("100000 100000"), Some(1));
+        assert_eq!(parse_cpu_max("400000 100000"), Some(4));
+        // Sub-CPU quotas clamp to one full thread at the call site but
+        // the parser itself reports the ceiling: 0.2 CPU -> 1.
+        assert_eq!(parse_cpu_max("20000 100000"), Some(1));
+    }
+
+    #[test]
+    fn cpu_max_unlimited_or_malformed_is_none() {
+        assert_eq!(parse_cpu_max("max 100000\n"), None);
+        assert_eq!(parse_cpu_max(""), None);
+        assert_eq!(parse_cpu_max("100000"), None);
+        assert_eq!(parse_cpu_max("banana 100000"), None);
+        assert_eq!(parse_cpu_max("100000 0"), None);
+        assert_eq!(parse_cpu_max("0 100000"), None);
     }
 }

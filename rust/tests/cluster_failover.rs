@@ -1,0 +1,147 @@
+//! Distributed shard cluster integration: loopback and TCP workers
+//! exercised end-to-end through the crate's public surface — the same
+//! paths CI's `cluster-smoke` job drives across real processes.
+//!
+//! The acceptance bar is **bit-identity**: for a fixed `(seed, shards)`
+//! a clustered solve must reproduce `solve_kaczmarz_par` /
+//! `solve_bak_par` exactly — same coefficients, same residual vector,
+//! same history, same stop reason — no matter how many workers serve
+//! the shards, and even when a worker is killed mid-solve and its
+//! shards move to survivors.
+
+use std::sync::Arc;
+
+use solvebak::api::{SolverError, SolverKind};
+use solvebak::cluster::{ClusterDriver, Membership, WorkerCore, WorkerServer};
+use solvebak::linalg::Mat;
+use solvebak::parallel::{solve_bak_par, solve_kaczmarz_par};
+use solvebak::solver::{ColumnOrder, SolveOptions, SolveReport};
+use solvebak::util::rng::Rng;
+
+fn planted(seed: u64, obs: usize, vars: usize) -> (Mat, Vec<f32>) {
+    let mut rng = Rng::seed(seed);
+    let x = Mat::randn(&mut rng, obs, vars);
+    let a_true: Vec<f32> = (0..vars).map(|_| rng.normal_f32()).collect();
+    let y = x.matvec(&a_true);
+    (x, y)
+}
+
+fn assert_reports_identical(cluster: &SolveReport, local: &SolveReport, ctx: &str) {
+    assert_eq!(cluster.a, local.a, "{ctx}: coefficients must match bit-for-bit");
+    assert_eq!(cluster.e, local.e, "{ctx}: residuals must match bit-for-bit");
+    assert_eq!(cluster.history, local.history, "{ctx}: history must match");
+    assert_eq!(cluster.sweeps, local.sweeps, "{ctx}");
+    assert_eq!(cluster.stop, local.stop, "{ctx}");
+}
+
+/// The cluster answer is a function of `(seed, shards)` only — 1, 2, and
+/// 4 workers all reproduce the in-process `kaczmarz_par` run exactly.
+#[test]
+fn kaczmarz_bit_identical_across_1_2_4_workers() {
+    let (x, y) = planted(101, 96, 8);
+    let opts = SolveOptions::builder().max_sweeps(24).tol(1e-10).threads(4).build();
+    let local = solve_kaczmarz_par(&x, &y, &opts);
+    for workers in [1usize, 2, 4] {
+        let (membership, _t) = Membership::loopback(workers, 0);
+        let driver = ClusterDriver::new(Arc::new(membership));
+        let out = driver
+            .solve(SolverKind::KaczmarzPar, &x, &y, &opts, None)
+            .expect("cluster solve");
+        assert!(!out.resharded);
+        assert_eq!(out.sync_rounds as usize, local.sweeps);
+        assert_reports_identical(&out.report, &local, &format!("{workers} worker(s)"));
+    }
+}
+
+/// Same invariant for the column-sharded `bak_par`, including the
+/// shuffled column order (whose RNG streams must also be worker-count
+/// independent).
+#[test]
+fn bak_bit_identical_across_1_2_4_workers() {
+    let (x, y) = planted(102, 80, 12);
+    let opts = SolveOptions::builder()
+        .max_sweeps(30)
+        .tol(1e-10)
+        .threads(3)
+        .order(ColumnOrder::Shuffled)
+        .build();
+    let local = solve_bak_par(&x, &y, &opts);
+    for workers in [1usize, 2, 4] {
+        let (membership, _t) = Membership::loopback(workers, 0);
+        let driver = ClusterDriver::new(Arc::new(membership));
+        let out = driver
+            .solve(SolverKind::BakPar, &x, &y, &opts, None)
+            .expect("cluster solve");
+        assert!(!out.resharded);
+        assert_reports_identical(&out.report, &local, &format!("{workers} worker(s)"));
+    }
+}
+
+/// Kill one of two workers mid-sweep: the driver must mark it dead,
+/// move its shards to the survivor (warm-started from the last synced
+/// iterate), surface `resharded`, and still land on the bit-identical
+/// answer.
+#[test]
+fn killing_a_worker_mid_sweep_reshards_without_changing_the_answer() {
+    let (x, y) = planted(103, 72, 6);
+    let opts = SolveOptions::builder().max_sweeps(25).tol(1e-10).threads(4).build();
+    let (membership, transports) = Membership::loopback(2, 0);
+    let driver = ClusterDriver::new(Arc::new(membership));
+    // A few successful rounds first, so the death lands mid-solve with
+    // shard state already cached on the doomed worker.
+    transports[1].fail_after_requests(5);
+    let out = driver
+        .solve(SolverKind::KaczmarzPar, &x, &y, &opts, None)
+        .expect("survivors finish the job");
+    assert!(out.resharded, "worker loss must surface as a reshard");
+    assert_eq!(driver.membership().alive_count(), 1);
+    let local = solve_kaczmarz_par(&x, &y, &opts);
+    assert_reports_identical(&out.report, &local, "post-reshard");
+    // The survivor keeps answering follow-up jobs alone.
+    let out2 = driver
+        .solve(SolverKind::KaczmarzPar, &x, &y, &opts, None)
+        .expect("solo survivor");
+    assert!(!out2.resharded, "no further loss, no further reshard");
+    assert_reports_identical(&out2.report, &local, "solo survivor");
+}
+
+/// Losing every worker is a typed service error, not a hang or a panic.
+#[test]
+fn losing_every_worker_is_a_typed_service_error() {
+    let (x, y) = planted(104, 24, 4);
+    let opts = SolveOptions::builder().max_sweeps(10).threads(2).build();
+    let (membership, transports) = Membership::loopback(2, 0);
+    for t in &transports {
+        t.fail_after_requests(0);
+    }
+    let driver = ClusterDriver::new(Arc::new(membership));
+    let err = driver
+        .solve(SolverKind::KaczmarzPar, &x, &y, &opts, None)
+        .unwrap_err();
+    assert!(matches!(err, SolverError::Service(_)), "{err:?}");
+}
+
+/// Full TCP loop: two real `WorkerServer`s on ephemeral ports, a
+/// `Membership::connect` roster, and bit-identity through actual
+/// sockets — the two-terminal quickstart from the crate docs, in one
+/// process.
+#[test]
+fn tcp_workers_serve_a_bit_identical_sharded_solve() {
+    let w1 = WorkerServer::bind(Arc::new(WorkerCore::new("it-w1")), 0).expect("bind w1");
+    let w2 = WorkerServer::bind(Arc::new(WorkerCore::new("it-w2")), 0).expect("bind w2");
+    let addrs = vec![w1.addr().to_string(), w2.addr().to_string()];
+    let membership = Membership::connect(&addrs);
+    assert_eq!(membership.alive_count(), 2, "join probe reaches both workers");
+    let driver = ClusterDriver::new(Arc::new(membership));
+
+    let (x, y) = planted(105, 64, 6);
+    let opts = SolveOptions::builder().max_sweeps(15).tol(1e-10).threads(3).build();
+    let out = driver
+        .solve(SolverKind::KaczmarzPar, &x, &y, &opts, None)
+        .expect("tcp cluster solve");
+    let local = solve_kaczmarz_par(&x, &y, &opts);
+    assert_reports_identical(&out.report, &local, "tcp");
+    assert!(!out.resharded);
+    w1.stop();
+    w2.stop();
+}
